@@ -1,0 +1,61 @@
+//! Quickstart: load the AOT artifacts, run BigBird fill-mask on one
+//! document, and print the predictions.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use bigbird::data::{CorpusConfig, CorpusGen};
+use bigbird::runtime::{ExecutablePool, HostTensor, Manifest, Runtime};
+use bigbird::tokenizer::special;
+
+fn main() -> anyhow::Result<()> {
+    // 1. load the artifact manifest produced by `make artifacts`
+    let pool = ExecutablePool::new(Runtime::cpu()?, Manifest::load("artifacts")?);
+    println!("platform: {}", pool.runtime().platform());
+
+    // 2. initialise a BigBird MLM (512-token context) and compile its fwd
+    let model = "mlm_bigbird_itc_s512_b4";
+    let init = pool.get(&format!("init_{model}"))?;
+    let fwd = pool.get(&format!("fwd_{model}"))?;
+    let params = init.run(&[])?.remove(0);
+    println!("params: {} floats", params.len());
+
+    // 3. build a document and mask a few tokens
+    let mut gen = CorpusGen::new(CorpusConfig::default(), 0);
+    let mut doc = gen.document(512);
+    let mask_positions = [17usize, 200, 444];
+    let originals: Vec<i32> = mask_positions.iter().map(|&p| doc[p]).collect();
+    for &p in &mask_positions {
+        doc[p] = special::MASK;
+    }
+
+    // 4. run the forward pass (batch of 4; we use row 0)
+    let mut tokens = vec![special::PAD; 4 * 512];
+    tokens[..512].copy_from_slice(&doc);
+    let mut kv = vec![0f32; 4 * 512];
+    for v in kv[..512].iter_mut() {
+        *v = 1.0;
+    }
+    let out = fwd.run(&[
+        params,
+        HostTensor::i32(&[4, 512], tokens)?,
+        HostTensor::f32(&[4, 512], kv)?,
+    ])?;
+    let logits = out[0].as_f32()?; // (4, 512, 512)
+
+    // 5. report argmax predictions at the masked positions
+    println!("\nfill-mask predictions (untrained model — run train_mlm to improve):");
+    for (&p, &orig) in mask_positions.iter().zip(&originals) {
+        let row = &logits[p * 512..(p + 1) * 512];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        println!("  position {p:>3}: original token {orig:>3}, predicted {pred:>3}");
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! Long-document serving demo: start the coordinator (router + dynamic
+//! length-bucketing batcher + PJRT engine) and fire a mixed-length
+//! fill-mask workload at it, reporting latency percentiles and batch
+//! fill.
+//!
+//! ```bash
+//! cargo run --release --example serve_longdoc
+//! ```
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let flags = bigbird::cli::parse_flags(&args)?;
+    bigbird::experiments::serve_demo::run(&flags)
+}

@@ -1,0 +1,13 @@
+//! End-to-end training driver (the repository's flagship example):
+//! pretrain the BigBird MLM on the synthetic long-range corpus for a few
+//! hundred steps, log the loss curve, checkpoint, and verify resume.
+//!
+//! ```bash
+//! cargo run --release --example train_mlm -- --steps 300
+//! ```
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let flags = bigbird::cli::parse_flags(&args)?;
+    bigbird::experiments::train_demo::run(&flags)
+}

@@ -1,0 +1,481 @@
+"""AOT exporter: lower every model variant ONCE to HLO text + manifest.
+
+Usage (from ``python/``):
+
+    python -m compile.aot --out ../artifacts [--only REGEX] [--list]
+    python -m compile.aot --out ../artifacts --dump-stats
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Alongside each sparse artifact we dump its attention pattern
+(``pattern_*.txt``); the Rust side regenerates the pattern from the same
+seed with its mirrored generator and diffs it (cross-language contract).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, seq2seq, train_step
+from .kernels import jnp_impl, pattern as pat
+
+NEG_INF = -1e9
+
+
+# --------------------------------------------------------------------------
+# lowering
+# --------------------------------------------------------------------------
+
+
+def lower_to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: default HLO printing ELIDES large constants ("{...}") and
+    # the 0.5.1 text parser silently reads the elision as garbage (an
+    # iota-like fill) — attention gather indices came back corrupted and
+    # produced NaN oceans. Print with full constants.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # the 0.5.1 parser rejects newer metadata attrs (source_end_line, ...)
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def _dtype_str(dt) -> str:
+    if dt == jnp.int32 or str(dt) == "int32":
+        return "i32"
+    if dt == jnp.float32 or str(dt) == "float32":
+        return "f32"
+    raise ValueError(f"unsupported dtype {dt}")
+
+
+def _spec_str(name_dtype: str, shape) -> str:
+    """'tokens:i32' + shape -> 'tokens:i32[8,512]'."""
+    dims = ",".join(str(d) for d in shape)
+    return f"{name_dtype}[{dims}]" if dims else name_dtype
+
+
+@dataclasses.dataclass
+class Artifact:
+    name: str
+    fn: object
+    args: list  # ShapeDtypeStruct per input
+    input_names: list  # "tokens:i32" style (dims appended from args)
+    output_names: list  # same style, dims appended from eval_shape
+    meta: dict
+
+
+def sds(shape, dt):
+    return jax.ShapeDtypeStruct(shape, dt)
+
+
+# --------------------------------------------------------------------------
+# build plan
+# --------------------------------------------------------------------------
+
+
+def model_artifacts(cfg, task: str, lr=3e-3, warmup=20, seed=0, impl="jnp", tag=""):
+    """init + train_step + fwd artifacts for one (config, task)."""
+    batch_args, batch_names = model.batch_specs(cfg, task)
+    step_fn, n = train_step.make_train_step(cfg, task, impl=impl, base_lr=lr, warmup=warmup)
+    fwd_fn, _ = train_step.make_forward(cfg, task, impl=impl)
+    init_fn, _ = train_step.make_init(cfg, task, seed=seed)
+    pvec = sds((n,), jnp.float32)
+    step_s = sds((), jnp.int32)
+    meta = {
+        "task": task,
+        "attn": cfg.variant,
+        "impl": impl,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "block": cfg.block,
+        "global_blocks": cfg.global_blocks,
+        "window_blocks": cfg.window_blocks,
+        "random_blocks": cfg.random_blocks,
+        "layers": cfg.layers,
+        "heads": cfg.heads,
+        "hidden": cfg.hidden,
+        "vocab": cfg.vocab,
+        "params": n,
+        "attn_seed": cfg.attn_seed,
+        "pattern": pattern_key(cfg),
+    }
+    suffix = f"_{tag}" if tag else ""
+    out = []
+    out.append(
+        Artifact(
+            name=cfg.artifact_name(f"init_{task}") + suffix,
+            fn=lambda: (init_fn(),),
+            args=[],
+            input_names=[],
+            output_names=["params:f32"],
+            meta={**meta, "kind": "init", "seed": seed},
+        )
+    )
+    out.append(
+        Artifact(
+            name=cfg.artifact_name(f"train_{task}") + suffix,
+            fn=lambda p, m, v, s, *b: step_fn(p, m, v, s, *b),
+            args=[pvec, pvec, pvec, step_s] + batch_args,
+            input_names=["params:f32", "m:f32", "v:f32", "step:i32"] + batch_names,
+            output_names=["params:f32", "m:f32", "v:f32", "loss:f32"],
+            meta={**meta, "kind": "train", "lr": lr, "warmup": warmup},
+        )
+    )
+    out.append(
+        Artifact(
+            name=cfg.artifact_name(f"fwd_{task}") + suffix,
+            fn=lambda p, t, k: (fwd_fn(p, t, k),),
+            args=[pvec, batch_args[0], batch_args[1]],
+            input_names=["params:f32", "tokens:i32", "kv_valid:f32"],
+            output_names=["logits:f32"],
+            meta={**meta, "kind": "fwd"},
+        )
+    )
+    return out
+
+
+def attnbench_artifacts():
+    """Microbenchmark artifacts for the scaling figure: pure attention
+    forward at several sequence lengths, dense vs BigBird, jnp vs pallas."""
+    arts = []
+    heads, d, block = 2, 32, 32
+    for n in (256, 512, 1024, 2048, 4096):
+        cfg = configs.Config(
+            variant="bigbird_itc",
+            seq_len=n,
+            block=block,
+            global_blocks=2,
+            window_blocks=3,
+            random_blocks=3,
+            layers=1,
+            heads=heads,
+            hidden=heads * d,
+            ffn=4 * heads * d,
+            vocab=64,
+            batch=1,
+        )
+        q = sds((1, heads, n, d), jnp.float32)
+        for variant, impls in (
+            ("dense", ("jnp",)),
+            ("bigbird_itc", ("jnp", "pallas")),
+        ):
+            c = cfg.replace(variant=variant)
+            for impl in impls:
+                def make_fn(c=c, impl=impl):
+                    def fn(qq, kk, vv):
+                        return (jnp_impl.attention(qq, kk, vv, c, None, impl=impl),)
+
+                    return fn
+
+                arts.append(
+                    Artifact(
+                        name=f"attnbench_{variant}_{impl}_n{n}",
+                        fn=make_fn(),
+                        args=[q, q, q],
+                        input_names=["q:f32", "k:f32", "v:f32"],
+                        output_names=["o:f32"],
+                        meta={
+                            "kind": "attnbench",
+                            "attn": variant,
+                            "impl": impl,
+                            "seq_len": n,
+                            "block": block,
+                            "heads": heads,
+                            "head_dim": d,
+                            "global_blocks": c.global_blocks,
+                            "window_blocks": c.window_blocks,
+                            "random_blocks": c.random_blocks,
+                            "attn_seed": c.attn_seed,
+                            "pattern": pattern_key(c) if variant != "dense" else "",
+                        },
+                    )
+                )
+    return arts
+
+
+def task1_artifacts(n=256, d=32, tau=200.0):
+    """Prop. 1 / Task 1 (§3.4): furthest-vector retrieval.
+
+    The dense program is the paper's *analytic* single-layer construction
+    (App. C): Q = −u, K = u, hardmax ≈ softmax at temperature τ. The
+    sparse program applies the identical construction restricted to the
+    BigBird pattern — which provably cannot see most pairs.
+    """
+    block = 16
+    cfg = configs.Config(
+        variant="bigbird_itc",
+        seq_len=n,
+        block=block,
+        global_blocks=1,
+        window_blocks=3,
+        random_blocks=2,
+        layers=1,
+        heads=1,
+        hidden=d,
+        ffn=d,
+        vocab=8,
+        batch=1,
+    )
+    u_spec = sds((1, n, d), jnp.float32)
+
+    def dense_fn(u):
+        s = -tau * jnp.einsum("bnd,bmd->bnm", u, u)
+        p = jax.nn.softmax(s, axis=-1)
+        return (jnp.einsum("bnm,bmd->bnd", p, u),)
+
+    attend_idx, pad_valid, g_eff = jnp_impl.plan(cfg)
+    from .kernels import ref
+
+    mask = jnp.asarray(
+        ref.mask_from_pattern(
+            pat.build_pattern(
+                cfg.variant,
+                cfg.num_blocks,
+                cfg.global_blocks,
+                cfg.window_blocks,
+                cfg.random_blocks,
+                cfg.attn_seed,
+            ),
+            cfg.block,
+        )
+    )
+
+    def sparse_fn(u):
+        s = -tau * jnp.einsum("bnd,bmd->bnm", u, u) + mask[None]
+        p = jax.nn.softmax(s, axis=-1)
+        return (jnp.einsum("bnm,bmd->bnd", p, u),)
+
+    meta = {"kind": "task1", "seq_len": n, "head_dim": d, "tau": tau}
+    return [
+        Artifact("task1_dense", dense_fn, [u_spec], ["u:f32"], ["out:f32"],
+                 {**meta, "attn": "dense"}),
+        Artifact("task1_sparse", sparse_fn, [u_spec], ["u:f32"], ["out:f32"],
+                 {**meta, "attn": "bigbird_itc", "pattern": pattern_key(cfg)}),
+    ]
+
+
+def s2s_artifacts(cfg, dec_len: int, lr=3e-3, warmup=20, seed=0):
+    step_fn, n = seq2seq.make_s2s_train_step(cfg, dec_len, base_lr=lr, warmup=warmup)
+    decode_fn = seq2seq.make_s2s_decode(cfg, dec_len)
+    init_fn = seq2seq.make_s2s_init(cfg, dec_len, seed=seed)
+    B, S, T = cfg.batch, cfg.seq_len, dec_len
+    pvec = sds((n,), jnp.float32)
+    batch_args = [
+        sds((B, S), jnp.int32),
+        sds((B, S), jnp.float32),
+        sds((B, T), jnp.int32),
+        sds((B, T), jnp.int32),
+        sds((B, T), jnp.float32),
+    ]
+    batch_names = ["src:i32", "src_valid:f32", "dec_in:i32", "dec_out:i32", "dec_w:f32"]
+    meta = {
+        "task": "s2s",
+        "attn": cfg.variant,
+        "impl": "jnp",
+        "seq_len": cfg.seq_len,
+        "dec_len": dec_len,
+        "batch": cfg.batch,
+        "vocab": cfg.vocab,
+        "params": n,
+        "pattern": pattern_key(cfg) if cfg.variant != "dense" else "",
+    }
+    return [
+        Artifact(
+            cfg.artifact_name("init_s2s"),
+            lambda: (init_fn(),),
+            [],
+            [],
+            ["params:f32"],
+            {**meta, "kind": "init", "seed": seed},
+        ),
+        Artifact(
+            cfg.artifact_name("train_s2s"),
+            lambda p, m, v, s, *b: step_fn(p, m, v, s, *b),
+            [pvec, pvec, pvec, sds((), jnp.int32)] + batch_args,
+            ["params:f32", "m:f32", "v:f32", "step:i32"] + batch_names,
+            ["params:f32", "m:f32", "v:f32", "loss:f32"],
+            {**meta, "kind": "train", "lr": lr, "warmup": warmup},
+        ),
+        Artifact(
+            cfg.artifact_name("decode_s2s"),
+            lambda p, s, va, d: (decode_fn(p, s, va, d),),
+            [pvec, batch_args[0], batch_args[1], batch_args[2]],
+            ["params:f32", "src:i32", "src_valid:f32", "dec_in:i32"],
+            ["logits:f32"],
+            {**meta, "kind": "decode"},
+        ),
+    ]
+
+
+def pattern_key(cfg) -> str:
+    """Filename of the dumped pattern for this attention config."""
+    from .layers import internal_cfg
+
+    c = internal_cfg(cfg)
+    return (
+        f"pattern_{c.variant}_nb{c.num_blocks}_g{c.global_blocks}"
+        f"_w{c.window_blocks}_r{c.random_blocks}_seed{c.attn_seed}.txt"
+    )
+
+
+def build_plan():
+    """The full artifact list (DESIGN.md §6 experiment index)."""
+    arts = []
+
+    # -- scaling figure microbench --
+    arts += attnbench_artifacts()
+
+    # -- Table 1: building blocks @512 (7 variants, MLM) --
+    for variant in configs.ATTN_VARIANTS:
+        cfg = configs.exp(batch=4, variant=variant)
+        arts += model_artifacts(cfg, "mlm")
+
+    # -- Pallas-in-model proof artifact --
+    arts += [
+        a
+        for a in model_artifacts(configs.exp(batch=4), "mlm", impl="pallas", tag="pallas")
+        if a.meta["kind"] == "fwd"
+    ]
+
+    # -- Tab. 10 / Fig. 8: MLM across context lengths --
+    for s, b in ((128, 8), (256, 8), (1024, 2), (2048, 1)):
+        arts += model_artifacts(configs.exp(seq_len=s, batch=b), "mlm")
+    arts += model_artifacts(configs.exp(seq_len=2048, batch=1, variant="window_global"), "mlm")
+    arts += model_artifacts(configs.exp(seq_len=2048, batch=1, variant="bigbird_etc"), "mlm")
+
+    # -- Tab. 2/3: QA (long evidence @1024; dense truncated @512) --
+    for variant in ("bigbird_itc", "bigbird_etc", "window_global"):
+        arts += model_artifacts(configs.exp(seq_len=1024, batch=2, variant=variant), "qa")
+    arts += model_artifacts(configs.exp(seq_len=512, batch=4, variant="dense"), "qa")
+
+    # -- Tab. 15/16: classification long + short --
+    for variant in ("bigbird_itc", "dense"):
+        arts += model_artifacts(configs.exp(seq_len=512, batch=4, variant=variant), "cls")
+        arts += model_artifacts(configs.exp(seq_len=128, batch=8, variant=variant), "cls")
+    arts += model_artifacts(configs.exp(seq_len=1024, batch=2), "cls")
+
+    # -- Tab. 7: chromatin multi-label @1024 (window = local-only baseline) --
+    for variant in ("bigbird_itc", "window"):
+        arts += model_artifacts(
+            configs.exp(seq_len=1024, batch=2, variant=variant), "multilabel"
+        )
+
+    # -- Tab. 4/20: summarization seq2seq --
+    for variant in ("bigbird_itc", "dense"):
+        arts += s2s_artifacts(configs.exp(batch=4, variant=variant), dec_len=64)
+
+    # -- Prop. 1 / Task 1 --
+    arts += task1_artifacts()
+
+    names = [a.name for a in arts]
+    dup = {n for n in names if names.count(n) > 1}
+    assert not dup, f"duplicate artifact names: {dup}"
+    return arts
+
+
+# --------------------------------------------------------------------------
+# manifest + pattern dumps
+# --------------------------------------------------------------------------
+
+
+def manifest_entry(a: Artifact, out_shapes) -> str:
+    lines = ["[artifact]", f"name={a.name}", f"file={a.name}.hlo.txt"]
+    for nd, spec in zip(a.input_names, a.args):
+        lines.append(f"input={_spec_str(nd, spec.shape)}")
+    for nd, sh in zip(a.output_names, out_shapes):
+        lines.append(f"output={_spec_str(nd, sh.shape)}")
+    for k, v in sorted(a.meta.items()):
+        lines.append(f"meta={k}:{v}")
+    return "\n".join(lines) + "\n"
+
+
+def dump_patterns(arts, out_dir):
+    done = set()
+    for a in arts:
+        key = a.meta.get("pattern", "")
+        if not key or key in done:
+            continue
+        m = re.match(
+            r"pattern_(\w+)_nb(\d+)_g(\d+)_w(\d+)_r(\d+)_seed(\d+)\.txt", key
+        )
+        variant, nb, g, w, r, seed = m.group(1), *map(int, m.groups()[1:])
+        attend = pat.build_pattern(variant, nb, g, w, r, seed)
+        with open(os.path.join(out_dir, key), "w") as f:
+            f.write(pat.pattern_to_text(attend))
+        done.add(key)
+    return len(done)
+
+
+def hlo_stats(text: str) -> dict:
+    """Cheap HLO profile: op histogram + fusion count, for §Perf L2."""
+    ops = {}
+    for mm in re.finditer(r"=\s+\S+\s+(\w+)\(", text):
+        ops[mm.group(1)] = ops.get(mm.group(1), 0) + 1
+    return ops
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default="", help="regex filter on artifact names")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--dump-stats", action="store_true")
+    args = ap.parse_args(argv)
+
+    arts = build_plan()
+    if args.only:
+        rx = re.compile(args.only)
+        arts = [a for a in arts if rx.search(a.name)]
+    if args.list:
+        for a in arts:
+            print(a.name)
+        print(f"{len(arts)} artifacts")
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest_parts = ["# bigbird artifact manifest (generated by compile.aot)\n"]
+    t_all = time.time()
+    for i, a in enumerate(arts):
+        t0 = time.time()
+        out_shapes = jax.eval_shape(a.fn, *a.args)
+        if not isinstance(out_shapes, (tuple, list)):
+            out_shapes = (out_shapes,)
+        text = lower_to_hlo_text(a.fn, a.args)
+        path = os.path.join(args.out, f"{a.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_parts.append(manifest_entry(a, out_shapes))
+        msg = f"[{i + 1}/{len(arts)}] {a.name}: {len(text) / 1024:.0f} KiB in {time.time() - t0:.1f}s"
+        if args.dump_stats:
+            ops = hlo_stats(text)
+            top = sorted(ops.items(), key=lambda kv: -kv[1])[:6]
+            msg += "  ops: " + ", ".join(f"{k}×{v}" for k, v in top)
+        print(msg, flush=True)
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_parts))
+    n_pat = dump_patterns(arts, args.out)
+    print(
+        f"wrote {len(arts)} artifacts + manifest + {n_pat} patterns "
+        f"in {time.time() - t_all:.1f}s -> {args.out}"
+    )
+
+
+if __name__ == "__main__":
+    main()

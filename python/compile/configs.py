@@ -1,0 +1,112 @@
+"""Model configurations shared with the Rust side.
+
+The canonical hyperparameters mirror ``rust/src/config/mod.rs``; the
+artifact manifest is the enforcement mechanism (rust integration tests
+check that the artifacts it finds match these configs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+ATTN_VARIANTS = (
+    "dense",
+    "random",
+    "window",
+    "random_window",
+    "window_global",  # ≈ Longformer's pattern (App. E.3 comparison rows)
+    "bigbird_itc",
+    "bigbird_etc",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """BigBird hyperparameters (paper App. E.1 Tab. 8, scaled down)."""
+
+    variant: str = "bigbird_itc"
+    seq_len: int = 512
+    block: int = 16
+    global_blocks: int = 2
+    window_blocks: int = 3  # odd; paper uses 3
+    random_blocks: int = 3
+    layers: int = 4
+    heads: int = 4
+    hidden: int = 128
+    ffn: int = 512
+    vocab: int = 2048
+    batch: int = 8
+    attn_seed: int = 0
+    # number of output classes / labels for the task heads
+    num_classes: int = 4
+    num_profiles: int = 16
+
+    def __post_init__(self):
+        assert self.variant in ATTN_VARIANTS, self.variant
+        assert self.seq_len % self.block == 0, (self.seq_len, self.block)
+        assert self.window_blocks % 2 == 1, self.window_blocks
+        assert self.hidden % self.heads == 0, (self.hidden, self.heads)
+        nb = self.num_blocks
+        assert self.global_blocks + self.window_blocks + self.random_blocks <= nb, (
+            "attention pattern larger than sequence",
+            self,
+        )
+
+    @property
+    def num_blocks(self) -> int:
+        return self.seq_len // self.block
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    def artifact_name(self, kind: str) -> str:
+        """Matches ModelConfig::artifact_name on the rust side."""
+        return f"{kind}_{self.variant}_s{self.seq_len}_b{self.batch}"
+
+    def replace(self, **kw) -> "Config":
+        return dataclasses.replace(self, **kw)
+
+
+def tiny(**kw) -> Config:
+    """Unit-test scale. Mirrors ModelConfig::tiny()."""
+    base = Config(
+        variant="bigbird_itc",
+        seq_len=128,
+        block=16,
+        global_blocks=1,
+        window_blocks=3,
+        random_blocks=1,
+        layers=2,
+        heads=2,
+        hidden=64,
+        ffn=128,
+        vocab=512,
+        batch=4,
+    )
+    return base.replace(**kw)
+
+
+def exp(**kw) -> Config:
+    """Experiment-table scale: small model, long sequences."""
+    base = Config(
+        variant="bigbird_itc",
+        seq_len=512,
+        block=16,
+        global_blocks=2,
+        window_blocks=3,
+        random_blocks=3,
+        layers=2,
+        heads=2,
+        hidden=64,
+        ffn=256,
+        vocab=512,
+        batch=8,
+    )
+    return base.replace(**kw)
+
+
+def base(**kw) -> Config:
+    """End-to-end example scale. Mirrors ModelConfig::base()."""
+    b = Config()
+    return b.replace(**kw)

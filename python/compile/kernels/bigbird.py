@@ -1,0 +1,174 @@
+"""Layer-1: the BigBird block-sparse attention **Pallas kernel**.
+
+The hot spot of the paper is the compact blocked attention of App. D:
+after the (cheap, one-off) gather that builds the compact key/value
+tensors, all the FLOPs are in
+
+    scores  = Q_block @ K''_blockᵀ   (b × d) × (d × A·b)
+    probs   = masked softmax(scores)
+    output  = probs @ V''_block      (b × A·b) × (A·b × d)
+
+This kernel tiles exactly that computation: grid over (batch·head,
+query-block); each program holds one (b, d) query tile and its (A·b, d)
+compact key/value tiles in VMEM and performs the two MXU matmuls plus an
+in-register softmax.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation):
+* the (b, A·b) score tile and the three input tiles are the kernel's VMEM
+  working set: (2·A·b·d + b·d + b·A·b) · 4 bytes — reported per config by
+  ``vmem_bytes`` and used for the §Perf roofline estimate;
+* ``interpret=True`` is mandatory on the CPU PJRT plugin (real TPU
+  lowering emits Mosaic custom-calls the CPU client cannot execute); the
+  kernel still lowers into plain HLO embedded in the same program as the
+  surrounding JAX model.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+
+
+def _attn_kernel(q_ref, kk_ref, vv_ref, mm_ref, o_ref, *, scale):
+    """One (batch·head, query-block) program.
+
+    q_ref:  (1, 1, b, d)    query tile
+    kk_ref: (1, 1, A·b, d)  compact (gathered) key tile
+    vv_ref: (1, 1, A·b, d)  compact value tile
+    mm_ref: (1, 1, 1, A·b)  additive mask row (key padding)
+    o_ref:  (1, 1, b, d)    output tile
+    """
+    q = q_ref[0, 0]
+    kk = kk_ref[0, 0]
+    vv = vv_ref[0, 0]
+    mm = mm_ref[0, 0]
+    scores = jnp.dot(q, kk.T) * scale + mm  # (b, A·b)
+    scores = scores - scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores)
+    p = p / p.sum(axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(p, vv)
+
+
+def _dense_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, scale):
+    """Dense fallback program for the global query rows (paper: "the
+    first row-block is computed by direct multiplication").
+
+    Shapes (leading grid dim of 1 indexed away): q (1, gb, d),
+    k/v (1, N, d), m (1, 1, N), o (1, gb, d).
+    """
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    m = m_ref[0]
+    scores = jnp.dot(q, k.T) * scale + m  # (gb, N)
+    scores = scores - scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores)
+    p = p / p.sum(axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v)
+
+
+def block_sparse_attention_pallas(
+    q, k, v, attend_idx, pad_valid, g_eff, block, kv_valid=None
+):
+    """BigBird attention with the Pallas kernel on the compact tensors.
+
+    Args mirror ``jnp_impl.block_sparse_attention``:
+      q, k, v: (B, H, N, D) float32
+      attend_idx: (nb, A) int32
+      pad_valid: (nb, A) float32 1/0 pattern-padding validity
+      g_eff: leading global query blocks handled by the dense program
+      block: block size b
+      kv_valid: optional (B, N) 1/0 key-padding mask
+    """
+    bsz, h, n, d = q.shape
+    nb = n // block
+    a = attend_idx.shape[1]
+    scale = float(1.0 / (d ** 0.5))  # python float: pallas kernels cannot capture traced constants
+
+    # ---- gather (one-off data movement, outside the FLOP kernel) ----
+    kb = k.reshape(bsz, h, nb, block, d)
+    vb = v.reshape(bsz, h, nb, block, d)
+    kk = jnp.take(kb, attend_idx, axis=2).reshape(bsz, h, nb, a * block, d)
+    vv = jnp.take(vb, attend_idx, axis=2).reshape(bsz, h, nb, a * block, d)
+    if kv_valid is None:
+        kv_valid = jnp.ones((bsz, n), jnp.float32)
+    mb = kv_valid.reshape(bsz, nb, block)
+    gathered_valid = jnp.take(mb, attend_idx, axis=1).reshape(bsz, nb, a * block)
+    # combine key padding with pattern-row padding into one additive mask
+    pv = jnp.repeat(pad_valid, block, axis=1)[None, :, :]  # (1, nb, A*b)
+    mm = (1.0 - gathered_valid * pv) * NEG_INF
+
+    # ---- flatten (B, H) into one grid axis ----
+    bh = bsz * h
+    qf = q.reshape(bh, nb, block, d)
+    kkf = jnp.broadcast_to(kk.reshape(bh, nb, a * block, d), (bh, nb, a * block, d))
+    vvf = jnp.broadcast_to(vv.reshape(bh, nb, a * block, d), (bh, nb, a * block, d))
+    mmf = jnp.broadcast_to(mm[:, None, :, :], (bsz, h, nb, a * block)).reshape(
+        bh, nb, 1, a * block
+    )
+
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=(bh, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, block, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, a * block, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, a * block, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, a * block), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block, d), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, nb, block, d), jnp.float32),
+        interpret=True,
+    )(qf, kkf, vvf, mmf)
+    out = out.reshape(bsz, h, n, d)
+
+    if g_eff > 0:
+        gb = g_eff * block
+        gmask = ((1.0 - kv_valid) * NEG_INF)[:, None, None, :]  # (B,1,1,N)
+        gq = q[:, :, :gb, :].reshape(bh, gb, d)
+        kf = k.reshape(bh, n, d)
+        vf = v.reshape(bh, n, d)
+        gm = jnp.broadcast_to(gmask, (bsz, h, 1, n)).reshape(bh, 1, n)
+        gout = pl.pallas_call(
+            functools.partial(_dense_kernel, scale=scale),
+            grid=(bh,),
+            in_specs=[
+                pl.BlockSpec((1, gb, d), lambda i: (i, 0, 0)),
+                pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+                pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+                pl.BlockSpec((1, 1, n), lambda i: (i, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, gb, d), lambda i: (i, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((bh, gb, d), jnp.float32),
+            interpret=True,
+        )(gq, kf, vf, gm)
+        gout = gout.reshape(bsz, h, gb, d)
+        out = jnp.concatenate([gout, out[:, :, gb:, :]], axis=2)
+    return out
+
+
+def vmem_bytes(block: int, a: int, d: int) -> int:
+    """VMEM working set of one sparse program (bytes, f32): q + kk + vv +
+    scores + out. Used for the §Perf TPU-roofline estimate."""
+    q = block * d
+    kv = 2 * a * block * d
+    scores = block * a * block
+    out = block * d
+    return 4 * (q + kv + scores + out)
+
+
+def mxu_utilization_estimate(block: int, a: int, d: int, mxu: int = 128) -> float:
+    """Fraction of MXU lanes a (b×d)·(d×A·b) matmul keeps busy if tiles
+    are padded to the mxu×mxu systolic array (structural estimate)."""
+    def eff(m, k, n):
+        pad = lambda x: ((x + mxu - 1) // mxu) * mxu
+        return (m * k * n) / (pad(m) * pad(k) * pad(n))
+
+    f1 = eff(block, d, a * block)
+    f2 = eff(block, a * block, d)
+    return (f1 + f2) / 2.0

@@ -1,0 +1,144 @@
+"""BigBird block-sparse attention as compact dense tensor algebra.
+
+This is the paper's App.-D formulation, verbatim in jnp:
+
+1. blockify Q, K, V into ``(nb, b, d)``,
+2. gather each query block's attended key blocks into a compact
+   ``K'' : (nb, A·b, d)`` (window blocks come from the rolled-copy trick,
+   random + global blocks from a gather — all folded into one take here),
+3. one dense batched matmul ``(nb, b, d) × (nb, d, A·b)`` for the scores,
+   masked softmax, and a second batched matmul for the output,
+4. global *query* blocks are overwritten with direct full attention
+   ("the first row-block is computed by direct multiplication").
+
+Cost: O(n · A·b · d) = O(n) for fixed (g, w, r, b) — the linear-attention
+claim. The Pallas kernel (``bigbird.py``) implements step 3 as an explicit
+tiled kernel over the same compact tensors; both are verified against
+``ref.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import pattern as pat
+
+NEG_INF = -1e9
+
+
+def plan(cfg):
+    """Static gather plan for a config.
+
+    Returns ``(attend_idx, pad_valid, g_eff)``:
+
+    * ``attend_idx`` — int32 (nb, A): attended key-block indices per
+      query block, rows right-padded with block 0 to the max row length
+      A (rows < g_eff are placeholders — those take the dense path),
+    * ``pad_valid`` — float32 (nb, A): 1.0 for real entries, 0.0 for
+      padding (padding entries are masked to −∞ in the score),
+    * ``g_eff`` — number of leading global query blocks.
+    """
+    attend = pat.build_pattern(
+        cfg.variant,
+        cfg.num_blocks,
+        cfg.global_blocks,
+        cfg.window_blocks,
+        cfg.random_blocks,
+        cfg.attn_seed,
+    )
+    use_g, _, _ = pat.components(cfg.variant)
+    g_eff = cfg.global_blocks if use_g else 0
+    sparse_rows = [attend[j] for j in range(g_eff, cfg.num_blocks)]
+    a = max((len(r) for r in sparse_rows), default=cfg.num_blocks)
+    idx = np.zeros((cfg.num_blocks, a), dtype=np.int32)
+    valid = np.zeros((cfg.num_blocks, a), dtype=np.float32)
+    for j in range(cfg.num_blocks):
+        if j < g_eff:
+            # dense path; keep a harmless in-range placeholder row
+            idx[j, :] = np.arange(a) % cfg.num_blocks
+            valid[j, :] = 1.0
+        else:
+            row = attend[j]
+            idx[j, : len(row)] = row
+            valid[j, : len(row)] = 1.0
+    return idx, valid, g_eff
+
+
+def block_sparse_attention(q, k, v, attend_idx, pad_valid, g_eff, block, kv_valid=None):
+    """Compact block-sparse attention.
+
+    Args:
+      q, k, v: (B, H, N, D) float32
+      attend_idx: (nb, A) int32 gather plan from ``plan``
+      pad_valid: (nb, A) float32 1/0 row-padding validity from ``plan``
+      g_eff: number of leading global query blocks (dense path)
+      block: block size b
+      kv_valid: optional (B, N) 1/0 key-padding mask
+    Returns: (B, H, N, D)
+    """
+    bsz, h, n, d = q.shape
+    nb = n // block
+    a = attend_idx.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    qb = q.reshape(bsz, h, nb, block, d)
+    kb = k.reshape(bsz, h, nb, block, d)
+    vb = v.reshape(bsz, h, nb, block, d)
+
+    # compact key/value: (B, H, nb, A*b, d)
+    kk = jnp.take(kb, attend_idx, axis=2).reshape(bsz, h, nb, a * block, d)
+    vv = jnp.take(vb, attend_idx, axis=2).reshape(bsz, h, nb, a * block, d)
+
+    scores = jnp.einsum("bhnqd,bhnkd->bhnqk", qb, kk) * scale
+    # pattern-padding mask: (nb, A) -> (nb, A*b)
+    pv = jnp.repeat(pad_valid, block, axis=1)
+    scores = scores + (1.0 - pv)[None, None, :, None, :] * NEG_INF
+    if kv_valid is not None:
+        mb = kv_valid.reshape(bsz, nb, block)
+        mm = jnp.take(mb, attend_idx, axis=1).reshape(bsz, nb, a * block)
+        scores = scores + (1.0 - mm)[:, None, :, None, :] * NEG_INF
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhnqk,bhnkd->bhnqd", p, vv).reshape(bsz, h, n, d)
+
+    if g_eff > 0:
+        # Global query rows: direct dense attention over the full keys.
+        gq = q[:, :, : g_eff * block, :]
+        gs = jnp.einsum("bhnd,bhmd->bhnm", gq, k) * scale
+        if kv_valid is not None:
+            gs = gs + (1.0 - kv_valid)[:, None, None, :] * NEG_INF
+        gp = jnp.exp(gs - gs.max(axis=-1, keepdims=True))
+        gp = gp / gp.sum(axis=-1, keepdims=True)
+        gout = jnp.einsum("bhnm,bhmd->bhnd", gp, v)
+        out = jnp.concatenate([gout, out[:, :, g_eff * block :, :]], axis=2)
+    return out
+
+
+def dense_attention(q, k, v, kv_valid=None):
+    """Full quadratic attention (the BERT baseline)."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bhnd,bhmd->bhnm", q, k) / jnp.sqrt(jnp.float32(d))
+    if kv_valid is not None:
+        scores = scores + (1.0 - kv_valid)[:, None, None, :] * NEG_INF
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhnm,bhmd->bhnd", p, v)
+
+
+def attention(q, k, v, cfg, kv_valid=None, impl="jnp"):
+    """Dispatch on variant/impl. ``impl``: "jnp" | "pallas"."""
+    if cfg.variant == "dense":
+        return dense_attention(q, k, v, kv_valid)
+    attend_idx, pad_valid, g_eff = plan(cfg)
+    if impl == "pallas":
+        from . import bigbird as bb
+
+        return bb.block_sparse_attention_pallas(
+            q, k, v, jnp.asarray(attend_idx), jnp.asarray(pad_valid), g_eff,
+            cfg.block, kv_valid,
+        )
+    return block_sparse_attention(
+        q, k, v, jnp.asarray(attend_idx), jnp.asarray(pad_valid), g_eff,
+        cfg.block, kv_valid,
+    )

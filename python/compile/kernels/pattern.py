@@ -1,0 +1,183 @@
+"""Deterministic BigBird block-attention pattern.
+
+This module is the Python half of a **cross-language contract**: the exact
+same integer algorithm is implemented in ``rust/src/attention/pattern.rs``
+(splitmix64 seeding + xoshiro256** stream + Lemire bounded sampling +
+partial Fisher–Yates). ``aot.py`` dumps the pattern next to each artifact
+and a rust test regenerates and diffs it, so any drift between the two
+implementations fails the build.
+
+Pattern semantics (Sec. 2 + App. D of the paper), on ``nb`` blocks:
+
+* the first ``g`` blocks are **global**: they attend to every block and
+  every block attends to them (ITC; ETC reaches the same shape by
+  prepending extra tokens before blockification),
+* every query block attends to its **window**: ``w`` blocks centred on
+  itself, circular (the rolled-key implementation of App. D wraps),
+* every non-global query block attends to ``r`` **random** blocks drawn
+  without replacement from the blocks it does not already attend to.
+
+Variant ablations (Table 1) toggle the components; the diagonal block is
+always attended (the rolled window always covers it; for the R-only
+ablation it prevents degenerate softmax rows).
+"""
+
+from __future__ import annotations
+
+MASK64 = (1 << 64) - 1
+
+
+def _rotl(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & MASK64
+
+
+def _splitmix64(state: int):
+    state = (state + 0x9E3779B97F4A7C15) & MASK64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return state, z ^ (z >> 31)
+
+
+class Rng:
+    """xoshiro256** — bit-exact mirror of ``rust/src/util/rng.rs``."""
+
+    def __init__(self, seed: int):
+        sm = seed & MASK64
+        s = []
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            s.append(v)
+        self.s = s
+
+    def fold_in(self, label: int) -> "Rng":
+        sm = (
+            self.s[0]
+            ^ _rotl(self.s[2], 17)
+            ^ ((label * 0x9E3779B97F4A7C15) & MASK64)
+        ) & MASK64
+        out = Rng.__new__(Rng)
+        s = []
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            s.append(v)
+        out.s = s
+        return out
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (_rotl((s[1] * 5) & MASK64, 7) * 9) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def below(self, n: int) -> int:
+        """Lemire multiply-shift bounded sampling — mirrors rust exactly."""
+        assert n > 0
+        while True:
+            x = self.next_u64()
+            m = x * n  # 128-bit in python
+            lo = m & MASK64
+            if lo >= n:
+                return m >> 64
+            t = ((-n) & MASK64) % n
+            if lo >= t:
+                return m >> 64
+
+    def range(self, lo: int, hi: int) -> int:
+        return lo + self.below(hi - lo)
+
+    def sample_distinct(self, n: int, k: int):
+        """Partial Fisher–Yates, identical to rust ``sample_distinct``."""
+        assert k <= n
+        idx = list(range(n))
+        for i in range(k):
+            j = self.range(i, n)
+            idx[i], idx[j] = idx[j], idx[i]
+        return idx[:k]
+
+
+def components(variant: str):
+    """(use_global, use_window, use_random) per attention variant."""
+    return {
+        "dense": (False, False, False),  # dense bypasses the pattern
+        "random": (False, False, True),
+        "window": (False, True, False),
+        "random_window": (False, True, True),
+        "window_global": (True, True, False),  # ≈ Longformer (App. E.3)
+        "bigbird_itc": (True, True, True),
+        "bigbird_etc": (True, True, True),
+    }[variant]
+
+
+def window_blocks_of(j: int, nb: int, w: int):
+    """Circular window of w blocks centred on j (always contains j)."""
+    half = w // 2
+    return [(j + o) % nb for o in range(-half, half + 1)]
+
+
+def build_pattern(
+    variant: str,
+    nb: int,
+    g: int,
+    w: int,
+    r: int,
+    seed: int,
+):
+    """Attended key blocks per query block.
+
+    Returns ``attend``: a list of ``nb`` sorted lists of key-block
+    indices. For ``dense`` every block attends to every block. Global
+    *query* blocks attend to everything (App. D: "the first row-block is
+    computed by direct multiplication").
+    """
+    use_g, use_w, use_r = components(variant)
+    g_eff = g if use_g else 0
+    attend = []
+    for j in range(nb):
+        if variant == "dense" or j < g_eff:
+            attend.append(list(range(nb)))
+            continue
+        base = set()
+        if use_g:
+            base.update(range(g_eff))
+        if use_w:
+            base.update(window_blocks_of(j, nb, w))
+        else:
+            base.add(j)  # diagonal always attended
+        picks = []
+        if use_r:
+            candidates = [b for b in range(nb) if b not in base]
+            rng = Rng(seed).fold_in(j)
+            chosen = rng.sample_distinct(len(candidates), min(r, len(candidates)))
+            picks = [candidates[c] for c in chosen]
+        attend.append(sorted(base | set(picks)))
+    # Rows may have slightly different lengths (window/global overlap near
+    # the edges with the circular roll); the compact kernel pads every row
+    # to the max length with mask-invalid entries (see jnp_impl.plan).
+    return attend
+
+
+def pattern_to_text(attend) -> str:
+    """Serialise for the cross-language golden test: one line per query
+    block, space-separated key blocks."""
+    return "\n".join(" ".join(str(b) for b in row) for row in attend) + "\n"
+
+
+def token_mask(attend, block: int, nb: int):
+    """Expand a block pattern to a token-level boolean mask (n, n) as a
+    nested list (numpy-free so the rust mirror test can share goldens)."""
+    n = nb * block
+    mask = [[False] * n for _ in range(n)]
+    for qb, keys in enumerate(attend):
+        for kb in keys:
+            for qi in range(qb * block, (qb + 1) * block):
+                row = mask[qi]
+                for ki in range(kb * block, (kb + 1) * block):
+                    row[ki] = True
+    return mask

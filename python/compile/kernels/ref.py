@@ -1,0 +1,62 @@
+"""Pure-jnp correctness oracle for BigBird attention.
+
+Computes attention the *obvious* O(n²) way — dense scores with an additive
+mask built from the block pattern — so every optimised implementation
+(``jnp_impl`` compact gather/roll path, ``bigbird`` Pallas kernel) can be
+checked against it bit-for-bit (up to fp error) by pytest.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import pattern as pat
+
+NEG_INF = -1e9
+
+
+def mask_from_pattern(attend, block: int) -> np.ndarray:
+    """(n, n) float mask: 0 where attended, NEG_INF where not."""
+    nb = len(attend)
+    n = nb * block
+    m = np.full((n, n), NEG_INF, dtype=np.float32)
+    for qb, keys in enumerate(attend):
+        rows = slice(qb * block, (qb + 1) * block)
+        for kb in keys:
+            m[rows, kb * block : (kb + 1) * block] = 0.0
+    return m
+
+
+def attention_ref(q, k, v, mask, kv_valid=None):
+    """Masked multi-head attention, dense reference.
+
+    Args:
+      q, k, v: (B, H, N, D)
+      mask: (N, N) additive mask (0 / NEG_INF) from ``mask_from_pattern``
+      kv_valid: optional (B, N) 1.0/0.0 key-padding mask
+    Returns:
+      (B, H, N, D)
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("bhnd,bhmd->bhnm", q, k) / jnp.sqrt(jnp.float32(d))
+    scores = scores + mask[None, None, :, :]
+    if kv_valid is not None:
+        scores = scores + (1.0 - kv_valid)[:, None, None, :] * NEG_INF
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhnm,bhmd->bhnd", p, v)
+
+
+def bigbird_attention_ref(q, k, v, cfg, kv_valid=None):
+    """Oracle wired to a Config: builds the pattern and applies it."""
+    attend = pat.build_pattern(
+        cfg.variant,
+        cfg.num_blocks,
+        cfg.global_blocks,
+        cfg.window_blocks,
+        cfg.random_blocks,
+        cfg.attn_seed,
+    )
+    mask = jnp.asarray(mask_from_pattern(attend, cfg.block))
+    return attention_ref(q, k, v, mask, kv_valid)

@@ -1,0 +1,243 @@
+"""Layer-2 building blocks: embeddings, BigBird encoder layers, heads.
+
+Functional JAX (no flax): parameters are nested dicts of jnp arrays,
+initialised by ``init_*`` functions and threaded explicitly. Every
+attention call routes through ``kernels.jnp_impl.attention`` which
+dispatches to the Pallas kernel (L1) or its jnp formulation.
+
+ETC handling: for ``bigbird_etc`` the model *prepends* ``g·b`` learned
+global tokens to the sequence before blockification (App. D / Sec. 2
+"extended transformer construction") and strips them before the heads, so
+task code never sees them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import jnp_impl
+
+NEG_INF = -1e9
+
+
+# --------------------------------------------------------------------------
+# initialisation
+# --------------------------------------------------------------------------
+
+
+def _dense_init(key, fan_in, fan_out):
+    scale = (2.0 / (fan_in + fan_out)) ** 0.5
+    return jax.random.normal(key, (fan_in, fan_out), jnp.float32) * scale
+
+
+def init_layer(key, cfg):
+    """One transformer layer's parameters."""
+    ks = jax.random.split(key, 6)
+    h = cfg.hidden
+    return {
+        "wq": _dense_init(ks[0], h, h),
+        "wk": _dense_init(ks[1], h, h),
+        "wv": _dense_init(ks[2], h, h),
+        "wo": _dense_init(ks[3], h, h),
+        "w1": _dense_init(ks[4], h, cfg.ffn),
+        "b1": jnp.zeros((cfg.ffn,), jnp.float32),
+        "w2": _dense_init(ks[5], cfg.ffn, h),
+        "b2": jnp.zeros((h,), jnp.float32),
+        "ln1_g": jnp.ones((h,), jnp.float32),
+        "ln1_b": jnp.zeros((h,), jnp.float32),
+        "ln2_g": jnp.ones((h,), jnp.float32),
+        "ln2_b": jnp.zeros((h,), jnp.float32),
+    }
+
+
+def init_encoder(key, cfg):
+    """Embeddings + all layers (+ ETC global token embeddings)."""
+    keys = jax.random.split(key, cfg.layers + 3)
+    params = {
+        "tok_emb": jax.random.normal(keys[0], (cfg.vocab, cfg.hidden), jnp.float32) * 0.02,
+        "pos_emb": jax.random.normal(keys[1], (internal_len(cfg), cfg.hidden), jnp.float32)
+        * 0.02,
+        "layers": [init_layer(keys[2 + i], cfg) for i in range(cfg.layers)],
+        "ln_f_g": jnp.ones((cfg.hidden,), jnp.float32),
+        "ln_f_b": jnp.zeros((cfg.hidden,), jnp.float32),
+    }
+    if cfg.variant == "bigbird_etc":
+        params["global_emb"] = (
+            jax.random.normal(keys[-1], (cfg.global_blocks * cfg.block, cfg.hidden), jnp.float32)
+            * 0.02
+        )
+    return params
+
+
+def internal_len(cfg) -> int:
+    """Sequence length inside the encoder (ETC prepends global tokens)."""
+    if cfg.variant == "bigbird_etc":
+        return cfg.seq_len + cfg.global_blocks * cfg.block
+    return cfg.seq_len
+
+
+def internal_cfg(cfg):
+    """Attention config on the internal sequence (ETC grows nb by g)."""
+    if cfg.variant == "bigbird_etc":
+        return cfg.replace(seq_len=internal_len(cfg))
+    return cfg
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+def encoder_layer(p, x, kv_valid, cfg, impl):
+    """Post-LN transformer layer with BigBird attention."""
+    bsz, n, h = x.shape
+    heads, d = cfg.heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(bsz, n, heads, d).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"]).reshape(bsz, n, heads, d).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"]).reshape(bsz, n, heads, d).transpose(0, 2, 1, 3)
+    a = jnp_impl.attention(q, k, v, cfg, kv_valid, impl=impl)
+    a = a.transpose(0, 2, 1, 3).reshape(bsz, n, h)
+    x = layer_norm(x + a @ p["wo"], p["ln1_g"], p["ln1_b"])
+    f = gelu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+    return layer_norm(x + f, p["ln2_g"], p["ln2_b"])
+
+
+def encoder(params, tokens, kv_valid, cfg, impl="jnp"):
+    """Full encoder: embeddings → L layers → final LN.
+
+    Args:
+      tokens: (B, S) int32
+      kv_valid: (B, S) float 1/0 padding mask (1 = real token)
+    Returns: (B, S, H) hidden states on the *task* sequence (ETC global
+      prefix stripped).
+    """
+    icfg = internal_cfg(cfg)
+    x = params["tok_emb"][tokens]  # (B, S, H)
+    bsz = x.shape[0]
+    if cfg.variant == "bigbird_etc":
+        gtok = jnp.broadcast_to(
+            params["global_emb"][None, :, :],
+            (bsz,) + params["global_emb"].shape,
+        )
+        x = jnp.concatenate([gtok, x], axis=1)
+        kv_valid = jnp.concatenate(
+            [jnp.ones((bsz, gtok.shape[1]), jnp.float32), kv_valid], axis=1
+        )
+    x = x + params["pos_emb"][None, : x.shape[1], :]
+    for p in params["layers"]:
+        x = encoder_layer(p, x, kv_valid, icfg, impl)
+    x = layer_norm(x, params["ln_f_g"], params["ln_f_b"])
+    if cfg.variant == "bigbird_etc":
+        x = x[:, cfg.global_blocks * cfg.block :, :]
+    return x
+
+
+# --------------------------------------------------------------------------
+# task heads
+# --------------------------------------------------------------------------
+
+
+def init_mlm_head(key, cfg):
+    return {
+        "w": _dense_init(key, cfg.hidden, cfg.vocab),
+        "b": jnp.zeros((cfg.vocab,), jnp.float32),
+    }
+
+
+def mlm_logits(head, hidden):
+    return hidden @ head["w"] + head["b"]
+
+
+def init_cls_head(key, cfg, num_classes=None):
+    k1, k2 = jax.random.split(key)
+    n = num_classes or cfg.num_classes
+    return {
+        "wp": _dense_init(k1, cfg.hidden, cfg.hidden),
+        "bp": jnp.zeros((cfg.hidden,), jnp.float32),
+        "wc": _dense_init(k2, cfg.hidden, n),
+        "bc": jnp.zeros((n,), jnp.float32),
+    }
+
+
+def cls_logits(head, hidden):
+    """BERT-style: tanh pooling on the first ([CLS]) token."""
+    pooled = jnp.tanh(hidden[:, 0, :] @ head["wp"] + head["bp"])
+    return pooled @ head["wc"] + head["bc"]
+
+
+def init_qa_head(key, cfg):
+    return {
+        "w": _dense_init(key, cfg.hidden, 2),
+        "b": jnp.zeros((2,), jnp.float32),
+    }
+
+
+def qa_logits(head, hidden, kv_valid):
+    """Span start/end logits, padding masked to −∞. Returns (B, S, 2)."""
+    logits = hidden @ head["w"] + head["b"]
+    return logits + (1.0 - kv_valid)[:, :, None] * NEG_INF
+
+
+def init_multilabel_head(key, cfg, num_profiles=None):
+    k1, k2 = jax.random.split(key)
+    n = num_profiles or cfg.num_profiles
+    return {
+        "wp": _dense_init(k1, cfg.hidden, cfg.hidden),
+        "bp": jnp.zeros((cfg.hidden,), jnp.float32),
+        "wc": _dense_init(k2, cfg.hidden, n),
+        "bc": jnp.zeros((n,), jnp.float32),
+    }
+
+
+def multilabel_logits(head, hidden):
+    """919-profile-style multi-label head on the CLS token (App. F.3)."""
+    pooled = jnp.tanh(hidden[:, 0, :] @ head["wp"] + head["bp"])
+    return pooled @ head["wc"] + head["bc"]
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+
+
+def softmax_xent(logits, labels, weights):
+    """Weighted token-level cross entropy.
+
+    logits (B, S, V), labels (B, S) int32, weights (B, S) float.
+    Returns scalar mean over weighted positions.
+    """
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - ll) * weights
+    return nll.sum() / jnp.maximum(weights.sum(), 1.0)
+
+
+def cls_xent(logits, labels):
+    """(B, C) logits vs (B,) int labels."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return (logz - ll).mean()
+
+
+def qa_span_loss(logits, starts, ends):
+    """Sum of start and end cross entropies; logits (B, S, 2)."""
+    return cls_xent(logits[:, :, 0], starts) + cls_xent(logits[:, :, 1], ends)
+
+
+def bce_multilabel(logits, labels, pos_weight=1.0):
+    """Binary cross entropy with positive upweighting (App. F.3 uses 8×)."""
+    logp = jax.nn.log_sigmoid(logits)
+    lognp = jax.nn.log_sigmoid(-logits)
+    loss = -(pos_weight * labels * logp + (1.0 - labels) * lognp)
+    return loss.mean()

@@ -1,0 +1,129 @@
+"""Layer-2 task models: encoder + head, loss functions, parameter ravel.
+
+Every entry here is a pure function of (flat_params, batch...) so the AOT
+exporter can lower it directly; ``jax.flatten_util.ravel_pytree`` gives a
+single f32 parameter vector, which is what the Rust training driver owns
+and checkpoints.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from . import layers
+
+TASKS = ("mlm", "cls", "qa", "multilabel")
+
+
+def init_task_params(key, cfg, task: str):
+    """Nested param dict for encoder + task head."""
+    k_enc, k_head = jax.random.split(key)
+    params = {"encoder": layers.init_encoder(k_enc, cfg)}
+    if task == "mlm":
+        params["head"] = layers.init_mlm_head(k_head, cfg)
+    elif task == "cls":
+        params["head"] = layers.init_cls_head(k_head, cfg)
+    elif task == "qa":
+        params["head"] = layers.init_qa_head(k_head, cfg)
+    elif task == "multilabel":
+        params["head"] = layers.init_multilabel_head(k_head, cfg)
+    else:
+        raise ValueError(task)
+    return params
+
+
+def raveler(cfg, task: str):
+    """(example_params, unravel_fn, param_count) for a config+task."""
+    params = init_task_params(jax.random.PRNGKey(0), cfg, task)
+    flat, unravel = ravel_pytree(params)
+    return params, unravel, flat.shape[0]
+
+
+def forward(params, tokens, kv_valid, cfg, task: str, impl="jnp"):
+    """Task logits.
+
+    mlm → (B, S, V); cls → (B, C); qa → (B, S, 2); multilabel → (B, P).
+    """
+    h = layers.encoder(params["encoder"], tokens, kv_valid, cfg, impl=impl)
+    if task == "mlm":
+        return layers.mlm_logits(params["head"], h)
+    if task == "cls":
+        return layers.cls_logits(params["head"], h)
+    if task == "qa":
+        return layers.qa_logits(params["head"], h, kv_valid)
+    if task == "multilabel":
+        return layers.multilabel_logits(params["head"], h)
+    raise ValueError(task)
+
+
+def loss_fn(params, batch, cfg, task: str, impl="jnp"):
+    """Scalar training loss for one batch.
+
+    Batch layouts (all i32 unless noted):
+      mlm:        (tokens, kv_valid f32, labels, weights f32)
+      cls:        (tokens, kv_valid f32, label (B,))
+      qa:         (tokens, kv_valid f32, starts (B,), ends (B,))
+      multilabel: (tokens, kv_valid f32, labels f32 (B, P))
+    """
+    tokens, kv_valid = batch[0], batch[1]
+    logits = forward(params, tokens, kv_valid, cfg, task, impl=impl)
+    if task == "mlm":
+        labels, weights = batch[2], batch[3]
+        return layers.softmax_xent(logits, labels, weights)
+    if task == "cls":
+        return layers.cls_xent(logits, batch[2])
+    if task == "qa":
+        return layers.qa_span_loss(logits, batch[2], batch[3])
+    if task == "multilabel":
+        return layers.bce_multilabel(logits, batch[2], pos_weight=8.0)
+    raise ValueError(task)
+
+
+def batch_specs(cfg, task: str):
+    """jax.ShapeDtypeStruct list describing one batch, and manifest type
+    strings — shared by the exporter and (via the manifest) the Rust
+    data pipeline."""
+    B, S = cfg.batch, cfg.seq_len
+    i32, f32 = jnp.int32, jnp.float32
+    sds = jax.ShapeDtypeStruct
+    if task == "mlm":
+        return (
+            [sds((B, S), i32), sds((B, S), f32), sds((B, S), i32), sds((B, S), f32)],
+            ["tokens:i32", "kv_valid:f32", "labels:i32", "weights:f32"],
+        )
+    if task == "cls":
+        return (
+            [sds((B, S), i32), sds((B, S), f32), sds((B,), i32)],
+            ["tokens:i32", "kv_valid:f32", "label:i32"],
+        )
+    if task == "qa":
+        return (
+            [sds((B, S), i32), sds((B, S), f32), sds((B,), i32), sds((B,), i32)],
+            ["tokens:i32", "kv_valid:f32", "starts:i32", "ends:i32"],
+        )
+    if task == "multilabel":
+        return (
+            [
+                sds((B, S), i32),
+                sds((B, S), f32),
+                sds((B, cfg.num_profiles), f32),
+            ],
+            ["tokens:i32", "kv_valid:f32", "labels:f32"],
+        )
+    raise ValueError(task)
+
+
+def logits_spec(cfg, task: str):
+    """Output logits shape for the fwd artifact manifest entry."""
+    B, S = cfg.batch, cfg.seq_len
+    if task == "mlm":
+        return (B, S, cfg.vocab)
+    if task == "cls":
+        return (B, cfg.num_classes)
+    if task == "qa":
+        return (B, S, 2)
+    if task == "multilabel":
+        return (B, cfg.num_profiles)
+    raise ValueError(task)

@@ -1,0 +1,167 @@
+"""Encoder-decoder model for long-document summarization (Sec. 4.1).
+
+Exactly the paper's arrangement: **sparse BigBird attention on the
+encoder only**, full attention on the (short) decoder — "the length of
+output sequence is typically small as compared to the input". The decoder
+is a standard causal transformer with cross-attention to the encoder
+states.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from . import layers
+
+NEG_INF = -1e9
+
+
+def init_decoder_layer(key, cfg):
+    ks = jax.random.split(key, 9)
+    h = cfg.hidden
+    return {
+        "wq": layers._dense_init(ks[0], h, h),
+        "wk": layers._dense_init(ks[1], h, h),
+        "wv": layers._dense_init(ks[2], h, h),
+        "wo": layers._dense_init(ks[3], h, h),
+        "cq": layers._dense_init(ks[4], h, h),
+        "ck": layers._dense_init(ks[5], h, h),
+        "cv": layers._dense_init(ks[6], h, h),
+        "co": layers._dense_init(ks[7], h, h),
+        "w1": layers._dense_init(ks[8], h, cfg.ffn),
+        "b1": jnp.zeros((cfg.ffn,), jnp.float32),
+        "w2": layers._dense_init(jax.random.fold_in(key, 99), cfg.ffn, h),
+        "b2": jnp.zeros((h,), jnp.float32),
+        "ln1_g": jnp.ones((h,), jnp.float32),
+        "ln1_b": jnp.zeros((h,), jnp.float32),
+        "ln2_g": jnp.ones((h,), jnp.float32),
+        "ln2_b": jnp.zeros((h,), jnp.float32),
+        "ln3_g": jnp.ones((h,), jnp.float32),
+        "ln3_b": jnp.zeros((h,), jnp.float32),
+    }
+
+
+def init_seq2seq(key, cfg, dec_len: int):
+    k_enc, k_dec, k_emb, k_out = jax.random.split(key, 4)
+    dec_keys = jax.random.split(k_dec, cfg.layers)
+    return {
+        "encoder": layers.init_encoder(k_enc, cfg),
+        "dec_pos": jax.random.normal(k_emb, (dec_len, cfg.hidden), jnp.float32) * 0.02,
+        "dec_layers": [init_decoder_layer(k, cfg) for k in dec_keys],
+        "out_w": layers._dense_init(k_out, cfg.hidden, cfg.vocab),
+        "out_b": jnp.zeros((cfg.vocab,), jnp.float32),
+        "ln_f_g": jnp.ones((cfg.hidden,), jnp.float32),
+        "ln_f_b": jnp.zeros((cfg.hidden,), jnp.float32),
+    }
+
+
+def _mha(q, k, v, heads, mask=None):
+    """(B, Nq, H) x (B, Nk, H) dense multi-head attention."""
+    bsz, nq, h = q.shape
+    nk = k.shape[1]
+    d = h // heads
+    qh = q.reshape(bsz, nq, heads, d).transpose(0, 2, 1, 3)
+    kh = k.reshape(bsz, nk, heads, d).transpose(0, 2, 1, 3)
+    vh = v.reshape(bsz, nk, heads, d).transpose(0, 2, 1, 3)
+    s = jnp.einsum("bhnd,bhmd->bhnm", qh, kh) / jnp.sqrt(jnp.float32(d))
+    if mask is not None:
+        s = s + mask
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhnm,bhmd->bhnd", p, vh)
+    return o.transpose(0, 2, 1, 3).reshape(bsz, nq, h)
+
+
+def decoder(params, enc_h, enc_valid, dec_tokens, cfg):
+    """Teacher-forced decoder. dec_tokens (B, T) → logits (B, T, V).
+
+    Token embeddings are shared with the encoder's table.
+    """
+    tok_emb = params["encoder"]["tok_emb"]
+    x = tok_emb[dec_tokens] + params["dec_pos"][None, : dec_tokens.shape[1], :]
+    t = x.shape[1]
+    causal = jnp.where(
+        jnp.arange(t)[:, None] >= jnp.arange(t)[None, :], 0.0, NEG_INF
+    )[None, None, :, :]
+    cross_mask = ((1.0 - enc_valid) * NEG_INF)[:, None, None, :]
+    for p in params["dec_layers"]:
+        a = _mha(x @ p["wq"], x @ p["wk"], x @ p["wv"], cfg.heads, causal)
+        x = layers.layer_norm(x + a @ p["wo"], p["ln1_g"], p["ln1_b"])
+        c = _mha(x @ p["cq"], enc_h @ p["ck"], enc_h @ p["cv"], cfg.heads, cross_mask)
+        x = layers.layer_norm(x + c @ p["co"], p["ln2_g"], p["ln2_b"])
+        f = layers.gelu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+        x = layers.layer_norm(x + f, p["ln3_g"], p["ln3_b"])
+    x = layers.layer_norm(x, params["ln_f_g"], params["ln_f_b"])
+    return x @ params["out_w"] + params["out_b"]
+
+
+def s2s_forward(params, src_tokens, src_valid, dec_tokens, cfg, impl="jnp"):
+    enc_h = layers.encoder(params["encoder"], src_tokens, src_valid, cfg, impl=impl)
+    return decoder(params, enc_h, src_valid, dec_tokens, cfg)
+
+
+def s2s_loss(params, batch, cfg, impl="jnp"):
+    """Teacher forcing: predict dec_out from dec_in.
+
+    batch = (src_tokens, src_valid, dec_in, dec_out, dec_weights)
+    """
+    src, valid, dec_in, dec_out, w = batch
+    logits = s2s_forward(params, src, valid, dec_in, cfg, impl=impl)
+    return layers.softmax_xent(logits, dec_out, w)
+
+
+def make_s2s_train_step(cfg, dec_len: int, impl="jnp", base_lr=1e-3, warmup=100):
+    """Adam step over the seq2seq params; same contract as
+    train_step.make_train_step."""
+    params0 = init_seq2seq(jax.random.PRNGKey(0), cfg, dec_len)
+    flat0, unravel = ravel_pytree(params0)
+    n = flat0.shape[0]
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    def loss_flat(flat, *batch):
+        return s2s_loss(unravel(flat), batch, cfg, impl=impl)
+
+    def step_fn(flat, m, v, step, *batch):
+        loss, g = jax.value_and_grad(loss_flat)(flat, *batch)
+        m2 = b1 * m + (1.0 - b1) * g
+        v2 = b2 * v + (1.0 - b2) * g * g
+        t = step.astype(jnp.float32) + 1.0
+        mhat = m2 / (1.0 - b1**t)
+        vhat = v2 / (1.0 - b2**t)
+        sf = step.astype(jnp.float32) + 1.0
+        w = jnp.float32(warmup)
+        lr = base_lr * jnp.minimum(sf / w, jnp.sqrt(w / sf))
+        flat2 = flat - lr * mhat / (jnp.sqrt(vhat) + eps)
+        return flat2, m2, v2, loss
+
+    return step_fn, n
+
+
+def make_s2s_decode(cfg, dec_len: int, impl="jnp"):
+    """``decode(flat, src, valid, dec_tokens) -> logits (B, T, V)``.
+
+    Greedy decoding lives in Rust: it feeds the partial hypothesis back in
+    (positions ≥ current step are padding id 0) and reads the next-token
+    logits from the returned full-sequence logits.
+    """
+    params0 = init_seq2seq(jax.random.PRNGKey(0), cfg, dec_len)
+    _, unravel = ravel_pytree(params0)
+
+    def decode(flat, src, valid, dec_tokens):
+        return s2s_forward(unravel(flat), src, valid, dec_tokens, cfg, impl=impl)
+
+    return decode
+
+
+def make_s2s_init(cfg, dec_len: int, seed: int = 0):
+    params0 = init_seq2seq(jax.random.PRNGKey(0), cfg, dec_len)
+    _, unravel = ravel_pytree(params0)
+
+    def init():
+        params = init_seq2seq(jax.random.PRNGKey(seed), cfg, dec_len)
+        flat, _ = ravel_pytree(params)
+        return flat
+
+    return init

@@ -1,0 +1,84 @@
+"""Adam training step, lowered as a single AOT program.
+
+The Rust driver owns three flat f32 vectors (params, m, v) plus an i32
+step counter; one call to the exported program performs forward, backward
+and the optimizer update and returns the new state plus the scalar loss.
+Nothing about optimisation lives in Rust — it only moves host tensors.
+
+Learning-rate schedule: linear warmup then inverse-sqrt decay (the
+paper's pretraining recipe, App. E.1), baked into the program as a
+function of the step input.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from . import model
+
+
+def lr_schedule(step, base_lr=1e-3, warmup=100):
+    """Linear warmup → inverse-sqrt decay (paper App. E.1 shape)."""
+    step = step.astype(jnp.float32) + 1.0
+    w = jnp.float32(warmup)
+    return base_lr * jnp.minimum(step / w, jnp.sqrt(w / step))
+
+
+def make_train_step(cfg, task: str, impl="jnp", base_lr=1e-3, warmup=100):
+    """Returns ``(train_step, n_params)``.
+
+    ``train_step(flat_params, m, v, step, *batch)``
+      → ``(flat_params', m', v', loss)`` with Adam(β1=.9, β2=.999, ε=1e-8)
+    """
+    _, unravel, n = model.raveler(cfg, task)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    def loss_flat(flat, *batch):
+        return model.loss_fn(unravel(flat), batch, cfg, task, impl=impl)
+
+    def train_step(flat, m, v, step, *batch):
+        loss, g = jax.value_and_grad(loss_flat)(flat, *batch)
+        m2 = b1 * m + (1.0 - b1) * g
+        v2 = b2 * v + (1.0 - b2) * g * g
+        t = step.astype(jnp.float32) + 1.0
+        mhat = m2 / (1.0 - b1**t)
+        vhat = v2 / (1.0 - b2**t)
+        lr = lr_schedule(step, base_lr, warmup)
+        flat2 = flat - lr * mhat / (jnp.sqrt(vhat) + eps)
+        return flat2, m2, v2, loss
+
+    return train_step, n
+
+
+def make_eval_loss(cfg, task: str, impl="jnp"):
+    """``eval_loss(flat_params, *batch) -> loss`` (no update)."""
+    _, unravel, n = model.raveler(cfg, task)
+
+    def eval_loss(flat, *batch):
+        return model.loss_fn(unravel(flat), batch, cfg, task, impl=impl)
+
+    return eval_loss, n
+
+
+def make_forward(cfg, task: str, impl="jnp"):
+    """``fwd(flat_params, tokens, kv_valid) -> logits``."""
+    _, unravel, n = model.raveler(cfg, task)
+
+    def fwd(flat, tokens, kv_valid):
+        return model.forward(unravel(flat), tokens, kv_valid, cfg, task, impl=impl)
+
+    return fwd, n
+
+
+def make_init(cfg, task: str, seed: int = 0):
+    """``init() -> flat_params`` with the seed baked in."""
+    _, unravel, n = model.raveler(cfg, task)
+
+    def init():
+        params = model.init_task_params(jax.random.PRNGKey(seed), cfg, task)
+        flat, _ = ravel_pytree(params)
+        return flat
+
+    return init, n

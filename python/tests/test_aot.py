@@ -1,0 +1,88 @@
+"""AOT exporter tests: HLO text properties, manifest emission, build plan."""
+
+import re
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, configs
+
+
+def test_build_plan_names_unique_and_large():
+    arts = aot.build_plan()
+    names = [a.name for a in arts]
+    assert len(names) == len(set(names))
+    assert len(names) >= 90
+
+
+def test_lowered_text_has_full_constants_and_no_metadata():
+    # a function with a large embedded constant — the bug class we fixed:
+    # default printing elides large constants and the 0.5.1 parser reads
+    # garbage silently.
+    big = jnp.asarray((jnp.arange(640) % 7).reshape(64, 10), jnp.int32)
+
+    def fn(x):
+        return (big + x,)
+
+    text = aot.lower_to_hlo_text(fn, [jax.ShapeDtypeStruct((), jnp.int32)])
+    assert "..." not in text, "large constant was elided"
+    assert "source_end_line" not in text, "new metadata attrs break the 0.5.1 parser"
+    # the constant payload must be printed
+    assert text.count("constant(") >= 1
+    assert "{ 0, 1, 2, 3, 4, 5, 6, 0" in text.replace("\n", " ")
+
+
+def test_manifest_entry_format():
+    arts = [a for a in aot.build_plan() if a.name == "train_mlm_bigbird_itc_s512_b4"]
+    assert len(arts) == 1
+    a = arts[0]
+    out_shapes = jax.eval_shape(a.fn, *a.args)
+    entry = aot.manifest_entry(a, out_shapes)
+    assert entry.startswith("[artifact]\nname=train_mlm_bigbird_itc_s512_b4\n")
+    assert "input=params:f32[" in entry
+    assert "input=step:i32\n" in entry
+    assert "output=loss:f32\n" in entry
+    assert "meta=attn:bigbird_itc" in entry
+    assert "meta=pattern:pattern_bigbird_itc_" in entry
+
+
+def test_pattern_key_matches_dump_regex():
+    cfg = configs.exp(batch=4)
+    key = aot.pattern_key(cfg)
+    m = re.match(r"pattern_(\w+)_nb(\d+)_g(\d+)_w(\d+)_r(\d+)_seed(\d+)\.txt", key)
+    assert m, key
+    assert m.group(1) == "bigbird_itc"
+    assert int(m.group(2)) == cfg.num_blocks
+
+
+def test_pattern_key_uses_internal_length_for_etc():
+    cfg = configs.exp(batch=4, variant="bigbird_etc")
+    key = aot.pattern_key(cfg)
+    m = re.match(r"pattern_\w+_nb(\d+)_", key)
+    # ETC grows the internal sequence by global_blocks blocks
+    assert int(m.group(1)) == cfg.num_blocks + cfg.global_blocks
+
+
+def test_hlo_stats_histogram():
+    def fn(x):
+        return (jnp.tanh(x) @ jnp.ones((4, 4), jnp.float32),)
+
+    text = aot.lower_to_hlo_text(fn, [jax.ShapeDtypeStruct((4, 4), jnp.float32)])
+    ops = aot.hlo_stats(text)
+    assert ops.get("tanh", 0) >= 1
+    assert ops.get("dot", 0) >= 1
+
+
+def test_task1_artifacts_mask_is_sparse():
+    arts = aot.task1_artifacts()  # default n=256, d=32 (block 16 ⇒ 16 blocks)
+    assert [a.name for a in arts] == ["task1_dense", "task1_sparse"]
+    # run both in python: sparse output should differ from dense output
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    u = rng.normal(size=(1, 256, 32)).astype(np.float32)
+    u /= np.linalg.norm(u, axis=-1, keepdims=True)
+    dense_out = np.asarray(arts[0].fn(jnp.asarray(u))[0])
+    sparse_out = np.asarray(arts[1].fn(jnp.asarray(u))[0])
+    assert not np.allclose(dense_out, sparse_out, atol=1e-3)

@@ -1,0 +1,79 @@
+"""Dtype sweeps for the L1 kernel: the paper's TPU kernels run bf16 on
+the MXU; the CPU artifacts use f32. Verify the kernel math is stable in
+bf16/f16 too (python-side only — the 0.5.1 runtime is f32/i32)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import configs
+from compile.kernels import bigbird, jnp_impl, ref
+
+
+CFG = configs.tiny(heads=2, hidden=32)
+
+
+def qkv(dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    mk = lambda: jnp.asarray(rng.normal(size=(1, 2, CFG.seq_len, 16)).astype(np.float32)).astype(dtype)
+    return mk(), mk(), mk()
+
+
+@pytest.mark.parametrize("dtype,atol", [
+    (jnp.bfloat16, 5e-2),
+    (jnp.float16, 2e-2),
+    (jnp.float32, 2e-5),
+])
+def test_jnp_impl_low_precision_close_to_f32_oracle(dtype, atol):
+    q, k, v = qkv(dtype)
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    want = np.asarray(ref.bigbird_attention_ref(qf, kf, vf, CFG))
+    got = np.asarray(
+        jnp_impl.attention(q, k, v, CFG, impl="jnp").astype(jnp.float32)
+    )
+    np.testing.assert_allclose(got, want, atol=atol, rtol=atol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_pallas_kernel_runs_in_low_precision(dtype):
+    """The pallas kernel must trace + execute in bf16 (TPU's MXU dtype)."""
+    q, k, v = qkv(dtype, seed=1)
+    attend_idx, pad_valid, g_eff = jnp_impl.plan(CFG)
+    out = bigbird.block_sparse_attention_pallas(
+        q.astype(jnp.float32),  # compact gather happens in f32
+        k.astype(jnp.float32),
+        v.astype(jnp.float32),
+        jnp.asarray(attend_idx),
+        jnp.asarray(pad_valid),
+        g_eff,
+        CFG.block,
+    )
+    assert out.shape == (1, 2, CFG.seq_len, 16)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_softmax_stability_with_large_scores():
+    """Max-subtraction must keep the kernel finite under extreme logits."""
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(1, 1, CFG.seq_len, 16)).astype(np.float32)) * 100.0
+    k = jnp.asarray(rng.normal(size=(1, 1, CFG.seq_len, 16)).astype(np.float32)) * 100.0
+    v = jnp.asarray(rng.normal(size=(1, 1, CFG.seq_len, 16)).astype(np.float32))
+    c = CFG.replace(heads=1, hidden=16)
+    for impl in ("jnp", "pallas"):
+        out = jnp_impl.attention(q, k, v, c, impl=impl)
+        assert bool(jnp.isfinite(out).all()), impl
+
+
+def test_vmem_budget_across_block_sizes():
+    """§Perf L1: the paper-scale kernel working set must fit VMEM for all
+    block sizes we might tile with; utilization improves with block size."""
+    a, d = 8, 64
+    prev_u = 0.0
+    for b in (16, 32, 64, 128):
+        assert bigbird.vmem_bytes(b, a, d) < 16 * 2**20, b
+        u = bigbird.mxu_utilization_estimate(b, a, d)
+        assert u >= prev_u - 1e-9, f"utilization should not drop: b={b}"
+        prev_u = u
+    # at b=128 the matmuls are MXU-aligned
+    assert bigbird.mxu_utilization_estimate(128, a, 128) == 1.0

@@ -1,0 +1,182 @@
+"""Kernel correctness: jnp compact impl and Pallas kernel vs dense-masked
+oracle, swept over shapes/variants/seeds with hypothesis."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from compile import configs
+from compile.kernels import bigbird, jnp_impl, pattern as pat, ref
+
+VARIANTS = [
+    "random",
+    "window",
+    "random_window",
+    "window_global",
+    "bigbird_itc",
+    "bigbird_etc",
+]
+
+
+def make_cfg(variant, nb, block, g, w, r, heads, head_dim, seed):
+    return configs.Config(
+        variant=variant,
+        seq_len=nb * block,
+        block=block,
+        global_blocks=g,
+        window_blocks=w,
+        random_blocks=r,
+        layers=1,
+        heads=heads,
+        hidden=heads * head_dim,
+        ffn=4 * heads * head_dim,
+        vocab=64,
+        batch=1,
+        attn_seed=seed,
+    )
+
+
+def rand_qkv(rng, b, h, n, d):
+    q = rng.normal(size=(b, h, n, d)).astype(np.float32)
+    k = rng.normal(size=(b, h, n, d)).astype(np.float32)
+    v = rng.normal(size=(b, h, n, d)).astype(np.float32)
+    return jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
+
+
+def rand_kv_valid(rng, b, n):
+    """Random key-padding mask; always keeps a prefix so no row is empty."""
+    keep = rng.integers(n // 2, n + 1, size=b)
+    m = np.zeros((b, n), np.float32)
+    for i, k in enumerate(keep):
+        m[i, :k] = 1.0
+    return jnp.asarray(m)
+
+
+def assert_close_valid(got, want, kv_valid, atol=2e-5, rtol=2e-5):
+    """Compare only at valid query positions: rows whose every attended
+    key is padding produce unspecified (degenerate-softmax) values in
+    both implementations, and the model never reads them."""
+    g = np.asarray(got) * np.asarray(kv_valid)[:, None, :, None]
+    w = np.asarray(want) * np.asarray(kv_valid)[:, None, :, None]
+    np.testing.assert_allclose(g, w, atol=atol, rtol=rtol)
+
+
+shape_strategy = st.tuples(
+    st.sampled_from(VARIANTS),
+    st.integers(min_value=6, max_value=12),   # nb
+    st.sampled_from([4, 8]),                  # block
+    st.integers(min_value=1, max_value=2),    # g
+    st.sampled_from([1, 3]),                  # w
+    st.integers(min_value=1, max_value=2),    # r
+    st.integers(min_value=1, max_value=2),    # heads
+    st.sampled_from([4, 16]),                 # head_dim
+    st.integers(min_value=0, max_value=10_000),  # pattern seed
+    st.integers(min_value=0, max_value=10_000),  # data seed
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(shape_strategy)
+def test_jnp_impl_matches_ref(t):
+    variant, nb, block, g, w, r, heads, head_dim, pseed, dseed = t
+    assume(g + w + r <= nb)
+    cfg = make_cfg(variant, nb, block, g, w, r, heads, head_dim, pseed)
+    rng = np.random.default_rng(dseed)
+    q, k, v = rand_qkv(rng, 2, heads, cfg.seq_len, head_dim)
+    kv = rand_kv_valid(rng, 2, cfg.seq_len)
+    got = jnp_impl.attention(q, k, v, cfg, kv, impl="jnp")
+    want = ref.bigbird_attention_ref(q, k, v, cfg, kv)
+    assert_close_valid(got, want, kv)
+
+
+@settings(max_examples=12, deadline=None)
+@given(shape_strategy)
+def test_pallas_matches_ref(t):
+    """Pallas interpret mode is slow — fewer examples, same oracle."""
+    variant, nb, block, g, w, r, heads, head_dim, pseed, dseed = t
+    assume(g + w + r <= nb)
+    cfg = make_cfg(variant, nb, block, g, w, r, heads, head_dim, pseed)
+    rng = np.random.default_rng(dseed)
+    q, k, v = rand_qkv(rng, 1, heads, cfg.seq_len, head_dim)
+    kv = rand_kv_valid(rng, 1, cfg.seq_len)
+    got = jnp_impl.attention(q, k, v, cfg, kv, impl="pallas")
+    want = ref.bigbird_attention_ref(q, k, v, cfg, kv)
+    assert_close_valid(got, want, kv)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_pallas_matches_jnp_no_padding(variant):
+    """Pallas vs jnp impl without kv mask (exercise the default path)."""
+    cfg = make_cfg(variant, 8, 8, 1, 3, 1, 2, 8, 5)
+    rng = np.random.default_rng(0)
+    q, k, v = rand_qkv(rng, 2, 2, cfg.seq_len, 8)
+    a = jnp_impl.attention(q, k, v, cfg, impl="jnp")
+    b = jnp_impl.attention(q, k, v, cfg, impl="pallas")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5, rtol=2e-5)
+
+
+def test_dense_matches_plain_softmax():
+    rng = np.random.default_rng(1)
+    q, k, v = rand_qkv(rng, 2, 2, 32, 8)
+    got = jnp_impl.dense_attention(q, k, v)
+    d = 8
+    s = np.einsum("bhnd,bhmd->bhnm", q, k) / np.sqrt(d)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    want = np.einsum("bhnm,bhmd->bhnd", p, v)
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-5, rtol=1e-5)
+
+
+def test_fully_padded_keys_are_ignored():
+    """Output for valid queries must not depend on padded key content."""
+    cfg = make_cfg("bigbird_itc", 8, 8, 1, 3, 1, 2, 8, 0)
+    n = cfg.seq_len
+    rng = np.random.default_rng(2)
+    q, k, v = rand_qkv(rng, 1, 2, n, 8)
+    kv = np.ones((1, n), np.float32)
+    kv[0, n // 2 :] = 0.0
+    kv = jnp.asarray(kv)
+    out1 = jnp_impl.attention(q, k, v, cfg, kv, impl="jnp")
+    # perturb padded keys/values wildly
+    k2 = np.asarray(k).copy()
+    v2 = np.asarray(v).copy()
+    k2[:, :, n // 2 :, :] += 100.0
+    v2[:, :, n // 2 :, :] -= 50.0
+    out2 = jnp_impl.attention(q, jnp.asarray(k2), jnp.asarray(v2), cfg, kv, impl="jnp")
+    np.testing.assert_allclose(
+        np.asarray(out1)[:, :, : n // 2], np.asarray(out2)[:, :, : n // 2], atol=1e-5
+    )
+
+
+def test_rows_sum_to_one_property():
+    """Attention output of constant V must be that constant (softmax rows
+    normalise over exactly the attended set)."""
+    cfg = make_cfg("bigbird_itc", 8, 8, 1, 3, 1, 1, 8, 3)
+    n = cfg.seq_len
+    rng = np.random.default_rng(3)
+    q, k, _ = rand_qkv(rng, 1, 1, n, 8)
+    v = jnp.full((1, 1, n, 8), 2.5, jnp.float32)
+    out = jnp_impl.attention(q, k, v, cfg, impl="jnp")
+    np.testing.assert_allclose(np.asarray(out), 2.5, atol=1e-5)
+
+
+def test_vmem_estimate_matches_paper_scale():
+    """At the paper's config (b=64, A=8 blocks, d=64) the working set must
+    fit comfortably in a TPU core's ~16 MiB VMEM."""
+    b, a, d = 64, 8, 64
+    assert bigbird.vmem_bytes(b, a, d) < 16 * 2**20
+    # and utilisation estimate is a sane fraction
+    u = bigbird.mxu_utilization_estimate(b, a, d)
+    assert 0.0 < u <= 1.0
+
+
+def test_plan_pads_nonuniform_rows():
+    cfg = make_cfg("window_global", 8, 4, 2, 3, 1, 1, 4, 0)
+    idx, valid, g_eff = jnp_impl.plan(cfg)
+    assert g_eff == 2
+    assert idx.shape == valid.shape
+    # rows whose window overlaps the global prefix have padding
+    assert (valid == 0.0).any()
+    # padded entries point at a legal block
+    assert idx.min() >= 0 and idx.max() < cfg.num_blocks

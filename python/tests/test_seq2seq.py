@@ -1,0 +1,75 @@
+"""Seq2seq (summarization) model tests."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import configs, seq2seq
+
+
+CFG = configs.tiny(seq_len=64, batch=2, layers=1, block=8)
+DEC = 16
+
+
+def test_forward_shape_and_finite():
+    params = seq2seq.init_seq2seq(jax.random.PRNGKey(0), CFG, DEC)
+    rng = np.random.default_rng(0)
+    src = jnp.asarray(rng.integers(6, CFG.vocab, size=(2, 64)), jnp.int32)
+    valid = jnp.ones((2, 64), jnp.float32)
+    dec = jnp.asarray(rng.integers(6, CFG.vocab, size=(2, DEC)), jnp.int32)
+    logits = seq2seq.s2s_forward(params, src, valid, dec, CFG)
+    assert logits.shape == (2, DEC, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_decoder_is_causal():
+    """Changing decoder token t must not change logits at positions < t."""
+    params = seq2seq.init_seq2seq(jax.random.PRNGKey(0), CFG, DEC)
+    rng = np.random.default_rng(1)
+    src = jnp.asarray(rng.integers(6, CFG.vocab, size=(2, 64)), jnp.int32)
+    valid = jnp.ones((2, 64), jnp.float32)
+    dec = np.asarray(rng.integers(6, CFG.vocab, size=(2, DEC)), np.int32)
+    l1 = seq2seq.s2s_forward(params, src, valid, jnp.asarray(dec), CFG)
+    dec2 = dec.copy()
+    dec2[:, 10] = 9
+    l2 = seq2seq.s2s_forward(params, src, valid, jnp.asarray(dec2), CFG)
+    np.testing.assert_allclose(
+        np.asarray(l1)[:, :10], np.asarray(l2)[:, :10], atol=2e-5
+    )
+    # ...and DOES change at ≥ t (sanity that the perturbation matters)
+    assert not np.allclose(np.asarray(l1)[:, 10:], np.asarray(l2)[:, 10:], atol=1e-3)
+
+
+def test_s2s_train_step_decreases_loss():
+    step_fn, n = seq2seq.make_s2s_train_step(CFG, DEC, base_lr=1e-2, warmup=5)
+    init_fn = seq2seq.make_s2s_init(CFG, DEC)
+    flat = jax.jit(init_fn)()
+    assert flat.shape == (n,)
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    rng = np.random.default_rng(0)
+    src = jnp.asarray(rng.integers(6, CFG.vocab, size=(2, 64)), jnp.int32)
+    valid = jnp.ones((2, 64), jnp.float32)
+    dec_in = jnp.asarray(rng.integers(6, CFG.vocab, size=(2, DEC)), jnp.int32)
+    dec_out = jnp.asarray(rng.integers(6, CFG.vocab, size=(2, DEC)), jnp.int32)
+    w = jnp.ones((2, DEC), jnp.float32)
+    sj = jax.jit(step_fn)
+    losses = []
+    for i in range(10):
+        flat, m, v, loss = sj(flat, m, v, jnp.int32(i), src, valid, dec_in, dec_out, w)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_cross_attention_ignores_padded_source():
+    params = seq2seq.init_seq2seq(jax.random.PRNGKey(0), CFG, DEC)
+    rng = np.random.default_rng(2)
+    src = np.asarray(rng.integers(6, CFG.vocab, size=(2, 64)), np.int32)
+    valid = np.ones((2, 64), np.float32)
+    valid[:, 32:] = 0.0
+    dec = jnp.asarray(rng.integers(6, CFG.vocab, size=(2, DEC)), jnp.int32)
+    l1 = seq2seq.s2s_forward(params, jnp.asarray(src), jnp.asarray(valid), dec, CFG)
+    src2 = src.copy()
+    src2[:, 32:] = 11
+    l2 = seq2seq.s2s_forward(params, jnp.asarray(src2), jnp.asarray(valid), dec, CFG)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=2e-4)

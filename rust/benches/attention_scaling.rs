@@ -1,0 +1,50 @@
+//! `cargo bench --bench attention_scaling` — the scaling figure bench:
+//! dense vs BigBird attention forward latency across sequence lengths,
+//! with log-log exponent fits (hand-rolled harness; criterion is not
+//! available offline).
+
+use std::time::Instant;
+
+use bigbird::runtime::{ExecutablePool, HostTensor, Manifest, Runtime};
+use bigbird::util::stats::{linear_fit, median};
+
+const LENGTHS: [usize; 5] = [256, 512, 1024, 2048, 4096];
+
+fn bench_artifact(pool: &ExecutablePool, name: &str, n: usize, reps: usize) -> Vec<f64> {
+    let exe = pool.get(name).expect(name);
+    let vol = 2 * n * 32;
+    let q = HostTensor::F32 {
+        shape: vec![1, 2, n, 32],
+        data: (0..vol).map(|i| ((i % 97) as f32) * 0.01).collect(),
+    };
+    exe.run(&[q.clone(), q.clone(), q.clone()]).unwrap(); // warmup
+    (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            exe.run(&[q.clone(), q.clone(), q.clone()]).unwrap();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+fn main() {
+    let pool = ExecutablePool::new(
+        Runtime::cpu().unwrap(),
+        Manifest::load("artifacts").expect("run `make artifacts`"),
+    );
+    println!("attention_scaling bench (median of 5 reps):\n");
+    println!("{:<14}{:<9}{:>9}{:>14}", "variant", "impl", "seq_len", "median ms");
+    for (variant, impl_) in [("dense", "jnp"), ("bigbird_itc", "jnp"), ("bigbird_itc", "pallas")] {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for &n in &LENGTHS {
+            let samples = bench_artifact(&pool, &format!("attnbench_{variant}_{impl_}_n{n}"), n, 5);
+            let med = median(&samples);
+            println!("{variant:<14}{impl_:<9}{n:>9}{:>14.2}", med * 1000.0);
+            xs.push((n as f64).ln());
+            ys.push(med.ln());
+        }
+        let (_, k, r2) = linear_fit(&xs, &ys);
+        println!("{variant:<14}{impl_:<9}  t ∝ n^{k:.2} (r²={r2:.3})\n");
+    }
+}

@@ -1,0 +1,89 @@
+//! `cargo bench --bench coordinator` — L3 hot-path benches:
+//! 1. batcher routing/forming micro-bench (pure logic, no PJRT),
+//! 2. end-to-end serving throughput + latency percentiles under a
+//!    mixed-length fill-mask workload.
+
+use std::time::{Duration, Instant};
+
+use bigbird::coordinator::{Batcher, BatcherConfig, Bucket, PendingRequest, Server, ServerConfig};
+use bigbird::tokenizer::special;
+use bigbird::util::Rng;
+
+fn bench_batcher() {
+    let buckets = vec![
+        Bucket { artifact: "a".into(), seq_len: 128, batch: 8 },
+        Bucket { artifact: "b".into(), seq_len: 512, batch: 4 },
+        Bucket { artifact: "c".into(), seq_len: 2048, batch: 1 },
+    ];
+    let mut rng = Rng::new(1);
+    let n = 100_000;
+    let reqs: Vec<PendingRequest> = (0..n)
+        .map(|i| PendingRequest {
+            id: i as u64,
+            tokens: vec![7; rng.range(16, 2048)],
+            enqueued: Instant::now(),
+        })
+        .collect();
+    let mut b = Batcher::new(buckets, BatcherConfig { max_wait: Duration::ZERO });
+    let t0 = Instant::now();
+    for r in reqs {
+        b.push(r);
+    }
+    let mut formed = 0usize;
+    let deadline = Instant::now() + Duration::from_millis(1);
+    while let Some(fb) = b.poll(deadline) {
+        formed += fb.requests.len();
+    }
+    let dt = t0.elapsed();
+    println!(
+        "batcher: {n} requests routed+formed in {:.1} ms ({:.1} M req/s), {formed} drained",
+        dt.as_secs_f64() * 1000.0,
+        n as f64 / dt.as_secs_f64() / 1e6
+    );
+}
+
+fn bench_serving() {
+    let mut cfg = ServerConfig::mlm_default("artifacts");
+    cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(5) };
+    let server = Server::start(cfg).expect("run `make artifacts`");
+    let mut rng = Rng::new(2);
+    let n = 48;
+    // warm every bucket (compile + param init), then reset metrics
+    server.warmup(&[128, 256, 512, 1024, 2048]).unwrap();
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for _ in 0..n {
+        let len = match rng.below(10) {
+            0..=4 => rng.range(64, 512),
+            5..=7 => rng.range(512, 1024),
+            _ => rng.range(1024, 2048),
+        };
+        let mut toks: Vec<i32> = (0..len).map(|_| 6 + rng.below(500) as i32).collect();
+        for _ in 0..3 {
+            let p = rng.below(len);
+            toks[p] = special::MASK;
+        }
+        rxs.push(server.submit(toks).unwrap());
+    }
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(600)).unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.metrics();
+    println!(
+        "serving: {n} reqs in {wall:.2}s = {:.1} req/s | p50 {:.0}ms p95 {:.0}ms p99 {:.0}ms | fill {:.2} batches {}",
+        n as f64 / wall,
+        m.p50_ms,
+        m.p95_ms,
+        m.p99_ms,
+        m.fill_ratio,
+        m.batches
+    );
+    server.shutdown();
+}
+
+fn main() {
+    println!("coordinator benches:\n");
+    bench_batcher();
+    bench_serving();
+}

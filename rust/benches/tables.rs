@@ -1,0 +1,43 @@
+//! `cargo bench --bench tables` — timed regeneration entry points for
+//! the paper tables (short-budget versions of the `experiment` CLI):
+//! each row of this bench IS the harness that regenerates a table, run
+//! with a reduced step budget so the bench finishes in minutes. Use
+//! `bigbird experiment <id> --steps N` for full-budget runs.
+
+use std::time::Instant;
+
+use bigbird::cli::Flags;
+
+fn timed(name: &str, f: impl FnOnce() -> anyhow::Result<()>) {
+    let t0 = Instant::now();
+    match f() {
+        Ok(()) => println!("[tables] {name}: {:.1}s", t0.elapsed().as_secs_f64()),
+        Err(e) => println!("[tables] {name}: FAILED: {e:#}"),
+    }
+}
+
+fn flags(steps: usize) -> Flags {
+    Flags {
+        artifacts: "artifacts".to_string(),
+        config: String::new(),
+        seed: 0,
+        steps,
+        positional: vec![],
+    }
+}
+
+fn main() {
+    println!("table regeneration benches (reduced budgets):\n");
+    // keep full-budget run files intact
+    std::env::set_var("BB_RUN_SUFFIX", "_bench40");
+    let quick = flags(40);
+    timed("patterns (Fig. 1/3)", || bigbird::experiments::patterns::run(&quick));
+    timed("graph report (Sec. 2)", || bigbird::experiments::graph_report::run(&quick));
+    timed("scaling (headline fig)", || bigbird::experiments::scaling::run(&quick));
+    timed("task1 (Prop. 1)", || bigbird::experiments::task1::run(&quick));
+    timed("turing (App. B)", || bigbird::experiments::turing::run(&quick));
+    timed("table1 @40 steps", || bigbird::experiments::table1::run(&quick));
+    timed("classification @40 steps", || {
+        bigbird::experiments::classification::run(&quick)
+    });
+}

@@ -1,0 +1,15 @@
+//! Block-sparse attention patterns on the Rust side.
+//!
+//! The Python compile path bakes the pattern into the HLO artifacts; the
+//! Rust side re-derives the *same* pattern (bit-exact mirror of
+//! `python/compile/kernels/pattern.py`) for analysis, visualisation
+//! (Fig. 1/3), the graph-theory experiments (Sec. 2), and the
+//! cross-language contract test against the `pattern_*.txt` dumps.
+
+mod pattern;
+mod render;
+pub mod theory;
+
+pub use pattern::{build_pattern, components, pattern_to_text, window_blocks_of, PatternSpec};
+pub use render::{render_block_pattern, render_token_pattern};
+pub use theory::{contains_star, edge_density, max_hops_via_global};

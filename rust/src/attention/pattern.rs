@@ -1,0 +1,229 @@
+//! Deterministic BigBird block-attention pattern — bit-exact mirror of
+//! `python/compile/kernels/pattern.py` (cross-language contract; see
+//! `tests/pattern_contract.rs`).
+
+use crate::config::AttnVariant;
+use crate::util::Rng;
+
+/// Everything that determines a pattern. Hash-stable across languages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PatternSpec {
+    pub variant: AttnVariant,
+    /// number of blocks in the (internal) sequence
+    pub nb: usize,
+    pub global_blocks: usize,
+    pub window_blocks: usize,
+    pub random_blocks: usize,
+    pub seed: u64,
+}
+
+/// `(use_global, use_window, use_random)` per variant — mirrors
+/// `pattern.components` on the Python side.
+pub fn components(variant: AttnVariant) -> (bool, bool, bool) {
+    match variant {
+        AttnVariant::Dense => (false, false, false),
+        AttnVariant::Random => (false, false, true),
+        AttnVariant::Window => (false, true, false),
+        AttnVariant::RandomWindow => (false, true, true),
+        AttnVariant::WindowGlobal => (true, true, false),
+        AttnVariant::BigBirdItc | AttnVariant::BigBirdEtc => (true, true, true),
+    }
+}
+
+/// Circular window of `w` blocks centred on `j` (always contains `j`).
+pub fn window_blocks_of(j: usize, nb: usize, w: usize) -> Vec<usize> {
+    let half = (w / 2) as isize;
+    (-half..=half)
+        .map(|o| (j as isize + o).rem_euclid(nb as isize) as usize)
+        .collect()
+}
+
+/// Attended key blocks per query block — identical semantics and RNG
+/// consumption order to the Python generator.
+pub fn build_pattern(spec: &PatternSpec) -> Vec<Vec<usize>> {
+    let PatternSpec { variant, nb, global_blocks: g, window_blocks: w, random_blocks: r, seed } =
+        *spec;
+    let (use_g, use_w, use_r) = components(variant);
+    let g_eff = if use_g { g } else { 0 };
+    let mut attend = Vec::with_capacity(nb);
+    for j in 0..nb {
+        if variant == AttnVariant::Dense || j < g_eff {
+            attend.push((0..nb).collect());
+            continue;
+        }
+        let mut base = vec![false; nb];
+        if use_g {
+            for b in base.iter_mut().take(g_eff) {
+                *b = true;
+            }
+        }
+        if use_w {
+            for wb in window_blocks_of(j, nb, w) {
+                base[wb] = true;
+            }
+        } else {
+            base[j] = true; // diagonal always attended
+        }
+        if use_r {
+            let candidates: Vec<usize> = (0..nb).filter(|&b| !base[b]).collect();
+            let mut rng = Rng::new(seed).fold_in(j as u64);
+            let k = r.min(candidates.len());
+            for c in rng.sample_distinct(candidates.len(), k) {
+                base[candidates[c]] = true;
+            }
+        }
+        attend.push((0..nb).filter(|&b| base[b]).collect());
+    }
+    attend
+}
+
+/// Serialise in the `pattern_*.txt` dump format (one line per query
+/// block, space-separated sorted key blocks).
+pub fn pattern_to_text(attend: &[Vec<usize>]) -> String {
+    let mut s = String::new();
+    for row in attend {
+        let strs: Vec<String> = row.iter().map(|b| b.to_string()).collect();
+        s.push_str(&strs.join(" "));
+        s.push('\n');
+    }
+    s
+}
+
+impl PatternSpec {
+    /// Total directed edges in the block graph — the paper's O(n) count.
+    pub fn edge_count(&self) -> usize {
+        build_pattern(self).iter().map(|r| r.len()).sum()
+    }
+
+    /// Token-level adjacency (n × n booleans) for graph analysis.
+    pub fn token_adjacency(&self, block: usize) -> Vec<Vec<bool>> {
+        let attend = build_pattern(self);
+        let n = self.nb * block;
+        let mut adj = vec![vec![false; n]; n];
+        for (qb, keys) in attend.iter().enumerate() {
+            for &kb in keys {
+                for qi in qb * block..(qb + 1) * block {
+                    for ki in kb * block..(kb + 1) * block {
+                        adj[qi][ki] = true;
+                    }
+                }
+            }
+        }
+        adj
+    }
+
+    /// The filename of the Python-side dump for this spec (must match
+    /// `aot.pattern_key`).
+    pub fn dump_filename(&self) -> String {
+        format!(
+            "pattern_{}_nb{}_g{}_w{}_r{}_seed{}.txt",
+            self.variant.as_str(),
+            self.nb,
+            self.global_blocks,
+            self.window_blocks,
+            self.random_blocks,
+            self.seed
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_res;
+
+    fn spec(variant: AttnVariant, nb: usize, g: usize, w: usize, r: usize, seed: u64) -> PatternSpec {
+        PatternSpec { variant, nb, global_blocks: g, window_blocks: w, random_blocks: r, seed }
+    }
+
+    #[test]
+    fn dense_is_complete() {
+        let attend = build_pattern(&spec(AttnVariant::Dense, 6, 1, 3, 1, 0));
+        for row in &attend {
+            assert_eq!(row.len(), 6);
+        }
+    }
+
+    #[test]
+    fn global_rows_and_columns_full() {
+        let s = spec(AttnVariant::BigBirdItc, 12, 2, 3, 2, 7);
+        let attend = build_pattern(&s);
+        for row in attend.iter().take(2) {
+            assert_eq!(row.len(), 12);
+        }
+        for row in attend.iter().skip(2) {
+            assert!(row.contains(&0) && row.contains(&1));
+        }
+    }
+
+    #[test]
+    fn window_present_and_circular() {
+        let s = spec(AttnVariant::Window, 8, 0, 3, 0, 0);
+        let attend = build_pattern(&s);
+        assert_eq!(attend[0], vec![0, 1, 7]); // wraps
+        assert_eq!(attend[4], vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn diagonal_always_attended_property() {
+        check_res(
+            42,
+            200,
+            |rng| {
+                let variants = AttnVariant::all();
+                let v = *rng.choose(&variants);
+                spec(
+                    v,
+                    rng.range(6, 40),
+                    rng.range(1, 3),
+                    *rng.choose(&[1usize, 3, 5]),
+                    rng.range(1, 4),
+                    rng.next_u64() % 10_000,
+                )
+            },
+            |s| {
+                let attend = build_pattern(s);
+                for (j, row) in attend.iter().enumerate() {
+                    if !row.contains(&j) {
+                        return Err(format!("diagonal missing at {j}"));
+                    }
+                    let mut sorted = row.clone();
+                    sorted.sort_unstable();
+                    sorted.dedup();
+                    if &sorted != row {
+                        return Err(format!("row {j} not sorted/deduped: {row:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let s = spec(AttnVariant::BigBirdItc, 32, 2, 3, 3, 5);
+        assert_eq!(build_pattern(&s), build_pattern(&s));
+        let s2 = PatternSpec { seed: 6, ..s };
+        assert_ne!(build_pattern(&s), build_pattern(&s2));
+    }
+
+    #[test]
+    fn edge_count_linear_in_nb() {
+        let e = |nb| spec(AttnVariant::BigBirdItc, nb, 2, 3, 3, 0).edge_count();
+        // growth well below quadratic
+        assert!(e(64) < 3 * e(32), "e(64)={} e(32)={}", e(64), e(32));
+        assert!(e(128) < 3 * e(64));
+        // dense IS quadratic
+        let d = |nb| spec(AttnVariant::Dense, nb, 0, 1, 0, 0).edge_count();
+        assert_eq!(d(32), 4 * d(16));
+    }
+
+    #[test]
+    fn token_adjacency_expands_blocks() {
+        let s = spec(AttnVariant::Window, 4, 0, 3, 0, 0);
+        let adj = s.token_adjacency(2);
+        assert_eq!(adj.len(), 8);
+        assert!(adj[2][0]); // block 1 attends block 0
+        assert!(!adj[2][6]); // block 1 does not attend block 3
+    }
+}

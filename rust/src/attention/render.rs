@@ -1,0 +1,61 @@
+//! ASCII rendering of attention patterns — regenerates Fig. 1 (token
+//! level) and Fig. 3 (block level) of the paper as terminal art.
+
+use super::pattern::{build_pattern, PatternSpec};
+
+/// Block-level adjacency grid (Fig. 3): `█` attended, `·` not.
+pub fn render_block_pattern(spec: &PatternSpec) -> String {
+    let attend = build_pattern(spec);
+    let nb = spec.nb;
+    let mut out = String::new();
+    for row in attend.iter().take(nb) {
+        let mut attended = vec![false; nb];
+        for &kb in row {
+            attended[kb] = true;
+        }
+        for &a in &attended {
+            out.push(if a { '█' } else { '·' });
+            out.push(' ');
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Token-level grid (Fig. 1) for small `n = nb · block`.
+pub fn render_token_pattern(spec: &PatternSpec, block: usize) -> String {
+    let adj = spec.token_adjacency(block);
+    let mut out = String::new();
+    for row in &adj {
+        for &a in row {
+            out.push(if a { '█' } else { '·' });
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AttnVariant;
+
+    #[test]
+    fn render_has_expected_dims() {
+        let spec = PatternSpec {
+            variant: AttnVariant::BigBirdItc,
+            nb: 8,
+            global_blocks: 1,
+            window_blocks: 3,
+            random_blocks: 1,
+            seed: 0,
+        };
+        let s = render_block_pattern(&spec);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 8);
+        assert_eq!(lines[0].chars().filter(|c| *c == '█').count(), 8); // global row full
+        let t = render_token_pattern(&spec, 2);
+        assert_eq!(t.lines().count(), 16);
+        assert_eq!(t.lines().next().unwrap().len() / '█'.len_utf8(), 16);
+    }
+}

@@ -1,0 +1,126 @@
+//! Mechanical checks of the paper's theory-section preconditions.
+//!
+//! * **Theorem 1** (universal approximation) holds for any sparse graph
+//!   *containing the star graph S* centred on a global token —
+//!   [`contains_star`] verifies a pattern satisfies the precondition.
+//! * The **contextual-mapping construction** (App. A) routes all
+//!   information through the global token in 2 hops —
+//!   [`max_hops_via_global`] measures the worst-case token-to-token
+//!   routing distance, which must be ≤ 2 for patterns with a global
+//!   component and grows linearly for window-only patterns.
+//! * **§3.4 lower bound**: [`edge_density`] confirms which patterns are
+//!   in the Õ(n)-edge regime the lower bound applies to.
+
+use super::pattern::{build_pattern, PatternSpec};
+
+/// Does the pattern contain the star graph: ∃ hub h attending to every
+/// block AND attended by every block? (Theorem 1's precondition.)
+pub fn contains_star(spec: &PatternSpec) -> bool {
+    let attend = build_pattern(spec);
+    let nb = spec.nb;
+    'hub: for h in 0..nb {
+        // h must attend to everyone
+        if attend[h].len() != nb {
+            continue;
+        }
+        // everyone must attend to h
+        for row in attend.iter() {
+            if !row.contains(&h) {
+                continue 'hub;
+            }
+        }
+        return true;
+    }
+    false
+}
+
+/// Maximum over token pairs (u, v) of the directed hop distance from u
+/// to v in the block graph (BFS). 2 when a star hub exists; O(n) for
+/// window-only.
+pub fn max_hops_via_global(spec: &PatternSpec) -> usize {
+    let attend = build_pattern(spec);
+    let nb = spec.nb;
+    let mut worst = 0usize;
+    for src in 0..nb {
+        // BFS over directed attention edges
+        let mut dist = vec![usize::MAX; nb];
+        dist[src] = 0;
+        let mut q = std::collections::VecDeque::from([src]);
+        while let Some(u) = q.pop_front() {
+            for &v in &attend[u] {
+                if dist[v] == usize::MAX {
+                    dist[v] = dist[u] + 1;
+                    q.push_back(v);
+                }
+            }
+        }
+        for &d in &dist {
+            if d == usize::MAX {
+                return usize::MAX; // disconnected
+            }
+            worst = worst.max(d);
+        }
+    }
+    worst
+}
+
+/// Directed edges per block row, averaged — Õ(1) per row ⇔ Õ(n) total.
+pub fn edge_density(spec: &PatternSpec) -> f64 {
+    let attend = build_pattern(spec);
+    let total: usize = attend.iter().map(|r| r.len()).sum();
+    total as f64 / spec.nb as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AttnVariant;
+
+    fn spec(variant: AttnVariant, nb: usize) -> PatternSpec {
+        PatternSpec {
+            variant,
+            nb,
+            global_blocks: 2,
+            window_blocks: 3,
+            random_blocks: 3,
+            seed: 0,
+        }
+    }
+
+    #[test]
+    fn bigbird_contains_star_graph() {
+        // Theorem 1's precondition holds for BigBird (both constructions)
+        assert!(contains_star(&spec(AttnVariant::BigBirdItc, 32)));
+        assert!(contains_star(&spec(AttnVariant::BigBirdEtc, 32)));
+        assert!(contains_star(&spec(AttnVariant::WindowGlobal, 32)));
+    }
+
+    #[test]
+    fn patterns_without_global_lack_the_star() {
+        assert!(!contains_star(&spec(AttnVariant::Window, 32)));
+        assert!(!contains_star(&spec(AttnVariant::Random, 32)));
+        assert!(!contains_star(&spec(AttnVariant::RandomWindow, 32)));
+    }
+
+    #[test]
+    fn global_gives_two_hop_routing() {
+        assert!(max_hops_via_global(&spec(AttnVariant::BigBirdItc, 64)) <= 2);
+        // window-only routing distance grows with n
+        let w16 = max_hops_via_global(&spec(AttnVariant::Window, 16));
+        let w64 = max_hops_via_global(&spec(AttnVariant::Window, 64));
+        assert!(w64 >= 3 * w16, "window routing should grow linearly: {w16} -> {w64}");
+    }
+
+    #[test]
+    fn sparse_patterns_have_constant_row_density() {
+        let d32 = edge_density(&spec(AttnVariant::BigBirdItc, 32));
+        let d128 = edge_density(&spec(AttnVariant::BigBirdItc, 128));
+        // row density roughly constant (global rows add O(g·nb)/nb = O(g))
+        assert!((d32 - d128).abs() < 4.0, "{d32} vs {d128}");
+        // dense is Θ(n)
+        let dd32 = edge_density(&spec(AttnVariant::Dense, 32));
+        let dd128 = edge_density(&spec(AttnVariant::Dense, 128));
+        assert_eq!(dd32, 32.0);
+        assert_eq!(dd128, 128.0);
+    }
+}

@@ -1,0 +1,143 @@
+//! Hand-rolled CLI (no `clap` in this offline environment).
+//!
+//! Subcommands:
+//! * `smoke`              — compile + run every artifact once (pipeline check)
+//! * `serve`              — start the long-document serving coordinator
+//! * `train`              — run the MLM training driver
+//! * `experiment <id>`    — regenerate one paper table/figure
+//! * `graph`              — attention-graph theory report (Sec. 2 claims)
+//! * `list`               — list artifacts in the manifest
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed global flags.
+#[derive(Debug, Default)]
+pub struct Flags {
+    /// `--artifacts <dir>` (default "artifacts").
+    pub artifacts: String,
+    /// `--config k=v,k=v` model config overrides.
+    pub config: String,
+    /// `--seed <u64>`.
+    pub seed: u64,
+    /// `--steps <n>` for training.
+    pub steps: usize,
+    /// Remaining positional args.
+    pub positional: Vec<String>,
+}
+
+/// Parse flags out of an argument list.
+pub fn parse_flags(args: &[String]) -> Result<Flags> {
+    let mut f = Flags {
+        artifacts: "artifacts".to_string(),
+        seed: 0,
+        steps: 200,
+        ..Default::default()
+    };
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--artifacts" => f.artifacts = it.next().context("--artifacts needs a value")?.clone(),
+            "--config" => f.config = it.next().context("--config needs a value")?.clone(),
+            "--seed" => f.seed = it.next().context("--seed needs a value")?.parse()?,
+            "--steps" => f.steps = it.next().context("--steps needs a value")?.parse()?,
+            other if other.starts_with("--") => bail!("unknown flag {other}"),
+            other => f.positional.push(other.to_string()),
+        }
+    }
+    Ok(f)
+}
+
+const USAGE: &str = "\
+bigbird — BigBird (NeurIPS 2020) reproduction leader
+
+USAGE: bigbird <command> [flags]
+
+COMMANDS:
+  smoke                  compile + run every artifact once
+  list                   list artifacts in the manifest
+  serve                  run the long-document serving demo workload
+  train                  run the MLM training driver
+  graph                  attention-graph theory report (Sec. 2)
+  experiment <id>        regenerate a paper table/figure; <id> one of:
+                         table1 | mlm_bpc | qa | classification | summarization |
+                         genomics | fig_ctxlen | scaling | task1 | patterns |
+                         turing | ablation_global | hotpath | hlo_report | all
+
+FLAGS:
+  --artifacts <dir>      artifact directory (default: artifacts)
+  --config k=v,...       model config overrides
+  --seed <u64>           RNG seed (default 0)
+  --steps <n>            training steps (default 200)
+";
+
+/// CLI entrypoint used by `main.rs`.
+pub fn run(args: &[String]) -> Result<()> {
+    if args.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = args[0].as_str();
+    let flags = parse_flags(&args[1..])?;
+    match cmd {
+        "smoke" => crate::experiments::smoke::run(&flags),
+        "list" => {
+            let manifest = crate::runtime::Manifest::load(&flags.artifacts)?;
+            for e in manifest.entries() {
+                println!(
+                    "{:40} {:28} in={} out={} meta={:?}",
+                    e.name,
+                    e.file,
+                    e.io.inputs.len(),
+                    e.io.outputs.len(),
+                    e.meta
+                );
+            }
+            Ok(())
+        }
+        "serve" => crate::experiments::serve_demo::run(&flags),
+        "train" => crate::experiments::train_demo::run(&flags),
+        "graph" => crate::experiments::graph_report::run(&flags),
+        "experiment" => {
+            let id = flags
+                .positional
+                .first()
+                .context("experiment needs an id; see `bigbird` for the list")?
+                .clone();
+            crate::experiments::dispatch(&id, &flags)
+        }
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; run `bigbird help`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_defaults() {
+        let f = parse_flags(&s(&[])).unwrap();
+        assert_eq!(f.artifacts, "artifacts");
+        assert_eq!(f.steps, 200);
+    }
+
+    #[test]
+    fn parse_flags_and_positionals() {
+        let f = parse_flags(&s(&["table1", "--seed", "7", "--steps", "50"])).unwrap();
+        assert_eq!(f.positional, vec!["table1"]);
+        assert_eq!(f.seed, 7);
+        assert_eq!(f.steps, 50);
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(parse_flags(&s(&["--bogus"])).is_err());
+    }
+}

@@ -1,0 +1,293 @@
+//! Configuration for model variants, serving, and training runs.
+//!
+//! The Rust side never builds models itself — shapes are fixed at AOT
+//! time — but the coordinator, data pipeline, and experiment harnesses all
+//! need to agree with the Python compile path on hyperparameters. The
+//! canonical config values live here and in `python/compile/configs.py`;
+//! `tests/manifest_contract.rs` checks the two stay in sync through the
+//! artifact manifest.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Which attention pattern a model variant uses. Mirrors
+/// `python/compile/configs.py::ATTN_VARIANTS` and Sec. 2 / Table 1 of the
+/// paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AttnVariant {
+    /// Full quadratic attention (BERT baseline).
+    Dense,
+    /// Random block attention only (Table 1 "R").
+    Random,
+    /// Sliding-window block attention only (Table 1 "W").
+    Window,
+    /// Random + window (Table 1 "R + W").
+    RandomWindow,
+    /// Window + global, no random — ≈ Longformer's pattern (App. E.3).
+    WindowGlobal,
+    /// BigBird-ITC: global tokens are existing tokens (first g blocks).
+    BigBirdItc,
+    /// BigBird-ETC: extra global tokens prepended to the sequence.
+    BigBirdEtc,
+}
+
+impl AttnVariant {
+    /// Manifest string, matching the Python side.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AttnVariant::Dense => "dense",
+            AttnVariant::Random => "random",
+            AttnVariant::Window => "window",
+            AttnVariant::RandomWindow => "random_window",
+            AttnVariant::WindowGlobal => "window_global",
+            AttnVariant::BigBirdItc => "bigbird_itc",
+            AttnVariant::BigBirdEtc => "bigbird_etc",
+        }
+    }
+
+    /// Parse a manifest string.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "dense" => AttnVariant::Dense,
+            "random" => AttnVariant::Random,
+            "window" => AttnVariant::Window,
+            "random_window" => AttnVariant::RandomWindow,
+            "window_global" => AttnVariant::WindowGlobal,
+            "bigbird_itc" => AttnVariant::BigBirdItc,
+            "bigbird_etc" => AttnVariant::BigBirdEtc,
+            other => bail!("unknown attention variant {other:?}"),
+        })
+    }
+
+    /// All variants, in Table 1 presentation order.
+    pub fn all() -> [AttnVariant; 7] {
+        [
+            AttnVariant::Dense,
+            AttnVariant::Random,
+            AttnVariant::Window,
+            AttnVariant::RandomWindow,
+            AttnVariant::WindowGlobal,
+            AttnVariant::BigBirdItc,
+            AttnVariant::BigBirdEtc,
+        ]
+    }
+
+    /// Is this a sparse (linear-complexity) pattern?
+    pub fn is_sparse(self) -> bool {
+        !matches!(self, AttnVariant::Dense)
+    }
+}
+
+/// BigBird model hyperparameters (App. E.1, Tab. 8, scaled down for the
+/// CPU testbed — see DESIGN.md §Substitutions).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    /// Attention pattern.
+    pub variant: AttnVariant,
+    /// Sequence length (multiple of `block`).
+    pub seq_len: usize,
+    /// Attention block size `b` (paper: 64; we default to 16 at small scale).
+    pub block: usize,
+    /// Number of global blocks `g/b`.
+    pub global_blocks: usize,
+    /// Window size in blocks `w/b` (odd; paper: 3).
+    pub window_blocks: usize,
+    /// Number of random blocks `r/b` per query block (paper: 3).
+    pub random_blocks: usize,
+    /// Transformer depth.
+    pub layers: usize,
+    /// Attention heads.
+    pub heads: usize,
+    /// Model width.
+    pub hidden: usize,
+    /// FFN width.
+    pub ffn: usize,
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Batch size baked into the artifact.
+    pub batch: usize,
+    /// Seed for the random-attention pattern (shared with Python).
+    pub attn_seed: u64,
+}
+
+impl ModelConfig {
+    /// The "tiny" configuration used by fast unit/integration tests.
+    pub fn tiny() -> Self {
+        ModelConfig {
+            variant: AttnVariant::BigBirdItc,
+            seq_len: 128,
+            block: 16,
+            global_blocks: 1,
+            window_blocks: 3,
+            random_blocks: 1,
+            layers: 2,
+            heads: 2,
+            hidden: 64,
+            ffn: 128,
+            vocab: 512,
+            batch: 4,
+            attn_seed: 0,
+        }
+    }
+
+    /// The "base" configuration used by the end-to-end training example
+    /// and most experiment tables (a scaled-down BigBird-base).
+    pub fn base() -> Self {
+        ModelConfig {
+            variant: AttnVariant::BigBirdItc,
+            seq_len: 512,
+            block: 16,
+            global_blocks: 2,
+            window_blocks: 3,
+            random_blocks: 3,
+            layers: 4,
+            heads: 4,
+            hidden: 128,
+            ffn: 512,
+            vocab: 2048,
+            batch: 8,
+            attn_seed: 0,
+        }
+    }
+
+    /// Number of blocks in the sequence.
+    pub fn num_blocks(&self) -> usize {
+        self.seq_len / self.block
+    }
+
+    /// Per-head dimension.
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Validate invariants shared with the Python compile path.
+    pub fn validate(&self) -> Result<()> {
+        if self.seq_len % self.block != 0 {
+            bail!("seq_len {} not a multiple of block {}", self.seq_len, self.block);
+        }
+        if self.window_blocks % 2 == 0 {
+            bail!("window_blocks {} must be odd", self.window_blocks);
+        }
+        if self.hidden % self.heads != 0 {
+            bail!("hidden {} not divisible by heads {}", self.hidden, self.heads);
+        }
+        let nb = self.num_blocks();
+        if self.global_blocks + self.window_blocks + self.random_blocks > nb {
+            bail!(
+                "pattern ({} g + {} w + {} r blocks) exceeds {} sequence blocks",
+                self.global_blocks,
+                self.window_blocks,
+                self.random_blocks,
+                nb
+            );
+        }
+        Ok(())
+    }
+
+    /// Attended key blocks per query block (g + w + r) — the linear factor
+    /// in BigBird's O(n) complexity.
+    pub fn attended_blocks(&self) -> usize {
+        self.global_blocks + self.window_blocks + self.random_blocks
+    }
+
+    /// FLOPs estimate of one attention layer forward pass, for roofline
+    /// accounting (2·n·k·d per score + weighted sum, across heads).
+    pub fn attention_flops(&self) -> u64 {
+        let n = self.seq_len as u64;
+        let d = self.head_dim() as u64;
+        let h = self.heads as u64;
+        let keys_per_query = match self.variant {
+            AttnVariant::Dense => n,
+            _ => (self.attended_blocks() * self.block) as u64,
+        };
+        // QK^T (2ndk) + softmax(V) (2ndk), per head
+        4 * h * n * keys_per_query * d
+    }
+
+    /// Name of the artifact for a given program kind, matching aot.py's
+    /// naming scheme: `{kind}_{variant}_s{seq}_b{batch}`.
+    pub fn artifact_name(&self, kind: &str) -> String {
+        format!("{kind}_{}_s{}_b{}", self.variant.as_str(), self.seq_len, self.batch)
+    }
+}
+
+/// Parse a `key=value,key=value` override string onto a base config (CLI
+/// `--config` flag).
+pub fn apply_overrides(mut cfg: ModelConfig, overrides: &str) -> Result<ModelConfig> {
+    let mut map = BTreeMap::new();
+    for pair in overrides.split(',').filter(|s| !s.is_empty()) {
+        let (k, v) = pair
+            .split_once('=')
+            .with_context(|| format!("override {pair:?} is not key=value"))?;
+        map.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    for (k, v) in map {
+        match k.as_str() {
+            "variant" => cfg.variant = AttnVariant::parse(&v)?,
+            "seq_len" => cfg.seq_len = v.parse()?,
+            "block" => cfg.block = v.parse()?,
+            "global_blocks" => cfg.global_blocks = v.parse()?,
+            "window_blocks" => cfg.window_blocks = v.parse()?,
+            "random_blocks" => cfg.random_blocks = v.parse()?,
+            "layers" => cfg.layers = v.parse()?,
+            "heads" => cfg.heads = v.parse()?,
+            "hidden" => cfg.hidden = v.parse()?,
+            "ffn" => cfg.ffn = v.parse()?,
+            "vocab" => cfg.vocab = v.parse()?,
+            "batch" => cfg.batch = v.parse()?,
+            "attn_seed" => cfg.attn_seed = v.parse()?,
+            other => bail!("unknown config key {other:?}"),
+        }
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_and_tiny_validate() {
+        ModelConfig::tiny().validate().unwrap();
+        ModelConfig::base().validate().unwrap();
+    }
+
+    #[test]
+    fn variant_roundtrip() {
+        for v in AttnVariant::all() {
+            assert_eq!(AttnVariant::parse(v.as_str()).unwrap(), v);
+        }
+        assert!(AttnVariant::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn flops_linear_vs_quadratic() {
+        let mut sparse = ModelConfig::base();
+        let mut dense = ModelConfig::base();
+        dense.variant = AttnVariant::Dense;
+        // doubling seq_len doubles sparse flops but quadruples dense flops
+        let f1s = sparse.attention_flops();
+        let f1d = dense.attention_flops();
+        sparse.seq_len *= 2;
+        dense.seq_len *= 2;
+        assert_eq!(sparse.attention_flops(), 2 * f1s);
+        assert_eq!(dense.attention_flops(), 4 * f1d);
+    }
+
+    #[test]
+    fn overrides_apply_and_validate() {
+        let cfg = apply_overrides(ModelConfig::base(), "seq_len=1024,layers=2").unwrap();
+        assert_eq!(cfg.seq_len, 1024);
+        assert_eq!(cfg.layers, 2);
+        assert!(apply_overrides(ModelConfig::base(), "seq_len=100").is_err()); // not mult of block
+        assert!(apply_overrides(ModelConfig::base(), "nope=1").is_err());
+    }
+
+    #[test]
+    fn artifact_name_scheme() {
+        let cfg = ModelConfig::base();
+        assert_eq!(cfg.artifact_name("mlm_fwd"), "mlm_fwd_bigbird_itc_s512_b8");
+    }
+}

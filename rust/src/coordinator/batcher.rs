@@ -1,0 +1,235 @@
+//! Length-bucketing dynamic batcher — pure logic, fully unit-testable
+//! without PJRT.
+//!
+//! AOT artifacts have fixed (batch, seq_len) shapes, so the batcher's job
+//! is: route each request to the smallest bucket whose seq_len fits,
+//! batch up to the bucket's capacity, and flush a partial batch when its
+//! oldest request has waited `max_wait`. Requests longer than the largest
+//! bucket are truncated to it (the dense-baseline behaviour the paper
+//! ridicules — but somebody has to serve those requests too).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// One artifact-backed shape bucket.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bucket {
+    /// artifact name to execute for this bucket
+    pub artifact: String,
+    /// padded sequence length
+    pub seq_len: usize,
+    /// batch capacity baked into the artifact
+    pub batch: usize,
+}
+
+/// Batcher tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// flush a partial batch when its oldest member waited this long
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_wait: Duration::from_millis(10) }
+    }
+}
+
+/// A queued request (token ids + bookkeeping).
+#[derive(Clone, Debug)]
+pub struct PendingRequest {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub enqueued: Instant,
+}
+
+/// A formed batch ready for the engine.
+#[derive(Clone, Debug)]
+pub struct FormedBatch {
+    pub bucket: Bucket,
+    pub requests: Vec<PendingRequest>,
+}
+
+/// The batcher: per-bucket FIFO queues.
+#[derive(Debug)]
+pub struct Batcher {
+    buckets: Vec<Bucket>, // sorted by seq_len ascending
+    queues: Vec<VecDeque<PendingRequest>>,
+    cfg: BatcherConfig,
+}
+
+impl Batcher {
+    /// `buckets` may arrive unsorted; they are sorted by seq_len.
+    pub fn new(mut buckets: Vec<Bucket>, cfg: BatcherConfig) -> Self {
+        assert!(!buckets.is_empty(), "batcher needs at least one bucket");
+        buckets.sort_by_key(|b| b.seq_len);
+        let queues = buckets.iter().map(|_| VecDeque::new()).collect();
+        Batcher { buckets, queues, cfg }
+    }
+
+    /// Bucket index for a request of `len` tokens: smallest bucket with
+    /// seq_len ≥ len, else the largest (truncation).
+    pub fn route(&self, len: usize) -> usize {
+        self.buckets
+            .iter()
+            .position(|b| b.seq_len >= len)
+            .unwrap_or(self.buckets.len() - 1)
+    }
+
+    /// Enqueue a request; returns the chosen bucket index.
+    pub fn push(&mut self, req: PendingRequest) -> usize {
+        let i = self.route(req.tokens.len());
+        self.queues[i].push_back(req);
+        i
+    }
+
+    /// Total queued requests.
+    pub fn pending(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Form at most one batch: a full bucket first, else the bucket whose
+    /// head has exceeded `max_wait`.
+    pub fn poll(&mut self, now: Instant) -> Option<FormedBatch> {
+        // full batches first (throughput)
+        for (i, b) in self.buckets.iter().enumerate() {
+            if self.queues[i].len() >= b.batch {
+                return Some(self.take(i, b.batch));
+            }
+        }
+        // deadline flush (latency)
+        for (i, _) in self.buckets.iter().enumerate() {
+            if let Some(head) = self.queues[i].front() {
+                if now.duration_since(head.enqueued) >= self.cfg.max_wait {
+                    let n = self.queues[i].len().min(self.buckets[i].batch);
+                    return Some(self.take(i, n));
+                }
+            }
+        }
+        None
+    }
+
+    fn take(&mut self, i: usize, n: usize) -> FormedBatch {
+        let requests = self.queues[i].drain(..n).collect();
+        FormedBatch { bucket: self.buckets[i].clone(), requests }
+    }
+
+    /// The configured buckets (sorted by seq_len).
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_res;
+    use std::time::Duration;
+
+    fn buckets() -> Vec<Bucket> {
+        vec![
+            Bucket { artifact: "fwd_s512".into(), seq_len: 512, batch: 4 },
+            Bucket { artifact: "fwd_s128".into(), seq_len: 128, batch: 8 },
+            Bucket { artifact: "fwd_s2048".into(), seq_len: 2048, batch: 2 },
+        ]
+    }
+
+    fn req(id: u64, len: usize, t: Instant) -> PendingRequest {
+        PendingRequest { id, tokens: vec![7; len], enqueued: t }
+    }
+
+    #[test]
+    fn routes_to_smallest_fitting_bucket() {
+        let b = Batcher::new(buckets(), BatcherConfig::default());
+        assert_eq!(b.buckets()[b.route(100)].seq_len, 128);
+        assert_eq!(b.buckets()[b.route(128)].seq_len, 128);
+        assert_eq!(b.buckets()[b.route(129)].seq_len, 512);
+        assert_eq!(b.buckets()[b.route(2048)].seq_len, 2048);
+        // oversized → largest bucket (truncation)
+        assert_eq!(b.buckets()[b.route(9999)].seq_len, 2048);
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let mut b = Batcher::new(buckets(), BatcherConfig::default());
+        let t = Instant::now();
+        for i in 0..8 {
+            b.push(req(i, 100, t));
+        }
+        let fb = b.poll(t).expect("full batch");
+        assert_eq!(fb.bucket.seq_len, 128);
+        assert_eq!(fb.requests.len(), 8);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn partial_batch_waits_for_deadline() {
+        let cfg = BatcherConfig { max_wait: Duration::from_millis(10) };
+        let mut b = Batcher::new(buckets(), cfg);
+        let t0 = Instant::now();
+        b.push(req(1, 400, t0));
+        assert!(b.poll(t0).is_none(), "must not flush early");
+        let later = t0 + Duration::from_millis(11);
+        let fb = b.poll(later).expect("deadline flush");
+        assert_eq!(fb.requests.len(), 1);
+        assert_eq!(fb.bucket.seq_len, 512);
+    }
+
+    #[test]
+    fn fifo_within_bucket() {
+        let mut b = Batcher::new(buckets(), BatcherConfig::default());
+        let t = Instant::now();
+        for i in 0..4 {
+            b.push(req(i, 300, t));
+        }
+        let fb = b.poll(t).unwrap();
+        let ids: Vec<u64> = fb.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn prop_no_request_lost_or_duplicated() {
+        check_res(
+            7,
+            100,
+            |rng| {
+                let n = rng.range(1, 60);
+                (0..n)
+                    .map(|i| (i as u64, rng.range(1, 3000)))
+                    .collect::<Vec<_>>()
+            },
+            |reqs| {
+                let mut b = Batcher::new(buckets(), BatcherConfig { max_wait: Duration::ZERO });
+                let t = Instant::now();
+                for &(id, len) in reqs {
+                    b.push(PendingRequest { id, tokens: vec![1; len], enqueued: t });
+                }
+                let mut seen = std::collections::HashSet::new();
+                while let Some(fb) = b.poll(t + Duration::from_millis(1)) {
+                    for r in fb.requests {
+                        if !seen.insert(r.id) {
+                            return Err(format!("request {} duplicated", r.id));
+                        }
+                        if fb.bucket.seq_len < r.tokens.len()
+                            && fb.bucket.seq_len != 2048
+                        {
+                            return Err(format!(
+                                "request {} (len {}) under-bucketed to {}",
+                                r.id,
+                                r.tokens.len(),
+                                fb.bucket.seq_len
+                            ));
+                        }
+                    }
+                }
+                if seen.len() != reqs.len() {
+                    return Err(format!("{} of {} requests drained", seen.len(), reqs.len()));
+                }
+                if b.pending() != 0 {
+                    return Err("queue not empty".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,96 @@
+//! The engine thread: sole owner of PJRT state.
+//!
+//! Jobs cross the thread boundary as `HostTensor`s; results return on a
+//! per-job reply channel. `ExecutablePool` (not `Send`) is constructed
+//! *inside* the engine thread.
+
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{ExecutablePool, HostTensor, Manifest, Runtime};
+
+/// One unit of engine work.
+pub struct EngineJob {
+    /// artifact name to execute
+    pub artifact: String,
+    /// positional inputs
+    pub inputs: Vec<HostTensor>,
+    /// where the outputs go (stringified error on failure — keeps the
+    /// channel payload `Send` without dragging non-Send context along)
+    pub reply: Sender<std::result::Result<Vec<HostTensor>, String>>,
+}
+
+/// Handle to a running engine thread.
+pub struct EngineHandle {
+    tx: SyncSender<EngineJob>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl EngineHandle {
+    /// Spawn the engine on `artifact_dir`, with a bounded queue of
+    /// `queue_depth` jobs (backpressure: senders block when full).
+    pub fn spawn(artifact_dir: String, queue_depth: usize) -> Result<Self> {
+        let (tx, rx): (SyncSender<EngineJob>, Receiver<EngineJob>) =
+            sync_channel(queue_depth);
+        let (ready_tx, ready_rx) = sync_channel::<std::result::Result<(), String>>(1);
+        let join = std::thread::Builder::new()
+            .name("bigbird-engine".into())
+            .spawn(move || {
+                let pool = match Runtime::cpu()
+                    .and_then(|rt| Ok(ExecutablePool::new(rt, Manifest::load(&artifact_dir)?)))
+                {
+                    Ok(p) => {
+                        let _ = ready_tx.send(Ok(()));
+                        p
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    let result = pool
+                        .get(&job.artifact)
+                        .and_then(|exe| exe.run(&job.inputs))
+                        .map_err(|e| format!("{e:#}"));
+                    let _ = job.reply.send(result);
+                }
+            })
+            .context("spawning engine thread")?;
+        ready_rx
+            .recv()
+            .context("engine thread died during startup")?
+            .map_err(|e| anyhow::anyhow!("engine startup failed: {e}"))?;
+        Ok(EngineHandle { tx, join: Some(join) })
+    }
+
+    /// Submit a job (blocks when the queue is full — backpressure).
+    pub fn submit(&self, job: EngineJob) -> Result<()> {
+        self.tx.send(job).context("engine thread gone")
+    }
+
+    /// Convenience: execute synchronously.
+    pub fn execute(&self, artifact: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.submit(EngineJob { artifact: artifact.to_string(), inputs, reply })?;
+        rx.recv()
+            .context("engine dropped reply")?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+}
+
+impl Drop for EngineHandle {
+    fn drop(&mut self) {
+        // Closing the channel stops the engine loop.
+        // (tx is dropped as part of self; join afterwards.)
+        if let Some(join) = self.join.take() {
+            // replace tx with a dummy by dropping self.tx — can't move out;
+            // the loop exits when all senders are gone, which happens when
+            // self is fully dropped. Detach instead of joining to avoid
+            // deadlock on self-referential drop order.
+            let _ = join; // detach
+        }
+    }
+}

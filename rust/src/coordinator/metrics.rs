@@ -1,0 +1,105 @@
+//! Serving metrics: request counts, latency distribution, batch fill.
+
+use std::sync::Mutex;
+
+use crate::util::stats;
+
+/// Shared metrics sink (cheap Mutex; the hot path appends one f64).
+#[derive(Debug, Default)]
+pub struct ServingMetrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    latencies_ms: Vec<f64>,
+    batches: usize,
+    batched_requests: usize,
+    batch_capacity: usize,
+    truncated: usize,
+    errors: usize,
+}
+
+/// Point-in-time copy for reporting.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub requests: usize,
+    pub batches: usize,
+    pub errors: usize,
+    pub truncated: usize,
+    /// mean requests per formed batch / batch capacity
+    pub fill_ratio: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+}
+
+impl ServingMetrics {
+    pub fn record_latency(&self, ms: f64) {
+        self.inner.lock().unwrap().latencies_ms.push(ms);
+    }
+
+    pub fn record_batch(&self, requests: usize, capacity: usize) {
+        let mut i = self.inner.lock().unwrap();
+        i.batches += 1;
+        i.batched_requests += requests;
+        i.batch_capacity += capacity;
+    }
+
+    pub fn record_truncated(&self) {
+        self.inner.lock().unwrap().truncated += 1;
+    }
+
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    /// Clear all recordings (used after serving warmup, so measured
+    /// latencies exclude one-off artifact compilation).
+    pub fn reset(&self) {
+        *self.inner.lock().unwrap() = Inner::default();
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let i = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            requests: i.latencies_ms.len(),
+            batches: i.batches,
+            errors: i.errors,
+            truncated: i.truncated,
+            fill_ratio: if i.batch_capacity == 0 {
+                0.0
+            } else {
+                i.batched_requests as f64 / i.batch_capacity as f64
+            },
+            p50_ms: stats::percentile(&i.latencies_ms, 50.0),
+            p95_ms: stats::percentile(&i.latencies_ms, 95.0),
+            p99_ms: stats::percentile(&i.latencies_ms, 99.0),
+            mean_ms: stats::mean(&i.latencies_ms),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_recordings() {
+        let m = ServingMetrics::default();
+        for i in 0..100 {
+            m.record_latency(i as f64);
+        }
+        m.record_batch(3, 4);
+        m.record_batch(4, 4);
+        m.record_truncated();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.truncated, 1);
+        assert!((s.fill_ratio - 7.0 / 8.0).abs() < 1e-12);
+        assert!((s.p50_ms - 49.5).abs() < 1.0);
+        assert!(s.p99_ms >= s.p95_ms && s.p95_ms >= s.p50_ms);
+    }
+}

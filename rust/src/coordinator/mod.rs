@@ -1,0 +1,27 @@
+//! The serving coordinator: BigBird's systems payoff is "serve 8× longer
+//! documents on the same hardware", so L3 is a long-document inference
+//! server in the vLLM-router shape:
+//!
+//! ```text
+//!  clients ──req──▶ router thread ──job──▶ engine thread (owns PJRT)
+//!     ▲                 │  length-bucketing dynamic batcher
+//!     └───── per-request response channel ◀──────┘
+//! ```
+//!
+//! PJRT objects are not `Send`, so the engine thread constructs and owns
+//! the [`ExecutablePool`]; everything crossing threads is a plain
+//! [`HostTensor`] or a control message. The batcher buckets requests by
+//! padded sequence length (artifact shapes are fixed at AOT time), fills
+//! batches up to the artifact batch size, and flushes on a deadline.
+
+mod batcher;
+mod engine;
+mod metrics;
+mod server;
+pub mod trace;
+
+pub use batcher::{Batcher, BatcherConfig, Bucket, PendingRequest};
+pub use engine::{EngineHandle, EngineJob};
+pub use batcher::FormedBatch;
+pub use metrics::{MetricsSnapshot, ServingMetrics};
+pub use server::{Response, Server, ServerConfig};

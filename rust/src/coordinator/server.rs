@@ -1,0 +1,343 @@
+//! The serving front-end: ties the router/batcher loop to the engine.
+//!
+//! Single-inflight design (the vLLM engine-step loop): the router forms a
+//! batch, executes it on the engine, distributes responses, repeats.
+//! Requests keep accumulating in the batcher while a batch is in flight,
+//! so throughput comes from batching, and latency from the flush
+//! deadline.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::batcher::{Batcher, BatcherConfig, Bucket, PendingRequest};
+use super::engine::EngineHandle;
+use super::metrics::{MetricsSnapshot, ServingMetrics};
+use crate::runtime::HostTensor;
+use crate::tokenizer::special;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// artifact directory
+    pub artifacts: String,
+    /// manifest metadata filters selecting the serving buckets
+    /// (e.g. `kind=fwd`, `task=mlm`, `attn=bigbird_itc`)
+    pub bucket_filters: Vec<(String, String)>,
+    pub batcher: BatcherConfig,
+    /// submission queue depth (backpressure bound)
+    pub queue_depth: usize,
+}
+
+impl ServerConfig {
+    /// Serve MLM fill-mask with the BigBird variant (the demo workload).
+    pub fn mlm_default(artifacts: &str) -> Self {
+        ServerConfig {
+            artifacts: artifacts.to_string(),
+            bucket_filters: vec![
+                ("kind".into(), "fwd".into()),
+                ("task".into(), "mlm".into()),
+                ("attn".into(), "bigbird_itc".into()),
+                ("impl".into(), "jnp".into()),
+            ],
+            batcher: BatcherConfig::default(),
+            queue_depth: 256,
+        }
+    }
+}
+
+/// A completed fill-mask response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    /// (position, predicted token id) at each `<mask>` position
+    pub predictions: Vec<(usize, i32)>,
+    pub latency_ms: f64,
+    /// true if the request was truncated to the largest bucket
+    pub truncated: bool,
+}
+
+struct Submission {
+    req: PendingRequest,
+    reply: Sender<Response>,
+}
+
+/// Running server handle.
+pub struct Server {
+    tx: SyncSender<Submission>,
+    next_id: AtomicU64,
+    metrics: Arc<ServingMetrics>,
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the engine + router threads. Blocks until the engine has
+    /// compiled nothing yet (lazy) but has loaded the manifest.
+    pub fn start(cfg: ServerConfig) -> Result<Self> {
+        let engine = EngineHandle::spawn(cfg.artifacts.clone(), cfg.queue_depth)?;
+        // discover buckets from the manifest (router side reads it too)
+        let manifest = crate::runtime::Manifest::load(&cfg.artifacts)?;
+        let filters: Vec<(&str, &str)> = cfg
+            .bucket_filters
+            .iter()
+            .map(|(k, v)| (k.as_str(), v.as_str()))
+            .collect();
+        let buckets: Vec<Bucket> = manifest
+            .select(&filters)
+            .into_iter()
+            .map(|e| {
+                let seq_len = e.meta_usize("seq_len").unwrap_or(0);
+                let batch = e.meta_usize("batch").unwrap_or(1);
+                Bucket { artifact: e.name.clone(), seq_len, batch }
+            })
+            .collect();
+        if buckets.is_empty() {
+            anyhow::bail!("no artifacts match the bucket filters {filters:?}");
+        }
+        // vocab for logits decoding, from the first bucket's fwd output
+        let vocab = manifest
+            .get(&buckets[0].artifact)?
+            .io
+            .outputs
+            .first()
+            .map(|o| *o.dims.last().unwrap_or(&0))
+            .context("fwd artifact has no output")?;
+
+        let (tx, rx): (SyncSender<Submission>, Receiver<Submission>) =
+            sync_channel(cfg.queue_depth);
+        let metrics = Arc::new(ServingMetrics::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let m2 = metrics.clone();
+        let stop2 = stop.clone();
+        let batcher_cfg = cfg.batcher;
+        let join = std::thread::Builder::new()
+            .name("bigbird-router".into())
+            .spawn(move || {
+                router_loop(rx, engine, buckets, batcher_cfg, vocab, m2, stop2);
+            })
+            .context("spawning router")?;
+        Ok(Server { tx, next_id: AtomicU64::new(1), metrics, stop, join: Some(join) })
+    }
+
+    /// Submit a fill-mask request. Returns the response channel.
+    pub fn submit(&self, tokens: Vec<i32>) -> Result<Receiver<Response>> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Submission {
+                req: PendingRequest { id, tokens, enqueued: Instant::now() },
+                reply,
+            })
+            .context("server stopped")?;
+        Ok(rx)
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Warm up: submit one dummy request per length (compiling each
+    /// bucket's artifact + initialising params), wait for completion,
+    /// then reset metrics so measurements exclude compilation.
+    pub fn warmup(&self, lens: &[usize]) -> Result<()> {
+        let mut rxs = Vec::new();
+        for &len in lens {
+            rxs.push(self.submit(vec![crate::tokenizer::special::CLS; len.max(1)])?);
+        }
+        for rx in rxs {
+            rx.recv().map_err(|_| anyhow::anyhow!("warmup request dropped"))?;
+        }
+        self.metrics.reset();
+        Ok(())
+    }
+
+    /// Stop the router (drains nothing; pending requests get dropped).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        drop(self.tx.clone()); // router wakes on channel activity or timeout
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn router_loop(
+    rx: Receiver<Submission>,
+    engine: EngineHandle,
+    buckets: Vec<Bucket>,
+    batcher_cfg: BatcherConfig,
+    vocab: usize,
+    metrics: Arc<ServingMetrics>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut batcher = Batcher::new(buckets, batcher_cfg);
+    let mut replies: std::collections::HashMap<u64, Sender<Response>> =
+        std::collections::HashMap::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        // drain the submission channel without blocking too long
+        let deadline = Duration::from_millis(2);
+        match rx.recv_timeout(deadline) {
+            Ok(sub) => {
+                replies.insert(sub.req.id, sub.reply);
+                batcher.push(sub.req);
+                // opportunistically drain more
+                loop {
+                    match rx.try_recv() {
+                        Ok(s) => {
+                            replies.insert(s.req.id, s.reply);
+                            batcher.push(s.req);
+                        }
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => break,
+                    }
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                if batcher.pending() == 0 {
+                    return;
+                }
+            }
+        }
+        while let Some(fb) = batcher.poll(Instant::now()) {
+            run_batch(&engine, fb, vocab, &metrics, &mut replies);
+        }
+    }
+}
+
+fn run_batch(
+    engine: &EngineHandle,
+    fb: super::batcher::FormedBatch,
+    vocab: usize,
+    metrics: &ServingMetrics,
+    replies: &mut std::collections::HashMap<u64, Sender<Response>>,
+) {
+    let b = fb.bucket.batch;
+    let s = fb.bucket.seq_len;
+    let mut tokens = vec![special::PAD; b * s];
+    let mut kv_valid = vec![0f32; b * s];
+    let mut truncated = vec![false; fb.requests.len()];
+    for (row, req) in fb.requests.iter().enumerate() {
+        let n = req.tokens.len().min(s);
+        truncated[row] = req.tokens.len() > s;
+        tokens[row * s..row * s + n].copy_from_slice(&req.tokens[..n]);
+        for v in kv_valid[row * s..row * s + n].iter_mut() {
+            *v = 1.0;
+        }
+    }
+    metrics.record_batch(fb.requests.len(), b);
+    let inputs = vec![
+        HostTensor::I32 { shape: vec![b, s], data: tokens.clone() },
+        HostTensor::F32 { shape: vec![b, s], data: kv_valid },
+    ];
+    // the fwd artifact signature is (params, tokens, kv_valid) — the
+    // engine owns the params; serving artifacts are wrapped to take
+    // (tokens, kv_valid) only when params are baked... our fwd artifacts
+    // take params explicitly, so the server keeps a parameter store.
+    let result = engine.execute_with_params(&fb.bucket.artifact, inputs);
+    match result {
+        Ok(outs) => {
+            let logits = match &outs[0] {
+                HostTensor::F32 { data, .. } => data,
+                _ => {
+                    metrics.record_error();
+                    return;
+                }
+            };
+            for (row, req) in fb.requests.iter().enumerate() {
+                let mut preds = Vec::new();
+                for (pos, &t) in req.tokens.iter().take(s).enumerate() {
+                    if t == special::MASK {
+                        let base = (row * s + pos) * vocab;
+                        let row_logits = &logits[base..base + vocab];
+                        let mut best = 0usize;
+                        for (j, &x) in row_logits.iter().enumerate() {
+                            if x > row_logits[best] {
+                                best = j;
+                            }
+                        }
+                        preds.push((pos, best as i32));
+                    }
+                }
+                let lat = req.enqueued.elapsed().as_secs_f64() * 1000.0;
+                metrics.record_latency(lat);
+                if truncated[row] {
+                    metrics.record_truncated();
+                }
+                if let Some(tx) = replies.remove(&req.id) {
+                    let _ = tx.send(Response {
+                        id: req.id,
+                        predictions: preds,
+                        latency_ms: lat,
+                        truncated: truncated[row],
+                    });
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("[server] batch failed: {e:#}");
+            metrics.record_error();
+            for req in &fb.requests {
+                replies.remove(&req.id);
+            }
+        }
+    }
+}
+
+// Per-thread parameter store for fwd artifacts. The router thread is the
+// only user in practice; tests drive it from their own thread, which gets
+// an independent (but equally valid) cache.
+thread_local! {
+    static PARAMS_CACHE: std::cell::RefCell<std::collections::HashMap<String, HostTensor>> =
+        std::cell::RefCell::new(std::collections::HashMap::new());
+}
+
+impl EngineHandle {
+    /// Execute a fwd artifact, prepending its cached parameters
+    /// (initialised from the matching `init_*` artifact on first use, or
+    /// whatever [`EngineHandle::load_params`] installed).
+    pub fn execute_with_params(
+        &self,
+        fwd_artifact: &str,
+        mut inputs: Vec<HostTensor>,
+    ) -> Result<Vec<HostTensor>> {
+        let params = self.params_for(fwd_artifact)?;
+        let mut all = Vec::with_capacity(1 + inputs.len());
+        all.push(params);
+        all.append(&mut inputs);
+        self.execute(fwd_artifact, all)
+    }
+
+    fn params_for(&self, fwd_artifact: &str) -> Result<HostTensor> {
+        if let Some(p) =
+            PARAMS_CACHE.with(|c| c.borrow().get(fwd_artifact).cloned())
+        {
+            return Ok(p);
+        }
+        let init_name = fwd_artifact.replacen("fwd_", "init_", 1);
+        let mut out = self.execute(&init_name, vec![])?;
+        let p = out.remove(0);
+        PARAMS_CACHE.with(|c| {
+            c.borrow_mut().insert(fwd_artifact.to_string(), p.clone());
+        });
+        Ok(p)
+    }
+
+    /// Install trained parameters for a fwd artifact (e.g. from a
+    /// checkpoint) so subsequent batches serve the trained model.
+    /// Thread-local: call from the thread that will execute batches.
+    pub fn load_params(&self, fwd_artifact: &str, params: HostTensor) {
+        PARAMS_CACHE.with(|c| {
+            c.borrow_mut().insert(fwd_artifact.to_string(), params);
+        });
+    }
+}

@@ -1,0 +1,128 @@
+//! Workload traces for serving benchmarks: arrival processes + length
+//! distributions, replayable against the server.
+//!
+//! The paper's serving story ("handle sequences up to 8× longer on
+//! similar hardware") needs a workload whose *length distribution* is
+//! long-tailed, like the document-length statistics of its datasets
+//! (App. E.2 Tab. 11: NQ median 3258, max 77962). The trace generator
+//! reproduces that shape: log-normal body + Pareto tail.
+
+use crate::util::Rng;
+
+/// Arrival process for a trace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arrival {
+    /// Poisson with rate λ req/s.
+    Poisson { rate: f64 },
+    /// On/off bursts: `burst` back-to-back requests every `period_s`.
+    Bursty { burst: usize, period_s: f64 },
+    /// All requests at t = 0 (offline/batch evaluation).
+    Closed,
+}
+
+/// One trace event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// arrival time in seconds from trace start
+    pub at_s: f64,
+    /// request sequence length in tokens
+    pub len: usize,
+    /// number of masked positions to predict
+    pub masks: usize,
+}
+
+/// Length distribution matching long-document QA statistics: log-normal
+/// body with a Pareto tail, clamped to [16, max_len].
+pub fn sample_length(rng: &mut Rng, median: usize, max_len: usize) -> usize {
+    let body = (median as f64) * (0.6 * rng.normal()).exp();
+    let len = if rng.coin(0.1) {
+        // Pareto tail: P(X > x) = (x_m / x)^α, α = 1.5
+        let u = rng.f64().max(1e-9);
+        body * u.powf(-1.0 / 1.5)
+    } else {
+        body
+    };
+    (len as usize).clamp(16, max_len)
+}
+
+/// Generate a trace of `n` events.
+pub fn generate(
+    n: usize,
+    arrival: Arrival,
+    median_len: usize,
+    max_len: usize,
+    seed: u64,
+) -> Vec<TraceEvent> {
+    let mut rng = Rng::new(seed).fold_in(0x7124CE);
+    let mut events = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    for i in 0..n {
+        match arrival {
+            Arrival::Poisson { rate } => {
+                // exponential inter-arrival
+                t += -(1.0 - rng.f64()).ln() / rate;
+            }
+            Arrival::Bursty { burst, period_s } => {
+                if i % burst == 0 && i > 0 {
+                    t += period_s;
+                }
+            }
+            Arrival::Closed => {}
+        }
+        events.push(TraceEvent {
+            at_s: t,
+            len: sample_length(&mut rng, median_len, max_len),
+            masks: 1 + rng.below(4),
+        });
+    }
+    events
+}
+
+/// Summary statistics of a trace (for reporting).
+pub fn summarize(events: &[TraceEvent]) -> (f64, usize, usize) {
+    let lens: Vec<f64> = events.iter().map(|e| e.len as f64).collect();
+    let median = crate::util::stats::median(&lens) as usize;
+    let max = events.iter().map(|e| e.len).max().unwrap_or(0);
+    let duration = events.last().map(|e| e.at_s).unwrap_or(0.0);
+    (duration, median, max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_interarrivals_match_rate() {
+        let tr = generate(2000, Arrival::Poisson { rate: 100.0 }, 512, 4096, 1);
+        let (duration, _, _) = summarize(&tr);
+        // 2000 events at 100/s ≈ 20 s
+        assert!((duration - 20.0).abs() < 3.0, "duration {duration}");
+        // arrivals strictly non-decreasing
+        for w in tr.windows(2) {
+            assert!(w[1].at_s >= w[0].at_s);
+        }
+    }
+
+    #[test]
+    fn lengths_are_long_tailed() {
+        let tr = generate(5000, Arrival::Closed, 512, 8192, 2);
+        let (_, median, max) = summarize(&tr);
+        assert!((300..900).contains(&median), "median {median}");
+        assert!(max > 2000, "no tail: max {max}");
+        assert!(tr.iter().all(|e| (16..=8192).contains(&e.len)));
+    }
+
+    #[test]
+    fn bursty_spacing() {
+        let tr = generate(30, Arrival::Bursty { burst: 10, period_s: 1.0 }, 256, 1024, 3);
+        assert_eq!(tr[9].at_s, tr[0].at_s);
+        assert!(tr[10].at_s >= tr[9].at_s + 1.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(50, Arrival::Poisson { rate: 10.0 }, 512, 4096, 7);
+        let b = generate(50, Arrival::Poisson { rate: 10.0 }, 512, 4096, 7);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,141 @@
+//! Synthetic document classification (stand-in for Arxiv / IMDb /
+//! Hyperpartisan / Patents, Tab. 15, and the short-sequence "GLUE" check,
+//! Tab. 16).
+//!
+//! The label is the majority topic of *signature tokens* sprinkled
+//! uniformly over the document. With `spread = Late`, the discriminative
+//! tokens appear only after position 512 — reproducing Tab. 15's
+//! "discriminating information may not be located in the first 512
+//! tokens".
+
+use crate::tokenizer::special;
+use crate::util::Rng;
+
+use super::corpus::{CorpusConfig, CorpusGen};
+
+/// Where the label evidence lives in the document.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvidenceSpread {
+    /// Uniform over the whole document (Arxiv-like).
+    Uniform,
+    /// Only in the first 25% (IMDb-like short reviews — truncation safe).
+    Early,
+    /// Only after token 512 (worst case for truncated baselines).
+    Late,
+}
+
+/// One labelled document, laid out `[CLS] doc…`.
+#[derive(Clone, Debug)]
+pub struct ClassifyExample {
+    pub tokens: Vec<i32>,
+    pub label: i32,
+}
+
+/// Generator.
+pub struct ClassifyGen {
+    corpus: CorpusGen,
+    rng: Rng,
+    pub classes: usize,
+    pub spread: EvidenceSpread,
+    /// signature tokens planted per document
+    pub signal_tokens: usize,
+}
+
+impl ClassifyGen {
+    pub fn new(vocab: usize, classes: usize, spread: EvidenceSpread, seed: u64) -> Self {
+        let cfg = CorpusConfig { vocab, ..Default::default() };
+        ClassifyGen {
+            corpus: CorpusGen::new(cfg, seed),
+            rng: Rng::new(seed).fold_in(0xC1),
+            classes,
+            spread,
+            signal_tokens: 12,
+        }
+    }
+
+    /// Signature token id for class c, slot k — distinct from corpus ids
+    /// by construction (uses a dedicated low range after REL).
+    fn signature(&self, c: usize, k: usize) -> i32 {
+        special::FIRST_FREE + 8 + (c * 4 + (k % 4)) as i32
+    }
+
+    pub fn example(&mut self, doc_len: usize) -> ClassifyExample {
+        let label = self.rng.below(self.classes);
+        let mut doc = self.corpus.document(doc_len);
+        // scrub signature range from filler
+        let sig_lo = self.signature(0, 0);
+        let sig_hi = self.signature(self.classes - 1, 3) + 1;
+        for t in doc.iter_mut() {
+            if *t >= sig_lo && *t < sig_hi {
+                *t = special::FIRST_FREE + 1;
+            }
+        }
+        let (lo, hi) = match self.spread {
+            EvidenceSpread::Uniform => (0, doc_len),
+            EvidenceSpread::Early => (0, (doc_len / 4).max(self.signal_tokens + 1)),
+            EvidenceSpread::Late => {
+                let lo = 512.min(doc_len.saturating_sub(self.signal_tokens + 1));
+                (lo, doc_len)
+            }
+        };
+        for k in 0..self.signal_tokens {
+            let pos = self.rng.range(lo, hi);
+            doc[pos] = self.signature(label, k);
+        }
+        let mut tokens = vec![special::CLS];
+        tokens.extend_from_slice(&doc);
+        ClassifyExample { tokens, label: label as i32 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_in_range_and_signatures_present() {
+        let mut g = ClassifyGen::new(512, 4, EvidenceSpread::Uniform, 1);
+        let ex = g.example(600);
+        assert!((0..4).contains(&ex.label));
+        let sig0 = g.signature(ex.label as usize, 0);
+        let present = ex.tokens.iter().filter(|&&t| t >= sig0 && t < sig0 + 4).count();
+        assert!(present >= g.signal_tokens / 2, "signatures missing");
+    }
+
+    #[test]
+    fn late_spread_puts_evidence_beyond_512() {
+        let mut g = ClassifyGen::new(512, 4, EvidenceSpread::Late, 2);
+        let ex = g.example(1000);
+        let sig_lo = g.signature(0, 0);
+        let sig_hi = g.signature(3, 3) + 1;
+        for (i, &t) in ex.tokens.iter().enumerate() {
+            if t >= sig_lo && t < sig_hi {
+                assert!(i > 512, "evidence at {i} <= 512");
+            }
+        }
+    }
+
+    #[test]
+    fn early_spread_is_truncation_safe() {
+        let mut g = ClassifyGen::new(512, 4, EvidenceSpread::Early, 3);
+        let ex = g.example(1000);
+        let sig_lo = g.signature(0, 0);
+        let sig_hi = g.signature(3, 3) + 1;
+        for (i, &t) in ex.tokens.iter().enumerate() {
+            if t >= sig_lo && t < sig_hi {
+                assert!(i <= 256, "early evidence at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn signature_ids_do_not_collide_across_classes() {
+        let g = ClassifyGen::new(512, 4, EvidenceSpread::Uniform, 4);
+        let mut seen = std::collections::HashSet::new();
+        for c in 0..4 {
+            for k in 0..4 {
+                assert!(seen.insert(g.signature(c, k)), "collision at ({c},{k})");
+            }
+        }
+    }
+}

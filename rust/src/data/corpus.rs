@@ -1,0 +1,160 @@
+//! Synthetic long-range language (stand-in for Books/CC-News/Stories/
+//! Wikipedia, App. E.1 Tab. 9).
+//!
+//! Structure planted per document:
+//! * a **topic** latent selecting a topic-specific vocabulary slice
+//!   (documents are lexically coherent end-to-end),
+//! * a set of **entities** introduced early and re-mentioned at long,
+//!   controlled distances (coreference-style long-range dependency),
+//! * a **copy channel**: with probability `copy_p` a token repeats the
+//!   token `copy_dist` positions back (the long-range correlation
+//!   structure Buldyrev et al. observed in text and DNA — paper [12]).
+//!
+//! A model with a context window shorter than the re-mention distance
+//! cannot predict masked entity mentions; a long-context model can.
+//! That is exactly the effect Tab. 10 / Fig. 8 measure.
+
+use crate::tokenizer::special;
+use crate::util::Rng;
+
+/// Generator parameters.
+#[derive(Clone, Debug)]
+pub struct CorpusConfig {
+    /// Total vocabulary (ids < vocab; first `special::FIRST_FREE` reserved).
+    pub vocab: usize,
+    /// Number of latent topics.
+    pub topics: usize,
+    /// Tokens reserved per topic slice.
+    pub topic_slice: usize,
+    /// Entities introduced per document.
+    pub entities: usize,
+    /// Mean distance between entity re-mentions.
+    pub mention_stride: usize,
+    /// Copy channels: (distance, probability) — a position repeats the
+    /// token `distance` back with the given probability. Multiple scales
+    /// let experiments control exactly which context lengths pay off.
+    pub copy_channels: Vec<(usize, f64)>,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            vocab: 512,
+            topics: 8,
+            topic_slice: 24,
+            entities: 12,
+            mention_stride: 96,
+            copy_channels: vec![(192, 0.12), (384, 0.15)],
+        }
+    }
+}
+
+/// Seeded document generator.
+#[derive(Clone, Debug)]
+pub struct CorpusGen {
+    pub cfg: CorpusConfig,
+    rng: Rng,
+}
+
+impl CorpusGen {
+    pub fn new(cfg: CorpusConfig, seed: u64) -> Self {
+        CorpusGen { cfg, rng: Rng::new(seed).fold_in(0xC0FFEE) }
+    }
+
+    /// id range reserved for entity tokens (topic slices come first).
+    fn entity_base(&self) -> i32 {
+        special::FIRST_FREE + (self.cfg.topics * self.cfg.topic_slice) as i32
+    }
+
+    /// Generate one document of exactly `len` tokens.
+    pub fn document(&mut self, len: usize) -> Vec<i32> {
+        let cfg = &self.cfg;
+        let topic = self.rng.below(cfg.topics);
+        let topic_lo = special::FIRST_FREE + (topic * cfg.topic_slice) as i32;
+        // entity ids for this document, drawn from the entity range
+        let ent_lo = self.entity_base();
+        let ent_hi = cfg.vocab as i32;
+        let n_ent_ids = (ent_hi - ent_lo).max(1) as usize;
+        let ents: Vec<i32> = (0..cfg.entities)
+            .map(|_| ent_lo + self.rng.below(n_ent_ids) as i32)
+            .collect();
+
+        let mut doc = Vec::with_capacity(len);
+        'pos: for i in 0..len {
+            // copy channels first: long-range verbatim dependencies
+            for &(dist, p) in &cfg.copy_channels {
+                if i >= dist && self.rng.coin(p) {
+                    doc.push(doc[i - dist]);
+                    continue 'pos;
+                }
+            }
+            // entity re-mention on a jittered stride
+            if !ents.is_empty() && self.rng.coin(1.0 / cfg.mention_stride as f64 * 4.0) {
+                doc.push(*self.rng.choose(&ents));
+                continue;
+            }
+            // topic token (Zipf-ish within the slice)
+            let r = self.rng.f64();
+            let z = (r * r * cfg.topic_slice as f64) as usize; // quadratic skew
+            doc.push(topic_lo + z.min(cfg.topic_slice - 1) as i32);
+        }
+        doc
+    }
+
+    /// Corpus statistics in Tab.-9 style (token count, avg doc length).
+    pub fn stats(&mut self, docs: usize, len: usize) -> (usize, f64) {
+        let total: usize = (0..docs).map(|_| self.document(len).len()).sum();
+        (total, total as f64 / docs as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn documents_have_exact_length_and_valid_ids() {
+        let mut g = CorpusGen::new(CorpusConfig::default(), 1);
+        let d = g.document(777);
+        assert_eq!(d.len(), 777);
+        for &t in &d {
+            assert!(t >= special::FIRST_FREE && (t as usize) < g.cfg.vocab, "bad id {t}");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = CorpusGen::new(CorpusConfig::default(), 5);
+        let mut b = CorpusGen::new(CorpusConfig::default(), 5);
+        assert_eq!(a.document(256), b.document(256));
+        let mut c = CorpusGen::new(CorpusConfig::default(), 6);
+        assert_ne!(a.document(256), c.document(256));
+    }
+
+    #[test]
+    fn copy_channel_creates_long_range_matches() {
+        let cfg = CorpusConfig { copy_channels: vec![(100, 0.3)], ..Default::default() };
+        let mut g = CorpusGen::new(cfg, 2);
+        let d = g.document(2000);
+        let matches = (100..2000).filter(|&i| d[i] == d[i - 100]).count();
+        // ≥ copy_p of positions match at the copy distance (plus chance)
+        assert!(matches as f64 / 1900.0 > 0.25, "copy rate too low: {matches}");
+    }
+
+    #[test]
+    fn topical_coherence_within_document() {
+        let mut g = CorpusGen::new(CorpusConfig::default(), 3);
+        let d = g.document(1000);
+        // most tokens should fall in ONE topic slice
+        let mut counts = vec![0usize; g.cfg.topics];
+        for &t in &d {
+            let off = (t - special::FIRST_FREE) as usize;
+            if off < g.cfg.topics * g.cfg.topic_slice {
+                counts[off / g.cfg.topic_slice] += 1;
+            }
+        }
+        let max = *counts.iter().max().unwrap();
+        let sum: usize = counts.iter().sum();
+        assert!(max as f64 / sum as f64 > 0.9, "document not topically coherent");
+    }
+}

@@ -1,0 +1,305 @@
+//! Synthetic genomics (Sec. 5 / App. F), replacing GRCh37 + EPDnew +
+//! DeepSea with a controlled generator (DESIGN.md §Substitutions):
+//!
+//! * **genome**: order-2 Markov chain over {A,C,G,T} with rare N, giving
+//!   realistic local statistics plus a long-range copy channel (paper
+//!   [12]: long-range correlations in non-coding DNA),
+//! * **promoters** (Tab. 6): positives plant a TATA-like motif cluster
+//!   upstream of the TSS; negatives follow the exact Oubounyt et al.
+//!   protocol — split the positive into 20 subsequences, randomly
+//!   substitute 12, conserve 8,
+//! * **chromatin profiles** (Tab. 7): 16 binary profiles in three groups;
+//!   TF/DHS profiles depend on single local motifs, HM profiles require a
+//!   *pair* of motifs at long distance — reproducing "HM is known to have
+//!   longer-range correlations" as a property of the data.
+
+use crate::tokenizer::special;
+use crate::util::Rng;
+
+const BASES: [char; 4] = ['A', 'C', 'G', 'T'];
+
+/// One promoter-classification example (raw base string + label).
+#[derive(Clone, Debug)]
+pub struct PromoterExample {
+    pub seq: String,
+    pub label: bool,
+}
+
+/// One chromatin-profile example: raw bases + per-profile binary labels.
+#[derive(Clone, Debug)]
+pub struct ChromatinExample {
+    pub seq: String,
+    pub labels: Vec<bool>,
+}
+
+/// Seeded genome generator.
+pub struct DnaGen {
+    rng: Rng,
+    /// order-2 transition temperature: larger = more structured
+    skew: f64,
+    pub n_profiles: usize,
+}
+
+impl DnaGen {
+    pub fn new(seed: u64) -> Self {
+        DnaGen { rng: Rng::new(seed).fold_in(0xD0A), skew: 2.0, n_profiles: 16 }
+    }
+
+    /// Order-2 Markov base sampler: P(b | prev2) from a deterministic
+    /// per-context weight table (hash-derived, so the "genome" has real
+    /// 2nd-order structure a language model can learn).
+    fn next_base(&mut self, c1: usize, c2: usize) -> usize {
+        let mut w = [0.0f64; 4];
+        for (b, wb) in w.iter_mut().enumerate() {
+            // deterministic context-dependent weights
+            let h = (c1 * 31 + c2 * 7 + b * 13) % 11;
+            *wb = (h as f64 / 10.0 * self.skew).exp();
+        }
+        self.rng.categorical(&w)
+    }
+
+    /// Generate `len` bases of genome.
+    pub fn genome(&mut self, len: usize) -> String {
+        let mut out = String::with_capacity(len);
+        let (mut c1, mut c2) = (0usize, 1usize);
+        for _ in 0..len {
+            if self.rng.coin(0.001) {
+                out.push('N'); // missing base (App. F: 5-char alphabet)
+                continue;
+            }
+            let b = self.next_base(c1, c2);
+            out.push(BASES[b]);
+            c1 = c2;
+            c2 = b;
+        }
+        out
+    }
+
+    // ---------------- promoters (Tab. 6) ----------------
+
+    /// TATA-like promoter motif cluster.
+    fn promoter_motif(&mut self) -> String {
+        // canonical TATA box + downstream GC-rich element with light noise
+        let mut m = String::from("TATAAAA");
+        for _ in 0..6 {
+            m.push(if self.rng.coin(0.8) { 'G' } else { 'C' });
+        }
+        m
+    }
+
+    /// A positive promoter sequence of length `len`: motif planted in the
+    /// "upstream" third of the fragment (paper: −5000..+3000 around TSS).
+    pub fn promoter_positive(&mut self, len: usize) -> String {
+        let mut seq: Vec<char> = self.genome(len).chars().collect();
+        let motif: Vec<char> = self.promoter_motif().chars().collect();
+        let lo = len / 6;
+        let hi = len / 3;
+        let pos = self.rng.range(lo, hi - motif.len());
+        seq[pos..pos + motif.len()].copy_from_slice(&motif);
+        seq.into_iter().collect()
+    }
+
+    /// Oubounyt et al. negative: split into 20 subsequences, substitute
+    /// 12 random ones with random sequence, conserve 8.
+    pub fn promoter_negative_from(&mut self, positive: &str) -> String {
+        let chars: Vec<char> = positive.chars().collect();
+        let n = chars.len();
+        let k = 20;
+        let sub = n / k;
+        let replace_idx = self.rng.sample_distinct(k, 12);
+        let mut out = chars.clone();
+        for &i in &replace_idx {
+            let start = i * sub;
+            let end = if i == k - 1 { n } else { (i + 1) * sub };
+            for c in out.iter_mut().take(end).skip(start) {
+                *c = BASES[self.rng.below(4)];
+            }
+        }
+        out.into_iter().collect()
+    }
+
+    /// Balanced promoter dataset.
+    pub fn promoter_dataset(&mut self, count: usize, len: usize) -> Vec<PromoterExample> {
+        let mut out = Vec::with_capacity(count);
+        for i in 0..count {
+            if i % 2 == 0 {
+                out.push(PromoterExample { seq: self.promoter_positive(len), label: true });
+            } else {
+                let pos = self.promoter_positive(len);
+                out.push(PromoterExample {
+                    seq: self.promoter_negative_from(&pos),
+                    label: false,
+                });
+            }
+        }
+        out
+    }
+
+    // ---------------- chromatin profiles (Tab. 7) ----------------
+
+    /// Profile-specific motif (8 bases, deterministic per profile).
+    fn profile_motif(&self, p: usize) -> String {
+        let mut rng = Rng::new(0xBEEF).fold_in(p as u64);
+        (0..8).map(|_| BASES[rng.below(4)]).collect()
+    }
+
+    /// Group of profile `p`: 0..8 = TF, 8..12 = DHS, 12..16 = HM.
+    pub fn profile_group(&self, p: usize) -> &'static str {
+        match p {
+            x if x < 8 => "TF",
+            x if x < 12 => "DHS",
+            _ => "HM",
+        }
+    }
+
+    /// One chromatin example of length `len`; each profile is active with
+    /// ~25% probability. TF/DHS plant one motif anywhere; HM plants a
+    /// *pair* of motifs separated by at least `len/2` (long-range).
+    /// Plants never overlap (an occupied-interval tracker guarantees the
+    /// labels stay faithful to the sequence).
+    pub fn chromatin_example(&mut self, len: usize) -> ChromatinExample {
+        let mut seq: Vec<char> = self.genome(len).chars().collect();
+        let mut labels = vec![false; self.n_profiles];
+        let mut occupied: Vec<(usize, usize)> = Vec::new();
+        let place = |rng: &mut Rng, lo: usize, hi: usize, l: usize,
+                         occupied: &mut Vec<(usize, usize)>|
+         -> Option<usize> {
+            for _ in 0..64 {
+                let pos = rng.range(lo, hi - l);
+                if occupied.iter().all(|&(s, e)| pos + l <= s || pos >= e) {
+                    occupied.push((pos, pos + l));
+                    return Some(pos);
+                }
+            }
+            None
+        };
+        for p in 0..self.n_profiles {
+            if !self.rng.coin(0.25) {
+                continue;
+            }
+            let motif: Vec<char> = self.profile_motif(p).chars().collect();
+            let l = motif.len();
+            if self.profile_group(p) == "HM" {
+                // paired long-range plant: first half + second half
+                let (Some(p1), Some(p2)) = (
+                    place(&mut self.rng, 0, len / 2, l, &mut occupied),
+                    place(&mut self.rng, len / 2, len, l, &mut occupied),
+                ) else {
+                    continue;
+                };
+                seq[p1..p1 + l].copy_from_slice(&motif);
+                seq[p2..p2 + l].copy_from_slice(&motif);
+            } else {
+                let Some(pos) = place(&mut self.rng, 0, len, l, &mut occupied) else {
+                    continue;
+                };
+                seq[pos..pos + l].copy_from_slice(&motif);
+            }
+            labels[p] = true;
+        }
+        ChromatinExample { seq: seq.into_iter().collect(), labels }
+    }
+}
+
+/// Encode a base string to token ids with a fixed 5-symbol vocabulary
+/// (used before BPE training, and by tests).
+pub fn encode_bases(seq: &str) -> Vec<i32> {
+    seq.chars()
+        .map(|c| match c {
+            'A' => special::FIRST_FREE,
+            'C' => special::FIRST_FREE + 1,
+            'G' => special::FIRST_FREE + 2,
+            'T' => special::FIRST_FREE + 3,
+            _ => special::FIRST_FREE + 4,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn genome_is_acgt_with_rare_n() {
+        let mut g = DnaGen::new(1);
+        let s = g.genome(10_000);
+        assert_eq!(s.len(), 10_000);
+        let n_count = s.chars().filter(|&c| c == 'N').count();
+        assert!(n_count < 50, "too many N: {n_count}");
+        assert!(s.chars().all(|c| "ACGTN".contains(c)));
+    }
+
+    #[test]
+    fn genome_has_second_order_structure() {
+        // the Markov chain must NOT be uniform: some trigrams much more
+        // frequent than others
+        let mut g = DnaGen::new(2);
+        let s: Vec<usize> = g
+            .genome(50_000)
+            .chars()
+            .filter(|&c| c != 'N')
+            .map(|c| BASES.iter().position(|&b| b == c).unwrap())
+            .collect();
+        let mut tri = [0usize; 64];
+        for w in s.windows(3) {
+            tri[w[0] * 16 + w[1] * 4 + w[2]] += 1;
+        }
+        let max = *tri.iter().max().unwrap() as f64;
+        let min = *tri.iter().min().unwrap() as f64;
+        assert!(max / min.max(1.0) > 3.0, "genome looks uniform");
+    }
+
+    #[test]
+    fn promoter_positive_contains_tata() {
+        let mut g = DnaGen::new(3);
+        let p = g.promoter_positive(1000);
+        assert!(p.contains("TATAAAA"), "motif missing");
+    }
+
+    #[test]
+    fn negative_conserves_40_percent() {
+        let mut g = DnaGen::new(4);
+        let pos = g.promoter_positive(1000);
+        let neg = g.promoter_negative_from(&pos);
+        let same = pos
+            .chars()
+            .zip(neg.chars())
+            .filter(|(a, b)| a == b)
+            .count();
+        // 8/20 conserved exactly + ~25% chance agreement on the rest
+        let frac = same as f64 / 1000.0;
+        assert!(frac > 0.45 && frac < 0.75, "conservation {frac}");
+    }
+
+    #[test]
+    fn hm_profiles_have_long_range_motif_pairs() {
+        let mut g = DnaGen::new(5);
+        for _ in 0..40 {
+            let ex = g.chromatin_example(2000);
+            for p in 12..16 {
+                if ex.labels[p] {
+                    let motif = g.profile_motif(p);
+                    let first = ex.seq.find(&motif);
+                    let last = ex.seq.rfind(&motif);
+                    let (Some(a), Some(b)) = (first, last) else { continue };
+                    assert!(b >= 1000 && a < 1000, "HM pair not long-range: {a},{b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn encode_bases_maps_correctly() {
+        let ids = encode_bases("ACGTN");
+        assert_eq!(
+            ids,
+            vec![
+                special::FIRST_FREE,
+                special::FIRST_FREE + 1,
+                special::FIRST_FREE + 2,
+                special::FIRST_FREE + 3,
+                special::FIRST_FREE + 4
+            ]
+        );
+    }
+}

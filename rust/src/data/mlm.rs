@@ -1,0 +1,134 @@
+//! BERT-style MLM masking (App. F.1 / Devlin et al.): of the 15% selected
+//! positions, 80% → `<mask>`, 10% → random token, 10% → unchanged.
+
+use crate::tokenizer::special;
+use crate::util::Rng;
+
+/// Masking hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct MlmMasking {
+    pub mask_prob: f64,
+    pub mask_token_frac: f64,
+    pub random_frac: f64,
+    /// Content vocabulary size for the "random token" replacement.
+    pub vocab: usize,
+}
+
+impl Default for MlmMasking {
+    fn default() -> Self {
+        MlmMasking { mask_prob: 0.15, mask_token_frac: 0.8, random_frac: 0.1, vocab: 512 }
+    }
+}
+
+/// One fully-assembled MLM training batch.
+#[derive(Clone, Debug)]
+pub struct MlmBatch {
+    /// (B, S) masked input tokens.
+    pub tokens: Vec<i32>,
+    /// (B, S) validity.
+    pub kv_valid: Vec<f32>,
+    /// (B, S) original tokens (loss targets).
+    pub labels: Vec<i32>,
+    /// (B, S) 1.0 at predicted positions.
+    pub weights: Vec<f32>,
+}
+
+/// Apply MLM masking to a padded token matrix.
+///
+/// `kv_valid` marks real tokens; specials (< FIRST_FREE) are never masked.
+pub fn mask_tokens(
+    tokens: &[i32],
+    kv_valid: &[f32],
+    m: &MlmMasking,
+    rng: &mut Rng,
+) -> MlmBatch {
+    assert_eq!(tokens.len(), kv_valid.len());
+    let labels = tokens.to_vec();
+    let mut out = tokens.to_vec();
+    let mut weights = vec![0f32; tokens.len()];
+    for i in 0..tokens.len() {
+        if kv_valid[i] == 0.0 || tokens[i] < special::FIRST_FREE {
+            continue;
+        }
+        if !rng.coin(m.mask_prob) {
+            continue;
+        }
+        weights[i] = 1.0;
+        let u = rng.f64();
+        if u < m.mask_token_frac {
+            out[i] = special::MASK;
+        } else if u < m.mask_token_frac + m.random_frac {
+            let lo = special::FIRST_FREE as usize;
+            out[i] = rng.range(lo, m.vocab) as i32;
+        } // else: keep original, still predicted
+    }
+    MlmBatch { tokens: out, kv_valid: kv_valid.to_vec(), labels, weights }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(n: usize) -> (Vec<i32>, Vec<f32>) {
+        let toks: Vec<i32> = (0..n).map(|i| special::FIRST_FREE + (i % 100) as i32).collect();
+        let valid = vec![1f32; n];
+        (toks, valid)
+    }
+
+    #[test]
+    fn mask_rate_is_near_15_percent() {
+        let (t, v) = setup(20_000);
+        let mut rng = Rng::new(1);
+        let b = mask_tokens(&t, &v, &MlmMasking::default(), &mut rng);
+        let rate = b.weights.iter().sum::<f32>() / 20_000.0;
+        assert!((rate - 0.15).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn masked_positions_follow_80_10_10() {
+        let (t, v) = setup(50_000);
+        let mut rng = Rng::new(2);
+        let m = MlmMasking::default();
+        let b = mask_tokens(&t, &v, &m, &mut rng);
+        let (mut masked, mut random, mut kept) = (0.0f64, 0.0f64, 0.0f64);
+        for i in 0..t.len() {
+            if b.weights[i] == 0.0 {
+                continue;
+            }
+            if b.tokens[i] == special::MASK {
+                masked += 1.0;
+            } else if b.tokens[i] == t[i] {
+                kept += 1.0;
+            } else {
+                random += 1.0;
+            }
+        }
+        let total = masked + random + kept;
+        assert!((masked / total - 0.8).abs() < 0.03);
+        // random replacements can coincide with the original id (1/vocab),
+        // slightly inflating `kept`; tolerances cover it
+        assert!((random / total - 0.1).abs() < 0.02);
+        assert!((kept / total - 0.1).abs() < 0.02);
+    }
+
+    #[test]
+    fn labels_preserve_originals_and_pads_untouched() {
+        let (mut t, mut v) = setup(100);
+        t[50] = special::PAD;
+        v[50] = 0.0;
+        let mut rng = Rng::new(3);
+        let b = mask_tokens(&t, &v, &MlmMasking::default(), &mut rng);
+        assert_eq!(b.labels, t);
+        assert_eq!(b.tokens[50], special::PAD);
+        assert_eq!(b.weights[50], 0.0);
+    }
+
+    #[test]
+    fn specials_never_masked() {
+        let t = vec![special::CLS; 1000];
+        let v = vec![1f32; 1000];
+        let mut rng = Rng::new(4);
+        let b = mask_tokens(&t, &v, &MlmMasking::default(), &mut rng);
+        assert_eq!(b.weights.iter().sum::<f32>(), 0.0);
+    }
+}

@@ -1,0 +1,67 @@
+//! Synthetic data substrates (DESIGN.md §Substitutions).
+//!
+//! Every generator is seeded and produces token sequences in the shared
+//! id space (`tokenizer::special` + content ids). The generators plant
+//! *controlled long-range structure* so that the paper's qualitative
+//! claims (longer context ⇒ better MLM/QA/classification/summarization)
+//! are properties of the data, not accidents.
+
+pub mod classify;
+mod corpus;
+mod dna;
+mod loader;
+mod mlm;
+mod qa;
+pub mod summarize;
+
+pub use classify::{ClassifyExample, ClassifyGen, EvidenceSpread};
+pub use corpus::{CorpusConfig, CorpusGen};
+pub use dna::{ChromatinExample, DnaGen, PromoterExample};
+pub use loader::Loader;
+pub use mlm::{mask_tokens, MlmBatch, MlmMasking};
+pub use qa::{QaExample, QaGen};
+pub use summarize::{SummarizeExample, SummarizeGen};
+
+/// A generic padded batch of token sequences.
+#[derive(Clone, Debug)]
+pub struct TokenBatch {
+    /// (B, S) row-major token ids.
+    pub tokens: Vec<i32>,
+    /// (B, S) 1.0/0.0 validity.
+    pub kv_valid: Vec<f32>,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl TokenBatch {
+    /// Pad/truncate `seqs` to `seq_len` and stack. Panics if
+    /// `seqs.len() != batch`.
+    pub fn from_seqs(seqs: &[Vec<i32>], batch: usize, seq_len: usize) -> Self {
+        assert_eq!(seqs.len(), batch, "batch size mismatch");
+        let mut tokens = vec![crate::tokenizer::special::PAD; batch * seq_len];
+        let mut kv_valid = vec![0f32; batch * seq_len];
+        for (i, s) in seqs.iter().enumerate() {
+            let n = s.len().min(seq_len);
+            tokens[i * seq_len..i * seq_len + n].copy_from_slice(&s[..n]);
+            for v in kv_valid[i * seq_len..i * seq_len + n].iter_mut() {
+                *v = 1.0;
+            }
+        }
+        TokenBatch { tokens, kv_valid, batch, seq_len }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_seqs_pads_and_truncates() {
+        let seqs = vec![vec![7, 8, 9], vec![1; 20]];
+        let b = TokenBatch::from_seqs(&seqs, 2, 8);
+        assert_eq!(&b.tokens[0..4], &[7, 8, 9, 0]);
+        assert_eq!(b.kv_valid[2], 1.0);
+        assert_eq!(b.kv_valid[3], 0.0);
+        assert_eq!(&b.tokens[8..16], &[1; 8]);
+    }
+}

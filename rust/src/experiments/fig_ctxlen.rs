@@ -1,0 +1,48 @@
+//! `bigbird experiment fig_ctxlen` — Fig. 8: MLM accuracy as a function
+//! of context length (BigBird-ITC at 128…2048).
+
+use anyhow::Result;
+
+use super::common::{longrange_corpus_docs, pool, render_table, train_eval_mlm, RunLog};
+use crate::cli::Flags;
+
+pub const MODELS: [(usize, &str); 5] = [
+    (128, "mlm_bigbird_itc_s128_b8"),
+    (256, "mlm_bigbird_itc_s256_b8"),
+    (512, "mlm_bigbird_itc_s512_b4"),
+    (1024, "mlm_bigbird_itc_s1024_b2"),
+    (2048, "mlm_bigbird_itc_s2048_b1"),
+];
+
+pub fn run(flags: &Flags) -> Result<()> {
+    let pool = pool(flags)?;
+    let mut log = RunLog::new("fig_ctxlen");
+    log.line(format!(
+        "Fig. 8 — BigBird MLM accuracy vs context length ({} steps each):\n",
+        flags.steps
+    ));
+    let docs = longrange_corpus_docs(512, 64, 4096, flags.seed);
+    let mut rows = Vec::new();
+    let mut series = Vec::new();
+    for (len, model) in MODELS {
+        let r = train_eval_mlm(&pool, model, &docs, flags.steps, flags.seed, false)?;
+        rows.push(vec![
+            format!("{len}"),
+            format!("{:.1}", r.acc * 100.0),
+            format!("{:.3}", r.bpt),
+        ]);
+        series.push((len, r.acc));
+    }
+    log.line(render_table(&["context length", "MLM acc %", "bits/token"], &rows));
+    // crude ascii curve
+    log.line("\naccuracy vs context (ascii):");
+    let max_acc = series.iter().map(|&(_, a)| a).fold(0.0, f64::max).max(1e-9);
+    for (len, acc) in &series {
+        let bars = ((acc / max_acc) * 40.0) as usize;
+        log.line(format!("  {len:>5} | {} {:.1}%", "#".repeat(bars), acc * 100.0));
+    }
+    log.line("\nPaper's shape (Fig. 8): monotone improvement with longer context.");
+    let path = log.finish()?;
+    println!("(written to {})", path.display());
+    Ok(())
+}

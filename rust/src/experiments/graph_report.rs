@@ -1,0 +1,69 @@
+//! `bigbird graph` — quantitative backing for Sec. 2's graph-theory
+//! motivation: path lengths, clustering, and spectral gaps of ER,
+//! Watts–Strogatz, window-only, and BigBird graphs across sizes.
+
+use anyhow::Result;
+
+use crate::attention::PatternSpec;
+use crate::cli::Flags;
+use crate::config::AttnVariant;
+use crate::graph::{
+    avg_shortest_path, bigbird_graph, clustering_coefficient, connected, erdos_renyi,
+    spectral_gap, watts_strogatz,
+};
+use crate::util::Rng;
+
+use super::common::{render_table, RunLog};
+
+pub fn run(flags: &Flags) -> Result<()> {
+    let mut log = RunLog::new("graph_report");
+    log.line("Sec. 2 — graph properties of attention patterns");
+    log.line("(avg degree matched at ≈ 8 for all families)\n");
+    let mut rows = Vec::new();
+    for &n in &[64usize, 128, 256] {
+        let mut rng = Rng::new(flags.seed ^ n as u64);
+        let er = erdos_renyi(n, 8.0 / n as f64, &mut rng);
+        let ws = watts_strogatz(n, 8, 0.1, false, &mut rng);
+        let window = bigbird_graph(&PatternSpec {
+            variant: AttnVariant::Window,
+            nb: n,
+            global_blocks: 0,
+            window_blocks: 9,
+            random_blocks: 0,
+            seed: flags.seed,
+        });
+        let bigbird = bigbird_graph(&PatternSpec {
+            variant: AttnVariant::BigBirdItc,
+            nb: n,
+            global_blocks: 2,
+            window_blocks: 3,
+            random_blocks: 3,
+            seed: flags.seed,
+        });
+        for (name, g) in [
+            ("Erdős–Rényi", &er),
+            ("Watts–Strogatz", &ws),
+            ("window-only", &window),
+            ("BigBird", &bigbird),
+        ] {
+            rows.push(vec![
+                format!("{n}"),
+                name.to_string(),
+                format!("{}", g.edge_count()),
+                if connected(g) { "yes".into() } else { "NO".into() },
+                format!("{:.2}", avg_shortest_path(g)),
+                format!("{:.3}", clustering_coefficient(g)),
+                format!("{:.4}", spectral_gap(g, 800)),
+            ]);
+        }
+    }
+    log.line(render_table(
+        &["n", "graph", "edges", "connected", "avg path", "clustering", "spectral gap"],
+        &rows,
+    ));
+    log.line("Claims checked: ER → short paths + gap, no clustering;");
+    log.line("window → clustering, long paths, tiny gap; BigBird → all three.");
+    let path = log.finish()?;
+    println!("(written to {})", path.display());
+    Ok(())
+}

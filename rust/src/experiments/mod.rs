@@ -1,0 +1,66 @@
+//! Experiment harnesses — one per paper table/figure (DESIGN.md §6).
+
+pub mod ablation;
+pub mod classification;
+pub mod common;
+pub mod fig_ctxlen;
+pub mod genomics;
+pub mod graph_report;
+pub mod hlo_report;
+pub mod hotpath;
+pub mod mlm_bpc;
+pub mod patterns;
+pub mod qa;
+pub mod scaling;
+pub mod serve_demo;
+pub mod smoke;
+pub mod summarization;
+pub mod table1;
+pub mod task1;
+pub mod train_demo;
+pub mod turing;
+
+use anyhow::{bail, Result};
+
+use crate::cli::Flags;
+
+/// Dispatch an experiment id to its harness.
+pub fn dispatch(id: &str, flags: &Flags) -> Result<()> {
+    match id {
+        "table1" => table1::run(flags),
+        "mlm_bpc" => mlm_bpc::run(flags),
+        "fig_ctxlen" => fig_ctxlen::run(flags),
+        "qa" => qa::run(flags),
+        "classification" => classification::run(flags),
+        "summarization" => summarization::run(flags),
+        "genomics" => genomics::run(flags),
+        "scaling" => scaling::run(flags),
+        "task1" => task1::run(flags),
+        "patterns" => patterns::run(flags),
+        "turing" => turing::run(flags),
+        "ablation_global" => ablation::run(flags),
+        "hotpath" => hotpath::run(flags),
+        "hlo_report" => hlo_report::run(flags),
+        "all" => {
+            for id in [
+                "patterns",
+                "scaling",
+                "task1",
+                "turing",
+                "table1",
+                "mlm_bpc",
+                "fig_ctxlen",
+                "qa",
+                "classification",
+                "summarization",
+                "genomics",
+                "ablation_global",
+            ] {
+                println!("\n================ experiment: {id} ================");
+                dispatch(id, flags)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?}"),
+    }
+}

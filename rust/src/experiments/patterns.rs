@@ -1,0 +1,55 @@
+//! `bigbird experiment patterns` — regenerate Fig. 1 and Fig. 3 as ASCII.
+
+use anyhow::Result;
+
+use crate::attention::{render_block_pattern, render_token_pattern, PatternSpec};
+use crate::cli::Flags;
+use crate::config::AttnVariant;
+
+use super::common::RunLog;
+
+pub fn run(flags: &Flags) -> Result<()> {
+    let mut log = RunLog::new("patterns");
+    log.line("Fig. 1 — token-level building blocks (n = 16, block = 1):");
+    let fig1 = [
+        (AttnVariant::Random, "(a) random attention, r = 2", 0, 1, 2),
+        (AttnVariant::Window, "(b) sliding window, w = 3", 0, 3, 0),
+        (AttnVariant::WindowGlobal, "(c) global attention, g = 2 (shown with w = 1)", 2, 1, 0),
+        (AttnVariant::BigBirdItc, "(d) the combined BigBird model", 2, 3, 2),
+    ];
+    for (variant, title, g, w, r) in fig1 {
+        let spec = PatternSpec {
+            variant,
+            nb: 16,
+            global_blocks: g,
+            window_blocks: w,
+            random_blocks: r,
+            seed: flags.seed,
+        };
+        log.line(format!("\n{title}"));
+        log.line(render_token_pattern(&spec, 1));
+    }
+
+    log.line("\nFig. 3 — blockified patterns (12 tokens, block = 2 ⇒ 6 blocks):");
+    let fig3 = [
+        (AttnVariant::Random, "(a) block random, r = 1", 0, 1, 1),
+        (AttnVariant::Window, "(b) block window, w = 3", 0, 3, 0),
+        (AttnVariant::WindowGlobal, "(c) block global, g = 1 (w = 1)", 1, 1, 0),
+        (AttnVariant::BigBirdItc, "(d) block BigBird", 1, 3, 1),
+    ];
+    for (variant, title, g, w, r) in fig3 {
+        let spec = PatternSpec {
+            variant,
+            nb: 6,
+            global_blocks: g,
+            window_blocks: w,
+            random_blocks: r,
+            seed: flags.seed,
+        };
+        log.line(format!("\n{title}"));
+        log.line(render_block_pattern(&spec));
+    }
+    let path = log.finish()?;
+    println!("(written to {})", path.display());
+    Ok(())
+}

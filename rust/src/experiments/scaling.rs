@@ -1,0 +1,100 @@
+//! `bigbird experiment scaling` — the headline systems claim: BigBird
+//! attention is O(n) versus dense O(n²) (the "8× longer sequences on the
+//! same hardware" of the abstract + App. D's efficiency argument).
+//!
+//! Executes the `attnbench_*` artifacts across sequence lengths, times
+//! them, fits a log-log exponent to each series, and reports the memory
+//! proxy (score-tensor elements).
+
+use anyhow::Result;
+
+use super::common::{pool, render_table, RunLog};
+use crate::cli::Flags;
+use crate::runtime::HostTensor;
+use crate::util::stats::linear_fit;
+
+const LENGTHS: [usize; 5] = [256, 512, 1024, 2048, 4096];
+const HEADS: usize = 2;
+const HEAD_DIM: usize = 32;
+
+/// Time one artifact over `reps` runs, returning the best wallclock (s).
+fn time_artifact(
+    pool: &crate::runtime::ExecutablePool,
+    name: &str,
+    n: usize,
+    reps: usize,
+) -> Result<f64> {
+    let exe = pool.get(name)?;
+    let vol = HEADS * n * HEAD_DIM;
+    let q = HostTensor::F32 {
+        shape: vec![1, HEADS, n, HEAD_DIM],
+        data: (0..vol).map(|i| ((i % 97) as f32) * 0.01).collect(),
+    };
+    // warmup
+    exe.run(&[q.clone(), q.clone(), q.clone()])?;
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        exe.run(&[q.clone(), q.clone(), q.clone()])?;
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    Ok(best)
+}
+
+/// Score-memory proxy in floats: dense n², bigbird n·(g+w+r)·b.
+fn memory_proxy(variant: &str, n: usize) -> usize {
+    match variant {
+        "dense" => n * n,
+        _ => n * (2 + 3 + 3) * 32,
+    }
+}
+
+pub fn run(flags: &Flags) -> Result<()> {
+    let pool = pool(flags)?;
+    let mut log = RunLog::new("scaling");
+    log.line("Attention forward scaling (1 batch × 2 heads × d=32):\n");
+
+    let series = [
+        ("dense", "jnp"),
+        ("bigbird_itc", "jnp"),
+        ("bigbird_itc", "pallas"),
+    ];
+    let mut rows = Vec::new();
+    let mut fits = Vec::new();
+    for (variant, impl_) in series {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for &n in &LENGTHS {
+            let name = format!("attnbench_{variant}_{impl_}_n{n}");
+            let t = time_artifact(&pool, &name, n, 3)?;
+            rows.push(vec![
+                variant.to_string(),
+                impl_.to_string(),
+                format!("{n}"),
+                format!("{:.2}", t * 1000.0),
+                format!("{}", memory_proxy(variant, n)),
+            ]);
+            xs.push((n as f64).ln());
+            ys.push(t.ln());
+        }
+        let (_, slope, r2) = linear_fit(&xs, &ys);
+        fits.push((variant, impl_, slope, r2));
+    }
+    log.line(render_table(
+        &["variant", "impl", "seq_len", "ms", "score-mem (floats)"],
+        &rows,
+    ));
+    log.line("\nlog-log scaling exponents (t ∝ n^k):");
+    for (variant, impl_, slope, r2) in &fits {
+        log.line(format!("  {variant:<12} {impl_:<7} k = {slope:.2}  (r² = {r2:.3})"));
+    }
+    log.line("\nExpected shape: dense k → 2, BigBird k → 1 (paper's linear claim).");
+    // the memory claim: at 4096, dense scores need 16.8M floats vs 1.0M
+    let ratio = memory_proxy("dense", 4096) as f64 / memory_proxy("bigbird_itc", 4096) as f64;
+    log.line(format!(
+        "score-memory ratio at n=4096: dense/bigbird = {ratio:.1}× (the '8× longer on the same memory' headline)"
+    ));
+    let path = log.finish()?;
+    println!("(written to {})", path.display());
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! `bigbird smoke`: compile and execute every artifact once with dummy
+//! inputs — the fastest whole-pipeline health check.
+
+use anyhow::Result;
+
+use super::common;
+use crate::cli::Flags;
+use crate::runtime::HostTensor;
+
+/// Build a dummy input for a tensor spec (zeros / small ids).
+fn dummy(spec: &crate::runtime::TensorSpec) -> HostTensor {
+    let vol = spec.volume();
+    if spec.dtype == "i32" {
+        HostTensor::I32 { shape: spec.dims.clone(), data: vec![7; vol] }
+    } else {
+        HostTensor::F32 { shape: spec.dims.clone(), data: vec![0.5; vol] }
+    }
+}
+
+pub fn run(flags: &Flags) -> Result<()> {
+    let pool = common::pool(flags)?;
+    let names: Vec<String> = pool
+        .manifest()
+        .entries()
+        .iter()
+        .map(|e| e.name.clone())
+        .collect();
+    let mut failures = 0usize;
+    for (i, name) in names.iter().enumerate() {
+        let t0 = std::time::Instant::now();
+        let result = (|| -> Result<usize> {
+            let exe = pool.get(name)?;
+            let inputs: Vec<HostTensor> = exe.io.inputs.iter().map(dummy).collect();
+            let out = exe.run(&inputs)?;
+            Ok(out.len())
+        })();
+        match result {
+            Ok(n_out) => println!(
+                "[{:>2}/{}] {name:<44} OK ({n_out} outputs, {:.2}s)",
+                i + 1,
+                names.len(),
+                t0.elapsed().as_secs_f64()
+            ),
+            Err(e) => {
+                failures += 1;
+                println!("[{:>2}/{}] {name:<44} FAIL: {e:#}", i + 1, names.len());
+            }
+        }
+    }
+    if failures > 0 {
+        anyhow::bail!("{failures} artifacts failed the smoke test");
+    }
+    println!("smoke: all {} artifacts OK", names.len());
+    Ok(())
+}

@@ -1,0 +1,229 @@
+//! `bigbird experiment summarization` — Tab. 4 (long-doc abstractive
+//! summarization) and Tab. 20 (prior-art baselines): sparse-encoder
+//! seq2seq vs dense-encoder seq2seq vs Lead/frequency/oracle extractive
+//! baselines, scored with ROUGE-1/2/L.
+
+use anyhow::Result;
+
+use super::common::{entry_for, pool, render_table, RunLog};
+use crate::cli::Flags;
+use crate::data::summarize::{
+    frequency_baseline, lead_baseline, oracle_baseline, SummarizeGen,
+};
+use crate::metrics::{rouge_l, rouge_n};
+use crate::runtime::{ExecutablePool, HostTensor};
+use crate::tokenizer::special;
+use crate::train::TrainDriver;
+
+const N_SENTENCES: usize = 20; // × 24 tokens = 480-token documents
+const DEC_LEN: usize = 64;
+
+struct S2sGeom {
+    batch: usize,
+    seq_len: usize,
+    vocab: usize,
+}
+
+fn s2s_batch(
+    gen: &mut SummarizeGen,
+    g: &S2sGeom,
+) -> Result<(Vec<HostTensor>, Vec<Vec<i32>>)> {
+    let b = g.batch;
+    let s = g.seq_len;
+    let t = DEC_LEN;
+    let mut src = vec![special::PAD; b * s];
+    let mut valid = vec![0f32; b * s];
+    let mut dec_in = vec![special::PAD; b * t];
+    let mut dec_out = vec![special::PAD; b * t];
+    let mut dec_w = vec![0f32; b * t];
+    let mut golds = Vec::with_capacity(b);
+    for row in 0..b {
+        let ex = gen.example(N_SENTENCES);
+        let n = ex.src.len().min(s);
+        src[row * s..row * s + n].copy_from_slice(&ex.src[..n]);
+        for v in valid[row * s..row * s + n].iter_mut() {
+            *v = 1.0;
+        }
+        // teacher forcing: in = summary[..-1], out = summary[1..]
+        let m = (ex.summary.len() - 1).min(t);
+        dec_in[row * t..row * t + m].copy_from_slice(&ex.summary[..m]);
+        dec_out[row * t..row * t + m].copy_from_slice(&ex.summary[1..m + 1]);
+        for v in dec_w[row * t..row * t + m].iter_mut() {
+            *v = 1.0;
+        }
+        golds.push(ex.summary[1..ex.summary.len() - 1].to_vec());
+    }
+    Ok((
+        vec![
+            HostTensor::i32(&[b, s], src)?,
+            HostTensor::f32(&[b, s], valid)?,
+            HostTensor::i32(&[b, t], dec_in)?,
+            HostTensor::i32(&[b, t], dec_out)?,
+            HostTensor::f32(&[b, t], dec_w)?,
+        ],
+        golds,
+    ))
+}
+
+/// Greedy decode with the decode artifact; returns token ids w/o BOS/EOS.
+fn greedy_decode(
+    pool: &ExecutablePool,
+    model: &str,
+    params: &HostTensor,
+    src: &HostTensor,
+    valid: &HostTensor,
+    g: &S2sGeom,
+) -> Result<Vec<Vec<i32>>> {
+    let decode = pool.get(&format!("decode_{model}"))?;
+    let b = g.batch;
+    let t = DEC_LEN;
+    let mut dec = vec![special::PAD; b * t];
+    for row in 0..b {
+        dec[row * t] = special::BOS;
+    }
+    let mut done = vec![false; b];
+    let max_steps = 30; // summaries are ≤ 26 tokens by construction
+    for pos in 0..max_steps.min(t - 1) {
+        let dec_t = HostTensor::i32(&[b, t], dec.clone())?;
+        let out = decode.run(&[params.clone(), src.clone(), valid.clone(), dec_t])?;
+        let logits = out[0].as_f32()?; // (b, t, vocab)
+        for row in 0..b {
+            if done[row] {
+                continue;
+            }
+            let base = (row * t + pos) * g.vocab;
+            let rowl = &logits[base..base + g.vocab];
+            let mut best = 0usize;
+            for (j, &x) in rowl.iter().enumerate() {
+                if x > rowl[best] {
+                    best = j;
+                }
+            }
+            if best as i32 == special::EOS {
+                done[row] = true;
+            } else {
+                dec[row * t + pos + 1] = best as i32;
+            }
+        }
+        if done.iter().all(|&d| d) {
+            break;
+        }
+    }
+    Ok((0..b)
+        .map(|row| {
+            dec[row * t + 1..(row + 1) * t]
+                .iter()
+                .copied()
+                .filter(|&x| x != special::PAD)
+                .collect()
+        })
+        .collect())
+}
+
+/// Train one seq2seq model and return (R1, R2, RL) on held-out docs.
+pub fn train_eval_s2s(
+    pool: &ExecutablePool,
+    model: &str,
+    steps: usize,
+    seed: u64,
+) -> Result<(f64, f64, f64)> {
+    let e = entry_for(pool.manifest(), model)?;
+    let g = S2sGeom {
+        batch: e.meta_usize("batch").unwrap(),
+        seq_len: e.meta_usize("seq_len").unwrap(),
+        vocab: e.meta_usize("vocab").unwrap(),
+    };
+    let mut driver = TrainDriver::new(pool, model)?;
+    let mut gen = SummarizeGen::new(512, seed);
+    driver.run(
+        steps,
+        (steps / 6).max(1),
+        |_| Ok(s2s_batch(&mut gen, &g)?.0),
+        |p| eprintln!("  [{model}] step {:>5} loss {:.4}", p.step, p.loss),
+    )?;
+    // held-out ROUGE via greedy decoding
+    let mut egen = SummarizeGen::new(512, seed ^ 0x50FF);
+    let (mut r1, mut r2, mut rl) = (Vec::new(), Vec::new(), Vec::new());
+    for _ in 0..4 {
+        let (batch, golds) = s2s_batch(&mut egen, &g)?;
+        let preds = greedy_decode(pool, model, &driver.params, &batch[0], &batch[1], &g)?;
+        for (p, gold) in preds.iter().zip(&golds) {
+            r1.push(rouge_n(p, gold, 1).f1);
+            r2.push(rouge_n(p, gold, 2).f1);
+            rl.push(rouge_l(p, gold).f1);
+        }
+    }
+    Ok((
+        crate::util::stats::mean(&r1) * 100.0,
+        crate::util::stats::mean(&r2) * 100.0,
+        crate::util::stats::mean(&rl) * 100.0,
+    ))
+}
+
+/// Extractive baselines on the same held-out distribution.
+fn baseline_rouge(seed: u64) -> Vec<(String, f64, f64, f64)> {
+    let mut gen = SummarizeGen::new(512, seed ^ 0x50FF);
+    let mut out = Vec::new();
+    for (name, f) in [
+        ("Lead-4", Box::new(|ex: &crate::data::SummarizeExample| lead_baseline(ex, 4))
+            as Box<dyn Fn(&crate::data::SummarizeExample) -> Vec<i32>>),
+        ("SumBasic-like (freq)", Box::new(|ex| frequency_baseline(ex, 4))),
+        ("Oracle extractive", Box::new(oracle_baseline)),
+    ] {
+        let mut gen2 = SummarizeGen::new(512, seed ^ 0x50FF);
+        let _ = &mut gen;
+        let (mut r1, mut r2, mut rl) = (Vec::new(), Vec::new(), Vec::new());
+        for _ in 0..16 {
+            let ex = gen2.example(N_SENTENCES);
+            let gold = &ex.summary[1..ex.summary.len() - 1];
+            let pred = f(&ex);
+            r1.push(rouge_n(&pred, gold, 1).f1);
+            r2.push(rouge_n(&pred, gold, 2).f1);
+            rl.push(rouge_l(&pred, gold).f1);
+        }
+        out.push((
+            name.to_string(),
+            crate::util::stats::mean(&r1) * 100.0,
+            crate::util::stats::mean(&r2) * 100.0,
+            crate::util::stats::mean(&rl) * 100.0,
+        ));
+    }
+    out
+}
+
+pub fn run(flags: &Flags) -> Result<()> {
+    let pool = pool(flags)?;
+    let mut log = RunLog::new("summarization");
+    log.line(format!(
+        "Tab. 4 / Tab. 20 — long-document summarization ({} sentences/doc, {} steps):\n",
+        N_SENTENCES, flags.steps
+    ));
+    let mut rows = Vec::new();
+    for (name, r1, r2, rl) in baseline_rouge(flags.seed) {
+        rows.push(vec![
+            name,
+            format!("{r1:.1}"),
+            format!("{r2:.1}"),
+            format!("{rl:.1}"),
+        ]);
+    }
+    for (label, model) in [
+        ("Dense-encoder seq2seq (512)", "s2s_dense_s512_b4"),
+        ("BigBird-encoder seq2seq (512)", "s2s_bigbird_itc_s512_b4"),
+    ] {
+        let (r1, r2, rl) = train_eval_s2s(&pool, model, flags.steps, flags.seed)?;
+        rows.push(vec![
+            label.to_string(),
+            format!("{r1:.1}"),
+            format!("{r2:.1}"),
+            format!("{rl:.1}"),
+        ]);
+    }
+    log.line(render_table(&["system", "R-1", "R-2", "R-L"], &rows));
+    log.line("\nPaper's shape (Tab. 4): trained abstractive systems beat Lead/freq");
+    log.line("baselines; sparse encoder matches the dense encoder at equal length");
+    log.line("(Tab. 20: 'sparse attention does not hamper performance').");
+    let path = log.finish()?;
+    println!("(written to {})", path.display());
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! `bigbird train` — the end-to-end training driver: pretrain the
+//! BigBird MLM on the synthetic corpus, log the loss curve, checkpoint,
+//! reload, and verify the checkpoint round-trips.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use super::common::{corpus_docs, entry_for, geometry, mlm_batch_from_docs, pool, RunLog};
+use crate::cli::Flags;
+use crate::train::TrainDriver;
+use crate::util::Rng;
+
+pub const DEFAULT_MODEL: &str = "mlm_bigbird_itc_s512_b4";
+
+pub fn run(flags: &Flags) -> Result<()> {
+    let model = flags
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or(DEFAULT_MODEL);
+    let pool = pool(flags)?;
+    let mut log = RunLog::new("train_demo");
+    log.line(format!(
+        "MLM pretraining: model {model}, {} steps, seed {}\n",
+        flags.steps, flags.seed
+    ));
+    let e = entry_for(pool.manifest(), model)?;
+    let g = geometry(e)?;
+    let docs = corpus_docs(g.vocab, 64, 4096, flags.seed);
+    let mut driver = TrainDriver::new(&pool, model)?;
+    let mut rng = Rng::new(flags.seed).fold_in(0x17);
+    let tlog = driver.run(
+        flags.steps,
+        (flags.steps / 20).max(1),
+        |_| mlm_batch_from_docs(&docs, g, &mut rng),
+        |p| println!("step {:>5}  loss {:.4}  ({:.0} ms/step)", p.step, p.loss, p.ms_per_step),
+    )?;
+    log.line("loss curve:");
+    log.line(tlog.to_tsv());
+    log.line(format!(
+        "first loss {:.4} → final loss {:.4} over {} steps ({:.1}s wall)",
+        tlog.first_loss(),
+        tlog.final_loss(),
+        tlog.total_steps,
+        tlog.wall_seconds
+    ));
+
+    // checkpoint round-trip
+    let dir = PathBuf::from("runs");
+    std::fs::create_dir_all(&dir)?;
+    let ckpt = dir.join(format!("{model}.ckpt"));
+    driver.save(&ckpt)?;
+    let restored = TrainDriver::resume(&pool, model, &ckpt)?;
+    anyhow::ensure!(restored.step == driver.step, "checkpoint step mismatch");
+    anyhow::ensure!(
+        restored.params == driver.params,
+        "checkpoint params mismatch"
+    );
+    log.line(format!("checkpoint saved + verified: {}", ckpt.display()));
+    let path = log.finish()?;
+    println!("(written to {})", path.display());
+    Ok(())
+}

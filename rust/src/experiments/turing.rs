@@ -1,0 +1,289 @@
+//! `bigbird experiment turing` — a mechanical verification of App. B's
+//! Turing-completeness construction.
+//!
+//! The crux of App. B is the **sparse addressing scheme** (their
+//! replacement for Lemma B.4 of Pérez et al.): with the decoder's sparse
+//! graph D containing edges
+//!
+//! ```text
+//! ( j(j+1)/2 + k ,  k(k+1)/2 )      for 1 ≤ k ≤ j+1   ("random" edges)
+//! ( j(j+1)/2 + k ,  j(j+1)/2 + k−1 )                   ("local" edges)
+//! ```
+//!
+//! a decoder can compute `ℓ(j)` — *which earlier TM step last wrote the
+//! cell the head now points to* — **incrementally**: transformer step
+//! `i = j(j+1)/2 + k` sees compute node `k(k+1)/2` (TM step k) plus the
+//! running best from step `i−1`, and min/argmin is associative, so after
+//! the j+1 intermediate steps the final compute node holds `ℓ(j)`
+//! exactly as full attention would have found it in one step.
+//!
+//! We verify this mechanically: run a real Turing machine directly, then
+//! re-run it where every tape read is resolved *through the sparse
+//! aggregation chain*, and assert both executions agree step by step.
+
+use anyhow::Result;
+
+use super::common::{render_table, RunLog};
+use crate::cli::Flags;
+
+/// Blank tape symbol.
+const BLANK: u8 = u8::MAX;
+
+/// A small Turing machine: binary increment, LSB-first tape.
+/// state 0: carrying (read 1 → write 0, move right; read 0 → write 1,
+/// halt; read blank → halt with overflow).
+#[derive(Clone, Debug)]
+pub struct TuringMachine {
+    pub tape: Vec<u8>,
+    pub head: usize,
+    pub halted: bool,
+}
+
+/// One step of execution history: (head, symbol read, symbol written).
+pub type Step = (usize, u8, u8);
+
+impl TuringMachine {
+    pub fn increment(bits: &[u8]) -> Self {
+        TuringMachine { tape: bits.to_vec(), head: 0, halted: false }
+    }
+
+    fn read(&self, pos: usize) -> u8 {
+        self.tape.get(pos).copied().unwrap_or(BLANK)
+    }
+
+    /// One transition applying the LSB-first increment rule with an
+    /// explicit symbol (used by the sparse simulation to inject the
+    /// symbol recovered through the attention chain).
+    fn apply(&mut self, symbol: u8) -> Option<Step> {
+        if self.halted {
+            return None;
+        }
+        let head = self.head;
+        let written = match symbol {
+            1 => {
+                // 1 + carry → 0, keep carrying right
+                if head < self.tape.len() {
+                    self.tape[head] = 0;
+                }
+                self.head += 1;
+                0
+            }
+            0 => {
+                // 0 + carry → 1, done
+                if head < self.tape.len() {
+                    self.tape[head] = 1;
+                }
+                self.halted = true;
+                1
+            }
+            _ => {
+                // blank: overflow, halt (tape fixed-width)
+                self.halted = true;
+                BLANK
+            }
+        };
+        Some((head, symbol, written))
+    }
+
+    /// Direct execution: read the tape normally.
+    pub fn run_direct(mut self, max_steps: usize) -> (Vec<u8>, Vec<Step>) {
+        let mut history = Vec::new();
+        for _ in 0..max_steps {
+            let s = self.read(self.head);
+            match self.apply(s) {
+                Some(step) => history.push(step),
+                None => break,
+            }
+            if self.halted {
+                break;
+            }
+        }
+        (self.tape, history)
+    }
+}
+
+/// App. B's step mapping: `g(i) = ⌊(−1 + √(1+8i)) / 2⌋` — the TM step a
+/// transformer step simulates — and `h(i) = g(i+1) − g(i)` (1 exactly at
+/// compute nodes).
+pub fn g(i: usize) -> usize {
+    ((-1.0 + (1.0 + 8.0 * i as f64).sqrt()) / 2.0).floor() as usize
+}
+
+pub fn h(i: usize) -> usize {
+    g(i + 1) - g(i)
+}
+
+/// Out-neighbours of decoder node `i = j(j+1)/2 + k` (k ≥ 1) in the
+/// sparse graph D of App. B.
+pub fn sparse_neighbours(i: usize) -> Vec<usize> {
+    if i == 0 {
+        return vec![];
+    }
+    // recover (j, k): j is the largest t with t(t+1)/2 < i
+    let mut j = g(i);
+    while j * (j + 1) / 2 >= i {
+        j -= 1;
+    }
+    let k = i - j * (j + 1) / 2;
+    vec![k * (k + 1) / 2, i - 1]
+}
+
+/// ℓ(j): the last TM step < j that wrote the cell `head`, computed
+/// *through the sparse chain*: intermediate node k aggregates compute
+/// node k's candidate with the running best from node i−1 (associative
+/// min/argmin, exactly the paper's decomposition). Returns None if the
+/// cell was never written.
+fn ell_sparse(history: &[Step], j: usize, head: usize) -> Option<usize> {
+    let mut best: Option<usize> = None; // running argmin carried along local edges
+    // the paper's edges use 1-based k: step i = j(j+1)/2 + m sees compute
+    // node m(m+1)/2, which holds TM step m−1's write (history is 0-based)
+    for m in 1..=j {
+        let i = j * (j + 1) / 2 + m;
+        let nb = sparse_neighbours(i);
+        assert!(
+            nb.contains(&(m * (m + 1) / 2)),
+            "graph D misses compute node m={m} at transformer step {i}"
+        );
+        assert!(m == 1 || nb.contains(&(i - 1)), "graph D misses the local chain edge");
+        // aggregate: candidate from compute node m (TM step m−1)
+        let k = m - 1;
+        if history[k].0 == head {
+            best = Some(k); // more recent matching write wins (argmin of χ)
+        }
+    }
+    best
+}
+
+/// Execute the TM with every tape read resolved through the sparse
+/// addressing scheme instead of reading the tape directly.
+pub fn run_sparse_simulation(tm: TuringMachine, max_steps: usize) -> (Vec<u8>, Vec<Step>) {
+    let initial = tm.tape.clone();
+    let mut m = tm;
+    let mut history: Vec<Step> = Vec::new();
+    for j in 0..max_steps {
+        if m.halted {
+            break;
+        }
+        let head = m.head;
+        // resolve the symbol under the head via ℓ(j)
+        let symbol = match ell_sparse(&history, j, head) {
+            Some(l) => history[l].2,                       // last write to this cell
+            None => initial.get(head).copied().unwrap_or(BLANK), // never written
+        };
+        match m.apply(symbol) {
+            Some(step) => history.push(step),
+            None => break,
+        }
+    }
+    (m.tape, history)
+}
+
+pub fn run(flags: &Flags) -> Result<()> {
+    let _ = flags;
+    let mut log = RunLog::new("turing");
+    log.line("App. B — sparse-decoder Turing simulation (binary increment, LSB-first)\n");
+    let mut rows = Vec::new();
+    for bits in [[1u8, 0, 1, 1].as_slice(), &[1, 1, 1, 0], &[0, 0, 0, 0], &[1, 1, 1, 1]] {
+        let tm = TuringMachine::increment(bits);
+        let (direct, dh) = tm.clone().run_direct(64);
+        let (sparse, sh) = run_sparse_simulation(tm, 64);
+        let tm_steps = dh.len();
+        // decoder budget: TM step j costs j+1 intermediate steps
+        let tf_steps: usize = (0..tm_steps).map(|j| j + 1).sum();
+        rows.push(vec![
+            format!("{bits:?}"),
+            format!("{direct:?}"),
+            format!("{sparse:?}"),
+            format!("{tm_steps}"),
+            format!("{tf_steps}"),
+            (direct == sparse && dh == sh).to_string(),
+        ]);
+    }
+    log.line(render_table(
+        &["input (LSB first)", "direct tape", "sparse-sim tape", "TM steps", "decoder steps", "match"],
+        &rows,
+    ));
+    log.line("\ng(i)/h(i) mapping spot check (App. B Fig. 2):");
+    let gs: Vec<String> = (0..12).map(|i| format!("g({i})={}", g(i))).collect();
+    log.line(format!("  {}", gs.join("  ")));
+    log.line("\nThe sparse decoder spends O(j) intermediate steps for TM step j —");
+    log.line("Turing completeness is preserved at a quadratic slowdown, not lost.");
+    let path = log.finish()?;
+    println!("(written to {})", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn increment_works() {
+        // [1,0,1,1] LSB-first = 13; +1 = 14 = [0,1,1,1]
+        let (tape, _) = TuringMachine::increment(&[1, 0, 1, 1]).run_direct(64);
+        assert_eq!(tape, vec![0, 1, 1, 1]);
+    }
+
+    #[test]
+    fn increment_with_carry_chain() {
+        // [1,1,1,0] = 7; +1 = 8 = [0,0,0,1]
+        let (tape, _) = TuringMachine::increment(&[1, 1, 1, 0]).run_direct(64);
+        assert_eq!(tape, vec![0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn increment_overflow_halts() {
+        // [1,1] = 3; +1 overflows the 2-bit tape → zeros + halt
+        let (tape, hist) = TuringMachine::increment(&[1, 1]).run_direct(64);
+        assert_eq!(tape, vec![0, 0]);
+        assert_eq!(hist.len(), 3); // two flips + the blank-read halt
+    }
+
+    #[test]
+    fn g_mapping_matches_appendix() {
+        assert_eq!(g(0), 0);
+        assert_eq!(g(1), 1);
+        assert_eq!(g(2), 1);
+        assert_eq!(g(3), 2);
+        assert_eq!(g(6), 3);
+        assert_eq!(h(0), 1);
+        assert_eq!(h(1), 0);
+        assert_eq!(h(2), 1);
+    }
+
+    #[test]
+    fn sparse_neighbours_structure() {
+        // i = j(j+1)/2 + k; e.g. i = 4 → j = 2, k = 1 → {1·2/2 = 1, 3}
+        assert_eq!(sparse_neighbours(4), vec![1, 3]);
+        // i = 6 → j = 2, k = 3 → {3·4/2 = 6?? no: k=3 → 6} — boundary: j=2
+        // allows k ≤ j+1 = 3; compute node 3(3+1)/2 = 6 = i itself (the
+        // next compute node), matching the paper's closing edge.
+        assert_eq!(sparse_neighbours(6), vec![6, 5]);
+    }
+
+    #[test]
+    fn sparse_simulation_matches_direct() {
+        for bits in [
+            [1u8, 0, 1, 1].as_slice(),
+            &[0, 1, 0, 1],
+            &[1, 1, 1, 1],
+            &[0, 0, 0, 0],
+            &[1, 1, 0, 1],
+        ] {
+            let tm = TuringMachine::increment(bits);
+            let (direct, dh) = tm.clone().run_direct(64);
+            let (sparse, sh) = run_sparse_simulation(tm, 64);
+            assert_eq!(direct, sparse, "tape mismatch for {bits:?}");
+            assert_eq!(dh, sh, "history mismatch for {bits:?}");
+        }
+    }
+
+    #[test]
+    fn ell_recovers_last_writer() {
+        // handcrafted history: cell 2 written at steps 0 and 3
+        let hist: Vec<Step> = vec![(2, 1, 0), (3, 1, 0), (4, 0, 1), (2, 0, 1)];
+        assert_eq!(ell_sparse(&hist, 4, 2), Some(3));
+        assert_eq!(ell_sparse(&hist, 3, 2), Some(0));
+        assert_eq!(ell_sparse(&hist, 4, 9), None);
+    }
+}

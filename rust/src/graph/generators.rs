@@ -1,0 +1,159 @@
+//! Graph generators: Erdős–Rényi, Watts–Strogatz, and the BigBird
+//! attention graph viewed as an undirected graph.
+
+use crate::attention::PatternSpec;
+use crate::util::Rng;
+
+/// Simple undirected graph as adjacency lists (no self-loops, no dups).
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// adjacency[u] = sorted neighbours of u
+    pub adjacency: Vec<Vec<usize>>,
+}
+
+impl Graph {
+    /// Build from an edge iterator, deduping and dropping self-loops.
+    pub fn from_edges(n: usize, edges: impl IntoIterator<Item = (usize, usize)>) -> Self {
+        let mut adjacency = vec![Vec::new(); n];
+        for (u, v) in edges {
+            if u == v || u >= n || v >= n {
+                continue;
+            }
+            adjacency[u].push(v);
+            adjacency[v].push(u);
+        }
+        for nb in &mut adjacency {
+            nb.sort_unstable();
+            nb.dedup();
+        }
+        Graph { adjacency }
+    }
+
+    /// Number of vertices.
+    pub fn len(&self) -> usize {
+        self.adjacency.len()
+    }
+
+    /// True when the graph has no vertices.
+    pub fn is_empty(&self) -> bool {
+        self.adjacency.is_empty()
+    }
+
+    /// Number of undirected edges.
+    pub fn edge_count(&self) -> usize {
+        self.adjacency.iter().map(|nb| nb.len()).sum::<usize>() / 2
+    }
+
+    /// Average degree.
+    pub fn avg_degree(&self) -> f64 {
+        if self.adjacency.is_empty() {
+            return 0.0;
+        }
+        2.0 * self.edge_count() as f64 / self.len() as f64
+    }
+}
+
+/// G(n, p): every edge independently with probability p (Sec. 2: random
+/// graphs as spectral approximators of the complete graph).
+pub fn erdos_renyi(n: usize, p: f64, rng: &mut Rng) -> Graph {
+    let mut edges = Vec::new();
+    for u in 0..n {
+        for v in (u + 1)..n {
+            if rng.coin(p) {
+                edges.push((u, v));
+            }
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+/// Watts–Strogatz: ring lattice with w neighbours (w/2 each side), then a
+/// fraction `beta` of edges rewired to random targets. The paper keeps the
+/// local edges ("deleting random edges might be inefficient on modern
+/// hardware, so we retain it"), which we reproduce with `rewire=false`.
+pub fn watts_strogatz(n: usize, w: usize, beta: f64, rewire: bool, rng: &mut Rng) -> Graph {
+    let half = w / 2;
+    let mut edges = Vec::new();
+    for u in 0..n {
+        for o in 1..=half {
+            let v = (u + o) % n;
+            if rng.coin(beta) {
+                // add a random long-range edge (replacing or retaining the
+                // lattice edge per the `rewire` flag)
+                let mut t = rng.below(n);
+                while t == u {
+                    t = rng.below(n);
+                }
+                edges.push((u, t));
+                if !rewire {
+                    edges.push((u, v));
+                }
+            } else {
+                edges.push((u, v));
+            }
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+/// The BigBird attention pattern as an undirected graph over blocks.
+pub fn bigbird_graph(spec: &PatternSpec) -> Graph {
+    let attend = crate::attention::build_pattern(spec);
+    let mut edges = Vec::new();
+    for (u, row) in attend.iter().enumerate() {
+        for &v in row {
+            if u != v {
+                edges.push((u, v));
+            }
+        }
+    }
+    Graph::from_edges(spec.nb, edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AttnVariant;
+
+    #[test]
+    fn from_edges_dedups_and_drops_self_loops() {
+        let g = Graph::from_edges(4, [(0, 1), (1, 0), (2, 2), (1, 3)]);
+        assert_eq!(g.edge_count(), 2);
+        assert_eq!(g.adjacency[1], vec![0, 3]);
+    }
+
+    #[test]
+    fn er_edge_count_near_expectation() {
+        let mut rng = Rng::new(1);
+        let n = 200;
+        let p = 0.05;
+        let g = erdos_renyi(n, p, &mut rng);
+        let expect = p * (n * (n - 1) / 2) as f64;
+        let got = g.edge_count() as f64;
+        assert!((got - expect).abs() < 0.2 * expect, "{got} vs {expect}");
+    }
+
+    #[test]
+    fn ws_degree_without_rewiring() {
+        let mut rng = Rng::new(2);
+        let g = watts_strogatz(50, 4, 0.0, false, &mut rng);
+        // pure ring lattice: every node has exactly w neighbours
+        for nb in &g.adjacency {
+            assert_eq!(nb.len(), 4);
+        }
+    }
+
+    #[test]
+    fn bigbird_graph_connects_globals_to_all() {
+        let spec = PatternSpec {
+            variant: AttnVariant::BigBirdItc,
+            nb: 16,
+            global_blocks: 1,
+            window_blocks: 3,
+            random_blocks: 1,
+            seed: 0,
+        };
+        let g = bigbird_graph(&spec);
+        assert_eq!(g.adjacency[0].len(), 15); // global sees everyone
+    }
+}

@@ -1,0 +1,158 @@
+//! Graph metrics: BFS shortest paths, clustering coefficient,
+//! connectivity — the quantities Sec. 2 argues about.
+
+use std::collections::VecDeque;
+
+use super::generators::Graph;
+
+/// BFS distances from `src` (usize::MAX when unreachable).
+fn bfs(g: &Graph, src: usize) -> Vec<usize> {
+    let mut dist = vec![usize::MAX; g.len()];
+    dist[src] = 0;
+    let mut q = VecDeque::from([src]);
+    while let Some(u) = q.pop_front() {
+        for &v in &g.adjacency[u] {
+            if dist[v] == usize::MAX {
+                dist[v] = dist[u] + 1;
+                q.push_back(v);
+            }
+        }
+    }
+    dist
+}
+
+/// Is the graph connected?
+pub fn connected(g: &Graph) -> bool {
+    if g.len() == 0 {
+        return true;
+    }
+    bfs(g, 0).iter().all(|&d| d != usize::MAX)
+}
+
+/// Average shortest-path length over connected pairs (exact all-pairs
+/// BFS — fine at our graph sizes).
+pub fn avg_shortest_path(g: &Graph) -> f64 {
+    let n = g.len();
+    let mut total = 0usize;
+    let mut pairs = 0usize;
+    for u in 0..n {
+        for (v, &d) in bfs(g, u).iter().enumerate() {
+            if v != u && d != usize::MAX {
+                total += d;
+                pairs += 1;
+            }
+        }
+    }
+    if pairs == 0 {
+        return f64::INFINITY;
+    }
+    total as f64 / pairs as f64
+}
+
+/// Global clustering coefficient: mean over vertices of
+/// (closed triangles at v) / (pairs of neighbours of v).
+pub fn clustering_coefficient(g: &Graph) -> f64 {
+    let n = g.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    for u in 0..n {
+        let nb = &g.adjacency[u];
+        let k = nb.len();
+        if k < 2 {
+            continue;
+        }
+        let mut closed = 0usize;
+        for i in 0..k {
+            for j in (i + 1)..k {
+                if g.adjacency[nb[i]].binary_search(&nb[j]).is_ok() {
+                    closed += 1;
+                }
+            }
+        }
+        total += closed as f64 / (k * (k - 1) / 2) as f64;
+    }
+    total / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::PatternSpec;
+    use crate::config::AttnVariant;
+    use crate::graph::{bigbird_graph, erdos_renyi, watts_strogatz};
+    use crate::util::Rng;
+
+    #[test]
+    fn path_length_of_path_graph() {
+        let g = Graph::from_edges(4, [(0, 1), (1, 2), (2, 3)]);
+        // pairs: (0,1)=1 (0,2)=2 (0,3)=3 (1,2)=1 (1,3)=2 (2,3)=1 → avg 10/6, doubled pairs same
+        assert!((avg_shortest_path(&g) - 10.0 / 6.0).abs() < 1e-12);
+        assert!(connected(&g));
+    }
+
+    #[test]
+    fn triangle_has_clustering_one() {
+        let g = Graph::from_edges(3, [(0, 1), (1, 2), (0, 2)]);
+        assert!((clustering_coefficient(&g) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn star_has_clustering_zero() {
+        let g = Graph::from_edges(5, [(0, 1), (0, 2), (0, 3), (0, 4)]);
+        assert_eq!(clustering_coefficient(&g), 0.0);
+    }
+
+    #[test]
+    fn disconnected_detected() {
+        let g = Graph::from_edges(4, [(0, 1), (2, 3)]);
+        assert!(!connected(&g));
+    }
+
+    // ---- Sec. 2 claims, verified quantitatively ----
+
+    #[test]
+    fn er_paths_are_logarithmic() {
+        // Θ~(n) edges ⇒ path length ~ log n (paper cites [17, 43])
+        let mut rng = Rng::new(7);
+        let n = 256;
+        let g = erdos_renyi(n, 8.0 / n as f64, &mut rng); // avg degree 8
+        assert!(connected(&g), "ER sample disconnected; reseed");
+        let l = avg_shortest_path(&g);
+        let logn = (n as f64).ln();
+        assert!(l < 1.2 * logn, "avg path {l} not O(log n)={logn}");
+        // ...but ER has (near-)zero clustering
+        assert!(clustering_coefficient(&g) < 0.15);
+    }
+
+    #[test]
+    fn ws_has_high_clustering_and_short_paths() {
+        let mut rng = Rng::new(9);
+        let n = 256;
+        let g = watts_strogatz(n, 8, 0.1, false, &mut rng);
+        let c = clustering_coefficient(&g);
+        assert!(c > 0.3, "WS clustering {c} too low");
+        let l = avg_shortest_path(&g);
+        assert!(l < 8.0, "WS avg path {l} too long for small-world");
+    }
+
+    #[test]
+    fn bigbird_graph_combines_both() {
+        let spec = PatternSpec {
+            variant: AttnVariant::BigBirdItc,
+            nb: 128,
+            global_blocks: 2,
+            window_blocks: 3,
+            random_blocks: 3,
+            seed: 3,
+        };
+        let g = bigbird_graph(&spec);
+        assert!(connected(&g));
+        // global tokens give everyone a ≤2-hop route
+        let l = avg_shortest_path(&g);
+        assert!(l <= 2.5, "bigbird avg path {l}");
+        let c = clustering_coefficient(&g);
+        assert!(c > 0.1, "bigbird clustering {c}");
+    }
+}

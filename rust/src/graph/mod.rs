@@ -1,0 +1,11 @@
+//! Graph-theory substrate backing Sec. 2's motivation: sparse random
+//! graphs are expanders (short paths, spectral gap), small-world graphs
+//! add locality (clustering), and the BigBird pattern combines both.
+
+mod generators;
+mod metrics;
+mod spectral;
+
+pub use generators::{bigbird_graph, erdos_renyi, watts_strogatz, Graph};
+pub use metrics::{avg_shortest_path, clustering_coefficient, connected};
+pub use spectral::spectral_gap;

@@ -1,0 +1,36 @@
+//! # BigBird: Transformers for Longer Sequences — full-system reproduction
+//!
+//! This crate is the Layer-3 (coordinator) of a three-layer Rust + JAX +
+//! Pallas stack reproducing Zaheer et al., *Big Bird: Transformers for
+//! Longer Sequences* (NeurIPS 2020):
+//!
+//! * **Layer 1** — a Pallas block-sparse attention kernel
+//!   (`python/compile/kernels/bigbird.py`) implementing the paper's
+//!   blockified random + window + global attention (App. D).
+//! * **Layer 2** — a JAX BigBird transformer (encoder, heads, seq2seq,
+//!   Adam train step) lowered once to HLO text (`python/compile/aot.py`).
+//! * **Layer 3** — this crate: a long-document serving and training
+//!   coordinator that loads the AOT artifacts through PJRT (`xla` crate)
+//!   and never touches Python on the request path.
+//!
+//! The crate additionally contains every substrate the paper depends on,
+//! built from scratch: a BPE tokenizer, synthetic text / genome corpora,
+//! random-graph theory tooling (Erdős–Rényi, Watts–Strogatz, the BigBird
+//! attention graph), evaluation metrics (ROUGE, F1, AUC, bits-per-char),
+//! and the experiment harnesses that regenerate every table and figure of
+//! the paper's evaluation section (see `experiments`).
+
+pub mod attention;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod graph;
+pub mod metrics;
+pub mod runtime;
+pub mod tokenizer;
+pub mod train;
+pub mod util;
+
+pub use config::ModelConfig;

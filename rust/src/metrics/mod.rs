@@ -1,0 +1,159 @@
+//! Evaluation metrics used by the experiment harnesses: ROUGE (Tab. 4/20),
+//! span F1/EM (Tab. 2/3), ROC-AUC (Tab. 7), bits-per-token (Tab. 5/10),
+//! classification accuracy/F1 (Tab. 15/16, Tab. 6).
+
+mod auc;
+mod qa;
+mod rouge;
+
+pub use auc::roc_auc;
+pub use qa::{decode_span, exact_match, span_f1};
+pub use rouge::{rouge_l, rouge_n, RougeScore};
+
+/// Bits-per-token from a mean negative log-likelihood in nats.
+///
+/// The paper reports bits per character; with a tokenizer averaging
+/// `chars_per_token` characters per token, `bpc = bits_per_token /
+/// chars_per_token` — the harnesses do that division where relevant.
+pub fn bits_per_token(mean_nll_nats: f64) -> f64 {
+    mean_nll_nats / std::f64::consts::LN_2
+}
+
+/// Token-level MLM accuracy: argmax(logits) == label over weighted
+/// positions. `logits` laid out (B, S, V) row-major.
+pub fn mlm_accuracy(logits: &[f32], labels: &[i32], weights: &[f32], vocab: usize) -> f64 {
+    assert_eq!(labels.len(), weights.len());
+    assert_eq!(logits.len(), labels.len() * vocab);
+    let mut hit = 0.0;
+    let mut total = 0.0;
+    for (i, (&lab, &w)) in labels.iter().zip(weights).enumerate() {
+        if w <= 0.0 {
+            continue;
+        }
+        let row = &logits[i * vocab..(i + 1) * vocab];
+        let mut best = 0usize;
+        for (j, &x) in row.iter().enumerate() {
+            if x > row[best] {
+                best = j;
+            }
+        }
+        if best as i32 == lab {
+            hit += f64::from(w);
+        }
+        total += f64::from(w);
+    }
+    if total == 0.0 {
+        0.0
+    } else {
+        hit / total
+    }
+}
+
+/// Mean weighted cross-entropy (nats) from logits — mirrors
+/// `layers.softmax_xent` so Rust-side eval agrees with the training loss.
+pub fn softmax_xent(logits: &[f32], labels: &[i32], weights: &[f32], vocab: usize) -> f64 {
+    assert_eq!(logits.len(), labels.len() * vocab);
+    let mut nll = 0.0;
+    let mut total = 0.0;
+    for (i, (&lab, &w)) in labels.iter().zip(weights).enumerate() {
+        if w <= 0.0 {
+            continue;
+        }
+        let row = &logits[i * vocab..(i + 1) * vocab];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let logz = mx + row.iter().map(|&x| (x - mx).exp()).sum::<f32>().ln();
+        nll += f64::from((logz - row[lab as usize]) * w);
+        total += f64::from(w);
+    }
+    if total == 0.0 {
+        0.0
+    } else {
+        nll / total
+    }
+}
+
+/// Multi-class accuracy from (B, C) logits.
+pub fn cls_accuracy(logits: &[f32], labels: &[i32], classes: usize) -> f64 {
+    assert_eq!(logits.len(), labels.len() * classes);
+    let mut hit = 0;
+    for (i, &lab) in labels.iter().enumerate() {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let mut best = 0usize;
+        for (j, &x) in row.iter().enumerate() {
+            if x > row[best] {
+                best = j;
+            }
+        }
+        if best as i32 == lab {
+            hit += 1;
+        }
+    }
+    hit as f64 / labels.len().max(1) as f64
+}
+
+/// Binary F1 from predictions and gold labels.
+pub fn binary_f1(pred: &[bool], gold: &[bool]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    let mut tp = 0.0;
+    let mut fp = 0.0;
+    let mut fnn = 0.0;
+    for (&p, &g) in pred.iter().zip(gold) {
+        match (p, g) {
+            (true, true) => tp += 1.0,
+            (true, false) => fp += 1.0,
+            (false, true) => fnn += 1.0,
+            _ => {}
+        }
+    }
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let prec = tp / (tp + fp);
+    let rec = tp / (tp + fnn);
+    2.0 * prec * rec / (prec + rec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_per_token_of_uniform() {
+        // uniform over 256 symbols = 8 bits
+        let nll = (256f64).ln();
+        assert!((bits_per_token(nll) - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mlm_accuracy_counts_weighted_hits() {
+        // vocab 3, two positions; logits argmax = [2, 0]; labels [2, 1]
+        let logits = [0.0, 0.1, 0.9, 0.8, 0.1, 0.0];
+        let labels = [2, 1];
+        let w = [1.0, 1.0];
+        assert!((mlm_accuracy(&logits, &labels, &w, 3) - 0.5).abs() < 1e-12);
+        // zero-weighted miss is ignored
+        let w = [1.0, 0.0];
+        assert!((mlm_accuracy(&logits, &labels, &w, 3) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn xent_matches_hand_computation() {
+        let logits = [0.0, 0.0]; // uniform over 2
+        let labels = [0];
+        let w = [1.0];
+        assert!((softmax_xent(&logits, &labels, &w, 2) - (2f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cls_accuracy_basic() {
+        let logits = [1.0, 0.0, 0.0, 1.0];
+        assert!((cls_accuracy(&logits, &[0, 1], 2) - 1.0).abs() < 1e-12);
+        assert!((cls_accuracy(&logits, &[1, 1], 2) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn binary_f1_perfect_and_empty() {
+        assert!((binary_f1(&[true, false], &[true, false]) - 1.0).abs() < 1e-12);
+        assert_eq!(binary_f1(&[false, false], &[true, false]), 0.0);
+    }
+}

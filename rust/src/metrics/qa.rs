@@ -1,0 +1,86 @@
+//! Span-QA metrics: token-level F1 and exact match (Tab. 2/3 style).
+
+/// Exact match: predicted span equals the gold span.
+pub fn exact_match(pred: (usize, usize), gold: (usize, usize)) -> bool {
+    pred == gold
+}
+
+/// Token-overlap F1 between two half-open spans `[start, end)`.
+pub fn span_f1(pred: (usize, usize), gold: (usize, usize)) -> f64 {
+    let (ps, pe) = pred;
+    let (gs, ge) = gold;
+    if ps >= pe || gs >= ge {
+        return 0.0;
+    }
+    let inter = pe.min(ge).saturating_sub(ps.max(gs));
+    if inter == 0 {
+        return 0.0;
+    }
+    let p = inter as f64 / (pe - ps) as f64;
+    let r = inter as f64 / (ge - gs) as f64;
+    2.0 * p * r / (p + r)
+}
+
+/// Greedy span decode from start/end logits: best (s, e) with s ≤ e and
+/// e − s < max_len (the paper bounds span length per dataset, App. E.2).
+pub fn decode_span(start_logits: &[f32], end_logits: &[f32], max_len: usize) -> (usize, usize) {
+    let n = start_logits.len();
+    assert_eq!(n, end_logits.len());
+    let mut best = (0usize, 1usize);
+    let mut best_score = f32::NEG_INFINITY;
+    for s in 0..n {
+        let e_hi = (s + max_len).min(n);
+        for e in s..e_hi {
+            let score = start_logits[s] + end_logits[e];
+            if score > best_score {
+                best_score = score;
+                best = (s, e + 1);
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_match_works() {
+        assert!(exact_match((3, 7), (3, 7)));
+        assert!(!exact_match((3, 7), (3, 8)));
+    }
+
+    #[test]
+    fn f1_full_partial_none() {
+        assert!((span_f1((2, 6), (2, 6)) - 1.0).abs() < 1e-12);
+        assert_eq!(span_f1((0, 2), (5, 8)), 0.0);
+        // pred [0,4), gold [2,6): inter 2, p=.5, r=.5 → f1=.5
+        assert!((span_f1((0, 4), (2, 6)) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_spans_zero() {
+        assert_eq!(span_f1((3, 3), (0, 5)), 0.0);
+        assert_eq!(span_f1((0, 5), (4, 4)), 0.0);
+    }
+
+    #[test]
+    fn decode_span_picks_peak() {
+        let mut s = vec![0.0f32; 10];
+        let mut e = vec![0.0f32; 10];
+        s[4] = 5.0;
+        e[6] = 5.0;
+        assert_eq!(decode_span(&s, &e, 16), (4, 7));
+    }
+
+    #[test]
+    fn decode_span_respects_max_len() {
+        let mut s = vec![0.0f32; 10];
+        let mut e = vec![0.0f32; 10];
+        s[0] = 5.0;
+        e[9] = 5.0;
+        e[2] = 1.0;
+        assert_eq!(decode_span(&s, &e, 4), (0, 3));
+    }
+}

@@ -1,0 +1,109 @@
+//! ROUGE-N and ROUGE-L over token-id sequences (Tab. 4 / Tab. 20).
+
+use std::collections::HashMap;
+
+/// Precision / recall / F1 triple.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RougeScore {
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+}
+
+impl RougeScore {
+    fn from_counts(overlap: f64, pred: f64, gold: f64) -> Self {
+        if overlap == 0.0 || pred == 0.0 || gold == 0.0 {
+            return RougeScore::default();
+        }
+        let p = overlap / pred;
+        let r = overlap / gold;
+        RougeScore { precision: p, recall: r, f1: 2.0 * p * r / (p + r) }
+    }
+}
+
+fn ngram_counts(xs: &[i32], n: usize) -> HashMap<&[i32], usize> {
+    let mut m = HashMap::new();
+    if xs.len() >= n {
+        for w in xs.windows(n) {
+            *m.entry(w).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// ROUGE-N: clipped n-gram overlap.
+pub fn rouge_n(pred: &[i32], gold: &[i32], n: usize) -> RougeScore {
+    let pc = ngram_counts(pred, n);
+    let gc = ngram_counts(gold, n);
+    let overlap: usize = gc
+        .iter()
+        .map(|(g, &c)| c.min(pc.get(g).copied().unwrap_or(0)))
+        .sum();
+    let np = pred.len().saturating_sub(n - 1);
+    let ng = gold.len().saturating_sub(n - 1);
+    RougeScore::from_counts(overlap as f64, np as f64, ng as f64)
+}
+
+/// ROUGE-L: longest common subsequence based F-measure.
+pub fn rouge_l(pred: &[i32], gold: &[i32]) -> RougeScore {
+    let lcs = lcs_len(pred, gold) as f64;
+    RougeScore::from_counts(lcs, pred.len() as f64, gold.len() as f64)
+}
+
+fn lcs_len(a: &[i32], b: &[i32]) -> usize {
+    if a.is_empty() || b.is_empty() {
+        return 0;
+    }
+    let mut prev = vec![0usize; b.len() + 1];
+    let mut cur = vec![0usize; b.len() + 1];
+    for &x in a {
+        for (j, &y) in b.iter().enumerate() {
+            cur[j + 1] = if x == y { prev[j] + 1 } else { cur[j].max(prev[j + 1]) };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_sequences_score_one() {
+        let x = [1, 2, 3, 4, 5];
+        assert!((rouge_n(&x, &x, 1).f1 - 1.0).abs() < 1e-12);
+        assert!((rouge_n(&x, &x, 2).f1 - 1.0).abs() < 1e-12);
+        assert!((rouge_l(&x, &x).f1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_sequences_score_zero() {
+        assert_eq!(rouge_n(&[1, 2], &[3, 4], 1).f1, 0.0);
+        assert_eq!(rouge_l(&[1, 2], &[3, 4]).f1, 0.0);
+    }
+
+    #[test]
+    fn rouge1_partial_overlap() {
+        // pred {1,2,3}, gold {2,3,4}: overlap 2, p=2/3, r=2/3
+        let s = rouge_n(&[1, 2, 3], &[2, 3, 4], 1);
+        assert!((s.precision - 2.0 / 3.0).abs() < 1e-12);
+        assert!((s.f1 - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rouge2_clipping() {
+        // repeated bigram in pred must be clipped by gold count
+        let s = rouge_n(&[1, 2, 1, 2, 1, 2], &[1, 2, 9, 9], 2);
+        // gold has one (1,2); pred has three → overlap 1, p=1/5, r=1/3
+        assert!((s.precision - 0.2).abs() < 1e-12);
+        assert!((s.recall - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lcs_respects_order() {
+        assert_eq!(lcs_len(&[1, 3, 2], &[1, 2, 3]), 2);
+        assert_eq!(lcs_len(&[1, 2, 3, 4], &[2, 4]), 2);
+        assert_eq!(lcs_len(&[], &[1]), 0);
+    }
+}

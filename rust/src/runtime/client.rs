@@ -1,0 +1,71 @@
+//! The PJRT runtime owner: one CPU client + artifact compilation.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::executable::ArtifactExecutable;
+use super::manifest::{Manifest, ManifestEntry};
+
+/// Owns the PJRT client. Not `Send` — construct on the engine thread.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    /// Backend platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one manifest entry's HLO text into an executable.
+    ///
+    /// HLO **text** is the interchange format: jax ≥ 0.5 serialized protos
+    /// use 64-bit instruction ids which xla_extension 0.5.1 rejects; the
+    /// text parser reassigns ids and round-trips cleanly.
+    pub fn compile_entry(
+        &self,
+        manifest: &Manifest,
+        entry: &ManifestEntry,
+    ) -> Result<ArtifactExecutable> {
+        let path = manifest.hlo_path(entry);
+        self.compile_hlo_file(entry, &path)
+    }
+
+    /// Compile an HLO text file with an explicit entry signature.
+    pub fn compile_hlo_file(
+        &self,
+        entry: &ManifestEntry,
+        path: &Path,
+    ) -> Result<ArtifactExecutable> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {}", entry.name))?;
+        let dt = t0.elapsed();
+        eprintln!(
+            "[runtime] compiled {} ({:.1} KiB HLO) in {:.2}s",
+            entry.name,
+            std::fs::metadata(path).map(|m| m.len() as f64 / 1024.0).unwrap_or(0.0),
+            dt.as_secs_f64()
+        );
+        Ok(ArtifactExecutable::new(entry, exe))
+    }
+
+    /// Compile by artifact name.
+    pub fn compile_named(&self, manifest: &Manifest, name: &str) -> Result<ArtifactExecutable> {
+        let entry = manifest.get(name)?;
+        self.compile_entry(manifest, entry)
+    }
+}

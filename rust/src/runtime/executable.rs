@@ -1,0 +1,182 @@
+//! Typed wrapper around a compiled PJRT executable.
+
+use anyhow::{bail, Context, Result};
+
+use super::literal_util::HostTensor;
+use super::manifest::ManifestEntry;
+
+/// Shape+dtype of one program input or output, e.g. `tokens:i32[8,512]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Logical name from the manifest (documentation only; PJRT inputs
+    /// are positional).
+    pub name: String,
+    /// "f32" or "i32".
+    pub dtype: String,
+    /// Dimensions; empty for scalars.
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Parse `name:dtype[d0,d1,...]`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let (name, rest) = s.split_once(':').context("tensor spec needs name:")?;
+        let (dtype, dims_s) = match rest.split_once('[') {
+            Some((d, t)) => (d, t.trim_end_matches(']')),
+            None => (rest, ""),
+        };
+        if dtype != "f32" && dtype != "i32" {
+            bail!("unsupported dtype {dtype:?} in spec {s:?}");
+        }
+        let dims = if dims_s.is_empty() {
+            vec![]
+        } else {
+            dims_s
+                .split(',')
+                .map(|d| d.trim().parse::<usize>().with_context(|| format!("bad dim in {s:?}")))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSpec { name: name.to_string(), dtype: dtype.to_string(), dims })
+    }
+
+    /// Number of elements.
+    pub fn volume(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Does a host tensor match this spec?
+    pub fn matches(&self, t: &HostTensor) -> bool {
+        t.dtype() == self.dtype && t.shape() == self.dims.as_slice()
+    }
+}
+
+/// Ordered input/output signature of an artifact.
+#[derive(Clone, Debug, Default)]
+pub struct IoSpec {
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// A compiled artifact: PJRT executable + manifest signature.
+///
+/// Not `Send` (wraps PJRT pointers) — lives on the engine thread.
+pub struct ArtifactExecutable {
+    /// Artifact name from the manifest.
+    pub name: String,
+    /// Typed I/O signature.
+    pub io: IoSpec,
+    /// Metadata copied from the manifest entry.
+    pub meta: std::collections::BTreeMap<String, String>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl ArtifactExecutable {
+    pub(crate) fn new(entry: &ManifestEntry, exe: xla::PjRtLoadedExecutable) -> Self {
+        ArtifactExecutable {
+            name: entry.name.clone(),
+            io: entry.io.clone(),
+            meta: entry.meta.clone(),
+            exe,
+        }
+    }
+
+    /// Execute with shape-checked host tensors; returns host outputs.
+    ///
+    /// All jax programs are lowered with `return_tuple=True`, so the
+    /// single device output is a tuple literal which we decompose into
+    /// one `HostTensor` per declared output.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.io.inputs.len() {
+            bail!(
+                "{}: got {} inputs, signature has {}",
+                self.name,
+                inputs.len(),
+                self.io.inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&self.io.inputs).enumerate() {
+            if !spec.matches(t) {
+                bail!(
+                    "{}: input #{i} ({}) expects {}[{:?}], got {}[{:?}]",
+                    self.name,
+                    spec.name,
+                    spec.dtype,
+                    spec.dims,
+                    t.dtype(),
+                    t.shape()
+                );
+            }
+        }
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.io.outputs.len() {
+            bail!(
+                "{}: program returned {} outputs, manifest declares {}",
+                self.name,
+                parts.len(),
+                self.io.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, (lit, spec)) in parts.iter().zip(&self.io.outputs).enumerate() {
+            let t = HostTensor::from_literal(lit)
+                .with_context(|| format!("{}: output #{i} ({})", self.name, spec.name))?;
+            if !spec.matches(&t) {
+                bail!(
+                    "{}: output #{i} ({}) expected {}[{:?}], got {}[{:?}]",
+                    self.name,
+                    spec.name,
+                    spec.dtype,
+                    spec.dims,
+                    t.dtype(),
+                    t.shape()
+                );
+            }
+            out.push(t);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_parse_roundtrip() {
+        let s = TensorSpec::parse("tokens:i32[8,512]").unwrap();
+        assert_eq!(s.name, "tokens");
+        assert_eq!(s.dtype, "i32");
+        assert_eq!(s.dims, vec![8, 512]);
+        assert_eq!(s.volume(), 4096);
+    }
+
+    #[test]
+    fn tensor_spec_scalar() {
+        let s = TensorSpec::parse("lr:f32").unwrap();
+        assert!(s.dims.is_empty());
+        assert_eq!(s.volume(), 1);
+    }
+
+    #[test]
+    fn tensor_spec_rejects_bad_dtype() {
+        assert!(TensorSpec::parse("x:f64[2]").is_err());
+        assert!(TensorSpec::parse("no_colon").is_err());
+    }
+
+    #[test]
+    fn spec_matches_host_tensor() {
+        let s = TensorSpec::parse("x:f32[2,3]").unwrap();
+        let good = HostTensor::f32(&[2, 3], vec![0.0; 6]).unwrap();
+        let wrong_shape = HostTensor::f32(&[3, 2], vec![0.0; 6]).unwrap();
+        let wrong_dtype = HostTensor::i32(&[2, 3], vec![0; 6]).unwrap();
+        assert!(s.matches(&good));
+        assert!(!s.matches(&wrong_shape));
+        assert!(!s.matches(&wrong_dtype));
+    }
+}

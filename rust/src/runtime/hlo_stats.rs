@@ -1,0 +1,149 @@
+//! Lightweight HLO-text analysis for the Layer-2 performance pass:
+//! op histograms, fusion counts, and a FLOP estimate from `dot` shapes.
+//!
+//! The 0.5.1 runtime exposes no cost-analysis API over the C boundary,
+//! so we parse the HLO text we already ship. Good enough to find
+//! redundant recomputation and fusion regressions between exports.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+/// Parsed per-module statistics.
+#[derive(Clone, Debug, Default)]
+pub struct HloStats {
+    /// op name → count across all computations in the module
+    pub ops: BTreeMap<String, usize>,
+    /// estimated FLOPs from dot ops (2·M·N·K per dot)
+    pub dot_flops: u64,
+    /// total instruction count
+    pub instructions: usize,
+    /// bytes of constant data embedded in the module (4 B/elem estimate)
+    pub constant_bytes: u64,
+}
+
+impl HloStats {
+    /// Top-k ops by count.
+    pub fn top_ops(&self, k: usize) -> Vec<(String, usize)> {
+        let mut v: Vec<(String, usize)> = self
+            .ops
+            .iter()
+            .map(|(a, b)| (a.clone(), *b))
+            .collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1));
+        v.truncate(k);
+        v
+    }
+}
+
+/// Shape volume of an HLO type string like `f32[4,512,64]`.
+fn shape_volume(ty: &str) -> Option<u64> {
+    let open = ty.find('[')?;
+    let close = ty.find(']')?;
+    let dims = &ty[open + 1..close];
+    if dims.is_empty() {
+        return Some(1);
+    }
+    let mut vol = 1u64;
+    for d in dims.split(',') {
+        vol = vol.checked_mul(d.trim().parse().ok()?)?;
+    }
+    Some(vol)
+}
+
+/// Analyse one HLO text module.
+pub fn analyze(text: &str) -> HloStats {
+    let mut st = HloStats::default();
+    for line in text.lines() {
+        let line = line.trim_start();
+        // instruction lines look like: `%name = TYPE opcode(...)` or
+        // `name.N = TYPE opcode(...)`
+        let Some(eq) = line.find(" = ") else { continue };
+        let rest = &line[eq + 3..];
+        // rest = "f32[4,512]{1,0} add(...)" — take type token then opcode
+        let mut parts = rest.splitn(2, ' ');
+        let ty = parts.next().unwrap_or("");
+        let Some(tail) = parts.next() else { continue };
+        let opcode: String = tail.chars().take_while(|c| c.is_alphanumeric() || *c == '-').collect();
+        if opcode.is_empty() {
+            continue;
+        }
+        *st.ops.entry(opcode.clone()).or_insert(0) += 1;
+        st.instructions += 1;
+        match opcode.as_str() {
+            "dot" => {
+                // output volume × K × 2; K is unknown from the line alone,
+                // approximate with output volume × 2 × contracted dim by
+                // parsing the first operand's type if present
+                if let Some(vol) = shape_volume(ty) {
+                    // find first operand type inside parens for K
+                    let k = tail
+                        .find("f32[")
+                        .and_then(|i| shape_volume(&tail[i + 3..]))
+                        .unwrap_or(1);
+                    // upper-bound-ish estimate: 2 * out_vol * (operand_vol / out_vol)
+                    let kdim = (k / vol.max(1)).max(1);
+                    st.dot_flops += 2 * vol * kdim;
+                }
+            }
+            "constant" => {
+                if let Some(vol) = shape_volume(ty) {
+                    st.constant_bytes += vol * 4;
+                }
+            }
+            _ => {}
+        }
+    }
+    st
+}
+
+/// Analyse an HLO file on disk.
+pub fn analyze_file(path: &std::path::Path) -> Result<HloStats> {
+    Ok(analyze(&std::fs::read_to_string(path)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+ENTRY %main (p0: f32[4,8]) -> f32[4,8] {
+  %p0 = f32[4,8]{1,0} parameter(0)
+  %c = f32[8,8]{1,0} constant({ ... })
+  %d = f32[4,8]{1,0} dot(%p0, %c), lhs_contracting_dims={1}, rhs_contracting_dims={0}, f32[4,8]
+  %t = f32[4,8]{1,0} tanh(%d)
+  ROOT %a = f32[4,8]{1,0} add(%d, %t)
+}
+";
+
+    #[test]
+    fn counts_ops() {
+        let st = analyze(SAMPLE);
+        assert_eq!(st.ops.get("dot"), Some(&1));
+        assert_eq!(st.ops.get("tanh"), Some(&1));
+        assert_eq!(st.ops.get("add"), Some(&1));
+        assert_eq!(st.ops.get("parameter"), Some(&1));
+        assert!(st.instructions >= 5);
+    }
+
+    #[test]
+    fn shape_volume_parses() {
+        assert_eq!(shape_volume("f32[4,512,64]"), Some(4 * 512 * 64));
+        assert_eq!(shape_volume("f32[]"), Some(1));
+        assert_eq!(shape_volume("f32"), None);
+    }
+
+    #[test]
+    fn constant_bytes_counted() {
+        let st = analyze(SAMPLE);
+        assert_eq!(st.constant_bytes, 8 * 8 * 4);
+    }
+
+    #[test]
+    fn top_ops_sorted() {
+        let st = analyze(SAMPLE);
+        let top = st.top_ops(2);
+        assert_eq!(top.len(), 2);
+        assert!(top[0].1 >= top[1].1);
+    }
+}

@@ -1,0 +1,166 @@
+//! Host-side tensors and conversions to/from `xla::Literal`.
+//!
+//! `xla::Literal` wraps a raw C pointer and is **not `Send`**, so it can
+//! never cross a thread boundary. The coordinator therefore moves
+//! [`HostTensor`]s (plain `Vec`-backed arrays) between threads and only
+//! materialises `Literal`s on the engine thread that owns the PJRT client.
+
+use anyhow::{bail, Context, Result};
+
+/// A plain host-memory tensor: row-major data + shape. `Send + Sync`,
+/// cheap to move through channels, convertible to/from `xla::Literal`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    /// New f32 tensor; checks that `data.len()` matches the shape volume.
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let vol: usize = shape.iter().product();
+        if vol != data.len() {
+            bail!("shape {shape:?} (volume {vol}) != data len {}", data.len());
+        }
+        Ok(HostTensor::F32 { shape: shape.to_vec(), data })
+    }
+
+    /// New i32 tensor; checks that `data.len()` matches the shape volume.
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Result<Self> {
+        let vol: usize = shape.iter().product();
+        if vol != data.len() {
+            bail!("shape {shape:?} (volume {vol}) != data len {}", data.len());
+        }
+        Ok(HostTensor::I32 { shape: shape.to_vec(), data })
+    }
+
+    /// Tensor filled with zeros.
+    pub fn zeros_f32(shape: &[usize]) -> Self {
+        let vol: usize = shape.iter().product();
+        HostTensor::F32 { shape: shape.to_vec(), data: vec![0.0; vol] }
+    }
+
+    /// Shape accessor.
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } => shape,
+            HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    /// True if the tensor holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// dtype name as used in the artifact manifest ("f32" / "i32").
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            HostTensor::F32 { .. } => "f32",
+            HostTensor::I32 { .. } => "i32",
+        }
+    }
+
+    /// Borrow f32 data (error if i32).
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::I32 { .. } => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    /// Borrow i32 data (error if f32).
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            HostTensor::F32 { .. } => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Convert to an `xla::Literal` (engine-thread only).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            HostTensor::F32 { shape, data } => literal_f32(shape, data),
+            HostTensor::I32 { shape, data } => literal_i32(shape, data),
+        }
+    }
+
+    /// Convert from an `xla::Literal` (engine-thread only).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            xla::ElementType::S32 => Ok(HostTensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+/// Build an f32 `Literal` of the given shape from row-major data.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let lit = xla::Literal::vec1(data);
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Build an i32 `Literal` of the given shape from row-major data.
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let lit = xla::Literal::vec1(data);
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Extract f32 data from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract i32 data from a literal.
+pub fn to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checks() {
+        assert!(HostTensor::f32(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::f32(&[2, 3], vec![0.0; 5]).is_err());
+        assert!(HostTensor::i32(&[4], vec![1, 2, 3, 4]).is_ok());
+    }
+
+    #[test]
+    fn zeros_has_right_volume() {
+        let t = HostTensor::zeros_f32(&[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        assert_eq!(t.shape(), &[2, 3, 4]);
+        assert_eq!(t.dtype(), "f32");
+    }
+
+    #[test]
+    fn roundtrip_f32_literal() {
+        let t = HostTensor::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn roundtrip_i32_literal() {
+        let t = HostTensor::i32(&[3], vec![7, -1, 0]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+}

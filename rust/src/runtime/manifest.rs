@@ -1,0 +1,223 @@
+//! Artifact manifest: the contract between the Python compile path and the
+//! Rust runtime.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.txt` alongside the
+//! HLO text files. The format is deliberately trivial (no serde/JSON in
+//! this offline environment) — a sequence of `[artifact]` sections of
+//! `key=value` lines:
+//!
+//! ```text
+//! [artifact]
+//! name=mlm_fwd_s512
+//! file=mlm_fwd_s512.hlo.txt
+//! input=tokens:i32[8,512]
+//! input=params:f32[1234]
+//! output=logits:f32[8,512,1024]
+//! meta=seq_len:512
+//! meta=attn:bigbird
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::executable::{IoSpec, TensorSpec};
+
+/// One artifact entry: a compiled-program name, its HLO file, and its
+/// typed I/O signature.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    /// Unique artifact name, e.g. `mlm_train_step_s512_bigbird`.
+    pub name: String,
+    /// HLO text file, relative to the manifest's directory.
+    pub file: String,
+    /// Ordered input/output tensor specs.
+    pub io: IoSpec,
+    /// Free-form metadata (seq_len, variant, param counts, ...).
+    pub meta: BTreeMap<String, String>,
+}
+
+impl ManifestEntry {
+    /// Integer metadata accessor.
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.parse().ok())
+    }
+}
+
+/// The parsed manifest: every artifact the Python compile path produced.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// Directory the manifest was loaded from (HLO files live here).
+    pub dir: PathBuf,
+    entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let mut m = Self::parse(&text)?;
+        m.dir = dir;
+        Ok(m)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries: Vec<ManifestEntry> = Vec::new();
+        let mut cur: Option<ManifestEntry> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if line == "[artifact]" {
+                if let Some(e) = cur.take() {
+                    entries.push(Self::validated(e, lineno)?);
+                }
+                cur = Some(ManifestEntry {
+                    name: String::new(),
+                    file: String::new(),
+                    io: IoSpec::default(),
+                    meta: BTreeMap::new(),
+                });
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                bail!("manifest line {} is not key=value: {raw:?}", lineno + 1);
+            };
+            let e = cur
+                .as_mut()
+                .with_context(|| format!("line {}: key before any [artifact]", lineno + 1))?;
+            match key {
+                "name" => e.name = value.to_string(),
+                "file" => e.file = value.to_string(),
+                "input" => e.io.inputs.push(TensorSpec::parse(value)?),
+                "output" => e.io.outputs.push(TensorSpec::parse(value)?),
+                "meta" => {
+                    let Some((k, v)) = value.split_once(':') else {
+                        bail!("line {}: meta must be key:value", lineno + 1);
+                    };
+                    e.meta.insert(k.to_string(), v.to_string());
+                }
+                other => bail!("line {}: unknown manifest key {other:?}", lineno + 1),
+            }
+        }
+        if let Some(e) = cur.take() {
+            entries.push(Self::validated(e, 0)?);
+        }
+        Ok(Manifest { dir: PathBuf::new(), entries })
+    }
+
+    fn validated(e: ManifestEntry, lineno: usize) -> Result<ManifestEntry> {
+        if e.name.is_empty() {
+            bail!("artifact ending at line {lineno} has no name");
+        }
+        if e.file.is_empty() {
+            bail!("artifact {:?} has no file", e.name);
+        }
+        if e.io.outputs.is_empty() {
+            bail!("artifact {:?} declares no outputs", e.name);
+        }
+        Ok(e)
+    }
+
+    /// All entries in declaration order.
+    pub fn entries(&self) -> &[ManifestEntry] {
+        &self.entries
+    }
+
+    /// Look up an artifact by exact name.
+    pub fn get(&self, name: &str) -> Result<&ManifestEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| {
+                let names: Vec<&str> = self.entries.iter().map(|e| e.name.as_str()).collect();
+                format!("artifact {name:?} not in manifest (have: {names:?})")
+            })
+    }
+
+    /// Entries whose metadata matches all given `(key, value)` pairs.
+    pub fn select(&self, filters: &[(&str, &str)]) -> Vec<&ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(|e| {
+                filters
+                    .iter()
+                    .all(|(k, v)| e.meta.get(*k).map(|x| x == v).unwrap_or(false))
+            })
+            .collect()
+    }
+
+    /// Absolute path to an entry's HLO file.
+    pub fn hlo_path(&self, e: &ManifestEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+[artifact]
+name=attn_s512
+file=attn_s512.hlo.txt
+input=x:f32[1,512,128]
+output=y:f32[1,512,128]
+meta=seq_len:512
+meta=attn:bigbird
+
+[artifact]
+name=attn_s1024
+file=attn_s1024.hlo.txt
+input=x:f32[1,1024,128]
+output=y:f32[1,1024,128]
+meta=seq_len:1024
+meta=attn:dense
+";
+
+    #[test]
+    fn parses_two_entries() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries().len(), 2);
+        let e = m.get("attn_s512").unwrap();
+        assert_eq!(e.file, "attn_s512.hlo.txt");
+        assert_eq!(e.io.inputs.len(), 1);
+        assert_eq!(e.io.inputs[0].dims, vec![1, 512, 128]);
+        assert_eq!(e.meta_usize("seq_len"), Some(512));
+    }
+
+    #[test]
+    fn select_filters_by_meta() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let hits = m.select(&[("attn", "bigbird")]);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].name, "attn_s512");
+        assert!(m.select(&[("attn", "bigbird"), ("seq_len", "1024")]).is_empty());
+    }
+
+    #[test]
+    fn missing_name_is_error() {
+        let bad = "[artifact]\nfile=x.hlo\noutput=y:f32[1]\n";
+        assert!(Manifest::parse(bad).is_err());
+    }
+
+    #[test]
+    fn unknown_key_is_error() {
+        let bad = "[artifact]\nname=a\nfile=x\nwibble=1\noutput=y:f32[1]\n";
+        assert!(Manifest::parse(bad).is_err());
+    }
+
+    #[test]
+    fn get_unknown_artifact_errors_with_names() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let err = m.get("nope").unwrap_err().to_string();
+        assert!(err.contains("attn_s512"), "{err}");
+    }
+}

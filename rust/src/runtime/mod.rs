@@ -1,0 +1,21 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! Rust hot path.
+//!
+//! The Python side (`python/compile/aot.py`) lowers each model variant
+//! once to **HLO text** (not a serialized `HloModuleProto` — jax ≥ 0.5
+//! emits 64-bit instruction ids which xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids). This module compiles those artifacts on a
+//! shared [`PjRtClient`] and exposes typed, shape-checked entry points.
+
+mod client;
+mod executable;
+pub mod hlo_stats;
+mod literal_util;
+mod manifest;
+mod pool;
+
+pub use client::Runtime;
+pub use executable::{ArtifactExecutable, IoSpec, TensorSpec};
+pub use literal_util::{literal_f32, literal_i32, to_vec_f32, to_vec_i32, HostTensor};
+pub use manifest::{Manifest, ManifestEntry};
+pub use pool::ExecutablePool;

@@ -1,0 +1,79 @@
+//! Lazily-compiled executable pool.
+//!
+//! The serving coordinator buckets requests by padded sequence length and
+//! batch size; each bucket maps to one AOT artifact. The pool compiles an
+//! artifact the first time its bucket is hit and caches it for the rest of
+//! the process lifetime (one compiled executable per model variant, as the
+//! architecture prescribes).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::client::Runtime;
+use super::executable::ArtifactExecutable;
+use super::manifest::Manifest;
+
+/// Pool keyed by artifact name. Engine-thread only (interior mutability
+/// via `RefCell`, `Rc` handles shared within the thread).
+pub struct ExecutablePool {
+    runtime: Runtime,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<ArtifactExecutable>>>,
+    /// Number of cache misses (compiles) — exposed for metrics.
+    compiles: RefCell<usize>,
+}
+
+impl ExecutablePool {
+    /// New pool over a loaded manifest.
+    pub fn new(runtime: Runtime, manifest: Manifest) -> Self {
+        ExecutablePool {
+            runtime,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compiles: RefCell::new(0),
+        }
+    }
+
+    /// The manifest backing this pool.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Underlying runtime.
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// Get (compiling if needed) the executable for `name`.
+    pub fn get(&self, name: &str) -> Result<Rc<ArtifactExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let exe = Rc::new(self.runtime.compile_named(&self.manifest, name)?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        *self.compiles.borrow_mut() += 1;
+        Ok(exe)
+    }
+
+    /// Eagerly compile every artifact whose metadata matches the filters.
+    pub fn warmup(&self, filters: &[(&str, &str)]) -> Result<usize> {
+        let names: Vec<String> = self
+            .manifest
+            .select(filters)
+            .into_iter()
+            .map(|e| e.name.clone())
+            .collect();
+        for n in &names {
+            self.get(n)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Number of artifacts compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        *self.compiles.borrow()
+    }
+}

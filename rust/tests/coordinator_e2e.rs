@@ -1,0 +1,81 @@
+//! Coordinator end-to-end: real engine thread + router + batcher serving
+//! fill-mask over the AOT artifacts.
+
+use std::time::Duration;
+
+use bigbird::coordinator::{BatcherConfig, Server, ServerConfig};
+use bigbird::tokenizer::special;
+use bigbird::util::Rng;
+
+fn artifacts() -> String {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .to_string_lossy()
+        .to_string()
+}
+
+#[test]
+fn serve_fill_mask_end_to_end() {
+    let mut cfg = ServerConfig::mlm_default(&artifacts());
+    cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(5) };
+    let server = Server::start(cfg).expect("server start (needs `make artifacts`)");
+
+    let mut rng = Rng::new(3);
+    // submit a mixed-length burst
+    let mut rxs = Vec::new();
+    let mut mask_counts = Vec::new();
+    for i in 0..12 {
+        let len = [100usize, 300, 700, 1500][i % 4];
+        let mut tokens: Vec<i32> =
+            (0..len).map(|_| 6 + rng.below(500) as i32).collect();
+        let n_masks = 3;
+        for _ in 0..n_masks {
+            let p = rng.below(len);
+            tokens[p] = special::MASK;
+        }
+        mask_counts.push(tokens.iter().filter(|&&t| t == special::MASK).count());
+        rxs.push(server.submit(tokens).unwrap());
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(600))
+            .expect("response within deadline");
+        assert_eq!(
+            resp.predictions.len(),
+            mask_counts[i],
+            "one prediction per mask position"
+        );
+        for &(pos, tok) in &resp.predictions {
+            assert!(pos < 2048);
+            assert!((0..512).contains(&tok), "prediction {tok} out of vocab");
+        }
+        assert!(resp.latency_ms > 0.0);
+    }
+    let m = server.metrics();
+    assert_eq!(m.requests, 12);
+    assert!(m.batches >= 1);
+    assert!(m.errors == 0, "{m:?}");
+    assert!(m.fill_ratio > 0.0 && m.fill_ratio <= 1.0);
+    // long requests fit in the 2048 bucket without truncation
+    assert_eq!(m.truncated, 0);
+    server.shutdown();
+}
+
+#[test]
+fn oversized_requests_are_truncated_not_dropped() {
+    let mut cfg = ServerConfig::mlm_default(&artifacts());
+    cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(2) };
+    let server = Server::start(cfg).unwrap();
+    let mut tokens: Vec<i32> = vec![7; 4000];
+    tokens[10] = special::MASK;
+    tokens[3999] = special::MASK; // beyond every bucket
+    let rx = server.submit(tokens).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(600)).unwrap();
+    assert!(resp.truncated);
+    // only the in-window mask produced a prediction
+    assert_eq!(resp.predictions.len(), 1);
+    assert_eq!(resp.predictions[0].0, 10);
+    let m = server.metrics();
+    assert_eq!(m.truncated, 1);
+    server.shutdown();
+}

@@ -1,0 +1,220 @@
+//! Property tests over the data substrates: every generator must produce
+//! structurally-valid, deterministic, learnable-by-construction examples.
+
+use bigbird::data::{
+    classify::EvidenceSpread, mask_tokens, ClassifyGen, CorpusConfig, CorpusGen, DnaGen,
+    MlmMasking, QaGen, SummarizeGen, TokenBatch,
+};
+use bigbird::tokenizer::special;
+use bigbird::util::proptest::check_res;
+use bigbird::util::Rng;
+
+#[test]
+fn prop_qa_span_points_at_answer_definition() {
+    check_res(
+        11,
+        40,
+        |rng| (rng.next_u64(), rng.range(600, 1200)),
+        |&(seed, doc_len)| {
+            let mut g = QaGen::new(512, seed);
+            let ex = g.example(doc_len + 64, doc_len);
+            let (s, e) = ex.span;
+            if e > ex.tokens.len() {
+                return Err(format!("span {s}..{e} beyond {}", ex.tokens.len()));
+            }
+            if ex.tokens[s] < 256 {
+                return Err(format!("span start {} is not an entity id", ex.tokens[s]));
+            }
+            // the question's head entity appears exactly once in evidence
+            let e_q = ex.tokens[1];
+            let count = ex.tokens[3..].iter().filter(|&&t| t == e_q).count();
+            if count != 1 {
+                return Err(format!("head entity appears {count} times"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_classify_signatures_match_label_only() {
+    check_res(
+        13,
+        40,
+        |rng| (rng.next_u64(), rng.range(600, 1100)),
+        |&(seed, doc_len)| {
+            let mut g = ClassifyGen::new(512, 4, EvidenceSpread::Uniform, seed);
+            let ex = g.example(doc_len);
+            // signature tokens of OTHER classes must be absent
+            for c in 0..4 {
+                for k in 0..4 {
+                    let sig = special::FIRST_FREE + 8 + (c * 4 + k) as i32;
+                    let present = ex.tokens.contains(&sig);
+                    if c == ex.label as usize {
+                        continue; // own class may or may not use slot k
+                    }
+                    if present {
+                        return Err(format!(
+                            "class-{c} signature present in class-{} doc",
+                            ex.label
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_summary_tokens_all_sourced() {
+    check_res(
+        17,
+        30,
+        |rng| (rng.next_u64(), rng.range(8, 30)),
+        |&(seed, n_sent)| {
+            let mut g = SummarizeGen::new(512, seed);
+            let ex = g.example(n_sent.max(6));
+            if ex.summary.first() != Some(&special::BOS)
+                || ex.summary.last() != Some(&special::EOS)
+            {
+                return Err("summary not BOS..EOS delimited".into());
+            }
+            for &t in &ex.summary[1..ex.summary.len() - 1] {
+                if !ex.src.contains(&t) {
+                    return Err(format!("summary token {t} not in source"));
+                }
+            }
+            // sentence boundaries tile the source
+            let mut prev_end = 0;
+            for &(s, e) in &ex.sentences {
+                if s != prev_end || e <= s {
+                    return Err(format!("bad sentence bounds ({s},{e})"));
+                }
+                prev_end = e;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mlm_masking_preserves_labels_and_respects_validity() {
+    check_res(
+        19,
+        50,
+        |rng| {
+            let n = rng.range(64, 512);
+            let tokens: Vec<i32> =
+                (0..n).map(|_| 6 + rng.below(500) as i32).collect();
+            let mut valid = vec![1f32; n];
+            let cut = rng.below(n);
+            for v in valid[cut..].iter_mut() {
+                *v = 0.0;
+            }
+            (tokens, valid, rng.next_u64())
+        },
+        |(tokens, valid, seed)| {
+            let mut rng = Rng::new(*seed);
+            let b = mask_tokens(tokens, valid, &MlmMasking::default(), &mut rng);
+            if &b.labels != tokens {
+                return Err("labels must be the original tokens".into());
+            }
+            for i in 0..tokens.len() {
+                if valid[i] == 0.0 {
+                    if b.weights[i] != 0.0 {
+                        return Err(format!("padded position {i} got masked"));
+                    }
+                    if b.tokens[i] != tokens[i] {
+                        return Err(format!("padded position {i} modified"));
+                    }
+                }
+                if b.weights[i] == 0.0 && b.tokens[i] != tokens[i] {
+                    return Err(format!("unweighted position {i} modified"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_token_batch_never_loses_valid_tokens() {
+    check_res(
+        23,
+        50,
+        |rng| {
+            let b = rng.range(1, 6);
+            let s = rng.range(8, 128);
+            let seqs: Vec<Vec<i32>> = (0..b)
+                .map(|_| (0..rng.range(1, 200)).map(|_| 6 + rng.below(100) as i32).collect())
+                .collect();
+            (seqs, b, s)
+        },
+        |(seqs, b, s)| {
+            let tb = TokenBatch::from_seqs(seqs, *b, *s);
+            for (i, seq) in seqs.iter().enumerate() {
+                let n = seq.len().min(*s);
+                if tb.tokens[i * s..i * s + n] != seq[..n] {
+                    return Err(format!("row {i} content corrupted"));
+                }
+                let valid: f32 = tb.kv_valid[i * s..(i + 1) * s].iter().sum();
+                if valid as usize != n {
+                    return Err(format!("row {i}: {valid} valid, want {n}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_corpus_documents_deterministic_and_in_vocab() {
+    check_res(
+        29,
+        30,
+        |rng| (rng.next_u64(), rng.range(100, 2000)),
+        |&(seed, len)| {
+            let cfg = CorpusConfig::default();
+            let mut a = CorpusGen::new(cfg.clone(), seed);
+            let mut b = CorpusGen::new(cfg.clone(), seed);
+            let da = a.document(len);
+            if da != b.document(len) {
+                return Err("non-deterministic".into());
+            }
+            if da.len() != len {
+                return Err(format!("len {} != {len}", da.len()));
+            }
+            for &t in &da {
+                if t < special::FIRST_FREE || t as usize >= cfg.vocab {
+                    return Err(format!("token {t} out of range"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_promoter_negatives_conserve_partial_structure() {
+    check_res(
+        31,
+        20,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut g = DnaGen::new(seed);
+            let pos = g.promoter_positive(1000);
+            let neg = g.promoter_negative_from(&pos);
+            if neg.len() != pos.len() {
+                return Err("length changed".into());
+            }
+            let same = pos.chars().zip(neg.chars()).filter(|(a, b)| a == b).count();
+            let frac = same as f64 / pos.len() as f64;
+            // 8/20 conserved + chance agreement ≈ [0.45, 0.75]
+            if !(0.40..=0.80).contains(&frac) {
+                return Err(format!("conservation {frac}"));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,155 @@
+//! Contract between the Python compile path and the Rust side: the
+//! manifest exists, covers every experiment's models, and its metadata is
+//! consistent with the Rust config conventions.
+
+use bigbird::config::AttnVariant;
+use bigbird::runtime::Manifest;
+
+fn manifest() -> Manifest {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Manifest::load(&dir).expect("artifacts/manifest.txt missing — run `make artifacts`")
+}
+
+#[test]
+fn manifest_loads_and_is_large() {
+    let m = manifest();
+    assert!(
+        m.entries().len() >= 90,
+        "expected the full artifact set, got {}",
+        m.entries().len()
+    );
+}
+
+#[test]
+fn every_entry_has_valid_io_and_file() {
+    let m = manifest();
+    for e in m.entries() {
+        assert!(!e.io.outputs.is_empty(), "{} has no outputs", e.name);
+        let path = m.hlo_path(e);
+        assert!(path.exists(), "missing HLO file {}", path.display());
+        for spec in e.io.inputs.iter().chain(&e.io.outputs) {
+            assert!(spec.dtype == "f32" || spec.dtype == "i32");
+        }
+    }
+}
+
+#[test]
+fn attn_variants_parse_into_rust_enum() {
+    let m = manifest();
+    for e in m.entries() {
+        if let Some(v) = e.meta.get("attn") {
+            AttnVariant::parse(v).unwrap_or_else(|_| panic!("{}: bad variant {v}", e.name));
+        }
+    }
+}
+
+#[test]
+fn train_init_fwd_triples_are_complete() {
+    let m = manifest();
+    for e in m.entries() {
+        if let Some(stripped) = e.name.strip_prefix("train_") {
+            assert!(
+                m.get(&format!("init_{stripped}")).is_ok(),
+                "train artifact {} has no matching init",
+                e.name
+            );
+        }
+    }
+}
+
+#[test]
+fn train_artifact_signature_matches_driver_expectations() {
+    let m = manifest();
+    let e = m.get("train_mlm_bigbird_itc_s512_b4").unwrap();
+    let names: Vec<&str> = e.io.inputs.iter().map(|s| s.name.as_str()).collect();
+    assert_eq!(
+        &names[..4],
+        &["params", "m", "v", "step"],
+        "driver state protocol changed"
+    );
+    let out_names: Vec<&str> = e.io.outputs.iter().map(|s| s.name.as_str()).collect();
+    assert_eq!(out_names, vec!["params", "m", "v", "loss"]);
+    // params vector consistent across the triple
+    let n = e.io.inputs[0].volume();
+    let init = m.get("init_mlm_bigbird_itc_s512_b4").unwrap();
+    assert_eq!(init.io.outputs[0].volume(), n);
+    let fwd = m.get("fwd_mlm_bigbird_itc_s512_b4").unwrap();
+    assert_eq!(fwd.io.inputs[0].volume(), n);
+}
+
+#[test]
+fn experiment_models_exist() {
+    let m = manifest();
+    // every model key referenced by the experiment harnesses
+    let models = [
+        // table1
+        "mlm_dense_s512_b4",
+        "mlm_random_s512_b4",
+        "mlm_window_s512_b4",
+        "mlm_random_window_s512_b4",
+        "mlm_window_global_s512_b4",
+        "mlm_bigbird_itc_s512_b4",
+        "mlm_bigbird_etc_s512_b4",
+        // mlm_bpc + fig_ctxlen
+        "mlm_bigbird_itc_s128_b8",
+        "mlm_bigbird_itc_s256_b8",
+        "mlm_bigbird_itc_s1024_b2",
+        "mlm_bigbird_itc_s2048_b1",
+        "mlm_window_global_s2048_b1",
+        "mlm_bigbird_etc_s2048_b1",
+        // qa
+        "qa_dense_s512_b4",
+        "qa_window_global_s1024_b2",
+        "qa_bigbird_itc_s1024_b2",
+        "qa_bigbird_etc_s1024_b2",
+        // classification
+        "cls_dense_s512_b4",
+        "cls_bigbird_itc_s512_b4",
+        "cls_dense_s128_b8",
+        "cls_bigbird_itc_s128_b8",
+        "cls_bigbird_itc_s1024_b2",
+        // genomics
+        "multilabel_bigbird_itc_s1024_b2",
+        "multilabel_window_s1024_b2",
+        // summarization
+        "s2s_bigbird_itc_s512_b4",
+        "s2s_dense_s512_b4",
+    ];
+    for model in models {
+        for kind in ["init", "train"] {
+            assert!(
+                m.get(&format!("{kind}_{model}")).is_ok(),
+                "missing {kind}_{model}"
+            );
+        }
+    }
+    // scaling + task1 artifacts
+    for n in [256, 512, 1024, 2048, 4096] {
+        for name in [
+            format!("attnbench_dense_jnp_n{n}"),
+            format!("attnbench_bigbird_itc_jnp_n{n}"),
+            format!("attnbench_bigbird_itc_pallas_n{n}"),
+        ] {
+            assert!(m.get(&name).is_ok(), "missing {name}");
+        }
+    }
+    assert!(m.get("task1_dense").is_ok());
+    assert!(m.get("task1_sparse").is_ok());
+    // the pallas-in-model proof artifact
+    assert!(m.get("fwd_mlm_bigbird_itc_s512_b4_pallas").is_ok());
+}
+
+#[test]
+fn select_by_meta_finds_serving_buckets() {
+    let m = manifest();
+    let buckets = m.select(&[
+        ("kind", "fwd"),
+        ("task", "mlm"),
+        ("attn", "bigbird_itc"),
+        ("impl", "jnp"),
+    ]);
+    assert!(buckets.len() >= 5, "serving buckets: {}", buckets.len());
+    for b in buckets {
+        assert!(b.meta_usize("seq_len").unwrap() >= 128);
+    }
+}

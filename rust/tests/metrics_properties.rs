@@ -1,0 +1,176 @@
+//! Property tests for the evaluation metrics: bounds, symmetries, and
+//! agreement with brute-force definitions.
+
+use bigbird::metrics::{binary_f1, roc_auc, rouge_l, rouge_n, span_f1};
+use bigbird::util::proptest::check_res;
+use bigbird::util::Rng;
+
+fn rand_seq(rng: &mut Rng, max_len: usize, alphabet: i32) -> Vec<i32> {
+    (0..rng.range(1, max_len)).map(|_| rng.below(alphabet as usize) as i32).collect()
+}
+
+#[test]
+fn prop_rouge_bounded_and_reflexive() {
+    check_res(
+        3,
+        200,
+        |rng| (rand_seq(rng, 40, 8), rand_seq(rng, 40, 8)),
+        |(a, b)| {
+            for n in 1..=2 {
+                let s = rouge_n(a, b, n);
+                if !(0.0..=1.0).contains(&s.f1)
+                    || !(0.0..=1.0).contains(&s.precision)
+                    || !(0.0..=1.0).contains(&s.recall)
+                {
+                    return Err(format!("rouge-{n} out of bounds: {s:?}"));
+                }
+                if a.len() >= n {
+                    let selfs = rouge_n(a, a, n);
+                    if (selfs.f1 - 1.0).abs() > 1e-9 {
+                        return Err(format!("rouge-{n}(x,x) = {}", selfs.f1));
+                    }
+                }
+            }
+            let l = rouge_l(a, b);
+            if !(0.0..=1.0).contains(&l.f1) {
+                return Err(format!("rouge-l out of bounds: {l:?}"));
+            }
+            // ROUGE-L F1 is symmetric (LCS is)
+            let lr = rouge_l(b, a);
+            if (l.f1 - lr.f1).abs() > 1e-9 {
+                return Err("rouge-l f1 not symmetric".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_auc_is_rank_invariant() {
+    // AUC must be invariant under any strictly monotone transform
+    check_res(
+        5,
+        100,
+        |rng| {
+            let n = rng.range(4, 60);
+            let scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let labels: Vec<bool> = (0..n).map(|_| rng.coin(0.4)).collect();
+            (scores, labels)
+        },
+        |(scores, labels)| {
+            let a = roc_auc(scores, labels);
+            let transformed: Vec<f32> = scores.iter().map(|&x| x * 3.0 + 1.0).collect();
+            let b = roc_auc(&transformed, labels);
+            if (a - b).abs() > 1e-9 {
+                return Err(format!("AUC not rank-invariant: {a} vs {b}"));
+            }
+            if !(0.0..=1.0).contains(&a) {
+                return Err(format!("AUC out of bounds: {a}"));
+            }
+            // complement symmetry: negating scores flips AUC
+            let neg: Vec<f32> = scores.iter().map(|&x| -x).collect();
+            let c = roc_auc(&neg, labels);
+            let pos = labels.iter().filter(|&&l| l).count();
+            if pos > 0 && pos < labels.len() && (a + c - 1.0).abs() > 1e-9 {
+                return Err(format!("AUC complement broken: {a} + {c} != 1"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_span_f1_bounds_and_symmetry() {
+    check_res(
+        7,
+        200,
+        |rng| {
+            let mk = |rng: &mut Rng| {
+                let s = rng.below(100);
+                (s, s + rng.range(1, 20))
+            };
+            (mk(rng), mk(rng))
+        },
+        |&(a, b)| {
+            let f = span_f1(a, b);
+            if !(0.0..=1.0).contains(&f) {
+                return Err(format!("f1 {f}"));
+            }
+            if (span_f1(a, b) - span_f1(b, a)).abs() > 1e-12 {
+                return Err("span f1 not symmetric".into());
+            }
+            if (span_f1(a, a) - 1.0).abs() > 1e-12 {
+                return Err("span f1 not reflexive".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_binary_f1_agrees_with_definition() {
+    check_res(
+        9,
+        100,
+        |rng| {
+            let n = rng.range(1, 80);
+            let p: Vec<bool> = (0..n).map(|_| rng.coin(0.5)).collect();
+            let g: Vec<bool> = (0..n).map(|_| rng.coin(0.5)).collect();
+            (p, g)
+        },
+        |(p, g)| {
+            let f = binary_f1(p, g);
+            let tp = p.iter().zip(g).filter(|(&a, &b)| a && b).count() as f64;
+            let fp = p.iter().zip(g).filter(|(&a, &b)| a && !b).count() as f64;
+            let fnn = p.iter().zip(g).filter(|(&a, &b)| !a && b).count() as f64;
+            let want = if tp == 0.0 { 0.0 } else { 2.0 * tp / (2.0 * tp + fp + fnn) };
+            if (f - want).abs() > 1e-12 {
+                return Err(format!("f1 {f} vs definition {want}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mlm_accuracy_matches_manual_count() {
+    check_res(
+        15,
+        60,
+        |rng| {
+            let n = rng.range(1, 40);
+            let vocab = rng.range(2, 8);
+            let logits: Vec<f32> = (0..n * vocab).map(|_| rng.f32()).collect();
+            let labels: Vec<i32> = (0..n).map(|_| rng.below(vocab) as i32).collect();
+            let weights: Vec<f32> =
+                (0..n).map(|_| if rng.coin(0.5) { 1.0 } else { 0.0 }).collect();
+            (logits, labels, weights, vocab)
+        },
+        |(logits, labels, weights, vocab)| {
+            let got = bigbird::metrics::mlm_accuracy(logits, labels, weights, *vocab);
+            let mut hit = 0.0;
+            let mut tot = 0.0;
+            for i in 0..labels.len() {
+                if weights[i] == 0.0 {
+                    continue;
+                }
+                let row = &logits[i * vocab..(i + 1) * vocab];
+                let arg = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if arg as i32 == labels[i] {
+                    hit += 1.0;
+                }
+                tot += 1.0;
+            }
+            let want = if tot == 0.0 { 0.0 } else { hit / tot };
+            if (got - want).abs() > 1e-12 {
+                return Err(format!("{got} vs {want}"));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,64 @@
+//! Cross-language contract: the Rust pattern generator must reproduce
+//! the Python-side dumps (`artifacts/pattern_*.txt`) byte for byte.
+
+use bigbird::attention::{build_pattern, pattern_to_text, PatternSpec};
+use bigbird::config::AttnVariant;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn rust_pattern_matches_python_dumps() {
+    let dir = artifacts_dir();
+    let entries: Vec<_> = std::fs::read_dir(&dir)
+        .expect("artifacts/ missing — run `make artifacts`")
+        .filter_map(|e| e.ok())
+        .filter(|e| {
+            let n = e.file_name().to_string_lossy().to_string();
+            n.starts_with("pattern_") && n.ends_with(".txt")
+        })
+        .collect();
+    assert!(
+        !entries.is_empty(),
+        "no pattern dumps in {} — run `make artifacts`",
+        dir.display()
+    );
+    let mut checked = 0;
+    for e in entries {
+        let name = e.file_name().to_string_lossy().to_string();
+        // pattern_{variant}_nb{nb}_g{g}_w{w}_r{r}_seed{seed}.txt
+        let core = name
+            .trim_start_matches("pattern_")
+            .trim_end_matches(".txt");
+        let idx = core.find("_nb").expect("dump name format");
+        let variant = AttnVariant::parse(&core[..idx]).expect("variant in dump name");
+        let rest = &core[idx..];
+        let grab = |key: &str| -> u64 {
+            let start = rest.find(key).unwrap() + key.len();
+            rest[start..]
+                .chars()
+                .take_while(|c| c.is_ascii_digit())
+                .collect::<String>()
+                .parse()
+                .unwrap()
+        };
+        let spec = PatternSpec {
+            variant,
+            nb: grab("_nb") as usize,
+            global_blocks: grab("_g") as usize,
+            window_blocks: grab("_w") as usize,
+            random_blocks: grab("_r") as usize,
+            seed: grab("_seed"),
+        };
+        let want = std::fs::read_to_string(e.path()).unwrap();
+        let got = pattern_to_text(&build_pattern(&spec));
+        assert_eq!(
+            got, want,
+            "pattern drift between rust and python for {name} ({spec:?})"
+        );
+        checked += 1;
+    }
+    println!("verified {checked} pattern dumps");
+    assert!(checked >= 5, "expected many dumps, got {checked}");
+}

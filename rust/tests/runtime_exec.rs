@@ -1,0 +1,108 @@
+//! Runtime integration: compile + execute real artifacts, checking
+//! numerics and shape validation end to end. All tests share one PJRT
+//! client (PJRT CPU clients don't like being created repeatedly in one
+//! process), so this file uses a single #[test] entry with sub-sections.
+
+use bigbird::runtime::{ExecutablePool, HostTensor, Manifest, Runtime};
+
+fn pool() -> ExecutablePool {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let manifest = Manifest::load(&dir).expect("run `make artifacts` first");
+    ExecutablePool::new(Runtime::cpu().unwrap(), manifest)
+}
+
+#[test]
+fn runtime_end_to_end() {
+    let pool = pool();
+
+    // --- attention microbench artifact: softmax rows on constant V ---
+    let exe = pool.get("attnbench_bigbird_itc_jnp_n256").unwrap();
+    let n = 256;
+    let vol = 2 * n * 32;
+    let q = HostTensor::F32 {
+        shape: vec![1, 2, n, 32],
+        data: (0..vol).map(|i| ((i % 13) as f32) * 0.1).collect(),
+    };
+    let v = HostTensor::F32 { shape: vec![1, 2, n, 32], data: vec![2.5; vol] };
+    let out = exe.run(&[q.clone(), q.clone(), v]).unwrap();
+    assert_eq!(out.len(), 1);
+    let o = out[0].as_f32().unwrap();
+    assert_eq!(o.len(), vol);
+    for &x in o {
+        assert!((x - 2.5).abs() < 1e-4, "constant-V attention must return V: {x}");
+    }
+
+    // --- shape validation rejects wrong inputs ---
+    let bad = HostTensor::F32 { shape: vec![1, 2, 128, 32], data: vec![0.0; 2 * 128 * 32] };
+    let err = exe.run(&[bad.clone(), bad.clone(), bad]).unwrap_err().to_string();
+    assert!(err.contains("expects"), "unexpected error: {err}");
+
+    // --- arity validation ---
+    let err = exe.run(&[q]).unwrap_err().to_string();
+    assert!(err.contains("inputs"), "unexpected error: {err}");
+
+    // --- pool caches compilations ---
+    let before = pool.compiled_count();
+    let _ = pool.get("attnbench_bigbird_itc_jnp_n256").unwrap();
+    assert_eq!(pool.compiled_count(), before, "cache miss on repeat get");
+
+    // --- init → train → loss decreases over a few steps ---
+    let model = "mlm_bigbird_itc_s128_b8";
+    let mut driver = bigbird::train::TrainDriver::new(&pool, model).unwrap();
+    let e = pool.manifest().get(&format!("train_{model}")).unwrap();
+    let (b, s) = (
+        e.meta_usize("batch").unwrap(),
+        e.meta_usize("seq_len").unwrap(),
+    );
+    let docs =
+        bigbird::experiments::common::corpus_docs(512, 8, 1024, 42);
+    let g = bigbird::experiments::common::Geometry { batch: b, seq_len: s, vocab: 512 };
+    let mut rng = bigbird::util::Rng::new(1);
+    let mut losses = Vec::new();
+    for _ in 0..12 {
+        let batch =
+            bigbird::experiments::common::mlm_batch_from_docs(&docs, g, &mut rng).unwrap();
+        losses.push(driver.train_step(&batch).unwrap());
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not decrease: {losses:?}"
+    );
+    assert!(losses.iter().all(|l| l.is_finite()), "non-finite loss: {losses:?}");
+
+    // --- fwd with trained params returns sane logits ---
+    let batch = bigbird::experiments::common::mlm_batch_from_docs(&docs, g, &mut rng).unwrap();
+    let logits = driver.forward(&batch[0], &batch[1]).unwrap();
+    assert_eq!(logits.shape(), &[b, s, 512]);
+    assert!(logits.as_f32().unwrap().iter().all(|x| x.is_finite()));
+
+    // --- checkpoint roundtrip through the driver ---
+    let dir = std::env::temp_dir().join("bb_rt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("driver.ckpt");
+    driver.save(&ckpt).unwrap();
+    let restored = bigbird::train::TrainDriver::resume(&pool, model, &ckpt).unwrap();
+    assert_eq!(restored.step, driver.step);
+    assert_eq!(restored.params, driver.params);
+    std::fs::remove_file(&ckpt).unwrap();
+
+    // --- pallas-impl model artifact agrees with jnp-impl model ---
+    let fwd_jnp = pool.get("fwd_mlm_bigbird_itc_s512_b4").unwrap();
+    let fwd_pal = pool.get("fwd_mlm_bigbird_itc_s512_b4_pallas").unwrap();
+    let init = pool.get("init_mlm_bigbird_itc_s512_b4").unwrap();
+    let params = init.run(&[]).unwrap().remove(0);
+    let toks = HostTensor::I32 {
+        shape: vec![4, 512],
+        data: (0..4 * 512).map(|i| 6 + (i % 500) as i32).collect(),
+    };
+    let kv = HostTensor::F32 { shape: vec![4, 512], data: vec![1.0; 4 * 512] };
+    let a = fwd_jnp.run(&[params.clone(), toks.clone(), kv.clone()]).unwrap();
+    let bt = fwd_pal.run(&[params, toks, kv]).unwrap();
+    let (xa, xb) = (a[0].as_f32().unwrap(), bt[0].as_f32().unwrap());
+    let max_err = xa
+        .iter()
+        .zip(xb)
+        .map(|(p, q)| (p - q).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-3, "pallas vs jnp model mismatch: {max_err}");
+}
