@@ -1,11 +1,18 @@
 //! `cargo bench --bench coordinator` — L3 hot-path benches:
 //! 1. batcher routing/forming micro-bench (pure logic, no PJRT),
 //! 2. end-to-end serving throughput + latency percentiles under a
-//!    mixed-length fill-mask workload.
+//!    mixed-length fill-mask workload,
+//! 3. throughput scaling curve vs engine-pool worker count on mixed
+//!    512/2048 traffic (the pipelined-dispatch payoff: ≥1.5× at 4
+//!    workers, and a 1-worker pool reproduces the single-inflight
+//!    baseline).
 
 use std::time::{Duration, Instant};
 
-use bigbird::coordinator::{Batcher, BatcherConfig, Bucket, PendingRequest, Server, ServerConfig};
+use bigbird::config::ServingConfig;
+use bigbird::coordinator::{
+    trace, Batcher, BatcherConfig, Bucket, PendingRequest, Server, ServerConfig,
+};
 use bigbird::tokenizer::special;
 use bigbird::util::Rng;
 
@@ -24,7 +31,8 @@ fn bench_batcher() {
             enqueued: Instant::now(),
         })
         .collect();
-    let mut b = Batcher::new(buckets, BatcherConfig { max_wait: Duration::ZERO });
+    let mut b =
+        Batcher::new(buckets, BatcherConfig { max_wait: Duration::ZERO, ..Default::default() });
     let t0 = Instant::now();
     for r in reqs {
         b.push(r);
@@ -42,9 +50,19 @@ fn bench_batcher() {
     );
 }
 
+/// Fill-mask tokens of length `len` with three masked positions.
+fn masked_request(rng: &mut Rng, len: usize) -> Vec<i32> {
+    let mut toks: Vec<i32> = (0..len).map(|_| 6 + rng.below(500) as i32).collect();
+    for _ in 0..3 {
+        let p = rng.below(len);
+        toks[p] = special::MASK;
+    }
+    toks
+}
+
 fn bench_serving() {
     let mut cfg = ServerConfig::mlm_default("artifacts");
-    cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(5) };
+    cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(5), ..Default::default() };
     let server = Server::start(cfg).expect("run `make artifacts`");
     let mut rng = Rng::new(2);
     let n = 48;
@@ -58,12 +76,7 @@ fn bench_serving() {
             5..=7 => rng.range(512, 1024),
             _ => rng.range(1024, 2048),
         };
-        let mut toks: Vec<i32> = (0..len).map(|_| 6 + rng.below(500) as i32).collect();
-        for _ in 0..3 {
-            let p = rng.below(len);
-            toks[p] = special::MASK;
-        }
-        rxs.push(server.submit(toks).unwrap());
+        rxs.push(server.submit(masked_request(&mut rng, len)).unwrap());
     }
     for rx in rxs {
         rx.recv_timeout(Duration::from_secs(600)).unwrap();
@@ -82,8 +95,51 @@ fn bench_serving() {
     server.shutdown();
 }
 
+/// Throughput scaling vs engine workers: the same mixed 512/2048-bucket
+/// closed workload replayed against pools of 1/2/4 workers.
+fn bench_scaling() {
+    println!("\nscaling: mixed 512/2048 traffic vs engine workers");
+    // lens 400 → 512 bucket, 1800 → 2048 bucket; 40% long requests
+    let events = trace::bimodal(32, trace::Arrival::Closed, 400, 1800, 0.4, 5);
+    let mut base_rps = 0.0f64;
+    for workers in [1usize, 2, 4] {
+        let mut cfg = ServerConfig::mlm_default("artifacts");
+        cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(5), ..Default::default() };
+        cfg.serving = ServingConfig { engine_workers: workers, max_inflight: 4 };
+        let server = Server::start(cfg).expect("run `make artifacts`");
+        server.warmup(&[512, 2048]).unwrap();
+        let mut rng = Rng::new(7);
+        let t0 = Instant::now();
+        let rxs: Vec<_> = events
+            .iter()
+            .map(|e| server.submit(masked_request(&mut rng, e.len)).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(600)).unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let rps = events.len() as f64 / wall;
+        if workers == 1 {
+            base_rps = rps;
+        }
+        let m = server.metrics();
+        let utils = m.worker_utilization(wall);
+        let mean_util = 100.0 * utils.iter().sum::<f64>() / utils.len().max(1) as f64;
+        println!(
+            "  {workers} worker(s): {rps:5.2} req/s  speedup x{:.2} | queue-wait {:.0}ms exec {:.0}ms | peak inflight {} | mean util {:.0}%",
+            rps / base_rps,
+            m.mean_queue_wait_ms,
+            m.mean_exec_ms,
+            m.peak_inflight,
+            mean_util
+        );
+        server.shutdown();
+    }
+}
+
 fn main() {
     println!("coordinator benches:\n");
     bench_batcher();
     bench_serving();
+    bench_scaling();
 }

@@ -21,16 +21,33 @@ pub struct Flags {
     pub seed: u64,
     /// `--steps <n>` for training.
     pub steps: usize,
+    /// `--engine-workers <n>` serving engine pool size.
+    pub engine_workers: usize,
+    /// `--max-inflight <n>` per-bucket inflight batch cap.
+    pub max_inflight: usize,
     /// Remaining positional args.
     pub positional: Vec<String>,
 }
 
+impl Flags {
+    /// The serving-pool shape selected on the command line.
+    pub fn serving(&self) -> crate::config::ServingConfig {
+        crate::config::ServingConfig {
+            engine_workers: self.engine_workers,
+            max_inflight: self.max_inflight,
+        }
+    }
+}
+
 /// Parse flags out of an argument list.
 pub fn parse_flags(args: &[String]) -> Result<Flags> {
+    let serving_defaults = crate::config::ServingConfig::default();
     let mut f = Flags {
         artifacts: "artifacts".to_string(),
         seed: 0,
         steps: 200,
+        engine_workers: serving_defaults.engine_workers,
+        max_inflight: serving_defaults.max_inflight,
         ..Default::default()
     };
     let mut it = args.iter();
@@ -40,10 +57,17 @@ pub fn parse_flags(args: &[String]) -> Result<Flags> {
             "--config" => f.config = it.next().context("--config needs a value")?.clone(),
             "--seed" => f.seed = it.next().context("--seed needs a value")?.parse()?,
             "--steps" => f.steps = it.next().context("--steps needs a value")?.parse()?,
+            "--engine-workers" => {
+                f.engine_workers = it.next().context("--engine-workers needs a value")?.parse()?
+            }
+            "--max-inflight" => {
+                f.max_inflight = it.next().context("--max-inflight needs a value")?.parse()?
+            }
             other if other.starts_with("--") => bail!("unknown flag {other}"),
             other => f.positional.push(other.to_string()),
         }
     }
+    f.serving().validate()?;
     Ok(f)
 }
 
@@ -68,6 +92,8 @@ FLAGS:
   --config k=v,...       model config overrides
   --seed <u64>           RNG seed (default 0)
   --steps <n>            training steps (default 200)
+  --engine-workers <n>   serving engine pool size (default 1)
+  --max-inflight <n>     per-bucket inflight batch cap (default 2)
 ";
 
 /// CLI entrypoint used by `main.rs`.
@@ -126,6 +152,7 @@ mod tests {
         let f = parse_flags(&s(&[])).unwrap();
         assert_eq!(f.artifacts, "artifacts");
         assert_eq!(f.steps, 200);
+        assert_eq!(f.serving(), crate::config::ServingConfig::default());
     }
 
     #[test]
@@ -134,6 +161,16 @@ mod tests {
         assert_eq!(f.positional, vec!["table1"]);
         assert_eq!(f.seed, 7);
         assert_eq!(f.steps, 50);
+    }
+
+    #[test]
+    fn parse_serving_flags() {
+        let f = parse_flags(&s(&["--engine-workers", "4", "--max-inflight", "8"])).unwrap();
+        assert_eq!(f.engine_workers, 4);
+        assert_eq!(f.max_inflight, 8);
+        // zero is rejected at parse time
+        assert!(parse_flags(&s(&["--engine-workers", "0"])).is_err());
+        assert!(parse_flags(&s(&["--max-inflight", "0"])).is_err());
     }
 
     #[test]

@@ -212,6 +212,39 @@ impl ModelConfig {
     }
 }
 
+/// Engine-pool shape for the serving coordinator: how many PJRT worker
+/// threads execute batches, and how many batches per bucket may be in
+/// flight at once (the pipelining depth). Mirrors the
+/// `--engine-workers` / `--max-inflight` CLI flags; flows into
+/// `ServerConfig`. With `engine_workers: 1, max_inflight: 1` the
+/// coordinator degenerates to the original single-inflight loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServingConfig {
+    /// Engine worker threads, each owning its own PJRT runtime.
+    pub engine_workers: usize,
+    /// Per-bucket cap on dispatched-but-incomplete batches.
+    pub max_inflight: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig { engine_workers: 1, max_inflight: 2 }
+    }
+}
+
+impl ServingConfig {
+    /// Validate invariants (both knobs ≥ 1).
+    pub fn validate(&self) -> Result<()> {
+        if self.engine_workers == 0 {
+            bail!("engine_workers must be >= 1");
+        }
+        if self.max_inflight == 0 {
+            bail!("max_inflight must be >= 1");
+        }
+        Ok(())
+    }
+}
+
 /// Parse a `key=value,key=value` override string onto a base config (CLI
 /// `--config` flag).
 pub fn apply_overrides(mut cfg: ModelConfig, overrides: &str) -> Result<ModelConfig> {
@@ -283,6 +316,13 @@ mod tests {
         assert_eq!(cfg.layers, 2);
         assert!(apply_overrides(ModelConfig::base(), "seq_len=100").is_err()); // not mult of block
         assert!(apply_overrides(ModelConfig::base(), "nope=1").is_err());
+    }
+
+    #[test]
+    fn serving_config_validates() {
+        ServingConfig::default().validate().unwrap();
+        assert!(ServingConfig { engine_workers: 0, max_inflight: 1 }.validate().is_err());
+        assert!(ServingConfig { engine_workers: 1, max_inflight: 0 }.validate().is_err());
     }
 
     #[test]

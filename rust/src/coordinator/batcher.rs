@@ -7,6 +7,14 @@
 //! oldest request has waited `max_wait`. Requests longer than the largest
 //! bucket are truncated to it (the dense-baseline behaviour the paper
 //! ridicules — but somebody has to serve those requests too).
+//!
+//! For the pipelined dispatcher the batcher also carries per-bucket
+//! **inflight accounting**: [`Batcher::poll`] marks the formed batch's
+//! bucket as having one more batch in flight and skips buckets that are
+//! saturated (≥ `max_inflight` dispatched-but-incomplete batches), so a
+//! slow long-sequence bucket cannot monopolise the engine pool while
+//! short buckets starve. The dispatcher reports completions back via
+//! [`Batcher::complete`].
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -27,11 +35,16 @@ pub struct Bucket {
 pub struct BatcherConfig {
     /// flush a partial batch when its oldest member waited this long
     pub max_wait: Duration,
+    /// per-bucket cap on dispatched-but-incomplete batches; `poll` skips
+    /// saturated buckets. `usize::MAX` (the pure-queueing default) means
+    /// uncapped — the serving coordinator always overrides this from
+    /// [`crate::config::ServingConfig::max_inflight`].
+    pub max_inflight: usize,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_wait: Duration::from_millis(10) }
+        BatcherConfig { max_wait: Duration::from_millis(10), max_inflight: usize::MAX }
     }
 }
 
@@ -47,14 +60,18 @@ pub struct PendingRequest {
 #[derive(Clone, Debug)]
 pub struct FormedBatch {
     pub bucket: Bucket,
+    /// Index of `bucket` in [`Batcher::buckets`] — hand it back to
+    /// [`Batcher::complete`] when the batch finishes.
+    pub bucket_idx: usize,
     pub requests: Vec<PendingRequest>,
 }
 
-/// The batcher: per-bucket FIFO queues.
+/// The batcher: per-bucket FIFO queues + per-bucket inflight counts.
 #[derive(Debug)]
 pub struct Batcher {
     buckets: Vec<Bucket>, // sorted by seq_len ascending
     queues: Vec<VecDeque<PendingRequest>>,
+    inflight: Vec<usize>, // batches dispatched but not yet completed
     cfg: BatcherConfig,
 }
 
@@ -64,7 +81,8 @@ impl Batcher {
         assert!(!buckets.is_empty(), "batcher needs at least one bucket");
         buckets.sort_by_key(|b| b.seq_len);
         let queues = buckets.iter().map(|_| VecDeque::new()).collect();
-        Batcher { buckets, queues, cfg }
+        let inflight = vec![0; buckets.len()];
+        Batcher { buckets, queues, inflight, cfg }
     }
 
     /// Bucket index for a request of `len` tokens: smallest bucket with
@@ -88,17 +106,22 @@ impl Batcher {
         self.queues.iter().map(|q| q.len()).sum()
     }
 
-    /// Form at most one batch: a full bucket first, else the bucket whose
-    /// head has exceeded `max_wait`.
+    /// Form at most one batch from a non-saturated bucket: a full bucket
+    /// first, else the bucket whose head has exceeded `max_wait`. The
+    /// returned batch counts against its bucket's inflight budget until
+    /// [`Batcher::complete`] is called with its `bucket_idx`.
     pub fn poll(&mut self, now: Instant) -> Option<FormedBatch> {
         // full batches first (throughput)
         for (i, b) in self.buckets.iter().enumerate() {
-            if self.queues[i].len() >= b.batch {
+            if self.inflight[i] < self.cfg.max_inflight && self.queues[i].len() >= b.batch {
                 return Some(self.take(i, b.batch));
             }
         }
         // deadline flush (latency)
-        for (i, _) in self.buckets.iter().enumerate() {
+        for i in 0..self.buckets.len() {
+            if self.inflight[i] >= self.cfg.max_inflight {
+                continue;
+            }
             if let Some(head) = self.queues[i].front() {
                 if now.duration_since(head.enqueued) >= self.cfg.max_wait {
                     let n = self.queues[i].len().min(self.buckets[i].batch);
@@ -109,9 +132,26 @@ impl Batcher {
         None
     }
 
+    /// A batch formed from bucket `bucket_idx` finished (successfully or
+    /// not): release its inflight slot so `poll` may dispatch the next.
+    pub fn complete(&mut self, bucket_idx: usize) {
+        self.inflight[bucket_idx] = self.inflight[bucket_idx].saturating_sub(1);
+    }
+
+    /// Batches currently dispatched-but-incomplete for bucket `i`.
+    pub fn bucket_inflight(&self, i: usize) -> usize {
+        self.inflight[i]
+    }
+
+    /// Total batches currently dispatched-but-incomplete.
+    pub fn inflight(&self) -> usize {
+        self.inflight.iter().sum()
+    }
+
     fn take(&mut self, i: usize, n: usize) -> FormedBatch {
         let requests = self.queues[i].drain(..n).collect();
-        FormedBatch { bucket: self.buckets[i].clone(), requests }
+        self.inflight[i] += 1;
+        FormedBatch { bucket: self.buckets[i].clone(), bucket_idx: i, requests }
     }
 
     /// The configured buckets (sorted by seq_len).
@@ -164,7 +204,7 @@ mod tests {
 
     #[test]
     fn partial_batch_waits_for_deadline() {
-        let cfg = BatcherConfig { max_wait: Duration::from_millis(10) };
+        let cfg = BatcherConfig { max_wait: Duration::from_millis(10), ..Default::default() };
         let mut b = Batcher::new(buckets(), cfg);
         let t0 = Instant::now();
         b.push(req(1, 400, t0));
@@ -199,7 +239,13 @@ mod tests {
                     .collect::<Vec<_>>()
             },
             |reqs| {
-                let mut b = Batcher::new(buckets(), BatcherConfig { max_wait: Duration::ZERO });
+                let mut b = Batcher::new(
+                    buckets(),
+                    BatcherConfig { max_wait: Duration::ZERO, ..Default::default() },
+                );
+                // the truncation bucket is whatever bucket is largest —
+                // derived, so the property survives bucket-set changes
+                let largest = b.buckets().last().expect("nonempty").seq_len;
                 let t = Instant::now();
                 for &(id, len) in reqs {
                     b.push(PendingRequest { id, tokens: vec![1; len], enqueued: t });
@@ -211,7 +257,7 @@ mod tests {
                             return Err(format!("request {} duplicated", r.id));
                         }
                         if fb.bucket.seq_len < r.tokens.len()
-                            && fb.bucket.seq_len != 2048
+                            && fb.bucket.seq_len != largest
                         {
                             return Err(format!(
                                 "request {} (len {}) under-bucketed to {}",
@@ -231,5 +277,34 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn saturated_bucket_is_skipped_until_completion() {
+        let cfg = BatcherConfig { max_wait: Duration::ZERO, max_inflight: 1 };
+        let mut b = Batcher::new(buckets(), cfg);
+        let t = Instant::now();
+        for i in 0..16 {
+            b.push(req(i, 100, t)); // bucket 128, batch 8
+        }
+        let later = t + Duration::from_millis(1);
+        let fb1 = b.poll(later).expect("first full batch");
+        assert_eq!(fb1.bucket.seq_len, 128);
+        assert_eq!(b.bucket_inflight(fb1.bucket_idx), 1);
+        // bucket saturated: 8 more queued requests must wait
+        assert!(b.poll(later).is_none(), "saturated bucket must be skipped");
+        assert_eq!(b.pending(), 8);
+        // ...but other buckets still dispatch while 128 is saturated
+        b.push(req(100, 400, t)); // bucket 512
+        let fb2 = b.poll(later).expect("other bucket dispatches");
+        assert_eq!(fb2.bucket.seq_len, 512);
+        // completing the first batch frees the slot, FIFO preserved
+        b.complete(fb1.bucket_idx);
+        let fb3 = b.poll(later).expect("slot freed");
+        assert_eq!(fb3.bucket.seq_len, 128);
+        let ids: Vec<u64> = fb3.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (8..16).collect::<Vec<u64>>());
+        assert_eq!(b.inflight(), 2);
+        assert_eq!(b.pending(), 0);
     }
 }

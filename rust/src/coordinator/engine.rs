@@ -1,96 +1,371 @@
-//! The engine thread: sole owner of PJRT state.
+//! Engine workers: sole owners of PJRT state.
 //!
-//! Jobs cross the thread boundary as `HostTensor`s; results return on a
-//! per-job reply channel. `ExecutablePool` (not `Send`) is constructed
-//! *inside* the engine thread.
+//! PJRT objects (`Runtime`, `ExecutablePool`, literals) are not `Send`,
+//! so every worker thread constructs its *own* `Runtime` +
+//! `ExecutablePool` inside the thread and only plain [`HostTensor`]s and
+//! control messages cross the boundary.
+//!
+//! Two entry points, one worker loop:
+//!
+//! * [`EnginePool`] — N workers behind per-worker bounded job queues
+//!   and one shared completion channel; the dispatcher submits to the
+//!   least-loaded worker and collects completions asynchronously, so
+//!   several batches can be in flight at once (pipelining).
+//! * [`EngineHandle`] — a synchronous convenience wrapper over a
+//!   1-worker pool for simple tools. (Its old standalone engine loop —
+//!   and its detach-on-drop thread leak — are gone; shutdown is the
+//!   pool's close-queue-then-join path.)
+//!
+//! The manifest is parsed **once** by the caller and shared with every
+//! worker as an `Arc<Manifest>` — N workers do not re-read it N times.
 
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::collections::HashMap;
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
+};
+use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::runtime::{ExecutablePool, HostTensor, Manifest, Runtime};
 
-/// One unit of engine work.
-pub struct EngineJob {
-    /// artifact name to execute
-    pub artifact: String,
-    /// positional inputs
-    pub inputs: Vec<HostTensor>,
-    /// where the outputs go (stringified error on failure — keeps the
-    /// channel payload `Send` without dragging non-Send context along)
-    pub reply: Sender<std::result::Result<Vec<HostTensor>, String>>,
-}
-
-/// Handle to a running engine thread.
+/// Synchronous handle to a single engine worker — a thin wrapper over a
+/// 1-worker [`EnginePool`].
 pub struct EngineHandle {
-    tx: SyncSender<EngineJob>,
-    join: Option<JoinHandle<()>>,
+    pool: EnginePool,
+    next_job: u64,
 }
 
 impl EngineHandle {
-    /// Spawn the engine on `artifact_dir`, with a bounded queue of
-    /// `queue_depth` jobs (backpressure: senders block when full).
+    /// Spawn one engine worker on `artifact_dir`, with a bounded queue
+    /// of `queue_depth` jobs (backpressure: senders block when full).
     pub fn spawn(artifact_dir: String, queue_depth: usize) -> Result<Self> {
-        let (tx, rx): (SyncSender<EngineJob>, Receiver<EngineJob>) =
-            sync_channel(queue_depth);
-        let (ready_tx, ready_rx) = sync_channel::<std::result::Result<(), String>>(1);
-        let join = std::thread::Builder::new()
-            .name("bigbird-engine".into())
-            .spawn(move || {
-                let pool = match Runtime::cpu()
-                    .and_then(|rt| Ok(ExecutablePool::new(rt, Manifest::load(&artifact_dir)?)))
-                {
-                    Ok(p) => {
-                        let _ = ready_tx.send(Ok(()));
-                        p
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(format!("{e:#}")));
-                        return;
-                    }
-                };
-                while let Ok(job) = rx.recv() {
-                    let result = pool
-                        .get(&job.artifact)
-                        .and_then(|exe| exe.run(&job.inputs))
-                        .map_err(|e| format!("{e:#}"));
-                    let _ = job.reply.send(result);
+        let manifest = Arc::new(Manifest::load(&artifact_dir)?);
+        Ok(EngineHandle { pool: EnginePool::spawn(manifest, 1, queue_depth)?, next_job: 1 })
+    }
+
+    /// Execute an artifact synchronously on the worker thread.
+    pub fn execute(&mut self, artifact: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let id = self.next_job;
+        self.next_job += 1;
+        self.pool.submit(PoolJob {
+            batch_id: id,
+            artifact: artifact.to_string(),
+            inputs,
+            with_params: false,
+            submitted: Instant::now(),
+        })?;
+        loop {
+            match self.pool.completion_timeout(Duration::from_secs(3600)) {
+                Some(c) if c.batch_id == id => {
+                    return c.result.map_err(|e| anyhow::anyhow!(e));
                 }
-            })
-            .context("spawning engine thread")?;
-        ready_rx
-            .recv()
-            .context("engine thread died during startup")?
-            .map_err(|e| anyhow::anyhow!("engine startup failed: {e}"))?;
-        Ok(EngineHandle { tx, join: Some(join) })
-    }
-
-    /// Submit a job (blocks when the queue is full — backpressure).
-    pub fn submit(&self, job: EngineJob) -> Result<()> {
-        self.tx.send(job).context("engine thread gone")
-    }
-
-    /// Convenience: execute synchronously.
-    pub fn execute(&self, artifact: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
-        let (reply, rx) = std::sync::mpsc::channel();
-        self.submit(EngineJob { artifact: artifact.to_string(), inputs, reply })?;
-        rx.recv()
-            .context("engine dropped reply")?
-            .map_err(|e| anyhow::anyhow!(e))
+                Some(_) => continue, // stale completion from an abandoned call
+                None => anyhow::bail!("engine worker dropped the job"),
+            }
+        }
     }
 }
 
-impl Drop for EngineHandle {
-    fn drop(&mut self) {
-        // Closing the channel stops the engine loop.
-        // (tx is dropped as part of self; join afterwards.)
-        if let Some(join) = self.join.take() {
-            // replace tx with a dummy by dropping self.tx — can't move out;
-            // the loop exits when all senders are gone, which happens when
-            // self is fully dropped. Detach instead of joining to avoid
-            // deadlock on self-referential drop order.
-            let _ = join; // detach
+// ---------------------------------------------------------------------
+// engine pool
+// ---------------------------------------------------------------------
+
+/// One batch execution dispatched to a pool worker.
+pub struct PoolJob {
+    /// Caller-chosen correlation id, echoed in the completion.
+    pub batch_id: u64,
+    /// Artifact name to execute.
+    pub artifact: String,
+    /// Positional inputs, *excluding* parameters when `with_params`.
+    pub inputs: Vec<HostTensor>,
+    /// Prepend the worker's cached parameters, initialising them from
+    /// the matching `init_*` artifact on first use. The init programs
+    /// are deterministic (fixed seed baked in at AOT time), so every
+    /// worker materialises identical parameters.
+    pub with_params: bool,
+    /// When the dispatcher handed the job to the pool (queue-wait anchor).
+    pub submitted: Instant,
+}
+
+/// Result of a [`PoolJob`], delivered on the shared completion channel.
+pub struct PoolCompletion {
+    /// Correlation id from the job.
+    pub batch_id: u64,
+    /// Which worker executed it.
+    pub worker: usize,
+    /// Outputs, or a stringified error.
+    pub result: std::result::Result<Vec<HostTensor>, String>,
+    /// Time between submission and the worker picking the job up.
+    pub queue_wait: Duration,
+    /// Execution time on the worker (includes compile + param init on
+    /// the first hit of an artifact).
+    pub exec: Duration,
+}
+
+enum WorkerMsg {
+    Execute(PoolJob),
+    /// Eagerly compile the artifacts and initialise their parameters,
+    /// acking on `done` when finished.
+    Warmup {
+        artifacts: Vec<String>,
+        done: Sender<std::result::Result<(), String>>,
+    },
+    /// Install trained parameters for a fwd artifact on this worker.
+    LoadParams { fwd_artifact: String, params: HostTensor },
+}
+
+struct Worker {
+    tx: Option<SyncSender<WorkerMsg>>,
+    join: Option<JoinHandle<()>>,
+    /// Jobs submitted whose completions the dispatcher has not collected
+    /// yet. Dispatcher-side accounting only — workers share no state.
+    outstanding: usize,
+}
+
+/// A pool of N engine workers fronted by a dispatcher-facing API:
+/// [`EnginePool::submit`] routes a job to the least-loaded worker and
+/// returns immediately; completions arrive on a shared channel via
+/// [`EnginePool::try_completion`] / [`EnginePool::completion_timeout`].
+pub struct EnginePool {
+    workers: Vec<Worker>,
+    completion_rx: Receiver<PoolCompletion>,
+}
+
+impl EnginePool {
+    /// Spawn `n_workers` engine threads over an already-parsed manifest.
+    /// Each worker gets its own PJRT `Runtime` + `ExecutablePool` and a
+    /// bounded job queue of `queue_depth` (backpressure: `submit` blocks
+    /// when the chosen worker's queue is full).
+    pub fn spawn(manifest: Arc<Manifest>, n_workers: usize, queue_depth: usize) -> Result<Self> {
+        anyhow::ensure!(n_workers >= 1, "engine pool needs at least one worker");
+        let (completion_tx, completion_rx) = channel::<PoolCompletion>();
+        let mut workers = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let (tx, rx) = sync_channel::<WorkerMsg>(queue_depth.max(1));
+            let (ready_tx, ready_rx) = sync_channel::<std::result::Result<(), String>>(1);
+            let m = manifest.clone();
+            let ctx = completion_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("bigbird-engine-{w}"))
+                .spawn(move || worker_loop(w, m, rx, ctx, ready_tx))
+                .with_context(|| format!("spawning engine worker {w}"))?;
+            ready_rx
+                .recv()
+                .with_context(|| format!("engine worker {w} died during startup"))?
+                .map_err(|e| anyhow::anyhow!("engine worker {w} startup failed: {e}"))?;
+            workers.push(Worker { tx: Some(tx), join: Some(join), outstanding: 0 });
+        }
+        Ok(EnginePool { workers, completion_rx })
+    }
+
+    /// Number of workers in the pool.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Jobs dispatched whose completions have not been collected yet.
+    pub fn inflight(&self) -> usize {
+        self.workers.iter().map(|w| w.outstanding).sum()
+    }
+
+    /// Dispatch a job to the least-loaded worker; returns its index.
+    /// Blocks only when that worker's bounded queue is full.
+    pub fn submit(&mut self, job: PoolJob) -> Result<usize> {
+        let w = self
+            .workers
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, w)| w.outstanding)
+            .map(|(i, _)| i)
+            .expect("pool has at least one worker");
+        self.worker_tx(w)
+            .send(WorkerMsg::Execute(job))
+            .map_err(|_| anyhow::anyhow!("engine worker {w} gone"))?;
+        self.workers[w].outstanding += 1;
+        Ok(w)
+    }
+
+    /// Non-blocking completion poll.
+    pub fn try_completion(&mut self) -> Option<PoolCompletion> {
+        match self.completion_rx.try_recv() {
+            Ok(c) => {
+                self.collect(&c);
+                Some(c)
+            }
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => None,
         }
     }
+
+    /// Blocking completion wait, bounded by `timeout`.
+    pub fn completion_timeout(&mut self, timeout: Duration) -> Option<PoolCompletion> {
+        match self.completion_rx.recv_timeout(timeout) {
+            Ok(c) => {
+                self.collect(&c);
+                Some(c)
+            }
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => None,
+        }
+    }
+
+    fn collect(&mut self, c: &PoolCompletion) {
+        let w = &mut self.workers[c.worker];
+        w.outstanding = w.outstanding.saturating_sub(1);
+    }
+
+    /// Ask every worker to eagerly compile `artifacts` and initialise
+    /// their parameters. One ack per worker is sent on `done` (so the
+    /// caller waits for [`EnginePool::size`] acks); a dead worker acks
+    /// with an error immediately.
+    pub fn warm(
+        &self,
+        artifacts: &[String],
+        done: &Sender<std::result::Result<(), String>>,
+    ) {
+        for (i, _) in self.workers.iter().enumerate() {
+            let msg = WorkerMsg::Warmup { artifacts: artifacts.to_vec(), done: done.clone() };
+            if self.worker_tx(i).send(msg).is_err() {
+                let _ = done.send(Err(format!("engine worker {i} gone")));
+            }
+        }
+    }
+
+    /// Install trained parameters for a fwd artifact on every worker
+    /// (e.g. from a checkpoint), so subsequent batches serve the trained
+    /// model regardless of which worker executes them.
+    pub fn load_params(&self, fwd_artifact: &str, params: &HostTensor) -> Result<()> {
+        for (i, _) in self.workers.iter().enumerate() {
+            self.worker_tx(i)
+                .send(WorkerMsg::LoadParams {
+                    fwd_artifact: fwd_artifact.to_string(),
+                    params: params.clone(),
+                })
+                .map_err(|_| anyhow::anyhow!("engine worker {i} gone"))?;
+        }
+        Ok(())
+    }
+
+    fn worker_tx(&self, w: usize) -> &SyncSender<WorkerMsg> {
+        self.workers[w].tx.as_ref().expect("pool sender present until drop")
+    }
+}
+
+impl Drop for EnginePool {
+    fn drop(&mut self) {
+        // Same shutdown order as EngineHandle: close every worker's job
+        // channel first (each loop drains its queue and exits), then
+        // join them all — no detached threads. The completion channel
+        // stays alive until this Drop returns, so a worker finishing a
+        // queued job never blocks on a closed channel.
+        for w in &mut self.workers {
+            w.tx.take();
+        }
+        for w in &mut self.workers {
+            if let Some(join) = w.join.take() {
+                let _ = join.join();
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    worker: usize,
+    manifest: Arc<Manifest>,
+    rx: Receiver<WorkerMsg>,
+    completions: Sender<PoolCompletion>,
+    ready: SyncSender<std::result::Result<(), String>>,
+) {
+    let pool = match Runtime::cpu().map(|rt| ExecutablePool::new(rt, manifest)) {
+        Ok(p) => {
+            let _ = ready.send(Ok(()));
+            p
+        }
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    let mut params: HashMap<String, HostTensor> = HashMap::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WorkerMsg::LoadParams { fwd_artifact, params: p } => {
+                params.insert(fwd_artifact, p);
+            }
+            WorkerMsg::Warmup { artifacts, done } => {
+                let mut result = Ok(());
+                for a in &artifacts {
+                    let warmed = ensure_params(&pool, &mut params, a)
+                        .map(|_| ())
+                        .and_then(|_| pool.get(a).map(|_| ()));
+                    if let Err(e) = warmed {
+                        result = Err(format!("{e:#}"));
+                        break;
+                    }
+                }
+                let _ = done.send(result);
+            }
+            WorkerMsg::Execute(job) => {
+                let picked = Instant::now();
+                let queue_wait = picked.duration_since(job.submitted);
+                let PoolJob { batch_id, artifact, inputs, with_params, .. } = job;
+                // Contain panics (e.g. inside the PJRT FFI): a worker
+                // that dies without completing its job would leak the
+                // batch's inflight slot forever and hang its clients,
+                // so panics become error completions instead.
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    execute_job(&pool, &mut params, &artifact, inputs, with_params)
+                }))
+                .unwrap_or_else(|_| {
+                    Err(anyhow::anyhow!("engine worker {worker} panicked executing {artifact}"))
+                })
+                .map_err(|e| format!("{e:#}"));
+                let completion = PoolCompletion {
+                    batch_id,
+                    worker,
+                    result,
+                    queue_wait,
+                    exec: picked.elapsed(),
+                };
+                if completions.send(completion).is_err() {
+                    return; // dispatcher gone
+                }
+            }
+        }
+    }
+}
+
+fn execute_job(
+    pool: &ExecutablePool,
+    params: &mut HashMap<String, HostTensor>,
+    artifact: &str,
+    mut inputs: Vec<HostTensor>,
+    with_params: bool,
+) -> Result<Vec<HostTensor>> {
+    if with_params {
+        let p = ensure_params(pool, params, artifact)?.clone();
+        inputs.insert(0, p);
+    }
+    pool.get(artifact).and_then(|exe| exe.run(&inputs))
+}
+
+/// Worker-local parameter cache: initialised from the matching `init_*`
+/// artifact on first use, or whatever [`EnginePool::load_params`]
+/// installed.
+fn ensure_params<'a>(
+    pool: &ExecutablePool,
+    params: &'a mut HashMap<String, HostTensor>,
+    fwd_artifact: &str,
+) -> Result<&'a HostTensor> {
+    if !params.contains_key(fwd_artifact) {
+        let init_name = fwd_artifact.replacen("fwd_", "init_", 1);
+        let mut out = pool
+            .get(&init_name)
+            .and_then(|exe| exe.run(&[]))
+            .with_context(|| format!("initialising params for {fwd_artifact} via {init_name}"))?;
+        anyhow::ensure!(!out.is_empty(), "{init_name} produced no outputs");
+        params.insert(fwd_artifact.to_string(), out.remove(0));
+    }
+    Ok(params.get(fwd_artifact).expect("just inserted"))
 }

@@ -1,4 +1,6 @@
-//! Serving metrics: request counts, latency distribution, batch fill.
+//! Serving metrics: request counts, latency distribution, batch fill,
+//! and — for the pipelined engine pool — the queue-wait vs execute-wait
+//! split, per-worker utilization, and inflight-depth tracking.
 
 use std::sync::Mutex;
 
@@ -18,6 +20,18 @@ struct Inner {
     batch_capacity: usize,
     truncated: usize,
     errors: usize,
+    // pipeline split (one sample per completed batch job)
+    queue_wait_ms: Vec<f64>,
+    exec_ms: Vec<f64>,
+    // per-worker accounting, indexed by worker id; pre-sized to the
+    // pool via set_workers so idle workers still appear in reports
+    workers: usize,
+    worker_jobs: Vec<usize>,
+    worker_busy_ms: Vec<f64>,
+    // inflight depth sampled at each dispatch
+    dispatches: usize,
+    inflight_sum: usize,
+    inflight_peak: usize,
 }
 
 /// Point-in-time copy for reporting.
@@ -33,6 +47,29 @@ pub struct MetricsSnapshot {
     pub p95_ms: f64,
     pub p99_ms: f64,
     pub mean_ms: f64,
+    /// mean time a dispatched batch sat in a worker queue
+    pub mean_queue_wait_ms: f64,
+    /// mean time a batch spent executing on a worker
+    pub mean_exec_ms: f64,
+    /// mean pool-wide inflight depth observed at dispatch time
+    pub mean_inflight: f64,
+    /// peak pool-wide inflight depth observed at dispatch time
+    pub peak_inflight: usize,
+    /// completed batch jobs per worker, indexed by worker id
+    pub worker_jobs: Vec<usize>,
+    /// total execute time per worker (ms), indexed by worker id
+    pub worker_busy_ms: Vec<f64>,
+}
+
+impl MetricsSnapshot {
+    /// Per-worker utilization (busy time / wall time) over a measurement
+    /// window of `wall_s` seconds.
+    pub fn worker_utilization(&self, wall_s: f64) -> Vec<f64> {
+        if wall_s <= 0.0 {
+            return vec![0.0; self.worker_busy_ms.len()];
+        }
+        self.worker_busy_ms.iter().map(|&ms| ms / 1000.0 / wall_s).collect()
+    }
 }
 
 impl ServingMetrics {
@@ -47,6 +84,40 @@ impl ServingMetrics {
         i.batch_capacity += capacity;
     }
 
+    /// A batch was handed to the engine pool with `inflight_now` total
+    /// batches (including this one) in flight.
+    pub fn record_dispatch(&self, inflight_now: usize) {
+        let mut i = self.inner.lock().unwrap();
+        i.dispatches += 1;
+        i.inflight_sum += inflight_now;
+        i.inflight_peak = i.inflight_peak.max(inflight_now);
+    }
+
+    /// Declare the engine-pool size so per-worker vectors cover every
+    /// worker (including ones that never complete a job) and report
+    /// denominators are right. Survives [`ServingMetrics::reset`].
+    pub fn set_workers(&self, n: usize) {
+        let mut i = self.inner.lock().unwrap();
+        i.workers = n;
+        let len = n.max(i.worker_jobs.len());
+        i.worker_jobs.resize(len, 0);
+        i.worker_busy_ms.resize(len, 0.0);
+    }
+
+    /// A batch job completed on `worker` after waiting `queue_wait_ms`
+    /// in its queue and executing for `exec_ms`.
+    pub fn record_job(&self, worker: usize, queue_wait_ms: f64, exec_ms: f64) {
+        let mut i = self.inner.lock().unwrap();
+        if worker >= i.worker_jobs.len() {
+            i.worker_jobs.resize(worker + 1, 0);
+            i.worker_busy_ms.resize(worker + 1, 0.0);
+        }
+        i.worker_jobs[worker] += 1;
+        i.worker_busy_ms[worker] += exec_ms;
+        i.queue_wait_ms.push(queue_wait_ms);
+        i.exec_ms.push(exec_ms);
+    }
+
     pub fn record_truncated(&self) {
         self.inner.lock().unwrap().truncated += 1;
     }
@@ -56,9 +127,15 @@ impl ServingMetrics {
     }
 
     /// Clear all recordings (used after serving warmup, so measured
-    /// latencies exclude one-off artifact compilation).
+    /// latencies exclude one-off artifact compilation). Keeps the
+    /// declared pool size.
     pub fn reset(&self) {
-        *self.inner.lock().unwrap() = Inner::default();
+        let mut i = self.inner.lock().unwrap();
+        let workers = i.workers;
+        *i = Inner::default();
+        i.workers = workers;
+        i.worker_jobs.resize(workers, 0);
+        i.worker_busy_ms.resize(workers, 0.0);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -77,6 +154,16 @@ impl ServingMetrics {
             p95_ms: stats::percentile(&i.latencies_ms, 95.0),
             p99_ms: stats::percentile(&i.latencies_ms, 99.0),
             mean_ms: stats::mean(&i.latencies_ms),
+            mean_queue_wait_ms: stats::mean(&i.queue_wait_ms),
+            mean_exec_ms: stats::mean(&i.exec_ms),
+            mean_inflight: if i.dispatches == 0 {
+                0.0
+            } else {
+                i.inflight_sum as f64 / i.dispatches as f64
+            },
+            peak_inflight: i.inflight_peak,
+            worker_jobs: i.worker_jobs.clone(),
+            worker_busy_ms: i.worker_busy_ms.clone(),
         }
     }
 }
@@ -101,5 +188,31 @@ mod tests {
         assert!((s.fill_ratio - 7.0 / 8.0).abs() < 1e-12);
         assert!((s.p50_ms - 49.5).abs() < 1.0);
         assert!(s.p99_ms >= s.p95_ms && s.p95_ms >= s.p50_ms);
+    }
+
+    #[test]
+    fn pipeline_metrics_split_by_worker() {
+        let m = ServingMetrics::default();
+        m.set_workers(4);
+        m.record_dispatch(1);
+        m.record_dispatch(3);
+        m.record_job(0, 2.0, 10.0);
+        m.record_job(2, 4.0, 30.0);
+        let s = m.snapshot();
+        // idle workers 1 and 3 still appear (pool-sized vectors)
+        assert_eq!(s.worker_jobs, vec![1, 0, 1, 0]);
+        assert_eq!(s.worker_busy_ms, vec![10.0, 0.0, 30.0, 0.0]);
+        assert!((s.mean_queue_wait_ms - 3.0).abs() < 1e-12);
+        assert!((s.mean_exec_ms - 20.0).abs() < 1e-12);
+        assert!((s.mean_inflight - 2.0).abs() < 1e-12);
+        assert_eq!(s.peak_inflight, 3);
+        // utilization: worker 0 busy 10ms over a 1s window
+        let u = s.worker_utilization(1.0);
+        assert!((u[0] - 0.01).abs() < 1e-12);
+        // reset clears counts but keeps the pool sizing
+        m.reset();
+        let s = m.snapshot();
+        assert_eq!(s.peak_inflight, 0);
+        assert_eq!(s.worker_jobs, vec![0; 4]);
     }
 }

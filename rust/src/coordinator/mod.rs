@@ -1,18 +1,41 @@
 //! The serving coordinator: BigBird's systems payoff is "serve 8× longer
 //! documents on the same hardware", so L3 is a long-document inference
-//! server in the vLLM-router shape:
+//! server shaped as a **sharded, pipelined dispatch loop**:
 //!
 //! ```text
-//!  clients ──req──▶ router thread ──job──▶ engine thread (owns PJRT)
-//!     ▲                 │  length-bucketing dynamic batcher
-//!     └───── per-request response channel ◀──────┘
+//!                          ┌────────────────── router thread ─────────────────┐
+//!  clients ──req──▶ submit │ accept ─▶ batcher ─▶ dispatch ──job──▶ worker 0  │ (owns PJRT)
+//!     ▲      (bounded      │  (per-bucket FIFO,   (least-loaded) ─▶ worker 1  │ (owns PJRT)
+//!     │       queue)       │   inflight caps)                    ─▶ worker N  │ (owns PJRT)
+//!     │                    │ complete ◀──────── shared completion channel ◀───┘
+//!     └── per-request response channel (decode: argmax at mask positions)
 //! ```
 //!
-//! PJRT objects are not `Send`, so the engine thread constructs and owns
-//! the [`ExecutablePool`]; everything crossing threads is a plain
-//! [`HostTensor`] or a control message. The batcher buckets requests by
-//! padded sequence length (artifact shapes are fixed at AOT time), fills
-//! batches up to the artifact batch size, and flushes on a deadline.
+//! **Stages.** The router overlaps the three hot-path stages that
+//! `experiments/hotpath.rs` times: (1) *accept/assemble* — submissions
+//! land in the length-bucketing [`Batcher`]; (2) *execute* — every
+//! formable batch is dispatched to the least-loaded [`EnginePool`]
+//! worker, each worker a thread owning its own PJRT `Runtime` +
+//! `ExecutablePool` (PJRT objects are not `Send`, so only plain
+//! [`crate::runtime::HostTensor`]s and control messages cross threads);
+//! (3) *decode/complete* — finished batches come back on one shared
+//! completion channel and are decoded while other batches are still
+//! executing. The manifest is parsed once and shared `Arc`-style with
+//! all workers.
+//!
+//! **Backpressure.** Three bounds, outermost first: the client
+//! submission queue (`ServerConfig::queue_depth`) blocks producers when
+//! the router falls behind; per-bucket inflight caps
+//! (`ServingConfig::max_inflight`, enforced by [`Batcher::poll`]) stop a
+//! slow long-sequence bucket from monopolising the pool while short
+//! buckets starve; and each worker's bounded job queue blocks the
+//! dispatcher if a worker stalls.
+//!
+//! **Shutdown order.** `Server::shutdown` (or `Drop`) flips the stop
+//! flag and joins the router; the router drops the [`EnginePool`], whose
+//! `Drop` closes every worker's job queue and then joins each worker —
+//! no detached threads (the old `EngineHandle` detach-on-drop leak is
+//! gone; the handle is now a thin wrapper over a 1-worker pool).
 
 mod batcher;
 mod engine;
@@ -20,8 +43,7 @@ mod metrics;
 mod server;
 pub mod trace;
 
-pub use batcher::{Batcher, BatcherConfig, Bucket, PendingRequest};
-pub use engine::{EngineHandle, EngineJob};
-pub use batcher::FormedBatch;
+pub use batcher::{Batcher, BatcherConfig, Bucket, FormedBatch, PendingRequest};
+pub use engine::{EngineHandle, EnginePool, PoolCompletion, PoolJob};
 pub use metrics::{MetricsSnapshot, ServingMetrics};
 pub use server::{Response, Server, ServerConfig};

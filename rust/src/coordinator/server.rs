@@ -1,24 +1,34 @@
-//! The serving front-end: ties the router/batcher loop to the engine.
+//! The serving front-end: a pipelined dispatch/completion state machine
+//! over the engine pool.
 //!
-//! Single-inflight design (the vLLM engine-step loop): the router forms a
-//! batch, executes it on the engine, distributes responses, repeats.
-//! Requests keep accumulating in the batcher while a batch is in flight,
-//! so throughput comes from batching, and latency from the flush
-//! deadline.
+//! The router thread runs three overlapped stages (the ones
+//! `experiments/hotpath.rs` times): it **accepts** submissions into the
+//! length-bucketing batcher, **dispatches** every formable batch to the
+//! least-loaded engine worker (bounded per bucket by
+//! `ServingConfig::max_inflight`), and **completes** finished batches —
+//! decoding logits and answering each request's reply channel — while
+//! other batches are still executing. With one worker and
+//! `max_inflight: 1` this degenerates to the original single-inflight
+//! loop (same responses, FIFO within bucket).
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TryRecvError};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
+};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::batcher::{Batcher, BatcherConfig, Bucket, PendingRequest};
-use super::engine::EngineHandle;
+use super::batcher::{Batcher, BatcherConfig, Bucket, FormedBatch, PendingRequest};
+use super::engine::{EnginePool, PoolCompletion, PoolJob};
 use super::metrics::{MetricsSnapshot, ServingMetrics};
-use crate::runtime::HostTensor;
+use crate::config::ServingConfig;
+use crate::runtime::{HostTensor, Manifest};
 use crate::tokenizer::special;
+use crate::util::decode;
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -31,6 +41,8 @@ pub struct ServerConfig {
     pub batcher: BatcherConfig,
     /// submission queue depth (backpressure bound)
     pub queue_depth: usize,
+    /// engine-pool shape: worker count + per-bucket inflight cap
+    pub serving: ServingConfig,
 }
 
 impl ServerConfig {
@@ -46,6 +58,7 @@ impl ServerConfig {
             ],
             batcher: BatcherConfig::default(),
             queue_depth: 256,
+            serving: ServingConfig::default(),
         }
     }
 }
@@ -61,9 +74,17 @@ pub struct Response {
     pub truncated: bool,
 }
 
-struct Submission {
-    req: PendingRequest,
-    reply: Sender<Response>,
+enum Submission {
+    Request {
+        req: PendingRequest,
+        reply: Sender<Response>,
+    },
+    /// Warm the given artifacts on every pool worker; each worker acks
+    /// once on `done`.
+    Warmup {
+        artifacts: Vec<String>,
+        done: Sender<std::result::Result<(), String>>,
+    },
 }
 
 /// Running server handle.
@@ -73,21 +94,24 @@ pub struct Server {
     metrics: Arc<ServingMetrics>,
     stop: Arc<AtomicBool>,
     join: Option<JoinHandle<()>>,
+    /// serving buckets, sorted by seq_len (for warmup routing)
+    buckets: Vec<Bucket>,
+    workers: usize,
 }
 
 impl Server {
-    /// Start the engine + router threads. Blocks until the engine has
-    /// compiled nothing yet (lazy) but has loaded the manifest.
+    /// Start the engine pool + router thread. The manifest is parsed
+    /// once here and shared with every worker; artifacts compile lazily
+    /// on first use (or eagerly via [`Server::warmup`]).
     pub fn start(cfg: ServerConfig) -> Result<Self> {
-        let engine = EngineHandle::spawn(cfg.artifacts.clone(), cfg.queue_depth)?;
-        // discover buckets from the manifest (router side reads it too)
-        let manifest = crate::runtime::Manifest::load(&cfg.artifacts)?;
+        cfg.serving.validate()?;
+        let manifest = Arc::new(Manifest::load(&cfg.artifacts)?);
         let filters: Vec<(&str, &str)> = cfg
             .bucket_filters
             .iter()
             .map(|(k, v)| (k.as_str(), v.as_str()))
             .collect();
-        let buckets: Vec<Bucket> = manifest
+        let mut buckets: Vec<Bucket> = manifest
             .select(&filters)
             .into_iter()
             .map(|e| {
@@ -99,6 +123,7 @@ impl Server {
         if buckets.is_empty() {
             anyhow::bail!("no artifacts match the bucket filters {filters:?}");
         }
+        buckets.sort_by_key(|b| b.seq_len);
         // vocab for logits decoding, from the first bucket's fwd output
         let vocab = manifest
             .get(&buckets[0].artifact)?
@@ -108,32 +133,45 @@ impl Server {
             .map(|o| *o.dims.last().unwrap_or(&0))
             .context("fwd artifact has no output")?;
 
+        let pool =
+            EnginePool::spawn(manifest.clone(), cfg.serving.engine_workers, cfg.queue_depth)?;
         let (tx, rx): (SyncSender<Submission>, Receiver<Submission>) =
             sync_channel(cfg.queue_depth);
         let metrics = Arc::new(ServingMetrics::default());
+        metrics.set_workers(cfg.serving.engine_workers);
         let stop = Arc::new(AtomicBool::new(false));
         let m2 = metrics.clone();
         let stop2 = stop.clone();
-        let batcher_cfg = cfg.batcher;
+        let mut batcher_cfg = cfg.batcher;
+        batcher_cfg.max_inflight = cfg.serving.max_inflight;
+        let router_buckets = buckets.clone();
         let join = std::thread::Builder::new()
             .name("bigbird-router".into())
             .spawn(move || {
-                router_loop(rx, engine, buckets, batcher_cfg, vocab, m2, stop2);
+                router_loop(rx, pool, router_buckets, batcher_cfg, vocab, m2, stop2);
             })
             .context("spawning router")?;
-        Ok(Server { tx, next_id: AtomicU64::new(1), metrics, stop, join: Some(join) })
+        Ok(Server {
+            tx,
+            next_id: AtomicU64::new(1),
+            metrics,
+            stop,
+            join: Some(join),
+            buckets,
+            workers: cfg.serving.engine_workers,
+        })
     }
 
     /// Submit a fill-mask request. Returns the response channel.
     pub fn submit(&self, tokens: Vec<i32>) -> Result<Receiver<Response>> {
-        let (reply, rx) = std::sync::mpsc::channel();
+        let (reply, rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.tx
-            .send(Submission {
+            .send(Submission::Request {
                 req: PendingRequest { id, tokens, enqueued: Instant::now() },
                 reply,
             })
-            .context("server stopped")?;
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
         Ok(rx)
     }
 
@@ -142,85 +180,154 @@ impl Server {
         self.metrics.snapshot()
     }
 
-    /// Warm up: submit one dummy request per length (compiling each
-    /// bucket's artifact + initialising params), wait for completion,
-    /// then reset metrics so measurements exclude compilation.
+    /// Warm up: compile the bucket artifact for each length and
+    /// initialise its parameters on **every** pool worker (so measured
+    /// traffic never hits a cold compile on any worker), then reset
+    /// metrics so measurements exclude compilation.
     pub fn warmup(&self, lens: &[usize]) -> Result<()> {
-        let mut rxs = Vec::new();
+        let mut artifacts: Vec<String> = Vec::new();
         for &len in lens {
-            rxs.push(self.submit(vec![crate::tokenizer::special::CLS; len.max(1)])?);
+            let b = self
+                .buckets
+                .iter()
+                .find(|b| b.seq_len >= len)
+                .unwrap_or(self.buckets.last().expect("server has buckets"));
+            if !artifacts.contains(&b.artifact) {
+                artifacts.push(b.artifact.clone());
+            }
         }
-        for rx in rxs {
-            rx.recv().map_err(|_| anyhow::anyhow!("warmup request dropped"))?;
+        let (done_tx, done_rx) = channel();
+        self.tx
+            .send(Submission::Warmup { artifacts, done: done_tx })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        for _ in 0..self.workers {
+            done_rx
+                .recv()
+                .context("server stopped during warmup")?
+                .map_err(|e| anyhow::anyhow!("warmup failed: {e}"))?;
         }
         self.metrics.reset();
         Ok(())
     }
 
-    /// Stop the router (drains nothing; pending requests get dropped).
+    /// Stop the router and the engine pool (drains nothing; pending
+    /// requests get dropped). Shutdown order: router exits first, then
+    /// the pool's `Drop` closes each worker queue and joins the workers.
     pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        drop(self.tx.clone()); // router wakes on channel activity or timeout
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
     }
 }
 
+impl Drop for Server {
+    fn drop(&mut self) {
+        // Dropping without shutdown() must not leak the router or the
+        // engine workers.
+        self.stop_and_join();
+    }
+}
+
+/// A batch that has been dispatched to the pool and not completed yet.
+struct InflightBatch {
+    bucket_idx: usize,
+    seq_len: usize,
+    requests: Vec<PendingRequest>,
+    truncated: Vec<bool>,
+}
+
+/// Everything the dispatch/completion handlers touch, so the stage
+/// functions stay small.
+struct RouterState {
+    batcher: Batcher,
+    pool: EnginePool,
+    replies: HashMap<u64, Sender<Response>>,
+    inflight: HashMap<u64, InflightBatch>,
+    next_batch_id: u64,
+    vocab: usize,
+    metrics: Arc<ServingMetrics>,
+}
+
 fn router_loop(
     rx: Receiver<Submission>,
-    engine: EngineHandle,
+    pool: EnginePool,
     buckets: Vec<Bucket>,
     batcher_cfg: BatcherConfig,
     vocab: usize,
     metrics: Arc<ServingMetrics>,
     stop: Arc<AtomicBool>,
 ) {
-    let mut batcher = Batcher::new(buckets, batcher_cfg);
-    let mut replies: std::collections::HashMap<u64, Sender<Response>> =
-        std::collections::HashMap::new();
+    let mut st = RouterState {
+        batcher: Batcher::new(buckets, batcher_cfg),
+        pool,
+        replies: HashMap::new(),
+        inflight: HashMap::new(),
+        next_batch_id: 1,
+        vocab,
+        metrics,
+    };
+    let wait = Duration::from_millis(1);
+    // The loop exits only via the stop flag: the Server owns the sole
+    // submission sender and always sets stop + joins this thread before
+    // dropping it, so a disconnected channel implies stop is (about to
+    // be) set.
     loop {
         if stop.load(Ordering::SeqCst) {
             return;
         }
-        // drain the submission channel without blocking too long
-        let deadline = Duration::from_millis(2);
-        match rx.recv_timeout(deadline) {
-            Ok(sub) => {
-                replies.insert(sub.req.id, sub.reply);
-                batcher.push(sub.req);
-                // opportunistically drain more
-                loop {
-                    match rx.try_recv() {
-                        Ok(s) => {
-                            replies.insert(s.req.id, s.reply);
-                            batcher.push(s.req);
-                        }
-                        Err(TryRecvError::Empty) => break,
-                        Err(TryRecvError::Disconnected) => break,
-                    }
-                }
-            }
-            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                if batcher.pending() == 0 {
-                    return;
-                }
+        // stage 3: collect completions first — frees bucket inflight
+        // slots and answers waiting clients
+        while let Some(c) = st.pool.try_completion() {
+            complete_batch(&mut st, c);
+        }
+        // stage 1: accept new submissions without blocking
+        loop {
+            match rx.try_recv() {
+                Ok(sub) => accept(&mut st, sub),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
             }
         }
-        while let Some(fb) = batcher.poll(Instant::now()) {
-            run_batch(&engine, fb, vocab, &metrics, &mut replies);
+        // stage 2: dispatch every formable batch (poll skips buckets at
+        // their inflight cap, so long buckets can't starve short ones)
+        let now = Instant::now();
+        while let Some(fb) = st.batcher.poll(now) {
+            dispatch_batch(&mut st, fb);
+        }
+        // idle: block briefly on the event that can make progress next
+        if !st.inflight.is_empty() {
+            if let Some(c) = st.pool.completion_timeout(wait) {
+                complete_batch(&mut st, c);
+            }
+        } else {
+            match rx.recv_timeout(wait) {
+                Ok(sub) => accept(&mut st, sub),
+                Err(RecvTimeoutError::Timeout) => {}
+                // see loop header — pace the spin until stop lands
+                Err(RecvTimeoutError::Disconnected) => std::thread::sleep(wait),
+            }
         }
     }
 }
 
-fn run_batch(
-    engine: &EngineHandle,
-    fb: super::batcher::FormedBatch,
-    vocab: usize,
-    metrics: &ServingMetrics,
-    replies: &mut std::collections::HashMap<u64, Sender<Response>>,
-) {
+fn accept(st: &mut RouterState, sub: Submission) {
+    match sub {
+        Submission::Request { req, reply } => {
+            st.replies.insert(req.id, reply);
+            st.batcher.push(req);
+        }
+        Submission::Warmup { artifacts, done } => {
+            st.pool.warm(&artifacts, &done);
+        }
+    }
+}
+
+/// Pad/stack a formed batch and hand it to the least-loaded worker.
+fn dispatch_batch(st: &mut RouterState, fb: FormedBatch) {
     let b = fb.bucket.batch;
     let s = fb.bucket.seq_len;
     let mut tokens = vec![special::PAD; b * s];
@@ -234,110 +341,104 @@ fn run_batch(
             *v = 1.0;
         }
     }
-    metrics.record_batch(fb.requests.len(), b);
-    let inputs = vec![
-        HostTensor::I32 { shape: vec![b, s], data: tokens.clone() },
-        HostTensor::F32 { shape: vec![b, s], data: kv_valid },
-    ];
-    // the fwd artifact signature is (params, tokens, kv_valid) — the
-    // engine owns the params; serving artifacts are wrapped to take
-    // (tokens, kv_valid) only when params are baked... our fwd artifacts
-    // take params explicitly, so the server keeps a parameter store.
-    let result = engine.execute_with_params(&fb.bucket.artifact, inputs);
-    match result {
-        Ok(outs) => {
-            let logits = match &outs[0] {
-                HostTensor::F32 { data, .. } => data,
-                _ => {
-                    metrics.record_error();
-                    return;
-                }
-            };
-            for (row, req) in fb.requests.iter().enumerate() {
-                let mut preds = Vec::new();
-                for (pos, &t) in req.tokens.iter().take(s).enumerate() {
-                    if t == special::MASK {
-                        let base = (row * s + pos) * vocab;
-                        let row_logits = &logits[base..base + vocab];
-                        let mut best = 0usize;
-                        for (j, &x) in row_logits.iter().enumerate() {
-                            if x > row_logits[best] {
-                                best = j;
-                            }
-                        }
-                        preds.push((pos, best as i32));
-                    }
-                }
-                let lat = req.enqueued.elapsed().as_secs_f64() * 1000.0;
-                metrics.record_latency(lat);
-                if truncated[row] {
-                    metrics.record_truncated();
-                }
-                if let Some(tx) = replies.remove(&req.id) {
-                    let _ = tx.send(Response {
-                        id: req.id,
-                        predictions: preds,
-                        latency_ms: lat,
-                        truncated: truncated[row],
-                    });
-                }
-            }
+    let batch_id = st.next_batch_id;
+    st.next_batch_id += 1;
+    let job = PoolJob {
+        batch_id,
+        artifact: fb.bucket.artifact.clone(),
+        inputs: vec![
+            HostTensor::I32 { shape: vec![b, s], data: tokens },
+            HostTensor::F32 { shape: vec![b, s], data: kv_valid },
+        ],
+        // the fwd artifact signature is (params, tokens, kv_valid); each
+        // worker owns its params (deterministic init, so all agree)
+        with_params: true,
+        submitted: Instant::now(),
+    };
+    match st.pool.submit(job) {
+        Ok(_worker) => {
+            // counted only once actually dispatched, so batch-fill and
+            // the per-worker job totals stay consistent
+            st.metrics.record_batch(fb.requests.len(), b);
+            st.inflight.insert(
+                batch_id,
+                InflightBatch {
+                    bucket_idx: fb.bucket_idx,
+                    seq_len: s,
+                    requests: fb.requests,
+                    truncated,
+                },
+            );
+            st.metrics.record_dispatch(st.pool.inflight());
         }
         Err(e) => {
-            eprintln!("[server] batch failed: {e:#}");
-            metrics.record_error();
+            eprintln!("[server] dispatch failed: {e:#}");
+            st.metrics.record_error();
+            st.batcher.complete(fb.bucket_idx);
             for req in &fb.requests {
-                replies.remove(&req.id);
+                st.replies.remove(&req.id);
             }
         }
     }
 }
 
-// Per-thread parameter store for fwd artifacts. The router thread is the
-// only user in practice; tests drive it from their own thread, which gets
-// an independent (but equally valid) cache.
-thread_local! {
-    static PARAMS_CACHE: std::cell::RefCell<std::collections::HashMap<String, HostTensor>> =
-        std::cell::RefCell::new(std::collections::HashMap::new());
+/// Decode one completed batch and answer its requests.
+fn complete_batch(st: &mut RouterState, c: PoolCompletion) {
+    let Some(ib) = st.inflight.remove(&c.batch_id) else {
+        // unknown id: should not happen, but never poison the loop
+        st.metrics.record_error();
+        return;
+    };
+    st.batcher.complete(ib.bucket_idx);
+    st.metrics.record_job(
+        c.worker,
+        c.queue_wait.as_secs_f64() * 1e3,
+        c.exec.as_secs_f64() * 1e3,
+    );
+    let outs = match c.result {
+        Ok(outs) => outs,
+        Err(e) => {
+            eprintln!("[server] batch {} failed on worker {}: {e}", c.batch_id, c.worker);
+            st.metrics.record_error();
+            drop_replies(st, &ib);
+            return;
+        }
+    };
+    let logits = match outs.first().map(|t| t.as_f32()) {
+        Some(Ok(l)) => l,
+        _ => {
+            st.metrics.record_error();
+            drop_replies(st, &ib);
+            return;
+        }
+    };
+    for (row, req) in ib.requests.iter().enumerate() {
+        let preds = decode::mask_predictions(
+            logits,
+            row,
+            ib.seq_len,
+            st.vocab,
+            &req.tokens,
+            special::MASK,
+        );
+        let lat = req.enqueued.elapsed().as_secs_f64() * 1000.0;
+        st.metrics.record_latency(lat);
+        if ib.truncated[row] {
+            st.metrics.record_truncated();
+        }
+        if let Some(tx) = st.replies.remove(&req.id) {
+            let _ = tx.send(Response {
+                id: req.id,
+                predictions: preds,
+                latency_ms: lat,
+                truncated: ib.truncated[row],
+            });
+        }
+    }
 }
 
-impl EngineHandle {
-    /// Execute a fwd artifact, prepending its cached parameters
-    /// (initialised from the matching `init_*` artifact on first use, or
-    /// whatever [`EngineHandle::load_params`] installed).
-    pub fn execute_with_params(
-        &self,
-        fwd_artifact: &str,
-        mut inputs: Vec<HostTensor>,
-    ) -> Result<Vec<HostTensor>> {
-        let params = self.params_for(fwd_artifact)?;
-        let mut all = Vec::with_capacity(1 + inputs.len());
-        all.push(params);
-        all.append(&mut inputs);
-        self.execute(fwd_artifact, all)
-    }
-
-    fn params_for(&self, fwd_artifact: &str) -> Result<HostTensor> {
-        if let Some(p) =
-            PARAMS_CACHE.with(|c| c.borrow().get(fwd_artifact).cloned())
-        {
-            return Ok(p);
-        }
-        let init_name = fwd_artifact.replacen("fwd_", "init_", 1);
-        let mut out = self.execute(&init_name, vec![])?;
-        let p = out.remove(0);
-        PARAMS_CACHE.with(|c| {
-            c.borrow_mut().insert(fwd_artifact.to_string(), p.clone());
-        });
-        Ok(p)
-    }
-
-    /// Install trained parameters for a fwd artifact (e.g. from a
-    /// checkpoint) so subsequent batches serve the trained model.
-    /// Thread-local: call from the thread that will execute batches.
-    pub fn load_params(&self, fwd_artifact: &str, params: HostTensor) {
-        PARAMS_CACHE.with(|c| {
-            c.borrow_mut().insert(fwd_artifact.to_string(), params);
-        });
+fn drop_replies(st: &mut RouterState, ib: &InflightBatch) {
+    for req in &ib.requests {
+        st.replies.remove(&req.id);
     }
 }

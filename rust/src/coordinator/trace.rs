@@ -78,6 +78,39 @@ pub fn generate(
     events
 }
 
+/// Two-point length mixture: each request is `long` tokens with
+/// probability `frac_long`, else `short`. This is the mixed
+/// 512/2048-style traffic the engine-pool scaling bench uses to show
+/// that long-sequence buckets no longer head-of-line-block short ones.
+pub fn bimodal(
+    n: usize,
+    arrival: Arrival,
+    short: usize,
+    long: usize,
+    frac_long: f64,
+    seed: u64,
+) -> Vec<TraceEvent> {
+    let mut rng = Rng::new(seed).fold_in(0xB1D0);
+    let mut events = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    for i in 0..n {
+        match arrival {
+            Arrival::Poisson { rate } => {
+                t += -(1.0 - rng.f64()).ln() / rate;
+            }
+            Arrival::Bursty { burst, period_s } => {
+                if i % burst == 0 && i > 0 {
+                    t += period_s;
+                }
+            }
+            Arrival::Closed => {}
+        }
+        let len = if rng.coin(frac_long) { long } else { short };
+        events.push(TraceEvent { at_s: t, len, masks: 1 + rng.below(4) });
+    }
+    events
+}
+
 /// Summary statistics of a trace (for reporting).
 pub fn summarize(events: &[TraceEvent]) -> (f64, usize, usize) {
     let lens: Vec<f64> = events.iter().map(|e| e.len as f64).collect();
@@ -117,6 +150,17 @@ mod tests {
         let tr = generate(30, Arrival::Bursty { burst: 10, period_s: 1.0 }, 256, 1024, 3);
         assert_eq!(tr[9].at_s, tr[0].at_s);
         assert!(tr[10].at_s >= tr[9].at_s + 1.0);
+    }
+
+    #[test]
+    fn bimodal_lengths_are_two_point() {
+        let tr = bimodal(1000, Arrival::Closed, 400, 1800, 0.4, 9);
+        assert!(tr.iter().all(|e| e.len == 400 || e.len == 1800));
+        let longs = tr.iter().filter(|e| e.len == 1800).count();
+        assert!((250..550).contains(&longs), "long fraction off: {longs}/1000");
+        assert!(tr.iter().all(|e| (1..=4).contains(&e.masks)));
+        // deterministic
+        assert_eq!(tr, bimodal(1000, Arrival::Closed, 400, 1800, 0.4, 9));
     }
 
     #[test]

@@ -71,23 +71,16 @@ pub fn run(flags: &Flags) -> Result<()> {
             let out = fwd.run(&[params.clone(), tok_t, kv_t])?;
             t_exec.push(t0.elapsed().as_secs_f64() * 1e3);
 
-            // stage 3: decode (argmax at mask positions)
+            // stage 3: decode (argmax at mask positions — the same
+            // helper the server's response path uses)
             let t0 = Instant::now();
             let logits = out[0].as_f32()?;
             let mut preds = 0usize;
             for (row, r) in reqs.iter().enumerate() {
-                for (pos, &t) in r.iter().enumerate() {
-                    if t == special::MASK {
-                        let base = (row * s + pos) * vocab;
-                        let rowl = &logits[base..base + vocab];
-                        let mut best = 0usize;
-                        for (j, &x) in rowl.iter().enumerate() {
-                            if x > rowl[best] {
-                                best = j;
-                            }
-                        }
-                        preds += best; // prevent dead-code elimination
-                    }
+                for (_, tok) in
+                    crate::util::decode::mask_predictions(logits, row, s, vocab, r, special::MASK)
+                {
+                    preds += tok as usize; // prevent dead-code elimination
                 }
             }
             std::hint::black_box(preds);

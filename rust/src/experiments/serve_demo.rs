@@ -17,8 +17,14 @@ use crate::util::Rng;
 pub fn run(flags: &Flags) -> Result<()> {
     let mut log = RunLog::new("serve_demo");
     log.line("Long-document fill-mask serving demo (BigBird buckets from the manifest)\n");
-    let server = Arc::new(Server::start(ServerConfig::mlm_default(&flags.artifacts))?);
-    log.line("warming up buckets (compiling artifacts once) ...");
+    let mut cfg = ServerConfig::mlm_default(&flags.artifacts);
+    cfg.serving = flags.serving();
+    log.line(format!(
+        "engine pool: {} worker(s), max {} inflight batches per bucket",
+        cfg.serving.engine_workers, cfg.serving.max_inflight
+    ));
+    let server = Arc::new(Server::start(cfg)?);
+    log.line("warming up buckets (compiling artifacts on every worker once) ...");
     server.warmup(&[128, 256, 512, 1024, 2048])?;
 
     // workload: 64 requests across a long-tailed length distribution
@@ -65,8 +71,20 @@ pub fn run(flags: &Flags) -> Result<()> {
             vec!["p99 latency ms".into(), format!("{:.0}", m.p99_ms)],
             vec!["truncated".into(), format!("{}", m.truncated)],
             vec!["errors".into(), format!("{}", m.errors)],
+            vec!["mean queue-wait ms".into(), format!("{:.2}", m.mean_queue_wait_ms)],
+            vec!["mean execute ms".into(), format!("{:.2}", m.mean_exec_ms)],
+            vec!["mean inflight depth".into(), format!("{:.2}", m.mean_inflight)],
+            vec!["peak inflight depth".into(), format!("{}", m.peak_inflight)],
         ],
     ));
+    let utils = m.worker_utilization(wall);
+    for (w, (&jobs, util)) in m.worker_jobs.iter().zip(&utils).enumerate() {
+        log.line(format!(
+            "worker {w}: {jobs} batches, busy {:.0} ms, utilization {:.0}%",
+            m.worker_busy_ms[w],
+            100.0 * util
+        ));
+    }
     let n_preds: usize = responses.iter().map(|r| r.predictions.len()).sum();
     log.line(format!(
         "\n{} responses, {} mask predictions total; every request above 2048",

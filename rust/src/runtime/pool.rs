@@ -9,6 +9,7 @@
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -17,21 +18,24 @@ use super::executable::ArtifactExecutable;
 use super::manifest::Manifest;
 
 /// Pool keyed by artifact name. Engine-thread only (interior mutability
-/// via `RefCell`, `Rc` handles shared within the thread).
+/// via `RefCell`, `Rc` handles shared within the thread). The manifest
+/// is held behind an `Arc` so an engine *pool* of N workers can share
+/// one parsed copy instead of re-parsing it N times.
 pub struct ExecutablePool {
     runtime: Runtime,
-    manifest: Manifest,
+    manifest: Arc<Manifest>,
     cache: RefCell<HashMap<String, Rc<ArtifactExecutable>>>,
     /// Number of cache misses (compiles) — exposed for metrics.
     compiles: RefCell<usize>,
 }
 
 impl ExecutablePool {
-    /// New pool over a loaded manifest.
-    pub fn new(runtime: Runtime, manifest: Manifest) -> Self {
+    /// New pool over a loaded manifest — owned (`Manifest`) or shared
+    /// (`Arc<Manifest>`, zero-copy across workers).
+    pub fn new(runtime: Runtime, manifest: impl Into<Arc<Manifest>>) -> Self {
         ExecutablePool {
             runtime,
-            manifest,
+            manifest: manifest.into(),
             cache: RefCell::new(HashMap::new()),
             compiles: RefCell::new(0),
         }

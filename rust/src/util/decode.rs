@@ -1,0 +1,77 @@
+//! Logits decoding shared by the serving response path and the hot-path
+//! profiler: argmax over the vocabulary at each `<mask>` position of one
+//! padded batch row.
+
+/// Index of the largest element; ties break toward the first occurrence.
+/// Empty input returns 0 (callers index fixed-size vocab slices).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (j, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+/// Decode the fill-mask predictions for batch row `row` of a
+/// `[batch, seq_len, vocab]` logits buffer: for every position of
+/// `tokens` (clipped to `seq_len` — the request may have been truncated
+/// to the bucket) holding `mask`, return `(position, argmax token id)`.
+pub fn mask_predictions(
+    logits: &[f32],
+    row: usize,
+    seq_len: usize,
+    vocab: usize,
+    tokens: &[i32],
+    mask: i32,
+) -> Vec<(usize, i32)> {
+    let mut preds = Vec::new();
+    for (pos, &t) in tokens.iter().take(seq_len).enumerate() {
+        if t == mask {
+            let base = (row * seq_len + pos) * vocab;
+            preds.push((pos, argmax(&logits[base..base + vocab]) as i32));
+        }
+    }
+    preds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0, 5.0, 1.0]), 0); // tie → first
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn decodes_only_mask_positions_of_the_right_row() {
+        let (seq, vocab, mask) = (4usize, 3usize, -1i32);
+        // two rows; row 1's logits peak at token 2 everywhere, row 0 at 1
+        let mut logits = vec![0.0f32; 2 * seq * vocab];
+        for pos in 0..seq {
+            logits[(pos) * vocab + 1] = 1.0; // row 0
+            logits[(seq + pos) * vocab + 2] = 1.0; // row 1
+        }
+        let tokens = vec![7, mask, 7, mask];
+        assert_eq!(
+            mask_predictions(&logits, 0, seq, vocab, &tokens, mask),
+            vec![(1, 1), (3, 1)]
+        );
+        assert_eq!(
+            mask_predictions(&logits, 1, seq, vocab, &tokens, mask),
+            vec![(1, 2), (3, 2)]
+        );
+    }
+
+    #[test]
+    fn truncated_request_masks_beyond_seq_len_are_ignored() {
+        let (seq, vocab, mask) = (2usize, 2usize, -1i32);
+        let logits = vec![0.0f32, 1.0, 0.0, 1.0];
+        let tokens = vec![mask, 5, mask]; // third position is past the bucket
+        assert_eq!(mask_predictions(&logits, 0, seq, vocab, &tokens, mask), vec![(0, 1)]);
+    }
+}

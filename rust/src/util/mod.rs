@@ -2,6 +2,7 @@
 //! in this offline environment), simple statistics helpers, and a tiny
 //! property-testing harness used by the test suite.
 
+pub mod decode;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

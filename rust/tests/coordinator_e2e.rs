@@ -1,23 +1,34 @@
-//! Coordinator end-to-end: real engine thread + router + batcher serving
-//! fill-mask over the AOT artifacts.
+//! Coordinator end-to-end: real engine pool + router + batcher serving
+//! fill-mask over the AOT artifacts, plus pure-logic dispatch-order
+//! checks for the pipelined path.
 
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use bigbird::coordinator::{BatcherConfig, Server, ServerConfig};
+use bigbird::config::ServingConfig;
+use bigbird::coordinator::{
+    Batcher, BatcherConfig, Bucket, PendingRequest, Server, ServerConfig,
+};
 use bigbird::tokenizer::special;
 use bigbird::util::Rng;
 
-fn artifacts() -> String {
-    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
-        .join("artifacts")
-        .to_string_lossy()
-        .to_string()
+/// AOT artifact dir, or `None` when artifacts haven't been generated
+/// (bare checkout / CI without the Python compile step) — tests skip
+/// rather than fail so `cargo test` stays meaningful without them.
+fn artifacts() -> Option<String> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: no artifacts (generate them via python/compile/aot.py)");
+        return None;
+    }
+    Some(dir.to_string_lossy().to_string())
 }
 
 #[test]
 fn serve_fill_mask_end_to_end() {
-    let mut cfg = ServerConfig::mlm_default(&artifacts());
-    cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(5) };
+    let Some(dir) = artifacts() else { return };
+    let mut cfg = ServerConfig::mlm_default(&dir);
+    cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(5), ..Default::default() };
     let server = Server::start(cfg).expect("server start (needs `make artifacts`)");
 
     let mut rng = Rng::new(3);
@@ -63,8 +74,9 @@ fn serve_fill_mask_end_to_end() {
 
 #[test]
 fn oversized_requests_are_truncated_not_dropped() {
-    let mut cfg = ServerConfig::mlm_default(&artifacts());
-    cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(2) };
+    let Some(dir) = artifacts() else { return };
+    let mut cfg = ServerConfig::mlm_default(&dir);
+    cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(2), ..Default::default() };
     let server = Server::start(cfg).unwrap();
     let mut tokens: Vec<i32> = vec![7; 4000];
     tokens[10] = special::MASK;
@@ -78,4 +90,168 @@ fn oversized_requests_are_truncated_not_dropped() {
     let m = server.metrics();
     assert_eq!(m.truncated, 1);
     server.shutdown();
+}
+
+/// Build a fill-mask request of `len` tokens with exactly the given
+/// (sorted, distinct) masked positions.
+fn request_with_masks(rng: &mut Rng, len: usize, n_masks: usize) -> (Vec<i32>, Vec<usize>) {
+    let mut tokens: Vec<i32> = (0..len).map(|_| 6 + rng.below(500) as i32).collect();
+    let mut positions = Vec::new();
+    while positions.len() < n_masks {
+        let p = rng.below(len);
+        if !positions.contains(&p) {
+            positions.push(p);
+        }
+    }
+    positions.sort_unstable();
+    for &p in &positions {
+        tokens[p] = special::MASK;
+    }
+    (tokens, positions)
+}
+
+/// Multi-worker pipelined dispatch must never lose, duplicate, or
+/// cross-wire a response: each request carries a distinctive mask
+/// fingerprint, and the response on its channel must match it exactly.
+#[test]
+fn concurrent_clients_multi_worker_no_crosswiring() {
+    let Some(dir) = artifacts() else { return };
+    let mut cfg = ServerConfig::mlm_default(&dir);
+    cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(2), ..Default::default() };
+    cfg.serving = ServingConfig { engine_workers: 2, max_inflight: 2 };
+    let server = Arc::new(Server::start(cfg).expect("server start (needs `make artifacts`)"));
+    server.warmup(&[512, 2048]).unwrap();
+
+    let clients: Vec<_> = (0..4u64)
+        .map(|c| {
+            let server = server.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(10 + c);
+                for k in 0..6usize {
+                    let len = if (k + c as usize) % 2 == 0 { 400 } else { 1500 };
+                    let n_masks = 1 + (c as usize * 6 + k) % 4;
+                    let (tokens, positions) = request_with_masks(&mut rng, len, n_masks);
+                    let rx = server.submit(tokens).unwrap();
+                    let resp = rx
+                        .recv_timeout(Duration::from_secs(600))
+                        .expect("response not lost");
+                    let got: Vec<usize> = resp.predictions.iter().map(|p| p.0).collect();
+                    assert_eq!(got, positions, "client {c} req {k}: response cross-wired");
+                    assert!(!resp.truncated);
+                    assert!(
+                        rx.try_recv().is_err(),
+                        "client {c} req {k}: duplicate response"
+                    );
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().expect("client thread");
+    }
+    let m = server.metrics();
+    assert_eq!(m.requests, 24);
+    assert_eq!(m.errors, 0, "{m:?}");
+    assert!(m.peak_inflight >= 1);
+    // every dispatched batch completed on some worker
+    assert_eq!(m.worker_jobs.iter().sum::<usize>(), m.batches);
+    Arc::try_unwrap(server)
+        .unwrap_or_else(|_| panic!("server still shared"))
+        .shutdown();
+}
+
+/// A 1-worker pool reproduces the single-inflight baseline: responses
+/// answer the right channels in submission (FIFO) order within a
+/// bucket, and resubmitting identical tokens yields identical
+/// predictions (deterministic params + compute).
+#[test]
+fn single_worker_pool_is_fifo_and_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let mut cfg = ServerConfig::mlm_default(&dir);
+    cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(2), ..Default::default() };
+    cfg.serving = ServingConfig { engine_workers: 1, max_inflight: 1 };
+    let server = Server::start(cfg).expect("server start (needs `make artifacts`)");
+
+    // same-bucket burst submitted from one thread: ids are assigned in
+    // submission order, so each channel must see its own id back
+    let mut rng = Rng::new(4);
+    let mut rxs = Vec::new();
+    for _ in 0..8 {
+        let (tokens, _) = request_with_masks(&mut rng, 300, 2);
+        rxs.push(server.submit(tokens).unwrap());
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(600)).expect("response");
+        assert_eq!(resp.id, i as u64 + 1, "bucket order broken");
+    }
+
+    // determinism: identical request → identical predictions
+    let (tokens, _) = request_with_masks(&mut rng, 300, 3);
+    let first = server
+        .submit(tokens.clone())
+        .unwrap()
+        .recv_timeout(Duration::from_secs(600))
+        .unwrap();
+    let second = server
+        .submit(tokens)
+        .unwrap()
+        .recv_timeout(Duration::from_secs(600))
+        .unwrap();
+    assert_eq!(first.predictions, second.predictions);
+    let m = server.metrics();
+    assert_eq!(m.errors, 0, "{m:?}");
+    server.shutdown();
+}
+
+/// Pure queueing logic (no artifacts needed): under an inflight cap the
+/// dispatcher drains each bucket FIFO, never reorders within a bucket,
+/// and lets other buckets proceed while one is saturated.
+#[test]
+fn dispatch_order_is_fifo_within_bucket_under_inflight_cap() {
+    let buckets = vec![
+        Bucket { artifact: "s512".into(), seq_len: 512, batch: 4 },
+        Bucket { artifact: "s2048".into(), seq_len: 2048, batch: 2 },
+    ];
+    let mut b = Batcher::new(
+        buckets,
+        BatcherConfig { max_wait: Duration::ZERO, max_inflight: 1 },
+    );
+    let t = Instant::now();
+    for id in 0..12u64 {
+        b.push(PendingRequest { id, tokens: vec![1; 300], enqueued: t });
+    }
+    for id in 100..105u64 {
+        b.push(PendingRequest { id, tokens: vec![1; 1800], enqueued: t });
+    }
+    let later = t + Duration::from_millis(1);
+    let mut short_ids = Vec::new();
+    let mut long_ids = Vec::new();
+    // simulate the dispatch/complete loop: each poll dispatches, and we
+    // complete batches in arbitrary (here: immediate) order
+    let mut safety = 0;
+    loop {
+        let Some(fb) = b.poll(later) else {
+            if b.pending() == 0 {
+                break;
+            }
+            // saturated: completing the oldest inflight frees the slot —
+            // emulate both buckets' completions
+            for i in 0..b.buckets().len() {
+                while b.bucket_inflight(i) > 0 {
+                    b.complete(i);
+                }
+            }
+            safety += 1;
+            assert!(safety < 100, "dispatch loop stuck");
+            continue;
+        };
+        let sink = if fb.bucket.seq_len == 512 { &mut short_ids } else { &mut long_ids };
+        sink.extend(fb.requests.iter().map(|r| r.id));
+        assert!(
+            b.bucket_inflight(fb.bucket_idx) <= 1,
+            "inflight cap violated"
+        );
+    }
+    assert_eq!(short_ids, (0..12).collect::<Vec<u64>>());
+    assert_eq!(long_ids, (100..105).collect::<Vec<u64>>());
 }
