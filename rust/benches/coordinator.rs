@@ -1,22 +1,63 @@
 //! `cargo bench --bench coordinator` — L3 hot-path benches:
 //! 1. batcher routing/forming micro-bench (pure logic, no PJRT),
-//! 2. end-to-end serving throughput + latency percentiles under a
+//! 2. heterogeneous-pool dispatch simulation over cost-skewed backends
+//!    (pure logic): weighted expected-completion-time routing vs a
+//!    homogeneous pool on bimodal 512/2048 traffic,
+//! 3. end-to-end serving throughput + latency percentiles under a
 //!    mixed-length fill-mask workload,
-//! 3. throughput scaling curve vs engine-pool worker count on mixed
+//! 4. throughput scaling curve vs engine-pool worker count on mixed
 //!    512/2048 traffic (the pipelined-dispatch payoff: ≥1.5× at 4
 //!    workers, and a 1-worker pool reproduces the single-inflight
 //!    baseline).
+//!
+//! Benches 3 and 4 need AOT artifacts (`make artifacts`) and skip with
+//! a note when they are absent, so the artifact-free path (1 and 2)
+//! runs anywhere — including the CI smoke job, which passes
+//! `--json <path>` to capture the numbers as a workflow artifact.
 
 use std::time::{Duration, Instant};
 
 use bigbird::config::ServingConfig;
 use bigbird::coordinator::{
-    trace, Batcher, BatcherConfig, Bucket, PendingRequest, Server, ServerConfig,
+    replay, trace, Batcher, BatcherConfig, Bucket, PendingRequest, Server, ServerConfig,
+    WeightedPolicy,
 };
+use bigbird::runtime::{Backend, BackendKind, JobShape, Roofline};
 use bigbird::tokenizer::special;
 use bigbird::util::Rng;
 
-fn bench_batcher() {
+/// Flat key → value report, dumped as JSON for the CI perf trajectory.
+#[derive(Default)]
+struct Report {
+    entries: Vec<(String, f64)>,
+}
+
+impl Report {
+    fn push(&mut self, key: &str, value: f64) {
+        self.entries.push((key.to_string(), value));
+    }
+
+    /// Hand-rolled JSON (no serde in this offline environment): a flat
+    /// object of numeric fields.
+    fn to_json(&self) -> String {
+        let fields: Vec<String> =
+            self.entries.iter().map(|(k, v)| format!("  \"{k}\": {v:.6}")).collect();
+        format!("{{\n{}\n}}\n", fields.join(",\n"))
+    }
+}
+
+/// AOT artifact dir, or `None` when artifacts haven't been generated
+/// (bare checkout / CI) — PJRT-backed benches skip rather than panic.
+fn artifacts() -> Option<&'static str> {
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("(skipping PJRT benches: no artifacts; generate them via python/compile/aot.py)");
+        None
+    }
+}
+
+fn bench_batcher(report: &mut Report) {
     let buckets = vec![
         Bucket { artifact: "a".into(), seq_len: 128, batch: 8 },
         Bucket { artifact: "b".into(), seq_len: 512, batch: 4 },
@@ -43,11 +84,71 @@ fn bench_batcher() {
         formed += fb.requests.len();
     }
     let dt = t0.elapsed();
+    let mreq_s = n as f64 / dt.as_secs_f64() / 1e6;
     println!(
         "batcher: {n} requests routed+formed in {:.1} ms ({:.1} M req/s), {formed} drained",
         dt.as_secs_f64() * 1000.0,
-        n as f64 / dt.as_secs_f64() / 1e6
+        mreq_s
     );
+    report.push("batcher_mreq_per_s", mreq_s);
+}
+
+/// Heterogeneous-pool dispatch simulation (pure logic, no PJRT): replay
+/// a bimodal 512/2048 trace through the weighted policy over (a) two
+/// identical simulated CPUs and (b) a CPU + a simulated
+/// high-throughput/high-overhead accelerator, comparing modelled
+/// makespan and reporting where the long bucket landed.
+fn bench_hetero(report: &mut Report) {
+    let cpu = || Backend::simulated(BackendKind::Cpu, Roofline::for_kind(BackendKind::Cpu));
+    let accel = || {
+        Backend::simulated(
+            BackendKind::Gpu,
+            Roofline { gflops: 5000.0, gbps: 1000.0, overhead_ms: 25.0 },
+        )
+    };
+    // lens 400 → 512 bucket (batch 4), 1800 → 2048 bucket (batch 2)
+    let events = trace::bimodal(256, trace::Arrival::Closed, 400, 1800, 0.4, 5);
+    let shapes: Vec<JobShape> = events
+        .iter()
+        .map(|e| {
+            if e.len <= 512 {
+                JobShape { seq_len: 512, batch: 4 }
+            } else {
+                JobShape { seq_len: 2048, batch: 2 }
+            }
+        })
+        .collect();
+
+    // replay with up to 8 batches in flight; completions observe the
+    // backend's true (modelled) cost, refining the policy's EWMAs
+    let run = |backends: Vec<Backend>| -> (f64, Vec<usize>) {
+        let rooflines: Vec<Roofline> = backends.iter().map(|b| b.roofline).collect();
+        let mut policy = WeightedPolicy::new(backends);
+        let picks = replay(&mut policy, &shapes, 8, |w, s| rooflines[w].cost_ms(s));
+        let mut busy_ms = vec![0.0f64; rooflines.len()];
+        for (&w, &shape) in picks.iter().zip(&shapes) {
+            busy_ms[w] += rooflines[w].cost_ms(shape);
+        }
+        let makespan = busy_ms.iter().copied().fold(0.0, f64::max);
+        (makespan, picks)
+    };
+
+    let (homo_ms, _) = run(vec![cpu(), cpu()]);
+    let (hetero_ms, picks) = run(vec![cpu(), accel()]);
+    let long_total = shapes.iter().filter(|s| s.seq_len == 2048).count();
+    let long_on_accel = shapes
+        .iter()
+        .zip(&picks)
+        .filter(|(s, &w)| s.seq_len == 2048 && w == 1)
+        .count();
+    let frac = long_on_accel as f64 / long_total.max(1) as f64;
+    let speedup = homo_ms / hetero_ms;
+    println!(
+        "hetero: modelled makespan cpu:2 = {homo_ms:.0} ms, cpu:1+accel:1 = {hetero_ms:.0} ms \
+         (x{speedup:.2}); {long_on_accel}/{long_total} long batches on the accelerator"
+    );
+    report.push("hetero_speedup_modelled", speedup);
+    report.push("hetero_long_frac_on_accel", frac);
 }
 
 /// Fill-mask tokens of length `len` with three masked positions.
@@ -60,8 +161,8 @@ fn masked_request(rng: &mut Rng, len: usize) -> Vec<i32> {
     toks
 }
 
-fn bench_serving() {
-    let mut cfg = ServerConfig::mlm_default("artifacts");
+fn bench_serving(artifacts: &str, report: &mut Report) {
+    let mut cfg = ServerConfig::mlm_default(artifacts);
     cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(5), ..Default::default() };
     let server = Server::start(cfg).expect("run `make artifacts`");
     let mut rng = Rng::new(2);
@@ -92,20 +193,23 @@ fn bench_serving() {
         m.fill_ratio,
         m.batches
     );
+    report.push("serving_req_per_s", n as f64 / wall);
+    report.push("serving_p50_ms", m.p50_ms);
+    report.push("serving_p95_ms", m.p95_ms);
     server.shutdown();
 }
 
 /// Throughput scaling vs engine workers: the same mixed 512/2048-bucket
 /// closed workload replayed against pools of 1/2/4 workers.
-fn bench_scaling() {
+fn bench_scaling(artifacts: &str, report: &mut Report) {
     println!("\nscaling: mixed 512/2048 traffic vs engine workers");
     // lens 400 → 512 bucket, 1800 → 2048 bucket; 40% long requests
     let events = trace::bimodal(32, trace::Arrival::Closed, 400, 1800, 0.4, 5);
     let mut base_rps = 0.0f64;
     for workers in [1usize, 2, 4] {
-        let mut cfg = ServerConfig::mlm_default("artifacts");
+        let mut cfg = ServerConfig::mlm_default(artifacts);
         cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(5), ..Default::default() };
-        cfg.serving = ServingConfig { engine_workers: workers, max_inflight: 4 };
+        cfg.serving = ServingConfig::cpu(workers, 4);
         let server = Server::start(cfg).expect("run `make artifacts`");
         server.warmup(&[512, 2048]).unwrap();
         let mut rng = Rng::new(7);
@@ -133,13 +237,37 @@ fn bench_scaling() {
             m.peak_inflight,
             mean_util
         );
+        report.push(&format!("scaling_{workers}w_req_per_s"), rps);
         server.shutdown();
     }
 }
 
 fn main() {
+    // `cargo bench --bench coordinator -- --json <path>` writes the
+    // numbers as a flat JSON object (the CI smoke job's artifact)
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut json_path: Option<String> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == "--json" {
+            json_path = it.next().cloned();
+            if json_path.is_none() {
+                eprintln!("--json needs a path");
+                std::process::exit(2);
+            }
+        }
+    }
+
     println!("coordinator benches:\n");
-    bench_batcher();
-    bench_serving();
-    bench_scaling();
+    let mut report = Report::default();
+    bench_batcher(&mut report);
+    bench_hetero(&mut report);
+    if let Some(dir) = artifacts() {
+        bench_serving(dir, &mut report);
+        bench_scaling(dir, &mut report);
+    }
+    if let Some(path) = json_path {
+        std::fs::write(&path, report.to_json()).expect("writing bench JSON");
+        println!("(bench JSON written to {path})");
+    }
 }

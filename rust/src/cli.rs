@@ -10,6 +10,8 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::runtime::{parse_backend_specs, BackendSpec};
+
 /// Parsed global flags.
 #[derive(Debug, Default)]
 pub struct Flags {
@@ -21,8 +23,9 @@ pub struct Flags {
     pub seed: u64,
     /// `--steps <n>` for training.
     pub steps: usize,
-    /// `--engine-workers <n>` serving engine pool size.
-    pub engine_workers: usize,
+    /// Engine-pool worker backends: `--backends cpu:2,gpu:1`, or
+    /// `--engine-workers <n>` as shorthand for `cpu:n`.
+    pub backends: Vec<BackendSpec>,
     /// `--max-inflight <n>` per-bucket inflight batch cap.
     pub max_inflight: usize,
     /// Remaining positional args.
@@ -33,7 +36,7 @@ impl Flags {
     /// The serving-pool shape selected on the command line.
     pub fn serving(&self) -> crate::config::ServingConfig {
         crate::config::ServingConfig {
-            engine_workers: self.engine_workers,
+            backends: self.backends.clone(),
             max_inflight: self.max_inflight,
         }
     }
@@ -46,7 +49,7 @@ pub fn parse_flags(args: &[String]) -> Result<Flags> {
         artifacts: "artifacts".to_string(),
         seed: 0,
         steps: 200,
-        engine_workers: serving_defaults.engine_workers,
+        backends: serving_defaults.backends,
         max_inflight: serving_defaults.max_inflight,
         ..Default::default()
     };
@@ -57,8 +60,12 @@ pub fn parse_flags(args: &[String]) -> Result<Flags> {
             "--config" => f.config = it.next().context("--config needs a value")?.clone(),
             "--seed" => f.seed = it.next().context("--seed needs a value")?.parse()?,
             "--steps" => f.steps = it.next().context("--steps needs a value")?.parse()?,
+            "--backends" => {
+                f.backends = parse_backend_specs(it.next().context("--backends needs a value")?)?
+            }
             "--engine-workers" => {
-                f.engine_workers = it.next().context("--engine-workers needs a value")?.parse()?
+                let n: usize = it.next().context("--engine-workers needs a value")?.parse()?;
+                f.backends = BackendSpec::cpu_workers(n);
             }
             "--max-inflight" => {
                 f.max_inflight = it.next().context("--max-inflight needs a value")?.parse()?
@@ -92,7 +99,10 @@ FLAGS:
   --config k=v,...       model config overrides
   --seed <u64>           RNG seed (default 0)
   --steps <n>            training steps (default 200)
-  --engine-workers <n>   serving engine pool size (default 1)
+  --backends <spec>      engine pool backends, kind[:count] comma-list
+                         (e.g. cpu:2,gpu:1; default cpu:1; gpu/tpu fall
+                         back to cpu when no PJRT plugin is present)
+  --engine-workers <n>   shorthand for --backends cpu:<n>
   --max-inflight <n>     per-bucket inflight batch cap (default 2)
 ";
 
@@ -166,11 +176,27 @@ mod tests {
     #[test]
     fn parse_serving_flags() {
         let f = parse_flags(&s(&["--engine-workers", "4", "--max-inflight", "8"])).unwrap();
-        assert_eq!(f.engine_workers, 4);
+        assert_eq!(f.backends, BackendSpec::cpu_workers(4));
         assert_eq!(f.max_inflight, 8);
-        // zero is rejected at parse time
+        // zero workers is rejected at parse time
         assert!(parse_flags(&s(&["--engine-workers", "0"])).is_err());
         assert!(parse_flags(&s(&["--max-inflight", "0"])).is_err());
+    }
+
+    #[test]
+    fn parse_backends_flag() {
+        use crate::runtime::BackendKind;
+        let f = parse_flags(&s(&["--backends", "cpu:2,gpu:1"])).unwrap();
+        assert_eq!(f.backends.len(), 3);
+        assert_eq!(f.backends[2].kind, BackendKind::Gpu);
+        assert_eq!(f.serving().n_workers(), 3);
+        // the last of --backends / --engine-workers wins
+        let f = parse_flags(&s(&["--backends", "gpu:2", "--engine-workers", "1"])).unwrap();
+        assert_eq!(f.backends, BackendSpec::cpu_workers(1));
+        // malformed specs are rejected at parse time
+        assert!(parse_flags(&s(&["--backends", "npu:1"])).is_err());
+        assert!(parse_flags(&s(&["--backends", "cpu:0"])).is_err());
+        assert!(parse_flags(&s(&["--backends", ""])).is_err());
     }
 
     #[test]

@@ -11,6 +11,8 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
+use crate::runtime::BackendSpec;
+
 /// Which attention pattern a model variant uses. Mirrors
 /// `python/compile/configs.py::ATTN_VARIANTS` and Sec. 2 / Table 1 of the
 /// paper.
@@ -212,31 +214,44 @@ impl ModelConfig {
     }
 }
 
-/// Engine-pool shape for the serving coordinator: how many PJRT worker
-/// threads execute batches, and how many batches per bucket may be in
-/// flight at once (the pipelining depth). Mirrors the
-/// `--engine-workers` / `--max-inflight` CLI flags; flows into
-/// `ServerConfig`. With `engine_workers: 1, max_inflight: 1` the
-/// coordinator degenerates to the original single-inflight loop.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Engine-pool shape for the serving coordinator: the backend of every
+/// PJRT worker thread that executes batches (one [`BackendSpec`] per
+/// worker — mix kinds for a heterogeneous pool), and how many batches
+/// per bucket may be in flight at once (the pipelining depth). Mirrors
+/// the `--backends` / `--engine-workers` / `--max-inflight` CLI flags;
+/// flows into `ServerConfig`. With one CPU worker and `max_inflight: 1`
+/// the coordinator degenerates to the original single-inflight loop.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ServingConfig {
-    /// Engine worker threads, each owning its own PJRT runtime.
-    pub engine_workers: usize,
+    /// Backend of each engine worker thread (each owns its own PJRT
+    /// runtime). `BackendSpec::cpu_workers(n)` reproduces the PR 1
+    /// homogeneous `engine_workers: n` shape.
+    pub backends: Vec<BackendSpec>,
     /// Per-bucket cap on dispatched-but-incomplete batches.
     pub max_inflight: usize,
 }
 
 impl Default for ServingConfig {
     fn default() -> Self {
-        ServingConfig { engine_workers: 1, max_inflight: 2 }
+        ServingConfig { backends: vec![BackendSpec::cpu()], max_inflight: 2 }
     }
 }
 
 impl ServingConfig {
-    /// Validate invariants (both knobs ≥ 1).
+    /// A homogeneous pool of `n` CPU workers (the PR 1 shape).
+    pub fn cpu(engine_workers: usize, max_inflight: usize) -> Self {
+        ServingConfig { backends: BackendSpec::cpu_workers(engine_workers), max_inflight }
+    }
+
+    /// Number of engine workers the config spawns.
+    pub fn n_workers(&self) -> usize {
+        self.backends.len()
+    }
+
+    /// Validate invariants (at least one worker, inflight cap ≥ 1).
     pub fn validate(&self) -> Result<()> {
-        if self.engine_workers == 0 {
-            bail!("engine_workers must be >= 1");
+        if self.backends.is_empty() {
+            bail!("serving config names no engine workers (need at least one backend)");
         }
         if self.max_inflight == 0 {
             bail!("max_inflight must be >= 1");
@@ -321,8 +336,11 @@ mod tests {
     #[test]
     fn serving_config_validates() {
         ServingConfig::default().validate().unwrap();
-        assert!(ServingConfig { engine_workers: 0, max_inflight: 1 }.validate().is_err());
-        assert!(ServingConfig { engine_workers: 1, max_inflight: 0 }.validate().is_err());
+        assert!(ServingConfig::cpu(0, 1).validate().is_err());
+        assert!(ServingConfig::cpu(1, 0).validate().is_err());
+        let cfg = ServingConfig::cpu(3, 2);
+        assert_eq!(cfg.n_workers(), 3);
+        assert!(cfg.backends.iter().all(|b| *b == BackendSpec::cpu()));
     }
 
     #[test]

@@ -86,12 +86,12 @@ impl Batcher {
     }
 
     /// Bucket index for a request of `len` tokens: smallest bucket with
-    /// seq_len ≥ len, else the largest (truncation).
+    /// seq_len ≥ len, else the largest (truncation). Binary search over
+    /// the sorted bucket bounds — `route` runs once per request, so the
+    /// old linear scan was O(buckets) on the accept hot path.
     pub fn route(&self, len: usize) -> usize {
-        self.buckets
-            .iter()
-            .position(|b| b.seq_len >= len)
-            .unwrap_or(self.buckets.len() - 1)
+        let i = self.buckets.partition_point(|b| b.seq_len < len);
+        i.min(self.buckets.len() - 1)
     }
 
     /// Enqueue a request; returns the chosen bucket index.
@@ -187,6 +187,26 @@ mod tests {
         assert_eq!(b.buckets()[b.route(2048)].seq_len, 2048);
         // oversized → largest bucket (truncation)
         assert_eq!(b.buckets()[b.route(9999)].seq_len, 2048);
+    }
+
+    #[test]
+    fn route_boundaries_match_linear_scan() {
+        // pin the boundary behaviour of the binary search: exact bucket
+        // bounds, bound±1, zero-length, and beyond-largest all agree
+        // with the reference linear scan
+        let b = Batcher::new(buckets(), BatcherConfig::default());
+        let linear = |len: usize| {
+            b.buckets().iter().position(|bk| bk.seq_len >= len).unwrap_or(b.buckets().len() - 1)
+        };
+        for len in [0, 1, 127, 128, 129, 511, 512, 513, 2047, 2048, 2049, 9999] {
+            assert_eq!(b.route(len), linear(len), "len {len}");
+        }
+        // explicit pins so a regression in *both* paths still fails
+        assert_eq!(b.route(0), 0);
+        assert_eq!(b.route(128), 0);
+        assert_eq!(b.route(129), 1);
+        assert_eq!(b.route(2048), 2);
+        assert_eq!(b.route(2049), 2); // truncation bucket
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! Device-aware weighted dispatch: minimum expected-completion-time
+//! worker selection over a heterogeneous backend pool.
+//!
+//! Pure logic (no PJRT): the policy sees only each worker's [`Backend`]
+//! descriptor, the estimated cost of the work already queued on it, and
+//! the [`JobShape`] of the batch being placed. The per-(bucket, backend)
+//! cost starts from the static [`Roofline`](crate::runtime::Roofline)
+//! seed and is refined online by an EWMA of observed execution times, so
+//! mis-seeded rooflines converge to reality after a few batches.
+//!
+//! With identical backends and a uniform trace this degrades exactly to
+//! PR 1's least-loaded policy: every job carries the same cost estimate,
+//! so `argmin(queued + estimate) == argmin(outstanding count)`, with the
+//! same lowest-index tie-break.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::runtime::{Backend, BackendKind, JobShape};
+
+/// EWMA smoothing factor for observed execution times (weight on the
+/// newest observation).
+const EWMA_ALPHA: f64 = 0.3;
+
+/// Expected-completion-time dispatch over per-worker backends.
+#[derive(Debug)]
+pub struct WeightedPolicy {
+    backends: Vec<Backend>,
+    /// Per-worker FIFO ledger of the shapes dispatched and not yet
+    /// completed (workers drain their bounded queues in order). Queued
+    /// work is costed from the ledger with the *current* estimates at
+    /// pick time — never accumulated — so estimates refine retroactively
+    /// as EWMAs learn, an idle worker's queue is exactly zero, and two
+    /// same-backend workers holding equal ledgers always compare
+    /// identically, which is what makes the homogeneous case degrade
+    /// bit-exactly to the least-loaded policy.
+    charges: Vec<VecDeque<JobShape>>,
+    /// Observed exec-time EWMA per (bucket seq_len, realized backend).
+    ewma_ms: HashMap<(usize, BackendKind), f64>,
+}
+
+impl WeightedPolicy {
+    /// Policy over one [`Backend`] descriptor per worker.
+    pub fn new(backends: Vec<Backend>) -> Self {
+        assert!(!backends.is_empty(), "dispatch policy needs at least one worker");
+        let n = backends.len();
+        WeightedPolicy {
+            backends,
+            charges: vec![VecDeque::new(); n],
+            ewma_ms: HashMap::new(),
+        }
+    }
+
+    /// Number of workers the policy scores.
+    pub fn size(&self) -> usize {
+        self.backends.len()
+    }
+
+    /// The worker backends, indexed by worker id.
+    pub fn backends(&self) -> &[Backend] {
+        &self.backends
+    }
+
+    /// Estimated execution cost of `shape` on `worker`, in ms: the
+    /// observed EWMA for (bucket, backend) when one exists, else the
+    /// static roofline seed.
+    pub fn estimate_ms(&self, worker: usize, shape: JobShape) -> f64 {
+        let b = &self.backends[worker];
+        self.ewma_ms
+            .get(&(shape.seq_len, b.kind))
+            .copied()
+            .unwrap_or_else(|| b.roofline.cost_ms(shape))
+    }
+
+    /// Pick the worker with the minimum expected completion time for a
+    /// batch of `shape`: queued work plus this batch's estimated cost on
+    /// that worker's backend. Ties break to the lowest index (the
+    /// least-loaded policy's behaviour).
+    pub fn pick(&self, shape: JobShape) -> usize {
+        let mut best = 0usize;
+        let mut best_eta = f64::INFINITY;
+        for w in 0..self.backends.len() {
+            let eta = self.queued_ms(w) + self.estimate_ms(w, shape);
+            if eta < best_eta {
+                best = w;
+                best_eta = eta;
+            }
+        }
+        best
+    }
+
+    /// Charge `worker` for a dispatched batch of `shape`. Must be paired
+    /// with [`WeightedPolicy::completed`] when the batch finishes.
+    pub fn dispatched(&mut self, worker: usize, shape: JobShape) {
+        self.charges[worker].push_back(shape);
+    }
+
+    /// A batch finished on `worker`: release the oldest outstanding
+    /// charge, and — when the batch *succeeded* and `observed_ms` is
+    /// `Some` — fold its execution time into the (bucket, backend)
+    /// EWMA. Callers pass `None` for failed batches: an error that
+    /// returns in microseconds must not make its backend look cheap, or
+    /// the policy would route the whole bucket into the broken worker
+    /// (a failure black hole).
+    pub fn completed(&mut self, worker: usize, shape: JobShape, observed_ms: Option<f64>) {
+        self.charges[worker].pop_front();
+        if let Some(ms) = observed_ms {
+            if ms.is_finite() && ms >= 0.0 {
+                let key = (shape.seq_len, self.backends[worker].kind);
+                let e = self.ewma_ms.entry(key).or_insert(ms);
+                *e = EWMA_ALPHA * ms + (1.0 - EWMA_ALPHA) * *e;
+            }
+        }
+    }
+
+    /// Estimated queued work on `worker`, in ms: its outstanding shapes
+    /// costed with the current estimates (the pool's inflight caps keep
+    /// the ledger short).
+    pub fn queued_ms(&self, worker: usize) -> f64 {
+        self.charges[worker].iter().map(|&s| self.estimate_ms(worker, s)).sum()
+    }
+
+    /// Current (bucket seq_len, backend, ewma ms) table, sorted for
+    /// deterministic reporting.
+    pub fn ewma_table(&self) -> Vec<(usize, BackendKind, f64)> {
+        let mut t: Vec<(usize, BackendKind, f64)> =
+            self.ewma_ms.iter().map(|(&(s, k), &v)| (s, k, v)).collect();
+        t.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        t
+    }
+}
+
+/// Replay `shapes` through a policy with at most `window` batches in
+/// flight, completing the oldest dispatched batch (with its simulated
+/// true cost from `true_cost(worker, shape)`) whenever the window
+/// fills. Returns the worker index chosen for each batch.
+///
+/// This is the shared simulation harness behind the dispatch-policy
+/// contract tests (`tests/dispatch_policy.rs`) and the
+/// heterogeneous-pool bench (`benches/coordinator.rs`), so both
+/// exercise the exact pick/dispatched/completed protocol the engine
+/// pool runs.
+pub fn replay(
+    policy: &mut WeightedPolicy,
+    shapes: &[JobShape],
+    window: usize,
+    true_cost: impl Fn(usize, JobShape) -> f64,
+) -> Vec<usize> {
+    let mut picks = Vec::with_capacity(shapes.len());
+    let mut inflight: VecDeque<(usize, JobShape)> = VecDeque::new();
+    for &shape in shapes {
+        if inflight.len() >= window {
+            let (w, s) = inflight.pop_front().expect("window > 0");
+            policy.completed(w, s, Some(true_cost(w, s)));
+        }
+        let w = policy.pick(shape);
+        policy.dispatched(w, shape);
+        inflight.push_back((w, shape));
+        picks.push(w);
+    }
+    while let Some((w, s)) = inflight.pop_front() {
+        policy.completed(w, s, Some(true_cost(w, s)));
+    }
+    picks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Roofline;
+
+    fn sim(kind: BackendKind, gflops: f64, overhead_ms: f64) -> Backend {
+        Backend::simulated(kind, Roofline { gflops, gbps: 1000.0, overhead_ms })
+    }
+
+    #[test]
+    fn identical_backends_degrade_to_least_loaded() {
+        // three identical workers, uniform shapes: picks must match the
+        // least-loaded-by-count policy, lowest index on ties
+        let b = sim(BackendKind::Cpu, 100.0, 0.1);
+        let mut p = WeightedPolicy::new(vec![b.clone(), b.clone(), b]);
+        let shape = JobShape { seq_len: 512, batch: 8 };
+        let mut counts = [0usize; 3];
+        let mut picks = Vec::new();
+        for _ in 0..9 {
+            let w = p.pick(shape);
+            let least =
+                counts.iter().enumerate().min_by_key(|&(_, c)| *c).map(|(i, _)| i).unwrap();
+            assert_eq!(w, least, "diverged from least-loaded");
+            p.dispatched(w, shape);
+            counts[w] += 1;
+            picks.push(w);
+        }
+        // round-robin across the identical pool
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0, 1, 2]);
+        // completions free load symmetrically
+        p.completed(0, shape, Some(5.0));
+        assert_eq!(p.pick(shape), 0);
+    }
+
+    #[test]
+    fn skewed_costs_route_long_buckets_to_the_cheap_backend() {
+        // worker 0: low-latency but slow; worker 1: high-throughput
+        let slow = sim(BackendKind::Cpu, 50.0, 0.05);
+        let fast = sim(BackendKind::Gpu, 5000.0, 1.0);
+        let mut p = WeightedPolicy::new(vec![slow, fast]);
+        let long = JobShape { seq_len: 2048, batch: 4 };
+        // with no queue, the long bucket must go to the throughput backend
+        assert_eq!(p.pick(long), 1);
+        // ...until its queue is long enough that the slow worker's ETA wins
+        for _ in 0..200 {
+            let w = p.pick(long);
+            p.dispatched(w, long);
+        }
+        assert!(p.queued_ms(0) > 0.0, "slow worker must absorb overflow eventually");
+    }
+
+    #[test]
+    fn ewma_overrides_a_bad_seed() {
+        // seed says worker 1 (gpu) is far cheaper for this bucket...
+        let cpu = sim(BackendKind::Cpu, 50.0, 0.05);
+        let gpu = sim(BackendKind::Gpu, 5000.0, 1.0);
+        let mut p = WeightedPolicy::new(vec![cpu, gpu]);
+        let shape = JobShape { seq_len: 1024, batch: 4 };
+        assert_eq!(p.pick(shape), 1);
+        // ...but observations say the cpu actually executes it in 1ms and
+        // the gpu in 100ms; after a few completions the policy flips
+        for _ in 0..20 {
+            p.dispatched(0, shape);
+            p.completed(0, shape, Some(1.0));
+            p.dispatched(1, shape);
+            p.completed(1, shape, Some(100.0));
+        }
+        assert!(p.estimate_ms(0, shape) < p.estimate_ms(1, shape));
+        assert_eq!(p.pick(shape), 0, "EWMA must override the static seed");
+        // the ewma table surfaces both (bucket, backend) pairs
+        let t = p.ewma_table();
+        assert_eq!(t.len(), 2);
+        assert!(t.iter().any(|&(s, k, v)| s == 1024 && k == BackendKind::Cpu && v < 2.0));
+    }
+
+    #[test]
+    fn charges_settle_back_to_zero() {
+        let b = sim(BackendKind::Cpu, 100.0, 0.1);
+        let mut p = WeightedPolicy::new(vec![b]);
+        let a = JobShape { seq_len: 128, batch: 8 };
+        let c = JobShape { seq_len: 2048, batch: 2 };
+        p.dispatched(0, a);
+        p.dispatched(0, c);
+        assert!(p.queued_ms(0) > 0.0);
+        // completions observe times different from the charges — the
+        // FIFO charge ledger still settles to exactly zero (queued work
+        // is summed from the ledger, never accumulated)
+        // a None (failed batch) still pops its charge but never touches
+        // the EWMA — failures must not make a backend look cheap
+        p.completed(0, a, None);
+        p.completed(0, c, Some(0.5));
+        assert!(p.ewma_table().iter().all(|&(s, _, _)| s != 128));
+        assert_eq!(p.queued_ms(0), 0.0);
+    }
+}

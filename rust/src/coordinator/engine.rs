@@ -8,8 +8,11 @@
 //! Two entry points, one worker loop:
 //!
 //! * [`EnginePool`] — N workers behind per-worker bounded job queues
-//!   and one shared completion channel; the dispatcher submits to the
-//!   least-loaded worker and collects completions asynchronously, so
+//!   and one shared completion channel; the pool may be
+//!   **heterogeneous** (one [`BackendSpec`] per worker), and the
+//!   dispatcher submits each batch to the worker with the minimum
+//!   expected completion time under the per-backend roofline cost model
+//!   (see [`WeightedPolicy`]), collecting completions asynchronously so
 //!   several batches can be in flight at once (pipelining).
 //! * [`EngineHandle`] — a synchronous convenience wrapper over a
 //!   1-worker pool for simple tools. (Its old standalone engine loop —
@@ -29,7 +32,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{ExecutablePool, HostTensor, Manifest, Runtime};
+use super::dispatch::WeightedPolicy;
+use crate::runtime::{
+    Backend, BackendKind, BackendSpec, ExecutablePool, HostTensor, JobShape, Manifest, Runtime,
+};
 
 /// Synchronous handle to a single engine worker — a thin wrapper over a
 /// 1-worker [`EnginePool`].
@@ -39,11 +45,13 @@ pub struct EngineHandle {
 }
 
 impl EngineHandle {
-    /// Spawn one engine worker on `artifact_dir`, with a bounded queue
-    /// of `queue_depth` jobs (backpressure: senders block when full).
+    /// Spawn one CPU engine worker on `artifact_dir`, with a bounded
+    /// queue of `queue_depth` jobs (backpressure: senders block when
+    /// full).
     pub fn spawn(artifact_dir: String, queue_depth: usize) -> Result<Self> {
         let manifest = Arc::new(Manifest::load(&artifact_dir)?);
-        Ok(EngineHandle { pool: EnginePool::spawn(manifest, 1, queue_depth)?, next_job: 1 })
+        let pool = EnginePool::spawn(manifest, &[BackendSpec::cpu()], queue_depth)?;
+        Ok(EngineHandle { pool, next_job: 1 })
     }
 
     /// Execute an artifact synchronously on the worker thread.
@@ -53,6 +61,9 @@ impl EngineHandle {
         self.pool.submit(PoolJob {
             batch_id: id,
             artifact: artifact.to_string(),
+            // shape unknown for ad-hoc handle calls; a 1-worker pool has
+            // nothing to route anyway
+            shape: JobShape { seq_len: 0, batch: 0 },
             inputs,
             with_params: false,
             submitted: Instant::now(),
@@ -79,6 +90,8 @@ pub struct PoolJob {
     pub batch_id: u64,
     /// Artifact name to execute.
     pub artifact: String,
+    /// Bucket shape of the batch — the dispatch policy's cost-model key.
+    pub shape: JobShape,
     /// Positional inputs, *excluding* parameters when `with_params`.
     pub inputs: Vec<HostTensor>,
     /// Prepend the worker's cached parameters, initialising them from
@@ -96,6 +109,8 @@ pub struct PoolCompletion {
     pub batch_id: u64,
     /// Which worker executed it.
     pub worker: usize,
+    /// Bucket shape echoed from the job (EWMA refinement key).
+    pub shape: JobShape,
     /// Outputs, or a stringified error.
     pub result: std::result::Result<Vec<HostTensor>, String>,
     /// Time between submission and the worker picking the job up.
@@ -125,40 +140,55 @@ struct Worker {
     outstanding: usize,
 }
 
-/// A pool of N engine workers fronted by a dispatcher-facing API:
-/// [`EnginePool::submit`] routes a job to the least-loaded worker and
-/// returns immediately; completions arrive on a shared channel via
-/// [`EnginePool::try_completion`] / [`EnginePool::completion_timeout`].
+/// A pool of engine workers — possibly heterogeneous, one backend per
+/// worker — fronted by a dispatcher-facing API: [`EnginePool::submit`]
+/// routes a job to the worker with the minimum expected completion time
+/// under the roofline cost model and returns immediately; completions
+/// arrive on a shared channel via [`EnginePool::try_completion`] /
+/// [`EnginePool::completion_timeout`], which also feed observed
+/// execution times back into the cost model.
 pub struct EnginePool {
     workers: Vec<Worker>,
+    policy: WeightedPolicy,
     completion_rx: Receiver<PoolCompletion>,
 }
 
 impl EnginePool {
-    /// Spawn `n_workers` engine threads over an already-parsed manifest.
-    /// Each worker gets its own PJRT `Runtime` + `ExecutablePool` and a
-    /// bounded job queue of `queue_depth` (backpressure: `submit` blocks
-    /// when the chosen worker's queue is full).
-    pub fn spawn(manifest: Arc<Manifest>, n_workers: usize, queue_depth: usize) -> Result<Self> {
-        anyhow::ensure!(n_workers >= 1, "engine pool needs at least one worker");
+    /// Spawn one engine thread per entry of `specs` over an
+    /// already-parsed manifest. Each worker constructs its own PJRT
+    /// runtime for its assigned backend (falling back to CPU with a
+    /// warning when the device plugin is absent), registers the realized
+    /// backend with the dispatcher, and serves a bounded job queue of
+    /// `queue_depth` (backpressure: `submit` blocks when the chosen
+    /// worker's queue is full).
+    pub fn spawn(
+        manifest: Arc<Manifest>,
+        specs: &[BackendSpec],
+        queue_depth: usize,
+    ) -> Result<Self> {
+        anyhow::ensure!(!specs.is_empty(), "engine pool needs at least one worker");
         let (completion_tx, completion_rx) = channel::<PoolCompletion>();
-        let mut workers = Vec::with_capacity(n_workers);
-        for w in 0..n_workers {
+        let mut workers = Vec::with_capacity(specs.len());
+        let mut backends = Vec::with_capacity(specs.len());
+        for (w, spec) in specs.iter().enumerate() {
             let (tx, rx) = sync_channel::<WorkerMsg>(queue_depth.max(1));
-            let (ready_tx, ready_rx) = sync_channel::<std::result::Result<(), String>>(1);
+            let (ready_tx, ready_rx) = sync_channel::<Startup>(1);
             let m = manifest.clone();
             let ctx = completion_tx.clone();
+            let spec = *spec;
             let join = std::thread::Builder::new()
                 .name(format!("bigbird-engine-{w}"))
-                .spawn(move || worker_loop(w, m, rx, ctx, ready_tx))
+                .spawn(move || worker_loop(w, spec, m, rx, ctx, ready_tx))
                 .with_context(|| format!("spawning engine worker {w}"))?;
-            ready_rx
+            let (kind, platform) = ready_rx
                 .recv()
                 .with_context(|| format!("engine worker {w} died during startup"))?
                 .map_err(|e| anyhow::anyhow!("engine worker {w} startup failed: {e}"))?;
+            backends.push(Backend::of_kind(kind, spec.kind, platform));
             workers.push(Worker { tx: Some(tx), join: Some(join), outstanding: 0 });
         }
-        Ok(EnginePool { workers, completion_rx })
+        let policy = WeightedPolicy::new(backends);
+        Ok(EnginePool { workers, policy, completion_rx })
     }
 
     /// Number of workers in the pool.
@@ -166,24 +196,28 @@ impl EnginePool {
         self.workers.len()
     }
 
+    /// Realized backend of each worker, indexed by worker id.
+    pub fn backends(&self) -> &[Backend] {
+        self.policy.backends()
+    }
+
     /// Jobs dispatched whose completions have not been collected yet.
     pub fn inflight(&self) -> usize {
         self.workers.iter().map(|w| w.outstanding).sum()
     }
 
-    /// Dispatch a job to the least-loaded worker; returns its index.
-    /// Blocks only when that worker's bounded queue is full.
+    /// Dispatch a job to the worker with the minimum expected completion
+    /// time for its bucket shape (queued work + per-backend cost);
+    /// returns the worker index. Blocks only when that worker's bounded
+    /// queue is full. On a homogeneous pool with uniform shapes this is
+    /// exactly the least-loaded policy.
     pub fn submit(&mut self, job: PoolJob) -> Result<usize> {
-        let w = self
-            .workers
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, w)| w.outstanding)
-            .map(|(i, _)| i)
-            .expect("pool has at least one worker");
+        let shape = job.shape;
+        let w = self.policy.pick(shape);
         self.worker_tx(w)
             .send(WorkerMsg::Execute(job))
             .map_err(|_| anyhow::anyhow!("engine worker {w} gone"))?;
+        self.policy.dispatched(w, shape);
         self.workers[w].outstanding += 1;
         Ok(w)
     }
@@ -213,6 +247,19 @@ impl EnginePool {
     fn collect(&mut self, c: &PoolCompletion) {
         let w = &mut self.workers[c.worker];
         w.outstanding = w.outstanding.saturating_sub(1);
+        // refine the (bucket, backend) cost model only with *successful*
+        // exec times — an error that returns in microseconds must not
+        // make its backend look cheap, or the policy would funnel the
+        // whole bucket into a broken worker (failure black hole); the
+        // charge ledger is released either way
+        let observed = c.result.is_ok().then_some(c.exec.as_secs_f64() * 1e3);
+        self.policy.completed(c.worker, c.shape, observed);
+    }
+
+    /// Observed (bucket seq_len, backend, exec-time EWMA ms) table the
+    /// dispatch policy currently routes on.
+    pub fn ewma_table(&self) -> Vec<(usize, BackendKind, f64)> {
+        self.policy.ewma_table()
     }
 
     /// Ask every worker to eagerly compile `artifacts` and initialise
@@ -270,17 +317,24 @@ impl Drop for EnginePool {
     }
 }
 
+/// Worker-startup handshake payload: the realized backend kind and PJRT
+/// platform name, or a stringified startup error.
+type Startup = std::result::Result<(BackendKind, String), String>;
+
 fn worker_loop(
     worker: usize,
+    spec: BackendSpec,
     manifest: Arc<Manifest>,
     rx: Receiver<WorkerMsg>,
     completions: Sender<PoolCompletion>,
-    ready: SyncSender<std::result::Result<(), String>>,
+    ready: SyncSender<Startup>,
 ) {
-    let pool = match Runtime::cpu().map(|rt| ExecutablePool::new(rt, manifest)) {
-        Ok(p) => {
-            let _ = ready.send(Ok(()));
-            p
+    let pool = match Runtime::for_backend(&spec) {
+        Ok((rt, kind)) => {
+            let platform = rt.platform();
+            let pool = ExecutablePool::new(rt, manifest);
+            let _ = ready.send(Ok((kind, platform)));
+            pool
         }
         Err(e) => {
             let _ = ready.send(Err(format!("{e:#}")));
@@ -309,7 +363,7 @@ fn worker_loop(
             WorkerMsg::Execute(job) => {
                 let picked = Instant::now();
                 let queue_wait = picked.duration_since(job.submitted);
-                let PoolJob { batch_id, artifact, inputs, with_params, .. } = job;
+                let PoolJob { batch_id, artifact, shape, inputs, with_params, .. } = job;
                 // Contain panics (e.g. inside the PJRT FFI): a worker
                 // that dies without completing its job would leak the
                 // batch's inflight slot forever and hang its clients,
@@ -324,6 +378,7 @@ fn worker_loop(
                 let completion = PoolCompletion {
                     batch_id,
                     worker,
+                    shape,
                     result,
                     queue_wait,
                     exec: picked.elapsed(),

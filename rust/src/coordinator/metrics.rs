@@ -1,7 +1,10 @@
 //! Serving metrics: request counts, latency distribution, batch fill,
 //! and — for the pipelined engine pool — the queue-wait vs execute-wait
-//! split, per-worker utilization, and inflight-depth tracking.
+//! split, per-worker and per-backend utilization, per-(bucket, backend)
+//! exec-time EWMAs, bucket migration counts, and inflight-depth
+//! tracking.
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use crate::util::stats;
@@ -28,6 +31,17 @@ struct Inner {
     workers: usize,
     worker_jobs: Vec<usize>,
     worker_busy_ms: Vec<f64>,
+    // realized backend label per worker (from the engine pool), parallel
+    // to worker_jobs; empty label for undeclared workers
+    worker_backend: Vec<String>,
+    // per-(bucket seq_len, backend) exec-time EWMA table, mirrored
+    // wholesale from the dispatch policy (the authoritative copy that
+    // routing actually uses) — never computed here, so the two can't
+    // drift
+    exec_ewma_ms: Vec<(usize, String, f64)>,
+    // batches whose bucket moved to a different backend than the
+    // previous batch of the same bucket
+    migrations: usize,
     // inflight depth sampled at each dispatch
     dispatches: usize,
     inflight_sum: usize,
@@ -59,6 +73,16 @@ pub struct MetricsSnapshot {
     pub worker_jobs: Vec<usize>,
     /// total execute time per worker (ms), indexed by worker id
     pub worker_busy_ms: Vec<f64>,
+    /// realized backend label per worker, indexed by worker id (empty
+    /// when the pool never declared backends)
+    pub worker_backend: Vec<String>,
+    /// observed exec-time EWMA per (bucket seq_len, backend), ms,
+    /// sorted by bucket then backend — a mirror of the dispatch
+    /// policy's authoritative routing table
+    pub exec_ewma_ms: Vec<(usize, String, f64)>,
+    /// batches whose bucket was served by a different backend than that
+    /// bucket's previous batch
+    pub migrations: usize,
 }
 
 impl MetricsSnapshot {
@@ -69,6 +93,26 @@ impl MetricsSnapshot {
             return vec![0.0; self.worker_busy_ms.len()];
         }
         self.worker_busy_ms.iter().map(|&ms| ms / 1000.0 / wall_s).collect()
+    }
+
+    /// Per-backend utilization over a `wall_s`-second window: worker
+    /// busy time aggregated by backend label, normalised by wall time ×
+    /// the number of workers of that backend. Sorted by label.
+    pub fn backend_utilization(&self, wall_s: f64) -> Vec<(String, f64)> {
+        let mut busy: BTreeMap<&str, (f64, usize)> = BTreeMap::new();
+        for (w, label) in self.worker_backend.iter().enumerate() {
+            let ms = self.worker_busy_ms.get(w).copied().unwrap_or(0.0);
+            let e = busy.entry(label.as_str()).or_insert((0.0, 0));
+            e.0 += ms;
+            e.1 += 1;
+        }
+        busy.into_iter()
+            .map(|(label, (ms, n))| {
+                let denom = wall_s * n as f64;
+                let util = if denom > 0.0 { ms / 1000.0 / denom } else { 0.0 };
+                (label.to_string(), util)
+            })
+            .collect()
     }
 }
 
@@ -102,6 +146,19 @@ impl ServingMetrics {
         let len = n.max(i.worker_jobs.len());
         i.worker_jobs.resize(len, 0);
         i.worker_busy_ms.resize(len, 0.0);
+        i.worker_backend.resize(len, String::new());
+    }
+
+    /// Declare the realized backend label of every pool worker (from
+    /// `EnginePool::backends`), sizing the per-worker vectors like
+    /// [`ServingMetrics::set_workers`]. Survives
+    /// [`ServingMetrics::reset`].
+    pub fn set_worker_backends(&self, labels: &[String]) {
+        {
+            let mut i = self.inner.lock().unwrap();
+            i.worker_backend = labels.to_vec();
+        }
+        self.set_workers(labels.len());
     }
 
     /// A batch job completed on `worker` after waiting `queue_wait_ms`
@@ -111,11 +168,26 @@ impl ServingMetrics {
         if worker >= i.worker_jobs.len() {
             i.worker_jobs.resize(worker + 1, 0);
             i.worker_busy_ms.resize(worker + 1, 0.0);
+            i.worker_backend.resize(worker + 1, String::new());
         }
         i.worker_jobs[worker] += 1;
         i.worker_busy_ms[worker] += exec_ms;
         i.queue_wait_ms.push(queue_wait_ms);
         i.exec_ms.push(exec_ms);
+    }
+
+    /// Install the dispatch policy's current per-(bucket seq_len,
+    /// backend) exec-time EWMA table (from `EnginePool::ewma_table`),
+    /// replacing the previous copy. The router pushes this on every
+    /// completion so snapshots report exactly what routing runs on.
+    pub fn set_exec_ewma(&self, table: Vec<(usize, String, f64)>) {
+        self.inner.lock().unwrap().exec_ewma_ms = table;
+    }
+
+    /// A bucket's batch was dispatched to a different backend than the
+    /// bucket's previous batch.
+    pub fn record_migration(&self) {
+        self.inner.lock().unwrap().migrations += 1;
     }
 
     pub fn record_truncated(&self) {
@@ -132,10 +204,12 @@ impl ServingMetrics {
     pub fn reset(&self) {
         let mut i = self.inner.lock().unwrap();
         let workers = i.workers;
+        let backends = std::mem::take(&mut i.worker_backend);
         *i = Inner::default();
         i.workers = workers;
         i.worker_jobs.resize(workers, 0);
         i.worker_busy_ms.resize(workers, 0.0);
+        i.worker_backend = backends;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -164,6 +238,9 @@ impl ServingMetrics {
             peak_inflight: i.inflight_peak,
             worker_jobs: i.worker_jobs.clone(),
             worker_busy_ms: i.worker_busy_ms.clone(),
+            worker_backend: i.worker_backend.clone(),
+            exec_ewma_ms: i.exec_ewma_ms.clone(),
+            migrations: i.migrations,
         }
     }
 }
@@ -214,5 +291,39 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.peak_inflight, 0);
         assert_eq!(s.worker_jobs, vec![0; 4]);
+    }
+
+    #[test]
+    fn backend_metrics_aggregate_by_label() {
+        let m = ServingMetrics::default();
+        m.set_worker_backends(&["cpu".into(), "cpu".into(), "gpu".into()]);
+        // two cpu workers split 512-bucket work; the gpu takes 2048s
+        m.record_job(0, 0.0, 10.0);
+        m.record_job(1, 0.0, 30.0);
+        m.record_job(2, 0.0, 40.0);
+        m.record_job(2, 0.0, 20.0);
+        m.record_migration();
+        // the router mirrors the dispatch policy's EWMA table verbatim
+        m.set_exec_ewma(vec![(512, "cpu".into(), 20.0), (2048, "gpu".into(), 34.0)]);
+        let s = m.snapshot();
+        assert_eq!(s.worker_backend, vec!["cpu", "cpu", "gpu"]);
+        assert_eq!(s.migrations, 1);
+        // per-backend utilization over a 1s window: cpu (10+30)ms over
+        // 2 workers = 2%, gpu (40+20)ms over 1 worker = 6%
+        let u = s.backend_utilization(1.0);
+        assert_eq!(u.len(), 2);
+        assert_eq!(u[0].0, "cpu");
+        assert!((u[0].1 - 0.02).abs() < 1e-12);
+        assert_eq!(u[1].0, "gpu");
+        assert!((u[1].1 - 0.06).abs() < 1e-12);
+        assert_eq!(s.exec_ewma_ms.len(), 2);
+        assert_eq!(s.exec_ewma_ms[1], (2048, "gpu".to_string(), 34.0));
+        // reset keeps the backend declaration, drops the mirrored table
+        // (the router re-pushes it on the next completion)
+        m.reset();
+        let s = m.snapshot();
+        assert_eq!(s.worker_backend.len(), 3);
+        assert_eq!(s.migrations, 0);
+        assert!(s.exec_ewma_ms.is_empty());
     }
 }

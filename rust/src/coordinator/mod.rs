@@ -4,9 +4,9 @@
 //!
 //! ```text
 //!                          ┌────────────────── router thread ─────────────────┐
-//!  clients ──req──▶ submit │ accept ─▶ batcher ─▶ dispatch ──job──▶ worker 0  │ (owns PJRT)
-//!     ▲      (bounded      │  (per-bucket FIFO,   (least-loaded) ─▶ worker 1  │ (owns PJRT)
-//!     │       queue)       │   inflight caps)                    ─▶ worker N  │ (owns PJRT)
+//!  clients ──req──▶ submit │ accept ─▶ batcher ─▶ dispatch ──job──▶ worker 0  │ (owns PJRT, cpu)
+//!     ▲      (bounded      │  (per-bucket FIFO,   (min expected  ─▶ worker 1  │ (owns PJRT, cpu)
+//!     │       queue)       │   inflight caps)      completion)   ─▶ worker N  │ (owns PJRT, gpu)
 //!     │                    │ complete ◀──────── shared completion channel ◀───┘
 //!     └── per-request response channel (decode: argmax at mask positions)
 //! ```
@@ -14,14 +14,20 @@
 //! **Stages.** The router overlaps the three hot-path stages that
 //! `experiments/hotpath.rs` times: (1) *accept/assemble* — submissions
 //! land in the length-bucketing [`Batcher`]; (2) *execute* — every
-//! formable batch is dispatched to the least-loaded [`EnginePool`]
-//! worker, each worker a thread owning its own PJRT `Runtime` +
-//! `ExecutablePool` (PJRT objects are not `Send`, so only plain
+//! formable batch is dispatched to the [`EnginePool`] worker with the
+//! minimum expected completion time under the per-backend roofline cost
+//! model ([`WeightedPolicy`]; the pool may mix CPU/GPU/TPU workers, and
+//! on a homogeneous pool under uniform single-bucket traffic the policy
+//! reduces exactly to least-loaded), each
+//! worker a thread owning its own PJRT `Runtime` + `ExecutablePool`
+//! (PJRT objects are not `Send`, so only plain
 //! [`crate::runtime::HostTensor`]s and control messages cross threads);
 //! (3) *decode/complete* — finished batches come back on one shared
 //! completion channel and are decoded while other batches are still
-//! executing. The manifest is parsed once and shared `Arc`-style with
-//! all workers.
+//! executing; their observed execution times refine the cost model's
+//! per-(bucket, backend) EWMAs, so long-sequence buckets migrate to the
+//! backend whose roofline actually fits them. The manifest is parsed
+//! once and shared `Arc`-style with all workers.
 //!
 //! **Backpressure.** Three bounds, outermost first: the client
 //! submission queue (`ServerConfig::queue_depth`) blocks producers when
@@ -38,12 +44,14 @@
 //! gone; the handle is now a thin wrapper over a 1-worker pool).
 
 mod batcher;
+mod dispatch;
 mod engine;
 mod metrics;
 mod server;
 pub mod trace;
 
 pub use batcher::{Batcher, BatcherConfig, Bucket, FormedBatch, PendingRequest};
+pub use dispatch::{replay, WeightedPolicy};
 pub use engine::{EngineHandle, EnginePool, PoolCompletion, PoolJob};
 pub use metrics::{MetricsSnapshot, ServingMetrics};
 pub use server::{Response, Server, ServerConfig};

@@ -4,12 +4,17 @@
 //! The router thread runs three overlapped stages (the ones
 //! `experiments/hotpath.rs` times): it **accepts** submissions into the
 //! length-bucketing batcher, **dispatches** every formable batch to the
-//! least-loaded engine worker (bounded per bucket by
+//! engine worker with the minimum expected completion time under the
+//! per-backend roofline cost model (bounded per bucket by
 //! `ServingConfig::max_inflight`), and **completes** finished batches —
 //! decoding logits and answering each request's reply channel — while
-//! other batches are still executing. With one worker and
-//! `max_inflight: 1` this degenerates to the original single-inflight
-//! loop (same responses, FIFO within bucket).
+//! other batches are still executing. On a homogeneous pool the cost
+//! model scores every worker identically, so dispatch weighs queued
+//! *work* instead of queued batch counts — on uniform single-bucket
+//! traffic that is exactly PR 1's least-loaded policy (mixed bucket
+//! sizes may place batches differently, with identical responses); with
+//! one CPU worker and `max_inflight: 1` it degenerates to the original
+//! single-inflight loop (same responses, FIFO within bucket).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -26,7 +31,7 @@ use super::batcher::{Batcher, BatcherConfig, Bucket, FormedBatch, PendingRequest
 use super::engine::{EnginePool, PoolCompletion, PoolJob};
 use super::metrics::{MetricsSnapshot, ServingMetrics};
 use crate::config::ServingConfig;
-use crate::runtime::{HostTensor, Manifest};
+use crate::runtime::{BackendKind, HostTensor, JobShape, Manifest};
 use crate::tokenizer::special;
 use crate::util::decode;
 
@@ -133,12 +138,13 @@ impl Server {
             .map(|o| *o.dims.last().unwrap_or(&0))
             .context("fwd artifact has no output")?;
 
-        let pool =
-            EnginePool::spawn(manifest.clone(), cfg.serving.engine_workers, cfg.queue_depth)?;
+        let pool = EnginePool::spawn(manifest.clone(), &cfg.serving.backends, cfg.queue_depth)?;
         let (tx, rx): (SyncSender<Submission>, Receiver<Submission>) =
             sync_channel(cfg.queue_depth);
         let metrics = Arc::new(ServingMetrics::default());
-        metrics.set_workers(cfg.serving.engine_workers);
+        let worker_labels: Vec<String> = pool.backends().iter().map(|b| b.label()).collect();
+        metrics.set_worker_backends(&worker_labels);
+        let worker_kinds: Vec<BackendKind> = pool.backends().iter().map(|b| b.kind).collect();
         let stop = Arc::new(AtomicBool::new(false));
         let m2 = metrics.clone();
         let stop2 = stop.clone();
@@ -148,7 +154,9 @@ impl Server {
         let join = std::thread::Builder::new()
             .name("bigbird-router".into())
             .spawn(move || {
-                router_loop(rx, pool, router_buckets, batcher_cfg, vocab, m2, stop2);
+                let st =
+                    RouterState::new(pool, router_buckets, worker_kinds, batcher_cfg, vocab, m2);
+                router_loop(rx, st, stop2);
             })
             .context("spawning router")?;
         Ok(Server {
@@ -158,7 +166,7 @@ impl Server {
             stop,
             join: Some(join),
             buckets,
-            workers: cfg.serving.engine_workers,
+            workers: cfg.serving.n_workers(),
         })
     }
 
@@ -251,26 +259,42 @@ struct RouterState {
     next_batch_id: u64,
     vocab: usize,
     metrics: Arc<ServingMetrics>,
+    /// Realized backend kind of each pool worker, indexed by worker id.
+    /// Realized — not requested — so two physically identical workers
+    /// (e.g. a `gpu` spec that fell back to CPU next to a `cpu` worker)
+    /// never register migrations between each other.
+    worker_kinds: Vec<BackendKind>,
+    /// Realized backend kind that served each bucket's previous batch,
+    /// indexed by bucket — a change is a bucket migration (counted in
+    /// metrics).
+    bucket_backend: Vec<Option<BackendKind>>,
 }
 
-fn router_loop(
-    rx: Receiver<Submission>,
-    pool: EnginePool,
-    buckets: Vec<Bucket>,
-    batcher_cfg: BatcherConfig,
-    vocab: usize,
-    metrics: Arc<ServingMetrics>,
-    stop: Arc<AtomicBool>,
-) {
-    let mut st = RouterState {
-        batcher: Batcher::new(buckets, batcher_cfg),
-        pool,
-        replies: HashMap::new(),
-        inflight: HashMap::new(),
-        next_batch_id: 1,
-        vocab,
-        metrics,
-    };
+impl RouterState {
+    fn new(
+        pool: EnginePool,
+        buckets: Vec<Bucket>,
+        worker_kinds: Vec<BackendKind>,
+        batcher_cfg: BatcherConfig,
+        vocab: usize,
+        metrics: Arc<ServingMetrics>,
+    ) -> Self {
+        let n_buckets = buckets.len();
+        RouterState {
+            batcher: Batcher::new(buckets, batcher_cfg),
+            pool,
+            replies: HashMap::new(),
+            inflight: HashMap::new(),
+            next_batch_id: 1,
+            vocab,
+            metrics,
+            worker_kinds,
+            bucket_backend: vec![None; n_buckets],
+        }
+    }
+}
+
+fn router_loop(rx: Receiver<Submission>, mut st: RouterState, stop: Arc<AtomicBool>) {
     let wait = Duration::from_millis(1);
     // The loop exits only via the stop flag: the Server owns the sole
     // submission sender and always sets stop + joins this thread before
@@ -326,7 +350,8 @@ fn accept(st: &mut RouterState, sub: Submission) {
     }
 }
 
-/// Pad/stack a formed batch and hand it to the least-loaded worker.
+/// Pad/stack a formed batch and hand it to the worker with the minimum
+/// expected completion time for its bucket.
 fn dispatch_batch(st: &mut RouterState, fb: FormedBatch) {
     let b = fb.bucket.batch;
     let s = fb.bucket.seq_len;
@@ -346,6 +371,7 @@ fn dispatch_batch(st: &mut RouterState, fb: FormedBatch) {
     let job = PoolJob {
         batch_id,
         artifact: fb.bucket.artifact.clone(),
+        shape: JobShape { seq_len: s, batch: b },
         inputs: vec![
             HostTensor::I32 { shape: vec![b, s], data: tokens },
             HostTensor::F32 { shape: vec![b, s], data: kv_valid },
@@ -356,10 +382,19 @@ fn dispatch_batch(st: &mut RouterState, fb: FormedBatch) {
         submitted: Instant::now(),
     };
     match st.pool.submit(job) {
-        Ok(_worker) => {
+        Ok(worker) => {
             // counted only once actually dispatched, so batch-fill and
             // the per-worker job totals stay consistent
             st.metrics.record_batch(fb.requests.len(), b);
+            // a bucket changing (realized) backends is a migration —
+            // the roofline/EWMA policy moving it to a better-fitting
+            // device, never churn between identical workers
+            if let Some(&kind) = st.worker_kinds.get(worker) {
+                let prev = st.bucket_backend[fb.bucket_idx].replace(kind);
+                if matches!(prev, Some(p) if p != kind) {
+                    st.metrics.record_migration();
+                }
+            }
             st.inflight.insert(
                 batch_id,
                 InflightBatch {
@@ -395,6 +430,16 @@ fn complete_batch(st: &mut RouterState, c: PoolCompletion) {
         c.queue_wait.as_secs_f64() * 1e3,
         c.exec.as_secs_f64() * 1e3,
     );
+    // mirror the dispatch policy's refreshed cost table (the pool folds
+    // successful exec times into it as completions are collected) so
+    // metrics report exactly the EWMAs routing runs on
+    let ewma = st
+        .pool
+        .ewma_table()
+        .into_iter()
+        .map(|(s, k, v)| (s, k.as_str().to_string(), v))
+        .collect();
+    st.metrics.set_exec_ewma(ewma);
     let outs = match c.result {
         Ok(outs) => outs,
         Err(e) => {

@@ -20,8 +20,10 @@ pub fn run(flags: &Flags) -> Result<()> {
     let mut cfg = ServerConfig::mlm_default(&flags.artifacts);
     cfg.serving = flags.serving();
     log.line(format!(
-        "engine pool: {} worker(s), max {} inflight batches per bucket",
-        cfg.serving.engine_workers, cfg.serving.max_inflight
+        "engine pool: {} worker(s) [{}], max {} inflight batches per bucket",
+        cfg.serving.n_workers(),
+        crate::runtime::format_backend_specs(&cfg.serving.backends),
+        cfg.serving.max_inflight
     ));
     let server = Arc::new(Server::start(cfg)?);
     log.line("warming up buckets (compiling artifacts on every worker once) ...");
@@ -75,15 +77,23 @@ pub fn run(flags: &Flags) -> Result<()> {
             vec!["mean execute ms".into(), format!("{:.2}", m.mean_exec_ms)],
             vec!["mean inflight depth".into(), format!("{:.2}", m.mean_inflight)],
             vec!["peak inflight depth".into(), format!("{}", m.peak_inflight)],
+            vec!["bucket migrations".into(), format!("{}", m.migrations)],
         ],
     ));
     let utils = m.worker_utilization(wall);
     for (w, (&jobs, util)) in m.worker_jobs.iter().zip(&utils).enumerate() {
+        let backend = m.worker_backend.get(w).map(|s| s.as_str()).unwrap_or("?");
         log.line(format!(
-            "worker {w}: {jobs} batches, busy {:.0} ms, utilization {:.0}%",
+            "worker {w} [{backend}]: {jobs} batches, busy {:.0} ms, utilization {:.0}%",
             m.worker_busy_ms[w],
             100.0 * util
         ));
+    }
+    for (label, util) in m.backend_utilization(wall) {
+        log.line(format!("backend {label}: utilization {:.0}%", 100.0 * util));
+    }
+    for (seq_len, label, ewma) in &m.exec_ewma_ms {
+        log.line(format!("bucket s{seq_len} on {label}: exec EWMA {ewma:.1} ms"));
     }
     let n_preds: usize = responses.iter().map(|r| r.predictions.len()).sum();
     log.line(format!(

@@ -1,0 +1,293 @@
+//! Backend abstraction: which device family a PJRT runtime targets, and
+//! a per-bucket roofline cost model for device-aware dispatch.
+//!
+//! BigBird's block-sparse attention is the reason a *heterogeneous* pool
+//! makes sense: the pattern is bandwidth/latency-bound at short sequence
+//! buckets and compute-bound at long ones, so the optimal device depends
+//! on the bucket. Each engine worker is assigned a [`BackendSpec`]; the
+//! dispatcher scores every (bucket, backend) pair with [`Roofline`] —
+//! seeded statically per platform here, refined online from observed
+//! execution times — and routes each batch to the worker with the
+//! minimum expected completion time.
+//!
+//! The spec grammar (the `--backends` CLI flag) is
+//! `kind[:count][,kind[:count]...]`, e.g. `cpu:2,gpu:1` for two CPU
+//! workers plus one GPU worker. When a GPU/TPU PJRT plugin is absent the
+//! worker falls back to CPU with a warning (see
+//! [`super::Runtime::for_backend`]), so the same flag works on CPU-only
+//! machines and CI runners.
+
+use anyhow::{bail, Result};
+
+/// Device family a worker's PJRT client targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum BackendKind {
+    /// Host CPU (always available; the fallback for every other kind).
+    Cpu,
+    /// CUDA/ROCm device behind a PJRT GPU plugin.
+    Gpu,
+    /// TPU device behind a PJRT TPU plugin.
+    Tpu,
+}
+
+impl BackendKind {
+    /// Spec-grammar name (also used as the metrics label).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendKind::Cpu => "cpu",
+            BackendKind::Gpu => "gpu",
+            BackendKind::Tpu => "tpu",
+        }
+    }
+
+    /// Parse a spec-grammar name.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "cpu" => BackendKind::Cpu,
+            "gpu" => BackendKind::Gpu,
+            "tpu" => BackendKind::Tpu,
+            other => bail!("unknown backend kind {other:?} (expected cpu|gpu|tpu)"),
+        })
+    }
+}
+
+/// Requested backend for one engine worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BackendSpec {
+    /// Requested device family. The *realized* backend may differ (CPU
+    /// fallback when the plugin is absent).
+    pub kind: BackendKind,
+}
+
+impl BackendSpec {
+    /// A CPU worker spec.
+    pub fn cpu() -> Self {
+        BackendSpec { kind: BackendKind::Cpu }
+    }
+
+    /// `n` identical CPU worker specs — the PR 1-compatible homogeneous
+    /// pool shape.
+    pub fn cpu_workers(n: usize) -> Vec<Self> {
+        vec![BackendSpec::cpu(); n]
+    }
+}
+
+/// Parse the `--backends` spec grammar into one [`BackendSpec`] per
+/// worker, preserving declaration order: `cpu:2,gpu:1` →
+/// `[cpu, cpu, gpu]`. A bare kind means count 1; counts must be ≥ 1.
+pub fn parse_backend_specs(s: &str) -> Result<Vec<BackendSpec>> {
+    let mut specs = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            bail!("empty backend entry in spec {s:?}");
+        }
+        let (kind, count) = match part.split_once(':') {
+            Some((k, c)) => {
+                let n: usize = c
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("backend count {c:?} is not a number"))?;
+                (BackendKind::parse(k.trim())?, n)
+            }
+            None => (BackendKind::parse(part)?, 1),
+        };
+        if count == 0 {
+            bail!("backend {part:?} has count 0 (must be >= 1)");
+        }
+        specs.extend(std::iter::repeat(BackendSpec { kind }).take(count));
+    }
+    if specs.is_empty() {
+        bail!("backend spec {s:?} names no workers");
+    }
+    Ok(specs)
+}
+
+/// Render worker specs back into the compact spec grammar (adjacent runs
+/// of one kind are collapsed): `[cpu, cpu, gpu]` → `"cpu:2,gpu:1"`.
+pub fn format_backend_specs(specs: &[BackendSpec]) -> String {
+    let mut out: Vec<(BackendKind, usize)> = Vec::new();
+    for s in specs {
+        if let Some(last) = out.last_mut() {
+            if last.0 == s.kind {
+                last.1 += 1;
+                continue;
+            }
+        }
+        out.push((s.kind, 1));
+    }
+    out.iter()
+        .map(|(k, n)| format!("{}:{n}", k.as_str()))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// The work shape of one dispatched batch, as the cost model sees it:
+/// everything else about the artifact is folded into the per-token
+/// constants and the observed-time refinement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct JobShape {
+    /// Padded sequence length of the bucket.
+    pub seq_len: usize,
+    /// Batch capacity baked into the bucket's artifact.
+    pub batch: usize,
+}
+
+impl JobShape {
+    /// Padded tokens the batch carries (the linear factor in BigBird's
+    /// O(n) attention cost).
+    pub fn tokens(&self) -> usize {
+        self.seq_len * self.batch
+    }
+}
+
+/// Model FLOPs per padded token (scaled-down BigBird-base forward pass;
+/// order-of-magnitude seed — observed-time EWMAs refine it online).
+const FLOPS_PER_TOKEN: f64 = 1.0e6;
+/// Bytes moved per padded token (activations in + logits out, crossing
+/// the host↔device link on accelerators).
+const BYTES_PER_TOKEN: f64 = 4.0e3;
+
+/// Roofline cost model for one backend: a batch costs
+/// `overhead + max(compute time, memory time)` where compute time is
+/// `flops / peak flops` and memory time is `bytes / peak bandwidth`.
+///
+/// The numbers are *seeds*, not measurements: they only need to rank
+/// backends sensibly per bucket until real execution times arrive. The
+/// defaults (see [`Roofline::for_kind`]) are deliberately conservative
+/// public figures and are documented in `rust/README.md`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Roofline {
+    /// Peak sustained compute, GFLOP/s.
+    pub gflops: f64,
+    /// Peak effective memory/link bandwidth, GB/s (for accelerators this
+    /// is the host↔device link the batch must cross, not HBM).
+    pub gbps: f64,
+    /// Fixed per-batch overhead in ms (dispatch, kernel launch,
+    /// host↔device round-trip setup) — what keeps short buckets on
+    /// low-latency backends.
+    pub overhead_ms: f64,
+}
+
+impl Roofline {
+    /// Static per-platform seed model.
+    pub fn for_kind(kind: BackendKind) -> Self {
+        match kind {
+            // multithreaded host CPU: low latency, modest throughput
+            BackendKind::Cpu => Roofline { gflops: 80.0, gbps: 40.0, overhead_ms: 0.05 },
+            // data-center GPU behind PCIe: huge throughput, launch +
+            // transfer overhead per batch
+            BackendKind::Gpu => Roofline { gflops: 9000.0, gbps: 16.0, overhead_ms: 1.5 },
+            // TPU via PJRT plugin: highest throughput, highest dispatch
+            // overhead
+            BackendKind::Tpu => Roofline { gflops: 45000.0, gbps: 30.0, overhead_ms: 3.0 },
+        }
+    }
+
+    /// Predicted execution cost of one batch of `shape`, in ms.
+    pub fn cost_ms(&self, shape: JobShape) -> f64 {
+        let tokens = shape.tokens() as f64;
+        let compute_s = tokens * FLOPS_PER_TOKEN / (self.gflops * 1e9);
+        let memory_s = tokens * BYTES_PER_TOKEN / (self.gbps * 1e9);
+        self.overhead_ms + compute_s.max(memory_s) * 1e3
+    }
+}
+
+/// The realized backend of a spawned engine worker: what the worker
+/// actually got (after any CPU fallback), plus its cost model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Backend {
+    /// Realized device family (== requested, or [`BackendKind::Cpu`]
+    /// after a fallback).
+    pub kind: BackendKind,
+    /// Device family the spec asked for.
+    pub requested: BackendKind,
+    /// PJRT platform name reported by the client (e.g. `"cpu"`).
+    pub platform: String,
+    /// Cost model used to score buckets on this backend.
+    pub roofline: Roofline,
+}
+
+impl Backend {
+    /// Backend for a realized kind with the static roofline seed.
+    pub fn of_kind(kind: BackendKind, requested: BackendKind, platform: String) -> Self {
+        Backend { kind, requested, platform, roofline: Roofline::for_kind(kind) }
+    }
+
+    /// A synthetic backend with an explicit cost model — used by the
+    /// dispatch-policy tests and the heterogeneous-pool bench to
+    /// simulate cost-skewed devices without any PJRT plugin.
+    pub fn simulated(kind: BackendKind, roofline: Roofline) -> Self {
+        Backend { kind, requested: kind, platform: format!("sim-{}", kind.as_str()), roofline }
+    }
+
+    /// Metrics label: the realized kind, annotated when it differs from
+    /// the request (e.g. `"cpu(gpu-fallback)"`).
+    pub fn label(&self) -> String {
+        if self.kind == self.requested {
+            self.kind.as_str().to_string()
+        } else {
+            format!("{}({}-fallback)", self.kind.as_str(), self.requested.as_str())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_grammar_roundtrip() {
+        let specs = parse_backend_specs("cpu:2,gpu:1").unwrap();
+        assert_eq!(
+            specs,
+            vec![BackendSpec::cpu(), BackendSpec::cpu(), BackendSpec { kind: BackendKind::Gpu }]
+        );
+        assert_eq!(format_backend_specs(&specs), "cpu:2,gpu:1");
+        // bare kind means count 1
+        assert_eq!(parse_backend_specs("tpu").unwrap().len(), 1);
+        // whitespace tolerated
+        assert_eq!(parse_backend_specs(" cpu : 2 , gpu ").unwrap().len(), 3);
+    }
+
+    #[test]
+    fn spec_grammar_rejects_malformed() {
+        assert!(parse_backend_specs("").is_err());
+        assert!(parse_backend_specs("cpu:0").is_err());
+        assert!(parse_backend_specs("cpu:two").is_err());
+        assert!(parse_backend_specs("npu:1").is_err());
+        assert!(parse_backend_specs("cpu:1,,gpu:1").is_err());
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in [BackendKind::Cpu, BackendKind::Gpu, BackendKind::Tpu] {
+            assert_eq!(BackendKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(BackendKind::parse("cuda").is_err());
+    }
+
+    #[test]
+    fn roofline_orders_backends_by_bucket() {
+        let cpu = Roofline::for_kind(BackendKind::Cpu);
+        let gpu = Roofline::for_kind(BackendKind::Gpu);
+        let long = JobShape { seq_len: 2048, batch: 4 };
+        // long buckets are compute-bound: the throughput backend wins
+        assert!(gpu.cost_ms(long) < cpu.cost_ms(long), "gpu should win the long bucket");
+        // cost grows monotonically with tokens on every backend
+        let short = JobShape { seq_len: 128, batch: 4 };
+        assert!(cpu.cost_ms(short) < cpu.cost_ms(long));
+        assert!(gpu.cost_ms(short) < gpu.cost_ms(long));
+        // tiny batches are dominated by overhead, where cpu is cheapest
+        let tiny = JobShape { seq_len: 16, batch: 1 };
+        assert!(cpu.cost_ms(tiny) < gpu.cost_ms(tiny), "cpu should win the tiny bucket");
+    }
+
+    #[test]
+    fn fallback_label_names_the_request() {
+        let b = Backend::of_kind(BackendKind::Cpu, BackendKind::Gpu, "cpu".into());
+        assert_eq!(b.label(), "cpu(gpu-fallback)");
+        let b = Backend::of_kind(BackendKind::Cpu, BackendKind::Cpu, "cpu".into());
+        assert_eq!(b.label(), "cpu");
+    }
+}

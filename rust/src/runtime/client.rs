@@ -1,10 +1,11 @@
-//! The PJRT runtime owner: one CPU client + artifact compilation.
+//! The PJRT runtime owner: one per-backend client + artifact compilation.
 
 use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use super::backend::{BackendKind, BackendSpec};
 use super::executable::ArtifactExecutable;
 use super::manifest::{Manifest, ManifestEntry};
 
@@ -18,6 +19,39 @@ impl Runtime {
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Runtime { client })
+    }
+
+    /// Create a client for the requested backend, returning the runtime
+    /// together with the *realized* [`BackendKind`].
+    ///
+    /// GPU/TPU clients require a PJRT device plugin (advertised via
+    /// `PJRT_GPU_PLUGIN_PATH` / `PJRT_TPU_PLUGIN_PATH`); the vendored
+    /// `xla_extension` in this build links only the CPU client, so a
+    /// missing — or presently unloadable — plugin degrades to a CPU
+    /// client with a warning rather than failing the worker. Callers use
+    /// the realized kind to pick the matching roofline cost model, so a
+    /// fallen-back "gpu" worker is costed (and dispatched to) as the CPU
+    /// it actually is.
+    pub fn for_backend(spec: &BackendSpec) -> Result<(Self, BackendKind)> {
+        match spec.kind {
+            BackendKind::Cpu => Ok((Self::cpu()?, BackendKind::Cpu)),
+            requested => {
+                let var = format!("PJRT_{}_PLUGIN_PATH", requested.as_str().to_uppercase());
+                match std::env::var_os(&var) {
+                    Some(path) => eprintln!(
+                        "[runtime] {} plugin at {} cannot be loaded by this CPU-only \
+                         xla_extension build; falling back to CPU",
+                        requested.as_str(),
+                        Path::new(&path).display()
+                    ),
+                    None => eprintln!(
+                        "[runtime] no {} PJRT plugin ({var} unset); falling back to CPU",
+                        requested.as_str()
+                    ),
+                }
+                Ok((Self::cpu()?, BackendKind::Cpu))
+            }
+        }
     }
 
     /// Backend platform name (e.g. "cpu").

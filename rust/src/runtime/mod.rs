@@ -7,6 +7,7 @@
 //! text parser reassigns ids). This module compiles those artifacts on a
 //! shared [`PjRtClient`] and exposes typed, shape-checked entry points.
 
+pub mod backend;
 mod client;
 mod executable;
 pub mod hlo_stats;
@@ -14,6 +15,10 @@ mod literal_util;
 mod manifest;
 mod pool;
 
+pub use backend::{
+    format_backend_specs, parse_backend_specs, Backend, BackendKind, BackendSpec, JobShape,
+    Roofline,
+};
 pub use client::Runtime;
 pub use executable::{ArtifactExecutable, IoSpec, TensorSpec};
 pub use literal_util::{literal_f32, literal_i32, to_vec_f32, to_vec_i32, HostTensor};

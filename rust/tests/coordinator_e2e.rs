@@ -7,8 +7,9 @@ use std::time::{Duration, Instant};
 
 use bigbird::config::ServingConfig;
 use bigbird::coordinator::{
-    Batcher, BatcherConfig, Bucket, PendingRequest, Server, ServerConfig,
+    Batcher, BatcherConfig, Bucket, EnginePool, PendingRequest, PoolJob, Server, ServerConfig,
 };
+use bigbird::runtime::{parse_backend_specs, BackendKind, JobShape, Manifest};
 use bigbird::tokenizer::special;
 use bigbird::util::Rng;
 
@@ -118,7 +119,7 @@ fn concurrent_clients_multi_worker_no_crosswiring() {
     let Some(dir) = artifacts() else { return };
     let mut cfg = ServerConfig::mlm_default(&dir);
     cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(2), ..Default::default() };
-    cfg.serving = ServingConfig { engine_workers: 2, max_inflight: 2 };
+    cfg.serving = ServingConfig::cpu(2, 2);
     let server = Arc::new(Server::start(cfg).expect("server start (needs `make artifacts`)"));
     server.warmup(&[512, 2048]).unwrap();
 
@@ -169,7 +170,7 @@ fn single_worker_pool_is_fifo_and_deterministic() {
     let Some(dir) = artifacts() else { return };
     let mut cfg = ServerConfig::mlm_default(&dir);
     cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(2), ..Default::default() };
-    cfg.serving = ServingConfig { engine_workers: 1, max_inflight: 1 };
+    cfg.serving = ServingConfig::cpu(1, 1);
     let server = Server::start(cfg).expect("server start (needs `make artifacts`)");
 
     // same-bucket burst submitted from one thread: ids are assigned in
@@ -201,6 +202,69 @@ fn single_worker_pool_is_fifo_and_deterministic() {
     let m = server.metrics();
     assert_eq!(m.errors, 0, "{m:?}");
     server.shutdown();
+}
+
+/// Heterogeneous pool end-to-end on the artifact-free path (the CI
+/// smoke job's test): a `cpu:1,gpu:1` spec spawns two live workers over
+/// an empty manifest — the gpu worker falls back to CPU with a warning
+/// because no PJRT plugin is present — and jobs still dispatch,
+/// execute (here: fail cleanly on an unknown artifact), and complete
+/// with correct accounting.
+#[test]
+fn heterogeneous_pool_spawns_with_cpu_fallback() {
+    let specs = parse_backend_specs("cpu:1,gpu:1").expect("spec grammar");
+    assert_eq!(specs.len(), 2);
+    // empty manifest: no artifacts needed to exercise pool mechanics
+    let manifest = Arc::new(Manifest::default());
+    let mut pool = match EnginePool::spawn(manifest, &specs, 4) {
+        Ok(p) => p,
+        Err(e) => {
+            // no PJRT CPU client in this environment — nothing to test
+            eprintln!("skipping: engine pool unavailable ({e:#})");
+            return;
+        }
+    };
+    assert_eq!(pool.size(), 2);
+    let backends = pool.backends();
+    // worker 0 asked for cpu and got it; worker 1 asked for gpu and
+    // must have fallen back to a realized cpu backend
+    assert_eq!(backends[0].kind, BackendKind::Cpu);
+    assert_eq!(backends[0].requested, BackendKind::Cpu);
+    assert_eq!(backends[0].label(), "cpu");
+    assert_eq!(backends[1].kind, BackendKind::Cpu);
+    assert_eq!(backends[1].requested, BackendKind::Gpu);
+    assert_eq!(backends[1].label(), "cpu(gpu-fallback)");
+    // jobs flow end-to-end: unknown artifacts come back as error
+    // completions (not hangs, not panics), one per submitted job
+    for id in 0..4u64 {
+        let w = pool
+            .submit(PoolJob {
+                batch_id: id,
+                artifact: "no_such_artifact".into(),
+                shape: JobShape { seq_len: 512, batch: 4 },
+                inputs: vec![],
+                with_params: false,
+                submitted: Instant::now(),
+            })
+            .expect("submit");
+        assert!(w < 2);
+    }
+    let mut seen = Vec::new();
+    while seen.len() < 4 {
+        let c = pool
+            .completion_timeout(Duration::from_secs(60))
+            .expect("completion within deadline");
+        assert!(c.result.is_err(), "unknown artifact must fail");
+        assert_eq!(c.shape.seq_len, 512);
+        seen.push(c.batch_id);
+    }
+    seen.sort_unstable();
+    assert_eq!(seen, vec![0, 1, 2, 3]);
+    assert_eq!(pool.inflight(), 0, "all completions collected");
+    // failed completions release their dispatch charges but are never
+    // folded into the cost model — a backend that fails fast must not
+    // look cheap to the policy — so the EWMA table stays empty
+    assert!(pool.ewma_table().is_empty());
 }
 
 /// Pure queueing logic (no artifacts needed): under an inflight cap the

@@ -1,0 +1,159 @@
+//! Dispatch-policy contract tests (pure logic, no PJRT, no artifacts):
+//!
+//! * under simulated cost-skewed backends, the weighted policy routes
+//!   the overwhelming majority (≥ 80%) of largest-bucket batches to the
+//!   backend that is cheaper for them;
+//! * the policy never starves a backend — under a uniform trace every
+//!   worker receives work (property-tested over random traces);
+//! * with identical backends it degrades to PR 1's least-loaded policy
+//!   (identical pick sequence, including tie-breaks).
+
+use std::collections::VecDeque;
+
+use bigbird::coordinator::{replay, WeightedPolicy};
+use bigbird::runtime::{Backend, BackendKind, JobShape, Roofline};
+use bigbird::util::proptest::check_res;
+
+fn sim(kind: BackendKind, gflops: f64, overhead_ms: f64) -> Backend {
+    Backend::simulated(kind, Roofline { gflops, gbps: 1000.0, overhead_ms })
+}
+
+/// Acceptance gate: two simulated cost-skewed backends — worker 0 a
+/// low-latency device that wins the short bucket, worker 1 a
+/// high-throughput device with a large per-batch overhead that is ≫
+/// cheaper for the largest bucket — and a mixed trace with bounded
+/// inflight. At least 80% of largest-bucket batches must land on the
+/// throughput backend (and the short bucket must mostly stay on the
+/// low-latency one).
+#[test]
+fn largest_bucket_routes_to_the_cheaper_backend() {
+    let slow = sim(BackendKind::Cpu, 50.0, 0.05);
+    let fast = sim(BackendKind::Gpu, 5000.0, 25.0);
+    let small = JobShape { seq_len: 128, batch: 8 };
+    let large = JobShape { seq_len: 2048, batch: 2 };
+    // sanity of the simulated skew: cpu wins small, gpu wins large
+    assert!(slow.roofline.cost_ms(small) < fast.roofline.cost_ms(small));
+    assert!(fast.roofline.cost_ms(large) < slow.roofline.cost_ms(large));
+    let mut policy = WeightedPolicy::new(vec![slow.clone(), fast.clone()]);
+    // mixed trace, 40% large, up to 4 batches in flight
+    let shapes: Vec<JobShape> =
+        (0..200).map(|i| if i % 5 < 2 { large } else { small }).collect();
+    let rooflines = [slow.roofline, fast.roofline];
+    let picks = replay(&mut policy, &shapes, 4, |w, s| rooflines[w].cost_ms(s));
+    let count = |seq_len: usize, worker: usize| {
+        shapes
+            .iter()
+            .zip(&picks)
+            .filter(|(s, &w)| s.seq_len == seq_len && w == worker)
+            .count()
+    };
+    let large_total = shapes.iter().filter(|s| s.seq_len == 2048).count();
+    let small_total = shapes.len() - large_total;
+    let large_on_fast = count(2048, 1);
+    let frac = large_on_fast as f64 / large_total as f64;
+    assert!(
+        frac >= 0.8,
+        "only {large_on_fast}/{large_total} large batches on the cheap backend"
+    );
+    let small_on_slow = count(128, 0);
+    assert!(
+        small_on_slow as f64 / small_total as f64 >= 0.6,
+        "short bucket left its low-latency backend: {small_on_slow}/{small_total}"
+    );
+}
+
+/// Property: under a uniform *burst* trace (arrivals outpace
+/// completions, so queues build — the regime where starvation could
+/// happen), no worker is starved: every backend receives at least one
+/// batch, for any rooflines within an order-of-magnitude skew.
+/// Expected-completion-time dispatch guarantees this — a busy cheap
+/// worker's queue eventually costs more than an idle slow one. (Under
+/// *light* load the policy rightly concentrates work on the best
+/// device; that is routing, not starvation.)
+#[test]
+fn prop_no_backend_is_starved() {
+    check_res(
+        11,
+        60,
+        |rng| {
+            let n_workers = 2 + rng.below(3); // 2..=4
+            // compute 100..600 GFLOP/s, overhead 0.1..3.0 ms: worst-case
+            // cost skew ≈ 6×, so n_workers·8 burst jobs always overflow
+            // the cheap workers' queues onto the dearest one
+            let skews: Vec<(u64, u64)> = (0..n_workers)
+                .map(|_| (100 + rng.below(500) as u64, 1 + rng.below(30) as u64))
+                .collect();
+            let n_jobs = n_workers * (8 + rng.below(24));
+            (skews, n_jobs)
+        },
+        |(skews, n_jobs)| {
+            let backends: Vec<Backend> = skews
+                .iter()
+                .map(|&(gflops, tenth_ms)| {
+                    sim(BackendKind::Cpu, gflops as f64, tenth_ms as f64 / 10.0)
+                })
+                .collect();
+            let rooflines: Vec<Roofline> = backends.iter().map(|b| b.roofline).collect();
+            let mut policy = WeightedPolicy::new(backends);
+            let shape = JobShape { seq_len: 512, batch: 8 };
+            let shapes = vec![shape; *n_jobs];
+            // window == n_jobs: pure burst, nothing completes mid-trace
+            let picks =
+                replay(&mut policy, &shapes, *n_jobs, |w, s| rooflines[w].cost_ms(s));
+            for w in 0..skews.len() {
+                if !picks.contains(&w) {
+                    return Err(format!(
+                        "worker {w} starved over {n_jobs} uniform jobs (skews {skews:?})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Property: with identical backends the weighted policy's pick
+/// sequence is *exactly* PR 1's least-loaded-by-outstanding-count
+/// policy (lowest index on ties), for any trace of shapes drawn from a
+/// single bucket and any completion window.
+#[test]
+fn prop_identical_backends_degrade_to_least_loaded() {
+    check_res(
+        13,
+        60,
+        |rng| {
+            let n_workers = 1 + rng.below(5);
+            let n_jobs = 1 + rng.below(64);
+            let window = 1 + rng.below(8);
+            let seq_len = 128 << rng.below(3); // one bucket per case
+            (n_workers, n_jobs, window, seq_len)
+        },
+        |&(n_workers, n_jobs, window, seq_len)| {
+            let b = sim(BackendKind::Cpu, 100.0, 0.1);
+            let mut policy = WeightedPolicy::new(vec![b.clone(); n_workers]);
+            let shape = JobShape { seq_len, batch: 4 };
+            let shapes = vec![shape; n_jobs];
+            let cost = b.roofline.cost_ms(shape);
+            let picks = replay(&mut policy, &shapes, window, |_, _| cost);
+
+            // reference: least-loaded by outstanding count, same window
+            let mut outstanding = vec![0usize; n_workers];
+            let mut inflight: VecDeque<usize> = VecDeque::new();
+            let mut expect = Vec::with_capacity(n_jobs);
+            for _ in 0..n_jobs {
+                if inflight.len() >= window {
+                    let w = inflight.pop_front().unwrap();
+                    outstanding[w] -= 1;
+                }
+                let w = (0..n_workers).min_by_key(|&w| outstanding[w]).unwrap();
+                outstanding[w] += 1;
+                inflight.push_back(w);
+                expect.push(w);
+            }
+            if picks != expect {
+                return Err(format!("picks {picks:?} != least-loaded {expect:?}"));
+            }
+            Ok(())
+        },
+    );
+}
