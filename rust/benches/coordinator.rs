@@ -24,27 +24,7 @@ use bigbird::coordinator::{
 };
 use bigbird::runtime::{Backend, BackendKind, JobShape, Roofline};
 use bigbird::tokenizer::special;
-use bigbird::util::Rng;
-
-/// Flat key → value report, dumped as JSON for the CI perf trajectory.
-#[derive(Default)]
-struct Report {
-    entries: Vec<(String, f64)>,
-}
-
-impl Report {
-    fn push(&mut self, key: &str, value: f64) {
-        self.entries.push((key.to_string(), value));
-    }
-
-    /// Hand-rolled JSON (no serde in this offline environment): a flat
-    /// object of numeric fields.
-    fn to_json(&self) -> String {
-        let fields: Vec<String> =
-            self.entries.iter().map(|(k, v)| format!("  \"{k}\": {v:.6}")).collect();
-        format!("{{\n{}\n}}\n", fields.join(",\n"))
-    }
-}
+use bigbird::util::{BenchReport, Rng};
 
 /// AOT artifact dir, or `None` when artifacts haven't been generated
 /// (bare checkout / CI) — PJRT-backed benches skip rather than panic.
@@ -57,7 +37,7 @@ fn artifacts() -> Option<&'static str> {
     }
 }
 
-fn bench_batcher(report: &mut Report) {
+fn bench_batcher(report: &mut BenchReport) {
     let buckets = vec![
         Bucket { artifact: "a".into(), seq_len: 128, batch: 8 },
         Bucket { artifact: "b".into(), seq_len: 512, batch: 4 },
@@ -98,7 +78,7 @@ fn bench_batcher(report: &mut Report) {
 /// identical simulated CPUs and (b) a CPU + a simulated
 /// high-throughput/high-overhead accelerator, comparing modelled
 /// makespan and reporting where the long bucket landed.
-fn bench_hetero(report: &mut Report) {
+fn bench_hetero(report: &mut BenchReport) {
     let cpu = || Backend::simulated(BackendKind::Cpu, Roofline::for_kind(BackendKind::Cpu));
     let accel = || {
         Backend::simulated(
@@ -161,7 +141,7 @@ fn masked_request(rng: &mut Rng, len: usize) -> Vec<i32> {
     toks
 }
 
-fn bench_serving(artifacts: &str, report: &mut Report) {
+fn bench_serving(artifacts: &str, report: &mut BenchReport) {
     let mut cfg = ServerConfig::mlm_default(artifacts);
     cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(5), ..Default::default() };
     let server = Server::start(cfg).expect("run `make artifacts`");
@@ -201,7 +181,7 @@ fn bench_serving(artifacts: &str, report: &mut Report) {
 
 /// Throughput scaling vs engine workers: the same mixed 512/2048-bucket
 /// closed workload replayed against pools of 1/2/4 workers.
-fn bench_scaling(artifacts: &str, report: &mut Report) {
+fn bench_scaling(artifacts: &str, report: &mut BenchReport) {
     println!("\nscaling: mixed 512/2048 traffic vs engine workers");
     // lens 400 → 512 bucket, 1800 → 2048 bucket; 40% long requests
     let events = trace::bimodal(32, trace::Arrival::Closed, 400, 1800, 0.4, 5);
@@ -244,22 +224,16 @@ fn bench_scaling(artifacts: &str, report: &mut Report) {
 
 fn main() {
     // `cargo bench --bench coordinator -- --json <path>` writes the
-    // numbers as a flat JSON object (the CI smoke job's artifact)
+    // numbers as a flat JSON object (the CI smoke job's artifact); the
+    // format is shared with benches/attention_scaling.rs via BenchReport
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let mut json_path: Option<String> = None;
-    let mut it = args.iter();
-    while let Some(a) = it.next() {
-        if a == "--json" {
-            json_path = it.next().cloned();
-            if json_path.is_none() {
-                eprintln!("--json needs a path");
-                std::process::exit(2);
-            }
-        }
-    }
+    let json_path = BenchReport::json_path(&args).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
 
     println!("coordinator benches:\n");
-    let mut report = Report::default();
+    let mut report = BenchReport::new();
     bench_batcher(&mut report);
     bench_hetero(&mut report);
     if let Some(dir) = artifacts() {
@@ -267,7 +241,7 @@ fn main() {
         bench_scaling(dir, &mut report);
     }
     if let Some(path) = json_path {
-        std::fs::write(&path, report.to_json()).expect("writing bench JSON");
+        report.write(&path).expect("writing bench JSON");
         println!("(bench JSON written to {path})");
     }
 }

@@ -5,6 +5,9 @@
 //! `python/compile/kernels/pattern.py`) for analysis, visualisation
 //! (Fig. 1/3), the graph-theory experiments (Sec. 2), and the
 //! cross-language contract test against the `pattern_*.txt` dumps.
+//! [`crate::kernel`] compiles these patterns into a block-CSR layout
+//! ([`crate::kernel::BlockCsr`]) and *computes* them natively — the
+//! serving backend behind `--backends native:N`.
 
 mod pattern;
 mod render;

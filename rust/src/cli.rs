@@ -100,8 +100,10 @@ FLAGS:
   --seed <u64>           RNG seed (default 0)
   --steps <n>            training steps (default 200)
   --backends <spec>      engine pool backends, kind[:count] comma-list
-                         (e.g. cpu:2,gpu:1; default cpu:1; gpu/tpu fall
-                         back to cpu when no PJRT plugin is present)
+                         (e.g. cpu:2,gpu:1 or native:2; default cpu:1;
+                         gpu/tpu fall back to cpu when no PJRT plugin is
+                         present; native runs the in-process block-sparse
+                         kernels — real compute, no artifacts needed)
   --engine-workers <n>   shorthand for --backends cpu:<n>
   --max-inflight <n>     per-bucket inflight batch cap (default 2)
 ";
@@ -197,6 +199,16 @@ mod tests {
         assert!(parse_flags(&s(&["--backends", "npu:1"])).is_err());
         assert!(parse_flags(&s(&["--backends", "cpu:0"])).is_err());
         assert!(parse_flags(&s(&["--backends", ""])).is_err());
+    }
+
+    #[test]
+    fn parse_native_backends() {
+        use crate::runtime::BackendKind;
+        let f = parse_flags(&s(&["--backends", "native:2,cpu:1"])).unwrap();
+        assert_eq!(f.backends.len(), 3);
+        assert_eq!(f.backends[0].kind, BackendKind::Native);
+        assert_eq!(f.backends[1].kind, BackendKind::Native);
+        assert_eq!(f.backends[2].kind, BackendKind::Cpu);
     }
 
     #[test]

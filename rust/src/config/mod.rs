@@ -153,6 +153,16 @@ impl ModelConfig {
         }
     }
 
+    /// The configuration the **native kernel backend** serves
+    /// (`--backends native:N`): the tiny BigBird-ITC family, sized so a
+    /// pure-Rust forward pass stays interactive on a CPU-only machine.
+    /// `seq_len`/`batch` here are the largest bucket — the native engine
+    /// runs each serving bucket's own `(batch, seq_len)` against the
+    /// same parameters.
+    pub fn native_serving() -> Self {
+        ModelConfig { seq_len: 2048, batch: 1, ..Self::tiny() }
+    }
+
     /// Number of blocks in the sequence.
     pub fn num_blocks(&self) -> usize {
         self.seq_len / self.block
@@ -241,6 +251,12 @@ impl ServingConfig {
     /// A homogeneous pool of `n` CPU workers (the PR 1 shape).
     pub fn cpu(engine_workers: usize, max_inflight: usize) -> Self {
         ServingConfig { backends: BackendSpec::cpu_workers(engine_workers), max_inflight }
+    }
+
+    /// A homogeneous pool of `n` native-kernel workers — real in-process
+    /// compute, zero PJRT artifacts required.
+    pub fn native(engine_workers: usize, max_inflight: usize) -> Self {
+        ServingConfig { backends: BackendSpec::native_workers(engine_workers), max_inflight }
     }
 
     /// Number of engine workers the config spawns.
@@ -341,6 +357,19 @@ mod tests {
         let cfg = ServingConfig::cpu(3, 2);
         assert_eq!(cfg.n_workers(), 3);
         assert!(cfg.backends.iter().all(|b| *b == BackendSpec::cpu()));
+        let native = ServingConfig::native(2, 2);
+        native.validate().unwrap();
+        assert!(native.backends.iter().all(|b| *b == BackendSpec::native()));
+    }
+
+    #[test]
+    fn native_serving_config_is_valid_at_every_bucket_length() {
+        let mut cfg = ModelConfig::native_serving();
+        cfg.validate().unwrap();
+        for seq in [128usize, 256, 512, 1024, 2048] {
+            cfg.seq_len = seq;
+            cfg.validate().unwrap();
+        }
     }
 
     #[test]

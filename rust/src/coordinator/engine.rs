@@ -5,7 +5,7 @@
 //! `ExecutablePool` inside the thread and only plain [`HostTensor`]s and
 //! control messages cross the boundary.
 //!
-//! Two entry points, one worker loop:
+//! Two entry points, one worker loop, **two execution paths**:
 //!
 //! * [`EnginePool`] — N workers behind per-worker bounded job queues
 //!   and one shared completion channel; the pool may be
@@ -19,6 +19,14 @@
 //!   and its detach-on-drop thread leak — are gone; shutdown is the
 //!   pool's close-queue-then-join path.)
 //!
+//! Each worker routes jobs by artifact name: `native_*` artifacts run
+//! through the in-process kernel subsystem ([`NativeEngine`], real Rust
+//! compute, no PJRT, no AOT artifacts), everything else through the
+//! worker's PJRT [`ExecutablePool`]. A `native`-kind worker skips PJRT
+//! client construction entirely; PJRT-kind workers still carry a native
+//! engine, so a mixed `native:2,cpu:1` pool serves native buckets on
+//! all three workers.
+//!
 //! The manifest is parsed **once** by the caller and shared with every
 //! worker as an `Arc<Manifest>` — N workers do not re-read it N times.
 
@@ -30,9 +38,11 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::dispatch::WeightedPolicy;
+use crate::config::ModelConfig;
+use crate::kernel::{is_native_artifact, NativeEngine};
 use crate::runtime::{
     Backend, BackendKind, BackendSpec, ExecutablePool, HostTensor, JobShape, Manifest, Runtime,
 };
@@ -155,18 +165,34 @@ pub struct EnginePool {
 
 impl EnginePool {
     /// Spawn one engine thread per entry of `specs` over an
-    /// already-parsed manifest. Each worker constructs its own PJRT
-    /// runtime for its assigned backend (falling back to CPU with a
-    /// warning when the device plugin is absent), registers the realized
-    /// backend with the dispatcher, and serves a bounded job queue of
-    /// `queue_depth` (backpressure: `submit` blocks when the chosen
-    /// worker's queue is full).
+    /// already-parsed manifest, serving native jobs with the default
+    /// [`ModelConfig::native_serving`] family. See
+    /// [`EnginePool::spawn_with_native`].
     pub fn spawn(
         manifest: Arc<Manifest>,
         specs: &[BackendSpec],
         queue_depth: usize,
     ) -> Result<Self> {
+        Self::spawn_with_native(manifest, specs, queue_depth, ModelConfig::native_serving())
+    }
+
+    /// Spawn one engine thread per entry of `specs` over an
+    /// already-parsed manifest. PJRT-kind workers construct their own
+    /// PJRT runtime for their assigned backend (falling back to CPU
+    /// with a once-per-kind warning when the device plugin is absent);
+    /// `native`-kind workers skip PJRT entirely and execute through the
+    /// kernel subsystem, with `native_cfg` as the served model family.
+    /// Every worker registers its realized backend with the dispatcher
+    /// and serves a bounded job queue of `queue_depth` (backpressure:
+    /// `submit` blocks when the chosen worker's queue is full).
+    pub fn spawn_with_native(
+        manifest: Arc<Manifest>,
+        specs: &[BackendSpec],
+        queue_depth: usize,
+        native_cfg: ModelConfig,
+    ) -> Result<Self> {
         anyhow::ensure!(!specs.is_empty(), "engine pool needs at least one worker");
+        let native_cfg = Arc::new(native_cfg);
         let (completion_tx, completion_rx) = channel::<PoolCompletion>();
         let mut workers = Vec::with_capacity(specs.len());
         let mut backends = Vec::with_capacity(specs.len());
@@ -174,11 +200,12 @@ impl EnginePool {
             let (tx, rx) = sync_channel::<WorkerMsg>(queue_depth.max(1));
             let (ready_tx, ready_rx) = sync_channel::<Startup>(1);
             let m = manifest.clone();
+            let nc = native_cfg.clone();
             let ctx = completion_tx.clone();
             let spec = *spec;
             let join = std::thread::Builder::new()
                 .name(format!("bigbird-engine-{w}"))
-                .spawn(move || worker_loop(w, spec, m, rx, ctx, ready_tx))
+                .spawn(move || worker_loop(w, spec, m, nc, rx, ctx, ready_tx))
                 .with_context(|| format!("spawning engine worker {w}"))?;
             let (kind, platform) = ready_rx
                 .recv()
@@ -317,43 +344,116 @@ impl Drop for EnginePool {
     }
 }
 
-/// Worker-startup handshake payload: the realized backend kind and PJRT
-/// platform name, or a stringified startup error.
+/// Worker-startup handshake payload: the realized backend kind and
+/// platform name (PJRT platform, or `"native"`), or a stringified
+/// startup error.
 type Startup = std::result::Result<(BackendKind, String), String>;
+
+/// The PJRT half of a worker: compiled-executable pool plus the
+/// worker-local parameter cache.
+struct PjrtCompute {
+    pool: ExecutablePool,
+    params: HashMap<String, HostTensor>,
+}
+
+/// One worker's execution paths: an optional PJRT side (absent on
+/// `native`-kind workers) and the always-present native kernel engine.
+/// Jobs route by artifact name — `native_*` to the kernel subsystem,
+/// everything else to PJRT.
+struct WorkerCompute {
+    kind: BackendKind,
+    platform: String,
+    pjrt: Option<PjrtCompute>,
+    native: NativeEngine,
+}
+
+impl WorkerCompute {
+    fn start(
+        spec: BackendSpec,
+        manifest: Arc<Manifest>,
+        native_cfg: Arc<ModelConfig>,
+    ) -> Result<Self> {
+        let native = NativeEngine::new((*native_cfg).clone());
+        if spec.kind == BackendKind::Native {
+            return Ok(WorkerCompute {
+                kind: BackendKind::Native,
+                platform: "native".to_string(),
+                pjrt: None,
+                native,
+            });
+        }
+        let (rt, kind) = Runtime::for_backend(&spec)?;
+        let platform = rt.platform();
+        let pjrt = PjrtCompute { pool: ExecutablePool::new(rt, manifest), params: HashMap::new() };
+        Ok(WorkerCompute { kind, platform, pjrt: Some(pjrt), native })
+    }
+
+    fn execute(
+        &mut self,
+        artifact: &str,
+        inputs: Vec<HostTensor>,
+        with_params: bool,
+        shape: JobShape,
+    ) -> Result<Vec<HostTensor>> {
+        if is_native_artifact(artifact) {
+            return self.native.execute(shape, &inputs);
+        }
+        let Some(pjrt) = &mut self.pjrt else {
+            bail!("native-only worker cannot execute PJRT artifact {artifact:?}");
+        };
+        execute_pjrt_job(&pjrt.pool, &mut pjrt.params, artifact, inputs, with_params)
+    }
+
+    fn warm(&mut self, artifact: &str) -> Result<()> {
+        if is_native_artifact(artifact) {
+            return self.native.warm(artifact);
+        }
+        let Some(pjrt) = &mut self.pjrt else {
+            bail!("native-only worker cannot warm PJRT artifact {artifact:?}");
+        };
+        ensure_params(&pjrt.pool, &mut pjrt.params, artifact)?;
+        pjrt.pool.get(artifact)?;
+        Ok(())
+    }
+
+    fn load_params(&mut self, fwd_artifact: String, params: HostTensor) {
+        if is_native_artifact(&fwd_artifact) {
+            self.native.note_load_params(&fwd_artifact);
+        } else if let Some(pjrt) = &mut self.pjrt {
+            pjrt.params.insert(fwd_artifact, params);
+        }
+        // a native-only worker holds no PJRT param cache: nothing to do
+    }
+}
 
 fn worker_loop(
     worker: usize,
     spec: BackendSpec,
     manifest: Arc<Manifest>,
+    native_cfg: Arc<ModelConfig>,
     rx: Receiver<WorkerMsg>,
     completions: Sender<PoolCompletion>,
     ready: SyncSender<Startup>,
 ) {
-    let pool = match Runtime::for_backend(&spec) {
-        Ok((rt, kind)) => {
-            let platform = rt.platform();
-            let pool = ExecutablePool::new(rt, manifest);
-            let _ = ready.send(Ok((kind, platform)));
-            pool
+    let mut compute = match WorkerCompute::start(spec, manifest, native_cfg) {
+        Ok(c) => {
+            let _ = ready.send(Ok((c.kind, c.platform.clone())));
+            c
         }
         Err(e) => {
             let _ = ready.send(Err(format!("{e:#}")));
             return;
         }
     };
-    let mut params: HashMap<String, HostTensor> = HashMap::new();
     while let Ok(msg) = rx.recv() {
         match msg {
             WorkerMsg::LoadParams { fwd_artifact, params: p } => {
-                params.insert(fwd_artifact, p);
+                compute.load_params(fwd_artifact, p);
             }
             WorkerMsg::Warmup { artifacts, done } => {
                 let mut result = Ok(());
                 for a in &artifacts {
-                    let warmed = ensure_params(&pool, &mut params, a)
-                        .map(|_| ())
-                        .and_then(|_| pool.get(a).map(|_| ()));
-                    if let Err(e) = warmed {
+                    if let Err(e) = compute.warm(a) {
                         result = Err(format!("{e:#}"));
                         break;
                     }
@@ -369,7 +469,7 @@ fn worker_loop(
                 // batch's inflight slot forever and hang its clients,
                 // so panics become error completions instead.
                 let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    execute_job(&pool, &mut params, &artifact, inputs, with_params)
+                    compute.execute(&artifact, inputs, with_params, shape)
                 }))
                 .unwrap_or_else(|_| {
                     Err(anyhow::anyhow!("engine worker {worker} panicked executing {artifact}"))
@@ -391,7 +491,7 @@ fn worker_loop(
     }
 }
 
-fn execute_job(
+fn execute_pjrt_job(
     pool: &ExecutablePool,
     params: &mut HashMap<String, HostTensor>,
     artifact: &str,

@@ -1,6 +1,7 @@
 //! Serving metrics: request counts, latency distribution, batch fill,
-//! and — for the pipelined engine pool — the queue-wait vs execute-wait
-//! split, per-worker and per-backend utilization, per-(bucket, backend)
+//! per-bucket padding waste (real vs padded tokens), and — for the
+//! pipelined engine pool — the queue-wait vs execute-wait split,
+//! per-worker and per-backend utilization, per-(bucket, backend)
 //! exec-time EWMAs, bucket migration counts, and inflight-depth
 //! tracking.
 
@@ -42,6 +43,10 @@ struct Inner {
     // batches whose bucket moved to a different backend than the
     // previous batch of the same bucket
     migrations: usize,
+    // (real tokens, padded tokens) dispatched per bucket seq_len: the
+    // bucket ladder's padding waste (padded − real is compute burned on
+    // PAD positions)
+    padding: BTreeMap<usize, (u64, u64)>,
     // inflight depth sampled at each dispatch
     dispatches: usize,
     inflight_sum: usize,
@@ -83,6 +88,12 @@ pub struct MetricsSnapshot {
     /// batches whose bucket was served by a different backend than that
     /// bucket's previous batch
     pub migrations: usize,
+    /// (bucket seq_len, real tokens, padded tokens) dispatched per
+    /// bucket, sorted by seq_len — the padding-waste breakdown
+    pub padding_by_bucket: Vec<(usize, u64, u64)>,
+    /// overall fraction of dispatched (padded) tokens that were padding,
+    /// `1 − Σreal / Σpadded` (0.0 before any dispatch)
+    pub padding_waste: f64,
 }
 
 impl MetricsSnapshot {
@@ -190,6 +201,16 @@ impl ServingMetrics {
         self.inner.lock().unwrap().migrations += 1;
     }
 
+    /// A batch of bucket `seq_len` was dispatched carrying `real`
+    /// request tokens inside `padded` total (batch × seq_len) padded
+    /// tokens.
+    pub fn record_padding(&self, seq_len: usize, real: usize, padded: usize) {
+        let mut i = self.inner.lock().unwrap();
+        let e = i.padding.entry(seq_len).or_insert((0, 0));
+        e.0 += real as u64;
+        e.1 += padded as u64;
+    }
+
     pub fn record_truncated(&self) {
         self.inner.lock().unwrap().truncated += 1;
     }
@@ -241,6 +262,20 @@ impl ServingMetrics {
             worker_backend: i.worker_backend.clone(),
             exec_ewma_ms: i.exec_ewma_ms.clone(),
             migrations: i.migrations,
+            padding_by_bucket: i
+                .padding
+                .iter()
+                .map(|(&seq_len, &(real, padded))| (seq_len, real, padded))
+                .collect(),
+            padding_waste: {
+                let real: u64 = i.padding.values().map(|&(r, _)| r).sum();
+                let padded: u64 = i.padding.values().map(|&(_, p)| p).sum();
+                if padded == 0 {
+                    0.0
+                } else {
+                    1.0 - real as f64 / padded as f64
+                }
+            },
         }
     }
 }
@@ -291,6 +326,29 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.peak_inflight, 0);
         assert_eq!(s.worker_jobs, vec![0; 4]);
+    }
+
+    #[test]
+    fn padding_waste_aggregates_per_bucket() {
+        let m = ServingMetrics::default();
+        let s = m.snapshot();
+        assert!(s.padding_by_bucket.is_empty());
+        assert_eq!(s.padding_waste, 0.0, "no dispatches → no waste");
+        // 512-bucket: 300+400 real of 2×512 padded; 2048-bucket: full
+        m.record_padding(512, 300, 512);
+        m.record_padding(512, 400, 512);
+        m.record_padding(2048, 2048, 2048);
+        let s = m.snapshot();
+        assert_eq!(
+            s.padding_by_bucket,
+            vec![(512, 700, 1024), (2048, 2048, 2048)],
+            "sorted by bucket, summed within"
+        );
+        let want = 1.0 - (700.0 + 2048.0) / (1024.0 + 2048.0);
+        assert!((s.padding_waste - want).abs() < 1e-12, "{}", s.padding_waste);
+        // reset clears the accumulation
+        m.reset();
+        assert!(m.snapshot().padding_by_bucket.is_empty());
     }
 
     #[test]

@@ -21,7 +21,11 @@
 //! reduces exactly to least-loaded), each
 //! worker a thread owning its own PJRT `Runtime` + `ExecutablePool`
 //! (PJRT objects are not `Send`, so only plain
-//! [`crate::runtime::HostTensor`]s and control messages cross threads);
+//! [`crate::runtime::HostTensor`]s and control messages cross threads)
+//! — or, for `native` workers, the in-process block-sparse kernel
+//! engine ([`crate::kernel::NativeEngine`]): real Rust compute with no
+//! PJRT client and no AOT artifacts, so a `--backends native:2` pool
+//! serves real forward passes on a bare checkout;
 //! (3) *decode/complete* — finished batches come back on one shared
 //! completion channel and are decoded while other batches are still
 //! executing; their observed execution times refine the cost model's

@@ -30,7 +30,8 @@ use anyhow::{Context, Result};
 use super::batcher::{Batcher, BatcherConfig, Bucket, FormedBatch, PendingRequest};
 use super::engine::{EnginePool, PoolCompletion, PoolJob};
 use super::metrics::{MetricsSnapshot, ServingMetrics};
-use crate::config::ServingConfig;
+use crate::config::{ModelConfig, ServingConfig};
+use crate::kernel;
 use crate::runtime::{BackendKind, HostTensor, JobShape, Manifest};
 use crate::tokenizer::special;
 use crate::util::decode;
@@ -48,6 +49,9 @@ pub struct ServerConfig {
     pub queue_depth: usize,
     /// engine-pool shape: worker count + per-bucket inflight cap
     pub serving: ServingConfig,
+    /// model family the native kernel backend serves when the pool
+    /// contains `native` workers (seq_len/batch are per-bucket)
+    pub native: ModelConfig,
 }
 
 impl ServerConfig {
@@ -64,6 +68,7 @@ impl ServerConfig {
             batcher: BatcherConfig::default(),
             queue_depth: 256,
             serving: ServingConfig::default(),
+            native: ModelConfig::native_serving(),
         }
     }
 }
@@ -105,40 +110,76 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the engine pool + router thread. The manifest is parsed
-    /// once here and shared with every worker; artifacts compile lazily
-    /// on first use (or eagerly via [`Server::warmup`]).
+    /// Start the engine pool + router thread.
+    ///
+    /// Bucket selection depends on the pool shape: when the pool
+    /// contains any `native` worker the server serves the **native
+    /// kernel pipeline** — buckets synthesized from
+    /// `ServerConfig::native` (every worker, PJRT or native, can
+    /// execute them in-process), and the artifact manifest is optional
+    /// (an absent `manifest.txt` degrades to an empty manifest instead
+    /// of an error, so `--backends native:2` works on a bare checkout
+    /// with zero PJRT artifacts). Pure-PJRT pools keep the original
+    /// behaviour: buckets from the manifest's metadata filters, parsed
+    /// once and shared with every worker; artifacts compile lazily on
+    /// first use (or eagerly via [`Server::warmup`]).
     pub fn start(cfg: ServerConfig) -> Result<Self> {
         cfg.serving.validate()?;
-        let manifest = Arc::new(Manifest::load(&cfg.artifacts)?);
-        let filters: Vec<(&str, &str)> = cfg
-            .bucket_filters
-            .iter()
-            .map(|(k, v)| (k.as_str(), v.as_str()))
-            .collect();
-        let mut buckets: Vec<Bucket> = manifest
-            .select(&filters)
-            .into_iter()
-            .map(|e| {
-                let seq_len = e.meta_usize("seq_len").unwrap_or(0);
-                let batch = e.meta_usize("batch").unwrap_or(1);
-                Bucket { artifact: e.name.clone(), seq_len, batch }
-            })
-            .collect();
-        if buckets.is_empty() {
-            anyhow::bail!("no artifacts match the bucket filters {filters:?}");
-        }
+        let any_native = cfg.serving.backends.iter().any(|b| b.kind == BackendKind::Native);
+        let manifest_present = std::path::Path::new(&cfg.artifacts).join("manifest.txt").exists();
+        let (manifest, mut buckets, vocab) = if any_native {
+            let manifest = if manifest_present {
+                Arc::new(Manifest::load(&cfg.artifacts)?)
+            } else {
+                Arc::new(Manifest::default())
+            };
+            let buckets: Vec<Bucket> = kernel::native_buckets()
+                .into_iter()
+                .map(|(seq_len, batch)| Bucket {
+                    artifact: kernel::native_artifact_name(seq_len, batch),
+                    seq_len,
+                    batch,
+                })
+                .collect();
+            (manifest, buckets, cfg.native.vocab)
+        } else {
+            let manifest = Arc::new(Manifest::load(&cfg.artifacts)?);
+            let filters: Vec<(&str, &str)> = cfg
+                .bucket_filters
+                .iter()
+                .map(|(k, v)| (k.as_str(), v.as_str()))
+                .collect();
+            let buckets: Vec<Bucket> = manifest
+                .select(&filters)
+                .into_iter()
+                .map(|e| {
+                    let seq_len = e.meta_usize("seq_len").unwrap_or(0);
+                    let batch = e.meta_usize("batch").unwrap_or(1);
+                    Bucket { artifact: e.name.clone(), seq_len, batch }
+                })
+                .collect();
+            if buckets.is_empty() {
+                anyhow::bail!("no artifacts match the bucket filters {filters:?}");
+            }
+            // vocab for logits decoding, from the first fwd output
+            let first = buckets.iter().min_by_key(|b| b.seq_len).expect("nonempty buckets");
+            let vocab = manifest
+                .get(&first.artifact)?
+                .io
+                .outputs
+                .first()
+                .map(|o| *o.dims.last().unwrap_or(&0))
+                .context("fwd artifact has no output")?;
+            (manifest, buckets, vocab)
+        };
         buckets.sort_by_key(|b| b.seq_len);
-        // vocab for logits decoding, from the first bucket's fwd output
-        let vocab = manifest
-            .get(&buckets[0].artifact)?
-            .io
-            .outputs
-            .first()
-            .map(|o| *o.dims.last().unwrap_or(&0))
-            .context("fwd artifact has no output")?;
 
-        let pool = EnginePool::spawn(manifest.clone(), &cfg.serving.backends, cfg.queue_depth)?;
+        let pool = EnginePool::spawn_with_native(
+            manifest.clone(),
+            &cfg.serving.backends,
+            cfg.queue_depth,
+            cfg.native.clone(),
+        )?;
         let (tx, rx): (SyncSender<Submission>, Receiver<Submission>) =
             sync_channel(cfg.queue_depth);
         let metrics = Arc::new(ServingMetrics::default());
@@ -381,11 +422,14 @@ fn dispatch_batch(st: &mut RouterState, fb: FormedBatch) {
         with_params: true,
         submitted: Instant::now(),
     };
+    // padded-vs-real token accounting for the padding-waste metric
+    let real_tokens: usize = fb.requests.iter().map(|r| r.tokens.len().min(s)).sum();
     match st.pool.submit(job) {
         Ok(worker) => {
             // counted only once actually dispatched, so batch-fill and
             // the per-worker job totals stay consistent
             st.metrics.record_batch(fb.requests.len(), b);
+            st.metrics.record_padding(s, real_tokens, b * s);
             // a bucket changing (realized) backends is a migration —
             // the roofline/EWMA policy moving it to a better-fitting
             // device, never churn between identical workers

@@ -25,6 +25,12 @@ pub fn run(flags: &Flags) -> Result<()> {
         crate::runtime::format_backend_specs(&cfg.serving.backends),
         cfg.serving.max_inflight
     ));
+    if cfg.serving.backends.iter().any(|b| b.kind == crate::runtime::BackendKind::Native) {
+        log.line(
+            "serving mode: native kernel pipeline (in-process block-sparse compute, \
+             no PJRT artifacts required)",
+        );
+    }
     let server = Arc::new(Server::start(cfg)?);
     log.line("warming up buckets (compiling artifacts on every worker once) ...");
     server.warmup(&[128, 256, 512, 1024, 2048])?;
@@ -78,8 +84,16 @@ pub fn run(flags: &Flags) -> Result<()> {
             vec!["mean inflight depth".into(), format!("{:.2}", m.mean_inflight)],
             vec!["peak inflight depth".into(), format!("{}", m.peak_inflight)],
             vec!["bucket migrations".into(), format!("{}", m.migrations)],
+            vec!["padding waste".into(), format!("{:.0}%", 100.0 * m.padding_waste)],
         ],
     ));
+    for (seq_len, real, padded) in &m.padding_by_bucket {
+        let waste = if *padded > 0 { 1.0 - *real as f64 / *padded as f64 } else { 0.0 };
+        log.line(format!(
+            "bucket s{seq_len}: {real} real tokens in {padded} padded ({:.0}% waste)",
+            100.0 * waste
+        ));
+    }
     let utils = m.worker_utilization(wall);
     for (w, (&jobs, util)) in m.worker_jobs.iter().zip(&utils).enumerate() {
         let backend = m.worker_backend.get(w).map(|s| s.as_str()).unwrap_or("?");

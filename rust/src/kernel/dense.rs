@@ -1,0 +1,128 @@
+//! Blocked dense reference kernel: the correctness oracle.
+//!
+//! Materialises each query row's full score vector (masked to the
+//! pattern's attended blocks and the key-validity mask), applies a
+//! classic two-pass softmax, and accumulates the value sum — the
+//! textbook O(n²)-shaped computation the sparse kernel must agree with
+//! to ≤ 1e-5 (see `tests/kernel_parity.rs`). Deliberately written with
+//! a *different* algorithm than [`super::sparse`] (full-row two-pass
+//! softmax vs per-block streaming softmax) so shared bugs can't cancel.
+
+use super::layout::BlockCsr;
+use super::{dot, HeadViews};
+
+/// Masked dense attention forward for one `[n, head_dim]` head:
+/// `out[i] = softmax(mask(Q Kᵀ / √d))[i] · V`, where the mask admits
+/// key `j` iff its block is attended by `i`'s block in `layout` and
+/// `key_valid[j] > 0` (when a mask is given). Rows with no admissible
+/// key produce zeros.
+pub fn dense_reference(x: &HeadViews<'_>, head_dim: usize, layout: &BlockCsr, out: &mut [f32]) {
+    let n = layout.seq_len();
+    let b = layout.block;
+    x.check(n, head_dim);
+    assert_eq!(out.len(), n * head_dim, "output must be [n, head_dim]");
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    let mut scores = vec![f32::NEG_INFINITY; n];
+    for qi in 0..n {
+        let qb = qi / b;
+        let q_row = &x.q[qi * head_dim..(qi + 1) * head_dim];
+        scores.fill(f32::NEG_INFINITY);
+        for &kb in layout.row(qb) {
+            for kj in kb * b..(kb + 1) * b {
+                let valid = match x.key_valid {
+                    Some(mask) => mask[kj] > 0.0,
+                    None => true,
+                };
+                if valid {
+                    let k_row = &x.k[kj * head_dim..(kj + 1) * head_dim];
+                    scores[kj] = dot(q_row, k_row) * scale;
+                }
+            }
+        }
+        let m = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let o_row = &mut out[qi * head_dim..(qi + 1) * head_dim];
+        o_row.fill(0.0);
+        if m == f32::NEG_INFINITY {
+            continue; // no admissible key
+        }
+        let mut denom = 0.0f32;
+        for (kj, &s) in scores.iter().enumerate() {
+            if s == f32::NEG_INFINITY {
+                continue;
+            }
+            let w = (s - m).exp();
+            denom += w;
+            let v_row = &x.v[kj * head_dim..(kj + 1) * head_dim];
+            for (o, &vv) in o_row.iter_mut().zip(v_row) {
+                *o += w * vv;
+            }
+        }
+        if denom > 0.0 {
+            o_row.iter_mut().for_each(|o| *o /= denom);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::PatternSpec;
+    use crate::config::AttnVariant;
+    use crate::util::Rng;
+
+    fn data(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn dense_variant_rows_sum_softmax_weights_to_one() {
+        // with the Dense variant and no validity mask, every key is
+        // admissible: output rows are convex combinations of V rows
+        let spec = PatternSpec {
+            variant: AttnVariant::Dense,
+            nb: 4,
+            global_blocks: 0,
+            window_blocks: 1,
+            random_blocks: 0,
+            seed: 0,
+        };
+        let layout = BlockCsr::compile(&spec, 4);
+        let (n, d) = (layout.seq_len(), 8);
+        let mut rng = Rng::new(1);
+        let q = data(&mut rng, n * d);
+        let k = data(&mut rng, n * d);
+        let v = vec![1.0f32; n * d]; // constant V ⇒ output must be exactly 1
+        let mut out = vec![0.0f32; n * d];
+        dense_reference(&HeadViews { q: &q, k: &k, v: &v, key_valid: None }, d, &layout, &mut out);
+        for (i, &o) in out.iter().enumerate() {
+            assert!((o - 1.0).abs() < 1e-5, "out[{i}] = {o}");
+        }
+    }
+
+    #[test]
+    fn fully_masked_rows_produce_zeros() {
+        let spec = PatternSpec {
+            variant: AttnVariant::Window,
+            nb: 4,
+            global_blocks: 0,
+            window_blocks: 1,
+            random_blocks: 0,
+            seed: 0,
+        };
+        let layout = BlockCsr::compile(&spec, 2);
+        let (n, d) = (layout.seq_len(), 4);
+        let mut rng = Rng::new(2);
+        let q = data(&mut rng, n * d);
+        let k = data(&mut rng, n * d);
+        let v = data(&mut rng, n * d);
+        let key_valid = vec![0.0f32; n]; // nothing admissible
+        let mut out = vec![7.0f32; n * d];
+        dense_reference(
+            &HeadViews { q: &q, k: &k, v: &v, key_valid: Some(&key_valid) },
+            d,
+            &layout,
+            &mut out,
+        );
+        assert!(out.iter().all(|&o| o == 0.0));
+    }
+}

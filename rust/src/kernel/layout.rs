@@ -1,0 +1,213 @@
+//! `BlockCsr`: the compiled block-sparse attention layout.
+//!
+//! [`crate::attention::build_pattern`] describes *which* key
+//! blocks each query block attends; the kernels need that description in
+//! a gather-friendly form. `BlockCsr` is a block-level CSR matrix —
+//! per-row sorted key-block lists behind a row-pointer array — with a
+//! provenance tag per stored block (band / global / random / full-row)
+//! so reports and tests can attribute every gathered block to the paper
+//! component that produced it ("Longer Attention Span"-style sparse
+//! graph gathering, Sec. 2 of the BigBird paper).
+
+use crate::attention::{build_pattern, components, window_blocks_of, PatternSpec};
+
+/// Why a key block appears in a query block's attended list.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BlockProvenance {
+    /// A global block (first `g` blocks, attended by every row).
+    Global,
+    /// A sliding-window (band) block — includes the diagonal.
+    Band,
+    /// A randomly sampled block (the Erdős–Rényi component).
+    Random,
+    /// Present only because the whole row attends everything (dense
+    /// rows, and the global *query* rows of ITC/ETC patterns).
+    Full,
+}
+
+impl BlockProvenance {
+    /// Stable label for reports.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BlockProvenance::Global => "global",
+            BlockProvenance::Band => "band",
+            BlockProvenance::Random => "random",
+            BlockProvenance::Full => "full",
+        }
+    }
+}
+
+/// Block-level CSR layout of one attention pattern: for query block
+/// `qb`, the attended key blocks are `cols[row_ptr[qb]..row_ptr[qb+1]]`
+/// (sorted ascending, deduplicated), with a parallel provenance tag per
+/// entry. Compiled once per `(PatternSpec, block)` and shared by every
+/// kernel invocation over that shape.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockCsr {
+    /// Number of blocks per sequence side.
+    pub nb: usize,
+    /// Tokens per block.
+    pub block: usize,
+    /// Row pointers, length `nb + 1`.
+    pub row_ptr: Vec<usize>,
+    /// Concatenated sorted key-block indices.
+    pub cols: Vec<usize>,
+    /// Provenance of each entry of `cols`.
+    pub prov: Vec<BlockProvenance>,
+}
+
+impl BlockCsr {
+    /// Compile the layout for `spec` with `block` tokens per block.
+    pub fn compile(spec: &PatternSpec, block: usize) -> Self {
+        assert!(block > 0, "block size must be positive");
+        let attend = build_pattern(spec);
+        let (use_g, use_w, _) = components(spec.variant);
+        let g_eff = if use_g { spec.global_blocks } else { 0 };
+        let mut row_ptr = Vec::with_capacity(spec.nb + 1);
+        let mut cols = Vec::new();
+        let mut prov = Vec::new();
+        row_ptr.push(0);
+        for (j, row) in attend.iter().enumerate() {
+            let full = row.len() == spec.nb;
+            let win = if use_w {
+                window_blocks_of(j, spec.nb, spec.window_blocks)
+            } else {
+                vec![j]
+            };
+            for &kb in row {
+                let p = if win.contains(&kb) {
+                    BlockProvenance::Band
+                } else if kb < g_eff {
+                    BlockProvenance::Global
+                } else if full {
+                    BlockProvenance::Full
+                } else {
+                    BlockProvenance::Random
+                };
+                cols.push(kb);
+                prov.push(p);
+            }
+            row_ptr.push(cols.len());
+        }
+        BlockCsr { nb: spec.nb, block, row_ptr, cols, prov }
+    }
+
+    /// Token-level sequence length this layout covers.
+    pub fn seq_len(&self) -> usize {
+        self.nb * self.block
+    }
+
+    /// Sorted attended key blocks of query block `qb`.
+    pub fn row(&self, qb: usize) -> &[usize] {
+        &self.cols[self.row_ptr[qb]..self.row_ptr[qb + 1]]
+    }
+
+    /// Provenance tags parallel to [`BlockCsr::row`].
+    pub fn row_prov(&self, qb: usize) -> &[BlockProvenance] {
+        &self.prov[self.row_ptr[qb]..self.row_ptr[qb + 1]]
+    }
+
+    /// Stored (attended) block pairs — the paper's O(n) edge count.
+    pub fn nnz_blocks(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Fraction of the dense `nb × nb` block matrix that is stored.
+    pub fn density(&self) -> f64 {
+        if self.nb == 0 {
+            return 0.0;
+        }
+        self.nnz_blocks() as f64 / (self.nb * self.nb) as f64
+    }
+
+    /// Is `(qb, kb)` an attended pair? Binary search over the sorted row.
+    pub fn is_attended(&self, qb: usize, kb: usize) -> bool {
+        self.row(qb).binary_search(&kb).is_ok()
+    }
+
+    /// Stored-block counts per provenance, in
+    /// `[global, band, random, full]` order.
+    pub fn provenance_counts(&self) -> [usize; 4] {
+        let mut counts = [0usize; 4];
+        for p in &self.prov {
+            let i = match p {
+                BlockProvenance::Global => 0,
+                BlockProvenance::Band => 1,
+                BlockProvenance::Random => 2,
+                BlockProvenance::Full => 3,
+            };
+            counts[i] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AttnVariant;
+
+    fn spec(variant: AttnVariant, nb: usize, g: usize, w: usize, r: usize, seed: u64) -> PatternSpec {
+        PatternSpec { variant, nb, global_blocks: g, window_blocks: w, random_blocks: r, seed }
+    }
+
+    #[test]
+    fn matches_build_pattern_rows() {
+        let s = spec(AttnVariant::BigBirdItc, 16, 2, 3, 2, 11);
+        let csr = BlockCsr::compile(&s, 8);
+        let attend = build_pattern(&s);
+        assert_eq!(csr.nb, 16);
+        assert_eq!(csr.seq_len(), 128);
+        for (j, row) in attend.iter().enumerate() {
+            assert_eq!(csr.row(j), row.as_slice(), "row {j}");
+            let mut sorted = csr.row(j).to_vec();
+            sorted.sort_unstable();
+            assert_eq!(sorted, csr.row(j), "row {j} not sorted");
+        }
+        assert_eq!(csr.nnz_blocks(), s.edge_count());
+    }
+
+    #[test]
+    fn provenance_attributes_each_component() {
+        let s = spec(AttnVariant::BigBirdItc, 16, 2, 3, 2, 7);
+        let csr = BlockCsr::compile(&s, 4);
+        let [g, band, rand, full] = csr.provenance_counts();
+        // 14 non-global rows each carry 2 global + 2 random blocks and a
+        // (possibly global-overlapping) 3-wide band; 2 global rows are full
+        assert!(g > 0 && band > 0 && rand > 0 && full > 0, "{:?}", csr.provenance_counts());
+        // every non-full row of BigBird-ITC has exactly r random blocks
+        for qb in s.global_blocks..s.nb {
+            let n_rand = csr
+                .row_prov(qb)
+                .iter()
+                .filter(|p| **p == BlockProvenance::Random)
+                .count();
+            assert_eq!(n_rand, s.random_blocks, "row {qb}");
+        }
+        // diagonal is always band
+        for qb in 0..s.nb {
+            let pos = csr.row(qb).iter().position(|&kb| kb == qb).expect("diagonal attended");
+            assert_eq!(csr.row_prov(qb)[pos], BlockProvenance::Band, "row {qb}");
+        }
+    }
+
+    #[test]
+    fn density_shrinks_linearly_for_sparse_patterns() {
+        let d32 = BlockCsr::compile(&spec(AttnVariant::BigBirdItc, 32, 2, 3, 3, 0), 8).density();
+        let d64 = BlockCsr::compile(&spec(AttnVariant::BigBirdItc, 64, 2, 3, 3, 0), 8).density();
+        assert!(d64 < d32, "density must fall with nb: {d64} !< {d32}");
+        let dense = BlockCsr::compile(&spec(AttnVariant::Dense, 16, 0, 1, 0, 0), 8);
+        assert!((dense.density() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn is_attended_agrees_with_rows() {
+        let s = spec(AttnVariant::Window, 12, 0, 3, 0, 0);
+        let csr = BlockCsr::compile(&s, 4);
+        for qb in 0..s.nb {
+            for kb in 0..s.nb {
+                assert_eq!(csr.is_attended(qb, kb), csr.row(qb).contains(&kb), "({qb},{kb})");
+            }
+        }
+    }
+}

@@ -1,0 +1,525 @@
+//! The native serving model: a scaled-down BigBird MLM forward pass
+//! computed entirely in Rust on top of the sparse kernel — no PJRT, no
+//! AOT artifacts.
+//!
+//! Architecture (mirrors the JAX side's encoder at `ModelConfig::tiny`
+//! scale): token embedding + sinusoidal positions → `layers ×`
+//! (pre-LN block-sparse attention + pre-LN GELU FFN, both residual) →
+//! final LN → logits through the tied embedding. Parameters are
+//! initialised deterministically from `ModelConfig::attn_seed` (the
+//! same convention as the AOT `init_*` artifacts), so every worker —
+//! and every run — materialises identical weights and serving stays
+//! reproducible.
+//!
+//! [`NativeEngine`] is the engine-worker-facing wrapper: it lazily
+//! builds the model, maps pool jobs (tokens + kv_valid tensors) to
+//! forward passes, and pre-warms per-bucket pattern layouts.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::attention::PatternSpec;
+use crate::config::ModelConfig;
+use crate::runtime::{HostTensor, JobShape};
+use crate::util::Rng;
+
+use super::driver::sparse_forward_batch;
+use super::layout::BlockCsr;
+use super::HeadViews;
+
+/// Name prefix of every native serving artifact (bucket).
+pub const NATIVE_PREFIX: &str = "native_mlm_";
+
+/// Is this artifact name served by the native kernel subsystem (rather
+/// than a PJRT executable)?
+pub fn is_native_artifact(name: &str) -> bool {
+    name.starts_with(NATIVE_PREFIX)
+}
+
+/// Artifact name of the native bucket for `(seq_len, batch)`.
+pub fn native_artifact_name(seq_len: usize, batch: usize) -> String {
+    format!("{NATIVE_PREFIX}s{seq_len}_b{batch}")
+}
+
+/// Parse `(seq_len, batch)` back out of a native artifact name.
+pub fn parse_native_artifact(name: &str) -> Option<(usize, usize)> {
+    let rest = name.strip_prefix(NATIVE_PREFIX)?.strip_prefix('s')?;
+    let (s, b) = rest.split_once("_b")?;
+    Some((s.parse().ok()?, b.parse().ok()?))
+}
+
+/// The `(seq_len, batch)` serving buckets the native backend exposes —
+/// the same length ladder as the AOT manifest, with batch sizes that
+/// keep per-batch latency roughly flat.
+pub fn native_buckets() -> [(usize, usize); 5] {
+    [(128, 8), (256, 4), (512, 4), (1024, 2), (2048, 1)]
+}
+
+/// One transformer layer's parameters.
+struct LayerParams {
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    wo: Vec<f32>,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+}
+
+/// The native BigBird MLM model: deterministic parameters + per-bucket
+/// compiled pattern layouts and positional tables, cached across
+/// forward passes. `ModelConfig::seq_len`/`batch` are treated as upper
+/// bounds only — each forward pass brings its own `(batch, seq_len)`.
+pub struct NativeModel {
+    cfg: ModelConfig,
+    /// Token embedding, `[vocab, hidden]`.
+    embed: Vec<f32>,
+    /// Transposed embedding, `[hidden, vocab]` — the tied output head.
+    embed_t: Vec<f32>,
+    layers: Vec<LayerParams>,
+    ln_f_g: Vec<f32>,
+    ln_f_b: Vec<f32>,
+    /// Compiled block layouts keyed by seq_len.
+    layouts: HashMap<usize, Arc<BlockCsr>>,
+    /// Sinusoidal position tables keyed by seq_len (`[seq_len, hidden]`).
+    pos: HashMap<usize, Arc<Vec<f32>>>,
+}
+
+const INIT_STD: f32 = 0.02;
+
+fn init_normal(seed: u64, label: u64, len: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed).fold_in(label);
+    (0..len).map(|_| rng.normal() as f32 * INIT_STD).collect()
+}
+
+impl NativeModel {
+    /// Build the model with deterministic parameters derived from
+    /// `cfg.attn_seed`.
+    pub fn new(cfg: ModelConfig) -> Result<Self> {
+        cfg.validate()?;
+        let h = cfg.hidden;
+        let seed = cfg.attn_seed;
+        let embed = init_normal(seed, 1, cfg.vocab * h);
+        let mut embed_t = vec![0.0f32; h * cfg.vocab];
+        for t in 0..cfg.vocab {
+            for i in 0..h {
+                embed_t[i * cfg.vocab + t] = embed[t * h + i];
+            }
+        }
+        let mut layers = Vec::with_capacity(cfg.layers);
+        for l in 0..cfg.layers {
+            let base = 16 * (l as u64 + 1);
+            layers.push(LayerParams {
+                ln1_g: vec![1.0; h],
+                ln1_b: vec![0.0; h],
+                wq: init_normal(seed, base + 1, h * h),
+                wk: init_normal(seed, base + 2, h * h),
+                wv: init_normal(seed, base + 3, h * h),
+                wo: init_normal(seed, base + 4, h * h),
+                ln2_g: vec![1.0; h],
+                ln2_b: vec![0.0; h],
+                w1: init_normal(seed, base + 5, h * cfg.ffn),
+                b1: vec![0.0; cfg.ffn],
+                w2: init_normal(seed, base + 6, cfg.ffn * h),
+                b2: vec![0.0; h],
+            });
+        }
+        Ok(NativeModel {
+            cfg,
+            embed,
+            embed_t,
+            layers,
+            ln_f_g: vec![1.0; h],
+            ln_f_b: vec![0.0; h],
+            layouts: HashMap::new(),
+            pos: HashMap::new(),
+        })
+    }
+
+    /// The model's hyperparameters.
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// Total learned parameter count (for startup logging).
+    pub fn param_count(&self) -> usize {
+        let h = self.cfg.hidden;
+        let per_layer = 4 * h // layer norms
+            + 4 * h * h // q, k, v, o
+            + h * self.cfg.ffn + self.cfg.ffn // w1 + b1
+            + self.cfg.ffn * h + h; // w2 + b2
+        self.cfg.vocab * h + self.cfg.layers * per_layer + 2 * h
+    }
+
+    /// Compiled pattern layout for `seq_len` (cached).
+    pub fn layout(&mut self, seq_len: usize) -> Result<Arc<BlockCsr>> {
+        ensure!(
+            seq_len > 0 && seq_len % self.cfg.block == 0,
+            "seq_len {} is not a positive multiple of block {}",
+            seq_len,
+            self.cfg.block
+        );
+        let cfg = &self.cfg;
+        let entry = self.layouts.entry(seq_len).or_insert_with(|| {
+            let spec = PatternSpec {
+                variant: cfg.variant,
+                nb: seq_len / cfg.block,
+                global_blocks: cfg.global_blocks,
+                window_blocks: cfg.window_blocks,
+                random_blocks: cfg.random_blocks,
+                seed: cfg.attn_seed,
+            };
+            Arc::new(BlockCsr::compile(&spec, cfg.block))
+        });
+        Ok(entry.clone())
+    }
+
+    /// Sinusoidal positional table for `seq_len` (cached).
+    fn positions(&mut self, seq_len: usize) -> Arc<Vec<f32>> {
+        let h = self.cfg.hidden;
+        self.pos
+            .entry(seq_len)
+            .or_insert_with(|| {
+                let mut table = vec![0.0f32; seq_len * h];
+                for p in 0..seq_len {
+                    for i in 0..h / 2 {
+                        let freq = 1.0 / 10000f64.powf(2.0 * i as f64 / h as f64);
+                        let angle = p as f64 * freq;
+                        table[p * h + 2 * i] = angle.sin() as f32;
+                        table[p * h + 2 * i + 1] = angle.cos() as f32;
+                    }
+                }
+                Arc::new(table)
+            })
+            .clone()
+    }
+
+    /// Pre-build the layout and positional table for a bucket length
+    /// (the warmup path, so first traffic pays no compile cost).
+    pub fn prewarm(&mut self, seq_len: usize) -> Result<()> {
+        self.layout(seq_len)?;
+        self.positions(seq_len);
+        Ok(())
+    }
+
+    /// Full MLM forward: `[batch, seq_len]` token ids (+ optional
+    /// `[batch, seq_len]` key-validity mask) → `[batch, seq_len, vocab]`
+    /// logits, row-major.
+    pub fn forward(
+        &mut self,
+        tokens: &[i32],
+        kv_valid: Option<&[f32]>,
+        batch: usize,
+        seq_len: usize,
+    ) -> Result<Vec<f32>> {
+        let rows = batch * seq_len;
+        ensure!(tokens.len() == rows, "tokens must be [batch={batch}, seq_len={seq_len}]");
+        if let Some(mask) = kv_valid {
+            ensure!(mask.len() == rows, "kv_valid must be [batch={batch}, seq_len={seq_len}]");
+        }
+        let layout = self.layout(seq_len)?;
+        let positions = self.positions(seq_len);
+        let (h, heads) = (self.cfg.hidden, self.cfg.heads);
+        let (vocab, ffn) = (self.cfg.vocab, self.cfg.ffn);
+        let dh = h / heads;
+
+        // token embedding + sinusoidal positions
+        let mut x = vec![0.0f32; rows * h];
+        for (r, &tok) in tokens.iter().enumerate() {
+            let t = tok.rem_euclid(vocab as i32) as usize;
+            let dst = &mut x[r * h..(r + 1) * h];
+            let emb = &self.embed[t * h..(t + 1) * h];
+            let pos = &positions[(r % seq_len) * h..(r % seq_len + 1) * h];
+            for ((d, &e), &p) in dst.iter_mut().zip(emb).zip(pos) {
+                *d = e + p;
+            }
+        }
+
+        for layer in &self.layers {
+            // pre-LN block-sparse attention, residual
+            let xn = layernorm(&x, &layer.ln1_g, &layer.ln1_b, h);
+            let q = split_heads(&matmul(&xn, &layer.wq, rows, h, h), batch, seq_len, heads, dh);
+            let k = split_heads(&matmul(&xn, &layer.wk, rows, h, h), batch, seq_len, heads, dh);
+            let v = split_heads(&matmul(&xn, &layer.wv, rows, h, h), batch, seq_len, heads, dh);
+            let mut attn = vec![0.0f32; rows * h];
+            let hv = HeadViews { q: &q, k: &k, v: &v, key_valid: kv_valid };
+            sparse_forward_batch(&hv, batch, heads, dh, &layout, &mut attn);
+            let merged = merge_heads(&attn, batch, seq_len, heads, dh);
+            let proj = matmul(&merged, &layer.wo, rows, h, h);
+            add_in_place(&mut x, &proj);
+
+            // pre-LN GELU FFN, residual
+            let xn = layernorm(&x, &layer.ln2_g, &layer.ln2_b, h);
+            let mut mid = matmul(&xn, &layer.w1, rows, h, ffn);
+            add_bias(&mut mid, &layer.b1);
+            gelu(&mut mid);
+            let mut down = matmul(&mid, &layer.w2, rows, ffn, h);
+            add_bias(&mut down, &layer.b2);
+            add_in_place(&mut x, &down);
+        }
+
+        // final LN + tied-embedding logits
+        let xn = layernorm(&x, &self.ln_f_g, &self.ln_f_b, h);
+        Ok(matmul(&xn, &self.embed_t, rows, h, vocab))
+    }
+}
+
+// ---------------------------------------------------------------------
+// dense linear-algebra helpers (row-major, ikj loop order)
+// ---------------------------------------------------------------------
+
+fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let o_row = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in a_row.iter().enumerate() {
+            let b_row = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in o_row.iter_mut().zip(b_row) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+fn layernorm(x: &[f32], gamma: &[f32], beta: &[f32], h: usize) -> Vec<f32> {
+    const EPS: f32 = 1e-5;
+    let mut out = vec![0.0f32; x.len()];
+    for (row, o_row) in x.chunks(h).zip(out.chunks_mut(h)) {
+        let mean = row.iter().sum::<f32>() / h as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / h as f32;
+        let inv = 1.0 / (var + EPS).sqrt();
+        for (((o, &v), &g), &b) in o_row.iter_mut().zip(row).zip(gamma).zip(beta) {
+            *o = (v - mean) * inv * g + b;
+        }
+    }
+    out
+}
+
+fn gelu(x: &mut [f32]) {
+    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+    for v in x.iter_mut() {
+        let u = *v;
+        *v = 0.5 * u * (1.0 + (c * (u + 0.044715 * u * u * u)).tanh());
+    }
+}
+
+fn add_in_place(x: &mut [f32], y: &[f32]) {
+    for (a, &b) in x.iter_mut().zip(y) {
+        *a += b;
+    }
+}
+
+fn add_bias(x: &mut [f32], bias: &[f32]) {
+    for row in x.chunks_mut(bias.len()) {
+        for (a, &b) in row.iter_mut().zip(bias) {
+            *a += b;
+        }
+    }
+}
+
+/// `[batch, seq, heads, dh]` (a projection's natural layout) →
+/// `[batch, heads, seq, dh]` (the driver's layout).
+fn split_heads(p: &[f32], batch: usize, seq: usize, heads: usize, dh: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; p.len()];
+    for bi in 0..batch {
+        for si in 0..seq {
+            for hh in 0..heads {
+                let src = ((bi * seq + si) * heads + hh) * dh;
+                let dst = ((bi * heads + hh) * seq + si) * dh;
+                out[dst..dst + dh].copy_from_slice(&p[src..src + dh]);
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`split_heads`].
+fn merge_heads(p: &[f32], batch: usize, seq: usize, heads: usize, dh: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; p.len()];
+    for bi in 0..batch {
+        for hh in 0..heads {
+            for si in 0..seq {
+                let src = ((bi * heads + hh) * seq + si) * dh;
+                let dst = ((bi * seq + si) * heads + hh) * dh;
+                out[dst..dst + dh].copy_from_slice(&p[src..src + dh]);
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// engine-facing wrapper
+// ---------------------------------------------------------------------
+
+/// The native execution engine owned by one pool worker: lazily builds
+/// the [`NativeModel`] and serves pool jobs as real forward passes.
+pub struct NativeEngine {
+    cfg: ModelConfig,
+    model: Option<NativeModel>,
+    load_params_noted: bool,
+}
+
+impl NativeEngine {
+    /// Engine for the given model family (`seq_len`/`batch` in `cfg`
+    /// are defaults only; each job brings its own bucket shape).
+    pub fn new(cfg: ModelConfig) -> Self {
+        NativeEngine { cfg, model: None, load_params_noted: false }
+    }
+
+    fn ensure_model(&mut self) -> Result<&mut NativeModel> {
+        if self.model.is_none() {
+            let t0 = Instant::now();
+            let model =
+                NativeModel::new(self.cfg.clone()).context("building native serving model")?;
+            eprintln!(
+                "[kernel] built native model ({} params) in {:.2}s",
+                model.param_count(),
+                t0.elapsed().as_secs_f64()
+            );
+            self.model = Some(model);
+        }
+        Ok(self.model.as_mut().expect("just built"))
+    }
+
+    /// Execute one pool job: `(tokens i32[b,s], kv_valid f32[b,s])` →
+    /// `logits f32[b,s,vocab]`.
+    pub fn execute(&mut self, shape: JobShape, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        ensure!(
+            inputs.len() == 2,
+            "native engine expects (tokens, kv_valid) inputs, got {}",
+            inputs.len()
+        );
+        let tokens = inputs[0].as_i32().context("native engine input #0 (tokens)")?;
+        let kv_valid = inputs[1].as_f32().context("native engine input #1 (kv_valid)")?;
+        let dims = inputs[0].shape();
+        let [b, s] = dims else {
+            bail!("tokens must be rank-2 [batch, seq_len], got shape {dims:?}");
+        };
+        let (b, s) = (*b, *s);
+        ensure!(
+            inputs[1].shape() == [b, s],
+            "kv_valid shape {:?} must match tokens [{b}, {s}]",
+            inputs[1].shape()
+        );
+        if shape.seq_len != 0 || shape.batch != 0 {
+            ensure!(
+                shape.seq_len == s && shape.batch == b,
+                "job shape {shape:?} disagrees with tensor shape [{b}, {s}]"
+            );
+        }
+        let vocab = self.cfg.vocab;
+        let model = self.ensure_model()?;
+        let logits = model.forward(tokens, Some(kv_valid), b, s)?;
+        Ok(vec![HostTensor::F32 { shape: vec![b, s, vocab], data: logits }])
+    }
+
+    /// Warm a native bucket: build the model parameters and pre-compile
+    /// the bucket's pattern layout and positional table.
+    pub fn warm(&mut self, artifact: &str) -> Result<()> {
+        let seq = parse_native_artifact(artifact).map(|(s, _)| s);
+        let model = self.ensure_model()?;
+        if let Some(s) = seq {
+            model.prewarm(s)?;
+        }
+        Ok(())
+    }
+
+    /// Trained-parameter install is a PJRT-artifact flow (flat tensors
+    /// whose layout matches the AOT program); the native engine keeps
+    /// its deterministic parameters and says so once.
+    pub fn note_load_params(&mut self, artifact: &str) {
+        if !self.load_params_noted {
+            self.load_params_noted = true;
+            eprintln!(
+                "[kernel] native engine ignores load_params for {artifact} \
+                 (deterministic in-process parameters)"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::native_serving()
+    }
+
+    #[test]
+    fn artifact_names_roundtrip() {
+        for (s, b) in native_buckets() {
+            let name = native_artifact_name(s, b);
+            assert!(is_native_artifact(&name), "{name}");
+            assert_eq!(parse_native_artifact(&name), Some((s, b)), "{name}");
+        }
+        assert!(!is_native_artifact("mlm_fwd_bigbird_itc_s512_b8"));
+        assert!(parse_native_artifact("native_mlm_sx_b1").is_none());
+    }
+
+    #[test]
+    fn forward_is_deterministic_and_shaped() {
+        let (batch, seq) = (2usize, 128usize);
+        let tokens: Vec<i32> = (0..batch * seq).map(|i| (i % 500) as i32).collect();
+        let kv: Vec<f32> = vec![1.0; batch * seq];
+        let mut m1 = NativeModel::new(cfg()).unwrap();
+        let mut m2 = NativeModel::new(cfg()).unwrap();
+        let l1 = m1.forward(&tokens, Some(&kv), batch, seq).unwrap();
+        let l2 = m2.forward(&tokens, Some(&kv), batch, seq).unwrap();
+        assert_eq!(l1.len(), batch * seq * cfg().vocab);
+        assert_eq!(l1, l2, "identical configs must produce identical logits");
+        assert!(l1.iter().all(|v| v.is_finite()), "logits must be finite");
+        // logits must discriminate between tokens (not constant rows)
+        let row = &l1[..cfg().vocab];
+        let (lo, hi) = row
+            .iter()
+            .fold((f32::INFINITY, f32::NEG_INFINITY), |(lo, hi), &v| (lo.min(v), hi.max(v)));
+        assert!(hi > lo, "first logits row is constant");
+    }
+
+    #[test]
+    fn forward_rejects_bad_shapes() {
+        let mut m = NativeModel::new(cfg()).unwrap();
+        assert!(m.forward(&[1, 2, 3], None, 1, 128).is_err(), "token count mismatch");
+        assert!(m.forward(&[1; 100], None, 1, 100).is_err(), "seq not multiple of block");
+    }
+
+    #[test]
+    fn engine_executes_pool_job_tensors() {
+        let mut eng = NativeEngine::new(cfg());
+        let (b, s) = (1usize, 128usize);
+        let tokens = HostTensor::i32(&[b, s], vec![7; b * s]).unwrap();
+        let kv = HostTensor::f32(&[b, s], vec![1.0; b * s]).unwrap();
+        let shape = JobShape { seq_len: s, batch: b };
+        let out = eng.execute(shape, &[tokens.clone(), kv.clone()]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &[b, s, cfg().vocab]);
+        // wrong arity and disagreeing job shape both fail cleanly
+        assert!(eng.execute(shape, &[tokens.clone()]).is_err());
+        let bad = JobShape { seq_len: 64, batch: 2 };
+        assert!(eng.execute(bad, &[tokens, kv]).is_err());
+    }
+
+    #[test]
+    fn warm_prebuilds_bucket_layout() {
+        let mut eng = NativeEngine::new(cfg());
+        eng.warm(&native_artifact_name(256, 4)).unwrap();
+        let model = eng.model.as_mut().expect("warm builds the model");
+        assert!(model.layouts.contains_key(&256));
+        assert!(model.pos.contains_key(&256));
+    }
+}

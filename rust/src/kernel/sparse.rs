@@ -1,0 +1,248 @@
+//! The sparse forward kernel: gathered QKᵀ → streaming softmax →
+//! gathered AV accumulate.
+//!
+//! For each query block the kernel visits only the key blocks stored in
+//! the [`BlockCsr`] row (band + global + random), so work is
+//! O(n · attended_blocks · block · d) instead of O(n² · d). The softmax
+//! is computed **online** (flash-attention style): per query row we
+//! keep a running max `m`, running exponential sum `l`, and running
+//! output accumulator, rescaling all three by `exp(m_old − m_new)` when
+//! a new block raises the max — numerically equivalent to a full
+//! softmax without ever materialising an n-length score row.
+//!
+//! All intermediate buffers live in a reusable [`SparseScratch`]: a
+//! caller that holds its scratch across calls (as the batch driver's
+//! worker threads do within a forward pass) pays no per-block
+//! allocation. The batch driver still allocates one scratch per thread
+//! per invocation — a persistent thread pool is a ROADMAP item.
+
+use super::layout::BlockCsr;
+use super::{dot, HeadViews};
+
+/// Reusable per-thread scratch for [`sparse_forward`]: one score tile,
+/// the running-softmax statistics, and the output accumulator for a
+/// single query block. Grown on demand, never shrunk.
+#[derive(Debug, Default)]
+pub struct SparseScratch {
+    /// `block × block` score tile for the current (qb, kb) pair.
+    scores: Vec<f32>,
+    /// Running max per query row of the block.
+    m: Vec<f32>,
+    /// Running sum of exponentials per query row of the block.
+    l: Vec<f32>,
+    /// Running (un-normalised) output accumulator, `block × head_dim`.
+    acc: Vec<f32>,
+}
+
+impl SparseScratch {
+    /// Fresh empty scratch (buffers grow on first use).
+    pub fn new() -> Self {
+        SparseScratch::default()
+    }
+
+    fn ensure(&mut self, block: usize, head_dim: usize) {
+        self.scores.resize(block * block, 0.0);
+        self.m.resize(block, 0.0);
+        self.l.resize(block, 0.0);
+        self.acc.resize(block * head_dim, 0.0);
+    }
+}
+
+/// Block-sparse attention forward for one `[n, head_dim]` head over the
+/// attended blocks of `layout`, writing `[n, head_dim]` into `out`.
+/// Agrees with [`super::dense::dense_reference`] to ≤ 1e-5 (property
+/// tested); rows with no admissible key produce zeros.
+pub fn sparse_forward(
+    x: &HeadViews<'_>,
+    head_dim: usize,
+    layout: &BlockCsr,
+    scratch: &mut SparseScratch,
+    out: &mut [f32],
+) {
+    let n = layout.seq_len();
+    let b = layout.block;
+    x.check(n, head_dim);
+    assert_eq!(out.len(), n * head_dim, "output must be [n, head_dim]");
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    scratch.ensure(b, head_dim);
+    for qb in 0..layout.nb {
+        scratch.m.fill(f32::NEG_INFINITY);
+        scratch.l.fill(0.0);
+        scratch.acc.fill(0.0);
+        for &kb in layout.row(qb) {
+            // gathered QKᵀ tile for (qb, kb)
+            for i in 0..b {
+                let q_row = &x.q[(qb * b + i) * head_dim..(qb * b + i + 1) * head_dim];
+                for jj in 0..b {
+                    let kj = kb * b + jj;
+                    let valid = match x.key_valid {
+                        Some(mask) => mask[kj] > 0.0,
+                        None => true,
+                    };
+                    scratch.scores[i * b + jj] = if valid {
+                        let k_row = &x.k[kj * head_dim..(kj + 1) * head_dim];
+                        dot(q_row, k_row) * scale
+                    } else {
+                        f32::NEG_INFINITY
+                    };
+                }
+            }
+            // streaming-softmax update per query row of the block
+            for i in 0..b {
+                let row = &scratch.scores[i * b..(i + 1) * b];
+                let tile_max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                if tile_max == f32::NEG_INFINITY {
+                    continue; // whole tile masked for this row
+                }
+                let m_new = scratch.m[i].max(tile_max);
+                // exp(-inf - finite) = 0: a row seeing its first live
+                // tile rescales its (all-zero) statistics by zero
+                let alpha = (scratch.m[i] - m_new).exp();
+                scratch.l[i] *= alpha;
+                let acc_row = &mut scratch.acc[i * head_dim..(i + 1) * head_dim];
+                acc_row.iter_mut().for_each(|a| *a *= alpha);
+                for (jj, &s) in row.iter().enumerate() {
+                    if s == f32::NEG_INFINITY {
+                        continue;
+                    }
+                    let w = (s - m_new).exp();
+                    scratch.l[i] += w;
+                    let kj = kb * b + jj;
+                    let v_row = &x.v[kj * head_dim..(kj + 1) * head_dim];
+                    for (a, &vv) in acc_row.iter_mut().zip(v_row) {
+                        *a += w * vv;
+                    }
+                }
+                scratch.m[i] = m_new;
+            }
+        }
+        // normalise and write the block's output rows
+        for i in 0..b {
+            let o_row = &mut out[(qb * b + i) * head_dim..(qb * b + i + 1) * head_dim];
+            let l = scratch.l[i];
+            if l > 0.0 {
+                let acc_row = &scratch.acc[i * head_dim..(i + 1) * head_dim];
+                for (o, &a) in o_row.iter_mut().zip(acc_row) {
+                    *o = a / l;
+                }
+            } else {
+                o_row.fill(0.0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::PatternSpec;
+    use crate::config::AttnVariant;
+    use crate::kernel::dense::dense_reference;
+    use crate::util::Rng;
+
+    fn data(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn agrees_with_dense_reference_on_bigbird_pattern() {
+        let spec = PatternSpec {
+            variant: AttnVariant::BigBirdItc,
+            nb: 8,
+            global_blocks: 1,
+            window_blocks: 3,
+            random_blocks: 1,
+            seed: 5,
+        };
+        let layout = BlockCsr::compile(&spec, 8);
+        let (n, d) = (layout.seq_len(), 16);
+        let mut rng = Rng::new(3);
+        let q = data(&mut rng, n * d);
+        let k = data(&mut rng, n * d);
+        let v = data(&mut rng, n * d);
+        let x = HeadViews { q: &q, k: &k, v: &v, key_valid: None };
+        let mut want = vec![0.0f32; n * d];
+        dense_reference(&x, d, &layout, &mut want);
+        let mut got = vec![0.0f32; n * d];
+        let mut scratch = SparseScratch::new();
+        sparse_forward(&x, d, &layout, &mut scratch, &mut got);
+        let diff = max_abs_diff(&want, &got);
+        assert!(diff <= 1e-5, "max abs diff {diff}");
+    }
+
+    #[test]
+    fn scratch_reuse_across_shapes_is_clean() {
+        // run a big shape, then a smaller one with the same scratch:
+        // stale buffer contents must not leak into the result
+        let mut rng = Rng::new(9);
+        let mut scratch = SparseScratch::new();
+        for (nb, block, d) in [(8usize, 8usize, 16usize), (4, 4, 8)] {
+            let spec = PatternSpec {
+                variant: AttnVariant::BigBirdItc,
+                nb,
+                global_blocks: 1,
+                window_blocks: 1,
+                random_blocks: 1,
+                seed: 2,
+            };
+            let layout = BlockCsr::compile(&spec, block);
+            let n = layout.seq_len();
+            let q = data(&mut rng, n * d);
+            let k = data(&mut rng, n * d);
+            let v = data(&mut rng, n * d);
+            let x = HeadViews { q: &q, k: &k, v: &v, key_valid: None };
+            let mut want = vec![0.0f32; n * d];
+            dense_reference(&x, d, &layout, &mut want);
+            let mut got = vec![0.0f32; n * d];
+            sparse_forward(&x, d, &layout, &mut scratch, &mut got);
+            assert!(max_abs_diff(&want, &got) <= 1e-5);
+        }
+    }
+
+    #[test]
+    fn masked_keys_are_excluded() {
+        let spec = PatternSpec {
+            variant: AttnVariant::Window,
+            nb: 4,
+            global_blocks: 0,
+            window_blocks: 3,
+            random_blocks: 0,
+            seed: 0,
+        };
+        let layout = BlockCsr::compile(&spec, 4);
+        let (n, d) = (layout.seq_len(), 8);
+        let mut rng = Rng::new(4);
+        let q = data(&mut rng, n * d);
+        let k = data(&mut rng, n * d);
+        // value rows encode their own index so the output reveals which
+        // keys contributed
+        let mut v = vec![0.0f32; n * d];
+        for (kj, row) in v.chunks_mut(d).enumerate() {
+            row.fill(kj as f32);
+        }
+        let mut key_valid = vec![1.0f32; n];
+        // only key 5 stays valid: every row attending block 1 must
+        // output exactly 5.0
+        for (kj, kv) in key_valid.iter_mut().enumerate() {
+            if kj != 5 {
+                *kv = 0.0;
+            }
+        }
+        let x = HeadViews { q: &q, k: &k, v: &v, key_valid: Some(&key_valid) };
+        let mut got = vec![0.0f32; n * d];
+        sparse_forward(&x, d, &layout, &mut SparseScratch::new(), &mut got);
+        for qi in 0..n {
+            let qb = qi / 4;
+            let o = got[qi * d];
+            if layout.is_attended(qb, 1) {
+                assert!((o - 5.0).abs() < 1e-5, "row {qi}: {o}");
+            } else {
+                assert_eq!(o, 0.0, "row {qi} must be fully masked");
+            }
+        }
+    }
+}

@@ -13,6 +13,13 @@
 //!   coordinator that loads the AOT artifacts through PJRT (`xla` crate)
 //!   and never touches Python on the request path.
 //!
+//! Since PR 3 the crate also carries a **native kernel subsystem**
+//! (`kernel`): BigBird block-sparse attention computed in pure Rust —
+//! block-CSR layout, streaming-softmax sparse kernel, threaded
+//! multi-head driver, and a deterministic MLM forward pass — registered
+//! as the `native` serving backend, so the coordinator serves real
+//! forward passes with zero PJRT artifacts present.
+//!
 //! The crate additionally contains every substrate the paper depends on,
 //! built from scratch: a BPE tokenizer, synthetic text / genome corpora,
 //! random-graph theory tooling (Erdős–Rényi, Watts–Strogatz, the BigBird
@@ -27,6 +34,7 @@ pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod graph;
+pub mod kernel;
 pub mod metrics;
 pub mod runtime;
 pub mod tokenizer;

@@ -16,6 +16,14 @@
 //! worker falls back to CPU with a warning (see
 //! [`super::Runtime::for_backend`]), so the same flag works on CPU-only
 //! machines and CI runners.
+//!
+//! The `native` kind is different in nature: it is **not** a PJRT
+//! device at all but the in-process block-sparse kernel subsystem
+//! ([`crate::kernel`]) — real Rust compute that needs no AOT artifacts
+//! and no plugin, so `--backends native:2` serves real forward passes
+//! on a bare checkout. Its roofline is seeded from a self-calibration
+//! micro-probe ([`crate::kernel::calibrate`]) rather than hardcoded
+//! platform guesses.
 
 use anyhow::{bail, Result};
 
@@ -28,6 +36,10 @@ pub enum BackendKind {
     Gpu,
     /// TPU device behind a PJRT TPU plugin.
     Tpu,
+    /// The in-process native kernel subsystem ([`crate::kernel`]): no
+    /// PJRT client, no AOT artifacts — always available, like CPU, but
+    /// executing the block-sparse kernels directly.
+    Native,
 }
 
 impl BackendKind {
@@ -37,6 +49,7 @@ impl BackendKind {
             BackendKind::Cpu => "cpu",
             BackendKind::Gpu => "gpu",
             BackendKind::Tpu => "tpu",
+            BackendKind::Native => "native",
         }
     }
 
@@ -46,7 +59,8 @@ impl BackendKind {
             "cpu" => BackendKind::Cpu,
             "gpu" => BackendKind::Gpu,
             "tpu" => BackendKind::Tpu,
-            other => bail!("unknown backend kind {other:?} (expected cpu|gpu|tpu)"),
+            "native" => BackendKind::Native,
+            other => bail!("unknown backend kind {other:?} (expected cpu|gpu|tpu|native)"),
         })
     }
 }
@@ -65,10 +79,20 @@ impl BackendSpec {
         BackendSpec { kind: BackendKind::Cpu }
     }
 
+    /// A native (in-process kernel) worker spec.
+    pub fn native() -> Self {
+        BackendSpec { kind: BackendKind::Native }
+    }
+
     /// `n` identical CPU worker specs — the PR 1-compatible homogeneous
     /// pool shape.
     pub fn cpu_workers(n: usize) -> Vec<Self> {
         vec![BackendSpec::cpu(); n]
+    }
+
+    /// `n` identical native worker specs.
+    pub fn native_workers(n: usize) -> Vec<Self> {
+        vec![BackendSpec::native(); n]
     }
 }
 
@@ -170,7 +194,11 @@ pub struct Roofline {
 }
 
 impl Roofline {
-    /// Static per-platform seed model.
+    /// Per-kind seed model. PJRT kinds use static platform seeds; the
+    /// native kind is **measured** — a once-per-process self-calibration
+    /// micro-probe ([`crate::kernel::calibrate::native_roofline`]) times
+    /// the actual kernels on this machine, so the native backend's cost
+    /// model starts from reality instead of a hardcoded guess.
     pub fn for_kind(kind: BackendKind) -> Self {
         match kind {
             // multithreaded host CPU: low latency, modest throughput
@@ -181,6 +209,8 @@ impl Roofline {
             // TPU via PJRT plugin: highest throughput, highest dispatch
             // overhead
             BackendKind::Tpu => Roofline { gflops: 45000.0, gbps: 30.0, overhead_ms: 3.0 },
+            // in-process kernels: self-calibrated, cached per process
+            BackendKind::Native => crate::kernel::calibrate::native_roofline(),
         }
     }
 
@@ -261,10 +291,34 @@ mod tests {
 
     #[test]
     fn kind_roundtrip() {
-        for k in [BackendKind::Cpu, BackendKind::Gpu, BackendKind::Tpu] {
+        for k in [BackendKind::Cpu, BackendKind::Gpu, BackendKind::Tpu, BackendKind::Native] {
             assert_eq!(BackendKind::parse(k.as_str()).unwrap(), k);
         }
         assert!(BackendKind::parse("cuda").is_err());
+    }
+
+    #[test]
+    fn native_specs_parse_and_format() {
+        let specs = parse_backend_specs("native:2,cpu:1").unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0], BackendSpec::native());
+        assert_eq!(specs[1].kind, BackendKind::Native);
+        assert_eq!(specs[2], BackendSpec::cpu());
+        assert_eq!(format_backend_specs(&specs), "native:2,cpu:1");
+        assert_eq!(BackendSpec::native_workers(4).len(), 4);
+    }
+
+    #[test]
+    fn native_roofline_is_measured_and_positive() {
+        let r = Roofline::for_kind(BackendKind::Native);
+        assert!(r.gflops > 0.0 && r.gflops.is_finite(), "{r:?}");
+        assert!(r.gbps > 0.0 && r.gbps.is_finite(), "{r:?}");
+        assert!(r.overhead_ms > 0.0 && r.overhead_ms.is_finite(), "{r:?}");
+        // cached probe: stable across calls, and costs grow with tokens
+        assert_eq!(r, Roofline::for_kind(BackendKind::Native));
+        let small = JobShape { seq_len: 128, batch: 1 };
+        let large = JobShape { seq_len: 2048, batch: 4 };
+        assert!(r.cost_ms(small) < r.cost_ms(large));
     }
 
     #[test]

@@ -1,13 +1,31 @@
 //! The PJRT runtime owner: one per-backend client + artifact compilation.
 
+use std::collections::HashSet;
 use std::path::Path;
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::backend::{BackendKind, BackendSpec};
 use super::executable::ArtifactExecutable;
 use super::manifest::{Manifest, ManifestEntry};
+
+/// Requested kinds whose CPU-fallback warning has already been printed.
+/// A `gpu:8` spec spawns eight workers that all fall back — the warning
+/// is per *spec kind*, not per worker, so it logs once.
+static FALLBACK_WARNED: OnceLock<Mutex<HashSet<BackendKind>>> = OnceLock::new();
+
+fn warn_fallback_once(requested: BackendKind, message: impl FnOnce() -> String) {
+    let first = FALLBACK_WARNED
+        .get_or_init(|| Mutex::new(HashSet::new()))
+        .lock()
+        .expect("fallback-warning set poisoned")
+        .insert(requested);
+    if first {
+        eprintln!("{}", message());
+    }
+}
 
 /// Owns the PJRT client. Not `Send` — construct on the engine thread.
 pub struct Runtime {
@@ -28,27 +46,35 @@ impl Runtime {
     /// `PJRT_GPU_PLUGIN_PATH` / `PJRT_TPU_PLUGIN_PATH`); the vendored
     /// `xla_extension` in this build links only the CPU client, so a
     /// missing — or presently unloadable — plugin degrades to a CPU
-    /// client with a warning rather than failing the worker. Callers use
-    /// the realized kind to pick the matching roofline cost model, so a
-    /// fallen-back "gpu" worker is costed (and dispatched to) as the CPU
-    /// it actually is.
+    /// client with a warning rather than failing the worker. The warning
+    /// is deduplicated per requested kind (a `gpu:8` pool logs once, not
+    /// eight times). Callers use the realized kind to pick the matching
+    /// roofline cost model, so a fallen-back "gpu" worker is costed (and
+    /// dispatched to) as the CPU it actually is.
+    ///
+    /// `native` specs never reach PJRT: the engine pool executes them
+    /// in-process via [`crate::kernel::NativeEngine`], so asking this
+    /// constructor for one is a caller bug and errors out.
     pub fn for_backend(spec: &BackendSpec) -> Result<(Self, BackendKind)> {
         match spec.kind {
             BackendKind::Cpu => Ok((Self::cpu()?, BackendKind::Cpu)),
+            BackendKind::Native => bail!(
+                "the native backend runs in-process (crate::kernel) and has no PJRT runtime"
+            ),
             requested => {
                 let var = format!("PJRT_{}_PLUGIN_PATH", requested.as_str().to_uppercase());
-                match std::env::var_os(&var) {
-                    Some(path) => eprintln!(
+                warn_fallback_once(requested, || match std::env::var_os(&var) {
+                    Some(path) => format!(
                         "[runtime] {} plugin at {} cannot be loaded by this CPU-only \
                          xla_extension build; falling back to CPU",
                         requested.as_str(),
                         Path::new(&path).display()
                     ),
-                    None => eprintln!(
+                    None => format!(
                         "[runtime] no {} PJRT plugin ({var} unset); falling back to CPU",
                         requested.as_str()
                     ),
-                }
+                });
                 Ok((Self::cpu()?, BackendKind::Cpu))
             }
         }

@@ -1,10 +1,13 @@
 //! Small self-contained utilities: a deterministic PRNG (no `rand` crate
-//! in this offline environment), simple statistics helpers, and a tiny
-//! property-testing harness used by the test suite.
+//! in this offline environment), simple statistics helpers, a tiny
+//! property-testing harness used by the test suite, and the shared
+//! benchmark-report JSON format.
 
 pub mod decode;
 pub mod proptest;
+pub mod report;
 pub mod rng;
 pub mod stats;
 
+pub use report::BenchReport;
 pub use rng::Rng;

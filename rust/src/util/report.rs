@@ -1,0 +1,96 @@
+//! Shared benchmark report: the flat key → value JSON format every
+//! bench harness emits (`cargo bench --bench <x> -- --json <path>`), so
+//! the CI perf-trajectory artifacts stay mutually consistent. No serde
+//! in this offline environment — the format is a flat object of numeric
+//! fields, hand-rolled here once instead of per bench.
+
+/// Ordered flat key → value report.
+#[derive(Debug, Default)]
+pub struct BenchReport {
+    entries: Vec<(String, f64)>,
+}
+
+impl BenchReport {
+    /// Empty report.
+    pub fn new() -> Self {
+        BenchReport::default()
+    }
+
+    /// Append one numeric entry (keys are emitted in insertion order).
+    pub fn push(&mut self, key: &str, value: f64) {
+        self.entries.push((key.to_string(), value));
+    }
+
+    /// Number of entries recorded so far.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Render as a flat JSON object of numeric fields.
+    pub fn to_json(&self) -> String {
+        let fields: Vec<String> =
+            self.entries.iter().map(|(k, v)| format!("  \"{k}\": {v:.6}")).collect();
+        format!("{{\n{}\n}}\n", fields.join(",\n"))
+    }
+
+    /// Write the JSON rendering to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+
+    /// Extract the `--json <path>` flag every bench harness accepts.
+    /// `Ok(None)` when the flag is absent; `Err` when it has no value.
+    pub fn json_path(args: &[String]) -> Result<Option<String>, String> {
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            if a == "--json" {
+                return match it.next() {
+                    Some(p) => Ok(Some(p.clone())),
+                    None => Err("--json needs a path".to_string()),
+                };
+            }
+        }
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_is_flat_and_ordered() {
+        let mut r = BenchReport::new();
+        assert!(r.is_empty());
+        r.push("b_second", 2.5);
+        r.push("a_first", 1.0);
+        assert_eq!(r.len(), 2);
+        let json = r.to_json();
+        let b = json.find("b_second").unwrap();
+        let a = json.find("a_first").unwrap();
+        assert!(b < a, "insertion order preserved:\n{json}");
+        assert!(json.starts_with("{\n"), "{json}");
+        assert!(json.ends_with("}\n"), "{json}");
+        assert!(json.contains("\"b_second\": 2.500000"), "{json}");
+    }
+
+    #[test]
+    fn json_flag_parsing() {
+        let s = |v: &[&str]| v.iter().map(|x| x.to_string()).collect::<Vec<_>>();
+        assert_eq!(BenchReport::json_path(&s(&[])).unwrap(), None);
+        assert_eq!(
+            BenchReport::json_path(&s(&["--json", "out.json"])).unwrap(),
+            Some("out.json".to_string())
+        );
+        assert_eq!(
+            BenchReport::json_path(&s(&["--other", "x", "--json", "p"])).unwrap(),
+            Some("p".to_string())
+        );
+        assert!(BenchReport::json_path(&s(&["--json"])).is_err());
+    }
+}

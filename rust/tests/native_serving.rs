@@ -1,0 +1,131 @@
+//! Native-backend serving end-to-end: real forward passes with **zero
+//! PJRT artifacts present** — the CI smoke job's numerical e2e. The
+//! server is pointed at a nonexistent artifact directory on purpose, so
+//! any PJRT dependency would fail loudly; everything that completes
+//! here was computed by the in-process kernel subsystem.
+
+use std::time::Duration;
+
+use bigbird::config::{ModelConfig, ServingConfig};
+use bigbird::coordinator::{BatcherConfig, Server, ServerConfig};
+use bigbird::tokenizer::special;
+use bigbird::util::Rng;
+
+/// A server config with no artifacts anywhere: native buckets only.
+fn native_cfg(workers: usize) -> ServerConfig {
+    let mut cfg = ServerConfig::mlm_default("definitely-missing-artifact-dir");
+    cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(2), ..Default::default() };
+    cfg.serving = ServingConfig::native(workers, 2);
+    cfg
+}
+
+fn masked_request(rng: &mut Rng, len: usize, n_masks: usize) -> (Vec<i32>, Vec<usize>) {
+    let mut tokens: Vec<i32> = (0..len).map(|_| 6 + rng.below(500) as i32).collect();
+    let mut positions = Vec::new();
+    while positions.len() < n_masks {
+        let p = rng.below(len);
+        if !positions.contains(&p) {
+            positions.push(p);
+        }
+    }
+    positions.sort_unstable();
+    for &p in &positions {
+        tokens[p] = special::MASK;
+    }
+    (tokens, positions)
+}
+
+#[test]
+fn native_pool_serves_real_forward_passes_without_artifacts() {
+    let vocab = ModelConfig::native_serving().vocab as i32;
+    let server = Server::start(native_cfg(2)).expect("native server needs no artifacts");
+    // warm the buckets this test touches: builds model params and
+    // pattern layouts on both workers (no compilation, no PJRT)
+    server.warmup(&[128, 256]).expect("native warmup");
+
+    let mut rng = Rng::new(42);
+    let mut rxs = Vec::new();
+    let mut expected = Vec::new();
+    for i in 0..6usize {
+        let len = [100usize, 200, 130, 250, 90, 180][i];
+        let n_masks = 1 + i % 3;
+        let (tokens, positions) = masked_request(&mut rng, len, n_masks);
+        expected.push(positions);
+        rxs.push(server.submit(tokens).unwrap());
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(600)).expect("response");
+        let got: Vec<usize> = resp.predictions.iter().map(|p| p.0).collect();
+        assert_eq!(got, expected[i], "request {i}: wrong mask positions");
+        for &(_, tok) in &resp.predictions {
+            assert!((0..vocab).contains(&tok), "prediction {tok} outside native vocab");
+        }
+        assert!(!resp.truncated);
+    }
+
+    // determinism: identical tokens → identical predictions (the native
+    // params are deterministic and shared across workers)
+    let (tokens, _) = masked_request(&mut rng, 150, 3);
+    let first = server
+        .submit(tokens.clone())
+        .unwrap()
+        .recv_timeout(Duration::from_secs(600))
+        .unwrap();
+    let second = server
+        .submit(tokens)
+        .unwrap()
+        .recv_timeout(Duration::from_secs(600))
+        .unwrap();
+    assert_eq!(first.predictions, second.predictions, "native compute must be deterministic");
+    assert!(!first.predictions.is_empty(), "masks must produce predictions");
+
+    let m = server.metrics();
+    assert_eq!(m.errors, 0, "{m:?}");
+    assert_eq!(m.requests, 8);
+    assert!(m.batches >= 1);
+    // per-backend metrics: both workers are realized native backends
+    assert_eq!(m.worker_backend, vec!["native".to_string(), "native".to_string()]);
+    assert_eq!(m.worker_jobs.iter().sum::<usize>(), m.batches);
+    // the padding-waste metric saw real traffic (requests shorter than
+    // their buckets ⇒ strictly positive waste)
+    assert!(!m.padding_by_bucket.is_empty(), "{m:?}");
+    assert!(m.padding_waste > 0.0, "{m:?}");
+    // the dispatch cost table learned native exec times
+    assert!(
+        m.exec_ewma_ms.iter().any(|(_, label, ms)| label == "native" && *ms > 0.0),
+        "{m:?}"
+    );
+    server.shutdown();
+}
+
+/// A mixed pool (`native:1,cpu:1`) with no artifacts: the cpu worker
+/// owns a PJRT runtime but executes the native buckets through its
+/// in-process engine, so both backends serve real forward passes.
+/// Skips when no PJRT CPU client exists in this environment.
+#[test]
+fn mixed_native_cpu_pool_serves_native_buckets() {
+    let mut cfg = native_cfg(1);
+    cfg.serving.backends.push(bigbird::runtime::BackendSpec::cpu());
+    let server = match Server::start(cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping: mixed pool unavailable ({e:#})");
+            return;
+        }
+    };
+    server.warmup(&[128]).expect("mixed-pool native warmup");
+    let mut rng = Rng::new(7);
+    let mut rxs = Vec::new();
+    for _ in 0..8 {
+        let (tokens, _) = masked_request(&mut rng, 100, 2);
+        rxs.push(server.submit(tokens).unwrap());
+    }
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(600)).expect("response");
+        assert_eq!(resp.predictions.len(), 2);
+    }
+    let m = server.metrics();
+    assert_eq!(m.errors, 0, "{m:?}");
+    assert_eq!(m.worker_backend, vec!["native".to_string(), "cpu".to_string()]);
+    server.shutdown();
+}
