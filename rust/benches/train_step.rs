@@ -1,0 +1,91 @@
+//! `cargo bench --bench train_step` — native training-step throughput:
+//! tokens/sec per optimizer step and the forward/backward/optimizer
+//! wall-clock split, measured on the artifact-free `kernel::grad`
+//! pipeline (hand-rolled harness; criterion is not available offline).
+//!
+//! `-- --json <path>` writes a flat JSON report in the shared
+//! `util::BenchReport` format (the CI `BENCH_train.json` artifact).
+
+use std::time::Instant;
+
+use bigbird::config::ModelConfig;
+use bigbird::kernel::grad::AdamWConfig;
+use bigbird::train::{synthetic_docs, synthetic_mlm_batch, NativeTrainer};
+use bigbird::util::{BenchReport, Rng};
+
+const WARMUP_STEPS: usize = 2;
+const TIMED_STEPS: usize = 10;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json_path = BenchReport::json_path(&args).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let mut report = BenchReport::new();
+
+    let cfg = ModelConfig::tiny();
+    let tokens_per_step = (cfg.batch * cfg.seq_len) as f64;
+    let mut trainer =
+        NativeTrainer::new(cfg.clone(), AdamWConfig::default()).expect("building native trainer");
+    println!(
+        "native train-step bench: {} params, batch {} × seq {} ({} warmup + {} timed steps)\n",
+        trainer.model().param_count(),
+        cfg.batch,
+        cfg.seq_len,
+        WARMUP_STEPS,
+        TIMED_STEPS
+    );
+    let docs = synthetic_docs(cfg.vocab, 32, 2048, 11);
+    let mut rng = Rng::new(11).fold_in(0x17);
+
+    let mut first_loss = f32::NAN;
+    let mut last_loss = f32::NAN;
+    for _ in 0..WARMUP_STEPS {
+        let batch = synthetic_mlm_batch(&docs, &cfg, &mut rng);
+        trainer.train_step(&batch).expect("warmup step");
+    }
+    let (mut fwd_ms, mut bwd_ms, mut opt_ms) = (0.0f64, 0.0f64, 0.0f64);
+    let t0 = Instant::now();
+    for i in 0..TIMED_STEPS {
+        let batch = synthetic_mlm_batch(&docs, &cfg, &mut rng);
+        let loss = trainer.train_step(&batch).expect("timed step");
+        if i == 0 {
+            first_loss = loss;
+        }
+        last_loss = loss;
+        fwd_ms += trainer.timings.fwd_ms;
+        bwd_ms += trainer.timings.bwd_ms;
+        opt_ms += trainer.timings.opt_ms;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let step_ms = wall * 1000.0 / TIMED_STEPS as f64;
+    let tokens_per_sec = tokens_per_step * TIMED_STEPS as f64 / wall;
+    let (fwd, bwd, opt) = (
+        fwd_ms / TIMED_STEPS as f64,
+        bwd_ms / TIMED_STEPS as f64,
+        opt_ms / TIMED_STEPS as f64,
+    );
+
+    println!("{:<26}{:>12}", "metric", "value");
+    println!("{:<26}{tokens_per_sec:>12.0}", "tokens/sec");
+    println!("{:<26}{step_ms:>12.2}", "ms/step");
+    println!("{:<26}{fwd:>12.2}", "fwd ms/step");
+    println!("{:<26}{bwd:>12.2}", "bwd ms/step");
+    println!("{:<26}{opt:>12.2}", "optimizer ms/step");
+    println!("{:<26}{first_loss:>12.4}", "loss (first timed)");
+    println!("{:<26}{last_loss:>12.4}", "loss (last timed)");
+
+    report.push("train_native_tokens_per_sec", tokens_per_sec);
+    report.push("train_native_step_ms", step_ms);
+    report.push("train_native_fwd_ms", fwd);
+    report.push("train_native_bwd_ms", bwd);
+    report.push("train_native_opt_ms", opt);
+    report.push("train_native_first_loss", first_loss as f64);
+    report.push("train_native_last_loss", last_loss as f64);
+
+    if let Some(path) = json_path {
+        report.write(&path).expect("writing bench JSON");
+        println!("\n(bench JSON written to {path})");
+    }
+}

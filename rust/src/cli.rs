@@ -28,6 +28,9 @@ pub struct Flags {
     pub backends: Vec<BackendSpec>,
     /// `--max-inflight <n>` per-bucket inflight batch cap.
     pub max_inflight: usize,
+    /// `--checkpoint <path>` native checkpoint: written by
+    /// `train --backends native`, loaded by `serve --backends native:N`.
+    pub checkpoint: Option<String>,
     /// Remaining positional args.
     pub positional: Vec<String>,
 }
@@ -70,6 +73,9 @@ pub fn parse_flags(args: &[String]) -> Result<Flags> {
             "--max-inflight" => {
                 f.max_inflight = it.next().context("--max-inflight needs a value")?.parse()?
             }
+            "--checkpoint" => {
+                f.checkpoint = Some(it.next().context("--checkpoint needs a value")?.clone())
+            }
             other if other.starts_with("--") => bail!("unknown flag {other}"),
             other => f.positional.push(other.to_string()),
         }
@@ -106,6 +112,10 @@ FLAGS:
                          kernels — real compute, no artifacts needed)
   --engine-workers <n>   shorthand for --backends cpu:<n>
   --max-inflight <n>     per-bucket inflight batch cap (default 2)
+  --checkpoint <path>    native BBCKPT1 checkpoint: train --backends native
+                         writes it (default runs/native_mlm.ckpt), serve
+                         --backends native:N loads it and serves the trained
+                         weights
 ";
 
 /// CLI entrypoint used by `main.rs`.
@@ -209,6 +219,14 @@ mod tests {
         assert_eq!(f.backends[0].kind, BackendKind::Native);
         assert_eq!(f.backends[1].kind, BackendKind::Native);
         assert_eq!(f.backends[2].kind, BackendKind::Cpu);
+    }
+
+    #[test]
+    fn parse_checkpoint_flag() {
+        let f = parse_flags(&s(&["--checkpoint", "runs/x.ckpt"])).unwrap();
+        assert_eq!(f.checkpoint.as_deref(), Some("runs/x.ckpt"));
+        assert_eq!(parse_flags(&s(&[])).unwrap().checkpoint, None);
+        assert!(parse_flags(&s(&["--checkpoint"])).is_err());
     }
 
     #[test]

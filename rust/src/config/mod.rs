@@ -163,6 +163,16 @@ impl ModelConfig {
         ModelConfig { seq_len: 2048, batch: 1, ..Self::tiny() }
     }
 
+    /// The configuration `train --backends native` pretrains
+    /// (overridable with `--config`): the same parameter family as
+    /// [`ModelConfig::native_serving`] — identical architecture
+    /// fingerprint, so its checkpoints install directly into the native
+    /// serving pool — at the tiny training shape
+    /// (`batch × seq_len = 4 × 128` per step).
+    pub fn native_train() -> Self {
+        Self::tiny()
+    }
+
     /// Number of blocks in the sequence.
     pub fn num_blocks(&self) -> usize {
         self.seq_len / self.block
@@ -370,6 +380,19 @@ mod tests {
             cfg.seq_len = seq;
             cfg.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn native_train_shares_the_serving_parameter_family() {
+        let train = ModelConfig::native_train();
+        train.validate().unwrap();
+        let serve = ModelConfig::native_serving();
+        // identical architecture fingerprint ⇒ train checkpoints load
+        // into the serving pool (seq_len/batch are runtime shapes)
+        assert_eq!(
+            crate::kernel::config_fingerprint(&train),
+            crate::kernel::config_fingerprint(&serve)
+        );
     }
 
     #[test]

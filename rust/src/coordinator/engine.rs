@@ -138,8 +138,13 @@ enum WorkerMsg {
         artifacts: Vec<String>,
         done: Sender<std::result::Result<(), String>>,
     },
-    /// Install trained parameters for a fwd artifact on this worker.
-    LoadParams { fwd_artifact: String, params: HostTensor },
+    /// Install trained parameters for a fwd artifact on this worker,
+    /// acking on `done` (native imports validate and can fail).
+    LoadParams {
+        fwd_artifact: String,
+        params: HostTensor,
+        done: Sender<std::result::Result<(), String>>,
+    },
 }
 
 struct Worker {
@@ -308,15 +313,28 @@ impl EnginePool {
 
     /// Install trained parameters for a fwd artifact on every worker
     /// (e.g. from a checkpoint), so subsequent batches serve the trained
-    /// model regardless of which worker executes them.
+    /// model regardless of which worker executes them. Blocks until
+    /// every worker has acked the install; any worker's validation
+    /// failure (wrong length, non-finite payload, config mismatch on a
+    /// native import) is returned as an error — parameters are never
+    /// half-installed silently.
     pub fn load_params(&self, fwd_artifact: &str, params: &HostTensor) -> Result<()> {
+        let (done_tx, done_rx) = channel();
         for (i, _) in self.workers.iter().enumerate() {
             self.worker_tx(i)
                 .send(WorkerMsg::LoadParams {
                     fwd_artifact: fwd_artifact.to_string(),
                     params: params.clone(),
+                    done: done_tx.clone(),
                 })
                 .map_err(|_| anyhow::anyhow!("engine worker {i} gone"))?;
+        }
+        drop(done_tx);
+        for _ in 0..self.workers.len() {
+            done_rx
+                .recv()
+                .context("engine worker died during load_params")?
+                .map_err(|e| anyhow::anyhow!("load_params failed: {e}"))?;
         }
         Ok(())
     }
@@ -416,13 +434,20 @@ impl WorkerCompute {
         Ok(())
     }
 
-    fn load_params(&mut self, fwd_artifact: String, params: HostTensor) {
+    fn load_params(&mut self, fwd_artifact: String, params: HostTensor) -> Result<()> {
         if is_native_artifact(&fwd_artifact) {
-            self.native.note_load_params(&fwd_artifact);
+            // real import: validates and installs into the in-process model
+            self.native.load_params(&fwd_artifact, &params)
         } else if let Some(pjrt) = &mut self.pjrt {
             pjrt.params.insert(fwd_artifact, params);
+            Ok(())
+        } else {
+            // a native-only worker holds no PJRT param cache, and the
+            // dispatcher never routes PJRT buckets to it — a broadcast
+            // PJRT install must stay a no-op here, not an error, or a
+            // mixed pool would reject valid PJRT checkpoints
+            Ok(())
         }
-        // a native-only worker holds no PJRT param cache: nothing to do
     }
 }
 
@@ -447,8 +472,9 @@ fn worker_loop(
     };
     while let Ok(msg) = rx.recv() {
         match msg {
-            WorkerMsg::LoadParams { fwd_artifact, params: p } => {
-                compute.load_params(fwd_artifact, p);
+            WorkerMsg::LoadParams { fwd_artifact, params: p, done } => {
+                let result = compute.load_params(fwd_artifact, p).map_err(|e| format!("{e:#}"));
+                let _ = done.send(result);
             }
             WorkerMsg::Warmup { artifacts, done } => {
                 let mut result = Ok(());

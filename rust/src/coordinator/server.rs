@@ -52,6 +52,11 @@ pub struct ServerConfig {
     /// model family the native kernel backend serves when the pool
     /// contains `native` workers (seq_len/batch are per-bucket)
     pub native: ModelConfig,
+    /// optional `BBCKPT1` checkpoint written by `train --backends
+    /// native`: loaded, fingerprint-validated against `native`, and
+    /// installed on every worker at startup so the pool serves the
+    /// trained weights (requires a native worker in the pool)
+    pub native_checkpoint: Option<String>,
 }
 
 impl ServerConfig {
@@ -69,6 +74,7 @@ impl ServerConfig {
             queue_depth: 256,
             serving: ServingConfig::default(),
             native: ModelConfig::native_serving(),
+            native_checkpoint: None,
         }
     }
 }
@@ -180,6 +186,30 @@ impl Server {
             cfg.queue_depth,
             cfg.native.clone(),
         )?;
+        // install trained native parameters before any traffic: a bad
+        // checkpoint fails startup loudly instead of serving seed (or
+        // worse, stale) weights
+        if let Some(ckpt_path) = &cfg.native_checkpoint {
+            anyhow::ensure!(
+                any_native,
+                "native checkpoint {ckpt_path:?} requires a native worker in the pool \
+                 (use --backends native:N)"
+            );
+            let ckpt = crate::train::load_native_checkpoint(
+                std::path::Path::new(ckpt_path),
+                &cfg.native,
+            )
+            .with_context(|| format!("loading native checkpoint {ckpt_path:?}"))?;
+            let n = ckpt.params.len();
+            let tensor = HostTensor::f32(&[n], ckpt.params)?;
+            pool.load_params(kernel::NATIVE_PARAMS_ARTIFACT, &tensor)
+                .with_context(|| format!("installing native checkpoint {ckpt_path:?}"))?;
+            eprintln!(
+                "[server] serving trained native checkpoint {ckpt_path} \
+                 ({n} params, step {})",
+                ckpt.step
+            );
+        }
         let (tx, rx): (SyncSender<Submission>, Receiver<Submission>) =
             sync_channel(cfg.queue_depth);
         let metrics = Arc::new(ServingMetrics::default());

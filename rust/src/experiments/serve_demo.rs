@@ -19,6 +19,7 @@ pub fn run(flags: &Flags) -> Result<()> {
     log.line("Long-document fill-mask serving demo (BigBird buckets from the manifest)\n");
     let mut cfg = ServerConfig::mlm_default(&flags.artifacts);
     cfg.serving = flags.serving();
+    cfg.native_checkpoint = flags.checkpoint.clone();
     log.line(format!(
         "engine pool: {} worker(s) [{}], max {} inflight batches per bucket",
         cfg.serving.n_workers(),
@@ -30,6 +31,9 @@ pub fn run(flags: &Flags) -> Result<()> {
             "serving mode: native kernel pipeline (in-process block-sparse compute, \
              no PJRT artifacts required)",
         );
+    }
+    if let Some(ckpt) = &cfg.native_checkpoint {
+        log.line(format!("trained weights: native checkpoint {ckpt}"));
     }
     let server = Arc::new(Server::start(cfg)?);
     log.line("warming up buckets (compiling artifacts on every worker once) ...");

@@ -1,30 +1,217 @@
-//! Multi-batch / multi-head driver for the sparse kernel.
+//! Multi-batch / multi-head drivers for the sparse kernels, on a
+//! **persistent worker-thread pool**.
 //!
-//! Fans the `batch × heads` independent head problems of one attention
-//! layer out over OS threads (`std::thread::scope` fork-join — the
-//! `rayon` crate is not vendored in this offline environment, so we
-//! hand-roll the same contiguous-chunk work split). Each thread owns
-//! one [`SparseScratch`] reused across all of its heads, so a forward
-//! pass allocates O(threads) scratch, not O(batch × heads).
+//! Earlier revisions spawned `std::thread::scope` threads — and fresh
+//! scratch buffers — on *every* forward pass, so N concurrent native
+//! engine workers could stand up N × cores short-lived threads at once
+//! (core oversubscription) and re-pay the scratch allocations each
+//! call. [`KernelPool`] fixes both: one process-wide pool of
+//! `available_parallelism` threads, each owning a [`ScratchArena`]
+//! (forward [`SparseScratch`] + backward
+//! [`AttnGradScratch`](super::grad::AttnGradScratch)) that lives for
+//! the lifetime of the process and is reused across every forward
+//! *and* backward invocation from every caller.
+//!
+//! Work submission keeps the fork-join shape: a batch call splits its
+//! `batch × heads` independent head problems into contiguous chunks,
+//! runs one chunk inline on the calling thread (which would otherwise
+//! just block), queues the rest, and returns only when every chunk has
+//! completed. Results are bit-identical to running the per-head kernel
+//! sequentially — each task writes a disjoint output range and the
+//! per-head math does not depend on scheduling.
 
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use super::grad::attention::{sparse_attention_backward, AttnGradScratch};
 use super::layout::BlockCsr;
-use super::sparse::{sparse_forward, SparseScratch};
+use super::sparse::{sparse_forward, sparse_forward_with_stats, SparseScratch};
 use super::HeadViews;
 
-/// Worker threads for `tasks` (≥ 1) independent head problems: all
-/// available cores, capped by the task count (a single task runs
-/// inline).
-fn thread_count(tasks: usize) -> usize {
-    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    cores.min(tasks)
+/// Per-thread scratch arena: every pool worker (and every caller
+/// thread, for its inline chunk) owns one, reused across calls so the
+/// hot path pays zero steady-state allocation.
+#[derive(Debug, Default)]
+pub struct ScratchArena {
+    /// Forward-kernel scratch (score tile + streaming-softmax state).
+    pub fwd: SparseScratch,
+    /// Backward-kernel scratch (per-row δ values).
+    pub bwd: AttnGradScratch,
+}
+
+/// A type-erased unit of pool work.
+type Job = Box<dyn FnOnce(&mut ScratchArena) + Send + 'static>;
+
+/// Barrier state for one [`KernelPool::run`] call.
+struct Pending {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+/// Decrements the pending counter when a task finishes — **including**
+/// when it unwinds, so a panicking task can never deadlock the caller.
+struct DoneGuard(Arc<Pending>);
+
+impl Drop for DoneGuard {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.panicked.store(true, Ordering::SeqCst);
+        }
+        let mut remaining = self.0.remaining.lock().unwrap_or_else(|e| e.into_inner());
+        *remaining -= 1;
+        if *remaining == 0 {
+            self.0.done.notify_all();
+        }
+    }
+}
+
+thread_local! {
+    /// Arena for the chunk a caller runs inline on its own thread.
+    static CALLER_ARENA: RefCell<ScratchArena> = RefCell::new(ScratchArena::default());
+}
+
+/// The process-wide persistent kernel thread pool.
+pub struct KernelPool {
+    /// Job queue inlet. Behind a mutex so the pool is `Sync` on every
+    /// supported toolchain (sends are a pointer handoff — the lock is
+    /// never held for real work).
+    tx: Mutex<Sender<Job>>,
+    size: usize,
+}
+
+static POOL: OnceLock<KernelPool> = OnceLock::new();
+
+impl KernelPool {
+    /// The shared pool, spawned on first use with one worker per
+    /// available core. All native engine workers funnel through it, so
+    /// concurrent forwards/backwards share — rather than multiply — the
+    /// machine's cores.
+    pub fn global() -> &'static KernelPool {
+        POOL.get_or_init(|| {
+            let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            KernelPool::new(cores)
+        })
+    }
+
+    fn new(size: usize) -> Self {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..size {
+            let rx: Arc<Mutex<Receiver<Job>>> = rx.clone();
+            std::thread::Builder::new()
+                .name(format!("bigbird-kernel-{i}"))
+                .spawn(move || {
+                    let mut arena = ScratchArena::default();
+                    loop {
+                        // hold the lock only for the handoff; a worker
+                        // executing a job never blocks its siblings
+                        let job = {
+                            let guard = match rx.lock() {
+                                Ok(g) => g,
+                                Err(_) => return,
+                            };
+                            match guard.recv() {
+                                Ok(j) => j,
+                                Err(_) => return, // pool dropped
+                            }
+                        };
+                        // a panicking job must not kill the pool thread;
+                        // the job's DoneGuard records the panic and the
+                        // submitting `run` call re-raises it
+                        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            job(&mut arena)
+                        }));
+                    }
+                })
+                .expect("spawning kernel pool worker");
+        }
+        KernelPool { tx: Mutex::new(tx), size }
+    }
+
+    /// Number of pool worker threads.
+    pub fn threads(&self) -> usize {
+        self.size
+    }
+
+    /// Run `tasks` to completion: the last task executes inline on the
+    /// calling thread (with its thread-local arena), the rest on pool
+    /// workers. Blocks until **all** tasks have finished, then
+    /// propagates any task panic.
+    #[allow(clippy::type_complexity)]
+    pub fn run<'s>(&self, mut tasks: Vec<Box<dyn FnOnce(&mut ScratchArena) + Send + 's>>) {
+        let Some(inline_task) = tasks.pop() else {
+            return;
+        };
+        let pending = Arc::new(Pending {
+            remaining: Mutex::new(tasks.len()),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        for task in tasks {
+            let guard = DoneGuard(pending.clone());
+            let job: Box<dyn FnOnce(&mut ScratchArena) + Send + 's> = Box::new(move |arena| {
+                let _guard = guard;
+                task(arena);
+            });
+            // SAFETY: `run` does not return until the pending counter
+            // hits zero (and the inline task finishes), i.e. until every
+            // queued job has been executed and dropped — the caller's
+            // borrows captured in `job` strictly outlive all uses. This
+            // lifetime erasure is the standard scoped-thread-pool
+            // construction (the queue requires 'static, the barrier
+            // restores the scoped guarantee).
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce(&mut ScratchArena) + Send + 's>, Job>(job)
+            };
+            self.tx
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .send(job)
+                .expect("kernel pool workers live for the process lifetime");
+        }
+        let inline_result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            CALLER_ARENA.with(|a| inline_task(&mut a.borrow_mut()));
+        }));
+        let mut remaining = pending.remaining.lock().unwrap_or_else(|e| e.into_inner());
+        while *remaining > 0 {
+            remaining = pending.done.wait(remaining).unwrap_or_else(|e| e.into_inner());
+        }
+        drop(remaining);
+        if let Err(p) = inline_result {
+            std::panic::resume_unwind(p);
+        }
+        if pending.panicked.load(Ordering::SeqCst) {
+            panic!("kernel pool task panicked");
+        }
+    }
+}
+
+/// Contiguous-chunk split of `tasks` over at most `threads` workers:
+/// `(first_task, count)` per chunk, identical to the pre-pool fork-join
+/// split so scheduling stays deterministic-shaped.
+fn chunks(tasks: usize, threads: usize) -> Vec<(usize, usize)> {
+    let nt = threads.min(tasks).max(1);
+    let base = tasks / nt;
+    let extra = tasks % nt;
+    let mut out = Vec::with_capacity(nt);
+    let mut first = 0usize;
+    for t in 0..nt {
+        let count = base + usize::from(t < extra);
+        out.push((first, count));
+        first += count;
+    }
+    out
 }
 
 /// Block-sparse attention forward over a `[batch, heads, n, head_dim]`
 /// Q/K/V pack (with an optional `[batch, n]` key-validity mask shared
 /// across heads), writing the same `[batch, heads, n, head_dim]` layout
-/// into `out`. Heads are distributed over threads in contiguous chunks;
-/// results are bit-identical to running [`sparse_forward`] per head
-/// sequentially.
+/// into `out`. Head problems are distributed over the persistent
+/// [`KernelPool`] in contiguous chunks; results are bit-identical to
+/// running [`sparse_forward`] per head sequentially.
 pub fn sparse_forward_batch(
     x: &HeadViews<'_>,
     batch: usize,
@@ -32,6 +219,44 @@ pub fn sparse_forward_batch(
     head_dim: usize,
     layout: &BlockCsr,
     out: &mut [f32],
+) {
+    forward_batch_core(x, batch, heads, head_dim, layout, out, &mut [], &mut []);
+}
+
+/// Training-mode batch forward: like [`sparse_forward_batch`] but also
+/// saves the per-row softmax statistics `m`/`l` (each
+/// `[batch × heads × n]`, laid out task-major exactly like `out`'s
+/// leading dims) for the backward pass. Output is bit-identical to the
+/// serving forward.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_forward_batch_training(
+    x: &HeadViews<'_>,
+    batch: usize,
+    heads: usize,
+    head_dim: usize,
+    layout: &BlockCsr,
+    out: &mut [f32],
+    m: &mut [f32],
+    l: &mut [f32],
+) {
+    let n = layout.seq_len();
+    assert_eq!(m.len(), batch * heads * n, "m must be [batch × heads × n]");
+    assert_eq!(l.len(), batch * heads * n, "l must be [batch × heads × n]");
+    forward_batch_core(x, batch, heads, head_dim, layout, out, m, l);
+}
+
+/// Shared forward fan-out; `m`/`l` are both `[batch × heads × n]`
+/// (training) or both empty (serving).
+#[allow(clippy::too_many_arguments)]
+fn forward_batch_core(
+    x: &HeadViews<'_>,
+    batch: usize,
+    heads: usize,
+    head_dim: usize,
+    layout: &BlockCsr,
+    out: &mut [f32],
+    m: &mut [f32],
+    l: &mut [f32],
 ) {
     let n = layout.seq_len();
     let per = n * head_dim;
@@ -46,42 +271,126 @@ pub fn sparse_forward_batch(
     if tasks == 0 {
         return;
     }
+    let with_stats = !m.is_empty();
+    let pool = KernelPool::global();
+    let mut jobs: Vec<Box<dyn FnOnce(&mut ScratchArena) + Send + '_>> = Vec::new();
+    let mut out_rest = out;
+    let mut m_rest = m;
+    let mut l_rest = l;
+    for (first_task, count) in chunks(tasks, pool.threads()) {
+        let (out_chunk, rest) = out_rest.split_at_mut(count * per);
+        out_rest = rest;
+        let stat_len = if with_stats { count * n } else { 0 };
+        let (m_chunk, rest) = m_rest.split_at_mut(stat_len);
+        m_rest = rest;
+        let (l_chunk, rest) = l_rest.split_at_mut(stat_len);
+        l_rest = rest;
+        jobs.push(Box::new(move |arena: &mut ScratchArena| {
+            for (i, o) in out_chunk.chunks_mut(per).enumerate() {
+                let task = first_task + i;
+                let b = task / heads;
+                let off = task * per;
+                let hv = HeadViews {
+                    q: &x.q[off..off + per],
+                    k: &x.k[off..off + per],
+                    v: &x.v[off..off + per],
+                    key_valid: x.key_valid.map(|mm| &mm[b * n..(b + 1) * n]),
+                };
+                if with_stats {
+                    sparse_forward_with_stats(
+                        &hv,
+                        head_dim,
+                        layout,
+                        &mut arena.fwd,
+                        o,
+                        &mut m_chunk[i * n..(i + 1) * n],
+                        &mut l_chunk[i * n..(i + 1) * n],
+                    );
+                } else {
+                    sparse_forward(&hv, head_dim, layout, &mut arena.fwd, o);
+                }
+            }
+        }));
+    }
+    pool.run(jobs);
+}
 
-    let run_range = |first_task: usize, chunk: &mut [f32], scratch: &mut SparseScratch| {
-        for (i, o) in chunk.chunks_mut(per).enumerate() {
-            let task = first_task + i;
-            let b = task / heads;
-            let off = task * per;
-            let hv = HeadViews {
-                q: &x.q[off..off + per],
-                k: &x.k[off..off + per],
-                v: &x.v[off..off + per],
-                key_valid: x.key_valid.map(|m| &m[b * n..(b + 1) * n]),
-            };
-            sparse_forward(&hv, head_dim, layout, scratch, o);
-        }
-    };
-
-    let nt = thread_count(tasks);
-    if nt == 1 {
-        run_range(0, out, &mut SparseScratch::new());
+/// Backward of block-sparse attention over a full
+/// `[batch, heads, n, head_dim]` pack: fans the per-head
+/// [`sparse_attention_backward`] problems over the persistent pool.
+/// `o`/`d_o` are the forward output and its upstream gradient (same
+/// layout as `x`), `m`/`l` the saved statistics from
+/// [`sparse_forward_batch_training`]. `dq`/`dk`/`dv` are fully
+/// overwritten. Bit-identical to the sequential per-head backward.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_backward_batch(
+    x: &HeadViews<'_>,
+    o: &[f32],
+    d_o: &[f32],
+    m: &[f32],
+    l: &[f32],
+    batch: usize,
+    heads: usize,
+    head_dim: usize,
+    layout: &BlockCsr,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    let n = layout.seq_len();
+    let per = n * head_dim;
+    let tasks = batch * heads;
+    assert_eq!(x.q.len(), tasks * per, "q must be [batch, heads, n, head_dim]");
+    assert_eq!(o.len(), tasks * per, "o must be [batch, heads, n, head_dim]");
+    assert_eq!(d_o.len(), tasks * per, "d_o must be [batch, heads, n, head_dim]");
+    assert_eq!(m.len(), tasks * n, "m must be [batch × heads × n]");
+    assert_eq!(l.len(), tasks * n, "l must be [batch × heads × n]");
+    assert_eq!(dq.len(), tasks * per, "dq must be [batch, heads, n, head_dim]");
+    assert_eq!(dk.len(), tasks * per, "dk must be [batch, heads, n, head_dim]");
+    assert_eq!(dv.len(), tasks * per, "dv must be [batch, heads, n, head_dim]");
+    if tasks == 0 {
         return;
     }
-    let base = tasks / nt;
-    let extra = tasks % nt;
-    std::thread::scope(|s| {
-        let mut remaining = out;
-        let mut first_task = 0usize;
-        for t in 0..nt {
-            let count = base + usize::from(t < extra);
-            let (chunk, rest) = remaining.split_at_mut(count * per);
-            remaining = rest;
-            let start = first_task;
-            first_task += count;
-            let run = &run_range;
-            s.spawn(move || run(start, chunk, &mut SparseScratch::new()));
-        }
-    });
+    let pool = KernelPool::global();
+    let mut jobs: Vec<Box<dyn FnOnce(&mut ScratchArena) + Send + '_>> = Vec::new();
+    let mut dq_rest = dq;
+    let mut dk_rest = dk;
+    let mut dv_rest = dv;
+    for (first_task, count) in chunks(tasks, pool.threads()) {
+        let (dq_chunk, rest) = dq_rest.split_at_mut(count * per);
+        dq_rest = rest;
+        let (dk_chunk, rest) = dk_rest.split_at_mut(count * per);
+        dk_rest = rest;
+        let (dv_chunk, rest) = dv_rest.split_at_mut(count * per);
+        dv_rest = rest;
+        jobs.push(Box::new(move |arena: &mut ScratchArena| {
+            for i in 0..count {
+                let task = first_task + i;
+                let b = task / heads;
+                let off = task * per;
+                let hv = HeadViews {
+                    q: &x.q[off..off + per],
+                    k: &x.k[off..off + per],
+                    v: &x.v[off..off + per],
+                    key_valid: x.key_valid.map(|mm| &mm[b * n..(b + 1) * n]),
+                };
+                sparse_attention_backward(
+                    &hv,
+                    &o[off..off + per],
+                    &d_o[off..off + per],
+                    &m[task * n..(task + 1) * n],
+                    &l[task * n..(task + 1) * n],
+                    head_dim,
+                    layout,
+                    &mut arena.bwd,
+                    &mut dq_chunk[i * per..(i + 1) * per],
+                    &mut dk_chunk[i * per..(i + 1) * per],
+                    &mut dv_chunk[i * per..(i + 1) * per],
+                );
+            }
+        }));
+    }
+    pool.run(jobs);
 }
 
 #[cfg(test)]
@@ -130,7 +439,123 @@ mod tests {
             };
             sparse_forward(&hv, d, &layout, &mut scratch, &mut want[off..off + per]);
         }
-        assert_eq!(got, want, "parallel driver must be bit-identical to sequential");
+        assert_eq!(got, want, "pooled driver must be bit-identical to sequential");
+    }
+
+    #[test]
+    fn training_forward_matches_serving_and_per_head_stats() {
+        let spec = PatternSpec {
+            variant: AttnVariant::BigBirdItc,
+            nb: 4,
+            global_blocks: 1,
+            window_blocks: 1,
+            random_blocks: 1,
+            seed: 3,
+        };
+        let layout = BlockCsr::compile(&spec, 4);
+        let (batch, heads, d) = (2usize, 3usize, 8usize);
+        let n = layout.seq_len();
+        let per = n * d;
+        let vol = batch * heads * per;
+        let mut rng = Rng::new(5);
+        let q: Vec<f32> = (0..vol).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..vol).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..vol).map(|_| rng.normal() as f32).collect();
+        let x = HeadViews { q: &q, k: &k, v: &v, key_valid: None };
+
+        let mut serving = vec![0.0f32; vol];
+        sparse_forward_batch(&x, batch, heads, d, &layout, &mut serving);
+
+        let mut training = vec![0.0f32; vol];
+        let mut m = vec![0.0f32; batch * heads * n];
+        let mut l = vec![0.0f32; batch * heads * n];
+        sparse_forward_batch_training(&x, batch, heads, d, &layout, &mut training, &mut m, &mut l);
+        assert_eq!(serving, training, "training forward must be bit-identical");
+
+        // stats must agree with a sequential per-head stats run
+        let mut scratch = SparseScratch::new();
+        for task in 0..batch * heads {
+            let off = task * per;
+            let hv = HeadViews {
+                q: &q[off..off + per],
+                k: &k[off..off + per],
+                v: &v[off..off + per],
+                key_valid: None,
+            };
+            let mut o = vec![0.0f32; per];
+            let mut mm = vec![0.0f32; n];
+            let mut ll = vec![0.0f32; n];
+            sparse_forward_with_stats(&hv, d, &layout, &mut scratch, &mut o, &mut mm, &mut ll);
+            assert_eq!(&m[task * n..(task + 1) * n], mm.as_slice(), "task {task} m");
+            assert_eq!(&l[task * n..(task + 1) * n], ll.as_slice(), "task {task} l");
+        }
+    }
+
+    #[test]
+    fn backward_batch_matches_sequential_per_head_runs() {
+        let spec = PatternSpec {
+            variant: AttnVariant::BigBirdItc,
+            nb: 5,
+            global_blocks: 1,
+            window_blocks: 3,
+            random_blocks: 1,
+            seed: 9,
+        };
+        let layout = BlockCsr::compile(&spec, 4);
+        let (batch, heads, d) = (2usize, 4usize, 8usize);
+        let n = layout.seq_len();
+        let per = n * d;
+        let vol = batch * heads * per;
+        let mut rng = Rng::new(77);
+        let q: Vec<f32> = (0..vol).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..vol).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..vol).map(|_| rng.normal() as f32).collect();
+        let d_o: Vec<f32> = (0..vol).map(|_| rng.normal() as f32).collect();
+        let key_valid: Vec<f32> =
+            (0..batch * n).map(|_| if rng.coin(0.15) { 0.0 } else { 1.0 }).collect();
+        let x = HeadViews { q: &q, k: &k, v: &v, key_valid: Some(&key_valid) };
+
+        let mut o = vec![0.0f32; vol];
+        let mut m = vec![0.0f32; batch * heads * n];
+        let mut l = vec![0.0f32; batch * heads * n];
+        sparse_forward_batch_training(&x, batch, heads, d, &layout, &mut o, &mut m, &mut l);
+
+        let mut dq = vec![0.0f32; vol];
+        let mut dk = vec![0.0f32; vol];
+        let mut dv = vec![0.0f32; vol];
+        sparse_backward_batch(
+            &x, &o, &d_o, &m, &l, batch, heads, d, &layout, &mut dq, &mut dk, &mut dv,
+        );
+
+        let mut scratch = AttnGradScratch::new();
+        for task in 0..batch * heads {
+            let b = task / heads;
+            let off = task * per;
+            let hv = HeadViews {
+                q: &q[off..off + per],
+                k: &k[off..off + per],
+                v: &v[off..off + per],
+                key_valid: Some(&key_valid[b * n..(b + 1) * n]),
+            };
+            let (mut sq, mut sk, mut sv) =
+                (vec![0.0f32; per], vec![0.0f32; per], vec![0.0f32; per]);
+            sparse_attention_backward(
+                &hv,
+                &o[off..off + per],
+                &d_o[off..off + per],
+                &m[task * n..(task + 1) * n],
+                &l[task * n..(task + 1) * n],
+                d,
+                &layout,
+                &mut scratch,
+                &mut sq,
+                &mut sk,
+                &mut sv,
+            );
+            assert_eq!(&dq[off..off + per], sq.as_slice(), "task {task} dq");
+            assert_eq!(&dk[off..off + per], sk.as_slice(), "task {task} dk");
+            assert_eq!(&dv[off..off + per], sv.as_slice(), "task {task} dv");
+        }
     }
 
     #[test]
@@ -151,5 +576,37 @@ mod tests {
         sparse_forward_batch(&x, 1, 1, d, &layout, &mut out);
         // constant V ⇒ every output element equals the constant
         assert!(out.iter().all(|&o| (o - 0.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn pool_survives_concurrent_callers() {
+        // several threads hammering the shared pool at once (the
+        // "concurrent native engine workers" shape) must all complete
+        // with correct results
+        let spec = PatternSpec {
+            variant: AttnVariant::Window,
+            nb: 4,
+            global_blocks: 0,
+            window_blocks: 3,
+            random_blocks: 0,
+            seed: 0,
+        };
+        let layout = BlockCsr::compile(&spec, 4);
+        let (n, d) = (layout.seq_len(), 8);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let layout = &layout;
+                s.spawn(move || {
+                    let c = 0.1 + t as f32 * 0.2;
+                    let q = vec![c; 2 * 2 * n * d];
+                    let x = HeadViews { q: &q, k: &q, v: &q, key_valid: None };
+                    let mut out = vec![0.0f32; 2 * 2 * n * d];
+                    for _ in 0..8 {
+                        sparse_forward_batch(&x, 2, 2, d, layout, &mut out);
+                        assert!(out.iter().all(|&o| (o - c).abs() < 1e-5));
+                    }
+                });
+            }
+        });
     }
 }

@@ -1,0 +1,188 @@
+//! Flash-style backward pass for the block-sparse attention kernel.
+//!
+//! The forward kernel ([`crate::kernel::sparse_forward_with_stats`])
+//! never materialises the `n × n` probability matrix; neither does the
+//! backward. Instead it **recomputes** each probability from the saved
+//! streaming-softmax row statistics — `p_ij = exp(q_i·k_j·scale − m_i) / l_i`
+//! — while walking exactly the same [`BlockCsr`] gather structure as the
+//! forward, and accumulates
+//!
+//! ```text
+//! δ_i   = dO_i · O_i                      (the flash-attention rowsum trick)
+//! dV_j += p_ij · dO_i
+//! dS_ij = p_ij · (dO_i · v_j − δ_i)
+//! dQ_i += dS_ij · scale · k_j
+//! dK_j += dS_ij · scale · q_i
+//! ```
+//!
+//! Work is O(n · attended_blocks · block · d), the same asymptotics as
+//! the forward. Parallelism mirrors the forward driver: one task per
+//! `(batch, head)` problem, so the dK/dV scatter never races — within a
+//! head problem query blocks are processed sequentially.
+
+use crate::kernel::layout::BlockCsr;
+use crate::kernel::{dot, HeadViews};
+
+/// Reusable per-thread scratch for [`sparse_attention_backward`]: the
+/// per-row `δ = dO·O` values of the current query block. Grown on
+/// demand, never shrunk; lives in the kernel pool's per-thread arena.
+#[derive(Debug, Default)]
+pub struct AttnGradScratch {
+    delta: Vec<f32>,
+}
+
+impl AttnGradScratch {
+    /// Fresh empty scratch (buffers grow on first use).
+    pub fn new() -> Self {
+        AttnGradScratch::default()
+    }
+}
+
+/// Backward of block-sparse attention for one `[n, head_dim]` head.
+///
+/// Inputs: the forward's Q/K/V views (with the same key-validity mask),
+/// the forward output `o`, the upstream gradient `d_o` (both
+/// `[n, head_dim]`), and the saved softmax row statistics `m`/`l`
+/// (`[n]`, from [`crate::kernel::sparse_forward_with_stats`]). Writes
+/// `dq`/`dk`/`dv` (`[n, head_dim]`, zeroed here first). Rows that saw
+/// no admissible key (`l ≤ 0`) contribute nothing, matching the
+/// forward's all-zero output for them.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_attention_backward(
+    x: &HeadViews<'_>,
+    o: &[f32],
+    d_o: &[f32],
+    m: &[f32],
+    l: &[f32],
+    head_dim: usize,
+    layout: &BlockCsr,
+    scratch: &mut AttnGradScratch,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    let n = layout.seq_len();
+    let b = layout.block;
+    x.check(n, head_dim);
+    assert_eq!(o.len(), n * head_dim, "o must be [n, head_dim]");
+    assert_eq!(d_o.len(), n * head_dim, "d_o must be [n, head_dim]");
+    assert_eq!(m.len(), n, "m must be [n]");
+    assert_eq!(l.len(), n, "l must be [n]");
+    assert_eq!(dq.len(), n * head_dim, "dq must be [n, head_dim]");
+    assert_eq!(dk.len(), n * head_dim, "dk must be [n, head_dim]");
+    assert_eq!(dv.len(), n * head_dim, "dv must be [n, head_dim]");
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    dq.fill(0.0);
+    dk.fill(0.0);
+    dv.fill(0.0);
+    scratch.delta.resize(b, 0.0);
+    for qb in 0..layout.nb {
+        for i in 0..b {
+            let qi = qb * b + i;
+            let row = qi * head_dim..(qi + 1) * head_dim;
+            scratch.delta[i] = dot(&d_o[row.clone()], &o[row]);
+        }
+        for &kb in layout.row(qb) {
+            for i in 0..b {
+                let qi = qb * b + i;
+                let li = l[qi];
+                if li <= 0.0 {
+                    continue; // fully masked row: forward output was zero
+                }
+                let mi = m[qi];
+                let delta = scratch.delta[i];
+                let q_row = &x.q[qi * head_dim..(qi + 1) * head_dim];
+                let do_row = &d_o[qi * head_dim..(qi + 1) * head_dim];
+                for jj in 0..b {
+                    let kj = kb * b + jj;
+                    if let Some(mask) = x.key_valid {
+                        if mask[kj] <= 0.0 {
+                            continue;
+                        }
+                    }
+                    let k_row = &x.k[kj * head_dim..(kj + 1) * head_dim];
+                    let s = dot(q_row, k_row) * scale;
+                    let p = (s - mi).exp() / li;
+                    if p == 0.0 {
+                        continue; // fully underflowed: no forward contribution
+                    }
+                    let v_row = &x.v[kj * head_dim..(kj + 1) * head_dim];
+                    for (dvj, &g) in dv[kj * head_dim..(kj + 1) * head_dim].iter_mut().zip(do_row) {
+                        *dvj += p * g;
+                    }
+                    let dp = dot(do_row, v_row);
+                    let ds = p * (dp - delta) * scale;
+                    for (dqi, &kv) in dq[qi * head_dim..(qi + 1) * head_dim].iter_mut().zip(k_row) {
+                        *dqi += ds * kv;
+                    }
+                    for (dkj, &qv) in dk[kj * head_dim..(kj + 1) * head_dim].iter_mut().zip(q_row) {
+                        *dkj += ds * qv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::PatternSpec;
+    use crate::config::AttnVariant;
+    use crate::kernel::sparse::{sparse_forward_with_stats, SparseScratch};
+    use crate::util::Rng;
+
+    /// With V constant and all keys valid, attention output is that
+    /// constant for every row, independent of Q and K — so dQ and dK
+    /// must vanish, and dV's per-key total weight must sum to the
+    /// number of rows attending it.
+    #[test]
+    fn constant_values_zero_qk_gradients() {
+        let spec = PatternSpec {
+            variant: AttnVariant::BigBirdItc,
+            nb: 4,
+            global_blocks: 1,
+            window_blocks: 1,
+            random_blocks: 1,
+            seed: 2,
+        };
+        let layout = BlockCsr::compile(&spec, 4);
+        let (n, d) = (layout.seq_len(), 8);
+        let mut rng = Rng::new(11);
+        let q: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let v = vec![0.7f32; n * d];
+        let x = HeadViews { q: &q, k: &k, v: &v, key_valid: None };
+        let mut out = vec![0.0f32; n * d];
+        let mut m = vec![0.0f32; n];
+        let mut l = vec![0.0f32; n];
+        sparse_forward_with_stats(&x, d, &layout, &mut SparseScratch::new(), &mut out, &mut m, &mut l);
+        let d_o = vec![1.0f32; n * d];
+        let (mut dq, mut dk, mut dv) = (vec![0.0f32; n * d], vec![0.0f32; n * d], vec![0.0f32; n * d]);
+        sparse_attention_backward(
+            &x,
+            &out,
+            &d_o,
+            &m,
+            &l,
+            d,
+            &layout,
+            &mut AttnGradScratch::new(),
+            &mut dq,
+            &mut dk,
+            &mut dv,
+        );
+        for (i, (&a, &b)) in dq.iter().zip(&dk).enumerate() {
+            assert!(a.abs() < 1e-4, "dq[{i}] = {a}");
+            assert!(b.abs() < 1e-4, "dk[{i}] = {b}");
+        }
+        // dV conservation: the total probability mass scattered into dV
+        // equals one unit per live query row (d_o is all-ones).
+        let total: f32 = dv.iter().sum();
+        let live_rows = l.iter().filter(|&&x| x > 0.0).count();
+        assert!(
+            (total - (live_rows * d) as f32).abs() < 1e-2,
+            "dv mass {total} vs {live_rows} rows × {d}"
+        );
+    }
+}

@@ -1,0 +1,103 @@
+//! Masked-LM loss: softmax cross-entropy over the vocabulary at the
+//! masked positions only (`weights > 0`), averaged by total mask
+//! weight — the same objective the AOT `train_*` artifacts optimise.
+
+/// Softmax cross-entropy with label masking.
+///
+/// `logits` is `[rows, vocab]`, `labels`/`weights` are `[rows]`
+/// (weights are 1.0 at predicted positions, 0.0 elsewhere — padding and
+/// unmasked tokens contribute nothing). Returns the mean loss over
+/// weighted positions (in nats; `ln(vocab)` at uniform logits) and
+/// `d_logits` scaled by `weight / Σweights`, so the gradient is of the
+/// *mean* loss. A batch with zero mask weight yields loss 0 and zero
+/// gradients.
+pub fn masked_xent(logits: &[f32], labels: &[i32], weights: &[f32], vocab: usize) -> (f32, Vec<f32>) {
+    let rows = labels.len();
+    assert_eq!(logits.len(), rows * vocab, "logits must be [rows, vocab]");
+    assert_eq!(weights.len(), rows, "weights must be [rows]");
+    let mut d = vec![0.0f32; logits.len()];
+    let total_w: f64 = weights.iter().map(|&w| w as f64).sum();
+    if total_w <= 0.0 {
+        return (0.0, d);
+    }
+    let inv_w = 1.0 / total_w;
+    let mut loss = 0.0f64;
+    for r in 0..rows {
+        let w = weights[r];
+        if w <= 0.0 {
+            continue;
+        }
+        let row = &logits[r * vocab..(r + 1) * vocab];
+        let maxv = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut lse = 0.0f64;
+        for &x in row {
+            lse += ((x - maxv) as f64).exp();
+        }
+        let log_z = lse.ln() + maxv as f64;
+        let label = labels[r].rem_euclid(vocab as i32) as usize;
+        loss += w as f64 * (log_z - row[label] as f64);
+        let scale = w as f64 * inv_w;
+        let d_row = &mut d[r * vocab..(r + 1) * vocab];
+        for (j, dst) in d_row.iter_mut().enumerate() {
+            let p = ((row[j] - maxv) as f64).exp() / lse;
+            let target = if j == label { 1.0 } else { 0.0 };
+            *dst = ((p - target) * scale) as f32;
+        }
+    }
+    ((loss * inv_w) as f32, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_logits_give_ln_vocab_and_centered_grads() {
+        let (rows, vocab) = (4usize, 32usize);
+        let logits = vec![0.25f32; rows * vocab];
+        let labels = vec![3i32; rows];
+        let weights = vec![1.0f32; rows];
+        let (loss, d) = masked_xent(&logits, &labels, &weights, vocab);
+        assert!((loss - (vocab as f32).ln()).abs() < 1e-4, "loss {loss}");
+        // per-row gradients sum to zero (softmax minus one-hot)
+        for r in 0..rows {
+            let s: f32 = d[r * vocab..(r + 1) * vocab].iter().sum();
+            assert!(s.abs() < 1e-5, "row {r} grad sum {s}");
+            // the label coordinate is the only negative one
+            for (j, &g) in d[r * vocab..(r + 1) * vocab].iter().enumerate() {
+                if j == 3 {
+                    assert!(g < 0.0, "label grad must be negative");
+                } else {
+                    assert!(g > 0.0, "non-label grad must be positive");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_weights_are_ignored_entirely() {
+        let (rows, vocab) = (3usize, 8usize);
+        let logits: Vec<f32> = (0..rows * vocab).map(|i| i as f32 * 0.01).collect();
+        let labels = vec![1i32; rows];
+        let mut weights = vec![0.0f32; rows];
+        let (loss, d) = masked_xent(&logits, &labels, &weights, vocab);
+        assert_eq!(loss, 0.0);
+        assert!(d.iter().all(|&g| g == 0.0));
+        // one live row: loss equals that row's xent, other rows stay zero
+        weights[1] = 1.0;
+        let (_, d) = masked_xent(&logits, &labels, &weights, vocab);
+        assert!(d[..vocab].iter().all(|&g| g == 0.0), "dead row 0 must have zero grads");
+        assert!(d[vocab..2 * vocab].iter().any(|&g| g != 0.0), "live row must have grads");
+    }
+
+    #[test]
+    fn confident_correct_prediction_has_low_loss() {
+        let vocab = 16usize;
+        let mut logits = vec![0.0f32; vocab];
+        logits[5] = 12.0;
+        let (loss, _) = masked_xent(&logits, &[5], &[1.0], vocab);
+        assert!(loss < 0.01, "loss {loss}");
+        let (wrong, _) = masked_xent(&logits, &[6], &[1.0], vocab);
+        assert!(wrong > 5.0, "loss {wrong}");
+    }
+}

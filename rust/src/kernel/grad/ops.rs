@@ -1,0 +1,253 @@
+//! Forward-with-stats and backward implementations of the dense ops the
+//! native model is built from: matmul (with transposed variants for the
+//! backward), pre-LN layer norm, tanh-GELU, and bias/column-sum
+//! helpers. Training and serving forwards share **one implementation**
+//! of each op ([`layernorm_fwd`] is the canonical layer norm, which
+//! `kernel::model::layernorm` delegates to; [`gelu_fwd`] delegates to
+//! the canonical `kernel::model::gelu`), so the training forward is
+//! bit-identical to the serving forward by construction.
+
+/// `C[m,k] = A[m,n] · B[k,n]ᵀ` — the `dX = dY · Wᵀ` shape of a matmul
+/// backward (row-major; `b`'s rows are the contraction axis).
+pub(crate) fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * k];
+    for i in 0..m {
+        let a_row = &a[i * n..(i + 1) * n];
+        let o_row = &mut out[i * k..(i + 1) * k];
+        for (j, o) in o_row.iter_mut().enumerate() {
+            let b_row = &b[j * n..(j + 1) * n];
+            *o = a_row.iter().zip(b_row).map(|(&x, &y)| x * y).sum();
+        }
+    }
+    out
+}
+
+/// `acc[k,n] += A[m,k]ᵀ · B[m,n]` — the `dW += Xᵀ · dY` shape of a
+/// matmul backward, accumulating into `acc`.
+pub(crate) fn matmul_tn_acc(a: &[f32], b: &[f32], acc: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(acc.len(), k * n);
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let b_row = &b[i * n..(i + 1) * n];
+        for (p, &av) in a_row.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let acc_row = &mut acc[p * n..(p + 1) * n];
+            for (o, &bv) in acc_row.iter_mut().zip(b_row) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `acc[j] += Σ_rows x[row, j]` — a bias gradient.
+pub(crate) fn add_colsum(x: &[f32], acc: &mut [f32]) {
+    for row in x.chunks(acc.len()) {
+        for (o, &v) in acc.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+}
+
+/// Per-row layer-norm statistics saved by the training forward: the
+/// mean and inverse standard deviation of each `h`-wide row.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct LnStats {
+    pub mean: Vec<f32>,
+    pub inv: Vec<f32>,
+}
+
+const LN_EPS: f32 = 1e-5;
+
+/// Layer norm forward, saving per-row stats — the canonical layer-norm
+/// implementation (`kernel::model::layernorm` delegates here and
+/// discards the stats), so serving and training are bit-equal by
+/// construction.
+pub(crate) fn layernorm_fwd(x: &[f32], gamma: &[f32], beta: &[f32], h: usize) -> (Vec<f32>, LnStats) {
+    let rows = x.len() / h;
+    let mut out = vec![0.0f32; x.len()];
+    let mut stats = LnStats { mean: vec![0.0; rows], inv: vec![0.0; rows] };
+    for (r, (row, o_row)) in x.chunks(h).zip(out.chunks_mut(h)).enumerate() {
+        let mean = row.iter().sum::<f32>() / h as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / h as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for (((o, &v), &g), &b) in o_row.iter_mut().zip(row).zip(gamma).zip(beta) {
+            *o = (v - mean) * inv * g + b;
+        }
+        stats.mean[r] = mean;
+        stats.inv[r] = inv;
+    }
+    (out, stats)
+}
+
+/// Layer-norm backward: returns `dx` and accumulates `dgamma`/`dbeta`.
+/// Standard pre-LN formula per row, with `x̂ = (x − mean)·inv`:
+///
+/// ```text
+/// dx̂ = dy · γ
+/// dx  = inv · (dx̂ − mean_f(dx̂) − x̂ · mean_f(dx̂ · x̂))
+/// dγ += dy · x̂,   dβ += dy
+/// ```
+pub(crate) fn layernorm_bwd(
+    dy: &[f32],
+    x: &[f32],
+    stats: &LnStats,
+    gamma: &[f32],
+    h: usize,
+    dgamma: &mut [f32],
+    dbeta: &mut [f32],
+) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), x.len());
+    let mut dx = vec![0.0f32; x.len()];
+    for (r, ((dy_row, x_row), dx_row)) in
+        dy.chunks(h).zip(x.chunks(h)).zip(dx.chunks_mut(h)).enumerate()
+    {
+        let mean = stats.mean[r];
+        let inv = stats.inv[r];
+        let mut c1 = 0.0f32; // mean of dx̂
+        let mut c2 = 0.0f32; // mean of dx̂ · x̂
+        for j in 0..h {
+            let xhat = (x_row[j] - mean) * inv;
+            let dxhat = dy_row[j] * gamma[j];
+            c1 += dxhat;
+            c2 += dxhat * xhat;
+            dgamma[j] += dy_row[j] * xhat;
+            dbeta[j] += dy_row[j];
+        }
+        c1 /= h as f32;
+        c2 /= h as f32;
+        for j in 0..h {
+            let xhat = (x_row[j] - mean) * inv;
+            let dxhat = dy_row[j] * gamma[j];
+            dx_row[j] = inv * (dxhat - c1 - xhat * c2);
+        }
+    }
+    dx
+}
+
+/// Tanh-approximation GELU forward, out of place — delegates to the
+/// serving `kernel::model::gelu` so the formula exists exactly once
+/// (bit-parity by construction).
+pub(crate) fn gelu_fwd(x: &[f32]) -> Vec<f32> {
+    let mut out = x.to_vec();
+    crate::kernel::model::gelu(&mut out);
+    out
+}
+
+/// GELU backward: `d_pre = d_post · gelu'(pre)` with the tanh
+/// approximation's exact derivative.
+pub(crate) fn gelu_bwd(d_post: &[f32], pre: &[f32]) -> Vec<f32> {
+    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+    d_post
+        .iter()
+        .zip(pre)
+        .map(|(&g, &u)| {
+            let t = (c * (u + 0.044715 * u * u * u)).tanh();
+            let sech2 = 1.0 - t * t;
+            let d = 0.5 * (1.0 + t) + 0.5 * u * sech2 * c * (1.0 + 3.0 * 0.044715 * u * u);
+            g * d
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Naive triple-loop references for the transposed matmuls.
+    #[test]
+    fn transposed_matmuls_match_naive_references() {
+        let (m, n, k) = (5usize, 7usize, 4usize);
+        let mut rng = Rng::new(1);
+        let a = randn(&mut rng, m * n);
+        let b = randn(&mut rng, k * n);
+        let got = matmul_nt(&a, &b, m, n, k);
+        for i in 0..m {
+            for j in 0..k {
+                let want: f32 = (0..n).map(|t| a[i * n + t] * b[j * n + t]).sum();
+                assert!((got[i * k + j] - want).abs() < 1e-5, "nt ({i},{j})");
+            }
+        }
+        let a2 = randn(&mut rng, m * k);
+        let b2 = randn(&mut rng, m * n);
+        let mut acc = vec![0.5f32; k * n];
+        matmul_tn_acc(&a2, &b2, &mut acc, m, k, n);
+        for p in 0..k {
+            for q in 0..n {
+                let want: f32 = 0.5 + (0..m).map(|i| a2[i * k + p] * b2[i * n + q]).sum::<f32>();
+                assert!((acc[p * n + q] - want).abs() < 1e-5, "tn ({p},{q})");
+            }
+        }
+    }
+
+    /// Central-difference check of the layer-norm backward (f32, small
+    /// shapes, generous-but-meaningful tolerance).
+    #[test]
+    fn layernorm_backward_matches_finite_differences() {
+        let (rows, h) = (3usize, 8usize);
+        let mut rng = Rng::new(2);
+        let x = randn(&mut rng, rows * h);
+        let gamma: Vec<f32> = (0..h).map(|_| 1.0 + 0.1 * rng.normal() as f32).collect();
+        let beta = randn(&mut rng, h);
+        let w = randn(&mut rng, rows * h); // loss = Σ w · y
+        let loss = |x: &[f32]| -> f64 {
+            let (y, _) = layernorm_fwd(x, &gamma, &beta, h);
+            y.iter().zip(&w).map(|(&a, &b)| a as f64 * b as f64).sum()
+        };
+        let (_, stats) = layernorm_fwd(&x, &gamma, &beta, h);
+        let mut dg = vec![0.0f32; h];
+        let mut db = vec![0.0f32; h];
+        let dx = layernorm_bwd(&w, &x, &stats, &gamma, h, &mut dg, &mut db);
+        let eps = 1e-2f32;
+        for i in 0..rows * h {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let num = ((loss(&xp) - loss(&xm)) / (2.0 * eps as f64)) as f32;
+            let denom = dx[i].abs().max(num.abs()).max(0.05);
+            assert!(
+                (dx[i] - num).abs() / denom < 2e-2,
+                "dx[{i}]: analytic {} vs numeric {num}",
+                dx[i]
+            );
+        }
+        // dbeta is exactly the column sum of w
+        for j in 0..h {
+            let want: f32 = (0..rows).map(|r| w[r * h + j]).sum();
+            assert!((db[j] - want).abs() < 1e-4, "dbeta[{j}]");
+        }
+    }
+
+    #[test]
+    fn gelu_backward_matches_finite_differences() {
+        let mut rng = Rng::new(3);
+        let pre = randn(&mut rng, 64);
+        let d_post = vec![1.0f32; 64];
+        let grad = gelu_bwd(&d_post, &pre);
+        let eps = 1e-2f32;
+        for (i, &u) in pre.iter().enumerate() {
+            let f = |u: f32| -> f64 {
+                let c = (2.0f64 / std::f64::consts::PI).sqrt();
+                let u = u as f64;
+                0.5 * u * (1.0 + (c * (u + 0.044715 * u * u * u)).tanh())
+            };
+            let num = ((f(u + eps) - f(u - eps)) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (grad[i] - num).abs() < 1e-3,
+                "gelu'[{i}] at {u}: analytic {} vs numeric {num}",
+                grad[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! AdamW with linear learning-rate warmup and global-norm gradient
+//! clipping — the optimizer behind `train --backends native`. Operates
+//! on the flat parameter/gradient vectors produced by
+//! `NativeModel::flatten_params` / [`super::ParamGrads::flatten_into`].
+
+use anyhow::{ensure, Result};
+
+/// Optimizer hyperparameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdamWConfig {
+    /// Peak learning rate (after warmup).
+    pub lr: f32,
+    /// Steps of linear warmup from 0 → `lr` (0 disables warmup).
+    pub warmup_steps: usize,
+    /// Decoupled weight decay coefficient.
+    pub weight_decay: f32,
+    /// Global-L2-norm gradient clip (≤ 0 disables clipping).
+    pub clip_norm: f32,
+    /// First-moment decay.
+    pub beta1: f32,
+    /// Second-moment decay.
+    pub beta2: f32,
+    /// Denominator fuzz.
+    pub eps: f32,
+}
+
+impl Default for AdamWConfig {
+    fn default() -> Self {
+        AdamWConfig {
+            lr: 2e-3,
+            warmup_steps: 10,
+            weight_decay: 0.01,
+            clip_norm: 1.0,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+        }
+    }
+}
+
+/// What one optimizer step did (for logging and the train-step bench).
+#[derive(Clone, Copy, Debug)]
+pub struct StepInfo {
+    /// Learning rate actually applied (post-warmup schedule).
+    pub lr: f32,
+    /// Global gradient L2 norm *before* clipping.
+    pub grad_norm: f64,
+    /// True when the clip rescaled the gradient.
+    pub clipped: bool,
+}
+
+/// AdamW state over one flat parameter vector.
+pub struct AdamW {
+    cfg: AdamWConfig,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    step: usize,
+}
+
+impl AdamW {
+    /// Fresh state for `n` parameters.
+    pub fn new(n: usize, cfg: AdamWConfig) -> Self {
+        AdamW { cfg, m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+    }
+
+    /// Hyperparameters.
+    pub fn config(&self) -> &AdamWConfig {
+        &self.cfg
+    }
+
+    /// Completed optimizer steps.
+    pub fn step_count(&self) -> usize {
+        self.step
+    }
+
+    /// First-moment state (for checkpointing).
+    pub fn first_moment(&self) -> &[f32] {
+        &self.m
+    }
+
+    /// Second-moment state (for checkpointing).
+    pub fn second_moment(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// Restore state from a checkpoint.
+    pub fn restore(&mut self, m: Vec<f32>, v: Vec<f32>, step: usize) -> Result<()> {
+        ensure!(
+            m.len() == self.m.len() && v.len() == self.v.len(),
+            "optimizer state size mismatch: checkpoint has m={}, v={}, expected {}",
+            m.len(),
+            v.len(),
+            self.m.len()
+        );
+        self.m = m;
+        self.v = v;
+        self.step = step;
+        Ok(())
+    }
+
+    /// Clip `grads` to the configured global norm (in place), then apply
+    /// one AdamW update to `params` with linear-warmup learning rate and
+    /// bias-corrected moments.
+    pub fn step(&mut self, params: &mut [f32], grads: &mut [f32]) -> StepInfo {
+        assert_eq!(params.len(), self.m.len(), "params length changed under the optimizer");
+        assert_eq!(grads.len(), self.m.len(), "grads length changed under the optimizer");
+        let grad_norm = {
+            let mut s = 0.0f64;
+            for &g in grads.iter() {
+                s += g as f64 * g as f64;
+            }
+            s.sqrt()
+        };
+        let mut clipped = false;
+        if self.cfg.clip_norm > 0.0 && grad_norm > self.cfg.clip_norm as f64 {
+            let scale = (self.cfg.clip_norm as f64 / grad_norm) as f32;
+            for g in grads.iter_mut() {
+                *g *= scale;
+            }
+            clipped = true;
+        }
+        self.step += 1;
+        let t = self.step;
+        let warm = if self.cfg.warmup_steps > 0 {
+            (t as f32 / self.cfg.warmup_steps as f32).min(1.0)
+        } else {
+            1.0
+        };
+        let lr = self.cfg.lr * warm;
+        let b1 = self.cfg.beta1;
+        let b2 = self.cfg.beta2;
+        let b1c = 1.0 - b1.powi(t as i32);
+        let b2c = 1.0 - b2.powi(t as i32);
+        let wd = self.cfg.weight_decay;
+        for i in 0..params.len() {
+            let g = grads[i];
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
+            let m_hat = self.m[i] / b1c;
+            let v_hat = self.v[i] / b2c;
+            params[i] -= lr * (m_hat / (v_hat.sqrt() + self.cfg.eps) + wd * params[i]);
+        }
+        StepInfo { lr, grad_norm, clipped }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly_to_peak() {
+        let cfg = AdamWConfig { lr: 1.0, warmup_steps: 4, weight_decay: 0.0, ..Default::default() };
+        let mut opt = AdamW::new(1, cfg);
+        let mut p = vec![0.0f32];
+        let lrs: Vec<f32> = (0..6)
+            .map(|_| {
+                let mut g = vec![1.0f32];
+                opt.step(&mut p, &mut g).lr
+            })
+            .collect();
+        assert!((lrs[0] - 0.25).abs() < 1e-6, "{lrs:?}");
+        assert!((lrs[1] - 0.5).abs() < 1e-6, "{lrs:?}");
+        assert!((lrs[3] - 1.0).abs() < 1e-6, "{lrs:?}");
+        assert!((lrs[5] - 1.0).abs() < 1e-6, "post-warmup lr must stay at peak: {lrs:?}");
+    }
+
+    #[test]
+    fn clipping_caps_the_global_norm() {
+        let cfg = AdamWConfig { clip_norm: 1.0, ..Default::default() };
+        let mut opt = AdamW::new(2, cfg);
+        let mut p = vec![0.0f32; 2];
+        let mut g = vec![3.0f32, 4.0]; // norm 5
+        let info = opt.step(&mut p, &mut g);
+        assert!((info.grad_norm - 5.0).abs() < 1e-9, "{info:?}");
+        assert!(info.clipped);
+        let norm_after: f32 = g.iter().map(|&x| x * x).sum::<f32>().sqrt();
+        assert!((norm_after - 1.0).abs() < 1e-5, "clipped norm {norm_after}");
+        // small gradients pass through untouched
+        let mut g = vec![0.1f32, 0.1];
+        assert!(!opt.step(&mut p, &mut g).clipped);
+    }
+
+    #[test]
+    fn steps_move_params_against_the_gradient_and_decay_weights() {
+        let cfg = AdamWConfig {
+            lr: 0.1,
+            warmup_steps: 0,
+            weight_decay: 0.0,
+            clip_norm: 0.0,
+            ..Default::default()
+        };
+        let mut opt = AdamW::new(1, cfg);
+        let mut p = vec![1.0f32];
+        for _ in 0..10 {
+            let mut g = vec![2.0f32]; // constant positive gradient
+            opt.step(&mut p, &mut g);
+        }
+        assert!(p[0] < 1.0 - 0.5, "param must descend: {}", p[0]);
+        assert_eq!(opt.step_count(), 10);
+
+        // pure decay: zero gradient shrinks weights toward zero
+        let cfg = AdamWConfig {
+            lr: 0.1,
+            warmup_steps: 0,
+            weight_decay: 0.5,
+            clip_norm: 0.0,
+            ..Default::default()
+        };
+        let mut opt = AdamW::new(1, cfg);
+        let mut p = vec![1.0f32];
+        let mut g = vec![0.0f32];
+        opt.step(&mut p, &mut g);
+        assert!((p[0] - 0.95).abs() < 1e-6, "decayed to {}", p[0]);
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_state() {
+        let mut opt = AdamW::new(4, AdamWConfig::default());
+        assert!(opt.restore(vec![0.0; 3], vec![0.0; 4], 1).is_err());
+        assert!(opt.restore(vec![0.0; 4], vec![0.0; 4], 7).is_ok());
+        assert_eq!(opt.step_count(), 7);
+    }
+}

@@ -1,0 +1,158 @@
+//! [`ParamGrads`]: gradient accumulators mirroring the
+//! [`NativeModel`](crate::kernel::NativeModel) parameter layout
+//! tensor-for-tensor, flattening to the **same canonical order** as
+//! `NativeModel::flatten_params` (embed, then per layer
+//! `ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b, w1, b1, w2, b2`, then
+//! `ln_f_g, ln_f_b`) so the optimizer and checkpoints see one flat
+//! vector for both parameters and gradients.
+
+use crate::config::ModelConfig;
+
+/// Per-layer gradient tensors (same shapes as the layer's parameters).
+#[derive(Clone, Debug)]
+pub struct LayerGrads {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub wq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+/// Whole-model gradient accumulator. The tied embedding receives both
+/// the input-embedding and the output-head contributions in `embed`.
+#[derive(Clone, Debug)]
+pub struct ParamGrads {
+    pub embed: Vec<f32>,
+    pub layers: Vec<LayerGrads>,
+    pub ln_f_g: Vec<f32>,
+    pub ln_f_b: Vec<f32>,
+}
+
+impl ParamGrads {
+    /// Zeroed gradients shaped for `cfg`.
+    pub fn new(cfg: &ModelConfig) -> Self {
+        let h = cfg.hidden;
+        let layers = (0..cfg.layers)
+            .map(|_| LayerGrads {
+                ln1_g: vec![0.0; h],
+                ln1_b: vec![0.0; h],
+                wq: vec![0.0; h * h],
+                wk: vec![0.0; h * h],
+                wv: vec![0.0; h * h],
+                wo: vec![0.0; h * h],
+                ln2_g: vec![0.0; h],
+                ln2_b: vec![0.0; h],
+                w1: vec![0.0; h * cfg.ffn],
+                b1: vec![0.0; cfg.ffn],
+                w2: vec![0.0; cfg.ffn * h],
+                b2: vec![0.0; h],
+            })
+            .collect();
+        ParamGrads {
+            embed: vec![0.0; cfg.vocab * h],
+            layers,
+            ln_f_g: vec![0.0; h],
+            ln_f_b: vec![0.0; h],
+        }
+    }
+
+    /// Gradient tensors in the canonical flattening order.
+    fn tensors(&self) -> Vec<&Vec<f32>> {
+        let mut out = Vec::with_capacity(2 + 12 * self.layers.len() + 1);
+        out.push(&self.embed);
+        for l in &self.layers {
+            out.push(&l.ln1_g);
+            out.push(&l.ln1_b);
+            out.push(&l.wq);
+            out.push(&l.wk);
+            out.push(&l.wv);
+            out.push(&l.wo);
+            out.push(&l.ln2_g);
+            out.push(&l.ln2_b);
+            out.push(&l.w1);
+            out.push(&l.b1);
+            out.push(&l.w2);
+            out.push(&l.b2);
+        }
+        out.push(&self.ln_f_g);
+        out.push(&self.ln_f_b);
+        out
+    }
+
+    /// Reset every accumulator to zero (buffers are kept).
+    pub fn zero(&mut self) {
+        self.embed.fill(0.0);
+        for l in &mut self.layers {
+            l.ln1_g.fill(0.0);
+            l.ln1_b.fill(0.0);
+            l.wq.fill(0.0);
+            l.wk.fill(0.0);
+            l.wv.fill(0.0);
+            l.wo.fill(0.0);
+            l.ln2_g.fill(0.0);
+            l.ln2_b.fill(0.0);
+            l.w1.fill(0.0);
+            l.b1.fill(0.0);
+            l.w2.fill(0.0);
+            l.b2.fill(0.0);
+        }
+        self.ln_f_g.fill(0.0);
+        self.ln_f_b.fill(0.0);
+    }
+
+    /// Total gradient element count (equals the model's `param_count`).
+    pub fn len(&self) -> usize {
+        self.tensors().iter().map(|t| t.len()).sum()
+    }
+
+    /// True when the accumulator holds no tensors (never the case for a
+    /// real config; provided for API completeness).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Flatten into `out` (cleared first) in the canonical order shared
+    /// with `NativeModel::flatten_params`.
+    pub fn flatten_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        for t in self.tensors() {
+            out.extend_from_slice(t);
+        }
+    }
+
+    /// Global L2 norm of the gradient (f64 accumulation).
+    pub fn global_norm(&self) -> f64 {
+        let mut sum = 0.0f64;
+        for t in self.tensors() {
+            for &g in t.iter() {
+                sum += g as f64 * g as f64;
+            }
+        }
+        sum.sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn flat_length_matches_model_param_count() {
+        let cfg = ModelConfig::tiny();
+        let grads = ParamGrads::new(&cfg);
+        assert_eq!(grads.len(), crate::kernel::model::param_count_for(&cfg));
+        let mut flat = Vec::new();
+        grads.flatten_into(&mut flat);
+        assert_eq!(flat.len(), grads.len());
+        assert!(!grads.is_empty());
+        assert_eq!(grads.global_norm(), 0.0);
+    }
+}

@@ -1,0 +1,348 @@
+//! Whole-model reverse-mode differentiation for [`NativeModel`]: a
+//! training forward that records an activation tape, and a backward
+//! that walks it in reverse, accumulating into a [`ParamGrads`] mirror
+//! of the parameter layout.
+//!
+//! The training forward performs **the same arithmetic in the same
+//! order** as `NativeModel::forward` (it shares the serving helpers in
+//! `kernel::model` and the batch attention driver), so its logits are
+//! bit-identical to serving — a checkpoint trained here and a serving
+//! forward agree exactly. The only additions are activation saves and
+//! the streaming-softmax statistics from
+//! [`sparse_forward_batch_training`].
+//!
+//! Backward structure (per layer, in reverse):
+//! tied-logits head → final LN → FFN (`w2`/GELU/`w1`/LN2, residual) →
+//! attention (`wo`/merge → flash-style sparse backward → `wq,wk,wv`/LN1,
+//! residual) → token embedding scatter. Positions are sinusoidal
+//! constants and receive no gradient.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::kernel::driver::{sparse_backward_batch, sparse_forward_batch_training};
+use crate::kernel::layout::BlockCsr;
+use crate::kernel::model::{
+    add_bias, add_in_place, gelu, matmul, merge_heads, split_heads, NativeModel,
+};
+use crate::kernel::HeadViews;
+
+use super::ops::{
+    add_colsum, gelu_bwd, gelu_fwd, layernorm_bwd, layernorm_fwd, matmul_nt, matmul_tn_acc,
+    LnStats,
+};
+use super::params::ParamGrads;
+
+/// Activations one layer saves for its backward pass.
+struct LayerTape {
+    /// Residual-stream input to the layer, `[rows, h]`.
+    x_in: Vec<f32>,
+    ln1: LnStats,
+    /// Post-LN1 activations (input to the Q/K/V projections).
+    xn1: Vec<f32>,
+    /// Split-head projections, `[batch, heads, n, dh]`.
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Attention output `O`, `[batch, heads, n, dh]`.
+    attn_out: Vec<f32>,
+    /// Streaming-softmax row statistics, `[batch × heads × n]` each.
+    stat_m: Vec<f32>,
+    stat_l: Vec<f32>,
+    /// Merged heads (input to the `wo` projection), `[rows, h]`.
+    merged: Vec<f32>,
+    /// Residual stream after the attention block (input to LN2).
+    x_mid: Vec<f32>,
+    ln2: LnStats,
+    xn2: Vec<f32>,
+    /// FFN pre-GELU activations, `[rows, ffn]`.
+    ffn_pre: Vec<f32>,
+}
+
+/// The recorded forward pass: everything [`backward`] needs.
+pub struct Tape {
+    batch: usize,
+    seq: usize,
+    tokens: Vec<i32>,
+    kv_valid: Option<Vec<f32>>,
+    layout: Arc<BlockCsr>,
+    layers: Vec<LayerTape>,
+    /// Residual stream entering the final LN.
+    x_final: Vec<f32>,
+    ln_f: LnStats,
+    /// Post-final-LN activations (input to the tied logits head).
+    xn_f: Vec<f32>,
+}
+
+/// Training forward: `[batch, seq]` token ids (+ optional key-validity
+/// mask) → `[batch, seq, vocab]` logits plus the activation [`Tape`].
+/// Logits are bit-identical to [`NativeModel::forward`] on the same
+/// inputs.
+pub fn forward_tape(
+    model: &mut NativeModel,
+    tokens: &[i32],
+    kv_valid: Option<&[f32]>,
+    batch: usize,
+    seq_len: usize,
+) -> Result<(Vec<f32>, Tape)> {
+    let rows = batch * seq_len;
+    ensure!(tokens.len() == rows, "tokens must be [batch={batch}, seq_len={seq_len}]");
+    if let Some(mask) = kv_valid {
+        ensure!(mask.len() == rows, "kv_valid must be [batch={batch}, seq_len={seq_len}]");
+    }
+    let layout = model.layout(seq_len)?;
+    let positions = model.positions(seq_len);
+    let (h, heads) = (model.cfg.hidden, model.cfg.heads);
+    let (vocab, ffn) = (model.cfg.vocab, model.cfg.ffn);
+    let dh = h / heads;
+
+    // token embedding + sinusoidal positions (same loop as serving)
+    let mut x = vec![0.0f32; rows * h];
+    for (r, &tok) in tokens.iter().enumerate() {
+        let t = tok.rem_euclid(vocab as i32) as usize;
+        let dst = &mut x[r * h..(r + 1) * h];
+        let emb = &model.embed[t * h..(t + 1) * h];
+        let pos = &positions[(r % seq_len) * h..(r % seq_len + 1) * h];
+        for ((d, &e), &p) in dst.iter_mut().zip(emb).zip(pos) {
+            *d = e + p;
+        }
+    }
+
+    let mut layer_tapes = Vec::with_capacity(model.cfg.layers);
+    for layer in &model.layers {
+        let x_in = x.clone();
+        // pre-LN block-sparse attention, residual
+        let (xn1, ln1) = layernorm_fwd(&x, &layer.ln1_g, &layer.ln1_b, h);
+        let q = split_heads(&matmul(&xn1, &layer.wq, rows, h, h), batch, seq_len, heads, dh);
+        let k = split_heads(&matmul(&xn1, &layer.wk, rows, h, h), batch, seq_len, heads, dh);
+        let v = split_heads(&matmul(&xn1, &layer.wv, rows, h, h), batch, seq_len, heads, dh);
+        let mut attn = vec![0.0f32; rows * h];
+        let mut stat_m = vec![0.0f32; batch * heads * seq_len];
+        let mut stat_l = vec![0.0f32; batch * heads * seq_len];
+        let hv = HeadViews { q: &q, k: &k, v: &v, key_valid: kv_valid };
+        sparse_forward_batch_training(
+            &hv, batch, heads, dh, &layout, &mut attn, &mut stat_m, &mut stat_l,
+        );
+        let merged = merge_heads(&attn, batch, seq_len, heads, dh);
+        let proj = matmul(&merged, &layer.wo, rows, h, h);
+        add_in_place(&mut x, &proj);
+        let x_mid = x.clone();
+
+        // pre-LN GELU FFN, residual
+        let (xn2, ln2) = layernorm_fwd(&x, &layer.ln2_g, &layer.ln2_b, h);
+        let mut ffn_pre = matmul(&xn2, &layer.w1, rows, h, ffn);
+        add_bias(&mut ffn_pre, &layer.b1);
+        let mut mid = ffn_pre.clone();
+        gelu(&mut mid);
+        let mut down = matmul(&mid, &layer.w2, rows, ffn, h);
+        add_bias(&mut down, &layer.b2);
+        add_in_place(&mut x, &down);
+
+        layer_tapes.push(LayerTape {
+            x_in,
+            ln1,
+            xn1,
+            q,
+            k,
+            v,
+            attn_out: attn,
+            stat_m,
+            stat_l,
+            merged,
+            x_mid,
+            ln2,
+            xn2,
+            ffn_pre,
+        });
+    }
+
+    // final LN + tied-embedding logits
+    let (xn_f, ln_f) = layernorm_fwd(&x, &model.ln_f_g, &model.ln_f_b, h);
+    let logits = matmul(&xn_f, &model.embed_t, rows, h, vocab);
+    let tape = Tape {
+        batch,
+        seq: seq_len,
+        tokens: tokens.to_vec(),
+        kv_valid: kv_valid.map(|m| m.to_vec()),
+        layout,
+        layers: layer_tapes,
+        x_final: x,
+        ln_f,
+        xn_f,
+    };
+    Ok((logits, tape))
+}
+
+/// Backward over a recorded [`Tape`]: `d_logits` (`[rows, vocab]`, from
+/// [`super::masked_xent`]) → parameter gradients. `grads` is zeroed
+/// first, then every parameter's gradient — including both tied uses of
+/// the embedding — is accumulated.
+pub fn backward(model: &NativeModel, tape: &Tape, d_logits: &[f32], grads: &mut ParamGrads) {
+    let (batch, seq) = (tape.batch, tape.seq);
+    let rows = batch * seq;
+    let (h, heads) = (model.cfg.hidden, model.cfg.heads);
+    let (vocab, ffn) = (model.cfg.vocab, model.cfg.ffn);
+    let dh = h / heads;
+    assert_eq!(d_logits.len(), rows * vocab, "d_logits must be [rows, vocab]");
+    assert_eq!(tape.layers.len(), model.layers.len(), "tape/model layer count mismatch");
+    grads.zero();
+
+    // tied logits head: logits = xn_f · embedᵀ
+    //   d_xn_f = d_logits · embed            [rows, h]
+    //   d_embed += d_logitsᵀ · xn_f          [vocab, h]
+    let d_xn_f = matmul(d_logits, &model.embed, rows, vocab, h);
+    matmul_tn_acc(d_logits, &tape.xn_f, &mut grads.embed, rows, vocab, h);
+
+    // final LN
+    let mut d = layernorm_bwd(
+        &d_xn_f,
+        &tape.x_final,
+        &tape.ln_f,
+        &model.ln_f_g,
+        h,
+        &mut grads.ln_f_g,
+        &mut grads.ln_f_b,
+    );
+
+    let kv_valid = tape.kv_valid.as_deref();
+    for (l, lt) in tape.layers.iter().enumerate().rev() {
+        let layer = &model.layers[l];
+        let g = &mut grads.layers[l];
+
+        // ---- FFN block: x_out = x_mid + (gelu(xn2·w1 + b1))·w2 + b2
+        let post = gelu_fwd(&lt.ffn_pre);
+        add_colsum(&d, &mut g.b2);
+        matmul_tn_acc(&post, &d, &mut g.w2, rows, ffn, h);
+        let d_post = matmul_nt(&d, &layer.w2, rows, h, ffn);
+        let d_pre = gelu_bwd(&d_post, &lt.ffn_pre);
+        add_colsum(&d_pre, &mut g.b1);
+        matmul_tn_acc(&lt.xn2, &d_pre, &mut g.w1, rows, h, ffn);
+        let d_xn2 = matmul_nt(&d_pre, &layer.w1, rows, ffn, h);
+        let mut d_x_mid =
+            layernorm_bwd(&d_xn2, &lt.x_mid, &lt.ln2, &layer.ln2_g, h, &mut g.ln2_g, &mut g.ln2_b);
+        add_in_place(&mut d_x_mid, &d); // residual branch around the FFN
+
+        // ---- attention block: x_mid = x_in + merge(attn)·wo
+        matmul_tn_acc(&lt.merged, &d_x_mid, &mut g.wo, rows, h, h);
+        let d_merged = matmul_nt(&d_x_mid, &layer.wo, rows, h, h);
+        let d_attn = split_heads(&d_merged, batch, seq, heads, dh);
+        let vol = batch * heads * seq * dh;
+        let mut dq = vec![0.0f32; vol];
+        let mut dk = vec![0.0f32; vol];
+        let mut dv = vec![0.0f32; vol];
+        let hv = HeadViews { q: &lt.q, k: &lt.k, v: &lt.v, key_valid: kv_valid };
+        sparse_backward_batch(
+            &hv,
+            &lt.attn_out,
+            &d_attn,
+            &lt.stat_m,
+            &lt.stat_l,
+            batch,
+            heads,
+            dh,
+            &tape.layout,
+            &mut dq,
+            &mut dk,
+            &mut dv,
+        );
+        let d_qp = merge_heads(&dq, batch, seq, heads, dh);
+        let d_kp = merge_heads(&dk, batch, seq, heads, dh);
+        let d_vp = merge_heads(&dv, batch, seq, heads, dh);
+        matmul_tn_acc(&lt.xn1, &d_qp, &mut g.wq, rows, h, h);
+        matmul_tn_acc(&lt.xn1, &d_kp, &mut g.wk, rows, h, h);
+        matmul_tn_acc(&lt.xn1, &d_vp, &mut g.wv, rows, h, h);
+        let mut d_xn1 = matmul_nt(&d_qp, &layer.wq, rows, h, h);
+        add_in_place(&mut d_xn1, &matmul_nt(&d_kp, &layer.wk, rows, h, h));
+        add_in_place(&mut d_xn1, &matmul_nt(&d_vp, &layer.wv, rows, h, h));
+        let mut d_x_in =
+            layernorm_bwd(&d_xn1, &lt.x_in, &lt.ln1, &layer.ln1_g, h, &mut g.ln1_g, &mut g.ln1_b);
+        add_in_place(&mut d_x_in, &d_x_mid); // residual branch around attention
+        d = d_x_in;
+    }
+
+    // token embedding scatter (the input-side use of the tied embedding)
+    for (r, &tok) in tape.tokens.iter().enumerate() {
+        let t = tok.rem_euclid(vocab as i32) as usize;
+        let dst = &mut grads.embed[t * h..(t + 1) * h];
+        for (gd, &dd) in dst.iter_mut().zip(&d[r * h..(r + 1) * h]) {
+            *gd += dd;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AttnVariant, ModelConfig};
+    use crate::util::Rng;
+
+    fn tiny_train_cfg() -> ModelConfig {
+        ModelConfig {
+            variant: AttnVariant::BigBirdItc,
+            seq_len: 32,
+            block: 8,
+            global_blocks: 1,
+            window_blocks: 1,
+            random_blocks: 1,
+            layers: 2,
+            heads: 2,
+            hidden: 16,
+            ffn: 32,
+            vocab: 64,
+            batch: 2,
+            attn_seed: 5,
+        }
+    }
+
+    #[test]
+    fn training_forward_is_bit_identical_to_serving_forward() {
+        let cfg = tiny_train_cfg();
+        let (b, s) = (cfg.batch, cfg.seq_len);
+        let mut rng = Rng::new(9);
+        let tokens: Vec<i32> = (0..b * s).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let kv: Vec<f32> = (0..b * s).map(|_| if rng.coin(0.1) { 0.0 } else { 1.0 }).collect();
+        let mut model = NativeModel::new(cfg).unwrap();
+        let serving = model.forward(&tokens, Some(&kv), b, s).unwrap();
+        let (training, _tape) = forward_tape(&mut model, &tokens, Some(&kv), b, s).unwrap();
+        assert_eq!(serving, training, "tape forward must match serving bit-for-bit");
+    }
+
+    #[test]
+    fn backward_produces_finite_nonzero_grads_for_every_tensor() {
+        let cfg = tiny_train_cfg();
+        let (b, s) = (cfg.batch, cfg.seq_len);
+        let vocab = cfg.vocab;
+        let mut rng = Rng::new(4);
+        let tokens: Vec<i32> = (0..b * s).map(|_| rng.below(vocab) as i32).collect();
+        let mut model = NativeModel::new(cfg).unwrap();
+        let (logits, tape) = forward_tape(&mut model, &tokens, None, b, s).unwrap();
+        let labels = tokens.clone();
+        let weights: Vec<f32> = (0..b * s).map(|i| if i % 5 == 0 { 1.0 } else { 0.0 }).collect();
+        let (loss, d_logits) = super::super::masked_xent(&logits, &labels, &weights, vocab);
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+        let mut grads = ParamGrads::new(model.config());
+        backward(&model, &tape, &d_logits, &mut grads);
+        let mut flat = Vec::new();
+        grads.flatten_into(&mut flat);
+        assert!(flat.iter().all(|g| g.is_finite()), "gradients must be finite");
+        assert!(grads.global_norm() > 0.0, "gradient must be nonzero");
+        // spot-check: every per-layer tensor received some gradient
+        for (l, g) in grads.layers.iter().enumerate() {
+            for (name, t) in [
+                ("wq", &g.wq),
+                ("wk", &g.wk),
+                ("wv", &g.wv),
+                ("wo", &g.wo),
+                ("w1", &g.w1),
+                ("w2", &g.w2),
+                ("ln1_g", &g.ln1_g),
+                ("ln2_g", &g.ln2_g),
+            ] {
+                assert!(t.iter().any(|&x| x != 0.0), "layer {l} {name} got no gradient");
+            }
+        }
+        assert!(grads.embed.iter().any(|&x| x != 0.0), "embed got no gradient");
+        assert!(grads.ln_f_g.iter().any(|&x| x != 0.0), "ln_f_g got no gradient");
+    }
+}

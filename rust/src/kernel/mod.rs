@@ -13,35 +13,47 @@
 //! * [`sparse`] — the production kernel: gathered QKᵀ → streaming
 //!   (flash-style) softmax → gathered AV accumulate, with reusable
 //!   [`SparseScratch`] buffers;
-//! * [`driver`] — fork-join fan-out of the `batch × heads` head
-//!   problems over OS threads (`std::thread::scope`; `rayon` is not
-//!   vendored offline);
+//! * [`driver`] — the persistent [`KernelPool`] worker-thread pool
+//!   (per-thread scratch arenas, shared by every caller) and the
+//!   batch fan-out of `batch × heads` head problems over it, for both
+//!   forward and backward;
 //! * [`model`] — a deterministic scaled-down BigBird MLM forward pass
 //!   ([`NativeModel`]) and the engine-worker wrapper
 //!   ([`NativeEngine`]) behind `BackendKind::Native`;
+//! * [`grad`] — reverse-mode gradients: flash-style sparse-attention
+//!   backward, whole-model tape, [`grad::ParamGrads`], masked-LM loss,
+//!   and the [`grad::AdamW`] optimizer powering `train --backends
+//!   native`;
 //! * [`calibrate`] — the self-calibration micro-probe that seeds the
 //!   native backend's roofline from measurements instead of guesses.
 //!
 //! `tests/kernel_parity.rs` property-tests sparse-vs-dense agreement
-//! (≤ 1e-5) across random [`crate::attention::PatternSpec`]s, and
-//! `benches/attention_scaling.rs` measures the sub-quadratic scaling.
+//! (≤ 1e-5) across random [`crate::attention::PatternSpec`]s,
+//! `tests/native_training.rs` gradient-checks the backward subsystem,
+//! and `benches/attention_scaling.rs` measures the sub-quadratic
+//! scaling.
 
 pub mod calibrate;
 pub mod dense;
 pub mod driver;
+pub mod grad;
 pub mod layout;
 pub mod model;
 pub mod sparse;
 
 pub use calibrate::native_roofline;
 pub use dense::dense_reference;
-pub use driver::sparse_forward_batch;
+pub use driver::{
+    sparse_backward_batch, sparse_forward_batch, sparse_forward_batch_training, KernelPool,
+    ScratchArena,
+};
 pub use layout::{BlockCsr, BlockProvenance};
 pub use model::{
-    is_native_artifact, native_artifact_name, native_buckets, parse_native_artifact, NativeEngine,
-    NativeModel, NATIVE_PREFIX,
+    config_fingerprint, is_native_artifact, native_artifact_name, native_buckets,
+    param_count_for, parse_native_artifact, NativeEngine, NativeModel, NATIVE_PARAMS_ARTIFACT,
+    NATIVE_PREFIX,
 };
-pub use sparse::{sparse_forward, SparseScratch};
+pub use sparse::{sparse_forward, sparse_forward_with_stats, SparseScratch};
 
 /// Borrowed Q/K/V (+ optional key-validity mask) views for one kernel
 /// invocation. Per-head entry points take `[n, head_dim]` slices; the

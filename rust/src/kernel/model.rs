@@ -58,20 +58,27 @@ pub fn native_buckets() -> [(usize, usize); 5] {
     [(128, 8), (256, 4), (512, 4), (1024, 2), (2048, 1)]
 }
 
-/// One transformer layer's parameters.
-struct LayerParams {
-    ln1_g: Vec<f32>,
-    ln1_b: Vec<f32>,
-    wq: Vec<f32>,
-    wk: Vec<f32>,
-    wv: Vec<f32>,
-    wo: Vec<f32>,
-    ln2_g: Vec<f32>,
-    ln2_b: Vec<f32>,
-    w1: Vec<f32>,
-    b1: Vec<f32>,
-    w2: Vec<f32>,
-    b2: Vec<f32>,
+/// Artifact name under which the serving stack installs **trained
+/// parameters** on native workers (`EnginePool::load_params` routing
+/// key; carries the native prefix so it reaches the kernel engine).
+pub const NATIVE_PARAMS_ARTIFACT: &str = "native_mlm_params";
+
+/// One transformer layer's parameters. Fields are crate-visible so the
+/// gradient subsystem ([`crate::kernel::grad`]) can read them during
+/// the backward pass.
+pub(crate) struct LayerParams {
+    pub(crate) ln1_g: Vec<f32>,
+    pub(crate) ln1_b: Vec<f32>,
+    pub(crate) wq: Vec<f32>,
+    pub(crate) wk: Vec<f32>,
+    pub(crate) wv: Vec<f32>,
+    pub(crate) wo: Vec<f32>,
+    pub(crate) ln2_g: Vec<f32>,
+    pub(crate) ln2_b: Vec<f32>,
+    pub(crate) w1: Vec<f32>,
+    pub(crate) b1: Vec<f32>,
+    pub(crate) w2: Vec<f32>,
+    pub(crate) b2: Vec<f32>,
 }
 
 /// The native BigBird MLM model: deterministic parameters + per-bucket
@@ -79,14 +86,15 @@ struct LayerParams {
 /// forward passes. `ModelConfig::seq_len`/`batch` are treated as upper
 /// bounds only — each forward pass brings its own `(batch, seq_len)`.
 pub struct NativeModel {
-    cfg: ModelConfig,
+    pub(crate) cfg: ModelConfig,
     /// Token embedding, `[vocab, hidden]`.
-    embed: Vec<f32>,
+    pub(crate) embed: Vec<f32>,
     /// Transposed embedding, `[hidden, vocab]` — the tied output head.
-    embed_t: Vec<f32>,
-    layers: Vec<LayerParams>,
-    ln_f_g: Vec<f32>,
-    ln_f_b: Vec<f32>,
+    /// Derived from `embed`; rebuilt by [`NativeModel::load_flat_params`].
+    pub(crate) embed_t: Vec<f32>,
+    pub(crate) layers: Vec<LayerParams>,
+    pub(crate) ln_f_g: Vec<f32>,
+    pub(crate) ln_f_b: Vec<f32>,
     /// Compiled block layouts keyed by seq_len.
     layouts: HashMap<usize, Arc<BlockCsr>>,
     /// Sinusoidal position tables keyed by seq_len (`[seq_len, hidden]`).
@@ -149,14 +157,10 @@ impl NativeModel {
         &self.cfg
     }
 
-    /// Total learned parameter count (for startup logging).
+    /// Total learned parameter count (for startup logging and the flat
+    /// checkpoint layout).
     pub fn param_count(&self) -> usize {
-        let h = self.cfg.hidden;
-        let per_layer = 4 * h // layer norms
-            + 4 * h * h // q, k, v, o
-            + h * self.cfg.ffn + self.cfg.ffn // w1 + b1
-            + self.cfg.ffn * h + h; // w2 + b2
-        self.cfg.vocab * h + self.cfg.layers * per_layer + 2 * h
+        param_count_for(&self.cfg)
     }
 
     /// Compiled pattern layout for `seq_len` (cached).
@@ -183,7 +187,7 @@ impl NativeModel {
     }
 
     /// Sinusoidal positional table for `seq_len` (cached).
-    fn positions(&mut self, seq_len: usize) -> Arc<Vec<f32>> {
+    pub(crate) fn positions(&mut self, seq_len: usize) -> Arc<Vec<f32>> {
         let h = self.cfg.hidden;
         self.pos
             .entry(seq_len)
@@ -270,13 +274,164 @@ impl NativeModel {
         let xn = layernorm(&x, &self.ln_f_g, &self.ln_f_b, h);
         Ok(matmul(&xn, &self.embed_t, rows, h, vocab))
     }
+
+    /// Learned parameter tensors in the **canonical flattening order**:
+    /// `embed`, then per layer `ln1_g, ln1_b, wq, wk, wv, wo, ln2_g,
+    /// ln2_b, w1, b1, w2, b2`, then `ln_f_g, ln_f_b`. The derived
+    /// `embed_t` is excluded (rebuilt after loads). This order is the
+    /// contract shared with `grad::ParamGrads::flatten_into` and the
+    /// `BBCKPT1` native checkpoint.
+    fn param_tensors(&self) -> Vec<&Vec<f32>> {
+        let mut out = Vec::with_capacity(3 + 12 * self.layers.len());
+        out.push(&self.embed);
+        for l in &self.layers {
+            out.push(&l.ln1_g);
+            out.push(&l.ln1_b);
+            out.push(&l.wq);
+            out.push(&l.wk);
+            out.push(&l.wv);
+            out.push(&l.wo);
+            out.push(&l.ln2_g);
+            out.push(&l.ln2_b);
+            out.push(&l.w1);
+            out.push(&l.b1);
+            out.push(&l.w2);
+            out.push(&l.b2);
+        }
+        out.push(&self.ln_f_g);
+        out.push(&self.ln_f_b);
+        out
+    }
+
+    /// Mutable view of [`NativeModel::param_tensors`] (same order).
+    fn param_tensors_mut(&mut self) -> Vec<&mut Vec<f32>> {
+        let mut out = Vec::with_capacity(3 + 12 * self.layers.len());
+        out.push(&mut self.embed);
+        for l in &mut self.layers {
+            out.push(&mut l.ln1_g);
+            out.push(&mut l.ln1_b);
+            out.push(&mut l.wq);
+            out.push(&mut l.wk);
+            out.push(&mut l.wv);
+            out.push(&mut l.wo);
+            out.push(&mut l.ln2_g);
+            out.push(&mut l.ln2_b);
+            out.push(&mut l.w1);
+            out.push(&mut l.b1);
+            out.push(&mut l.w2);
+            out.push(&mut l.b2);
+        }
+        out.push(&mut self.ln_f_g);
+        out.push(&mut self.ln_f_b);
+        out
+    }
+
+    /// Flatten every learned parameter into one `[param_count]` vector
+    /// in the canonical order (see [`NativeModel::param_tensors`]).
+    pub fn flatten_params(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.param_count());
+        self.flatten_params_into(&mut out);
+        out
+    }
+
+    /// [`NativeModel::flatten_params`] into a reusable buffer (cleared
+    /// first) — the training step's allocation-free path.
+    pub fn flatten_params_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        for t in self.param_tensors() {
+            out.extend_from_slice(t);
+        }
+    }
+
+    /// Install a flat parameter vector (the inverse of
+    /// [`NativeModel::flatten_params`]) and rebuild the tied output
+    /// head. Rejects — with a descriptive error and **without touching
+    /// the current weights** — vectors of the wrong length or containing
+    /// non-finite values, so a partial or mismatched checkpoint can
+    /// never silently serve stale or garbage parameters.
+    pub fn load_flat_params(&mut self, flat: &[f32]) -> Result<()> {
+        let want = self.param_count();
+        ensure!(
+            flat.len() == want,
+            "flat parameter vector has {} values but this model ({} layers, hidden {}, vocab {}) \
+             expects {want} — checkpoint/model config mismatch",
+            flat.len(),
+            self.cfg.layers,
+            self.cfg.hidden,
+            self.cfg.vocab
+        );
+        if let Some(pos) = flat.iter().position(|v| !v.is_finite()) {
+            bail!("flat parameter vector contains a non-finite value at index {pos}");
+        }
+        let mut off = 0usize;
+        for t in self.param_tensors_mut() {
+            let n = t.len();
+            t.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        debug_assert_eq!(off, want);
+        self.rebuild_tied_head();
+        Ok(())
+    }
+
+    /// Recompute `embed_t` (the `[hidden, vocab]` tied output head) from
+    /// `embed` after a parameter update.
+    pub(crate) fn rebuild_tied_head(&mut self) {
+        let h = self.cfg.hidden;
+        let vocab = self.cfg.vocab;
+        for t in 0..vocab {
+            for i in 0..h {
+                self.embed_t[i * vocab + t] = self.embed[t * h + i];
+            }
+        }
+    }
+}
+
+/// Parameter count of the native model family for `cfg` — the length of
+/// the flat parameter/gradient/optimizer-state vectors.
+pub fn param_count_for(cfg: &ModelConfig) -> usize {
+    let h = cfg.hidden;
+    let per_layer = 4 * h // layer norms
+        + 4 * h * h // q, k, v, o
+        + h * cfg.ffn + cfg.ffn // w1 + b1
+        + cfg.ffn * h + h; // w2 + b2
+    cfg.vocab * h + cfg.layers * per_layer + 2 * h
+}
+
+/// Architecture fingerprint stored inside native checkpoints: every
+/// hyperparameter that changes the parameter layout or the attention
+/// pattern. Serving refuses a checkpoint whose fingerprint disagrees
+/// with its own config (seq_len/batch are deliberately excluded — they
+/// are per-bucket runtime shapes, not parameters).
+pub fn config_fingerprint(cfg: &ModelConfig) -> Vec<i32> {
+    let variant_idx = crate::config::AttnVariant::all()
+        .iter()
+        .position(|v| *v == cfg.variant)
+        .map(|i| i as i32)
+        .unwrap_or(-1);
+    vec![
+        cfg.vocab as i32,
+        cfg.hidden as i32,
+        cfg.layers as i32,
+        cfg.heads as i32,
+        cfg.ffn as i32,
+        cfg.block as i32,
+        cfg.global_blocks as i32,
+        cfg.window_blocks as i32,
+        cfg.random_blocks as i32,
+        variant_idx,
+        cfg.attn_seed as u32 as i32,
+        (cfg.attn_seed >> 32) as u32 as i32,
+    ]
 }
 
 // ---------------------------------------------------------------------
-// dense linear-algebra helpers (row-major, ikj loop order)
+// dense linear-algebra helpers (row-major, ikj loop order) — crate
+// visible so the training forward (kernel::grad::tape) runs the exact
+// same arithmetic and stays bit-identical to serving
 // ---------------------------------------------------------------------
 
-fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+pub(crate) fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     let mut out = vec![0.0f32; m * n];
@@ -293,21 +448,13 @@ fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     out
 }
 
-fn layernorm(x: &[f32], gamma: &[f32], beta: &[f32], h: usize) -> Vec<f32> {
-    const EPS: f32 = 1e-5;
-    let mut out = vec![0.0f32; x.len()];
-    for (row, o_row) in x.chunks(h).zip(out.chunks_mut(h)) {
-        let mean = row.iter().sum::<f32>() / h as f32;
-        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / h as f32;
-        let inv = 1.0 / (var + EPS).sqrt();
-        for (((o, &v), &g), &b) in o_row.iter_mut().zip(row).zip(gamma).zip(beta) {
-            *o = (v - mean) * inv * g + b;
-        }
-    }
-    out
+pub(crate) fn layernorm(x: &[f32], gamma: &[f32], beta: &[f32], h: usize) -> Vec<f32> {
+    // single implementation shared with training (bit-parity by
+    // construction): the stats the backward needs are discarded here
+    crate::kernel::grad::ops::layernorm_fwd(x, gamma, beta, h).0
 }
 
-fn gelu(x: &mut [f32]) {
+pub(crate) fn gelu(x: &mut [f32]) {
     let c = (2.0f32 / std::f32::consts::PI).sqrt();
     for v in x.iter_mut() {
         let u = *v;
@@ -315,13 +462,13 @@ fn gelu(x: &mut [f32]) {
     }
 }
 
-fn add_in_place(x: &mut [f32], y: &[f32]) {
+pub(crate) fn add_in_place(x: &mut [f32], y: &[f32]) {
     for (a, &b) in x.iter_mut().zip(y) {
         *a += b;
     }
 }
 
-fn add_bias(x: &mut [f32], bias: &[f32]) {
+pub(crate) fn add_bias(x: &mut [f32], bias: &[f32]) {
     for row in x.chunks_mut(bias.len()) {
         for (a, &b) in row.iter_mut().zip(bias) {
             *a += b;
@@ -331,7 +478,7 @@ fn add_bias(x: &mut [f32], bias: &[f32]) {
 
 /// `[batch, seq, heads, dh]` (a projection's natural layout) →
 /// `[batch, heads, seq, dh]` (the driver's layout).
-fn split_heads(p: &[f32], batch: usize, seq: usize, heads: usize, dh: usize) -> Vec<f32> {
+pub(crate) fn split_heads(p: &[f32], batch: usize, seq: usize, heads: usize, dh: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; p.len()];
     for bi in 0..batch {
         for si in 0..seq {
@@ -346,7 +493,7 @@ fn split_heads(p: &[f32], batch: usize, seq: usize, heads: usize, dh: usize) -> 
 }
 
 /// Inverse of [`split_heads`].
-fn merge_heads(p: &[f32], batch: usize, seq: usize, heads: usize, dh: usize) -> Vec<f32> {
+pub(crate) fn merge_heads(p: &[f32], batch: usize, seq: usize, heads: usize, dh: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; p.len()];
     for bi in 0..batch {
         for hh in 0..heads {
@@ -437,17 +584,32 @@ impl NativeEngine {
         Ok(())
     }
 
-    /// Trained-parameter install is a PJRT-artifact flow (flat tensors
-    /// whose layout matches the AOT program); the native engine keeps
-    /// its deterministic parameters and says so once.
-    pub fn note_load_params(&mut self, artifact: &str) {
+    /// Install trained parameters: a flat `[param_count]` f32 tensor in
+    /// the canonical [`NativeModel::flatten_params`] order (the native
+    /// checkpoint layout). A wrong dtype, wrong length, or non-finite
+    /// payload returns a descriptive error and leaves the engine's
+    /// current parameters untouched — a partial or mismatched checkpoint
+    /// never serves stale weights silently.
+    pub fn load_params(&mut self, artifact: &str, params: &HostTensor) -> Result<()> {
+        let data = params
+            .as_f32()
+            .with_context(|| format!("native load_params for {artifact}: params tensor"))?;
+        let model = self.ensure_model()?;
+        let want = model.param_count();
+        ensure!(
+            data.len() == want,
+            "native load_params for {artifact}: checkpoint carries {} parameters but this \
+             engine's model expects {want} (model config mismatch?)",
+            data.len()
+        );
+        model
+            .load_flat_params(data)
+            .with_context(|| format!("native load_params for {artifact}"))?;
         if !self.load_params_noted {
             self.load_params_noted = true;
-            eprintln!(
-                "[kernel] native engine ignores load_params for {artifact} \
-                 (deterministic in-process parameters)"
-            );
+            eprintln!("[kernel] installed trained parameters ({want} values) for native serving");
         }
+        Ok(())
     }
 }
 
@@ -512,6 +674,79 @@ mod tests {
         assert!(eng.execute(shape, &[tokens.clone()]).is_err());
         let bad = JobShape { seq_len: 64, batch: 2 };
         assert!(eng.execute(bad, &[tokens, kv]).is_err());
+    }
+
+    #[test]
+    fn flat_params_roundtrip_and_rebuild_tied_head() {
+        let mut m = NativeModel::new(cfg()).unwrap();
+        let flat = m.flatten_params();
+        assert_eq!(flat.len(), m.param_count());
+
+        // perturb every parameter through the flat path and reload
+        let shifted: Vec<f32> = flat.iter().map(|&v| v + 0.125).collect();
+        m.load_flat_params(&shifted).unwrap();
+        assert_eq!(m.flatten_params(), shifted, "flatten∘load must be identity");
+        // the tied head must follow the new embedding
+        let h = m.cfg.hidden;
+        let vocab = m.cfg.vocab;
+        for &(t, i) in &[(0usize, 0usize), (7, 3), (vocab - 1, h - 1)] {
+            assert_eq!(m.embed_t[i * vocab + t], m.embed[t * h + i], "embed_t stale at ({t},{i})");
+        }
+
+        // wrong length and non-finite payloads are rejected without
+        // touching the installed parameters
+        let before = m.flatten_params();
+        let err = m.load_flat_params(&shifted[..shifted.len() - 1]).unwrap_err();
+        assert!(format!("{err:#}").contains("mismatch"), "{err:#}");
+        let mut bad = before.clone();
+        bad[42] = f32::NAN;
+        assert!(m.load_flat_params(&bad).is_err());
+        assert_eq!(m.flatten_params(), before, "failed loads must not corrupt params");
+    }
+
+    #[test]
+    fn engine_load_params_imports_and_validates() {
+        let mut eng = NativeEngine::new(cfg());
+        let (b, s) = (1usize, 128usize);
+        let tokens = HostTensor::i32(&[b, s], (0..(b * s) as i32).collect()).unwrap();
+        let kv = HostTensor::f32(&[b, s], vec![1.0; b * s]).unwrap();
+        let shape = JobShape { seq_len: s, batch: b };
+        let seed_logits = eng.execute(shape, &[tokens.clone(), kv.clone()]).unwrap();
+
+        // wrong-size params error; engine keeps serving the seed weights
+        let bad = HostTensor::f32(&[3], vec![0.0; 3]).unwrap();
+        assert!(eng.load_params(NATIVE_PARAMS_ARTIFACT, &bad).is_err());
+        let still = eng.execute(shape, &[tokens.clone(), kv.clone()]).unwrap();
+        assert_eq!(still[0].as_f32().unwrap(), seed_logits[0].as_f32().unwrap());
+
+        // a genuine parameter install changes the served logits
+        let n = eng.model.as_ref().unwrap().param_count();
+        let mut flat = eng.model.as_ref().unwrap().flatten_params();
+        for v in flat.iter_mut() {
+            *v += 0.01;
+        }
+        let good = HostTensor::f32(&[n], flat).unwrap();
+        eng.load_params(NATIVE_PARAMS_ARTIFACT, &good).unwrap();
+        let trained = eng.execute(shape, &[tokens, kv]).unwrap();
+        assert_ne!(
+            trained[0].as_f32().unwrap(),
+            seed_logits[0].as_f32().unwrap(),
+            "loaded params must change the forward pass"
+        );
+    }
+
+    #[test]
+    fn config_fingerprint_tracks_architecture() {
+        let a = config_fingerprint(&cfg());
+        let b = config_fingerprint(&cfg());
+        assert_eq!(a, b);
+        let mut other = cfg();
+        other.vocab += 1;
+        assert_ne!(a, config_fingerprint(&other));
+        let mut other = cfg();
+        other.attn_seed = 0xDEAD_BEEF_0000_0001;
+        assert_ne!(a, config_fingerprint(&other));
+        assert_eq!(param_count_for(&cfg()), NativeModel::new(cfg()).unwrap().param_count());
     }
 
     #[test]

@@ -11,10 +11,11 @@
 //! softmax without ever materialising an n-length score row.
 //!
 //! All intermediate buffers live in a reusable [`SparseScratch`]: a
-//! caller that holds its scratch across calls (as the batch driver's
-//! worker threads do within a forward pass) pays no per-block
-//! allocation. The batch driver still allocates one scratch per thread
-//! per invocation — a persistent thread pool is a ROADMAP item.
+//! caller that holds its scratch across calls pays no per-block
+//! allocation. The batch driver runs on the persistent
+//! [`super::driver::KernelPool`], whose worker threads each own a
+//! process-lifetime scratch arena reused across every forward *and*
+//! backward invocation.
 
 use super::layout::BlockCsr;
 use super::{dot, HeadViews};
@@ -58,6 +59,43 @@ pub fn sparse_forward(
     layout: &BlockCsr,
     scratch: &mut SparseScratch,
     out: &mut [f32],
+) {
+    forward_core(x, head_dim, layout, scratch, out, &mut [], &mut []);
+}
+
+/// Training-mode forward: identical compute (and bit-identical output)
+/// to [`sparse_forward`], but additionally saves the **final**
+/// streaming-softmax row statistics — the running max `m_out[i]` and
+/// exponential sum `l_out[i]` of each query row, both `[n]` — that the
+/// backward pass ([`super::grad::sparse_attention_backward`]) needs to
+/// recompute the attention probabilities without materialising them.
+/// Rows that never saw an admissible key are saved as
+/// `(m, l) = (-inf, 0)`.
+pub fn sparse_forward_with_stats(
+    x: &HeadViews<'_>,
+    head_dim: usize,
+    layout: &BlockCsr,
+    scratch: &mut SparseScratch,
+    out: &mut [f32],
+    m_out: &mut [f32],
+    l_out: &mut [f32],
+) {
+    let n = layout.seq_len();
+    assert_eq!(m_out.len(), n, "m_out must be [n]");
+    assert_eq!(l_out.len(), n, "l_out must be [n]");
+    forward_core(x, head_dim, layout, scratch, out, m_out, l_out);
+}
+
+/// Shared kernel body: `m_out`/`l_out` are either both `[n]` (training
+/// mode — final row statistics are saved) or both empty (serving mode).
+fn forward_core(
+    x: &HeadViews<'_>,
+    head_dim: usize,
+    layout: &BlockCsr,
+    scratch: &mut SparseScratch,
+    out: &mut [f32],
+    m_out: &mut [f32],
+    l_out: &mut [f32],
 ) {
     let n = layout.seq_len();
     let b = layout.block;
@@ -128,6 +166,10 @@ pub fn sparse_forward(
             } else {
                 o_row.fill(0.0);
             }
+        }
+        if !m_out.is_empty() {
+            m_out[qb * b..(qb + 1) * b].copy_from_slice(&scratch.m[..b]);
+            l_out[qb * b..(qb + 1) * b].copy_from_slice(&scratch.l[..b]);
         }
     }
 }
@@ -200,6 +242,52 @@ mod tests {
             let mut got = vec![0.0f32; n * d];
             sparse_forward(&x, d, &layout, &mut scratch, &mut got);
             assert!(max_abs_diff(&want, &got) <= 1e-5);
+        }
+    }
+
+    #[test]
+    fn stats_variant_matches_plain_forward_and_normalises() {
+        let spec = PatternSpec {
+            variant: AttnVariant::BigBirdItc,
+            nb: 6,
+            global_blocks: 1,
+            window_blocks: 3,
+            random_blocks: 1,
+            seed: 13,
+        };
+        let layout = BlockCsr::compile(&spec, 4);
+        let (n, d) = (layout.seq_len(), 8);
+        let mut rng = Rng::new(6);
+        let q = data(&mut rng, n * d);
+        let k = data(&mut rng, n * d);
+        let v = data(&mut rng, n * d);
+        let x = HeadViews { q: &q, k: &k, v: &v, key_valid: None };
+        let mut plain = vec![0.0f32; n * d];
+        let mut scratch = SparseScratch::new();
+        sparse_forward(&x, d, &layout, &mut scratch, &mut plain);
+        let mut with = vec![0.0f32; n * d];
+        let mut m = vec![0.0f32; n];
+        let mut l = vec![0.0f32; n];
+        sparse_forward_with_stats(&x, d, &layout, &mut scratch, &mut with, &mut m, &mut l);
+        assert_eq!(plain, with, "stats variant must be bit-identical");
+        for i in 0..n {
+            // every row attends at least its own (band) block: l must be
+            // a genuine softmax denominator and m a finite row max
+            assert!(l[i] > 0.0, "row {i}: l = {}", l[i]);
+            assert!(m[i].is_finite(), "row {i}: m = {}", m[i]);
+            // softmax probabilities recomputed from (m, l) must sum to 1
+            let qb = i / 4;
+            let q_row = &q[i * d..(i + 1) * d];
+            let scale = 1.0 / (d as f32).sqrt();
+            let mut sum = 0.0f32;
+            for &kb in layout.row(qb) {
+                for jj in 0..4 {
+                    let kj = kb * 4 + jj;
+                    let s = crate::kernel::dot(q_row, &k[kj * d..(kj + 1) * d]) * scale;
+                    sum += (s - m[i]).exp() / l[i];
+                }
+            }
+            assert!((sum - 1.0).abs() < 1e-4, "row {i}: probs sum to {sum}");
         }
     }
 

@@ -36,6 +36,24 @@ impl TrainLog {
         self.points.first().map(|p| p.loss).unwrap_or(f32::NAN)
     }
 
+    /// EWMA-smoothed loss curve (one value per logged point):
+    /// `s_0 = loss_0`, `s_i = α·loss_i + (1−α)·s_{i−1}`. The smoothed
+    /// first→last comparison is the "loss is trending down" gate used
+    /// by the native training driver and the CI smoke job.
+    pub fn smoothed(&self, alpha: f32) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.points.len());
+        let mut acc: Option<f32> = None;
+        for p in &self.points {
+            let s = match acc {
+                None => p.loss,
+                Some(prev) => alpha * p.loss + (1.0 - alpha) * prev,
+            };
+            acc = Some(s);
+            out.push(s);
+        }
+        out
+    }
+
     /// Render as a `step\tloss` TSV for EXPERIMENTS.md.
     pub fn to_tsv(&self) -> String {
         let mut s = String::from("step\tloss\tms_per_step\n");
@@ -166,5 +184,28 @@ impl TrainDriver {
                 ("step", &step),
             ],
         )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoothed_curve_damps_noise_but_tracks_trend() {
+        let mut log = TrainLog::default();
+        // noisy but falling: 6.0, 6.2, 5.6, 5.8, 5.2, 5.0
+        for (i, loss) in [6.0f32, 6.2, 5.6, 5.8, 5.2, 5.0].into_iter().enumerate() {
+            log.points.push(TrainPoint { step: i, loss, ms_per_step: 1.0 });
+        }
+        let sm = log.smoothed(0.4);
+        assert_eq!(sm.len(), 6);
+        assert_eq!(sm[0], 6.0, "first smoothed value is the first loss");
+        assert!(sm[5] < sm[0], "smoothed curve must fall on a falling trend: {sm:?}");
+        // the raw up-tick at index 3 (5.6 → 5.8) is damped away: the
+        // smoothed curve keeps falling there
+        assert!(sm[3] < sm[2], "{sm:?}");
+        assert!(log.smoothed(0.4).len() == log.points.len());
+        assert!(TrainLog::default().smoothed(0.3).is_empty());
     }
 }

@@ -1,9 +1,16 @@
-//! Training driver: owns optimizer state on the host, runs the AOT
-//! `train_*` artifact in a loop, evaluates with the `fwd_*` artifact,
-//! checkpoints, and logs the loss curve.
+//! Training drivers: the AOT path ([`TrainDriver`], host-owned Adam
+//! state around the `train_*` artifacts) and the artifact-free native
+//! path ([`native::NativeTrainer`], real forward/backward/AdamW through
+//! `kernel::grad`). Both checkpoint into the shared `BBCKPT1` format
+//! and log [`TrainLog`] loss curves.
 
 mod checkpoint;
 mod driver;
+pub mod native;
 
 pub use checkpoint::{load_checkpoint, save_checkpoint};
 pub use driver::{TrainDriver, TrainLog, TrainPoint};
+pub use native::{
+    load_native_checkpoint, synthetic_docs, synthetic_mlm_batch, NativeCheckpoint, NativeTrainer,
+    StepTimings,
+};

@@ -1,0 +1,365 @@
+//! Artifact-free native pretraining: [`NativeTrainer`] drives the
+//! `kernel::grad` subsystem — tape forward, masked-LM loss, flash-style
+//! sparse backward, AdamW — over synthetic MLM batches, entirely in
+//! Rust. `cargo run -- train --backends native` lands here and runs
+//! real optimizer steps on a bare checkout with **zero PJRT artifacts**.
+//!
+//! Checkpoints use the shared `BBCKPT1` container
+//! ([`crate::train::save_checkpoint`]) with the native tensor set:
+//! `native_params` (flat canonical parameter vector), `opt_m`/`opt_v`
+//! (AdamW moments), `step`, and `model_meta` (the architecture
+//! fingerprint from [`crate::kernel::config_fingerprint`]). Loading
+//! validates the fingerprint and every length, so a partial or
+//! mismatched checkpoint is a descriptive error — never stale weights.
+//! `serve --backends native:N --checkpoint <path>` imports the same
+//! file through `NativeModel::load_flat_params` and serves the trained
+//! weights.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::data::{mask_tokens, CorpusConfig, CorpusGen, MlmBatch, MlmMasking, TokenBatch};
+use crate::kernel::grad::{backward, forward_tape, masked_xent, AdamW, AdamWConfig, ParamGrads};
+use crate::kernel::{config_fingerprint, param_count_for, NativeModel};
+use crate::runtime::HostTensor;
+use crate::train::{load_checkpoint, save_checkpoint, TrainLog, TrainPoint};
+use crate::util::Rng;
+
+/// Checkpoint tensor names.
+const T_PARAMS: &str = "native_params";
+const T_M: &str = "opt_m";
+const T_V: &str = "opt_v";
+const T_STEP: &str = "step";
+const T_META: &str = "model_meta";
+
+/// Wall-clock split of the most recent training step, for logging and
+/// the `train_step` bench.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTimings {
+    /// Tape forward + loss.
+    pub fwd_ms: f64,
+    /// Whole-model backward.
+    pub bwd_ms: f64,
+    /// Flatten + clip + AdamW + parameter re-install.
+    pub opt_ms: f64,
+}
+
+/// Owns the native model, its gradient accumulators, and the AdamW
+/// state; every [`NativeTrainer::train_step`] is one full
+/// forward/backward/update cycle.
+pub struct NativeTrainer {
+    model: NativeModel,
+    grads: ParamGrads,
+    opt: AdamW,
+    flat_params: Vec<f32>,
+    flat_grads: Vec<f32>,
+    /// Timings of the most recent step.
+    pub timings: StepTimings,
+}
+
+impl NativeTrainer {
+    /// Fresh trainer: deterministic seed parameters for `cfg`, zeroed
+    /// optimizer state.
+    pub fn new(cfg: ModelConfig, ocfg: AdamWConfig) -> Result<Self> {
+        let model = NativeModel::new(cfg)?;
+        let n = model.param_count();
+        let grads = ParamGrads::new(model.config());
+        Ok(NativeTrainer {
+            model,
+            grads,
+            opt: AdamW::new(n, ocfg),
+            flat_params: Vec::with_capacity(n),
+            flat_grads: Vec::with_capacity(n),
+            timings: StepTimings::default(),
+        })
+    }
+
+    /// Restore a trainer from a checkpoint written by
+    /// [`NativeTrainer::save`] (validates the architecture fingerprint
+    /// against `cfg`).
+    pub fn resume(path: &Path, cfg: ModelConfig, ocfg: AdamWConfig) -> Result<Self> {
+        let ckpt = load_native_checkpoint(path, &cfg)?;
+        let mut t = NativeTrainer::new(cfg, ocfg)?;
+        t.model.load_flat_params(&ckpt.params)?;
+        t.opt.restore(ckpt.m, ckpt.v, ckpt.step)?;
+        Ok(t)
+    }
+
+    /// The model being trained.
+    pub fn model(&self) -> &NativeModel {
+        &self.model
+    }
+
+    /// Mutable model access (e.g. for evaluation forwards).
+    pub fn model_mut(&mut self) -> &mut NativeModel {
+        &mut self.model
+    }
+
+    /// Completed optimizer steps.
+    pub fn step_count(&self) -> usize {
+        self.opt.step_count()
+    }
+
+    /// One training step on a prepared MLM batch shaped
+    /// `[cfg.batch, cfg.seq_len]`. Returns the batch's mean masked loss
+    /// (in nats).
+    pub fn train_step(&mut self, batch: &MlmBatch) -> Result<f32> {
+        let (b, s) = (self.model.config().batch, self.model.config().seq_len);
+        ensure!(
+            batch.tokens.len() == b * s,
+            "batch has {} tokens, trainer expects [batch={b}, seq_len={s}]",
+            batch.tokens.len()
+        );
+        let vocab = self.model.config().vocab;
+        let t0 = Instant::now();
+        let (logits, tape) =
+            forward_tape(&mut self.model, &batch.tokens, Some(&batch.kv_valid), b, s)?;
+        let (loss, d_logits) = masked_xent(&logits, &batch.labels, &batch.weights, vocab);
+        // gate *before* backward/optimizer so a diverged step can never
+        // poison the AdamW moments or the installed parameters
+        ensure!(
+            loss.is_finite(),
+            "training diverged: non-finite loss at step {}",
+            self.opt.step_count()
+        );
+        let t1 = Instant::now();
+        backward(&self.model, &tape, &d_logits, &mut self.grads);
+        let t2 = Instant::now();
+        self.model.flatten_params_into(&mut self.flat_params);
+        self.grads.flatten_into(&mut self.flat_grads);
+        self.opt.step(&mut self.flat_params, &mut self.flat_grads);
+        self.model.load_flat_params(&self.flat_params)?;
+        let t3 = Instant::now();
+        self.timings = StepTimings {
+            fwd_ms: t1.duration_since(t0).as_secs_f64() * 1e3,
+            bwd_ms: t2.duration_since(t1).as_secs_f64() * 1e3,
+            opt_ms: t3.duration_since(t2).as_secs_f64() * 1e3,
+        };
+        Ok(loss)
+    }
+
+    /// Train for `steps` steps pulling batches from `next_batch`,
+    /// logging every `log_every` (mirrors `TrainDriver::run`).
+    pub fn run(
+        &mut self,
+        steps: usize,
+        log_every: usize,
+        mut next_batch: impl FnMut(usize) -> Result<MlmBatch>,
+        mut on_log: impl FnMut(&TrainPoint),
+    ) -> Result<TrainLog> {
+        let mut log = TrainLog::default();
+        let t_all = Instant::now();
+        let mut t_win = Instant::now();
+        let mut win_steps = 0usize;
+        for i in 0..steps {
+            let batch = next_batch(i)?;
+            let loss = self.train_step(&batch)?;
+            win_steps += 1;
+            if i % log_every == 0 || i + 1 == steps {
+                let ms = t_win.elapsed().as_secs_f64() * 1000.0 / win_steps as f64;
+                let p = TrainPoint { step: self.opt.step_count(), loss, ms_per_step: ms };
+                on_log(&p);
+                log.points.push(p);
+                t_win = Instant::now();
+                win_steps = 0;
+            }
+        }
+        log.total_steps = steps;
+        log.wall_seconds = t_all.elapsed().as_secs_f64();
+        Ok(log)
+    }
+
+    /// Save parameters + optimizer state + step + architecture
+    /// fingerprint as a `BBCKPT1` checkpoint (atomic tmp + rename).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let flat = self.model.flatten_params();
+        let n = flat.len();
+        let params = HostTensor::f32(&[n], flat)?;
+        let m = HostTensor::f32(&[n], self.opt.first_moment().to_vec())?;
+        let v = HostTensor::f32(&[n], self.opt.second_moment().to_vec())?;
+        let step = HostTensor::i32(&[], vec![self.opt.step_count() as i32])?;
+        let meta_vals = config_fingerprint(self.model.config());
+        let meta = HostTensor::i32(&[meta_vals.len()], meta_vals)?;
+        save_checkpoint(
+            path,
+            &[(T_PARAMS, &params), (T_M, &m), (T_V, &v), (T_STEP, &step), (T_META, &meta)],
+        )
+    }
+}
+
+/// A parsed + validated native checkpoint.
+pub struct NativeCheckpoint {
+    /// Flat parameter vector in the canonical order.
+    pub params: Vec<f32>,
+    /// AdamW first moment.
+    pub m: Vec<f32>,
+    /// AdamW second moment.
+    pub v: Vec<f32>,
+    /// Completed optimizer steps.
+    pub step: usize,
+}
+
+/// Load and validate a native checkpoint against `cfg`: the stored
+/// architecture fingerprint, the tensor set, and every length must
+/// match, otherwise a descriptive error is returned (partial or
+/// mismatched checkpoints can never be half-installed).
+pub fn load_native_checkpoint(path: &Path, cfg: &ModelConfig) -> Result<NativeCheckpoint> {
+    let tensors = load_checkpoint(path)?;
+    let mut params = None;
+    let mut m = None;
+    let mut v = None;
+    let mut step = None;
+    let mut meta = None;
+    for (name, t) in tensors {
+        match name.as_str() {
+            T_PARAMS => params = Some(t.as_f32()?.to_vec()),
+            T_M => m = Some(t.as_f32()?.to_vec()),
+            T_V => v = Some(t.as_f32()?.to_vec()),
+            T_STEP => {
+                let vals = t.as_i32()?;
+                let v = vals.first().with_context(|| {
+                    format!("{}: {T_STEP:?} tensor is empty", path.display())
+                })?;
+                step = Some(*v as usize);
+            }
+            T_META => meta = Some(t.as_i32()?.to_vec()),
+            other => bail!(
+                "{}: unexpected tensor {other:?} — not a native training checkpoint",
+                path.display()
+            ),
+        }
+    }
+    let params = params
+        .with_context(|| format!("{}: checkpoint is missing {T_PARAMS:?}", path.display()))?;
+    let m = m.with_context(|| format!("{}: checkpoint is missing {T_M:?}", path.display()))?;
+    let v = v.with_context(|| format!("{}: checkpoint is missing {T_V:?}", path.display()))?;
+    let step =
+        step.with_context(|| format!("{}: checkpoint is missing {T_STEP:?}", path.display()))?;
+    let meta =
+        meta.with_context(|| format!("{}: checkpoint is missing {T_META:?}", path.display()))?;
+    let want_meta = config_fingerprint(cfg);
+    ensure!(
+        meta == want_meta,
+        "{}: checkpoint architecture fingerprint {meta:?} does not match the serving/training \
+         config {want_meta:?} (vocab/hidden/layers/heads/ffn/block/pattern must agree)",
+        path.display()
+    );
+    let want = param_count_for(cfg);
+    ensure!(
+        params.len() == want,
+        "{}: checkpoint has {} parameters, config expects {want}",
+        path.display(),
+        params.len()
+    );
+    ensure!(
+        m.len() == want && v.len() == want,
+        "{}: optimizer state lengths (m={}, v={}) disagree with {want} parameters",
+        path.display(),
+        m.len(),
+        v.len()
+    );
+    Ok(NativeCheckpoint { params, m, v, step })
+}
+
+/// Deterministic synthetic pretraining documents for the native flow
+/// (the same generator family the artifact experiments use).
+pub fn synthetic_docs(vocab: usize, n_docs: usize, doc_len: usize, seed: u64) -> Vec<Vec<i32>> {
+    let cfg = CorpusConfig { vocab, ..Default::default() };
+    let mut g = CorpusGen::new(cfg, seed);
+    (0..n_docs).map(|_| g.document(doc_len)).collect()
+}
+
+/// Assemble one MLM batch for `cfg` from a document pool: window each
+/// row out of a random document, pad/stack, and apply BERT-style
+/// masking.
+pub fn synthetic_mlm_batch(docs: &[Vec<i32>], cfg: &ModelConfig, rng: &mut Rng) -> MlmBatch {
+    assert!(!docs.is_empty(), "synthetic_mlm_batch needs a non-empty document pool");
+    let seqs: Vec<Vec<i32>> = (0..cfg.batch)
+        .map(|_| {
+            let d = &docs[rng.below(docs.len())];
+            if d.len() <= cfg.seq_len {
+                d.clone()
+            } else {
+                // `+ 1` so the final window (covering the document's
+                // last token) is reachable
+                let start = rng.below(d.len() - cfg.seq_len + 1);
+                d[start..start + cfg.seq_len].to_vec()
+            }
+        })
+        .collect();
+    let tb = TokenBatch::from_seqs(&seqs, cfg.batch, cfg.seq_len);
+    let masking = MlmMasking { vocab: cfg.vocab, ..Default::default() };
+    mask_tokens(&tb.tokens, &tb.kv_valid, &masking, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AttnVariant;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            variant: AttnVariant::BigBirdItc,
+            seq_len: 32,
+            block: 8,
+            global_blocks: 1,
+            window_blocks: 1,
+            random_blocks: 1,
+            layers: 1,
+            heads: 2,
+            hidden: 16,
+            ffn: 32,
+            vocab: 64,
+            batch: 2,
+            attn_seed: 1,
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_and_validates_fingerprint() {
+        let dir = std::env::temp_dir().join("bb_native_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ckpt");
+
+        let mut trainer = NativeTrainer::new(cfg(), AdamWConfig::default()).unwrap();
+        let docs = synthetic_docs(cfg().vocab, 4, 256, 3);
+        let mut rng = Rng::new(7);
+        for _ in 0..2 {
+            let batch = synthetic_mlm_batch(&docs, &cfg(), &mut rng);
+            trainer.train_step(&batch).unwrap();
+        }
+        trainer.save(&path).unwrap();
+
+        let restored = NativeTrainer::resume(&path, cfg(), AdamWConfig::default()).unwrap();
+        assert_eq!(restored.step_count(), trainer.step_count());
+        assert_eq!(
+            restored.model().flatten_params(),
+            trainer.model().flatten_params(),
+            "restored parameters must be bit-identical"
+        );
+
+        // a config with a different architecture must be rejected
+        let mut other = cfg();
+        other.hidden = 32;
+        other.ffn = 64;
+        let err = load_native_checkpoint(&path, &other).unwrap_err();
+        assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn trainer_rejects_misshapen_batches() {
+        let mut trainer = NativeTrainer::new(cfg(), AdamWConfig::default()).unwrap();
+        let bad = MlmBatch {
+            tokens: vec![1; 7],
+            kv_valid: vec![1.0; 7],
+            labels: vec![1; 7],
+            weights: vec![0.0; 7],
+        };
+        assert!(trainer.train_step(&bad).is_err());
+    }
+}

@@ -1,0 +1,473 @@
+//! Gradient-subsystem integration tests (all artifact-free):
+//!
+//! 1. finite-difference checks of the sparse-attention backward across
+//!    random `PatternSpec`s, against an f64 masked-softmax mirror
+//!    (≤ 1e-3 relative error);
+//! 2. directional finite-difference checks of the whole-model gradient;
+//! 3. a loss-decreases-over-20-steps property test of the full
+//!    trainer;
+//! 4. checkpoint save → load → serve parity, including the
+//!    serve-the-trained-weights end-to-end path and mismatch errors.
+
+use std::time::Duration;
+
+use bigbird::attention::PatternSpec;
+use bigbird::config::{AttnVariant, ModelConfig, ServingConfig};
+use bigbird::coordinator::{BatcherConfig, Server, ServerConfig};
+use bigbird::kernel::grad::{
+    backward, forward_tape, masked_xent, sparse_attention_backward, AdamWConfig, AttnGradScratch,
+    ParamGrads,
+};
+use bigbird::kernel::{
+    sparse_forward_with_stats, BlockCsr, HeadViews, NativeModel, SparseScratch,
+};
+use bigbird::tokenizer::special;
+use bigbird::train::{load_native_checkpoint, synthetic_mlm_batch, NativeTrainer};
+use bigbird::util::decode;
+use bigbird::util::Rng;
+
+// ---------------------------------------------------------------------
+// 1. sparse-attention backward vs finite differences (f64 mirror)
+// ---------------------------------------------------------------------
+
+/// f64 mirror of the masked block-sparse attention forward: a plain
+/// per-row masked softmax over the attended blocks (mathematically
+/// identical to the streaming-softmax kernel, computed the naive way in
+/// double precision so finite differences are noise-free).
+fn dense_forward_f64(
+    q: &[f64],
+    k: &[f64],
+    v: &[f64],
+    key_valid: Option<&[f32]>,
+    layout: &BlockCsr,
+    d: usize,
+) -> Vec<f64> {
+    let n = layout.seq_len();
+    let b = layout.block;
+    let scale = 1.0 / (d as f64).sqrt();
+    let mut out = vec![0.0f64; n * d];
+    for qi in 0..n {
+        let qb = qi / b;
+        let mut keys = Vec::new();
+        for &kb in layout.row(qb) {
+            for jj in 0..b {
+                let kj = kb * b + jj;
+                let ok = match key_valid {
+                    Some(mask) => mask[kj] > 0.0,
+                    None => true,
+                };
+                if ok {
+                    keys.push(kj);
+                }
+            }
+        }
+        if keys.is_empty() {
+            continue;
+        }
+        let scores: Vec<f64> = keys
+            .iter()
+            .map(|&kj| {
+                let mut s = 0.0f64;
+                for t in 0..d {
+                    s += q[qi * d + t] * k[kj * d + t];
+                }
+                s * scale
+            })
+            .collect();
+        let maxv = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = scores.iter().map(|&s| (s - maxv).exp()).collect();
+        let denom: f64 = exps.iter().sum();
+        for (&kj, &e) in keys.iter().zip(&exps) {
+            let p = e / denom;
+            for t in 0..d {
+                out[qi * d + t] += p * v[kj * d + t];
+            }
+        }
+    }
+    out
+}
+
+/// Run one FD gradient check for a given pattern + optional mask.
+fn check_attention_grads(spec: &PatternSpec, block: usize, d: usize, mask_frac: f64, seed: u64) {
+    let layout = BlockCsr::compile(spec, block);
+    let n = layout.seq_len();
+    let mut rng = Rng::new(seed);
+    let q: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+    let k: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+    let v: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+    let key_valid: Option<Vec<f32>> = if mask_frac > 0.0 {
+        Some((0..n).map(|_| if rng.coin(mask_frac) { 0.0 } else { 1.0 }).collect())
+    } else {
+        None
+    };
+    let w: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect(); // dL/dO
+
+    // analytic gradients through the f32 kernel pair
+    let x = HeadViews { q: &q, k: &k, v: &v, key_valid: key_valid.as_deref() };
+    let mut o = vec![0.0f32; n * d];
+    let mut m = vec![0.0f32; n];
+    let mut l = vec![0.0f32; n];
+    sparse_forward_with_stats(&x, d, &layout, &mut SparseScratch::new(), &mut o, &mut m, &mut l);
+    let (mut dq, mut dk, mut dv) = (vec![0.0f32; n * d], vec![0.0f32; n * d], vec![0.0f32; n * d]);
+    sparse_attention_backward(
+        &x,
+        &o,
+        &w,
+        &m,
+        &l,
+        d,
+        &layout,
+        &mut AttnGradScratch::new(),
+        &mut dq,
+        &mut dk,
+        &mut dv,
+    );
+
+    // numeric gradients by central differences on the f64 mirror
+    let qf: Vec<f64> = q.iter().map(|&x| x as f64).collect();
+    let kf: Vec<f64> = k.iter().map(|&x| x as f64).collect();
+    let vf: Vec<f64> = v.iter().map(|&x| x as f64).collect();
+    let loss = |q: &[f64], k: &[f64], v: &[f64]| -> f64 {
+        let out = dense_forward_f64(q, k, v, key_valid.as_deref(), &layout, d);
+        out.iter().zip(&w).map(|(&a, &ww)| a * ww as f64).sum()
+    };
+    let eps = 1e-5f64;
+    let mut checked = 0usize;
+    for (which, (analytic, base)) in
+        [(&dq, &qf), (&dk, &kf), (&dv, &vf)].into_iter().enumerate()
+    {
+        for i in 0..n * d {
+            let mut plus = base.clone();
+            plus[i] += eps;
+            let mut minus = base.clone();
+            minus[i] -= eps;
+            let (lp, lm) = match which {
+                0 => (loss(&plus, &kf, &vf), loss(&minus, &kf, &vf)),
+                1 => (loss(&qf, &plus, &vf), loss(&qf, &minus, &vf)),
+                _ => (loss(&qf, &kf, &plus), loss(&qf, &kf, &minus)),
+            };
+            let numeric = (lp - lm) / (2.0 * eps);
+            let a = analytic[i] as f64;
+            let denom = a.abs().max(numeric.abs()).max(1e-2);
+            let rel = (a - numeric).abs() / denom;
+            assert!(
+                rel <= 1e-3,
+                "spec {spec:?} tensor {which} coord {i}: analytic {a:.6e} vs numeric \
+                 {numeric:.6e} (rel {rel:.2e})"
+            );
+            checked += 1;
+        }
+    }
+    assert_eq!(checked, 3 * n * d);
+}
+
+#[test]
+fn sparse_attention_backward_matches_finite_differences() {
+    // the paper-shaped pattern (band + global + random)
+    check_attention_grads(
+        &PatternSpec {
+            variant: AttnVariant::BigBirdItc,
+            nb: 6,
+            global_blocks: 1,
+            window_blocks: 3,
+            random_blocks: 1,
+            seed: 11,
+        },
+        4,
+        4,
+        0.0,
+        101,
+    );
+    // window-only, with masked keys
+    check_attention_grads(
+        &PatternSpec {
+            variant: AttnVariant::Window,
+            nb: 5,
+            global_blocks: 0,
+            window_blocks: 3,
+            random_blocks: 0,
+            seed: 0,
+        },
+        4,
+        4,
+        0.2,
+        202,
+    );
+    // random + window with a mask and a different head_dim
+    check_attention_grads(
+        &PatternSpec {
+            variant: AttnVariant::RandomWindow,
+            nb: 4,
+            global_blocks: 0,
+            window_blocks: 1,
+            random_blocks: 2,
+            seed: 7,
+        },
+        4,
+        8,
+        0.15,
+        303,
+    );
+}
+
+// ---------------------------------------------------------------------
+// 2. whole-model directional finite differences
+// ---------------------------------------------------------------------
+
+fn small_cfg() -> ModelConfig {
+    ModelConfig {
+        variant: AttnVariant::BigBirdItc,
+        seq_len: 32,
+        block: 8,
+        global_blocks: 1,
+        window_blocks: 1,
+        random_blocks: 1,
+        layers: 1,
+        heads: 2,
+        hidden: 16,
+        ffn: 32,
+        vocab: 64,
+        batch: 1,
+        attn_seed: 3,
+    }
+}
+
+#[test]
+fn model_gradient_matches_directional_finite_difference() {
+    let cfg = small_cfg();
+    let (b, s, vocab) = (cfg.batch, cfg.seq_len, cfg.vocab);
+    let mut rng = Rng::new(42);
+    let tokens: Vec<i32> = (0..b * s).map(|_| rng.below(vocab) as i32).collect();
+    let labels = tokens.clone();
+    let weights: Vec<f32> = (0..b * s).map(|_| if rng.coin(0.3) { 1.0 } else { 0.0 }).collect();
+    assert!(weights.iter().sum::<f32>() > 0.0, "test needs at least one masked position");
+
+    let mut model = NativeModel::new(cfg).unwrap();
+    let (logits, tape) = forward_tape(&mut model, &tokens, None, b, s).unwrap();
+    let (_, d_logits) = masked_xent(&logits, &labels, &weights, vocab);
+    let mut grads = ParamGrads::new(model.config());
+    backward(&model, &tape, &d_logits, &mut grads);
+    let mut g = Vec::new();
+    grads.flatten_into(&mut g);
+    let g_norm = grads.global_norm();
+    assert!(g_norm > 0.0, "gradient must be nonzero");
+
+    let p0 = model.flatten_params();
+    let loss_at = |flat: &[f32], model: &mut NativeModel| -> f64 {
+        model.load_flat_params(flat).unwrap();
+        let logits = model.forward(&tokens, None, b, s).unwrap();
+        masked_xent(&logits, &labels, &weights, vocab).0 as f64
+    };
+
+    // strongest check: FD along the gradient direction itself must
+    // reproduce ||g|| (this weights exactly the coordinates the
+    // backward claims matter)
+    let u: Vec<f32> = g.iter().map(|&x| (x as f64 / g_norm) as f32).collect();
+    let eps = 1e-2f32;
+    let plus: Vec<f32> = p0.iter().zip(&u).map(|(&p, &d)| p + eps * d).collect();
+    let minus: Vec<f32> = p0.iter().zip(&u).map(|(&p, &d)| p - eps * d).collect();
+    let numeric = (loss_at(&plus, &mut model) - loss_at(&minus, &mut model)) / (2.0 * eps as f64);
+    let rel = (numeric - g_norm).abs() / g_norm.max(numeric.abs());
+    assert!(
+        rel <= 1e-2,
+        "gradient-direction FD: analytic ||g|| {g_norm:.6e} vs numeric {numeric:.6e} (rel {rel:.2e})"
+    );
+
+    // sanity along random directions (noise-limited, looser tolerance)
+    for dir_seed in 0..2u64 {
+        let mut drng = Rng::new(900 + dir_seed);
+        let dir: Vec<f64> = (0..p0.len()).map(|_| drng.normal()).collect();
+        let norm = dir.iter().map(|&x| x * x).sum::<f64>().sqrt();
+        let dir: Vec<f32> = dir.iter().map(|&x| (x / norm) as f32).collect();
+        let analytic: f64 = g.iter().zip(&dir).map(|(&a, &d)| a as f64 * d as f64).sum();
+        let eps = 5e-2f32;
+        let plus: Vec<f32> = p0.iter().zip(&dir).map(|(&p, &d)| p + eps * d).collect();
+        let minus: Vec<f32> = p0.iter().zip(&dir).map(|(&p, &d)| p - eps * d).collect();
+        let numeric =
+            (loss_at(&plus, &mut model) - loss_at(&minus, &mut model)) / (2.0 * eps as f64);
+        let denom = analytic.abs().max(numeric.abs()).max(1e-3);
+        assert!(
+            (analytic - numeric).abs() / denom <= 0.1,
+            "random direction {dir_seed}: analytic {analytic:.6e} vs numeric {numeric:.6e}"
+        );
+    }
+    // restore for good hygiene (model is dropped right after)
+    model.load_flat_params(&p0).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// 3. loss decreases over 20 steps
+// ---------------------------------------------------------------------
+
+#[test]
+fn native_training_loss_decreases_over_20_steps() {
+    let cfg = ModelConfig {
+        variant: AttnVariant::BigBirdItc,
+        seq_len: 64,
+        block: 8,
+        global_blocks: 1,
+        window_blocks: 3,
+        random_blocks: 1,
+        layers: 2,
+        heads: 2,
+        hidden: 32,
+        ffn: 64,
+        vocab: 256,
+        batch: 4,
+        attn_seed: 0,
+    };
+    let docs = bigbird::train::synthetic_docs(cfg.vocab, 32, 2048, 5);
+    let mut trainer = NativeTrainer::new(cfg.clone(), AdamWConfig::default()).unwrap();
+    let mut rng = Rng::new(5).fold_in(0x17);
+    let tlog = trainer
+        .run(20, 1, |_| Ok(synthetic_mlm_batch(&docs, &cfg, &mut rng)), |_| {})
+        .unwrap();
+    assert_eq!(tlog.points.len(), 20);
+    assert!(tlog.points.iter().all(|p| p.loss.is_finite()), "losses must stay finite");
+    let sm = tlog.smoothed(0.3);
+    let (first, last) = (sm[0], *sm.last().unwrap());
+    assert!(
+        last < first,
+        "smoothed MLM loss must fall over 20 steps: {first:.4} → {last:.4}\n{}",
+        tlog.to_tsv()
+    );
+}
+
+// ---------------------------------------------------------------------
+// 4. checkpoint save → load → serve parity
+// ---------------------------------------------------------------------
+
+fn serving_server(workers: usize, ckpt: Option<String>) -> ServerConfig {
+    let mut cfg = ServerConfig::mlm_default("definitely-missing-artifact-dir");
+    cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(2), ..Default::default() };
+    cfg.serving = ServingConfig::native(workers, 2);
+    cfg.native_checkpoint = ckpt;
+    cfg
+}
+
+#[test]
+fn checkpoint_roundtrips_into_native_serving() {
+    // train a few steps at the *serving* architecture (the native
+    // family: only seq_len/batch differ, which are runtime shapes)
+    let mut train_cfg = ModelConfig::native_serving();
+    train_cfg.seq_len = 128;
+    train_cfg.batch = 2;
+    let docs = bigbird::train::synthetic_docs(train_cfg.vocab, 16, 1024, 9);
+    let mut trainer = NativeTrainer::new(train_cfg.clone(), AdamWConfig::default()).unwrap();
+    let mut rng = Rng::new(9).fold_in(0x17);
+    for _ in 0..10 {
+        let batch = synthetic_mlm_batch(&docs, &train_cfg, &mut rng);
+        trainer.train_step(&batch).unwrap();
+    }
+    let dir = std::env::temp_dir().join("bb_native_serve_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt_path = dir.join("trained.ckpt");
+    trainer.save(&ckpt_path).unwrap();
+
+    // --- direct import parity: a fresh serving-config model loaded
+    // from the checkpoint reproduces the trainer's forward bit-exactly
+    let serve_cfg = ModelConfig::native_serving();
+    let ckpt = load_native_checkpoint(&ckpt_path, &serve_cfg).unwrap();
+    assert_eq!(ckpt.step, 10);
+    let mut served = NativeModel::new(serve_cfg.clone()).unwrap();
+    served.load_flat_params(&ckpt.params).unwrap();
+    let (b, s) = (1usize, 128usize);
+    let tokens: Vec<i32> = (0..s as i32).map(|i| 6 + (i * 7) % 500).collect();
+    let kv = vec![1.0f32; s];
+    let trained_logits = served.forward(&tokens, Some(&kv), b, s).unwrap();
+    let trainer_logits = trainer.model_mut().forward(&tokens, Some(&kv), b, s).unwrap();
+    assert_eq!(trained_logits, trainer_logits, "served checkpoint must match the trainer");
+
+    // --- trained weights genuinely differ from the seed model
+    let mut seed_model = NativeModel::new(serve_cfg.clone()).unwrap();
+    let seed_logits = seed_model.forward(&tokens, Some(&kv), b, s).unwrap();
+    let max_diff = trained_logits
+        .iter()
+        .zip(&seed_logits)
+        .map(|(&a, &b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff > 1e-3, "10 optimizer steps must move the logits (max diff {max_diff})");
+
+    // --- end-to-end: a server started with the checkpoint serves the
+    // trained weights (predictions match the imported model, not seed)
+    let mut req = tokens.clone();
+    let mask_positions: Vec<usize> = (0..s).step_by(4).collect();
+    for &p in &mask_positions {
+        req[p] = special::MASK;
+    }
+    let server = Server::start(serving_server(1, Some(ckpt_path.display().to_string())))
+        .expect("server with native checkpoint");
+    server.warmup(&[128]).unwrap();
+    let resp = server
+        .submit(req.clone())
+        .unwrap()
+        .recv_timeout(Duration::from_secs(600))
+        .expect("response");
+    server.shutdown();
+
+    // expected predictions from the imported model on the same padded
+    // batch the server forms (bucket s128 b8, row 0)
+    let bucket_b = 8usize;
+    let mut padded = vec![special::PAD; bucket_b * s];
+    let mut padded_kv = vec![0.0f32; bucket_b * s];
+    padded[..s].copy_from_slice(&req);
+    for v in padded_kv[..s].iter_mut() {
+        *v = 1.0;
+    }
+    let logits = served.forward(&padded, Some(&padded_kv), bucket_b, s).unwrap();
+    let want = decode::mask_predictions(&logits, 0, s, serve_cfg.vocab, &req, special::MASK);
+    assert_eq!(resp.predictions, want, "server must serve the trained weights");
+
+    // the seed-weight server answers differently on at least one mask
+    let seed_server = Server::start(serving_server(1, None)).unwrap();
+    seed_server.warmup(&[128]).unwrap();
+    let seed_resp = seed_server
+        .submit(req)
+        .unwrap()
+        .recv_timeout(Duration::from_secs(600))
+        .expect("seed response");
+    seed_server.shutdown();
+    assert_ne!(
+        resp.predictions, seed_resp.predictions,
+        "trained-checkpoint predictions must differ from the seed model's"
+    );
+
+    std::fs::remove_file(&ckpt_path).unwrap();
+}
+
+#[test]
+fn mismatched_checkpoint_fails_serving_startup() {
+    // checkpoint trained at a *different* architecture
+    let cfg = small_cfg();
+    let trainer = NativeTrainer::new(cfg, AdamWConfig::default()).unwrap();
+    let dir = std::env::temp_dir().join("bb_native_mismatch_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mismatch.ckpt");
+    trainer.save(&path).unwrap();
+
+    // loading against the serving config is a descriptive error...
+    let err = load_native_checkpoint(&path, &ModelConfig::native_serving()).unwrap_err();
+    assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+    // ...and server startup refuses it rather than serving seed weights
+    let err = Server::start(serving_server(1, Some(path.display().to_string())))
+        .err()
+        .expect("startup must fail");
+    assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+    // a checkpoint also can't be requested without a native worker
+    let mut cpu_cfg = serving_server(1, Some(path.display().to_string()));
+    cpu_cfg.serving = ServingConfig::cpu(1, 2);
+    match Server::start(cpu_cfg) {
+        Ok(_) => panic!("cpu-only pool must reject --checkpoint"),
+        Err(e) => {
+            let msg = format!("{e:#}");
+            // either the explicit native-worker error, or (in PJRT-less
+            // environments) the missing manifest fails first — both
+            // refuse to serve
+            assert!(
+                msg.contains("native worker") || msg.contains("manifest"),
+                "unexpected error: {msg}"
+            );
+        }
+    }
+    std::fs::remove_file(&path).unwrap();
+}
