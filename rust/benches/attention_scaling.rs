@@ -101,6 +101,13 @@ fn bench_native(report: &mut BenchReport) {
         println!("{:<14}{n:>9}{sparse_ms:>14.3}", "sparse");
         report.push(&format!("attn_native_dense_n{n}_ms"), dense_ms);
         report.push(&format!("attn_native_sparse_n{n}_ms"), sparse_ms);
+        // tokens/sec of the sparse kernel at this length — feeds the
+        // CI step-summary table only (the bench-check gate tracks the
+        // latency keys; this is their exact reciprocal)
+        if sparse_ms > 0.0 {
+            let tps = n as f64 / (sparse_ms / 1000.0);
+            report.push(&format!("attn_native_sparse_n{n}_tokens_per_sec"), tps);
+        }
         log_n.push((n as f64).ln());
         dense_log_t.push(median(&dense_samples).max(1e-9).ln());
         sparse_log_t.push(median(&sparse_samples).max(1e-9).ln());

@@ -1,0 +1,427 @@
+//! `bigbird bench-check` — the CI perf-regression gate.
+//!
+//! Compares the bench JSONs CI just produced (`BENCH_attention.json`
+//! from `benches/attention_scaling.rs`, `BENCH_train.json` from
+//! `benches/train_step.rs`) against **committed baselines**
+//! (`rust/bench_baselines.json`) with a generous noise tolerance, so a
+//! perf regression fails the smoke job instead of silently eroding the
+//! trajectory the artifacts record. Three modes of output:
+//!
+//! * the gate itself: any gated metric worse than its baseline by more
+//!   than the tolerance is an error listing every offender;
+//! * `--summary <path>` appends a markdown report (the per-seq-len
+//!   attention table, the train-step split, and the delta-vs-baseline
+//!   table) — pointed at `$GITHUB_STEP_SUMMARY` in CI so perf is
+//!   visible on every PR without downloading artifacts;
+//! * `--update-baselines` rewrites the baselines file from the current
+//!   JSONs (run the two benches locally, then commit the result — see
+//!   rust/README.md "Refreshing the perf baselines").
+//!
+//! Both inputs and the baselines file are `util::BenchReport` JSON and
+//! must carry the current `schema_version`; stale or foreign files are
+//! rejected, and a baseline key missing from the fresh reports fails
+//! the gate (it means the baselines no longer match the benches).
+
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::BenchReport;
+
+/// Tolerance used when the baselines file does not carry one: shared CI
+/// runners are noisy, so the gate only fires on a >25% regression.
+pub const DEFAULT_TOLERANCE: f64 = 0.25;
+
+/// Reserved baselines key holding the relative noise tolerance.
+const TOLERANCE_KEY: &str = "bench_check_tolerance";
+
+/// The metrics the gate tracks — the absolute per-measurement
+/// latencies only. Everything else stays informational (rendered in
+/// the summary, never gated): scaling exponents and losses are too
+/// noisy for the 25% tolerance, the fwd/bwd/opt split entries are
+/// small slices of an already-gated step, tokens/sec keys are exact
+/// reciprocals of gated latencies (the latency gate always fires
+/// first), and the sparse-vs-dense speedup ratio would fail the gate
+/// when the *dense reference* gets faster — a regression test must
+/// never punish an improvement.
+const GATED_KEYS: &[&str] = &[
+    "attn_native_dense_n2048_ms",
+    "attn_native_sparse_n256_ms",
+    "attn_native_sparse_n512_ms",
+    "attn_native_sparse_n1024_ms",
+    "attn_native_sparse_n2048_ms",
+    "train_native_step_ms",
+];
+
+/// Sequence lengths rendered in the attention summary table (must match
+/// `benches/attention_scaling.rs::NATIVE_LENGTHS`).
+const SUMMARY_LENGTHS: [usize; 4] = [256, 512, 1024, 2048];
+
+/// Inputs of one `bench-check` run (wired from CLI flags).
+#[derive(Debug)]
+pub struct BenchCheck<'a> {
+    /// Path of the attention-scaling bench JSON.
+    pub attention: &'a str,
+    /// Path of the train-step bench JSON.
+    pub train: &'a str,
+    /// Path of the committed baselines file.
+    pub baselines: &'a str,
+    /// Rewrite the baselines from the current JSONs instead of gating.
+    pub update: bool,
+    /// Append the markdown report to this path (`$GITHUB_STEP_SUMMARY`).
+    pub summary: Option<&'a str>,
+}
+
+/// In which direction is a bigger value worse?
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Direction {
+    LowerIsBetter,
+    HigherIsBetter,
+}
+
+/// Gating direction of a metric key, by naming convention: `*_ms` are
+/// latencies (lower is better), `*_tokens_per_sec` throughputs (higher
+/// is better). Ratios like `*_speedup_*` deliberately have no
+/// direction: gating dense/sparse would fail on a dense-only
+/// improvement.
+fn direction(key: &str) -> Option<Direction> {
+    if key.ends_with("_ms") {
+        Some(Direction::LowerIsBetter)
+    } else if key.ends_with("_tokens_per_sec") {
+        Some(Direction::HigherIsBetter)
+    } else {
+        None
+    }
+}
+
+/// Relative regression of `current` vs `baseline` (> 0 means worse).
+fn regression(dir: Direction, baseline: f64, current: f64) -> f64 {
+    match dir {
+        Direction::LowerIsBetter => (current - baseline) / baseline,
+        Direction::HigherIsBetter => (baseline - current) / baseline,
+    }
+}
+
+fn load_report(path: &str) -> Result<BenchReport> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading bench JSON {path} (run the benches first)"))?;
+    BenchReport::parse(&text).map_err(|e| anyhow!("{path}: {e}"))
+}
+
+/// Entry point: gate (default) or refresh (`--update-baselines`).
+pub fn run(cfg: &BenchCheck<'_>) -> Result<()> {
+    let attn = load_report(cfg.attention)?;
+    let train = load_report(cfg.train)?;
+    let mut merged = BenchReport::new();
+    for (k, v) in attn.entries().iter().chain(train.entries()) {
+        merged.push(k, *v);
+    }
+    if cfg.update {
+        if cfg.summary.is_some() {
+            eprintln!("note: --summary is ignored with --update-baselines (no gate ran)");
+        }
+        return update_baselines(cfg, &merged);
+    }
+    let base_text = std::fs::read_to_string(cfg.baselines).with_context(|| {
+        format!(
+            "reading perf baselines {} (seed them with `bench-check --update-baselines`)",
+            cfg.baselines
+        )
+    })?;
+    let base = BenchReport::parse(&base_text).map_err(|e| anyhow!("{}: {e}", cfg.baselines))?;
+    let tol = base.get(TOLERANCE_KEY).unwrap_or(DEFAULT_TOLERANCE);
+    if !(tol.is_finite() && tol > 0.0) {
+        bail!("{}: {TOLERANCE_KEY} must be a positive number, got {tol}", cfg.baselines);
+    }
+
+    let mut rows = Vec::new();
+    let mut failures = Vec::new();
+    for (key, baseline) in base.entries() {
+        let (key, baseline) = (key.as_str(), *baseline);
+        if key == TOLERANCE_KEY {
+            continue;
+        }
+        let Some(dir) = direction(key) else {
+            continue; // informational baseline entry: nothing to gate
+        };
+        if !(baseline.is_finite() && baseline > 0.0) {
+            bail!("{}: baseline for {key} must be positive, got {baseline}", cfg.baselines);
+        }
+        let Some(current) = merged.get(key) else {
+            failures.push(format!(
+                "{key}: present in baselines but missing from the bench JSONs (stale \
+                 baselines? refresh with --update-baselines)"
+            ));
+            continue;
+        };
+        if !current.is_finite() {
+            // fail closed: `NaN > tol` is false, so a NaN metric would
+            // otherwise sail through the gate as "ok"
+            failures.push(format!("{key}: non-finite bench value {current}"));
+            rows.push((key.to_string(), baseline, current, f64::NAN, "INVALID"));
+            continue;
+        }
+        let reg = regression(dir, baseline, current);
+        let status = if reg > tol { "REGRESSED" } else { "ok" };
+        if reg > tol {
+            failures.push(format!(
+                "{key}: {current:.3} vs baseline {baseline:.3} ({:+.1}% worse, tolerance \
+                 {:.0}%)",
+                reg * 100.0,
+                tol * 100.0
+            ));
+        }
+        rows.push((key.to_string(), baseline, current, reg, status));
+    }
+
+    // console table
+    println!("bench-check vs {} (tolerance {:.0}%):\n", cfg.baselines, tol * 100.0);
+    println!("{:<42}{:>12}{:>12}{:>9}  {}", "metric", "baseline", "current", "delta", "status");
+    for (key, baseline, current, reg, status) in &rows {
+        println!("{key:<42}{baseline:>12.3}{current:>12.3}{:>8.1}%  {status}", reg * 100.0);
+    }
+
+    if let Some(path) = cfg.summary {
+        let md = render_summary(&attn, &train, &rows, tol);
+        append_to(path, &md).with_context(|| format!("appending step summary to {path}"))?;
+        println!("\n(markdown summary appended to {path})");
+    }
+
+    if !failures.is_empty() {
+        bail!("bench-check: {} perf regression(s):\n  {}", failures.len(), failures.join("\n  "));
+    }
+    println!("\nbench-check: all {} gated metrics within tolerance", rows.len());
+    Ok(())
+}
+
+/// Rewrite the baselines file from the freshly produced bench JSONs.
+fn update_baselines(cfg: &BenchCheck<'_>, merged: &BenchReport) -> Result<()> {
+    // preserve a hand-tuned tolerance across refreshes; a present but
+    // unreadable file must not silently reset it to the default
+    let tol = match std::fs::read_to_string(cfg.baselines) {
+        Err(_) => DEFAULT_TOLERANCE, // no existing baselines: fresh seed
+        Ok(text) => match BenchReport::parse(&text) {
+            Ok(b) => b.get(TOLERANCE_KEY).unwrap_or(DEFAULT_TOLERANCE),
+            Err(e) => {
+                eprintln!(
+                    "warning: existing {} is unreadable ({e}); any hand-tuned \
+                     {TOLERANCE_KEY} is lost — resetting to {DEFAULT_TOLERANCE}",
+                    cfg.baselines
+                );
+                DEFAULT_TOLERANCE
+            }
+        },
+    };
+    let mut out = BenchReport::new();
+    out.push(TOLERANCE_KEY, tol);
+    for &key in GATED_KEYS {
+        let v = merged.get(key).with_context(|| {
+            format!("gated metric {key} missing from the bench JSONs; rerun both benches")
+        })?;
+        out.push(key, v);
+    }
+    out.write(cfg.baselines).with_context(|| format!("writing {}", cfg.baselines))?;
+    println!(
+        "baselines refreshed from {} + {} → {} ({} gated metrics, tolerance {:.0}%); \
+         commit the file to land the new floor",
+        cfg.attention,
+        cfg.train,
+        cfg.baselines,
+        GATED_KEYS.len(),
+        tol * 100.0
+    );
+    Ok(())
+}
+
+/// Markdown report for `$GITHUB_STEP_SUMMARY`: attention scaling table
+/// (tokens/sec + sparse-vs-dense speedup per sequence length), the
+/// train-step split, and the delta-vs-baseline gate table.
+fn render_summary(
+    attn: &BenchReport,
+    train: &BenchReport,
+    rows: &[(String, f64, f64, f64, &str)],
+    tol: f64,
+) -> String {
+    let mut md = String::new();
+    let _ = writeln!(md, "## Native kernel perf\n");
+    let _ = writeln!(md, "### Attention scaling (block-sparse vs dense, 1 head)\n");
+    let _ = writeln!(md, "| seq len | dense ms | sparse ms | sparse tokens/sec | speedup |");
+    let _ = writeln!(md, "|--------:|---------:|----------:|------------------:|--------:|");
+    for n in SUMMARY_LENGTHS {
+        let dense = attn.get(&format!("attn_native_dense_n{n}_ms"));
+        let sparse = attn.get(&format!("attn_native_sparse_n{n}_ms"));
+        let (Some(dense), Some(sparse)) = (dense, sparse) else {
+            continue;
+        };
+        // prefer the tokens/sec the bench itself emitted; recompute
+        // from the latency only as a fallback
+        let tps = attn
+            .get(&format!("attn_native_sparse_n{n}_tokens_per_sec"))
+            .unwrap_or_else(|| if sparse > 0.0 { n as f64 / (sparse / 1000.0) } else { 0.0 });
+        let speedup = if sparse > 0.0 { dense / sparse } else { 0.0 };
+        let _ = writeln!(md, "| {n} | {dense:.2} | {sparse:.2} | {tps:.0} | {speedup:.1}× |");
+    }
+    let _ = writeln!(md, "\n### Train step (native, tiny config)\n");
+    let _ = writeln!(md, "| tokens/sec | step ms | fwd ms | bwd ms | opt ms |");
+    let _ = writeln!(md, "|-----------:|--------:|-------:|-------:|-------:|");
+    let cell = |k: &str| train.get(k).map_or_else(|| "—".to_string(), |v| format!("{v:.1}"));
+    let _ = writeln!(
+        md,
+        "| {} | {} | {} | {} | {} |",
+        cell("train_native_tokens_per_sec"),
+        cell("train_native_step_ms"),
+        cell("train_native_fwd_ms"),
+        cell("train_native_bwd_ms"),
+        cell("train_native_opt_ms")
+    );
+    let _ = writeln!(md, "\n### Gate vs committed baselines (tolerance {:.0}%)\n", tol * 100.0);
+    let _ = writeln!(md, "| metric | baseline | current | Δ | status |");
+    let _ = writeln!(md, "|:-------|---------:|--------:|--:|:-------|");
+    for (key, baseline, current, reg, status) in rows {
+        let mark = if *status == "ok" { "✅ ok" } else { "❌ regressed" };
+        let delta = reg * 100.0;
+        let _ = writeln!(md, "| `{key}` | {baseline:.2} | {current:.2} | {delta:+.1}% | {mark} |");
+    }
+    md
+}
+
+/// Append `text` to `path`, creating the file when absent (the step
+/// summary file already exists in CI; locally it may not).
+fn append_to(path: &str, text: &str) -> std::io::Result<()> {
+    use std::io::Write as _;
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    f.write_all(text.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn directions_follow_key_naming() {
+        assert_eq!(direction("attn_native_sparse_n2048_ms"), Some(Direction::LowerIsBetter));
+        assert_eq!(direction("train_native_tokens_per_sec"), Some(Direction::HigherIsBetter));
+        // ratios are deliberately ungated: dense/sparse would fail the
+        // gate on a dense-only improvement
+        assert_eq!(direction("attn_native_sparse_speedup_n2048"), None);
+        assert_eq!(direction("attn_native_sparse_exponent"), None);
+        assert_eq!(direction(TOLERANCE_KEY), None);
+    }
+
+    #[test]
+    fn regression_is_signed_worseness() {
+        // latency: higher is worse
+        assert!(regression(Direction::LowerIsBetter, 100.0, 130.0) > 0.25);
+        assert!(regression(Direction::LowerIsBetter, 100.0, 90.0) < 0.0);
+        // throughput: lower is worse
+        assert!(regression(Direction::HigherIsBetter, 1000.0, 700.0) > 0.25);
+        assert!(regression(Direction::HigherIsBetter, 1000.0, 1200.0) < 0.0);
+    }
+
+    #[test]
+    fn every_gated_key_has_a_direction() {
+        for key in GATED_KEYS {
+            assert!(direction(key).is_some(), "{key} would never be compared");
+        }
+    }
+
+    #[test]
+    fn committed_baselines_cover_every_gated_key() {
+        // the gate iterates the *baselines* entries, so a GATED_KEYS
+        // addition that skips the `--update-baselines` + commit step
+        // would silently never be compared — pin the committed file
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/bench_baselines.json");
+        let text = std::fs::read_to_string(path).expect("committed bench_baselines.json");
+        let base = BenchReport::parse(&text).expect("baselines must parse at current schema");
+        for key in GATED_KEYS {
+            let v = base.get(key);
+            assert!(v.is_some(), "{key} is gated but missing from bench_baselines.json");
+            let v = v.unwrap();
+            assert!(v.is_finite() && v > 0.0, "{key} baseline must be positive, got {v}");
+        }
+        let tol = base.get(TOLERANCE_KEY).unwrap_or(DEFAULT_TOLERANCE);
+        assert!(tol.is_finite() && tol > 0.0, "committed tolerance must be positive");
+    }
+
+    #[test]
+    fn gate_passes_and_fails_end_to_end() {
+        // pid-suffixed so concurrent `cargo test` runs on one machine
+        // (worktrees, parallel CI jobs) cannot race on the files
+        let dir = std::env::temp_dir().join(format!("bb_bench_check_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = |name: &str| dir.join(name).display().to_string();
+        // leftovers from a previous test run would defeat the
+        // missing-baselines assertion below
+        for stale in ["baselines.json", "summary.md"] {
+            let _ = std::fs::remove_file(dir.join(stale));
+        }
+
+        // synthesize bench JSONs covering every gated key
+        let mut attn = BenchReport::new();
+        for n in SUMMARY_LENGTHS {
+            attn.push(&format!("attn_native_dense_n{n}_ms"), 80.0);
+            attn.push(&format!("attn_native_sparse_n{n}_ms"), 10.0);
+        }
+        attn.push("attn_native_sparse_n2048_tokens_per_sec", 204_800.0);
+        attn.push("attn_native_sparse_speedup_n2048", 8.0);
+        let mut train = BenchReport::new();
+        train.push("train_native_tokens_per_sec", 2000.0);
+        train.push("train_native_step_ms", 256.0);
+        train.push("train_native_fwd_ms", 100.0);
+        attn.write(&p("attn.json")).unwrap();
+        train.write(&p("train.json")).unwrap();
+
+        let attention = p("attn.json");
+        let train_p = p("train.json");
+        let baselines = p("baselines.json");
+        let summary = p("summary.md");
+        let mk = |update: bool| BenchCheck {
+            attention: &attention,
+            train: &train_p,
+            baselines: &baselines,
+            update,
+            summary: Some(&summary),
+        };
+
+        // no baselines yet: the gate must ask for them descriptively
+        let err = run(&mk(false)).unwrap_err();
+        assert!(format!("{err:#}").contains("update-baselines"), "{err:#}");
+
+        // seed baselines from the current numbers, then the gate passes
+        run(&mk(true)).unwrap();
+        run(&mk(false)).unwrap();
+        let md = std::fs::read_to_string(&summary).unwrap();
+        assert!(md.contains("Gate vs committed baselines"), "{md}");
+        assert!(md.contains("✅"), "{md}");
+
+        // a >tolerance regression fails the gate and names the metric
+        let mut slow = BenchReport::new();
+        for n in SUMMARY_LENGTHS {
+            slow.push(&format!("attn_native_dense_n{n}_ms"), 80.0);
+            slow.push(&format!("attn_native_sparse_n{n}_ms"), 10.0);
+        }
+        slow.push("attn_native_sparse_n2048_tokens_per_sec", 204_800.0);
+        slow.push("attn_native_sparse_speedup_n2048", 8.0);
+        let slow_sparse = 10.0 * (1.0 + DEFAULT_TOLERANCE) * 1.5;
+        // overwrite the 2048 latency with a clear regression
+        let mut slow_attn = BenchReport::new();
+        for (k, v) in slow.entries() {
+            let v = if k == "attn_native_sparse_n2048_ms" { slow_sparse } else { *v };
+            slow_attn.push(k, v);
+        }
+        slow_attn.write(&p("attn.json")).unwrap();
+        let err = run(&mk(false)).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("attn_native_sparse_n2048_ms"),
+            "regression must be named: {err:#}"
+        );
+
+        // a stale baseline key (missing from fresh JSONs) also fails
+        let mut stale = BenchReport::new();
+        stale.push(TOLERANCE_KEY, DEFAULT_TOLERANCE);
+        stale.push("attn_native_retired_metric_ms", 1.0);
+        stale.write(&baselines).unwrap();
+        let err = run(&mk(false)).unwrap_err();
+        assert!(format!("{err:#}").contains("retired_metric"), "{err:#}");
+    }
+}

@@ -7,6 +7,7 @@
 //! * `experiment <id>`    — regenerate one paper table/figure
 //! * `graph`              — attention-graph theory report (Sec. 2 claims)
 //! * `list`               — list artifacts in the manifest
+//! * `bench-check`        — gate bench JSONs against committed perf baselines
 
 use anyhow::{bail, Context, Result};
 
@@ -31,6 +32,18 @@ pub struct Flags {
     /// `--checkpoint <path>` native checkpoint: written by
     /// `train --backends native`, loaded by `serve --backends native:N`.
     pub checkpoint: Option<String>,
+    /// `--attention-json <path>`: attention bench JSON for `bench-check`.
+    pub attention_json: String,
+    /// `--train-json <path>`: train-step bench JSON for `bench-check`.
+    pub train_json: String,
+    /// `--baselines <path>`: committed perf baselines for `bench-check`.
+    pub baselines: String,
+    /// `--update-baselines`: rewrite the baselines from the current
+    /// bench JSONs instead of gating against them.
+    pub update_baselines: bool,
+    /// `--summary <path>`: append the `bench-check` markdown report
+    /// (pointed at `$GITHUB_STEP_SUMMARY` in CI).
+    pub summary: Option<String>,
     /// Remaining positional args.
     pub positional: Vec<String>,
 }
@@ -54,6 +67,9 @@ pub fn parse_flags(args: &[String]) -> Result<Flags> {
         steps: 200,
         backends: serving_defaults.backends,
         max_inflight: serving_defaults.max_inflight,
+        attention_json: "BENCH_attention.json".to_string(),
+        train_json: "BENCH_train.json".to_string(),
+        baselines: "bench_baselines.json".to_string(),
         ..Default::default()
     };
     let mut it = args.iter();
@@ -76,6 +92,19 @@ pub fn parse_flags(args: &[String]) -> Result<Flags> {
             "--checkpoint" => {
                 f.checkpoint = Some(it.next().context("--checkpoint needs a value")?.clone())
             }
+            "--attention-json" => {
+                f.attention_json = it.next().context("--attention-json needs a value")?.clone()
+            }
+            "--train-json" => {
+                f.train_json = it.next().context("--train-json needs a value")?.clone()
+            }
+            "--baselines" => {
+                f.baselines = it.next().context("--baselines needs a value")?.clone()
+            }
+            "--update-baselines" => f.update_baselines = true,
+            "--summary" => {
+                f.summary = Some(it.next().context("--summary needs a value")?.clone())
+            }
             other if other.starts_with("--") => bail!("unknown flag {other}"),
             other => f.positional.push(other.to_string()),
         }
@@ -95,6 +124,10 @@ COMMANDS:
   serve                  run the long-document serving demo workload
   train                  run the MLM training driver
   graph                  attention-graph theory report (Sec. 2)
+  bench-check            gate BENCH_attention.json / BENCH_train.json against
+                         the committed perf baselines (bench_baselines.json);
+                         --update-baselines refreshes them, --summary <path>
+                         appends a markdown report ($GITHUB_STEP_SUMMARY)
   experiment <id>        regenerate a paper table/figure; <id> one of:
                          table1 | mlm_bpc | qa | classification | summarization |
                          genomics | fig_ctxlen | scaling | task1 | patterns |
@@ -116,6 +149,15 @@ FLAGS:
                          writes it (default runs/native_mlm.ckpt), serve
                          --backends native:N loads it and serves the trained
                          weights
+  --attention-json <p>   bench-check: attention bench JSON
+                         (default BENCH_attention.json)
+  --train-json <p>       bench-check: train-step bench JSON
+                         (default BENCH_train.json)
+  --baselines <p>        bench-check: committed perf baselines
+                         (default bench_baselines.json)
+  --update-baselines     bench-check: rewrite the baselines from the
+                         current bench JSONs instead of gating
+  --summary <p>          bench-check: append the markdown perf report here
 ";
 
 /// CLI entrypoint used by `main.rs`.
@@ -145,6 +187,13 @@ pub fn run(args: &[String]) -> Result<()> {
         "serve" => crate::experiments::serve_demo::run(&flags),
         "train" => crate::experiments::train_demo::run(&flags),
         "graph" => crate::experiments::graph_report::run(&flags),
+        "bench-check" => crate::bench_check::run(&crate::bench_check::BenchCheck {
+            attention: &flags.attention_json,
+            train: &flags.train_json,
+            baselines: &flags.baselines,
+            update: flags.update_baselines,
+            summary: flags.summary.as_deref(),
+        }),
         "experiment" => {
             let id = flags
                 .positional
@@ -227,6 +276,34 @@ mod tests {
         assert_eq!(f.checkpoint.as_deref(), Some("runs/x.ckpt"));
         assert_eq!(parse_flags(&s(&[])).unwrap().checkpoint, None);
         assert!(parse_flags(&s(&["--checkpoint"])).is_err());
+    }
+
+    #[test]
+    fn parse_bench_check_flags() {
+        let f = parse_flags(&s(&[])).unwrap();
+        assert_eq!(f.attention_json, "BENCH_attention.json");
+        assert_eq!(f.train_json, "BENCH_train.json");
+        assert_eq!(f.baselines, "bench_baselines.json");
+        assert!(!f.update_baselines);
+        assert_eq!(f.summary, None);
+        let f = parse_flags(&s(&[
+            "--attention-json",
+            "a.json",
+            "--train-json",
+            "t.json",
+            "--baselines",
+            "b.json",
+            "--update-baselines",
+            "--summary",
+            "s.md",
+        ]))
+        .unwrap();
+        assert_eq!(f.attention_json, "a.json");
+        assert_eq!(f.train_json, "t.json");
+        assert_eq!(f.baselines, "b.json");
+        assert!(f.update_baselines);
+        assert_eq!(f.summary.as_deref(), Some("s.md"));
+        assert!(parse_flags(&s(&["--summary"])).is_err());
     }
 
     #[test]

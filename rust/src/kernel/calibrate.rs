@@ -18,6 +18,7 @@ use crate::config::AttnVariant;
 use crate::runtime::Roofline;
 
 use super::layout::BlockCsr;
+use super::microkernel::{pack_transposed, qk_tile};
 use super::sparse::{sparse_forward, SparseScratch};
 use super::HeadViews;
 
@@ -36,11 +37,14 @@ fn probe() -> Roofline {
     }
 }
 
-/// Sustained compute: a 96³ f32 matmul in the same ikj loop order the
-/// native model's projections use, measured on one thread and scaled by
-/// the core count — the batch driver fans `batch × heads` head problems
-/// across all cores, so single-thread numbers would overestimate native
-/// cost by a core-count factor against the static PJRT seeds.
+/// Sustained compute: a 96³ f32 GEMM **through the tiled microkernel
+/// the kernels actually run** (transpose pack + register-blocked
+/// [`qk_tile`]), measured on one thread and scaled by the core count —
+/// the batch driver fans `batch × heads` head problems across all
+/// cores, so single-thread numbers would overestimate native cost by a
+/// core-count factor against the static PJRT seeds. Probing the
+/// microkernel (not a hand-rolled loop) keeps roofline routing honest:
+/// the measured GFLOP/s is what the sparse/dense/backward tiles see.
 fn probe_gflops() -> f64 {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     probe_single_thread_gflops() * cores as f64
@@ -51,20 +55,14 @@ fn probe_single_thread_gflops() -> f64 {
     const REPS: usize = 6;
     let a: Vec<f32> = (0..M * M).map(|i| ((i % 83) as f32) * 0.01).collect();
     let b: Vec<f32> = (0..M * M).map(|i| ((i % 89) as f32) * 0.01).collect();
+    let mut bt = vec![0.0f32; M * M];
     let mut c = vec![0.0f32; M * M];
     let t0 = Instant::now();
     for _ in 0..REPS {
-        c.fill(0.0);
-        for i in 0..M {
-            let a_row = &a[i * M..(i + 1) * M];
-            let c_row = &mut c[i * M..(i + 1) * M];
-            for (kk, &av) in a_row.iter().enumerate() {
-                let b_row = &b[kk * M..(kk + 1) * M];
-                for (cv, &bv) in c_row.iter_mut().zip(b_row) {
-                    *cv += av * bv;
-                }
-            }
-        }
+        // the pack is part of the measured path: every (qb, kb) tile
+        // the real kernels execute pays it too
+        pack_transposed(&b, M, M, &mut bt);
+        qk_tile(&a, &bt, M, M, M, 1.0, None, &mut c);
         black_box(&c);
     }
     let secs = t0.elapsed().as_secs_f64();

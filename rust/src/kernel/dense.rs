@@ -1,15 +1,20 @@
 //! Blocked dense reference kernel: the correctness oracle.
 //!
-//! Materialises each query row's full score vector (masked to the
+//! Materialises each query block's full score rows (masked to the
 //! pattern's attended blocks and the key-validity mask), applies a
-//! classic two-pass softmax, and accumulates the value sum — the
-//! textbook O(n²)-shaped computation the sparse kernel must agree with
-//! to ≤ 1e-5 (see `tests/kernel_parity.rs`). Deliberately written with
-//! a *different* algorithm than [`super::sparse`] (full-row two-pass
-//! softmax vs per-block streaming softmax) so shared bugs can't cancel.
+//! classic two-pass softmax per row, and accumulates the value sum —
+//! the textbook O(n²)-shaped computation the sparse kernel must agree
+//! with to ≤ 1e-5 (see `tests/kernel_parity.rs`). The block-level math
+//! routes through the shared [`super::microkernel`] tiles, but the
+//! *algorithm* stays different from [`super::sparse`] (full-row
+//! two-pass softmax vs per-block streaming softmax), and the
+//! microkernels themselves are pinned against plain scalar references
+//! in `tests/microkernel_parity.rs` — so a shared-tile bug still can't
+//! cancel silently.
 
 use super::layout::BlockCsr;
-use super::{dot, HeadViews};
+use super::microkernel::{av_tile, pack_transposed, qk_tile};
+use super::HeadViews;
 
 /// Masked dense attention forward for one `[n, head_dim]` head:
 /// `out[i] = softmax(mask(Q Kᵀ / √d))[i] · V`, where the mask admits
@@ -22,43 +27,58 @@ pub fn dense_reference(x: &HeadViews<'_>, head_dim: usize, layout: &BlockCsr, ou
     x.check(n, head_dim);
     assert_eq!(out.len(), n * head_dim, "output must be [n, head_dim]");
     let scale = 1.0 / (head_dim as f32).sqrt();
-    let mut scores = vec![f32::NEG_INFINITY; n];
-    for qi in 0..n {
-        let qb = qi / b;
-        let q_row = &x.q[qi * head_dim..(qi + 1) * head_dim];
+    // the oracle allocates per call (it is not on the serving path):
+    // one full [block, n] score panel plus the per-tile pack buffers
+    let mut scores = vec![f32::NEG_INFINITY; b * n];
+    let mut tile = vec![0.0f32; b * b];
+    let mut kt = vec![0.0f32; head_dim * b];
+    let mut denoms = vec![0.0f32; b];
+    for qb in 0..layout.nb {
+        let qs = layout.token_span(qb);
+        let q_block = &x.q[qs.start * head_dim..qs.end * head_dim];
         scores.fill(f32::NEG_INFINITY);
         for &kb in layout.row(qb) {
-            for kj in kb * b..(kb + 1) * b {
-                let valid = match x.key_valid {
-                    Some(mask) => mask[kj] > 0.0,
-                    None => true,
-                };
-                if valid {
-                    let k_row = &x.k[kj * head_dim..(kj + 1) * head_dim];
-                    scores[kj] = dot(q_row, k_row) * scale;
+            let ks = layout.token_span(kb);
+            let k_block = &x.k[ks.start * head_dim..ks.end * head_dim];
+            let valid = x.key_valid.map(|mask| &mask[ks.clone()]);
+            pack_transposed(k_block, b, head_dim, &mut kt);
+            qk_tile(q_block, &kt, b, b, head_dim, scale, valid, &mut tile);
+            for i in 0..b {
+                scores[i * n + ks.start..i * n + ks.end]
+                    .copy_from_slice(&tile[i * b..(i + 1) * b]);
+            }
+        }
+        // two-pass softmax per row over the full score panel: max, then
+        // exp-weights in place (non-attended / masked stay exactly zero)
+        for i in 0..b {
+            let row = &mut scores[i * n..(i + 1) * n];
+            let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let o_row = &mut out[(qs.start + i) * head_dim..(qs.start + i + 1) * head_dim];
+            o_row.fill(0.0);
+            denoms[i] = 0.0;
+            if m == f32::NEG_INFINITY {
+                row.fill(0.0);
+                continue; // no admissible key
+            }
+            let mut denom = 0.0f32;
+            for s in row.iter_mut() {
+                if *s == f32::NEG_INFINITY {
+                    *s = 0.0;
+                } else {
+                    let w = (*s - m).exp();
+                    denom += w;
+                    *s = w;
                 }
             }
+            denoms[i] = denom;
         }
-        let m = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let o_row = &mut out[qi * head_dim..(qi + 1) * head_dim];
-        o_row.fill(0.0);
-        if m == f32::NEG_INFINITY {
-            continue; // no admissible key
-        }
-        let mut denom = 0.0f32;
-        for (kj, &s) in scores.iter().enumerate() {
-            if s == f32::NEG_INFINITY {
-                continue;
+        // one tiled AV accumulate of the whole block over all n keys
+        av_tile(&scores, x.v, b, n, head_dim, &mut out[qs.start * head_dim..qs.end * head_dim]);
+        for (i, &denom) in denoms.iter().enumerate() {
+            if denom > 0.0 {
+                let o_row = &mut out[(qs.start + i) * head_dim..(qs.start + i + 1) * head_dim];
+                o_row.iter_mut().for_each(|o| *o /= denom);
             }
-            let w = (s - m).exp();
-            denom += w;
-            let v_row = &x.v[kj * head_dim..(kj + 1) * head_dim];
-            for (o, &vv) in o_row.iter_mut().zip(v_row) {
-                *o += w * vv;
-            }
-        }
-        if denom > 0.0 {
-            o_row.iter_mut().for_each(|o| *o /= denom);
         }
     }
 }

@@ -8,9 +8,10 @@
 //! call. [`KernelPool`] fixes both: one process-wide pool of
 //! `available_parallelism` threads, each owning a [`ScratchArena`]
 //! (forward [`SparseScratch`] + backward
-//! [`AttnGradScratch`](super::grad::AttnGradScratch)) that lives for
-//! the lifetime of the process and is reused across every forward
-//! *and* backward invocation from every caller.
+//! [`AttnGradScratch`](super::grad::AttnGradScratch), which carry the
+//! tiled microkernels' per-(query-block, stored-block) pack and tile
+//! buffers) that lives for the lifetime of the process and is reused
+//! across every forward *and* backward invocation from every caller.
 //!
 //! Work submission keeps the fork-join shape: a batch call splits its
 //! `batch × heads` independent head problems into contiguous chunks,

@@ -19,22 +19,52 @@
 //! the forward. Parallelism mirrors the forward driver: one task per
 //! `(batch, head)` problem, so the dK/dV scatter never races — within a
 //! head problem query blocks are processed sequentially.
+//!
+//! Like the forward, every block-level product runs on the tiled
+//! [`microkernel`](crate::kernel::microkernel) layer: the recomputed
+//! score tile and the dP = dO·Vᵀ tile are both [`qk_tile`] GEMMs
+//! against packed transposes, and the dQ/dK/dV gathers are [`av_tile`]
+//! accumulates (dK/dV on a transposed weight tile — a scatter becomes
+//! a gather), so forward serving and training backward share one hot
+//! inner loop.
 
 use crate::kernel::layout::BlockCsr;
-use crate::kernel::{dot, HeadViews};
+use crate::kernel::microkernel::{av_tile, pack_transposed, qk_tile, row_dots};
+use crate::kernel::HeadViews;
 
 /// Reusable per-thread scratch for [`sparse_attention_backward`]: the
-/// per-row `δ = dO·O` values of the current query block. Grown on
-/// demand, never shrunk; lives in the kernel pool's per-thread arena.
+/// per-row `δ = dO·O` values of the current query block plus the
+/// per-tile pack/probability buffers. Grown on demand, never shrunk;
+/// lives in the kernel pool's per-thread arena.
 #[derive(Debug, Default)]
 pub struct AttnGradScratch {
+    /// `δ_i = dO_i · O_i` per query row of the block.
     delta: Vec<f32>,
+    /// Packed transpose of the current key block, `head_dim × block`.
+    kt: Vec<f32>,
+    /// Packed transpose of the current value block, `head_dim × block`.
+    vt: Vec<f32>,
+    /// Score → probability tile, `block × block`.
+    p: Vec<f32>,
+    /// dP → dS tile, `block × block`.
+    ds: Vec<f32>,
+    /// Transposed weight tile (Pᵀ, then dSᵀ), `block × block`.
+    tp: Vec<f32>,
 }
 
 impl AttnGradScratch {
     /// Fresh empty scratch (buffers grow on first use).
     pub fn new() -> Self {
         AttnGradScratch::default()
+    }
+
+    fn ensure(&mut self, block: usize, head_dim: usize) {
+        self.delta.resize(block, 0.0);
+        self.kt.resize(head_dim * block, 0.0);
+        self.vt.resize(head_dim * block, 0.0);
+        self.p.resize(block * block, 0.0);
+        self.ds.resize(block * block, 0.0);
+        self.tp.resize(block * block, 0.0);
     }
 }
 
@@ -75,51 +105,64 @@ pub fn sparse_attention_backward(
     dq.fill(0.0);
     dk.fill(0.0);
     dv.fill(0.0);
-    scratch.delta.resize(b, 0.0);
+    scratch.ensure(b, head_dim);
     for qb in 0..layout.nb {
-        for i in 0..b {
-            let qi = qb * b + i;
-            let row = qi * head_dim..(qi + 1) * head_dim;
-            scratch.delta[i] = dot(&d_o[row.clone()], &o[row]);
-        }
+        let qs = layout.token_span(qb);
+        let q_range = qs.start * head_dim..qs.end * head_dim;
+        let q_block = &x.q[q_range.clone()];
+        let do_block = &d_o[q_range.clone()];
+        // δ_i = dO_i · O_i (the flash-attention rowsum trick)
+        row_dots(do_block, &o[q_range.clone()], b, head_dim, &mut scratch.delta);
         for &kb in layout.row(qb) {
+            let ks = layout.token_span(kb);
+            let k_range = ks.start * head_dim..ks.end * head_dim;
+            let k_block = &x.k[k_range.clone()];
+            let v_block = &x.v[k_range.clone()];
+            let valid = x.key_valid.map(|mask| &mask[ks.clone()]);
+            pack_transposed(k_block, b, head_dim, &mut scratch.kt);
+            pack_transposed(v_block, b, head_dim, &mut scratch.vt);
+            // recomputed score tile (masked → −inf), same GEMM as the
+            // forward's QKᵀ
+            qk_tile(q_block, &scratch.kt, b, b, head_dim, scale, valid, &mut scratch.p);
+            // dP tile = dO · Vᵀ. Deliberately *unmasked*: p = 0 already
+            // kills masked entries, while a −inf here would turn
+            // p · (dp − δ) into 0 · ∞ = NaN.
+            qk_tile(do_block, &scratch.vt, b, b, head_dim, 1.0, None, &mut scratch.ds);
+            // scores → probabilities: p_ij = exp(s_ij − m_i) / l_i
             for i in 0..b {
-                let qi = qb * b + i;
+                let qi = qs.start + i;
                 let li = l[qi];
+                let p_row = &mut scratch.p[i * b..(i + 1) * b];
                 if li <= 0.0 {
-                    continue; // fully masked row: forward output was zero
+                    // fully masked row: forward output was zero
+                    p_row.fill(0.0);
+                    continue;
                 }
                 let mi = m[qi];
-                let delta = scratch.delta[i];
-                let q_row = &x.q[qi * head_dim..(qi + 1) * head_dim];
-                let do_row = &d_o[qi * head_dim..(qi + 1) * head_dim];
-                for jj in 0..b {
-                    let kj = kb * b + jj;
-                    if let Some(mask) = x.key_valid {
-                        if mask[kj] <= 0.0 {
-                            continue;
-                        }
-                    }
-                    let k_row = &x.k[kj * head_dim..(kj + 1) * head_dim];
-                    let s = dot(q_row, k_row) * scale;
-                    let p = (s - mi).exp() / li;
-                    if p == 0.0 {
-                        continue; // fully underflowed: no forward contribution
-                    }
-                    let v_row = &x.v[kj * head_dim..(kj + 1) * head_dim];
-                    for (dvj, &g) in dv[kj * head_dim..(kj + 1) * head_dim].iter_mut().zip(do_row) {
-                        *dvj += p * g;
-                    }
-                    let dp = dot(do_row, v_row);
-                    let ds = p * (dp - delta) * scale;
-                    for (dqi, &kv) in dq[qi * head_dim..(qi + 1) * head_dim].iter_mut().zip(k_row) {
-                        *dqi += ds * kv;
-                    }
-                    for (dkj, &qv) in dk[kj * head_dim..(kj + 1) * head_dim].iter_mut().zip(q_row) {
-                        *dkj += ds * qv;
-                    }
+                let inv_l = 1.0 / li;
+                for s in p_row.iter_mut() {
+                    // exp(-inf − m_i) = 0: masked keys contribute nothing
+                    *s = (*s - mi).exp() * inv_l;
                 }
             }
+            // dS = P ∘ (dP − δ) · scale, in place over the dP tile
+            for i in 0..b {
+                let delta = scratch.delta[i];
+                let p_row = &scratch.p[i * b..(i + 1) * b];
+                let ds_row = &mut scratch.ds[i * b..(i + 1) * b];
+                for (dsv, &pv) in ds_row.iter_mut().zip(p_row) {
+                    *dsv = pv * (*dsv - delta) * scale;
+                }
+            }
+            // dQ_block += dS · K (query-row gather)
+            av_tile(&scratch.ds, k_block, b, b, head_dim, &mut dq[q_range.clone()]);
+            // dV_block += Pᵀ · dO (the scatter becomes a gather on the
+            // transposed tile)
+            pack_transposed(&scratch.p, b, b, &mut scratch.tp);
+            av_tile(&scratch.tp, do_block, b, b, head_dim, &mut dv[k_range.clone()]);
+            // dK_block += dSᵀ · Q
+            pack_transposed(&scratch.ds, b, b, &mut scratch.tp);
+            av_tile(&scratch.tp, q_block, b, b, head_dim, &mut dk[k_range]);
         }
     }
 }

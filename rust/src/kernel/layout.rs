@@ -102,6 +102,13 @@ impl BlockCsr {
         &self.cols[self.row_ptr[qb]..self.row_ptr[qb + 1]]
     }
 
+    /// Token index range covered by block `blk`
+    /// (`blk·block .. (blk+1)·block`) — the gather span the kernels
+    /// slice Q/K/V rows and key-validity masks with.
+    pub fn token_span(&self, blk: usize) -> std::ops::Range<usize> {
+        blk * self.block..(blk + 1) * self.block
+    }
+
     /// Provenance tags parallel to [`BlockCsr::row`].
     pub fn row_prov(&self, qb: usize) -> &[BlockProvenance] {
         &self.prov[self.row_ptr[qb]..self.row_ptr[qb + 1]]
@@ -198,6 +205,18 @@ mod tests {
         assert!(d64 < d32, "density must fall with nb: {d64} !< {d32}");
         let dense = BlockCsr::compile(&spec(AttnVariant::Dense, 16, 0, 1, 0, 0), 8);
         assert!((dense.density() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn token_span_tiles_the_sequence() {
+        let csr = BlockCsr::compile(&spec(AttnVariant::Window, 5, 0, 1, 0, 0), 6);
+        let mut covered = Vec::new();
+        for blk in 0..csr.nb {
+            let span = csr.token_span(blk);
+            assert_eq!(span.len(), csr.block);
+            covered.extend(span);
+        }
+        assert_eq!(covered, (0..csr.seq_len()).collect::<Vec<_>>());
     }
 
     #[test]

@@ -1,0 +1,403 @@
+//! SIMD-tiled microkernels: the one hot inner loop every block-level
+//! attention computation routes through.
+//!
+//! The scalar kernels left most of each core's FLOPs on the table: a
+//! per-element `dot(q_row, k_row)` walks K row-major, so the compiler
+//! sees a chain of dependent reductions and emits scalar code. These
+//! microkernels restructure each block tile the way flash-style kernels
+//! do on accelerators, but phrased for the **autovectorizer** — no
+//! `unsafe`, no intrinsics, just fixed-lane-width accumulator arrays
+//! the compiler maps straight onto vector registers:
+//!
+//! * [`pack_transposed`] — transpose a K/V block once per tile so the
+//!   GEMM inner loop reads **contiguous** lanes instead of striding by
+//!   `head_dim` (an O(b·d) pack amortised over O(b²·d) compute);
+//! * [`qk_tile`] — the QKᵀ tile GEMM: [`MR`]×[`LANES`] register
+//!   blocks of `f32` accumulators held across the whole `d` loop, with
+//!   **fused scale + key-validity masking** in the epilogue (masked
+//!   columns become `−inf`, ready for the softmax) and explicit scalar
+//!   remainder handling for rows % [`MR`] and cols % [`LANES`];
+//! * [`av_tile`] — the tiled AV accumulate `acc += W · V`: the output
+//!   row is processed in [`LANES`]-wide chunks that stay in registers
+//!   across the whole key loop (the backward reuses it for the
+//!   dQ/dK/dV gathers — dKᵀ/dVᵀ scatters become `av_tile` calls on a
+//!   transposed weight tile);
+//! * [`row_dots`] — lane-partial row-wise dot products (the backward's
+//!   `δ = dO · O` rowsums).
+//!
+//! Within one output element every accumulation runs in the same
+//! ascending-index order as the scalar reference, so results match the
+//! retired scalar path to well under the kernel-parity tolerance
+//! (`tests/microkernel_parity.rs` pins this across remainder shapes).
+//! Per-tile scratch (the packed transpose, score/probability tiles)
+//! lives in [`SparseScratch`](super::sparse::SparseScratch) and
+//! [`AttnGradScratch`](super::grad::AttnGradScratch), which the
+//! [`KernelPool`](super::driver::KernelPool) hoists into per-thread
+//! arenas — steady state allocates nothing.
+
+/// Fixed vector-lane width: 8 × f32 (one AVX register, two SSE/NEON
+/// registers — wide enough to saturate either without spilling the
+/// [`MR`]-row accumulator block).
+pub const LANES: usize = 8;
+
+/// Register-block height: rows of the output tile accumulated
+/// simultaneously, so each packed [`LANES`]-wide load of the B operand
+/// is reused [`MR`] times. `MR × LANES` f32 accumulators fit in 8 SSE
+/// (4 AVX) registers, leaving room for the operand vectors.
+pub const MR: usize = 4;
+
+/// Transpose `src` (`rows × cols`, row-major) into `dst`
+/// (`cols × rows`, row-major): `dst[c·rows + r] = src[r·cols + c]`.
+/// Packing K/V blocks this way once per tile lets the GEMM inner loops
+/// read contiguous lanes. Every element of `dst` is written.
+pub fn pack_transposed(src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), rows * cols, "src must be [rows, cols]");
+    debug_assert_eq!(dst.len(), rows * cols, "dst must be [cols, rows]");
+    for (r, row) in src.chunks_exact(cols).enumerate() {
+        for (c, &v) in row.iter().enumerate() {
+            dst[c * rows + r] = v;
+        }
+    }
+}
+
+/// The QKᵀ tile GEMM with fused scale + mask:
+/// `out[i·cols + j] = scale · Σ_t a[i·d + t] · bt[t·cols + j]`, or
+/// `−inf` where `valid[j] ≤ 0`.
+///
+/// `a` is `[rows, d]` row-major (Q rows, or dO rows in the backward);
+/// `bt` is the **packed transpose** of the `[cols, d]` B operand (from
+/// [`pack_transposed`]), so the inner loop broadcasts one `a` element
+/// against a contiguous [`LANES`]-wide slice of `bt`. The main path
+/// computes [`MR`]`×`[`LANES`] register blocks; row and column
+/// remainders fall back to narrower loops, so any tile shape is
+/// handled. Every element of `out` is written.
+#[allow(clippy::too_many_arguments)]
+pub fn qk_tile(
+    a: &[f32],
+    bt: &[f32],
+    rows: usize,
+    cols: usize,
+    d: usize,
+    scale: f32,
+    valid: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), rows * d, "a must be [rows, d]");
+    debug_assert_eq!(bt.len(), d * cols, "bt must be [d, cols] (packed transpose)");
+    debug_assert_eq!(out.len(), rows * cols, "out must be [rows, cols]");
+    if let Some(v) = valid {
+        debug_assert_eq!(v.len(), cols, "valid must be [cols]");
+    }
+    let mut i = 0;
+    while i + MR <= rows {
+        let a_rows: [&[f32]; MR] = std::array::from_fn(|m| &a[(i + m) * d..(i + m + 1) * d]);
+        let mut j = 0;
+        while j + LANES <= cols {
+            let mut acc = [[0.0f32; LANES]; MR];
+            for t in 0..d {
+                let bv: [f32; LANES] =
+                    bt[t * cols + j..t * cols + j + LANES].try_into().expect("lane slice");
+                let av: [f32; MR] = std::array::from_fn(|m| a_rows[m][t]);
+                for (lanes, &am) in acc.iter_mut().zip(&av) {
+                    for (l, &bb) in lanes.iter_mut().zip(&bv) {
+                        *l += am * bb;
+                    }
+                }
+            }
+            for (m, lanes) in acc.iter().enumerate() {
+                let o = &mut out[(i + m) * cols + j..(i + m) * cols + j + LANES];
+                scale_mask_lanes(lanes, scale, valid, j, o);
+            }
+            j += LANES;
+        }
+        for jr in j..cols {
+            for m in 0..MR {
+                out[(i + m) * cols + jr] = scalar_entry(a_rows[m], bt, cols, jr, scale, valid);
+            }
+        }
+        i += MR;
+    }
+    while i < rows {
+        let a_row = &a[i * d..(i + 1) * d];
+        let mut j = 0;
+        while j + LANES <= cols {
+            let mut lanes = [0.0f32; LANES];
+            for (t, &am) in a_row.iter().enumerate() {
+                let bv: [f32; LANES] =
+                    bt[t * cols + j..t * cols + j + LANES].try_into().expect("lane slice");
+                for (l, &bb) in lanes.iter_mut().zip(&bv) {
+                    *l += am * bb;
+                }
+            }
+            let o = &mut out[i * cols + j..i * cols + j + LANES];
+            scale_mask_lanes(&lanes, scale, valid, j, o);
+            j += LANES;
+        }
+        for jr in j..cols {
+            out[i * cols + jr] = scalar_entry(a_row, bt, cols, jr, scale, valid);
+        }
+        i += 1;
+    }
+}
+
+/// Fused epilogue of one [`LANES`]-wide accumulator group: apply the
+/// score scale and stamp masked columns to `−inf`.
+#[inline]
+fn scale_mask_lanes(
+    lanes: &[f32; LANES],
+    scale: f32,
+    valid: Option<&[f32]>,
+    j0: usize,
+    out: &mut [f32],
+) {
+    match valid {
+        None => {
+            for (o, &s) in out.iter_mut().zip(lanes) {
+                *o = s * scale;
+            }
+        }
+        Some(v) => {
+            let v = &v[j0..j0 + LANES];
+            for ((o, &s), &ok) in out.iter_mut().zip(lanes).zip(v) {
+                *o = if ok > 0.0 { s * scale } else { f32::NEG_INFINITY };
+            }
+        }
+    }
+}
+
+/// Column-remainder path of [`qk_tile`]: one scaled, masked dot product
+/// against the strided column `j` of the packed operand.
+#[inline]
+fn scalar_entry(
+    a_row: &[f32],
+    bt: &[f32],
+    cols: usize,
+    j: usize,
+    scale: f32,
+    valid: Option<&[f32]>,
+) -> f32 {
+    if let Some(v) = valid {
+        if v[j] <= 0.0 {
+            return f32::NEG_INFINITY;
+        }
+    }
+    let mut s = 0.0f32;
+    for (t, &am) in a_row.iter().enumerate() {
+        s += am * bt[t * cols + j];
+    }
+    s * scale
+}
+
+/// The tiled AV accumulate: `acc[i·d + t] += Σ_j w[i·cols + j] · v[j·d + t]`.
+///
+/// `w` is a `[rows, cols]` weight tile (softmax weights in the forward,
+/// probability / dS tiles — possibly transposed — in the backward), `v`
+/// a `[cols, d]` value block, `acc` the `[rows, d]` running accumulator.
+/// Each output row is processed in [`LANES`]-wide chunks held in
+/// registers across the whole key loop, [`MR`] rows at a time so every
+/// loaded `v` lane is reused; zero weights (masked keys, fully masked
+/// rows) contribute exactly nothing. Row and `d` remainders take scalar
+/// fallbacks.
+pub fn av_tile(w: &[f32], v: &[f32], rows: usize, cols: usize, d: usize, acc: &mut [f32]) {
+    debug_assert_eq!(w.len(), rows * cols, "w must be [rows, cols]");
+    debug_assert_eq!(v.len(), cols * d, "v must be [cols, d]");
+    debug_assert_eq!(acc.len(), rows * d, "acc must be [rows, d]");
+    let mut i = 0;
+    while i + MR <= rows {
+        let w_rows: [&[f32]; MR] = std::array::from_fn(|m| &w[(i + m) * cols..(i + m + 1) * cols]);
+        let mut t = 0;
+        while t + LANES <= d {
+            let mut lanes = [[0.0f32; LANES]; MR];
+            for (m, la) in lanes.iter_mut().enumerate() {
+                la.copy_from_slice(&acc[(i + m) * d + t..(i + m) * d + t + LANES]);
+            }
+            for j in 0..cols {
+                let vv: [f32; LANES] =
+                    v[j * d + t..j * d + t + LANES].try_into().expect("lane slice");
+                for (la, wr) in lanes.iter_mut().zip(&w_rows) {
+                    let wj = wr[j];
+                    for (l, &x) in la.iter_mut().zip(&vv) {
+                        *l += wj * x;
+                    }
+                }
+            }
+            for (m, la) in lanes.iter().enumerate() {
+                acc[(i + m) * d + t..(i + m) * d + t + LANES].copy_from_slice(la);
+            }
+            t += LANES;
+        }
+        if t < d {
+            for (m, wr) in w_rows.iter().enumerate() {
+                av_row_tail(wr, v, d, t, &mut acc[(i + m) * d + t..(i + m + 1) * d]);
+            }
+        }
+        i += MR;
+    }
+    while i < rows {
+        let w_row = &w[i * cols..(i + 1) * cols];
+        let acc_row = &mut acc[i * d..(i + 1) * d];
+        let mut t = 0;
+        while t + LANES <= d {
+            let mut lanes: [f32; LANES] = acc_row[t..t + LANES].try_into().expect("lane slice");
+            for (j, &wj) in w_row.iter().enumerate() {
+                let vv: [f32; LANES] =
+                    v[j * d + t..j * d + t + LANES].try_into().expect("lane slice");
+                for (l, &x) in lanes.iter_mut().zip(&vv) {
+                    *l += wj * x;
+                }
+            }
+            acc_row[t..t + LANES].copy_from_slice(&lanes);
+            t += LANES;
+        }
+        if t < d {
+            av_row_tail(w_row, v, d, t, &mut acc_row[t..]);
+        }
+        i += 1;
+    }
+}
+
+/// `d`-remainder of one [`av_tile`] output row: accumulate the last
+/// `d − t0` columns of every value row.
+#[inline]
+fn av_row_tail(w_row: &[f32], v: &[f32], d: usize, t0: usize, acc_tail: &mut [f32]) {
+    for (j, &wj) in w_row.iter().enumerate() {
+        let v_tail = &v[j * d + t0..(j + 1) * d];
+        for (a, &x) in acc_tail.iter_mut().zip(v_tail) {
+            *a += wj * x;
+        }
+    }
+}
+
+/// Row-wise dot products: `out[i] = Σ_t a[i·d + t] · b[i·d + t]`, each
+/// row reduced through [`LANES`] independent partial sums (so the
+/// reduction vectorizes) with a scalar tail. The backward's
+/// `δ_i = dO_i · O_i` rowsums.
+pub fn row_dots(a: &[f32], b: &[f32], rows: usize, d: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), rows * d, "a must be [rows, d]");
+    debug_assert_eq!(b.len(), rows * d, "b must be [rows, d]");
+    debug_assert_eq!(out.len(), rows, "out must be [rows]");
+    for (i, o) in out.iter_mut().enumerate() {
+        let ar = &a[i * d..(i + 1) * d];
+        let br = &b[i * d..(i + 1) * d];
+        let mut lanes = [0.0f32; LANES];
+        let mut ac = ar.chunks_exact(LANES);
+        let mut bc = br.chunks_exact(LANES);
+        for (ca, cb) in (&mut ac).zip(&mut bc) {
+            for ((l, &x), &y) in lanes.iter_mut().zip(ca).zip(cb) {
+                *l += x * y;
+            }
+        }
+        let mut s: f32 = lanes.iter().sum();
+        for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+            s += x * y;
+        }
+        *o = s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::dot;
+    use crate::util::Rng;
+
+    fn data(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn pack_transposed_is_an_involution() {
+        let mut rng = Rng::new(1);
+        for (rows, cols) in [(1usize, 1usize), (3, 7), (8, 8), (5, 16), (16, 5)] {
+            let src = data(&mut rng, rows * cols);
+            let mut t = vec![0.0f32; rows * cols];
+            pack_transposed(&src, rows, cols, &mut t);
+            let mut back = vec![0.0f32; rows * cols];
+            pack_transposed(&t, cols, rows, &mut back);
+            assert_eq!(src, back, "{rows}x{cols}");
+        }
+    }
+
+    #[test]
+    fn qk_tile_matches_scalar_dots_on_a_lane_aligned_shape() {
+        let (rows, cols, d) = (MR * 2, LANES * 2, 16);
+        let mut rng = Rng::new(2);
+        let a = data(&mut rng, rows * d);
+        let b = data(&mut rng, cols * d);
+        let mut bt = vec![0.0f32; d * cols];
+        pack_transposed(&b, cols, d, &mut bt);
+        let mut got = vec![0.0f32; rows * cols];
+        qk_tile(&a, &bt, rows, cols, d, 0.25, None, &mut got);
+        for i in 0..rows {
+            for j in 0..cols {
+                let want = dot(&a[i * d..(i + 1) * d], &b[j * d..(j + 1) * d]) * 0.25;
+                let g = got[i * cols + j];
+                assert!((want - g).abs() <= 1e-5, "({i},{j}): {want} vs {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn qk_tile_masks_columns_to_neg_infinity() {
+        let (rows, cols, d) = (3, LANES + 3, 8);
+        let mut rng = Rng::new(3);
+        let a = data(&mut rng, rows * d);
+        let b = data(&mut rng, cols * d);
+        let mut bt = vec![0.0f32; d * cols];
+        pack_transposed(&b, cols, d, &mut bt);
+        // mask a lane-interior column and the whole (non-aligned) tail
+        let mut valid = vec![1.0f32; cols];
+        valid[2] = 0.0;
+        valid[LANES] = 0.0;
+        valid[cols - 1] = 0.0;
+        let mut got = vec![0.0f32; rows * cols];
+        qk_tile(&a, &bt, rows, cols, d, 1.0, Some(&valid), &mut got);
+        for i in 0..rows {
+            for (j, &ok) in valid.iter().enumerate() {
+                let g = got[i * cols + j];
+                if ok > 0.0 {
+                    assert!(g.is_finite(), "({i},{j}) should be live: {g}");
+                } else {
+                    assert_eq!(g, f32::NEG_INFINITY, "({i},{j}) should be masked");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn av_tile_accumulates_on_top_of_existing_values() {
+        let (rows, cols, d) = (MR + 1, 5, LANES + 2);
+        let mut rng = Rng::new(4);
+        let w = data(&mut rng, rows * cols);
+        let v = data(&mut rng, cols * d);
+        let init = data(&mut rng, rows * d);
+        let mut acc = init.clone();
+        av_tile(&w, &v, rows, cols, d, &mut acc);
+        for i in 0..rows {
+            for t in 0..d {
+                let mut want = init[i * d + t];
+                for j in 0..cols {
+                    want += w[i * cols + j] * v[j * d + t];
+                }
+                let g = acc[i * d + t];
+                assert!((want - g).abs() <= 1e-4, "({i},{t}): {want} vs {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn row_dots_matches_scalar_dot() {
+        let mut rng = Rng::new(5);
+        for d in [1usize, 7, 8, 9, 31, 32] {
+            let rows = 5;
+            let a = data(&mut rng, rows * d);
+            let b = data(&mut rng, rows * d);
+            let mut got = vec![0.0f32; rows];
+            row_dots(&a, &b, rows, d, &mut got);
+            for (i, &g) in got.iter().enumerate() {
+                let want = dot(&a[i * d..(i + 1) * d], &b[i * d..(i + 1) * d]);
+                assert!((want - g).abs() <= 1e-4, "d={d} row {i}: {want} vs {g}");
+            }
+        }
+    }
+}

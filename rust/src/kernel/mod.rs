@@ -10,6 +10,11 @@
 //!   gather-friendly block-level CSR with per-entry provenance;
 //! * [`dense`] — the blocked dense masked reference kernel (two-pass
 //!   softmax), the correctness oracle;
+//! * [`microkernel`] — the SIMD-tiled microkernels every block-level
+//!   computation routes through: register-blocked QKᵀ tile GEMM with
+//!   fused scale+mask, tiled AV accumulate, transpose packing, and
+//!   lane-partial row dots (no unsafe, autovectorizer-friendly fixed
+//!   lanes);
 //! * [`sparse`] — the production kernel: gathered QKᵀ → streaming
 //!   (flash-style) softmax → gathered AV accumulate, with reusable
 //!   [`SparseScratch`] buffers;
@@ -38,6 +43,7 @@ pub mod dense;
 pub mod driver;
 pub mod grad;
 pub mod layout;
+pub mod microkernel;
 pub mod model;
 pub mod sparse;
 
@@ -48,6 +54,7 @@ pub use driver::{
     ScratchArena,
 };
 pub use layout::{BlockCsr, BlockProvenance};
+pub use microkernel::{av_tile, pack_transposed, qk_tile, row_dots, LANES, MR};
 pub use model::{
     config_fingerprint, is_native_artifact, native_artifact_name, native_buckets,
     param_count_for, parse_native_artifact, NativeEngine, NativeModel, NATIVE_PARAMS_ARTIFACT,
@@ -83,8 +90,10 @@ impl HeadViews<'_> {
     }
 }
 
-/// Dot product of two equal-length rows.
-#[inline]
+/// Dot product of two equal-length rows — retained **only** as the
+/// test suite's scalar reference for the tiled [`microkernel`] layer;
+/// production kernels no longer call it.
+#[cfg(test)]
 pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(&x, &y)| x * y).sum()
 }

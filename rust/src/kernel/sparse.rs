@@ -10,23 +10,37 @@
 //! a new block raises the max — numerically equivalent to a full
 //! softmax without ever materialising an n-length score row.
 //!
-//! All intermediate buffers live in a reusable [`SparseScratch`]: a
-//! caller that holds its scratch across calls pays no per-block
+//! All block-level math runs on the tiled
+//! [`microkernel`](super::microkernel) layer — the QKᵀ tile is a
+//! register-blocked GEMM against a packed-transposed key block with the
+//! score scale and key-validity mask fused into its epilogue, and the
+//! AV accumulate is lane-tiled — so the hot loops autovectorize instead
+//! of retiring one scalar FLOP per cycle.
+//!
+//! All intermediate buffers (score tile, packed transpose, softmax
+//! statistics, output accumulator) live in a reusable [`SparseScratch`]:
+//! a caller that holds its scratch across calls pays no per-block
 //! allocation. The batch driver runs on the persistent
 //! [`super::driver::KernelPool`], whose worker threads each own a
 //! process-lifetime scratch arena reused across every forward *and*
 //! backward invocation.
 
 use super::layout::BlockCsr;
-use super::{dot, HeadViews};
+use super::microkernel::{av_tile, pack_transposed, qk_tile};
+use super::HeadViews;
 
-/// Reusable per-thread scratch for [`sparse_forward`]: one score tile,
-/// the running-softmax statistics, and the output accumulator for a
-/// single query block. Grown on demand, never shrunk.
+/// Reusable per-thread scratch for [`sparse_forward`]: one score tile
+/// (reused in place as the weight tile), the packed-transposed key
+/// block, the running-softmax statistics, and the output accumulator
+/// for a single query block. Grown on demand, never shrunk.
 #[derive(Debug, Default)]
 pub struct SparseScratch {
-    /// `block × block` score tile for the current (qb, kb) pair.
+    /// `block × block` score tile for the current (qb, kb) pair; after
+    /// the streaming-softmax update it holds the exp-weights the AV
+    /// microkernel consumes.
     scores: Vec<f32>,
+    /// Packed transpose of the current key block, `head_dim × block`.
+    kt: Vec<f32>,
     /// Running max per query row of the block.
     m: Vec<f32>,
     /// Running sum of exponentials per query row of the block.
@@ -43,6 +57,7 @@ impl SparseScratch {
 
     fn ensure(&mut self, block: usize, head_dim: usize) {
         self.scores.resize(block * block, 0.0);
+        self.kt.resize(head_dim * block, 0.0);
         self.m.resize(block, 0.0);
         self.l.resize(block, 0.0);
         self.acc.resize(block * head_dim, 0.0);
@@ -107,30 +122,26 @@ fn forward_core(
         scratch.m.fill(f32::NEG_INFINITY);
         scratch.l.fill(0.0);
         scratch.acc.fill(0.0);
+        let qs = layout.token_span(qb);
+        let q_block = &x.q[qs.start * head_dim..qs.end * head_dim];
         for &kb in layout.row(qb) {
-            // gathered QKᵀ tile for (qb, kb)
+            let ks = layout.token_span(kb);
+            let k_block = &x.k[ks.start * head_dim..ks.end * head_dim];
+            let valid = x.key_valid.map(|mask| &mask[ks.clone()]);
+            // gathered QKᵀ tile for (qb, kb): pack Kᵀ once, then the
+            // register-blocked GEMM with scale+mask fused (masked → −inf)
+            pack_transposed(k_block, b, head_dim, &mut scratch.kt);
+            qk_tile(q_block, &scratch.kt, b, b, head_dim, scale, valid, &mut scratch.scores);
+            // streaming-softmax update per query row of the block; the
+            // score tile becomes the weight tile in place
             for i in 0..b {
-                let q_row = &x.q[(qb * b + i) * head_dim..(qb * b + i + 1) * head_dim];
-                for jj in 0..b {
-                    let kj = kb * b + jj;
-                    let valid = match x.key_valid {
-                        Some(mask) => mask[kj] > 0.0,
-                        None => true,
-                    };
-                    scratch.scores[i * b + jj] = if valid {
-                        let k_row = &x.k[kj * head_dim..(kj + 1) * head_dim];
-                        dot(q_row, k_row) * scale
-                    } else {
-                        f32::NEG_INFINITY
-                    };
-                }
-            }
-            // streaming-softmax update per query row of the block
-            for i in 0..b {
-                let row = &scratch.scores[i * b..(i + 1) * b];
+                let row = &mut scratch.scores[i * b..(i + 1) * b];
                 let tile_max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
                 if tile_max == f32::NEG_INFINITY {
-                    continue; // whole tile masked for this row
+                    // whole tile masked for this row: zero weights so the
+                    // AV microkernel adds nothing
+                    row.fill(0.0);
+                    continue;
                 }
                 let m_new = scratch.m[i].max(tile_max);
                 // exp(-inf - finite) = 0: a row seeing its first live
@@ -139,20 +150,19 @@ fn forward_core(
                 scratch.l[i] *= alpha;
                 let acc_row = &mut scratch.acc[i * head_dim..(i + 1) * head_dim];
                 acc_row.iter_mut().for_each(|a| *a *= alpha);
-                for (jj, &s) in row.iter().enumerate() {
-                    if s == f32::NEG_INFINITY {
-                        continue;
-                    }
-                    let w = (s - m_new).exp();
-                    scratch.l[i] += w;
-                    let kj = kb * b + jj;
-                    let v_row = &x.v[kj * head_dim..(kj + 1) * head_dim];
-                    for (a, &vv) in acc_row.iter_mut().zip(v_row) {
-                        *a += w * vv;
-                    }
+                let mut row_sum = 0.0f32;
+                for s in row.iter_mut() {
+                    // exp(-inf − m_new) = 0: masked keys drop out exactly
+                    let w = (*s - m_new).exp();
+                    row_sum += w;
+                    *s = w;
                 }
+                scratch.l[i] += row_sum;
                 scratch.m[i] = m_new;
             }
+            // tiled AV accumulate of the whole weight tile
+            let v_block = &x.v[ks.start * head_dim..ks.end * head_dim];
+            av_tile(&scratch.scores, v_block, b, b, head_dim, &mut scratch.acc);
         }
         // normalise and write the block's output rows
         for i in 0..b {

@@ -28,6 +28,7 @@
 //! the paper's evaluation section (see `experiments`).
 
 pub mod attention;
+pub mod bench_check;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -3,6 +3,15 @@
 //! the CI perf-trajectory artifacts stay mutually consistent. No serde
 //! in this offline environment — the format is a flat object of numeric
 //! fields, hand-rolled here once instead of per bench.
+//!
+//! Every report carries a `schema_version` stamp, and [`BenchReport::parse`]
+//! refuses files without (or with a different) one — so the
+//! `bench-check` perf-regression gate rejects stale or foreign JSON
+//! instead of misparsing it.
+
+/// Version stamp written into (and required back from) every bench
+/// JSON. Bump when the report format or key semantics change.
+pub const SCHEMA_VERSION: u32 = 1;
 
 /// Ordered flat key → value report.
 #[derive(Debug, Default)]
@@ -31,16 +40,75 @@ impl BenchReport {
         self.entries.is_empty()
     }
 
-    /// Render as a flat JSON object of numeric fields.
+    /// The value recorded under `key`, if any.
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.entries.iter().find(|(k, _)| k.as_str() == key).map(|&(_, v)| v)
+    }
+
+    /// All recorded entries, in insertion order.
+    pub fn entries(&self) -> &[(String, f64)] {
+        &self.entries
+    }
+
+    /// Render as a flat JSON object of numeric fields, stamped with the
+    /// current [`SCHEMA_VERSION`].
     pub fn to_json(&self) -> String {
-        let fields: Vec<String> =
-            self.entries.iter().map(|(k, v)| format!("  \"{k}\": {v:.6}")).collect();
+        let mut fields = vec![format!("  \"schema_version\": {SCHEMA_VERSION}")];
+        fields.extend(self.entries.iter().map(|(k, v)| format!("  \"{k}\": {v:.6}")));
         format!("{{\n{}\n}}\n", fields.join(",\n"))
     }
 
     /// Write the JSON rendering to `path`.
     pub fn write(&self, path: &str) -> std::io::Result<()> {
         std::fs::write(path, self.to_json())
+    }
+
+    /// Parse a report previously rendered by [`BenchReport::to_json`]
+    /// (the only JSON subset the benches emit: a flat object of numeric
+    /// fields). Fails descriptively on anything else — including a
+    /// missing or mismatched `schema_version`, which marks the file as
+    /// stale or foreign rather than silently comparable.
+    pub fn parse(text: &str) -> Result<BenchReport, String> {
+        let inner = text
+            .trim()
+            .strip_prefix('{')
+            .and_then(|s| s.strip_suffix('}'))
+            .ok_or_else(|| "bench JSON must be a flat object".to_string())?;
+        let mut entries = Vec::new();
+        let mut schema: Option<f64> = None;
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part
+                .split_once(':')
+                .ok_or_else(|| format!("malformed bench JSON entry {part:?}"))?;
+            let key = k
+                .trim()
+                .strip_prefix('"')
+                .and_then(|s| s.strip_suffix('"'))
+                .ok_or_else(|| format!("malformed bench JSON key {k:?}"))?;
+            let value: f64 = v
+                .trim()
+                .parse()
+                .map_err(|_| format!("non-numeric bench JSON value for {key:?}: {v:?}"))?;
+            if key == "schema_version" {
+                schema = Some(value);
+            } else {
+                entries.push((key.to_string(), value));
+            }
+        }
+        match schema {
+            None => Err(format!(
+                "missing schema_version (stale or foreign bench JSON? this binary expects \
+                 {SCHEMA_VERSION})"
+            )),
+            Some(v) if v != SCHEMA_VERSION as f64 => Err(format!(
+                "unsupported bench JSON schema_version {v} (this binary expects {SCHEMA_VERSION})"
+            )),
+            Some(_) => Ok(BenchReport { entries }),
+        }
     }
 
     /// Extract the `--json <path>` flag every bench harness accepts.
@@ -77,6 +145,32 @@ mod tests {
         assert!(json.starts_with("{\n"), "{json}");
         assert!(json.ends_with("}\n"), "{json}");
         assert!(json.contains("\"b_second\": 2.500000"), "{json}");
+        assert!(json.contains(&format!("\"schema_version\": {SCHEMA_VERSION}")), "{json}");
+    }
+
+    #[test]
+    fn json_round_trips_through_parse() {
+        let mut r = BenchReport::new();
+        r.push("x_ms", 12.5);
+        r.push("y_tokens_per_sec", 31234.0);
+        let back = BenchReport::parse(&r.to_json()).unwrap();
+        assert_eq!(back.entries(), r.entries());
+        assert_eq!(back.get("x_ms"), Some(12.5));
+        assert_eq!(back.get("missing"), None);
+    }
+
+    #[test]
+    fn parse_rejects_stale_or_foreign_json() {
+        // no schema stamp at all (pre-gate bench files)
+        let err = BenchReport::parse("{\n  \"a\": 1.0\n}\n").unwrap_err();
+        assert!(err.contains("schema_version"), "{err}");
+        // wrong schema version
+        let err =
+            BenchReport::parse("{\n  \"schema_version\": 999,\n  \"a\": 1.0\n}\n").unwrap_err();
+        assert!(err.contains("999"), "{err}");
+        // not a flat numeric object
+        assert!(BenchReport::parse("[1, 2]").is_err());
+        assert!(BenchReport::parse("{\n  \"schema_version\": 1,\n  \"a\": \"str\"\n}").is_err());
     }
 
     #[test]

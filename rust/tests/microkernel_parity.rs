@@ -1,0 +1,250 @@
+//! Microkernel parity contract: the SIMD-tiled microkernels
+//! (`kernel::microkernel`) must agree with plain scalar references to
+//! ≤ 1e-5 across **remainder shapes** — row/column/depth counts that
+//! are not multiples of the register-block height `MR` or the lane
+//! width `LANES` — and masked key tails, and the production sparse
+//! kernel built on them must agree with an independent from-scratch
+//! softmax reference at block sizes that exercise every remainder
+//! path. This is the acceptance gate that keeps the tiled rewrite
+//! honest: the scalar references here share no code with the tiles.
+
+use bigbird::attention::PatternSpec;
+use bigbird::config::AttnVariant;
+use bigbird::kernel::{
+    av_tile, pack_transposed, qk_tile, row_dots, sparse_forward, BlockCsr, HeadViews, LANES, MR,
+    SparseScratch,
+};
+use bigbird::util::Rng;
+
+const TOL: f32 = 1e-5;
+
+fn data(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.normal() as f32).collect()
+}
+
+/// Scalar dot product — deliberately the naive formulation.
+fn sdot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+/// Scalar reference of the QKᵀ tile: per-element dots over the
+/// *unpacked* `[cols, d]` operand, masked columns to −inf.
+fn scalar_qk(
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    cols: usize,
+    d: usize,
+    scale: f32,
+    valid: Option<&[f32]>,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            let masked = valid.map(|v| v[j] <= 0.0).unwrap_or(false);
+            out[i * cols + j] = if masked {
+                f32::NEG_INFINITY
+            } else {
+                sdot(&a[i * d..(i + 1) * d], &b[j * d..(j + 1) * d]) * scale
+            };
+        }
+    }
+    out
+}
+
+#[test]
+fn qk_tile_matches_scalar_across_remainder_shapes() {
+    // shapes straddling the MR (rows) and LANES (cols) boundaries plus
+    // depths around the lane width — every remainder path fires
+    let mut rng = Rng::new(0xA11CE);
+    for &rows in &[1usize, MR - 1, MR, MR + 1, 2 * MR + 3, 16] {
+        for &cols in &[1usize, LANES - 1, LANES, LANES + 1, 2 * LANES + 5] {
+            for &d in &[1usize, 3, LANES, LANES + 3, 32] {
+                let a = data(&mut rng, rows * d);
+                let b = data(&mut rng, cols * d);
+                let mut bt = vec![0.0f32; d * cols];
+                pack_transposed(&b, cols, d, &mut bt);
+                let mut got = vec![0.0f32; rows * cols];
+                qk_tile(&a, &bt, rows, cols, d, 0.37, None, &mut got);
+                let want = scalar_qk(&a, &b, rows, cols, d, 0.37, None);
+                for (idx, (&w, &g)) in want.iter().zip(&got).enumerate() {
+                    assert!(
+                        (w - g).abs() <= TOL,
+                        "rows={rows} cols={cols} d={d} idx={idx}: {w} vs {g}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn qk_tile_masks_non_lane_aligned_tails() {
+    let mut rng = Rng::new(0xBEEF);
+    for &cols in &[LANES + 1, LANES + 3, 2 * LANES + 7] {
+        let (rows, d) = (MR + 2, 9);
+        let a = data(&mut rng, rows * d);
+        let b = data(&mut rng, cols * d);
+        let mut bt = vec![0.0f32; d * cols];
+        pack_transposed(&b, cols, d, &mut bt);
+        // mask the last third of the keys — a tail crossing the lane
+        // boundary — plus one lane-interior key
+        let tail = cols - cols.div_ceil(3);
+        let valid: Vec<f32> =
+            (0..cols).map(|j| if j >= tail || j == 1 { 0.0 } else { 1.0 }).collect();
+        let mut got = vec![0.0f32; rows * cols];
+        qk_tile(&a, &bt, rows, cols, d, 0.5, Some(&valid), &mut got);
+        let want = scalar_qk(&a, &b, rows, cols, d, 0.5, Some(&valid));
+        for i in 0..rows {
+            for (j, &ok) in valid.iter().enumerate() {
+                let (w, g) = (want[i * cols + j], got[i * cols + j]);
+                if ok > 0.0 {
+                    assert!((w - g).abs() <= TOL, "cols={cols} ({i},{j}): {w} vs {g}");
+                } else {
+                    assert_eq!(g, f32::NEG_INFINITY, "cols={cols} ({i},{j}) must be masked");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn av_tile_matches_scalar_across_remainder_shapes() {
+    let mut rng = Rng::new(0xCAFE);
+    for &rows in &[1usize, MR - 1, MR, MR + 2, 3 * MR] {
+        for &cols in &[1usize, 4, 7, 16] {
+            for &d in &[1usize, LANES - 2, LANES, LANES + 1, 2 * LANES + 3] {
+                let mut w = data(&mut rng, rows * cols);
+                // sprinkle exact zeros (masked keys produce them)
+                for x in w.iter_mut() {
+                    if rng.coin(0.2) {
+                        *x = 0.0;
+                    }
+                }
+                let v = data(&mut rng, cols * d);
+                let init = data(&mut rng, rows * d);
+                let mut got = init.clone();
+                av_tile(&w, &v, rows, cols, d, &mut got);
+                for i in 0..rows {
+                    for t in 0..d {
+                        let mut want = init[i * d + t];
+                        for j in 0..cols {
+                            want += w[i * cols + j] * v[j * d + t];
+                        }
+                        let g = got[i * d + t];
+                        assert!(
+                            (want - g).abs() <= 1e-4,
+                            "rows={rows} cols={cols} d={d} ({i},{t}): {want} vs {g}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn row_dots_matches_scalar_across_depths() {
+    let mut rng = Rng::new(0xD07);
+    for &d in &[1usize, LANES - 1, LANES, LANES + 1, 31, 64] {
+        let rows = 7;
+        let a = data(&mut rng, rows * d);
+        let b = data(&mut rng, rows * d);
+        let mut got = vec![0.0f32; rows];
+        row_dots(&a, &b, rows, d, &mut got);
+        for (i, &g) in got.iter().enumerate() {
+            let want = sdot(&a[i * d..(i + 1) * d], &b[i * d..(i + 1) * d]);
+            assert!((want - g).abs() <= 1e-4, "d={d} row {i}: {want} vs {g}");
+        }
+    }
+}
+
+/// Independent scalar softmax-attention reference (f64 accumulation,
+/// shares no code with the kernels): out[i] = softmax over admissible
+/// keys of the attended blocks, then the weighted value sum.
+fn scalar_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    key_valid: Option<&[f32]>,
+    layout: &BlockCsr,
+    d: usize,
+) -> Vec<f32> {
+    let n = layout.seq_len();
+    let b = layout.block;
+    let scale = 1.0 / (d as f64).sqrt();
+    let mut out = vec![0.0f32; n * d];
+    for qi in 0..n {
+        let mut keys = Vec::new();
+        for &kb in layout.row(qi / b) {
+            for kj in kb * b..(kb + 1) * b {
+                let ok = key_valid.map(|m| m[kj] > 0.0).unwrap_or(true);
+                if ok {
+                    keys.push(kj);
+                }
+            }
+        }
+        if keys.is_empty() {
+            continue;
+        }
+        let scores: Vec<f64> = keys
+            .iter()
+            .map(|&kj| {
+                (0..d)
+                    .map(|t| q[qi * d + t] as f64 * k[kj * d + t] as f64)
+                    .sum::<f64>()
+                    * scale
+            })
+            .collect();
+        let m = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = scores.iter().map(|&s| (s - m).exp()).collect();
+        let denom: f64 = exps.iter().sum();
+        for t in 0..d {
+            let mut acc = 0.0f64;
+            for (&kj, &e) in keys.iter().zip(&exps) {
+                acc += e / denom * v[kj * d + t] as f64;
+            }
+            out[qi * d + t] = acc as f32;
+        }
+    }
+    out
+}
+
+#[test]
+fn sparse_forward_parity_at_non_lane_multiple_block_sizes() {
+    // block sizes that are not multiples of MR or LANES: every tile
+    // runs through the microkernels' remainder paths
+    let mut rng = Rng::new(0x5EED);
+    for &(block, d) in &[(3usize, 5usize), (5, 7), (6, 12), (7, 16), (12, 10)] {
+        let spec = PatternSpec {
+            variant: AttnVariant::BigBirdItc,
+            nb: 5,
+            global_blocks: 1,
+            window_blocks: 3,
+            random_blocks: 1,
+            seed: 17,
+        };
+        let layout = BlockCsr::compile(&spec, block);
+        let n = layout.seq_len();
+        let q = data(&mut rng, n * d);
+        let k = data(&mut rng, n * d);
+        let v = data(&mut rng, n * d);
+        let mask: Vec<f32> = (0..n).map(|_| if rng.coin(0.25) { 0.0 } else { 1.0 }).collect();
+        for key_valid in [None, Some(mask.as_slice())] {
+            let x = HeadViews { q: &q, k: &k, v: &v, key_valid };
+            let mut got = vec![0.0f32; n * d];
+            sparse_forward(&x, d, &layout, &mut SparseScratch::new(), &mut got);
+            let want = scalar_attention(&q, &k, &v, key_valid, &layout, d);
+            let worst = want
+                .iter()
+                .zip(&got)
+                .map(|(&w, &g)| (w - g).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                worst <= TOL,
+                "block={block} d={d} masked={}: max abs diff {worst}",
+                key_valid.is_some()
+            );
+        }
+    }
+}

@@ -210,6 +210,42 @@ fn sparse_attention_backward_matches_finite_differences() {
     );
 }
 
+#[test]
+fn tiled_backward_matches_finite_differences_at_remainder_shapes() {
+    // block sizes and head dims that are NOT multiples of the
+    // microkernel lane width (8) or register-block height (4): the
+    // tiled backward's remainder paths must be exactly as correct as
+    // its main lanes, masked keys included
+    check_attention_grads(
+        &PatternSpec {
+            variant: AttnVariant::BigBirdItc,
+            nb: 4,
+            global_blocks: 1,
+            window_blocks: 1,
+            random_blocks: 1,
+            seed: 21,
+        },
+        6,
+        5,
+        0.2,
+        404,
+    );
+    check_attention_grads(
+        &PatternSpec {
+            variant: AttnVariant::Window,
+            nb: 3,
+            global_blocks: 0,
+            window_blocks: 3,
+            random_blocks: 0,
+            seed: 1,
+        },
+        5,
+        3,
+        0.0,
+        505,
+    );
+}
+
 // ---------------------------------------------------------------------
 // 2. whole-model directional finite differences
 // ---------------------------------------------------------------------
