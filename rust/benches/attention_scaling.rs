@@ -17,8 +17,10 @@
 use std::time::Instant;
 
 use bigbird::attention::PatternSpec;
-use bigbird::config::AttnVariant;
-use bigbird::kernel::{dense_reference, sparse_forward, BlockCsr, HeadViews, SparseScratch};
+use bigbird::config::{AttnVariant, ModelConfig, Precision};
+use bigbird::kernel::{
+    dense_reference, sparse_forward, BlockCsr, HeadViews, NativeModel, SparseScratch,
+};
 use bigbird::runtime::{ExecutablePool, HostTensor, Manifest, Runtime};
 use bigbird::util::stats::{linear_fit, median};
 use bigbird::util::{BenchReport, Rng};
@@ -127,6 +129,40 @@ fn bench_native(report: &mut BenchReport) {
     report.push(&format!("attn_native_sparse_speedup_n{n_max}"), speedup);
 }
 
+/// Serve-path precision ablation: the full native model forward
+/// (projections + FFN + tied logits, all through the packed GEMM layer)
+/// at each `--precision` policy, batch 1 per serving bucket length.
+/// **Informational only** — bench-check gates the latency keys above;
+/// these `*_tokens_per_sec` keys feed the step-summary precision column.
+fn bench_precision(report: &mut BenchReport) {
+    println!("native serve-path precision ablation (median of {NATIVE_REPS} reps):\n");
+    println!("{:<10}{:>9}{:>14}{:>16}", "precision", "seq_len", "median ms", "tokens/sec");
+    for p in Precision::all() {
+        for &n in &NATIVE_LENGTHS {
+            let mut cfg = ModelConfig::native_serving();
+            cfg.seq_len = n;
+            cfg.precision = p;
+            let vocab = cfg.vocab;
+            let mut model = NativeModel::new(cfg).expect("native serving config");
+            let tokens: Vec<i32> = (0..n).map(|i| (i % vocab) as i32).collect();
+            model.forward(&tokens, None, 1, n).expect("warmup forward"); // warmup (packs weights)
+            let samples: Vec<f64> = (0..NATIVE_REPS)
+                .map(|_| {
+                    let t0 = Instant::now();
+                    model.forward(&tokens, None, 1, n).expect("timed forward");
+                    t0.elapsed().as_secs_f64()
+                })
+                .collect();
+            let ms = median_ms(&samples);
+            let tps = if ms > 0.0 { n as f64 / (ms / 1000.0) } else { 0.0 };
+            println!("{:<10}{n:>9}{ms:>14.3}{tps:>16.0}", p.as_str());
+            report.push(&format!("model_native_{}_n{n}_ms", p.as_str()), ms);
+            report.push(&format!("model_native_{}_n{n}_tokens_per_sec", p.as_str()), tps);
+        }
+    }
+    println!();
+}
+
 // ---------------------------------------------------------------------
 // PJRT artifact tier (optional)
 // ---------------------------------------------------------------------
@@ -191,6 +227,7 @@ fn main() {
 
     let mut report = BenchReport::new();
     bench_native(&mut report);
+    bench_precision(&mut report);
     if let Some(dir) = artifacts() {
         bench_pjrt(dir, &mut report);
     }

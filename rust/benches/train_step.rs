@@ -8,13 +8,16 @@
 
 use std::time::Instant;
 
-use bigbird::config::ModelConfig;
+use bigbird::config::{ModelConfig, Precision};
 use bigbird::kernel::grad::AdamWConfig;
 use bigbird::train::{synthetic_docs, synthetic_mlm_batch, NativeTrainer};
 use bigbird::util::{BenchReport, Rng};
 
 const WARMUP_STEPS: usize = 2;
 const TIMED_STEPS: usize = 10;
+/// Timed steps for the per-precision ablation tier (informational
+/// keys only, so a shorter run keeps the bench cheap).
+const ABLATION_STEPS: usize = 5;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -83,6 +86,33 @@ fn main() {
     report.push("train_native_opt_ms", opt);
     report.push("train_native_first_loss", first_loss as f64);
     report.push("train_native_last_loss", last_loss as f64);
+    // alias of the gated key above, named so the step-summary precision
+    // column can line f32 up against the ablation tiers below
+    report.push("train_native_f32_tokens_per_sec", tokens_per_sec);
+
+    // precision ablation tier (informational, never gated): the same
+    // step with the forward GEMMs at f16/int8 — master weights, the
+    // whole backward pass, and AdamW stay f32 (quantize-on-pack)
+    for p in [Precision::F16, Precision::Int8] {
+        let mut pcfg = ModelConfig::tiny();
+        pcfg.precision = p;
+        let mut ptrainer = NativeTrainer::new(pcfg.clone(), AdamWConfig::default())
+            .expect("building ablation trainer");
+        let mut prng = Rng::new(11).fold_in(0x17);
+        for _ in 0..WARMUP_STEPS {
+            let batch = synthetic_mlm_batch(&docs, &pcfg, &mut prng);
+            ptrainer.train_step(&batch).expect("ablation warmup step");
+        }
+        let t0 = Instant::now();
+        for _ in 0..ABLATION_STEPS {
+            let batch = synthetic_mlm_batch(&docs, &pcfg, &mut prng);
+            ptrainer.train_step(&batch).expect("ablation timed step");
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let tps = tokens_per_step * ABLATION_STEPS as f64 / wall;
+        println!("{:<26}{tps:>12.0}", format!("tokens/sec ({})", p.as_str()));
+        report.push(&format!("train_native_{}_tokens_per_sec", p.as_str()), tps);
+    }
 
     if let Some(path) = json_path {
         report.write(&path).expect("writing bench JSON");

@@ -235,7 +235,9 @@ fn update_baselines(cfg: &BenchCheck<'_>, merged: &BenchReport) -> Result<()> {
 
 /// Markdown report for `$GITHUB_STEP_SUMMARY`: attention scaling table
 /// (tokens/sec + sparse-vs-dense speedup per sequence length), the
-/// train-step split, and the delta-vs-baseline gate table.
+/// train-step split, the per-precision tokens/sec ablation (f32 / f16 /
+/// int8, informational — these keys are never gated), and the
+/// delta-vs-baseline gate table.
 fn render_summary(
     attn: &BenchReport,
     train: &BenchReport,
@@ -273,6 +275,30 @@ fn render_summary(
         cell("train_native_fwd_ms"),
         cell("train_native_bwd_ms"),
         cell("train_native_opt_ms")
+    );
+    // per-precision ablation column: emitted by both benches when the
+    // quantized tiers ran; "—" on older JSONs that predate them
+    let _ = writeln!(md, "\n### Precision ablation (tokens/sec, informational)\n");
+    let _ = writeln!(md, "| workload | f32 | f16 | int8 |");
+    let _ = writeln!(md, "|:---------|----:|----:|-----:|");
+    let tps = |r: &BenchReport, k: &str| {
+        r.get(k).map_or_else(|| "—".to_string(), |v| format!("{v:.0}"))
+    };
+    for n in SUMMARY_LENGTHS {
+        let _ = writeln!(
+            md,
+            "| serve forward n={n} | {} | {} | {} |",
+            tps(attn, &format!("model_native_f32_n{n}_tokens_per_sec")),
+            tps(attn, &format!("model_native_f16_n{n}_tokens_per_sec")),
+            tps(attn, &format!("model_native_int8_n{n}_tokens_per_sec"))
+        );
+    }
+    let _ = writeln!(
+        md,
+        "| train step | {} | {} | {} |",
+        tps(train, "train_native_f32_tokens_per_sec"),
+        tps(train, "train_native_f16_tokens_per_sec"),
+        tps(train, "train_native_int8_tokens_per_sec")
     );
     let _ = writeln!(md, "\n### Gate vs committed baselines (tolerance {:.0}%)\n", tol * 100.0);
     let _ = writeln!(md, "| metric | baseline | current | Δ | status |");
@@ -393,6 +419,10 @@ mod tests {
         let md = std::fs::read_to_string(&summary).unwrap();
         assert!(md.contains("Gate vs committed baselines"), "{md}");
         assert!(md.contains("✅"), "{md}");
+        // the precision column renders even when the synthesized JSONs
+        // carry no per-precision keys (em-dash fallback)
+        assert!(md.contains("Precision ablation"), "{md}");
+        assert!(md.contains("| train step | —"), "{md}");
 
         // a >tolerance regression fails the gate and names the metric
         let mut slow = BenchReport::new();

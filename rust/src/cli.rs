@@ -8,9 +8,12 @@
 //! * `graph`              — attention-graph theory report (Sec. 2 claims)
 //! * `list`               — list artifacts in the manifest
 //! * `bench-check`        — gate bench JSONs against committed perf baselines
+//! * `kernel-probe`       — print the GEMM tile-tuner table and SIMD probe;
+//!                          `--assert-simd` turns it into a CI vectorization gate
 
 use anyhow::{bail, Context, Result};
 
+use crate::config::Precision;
 use crate::runtime::{parse_backend_specs, BackendSpec};
 
 /// Parsed global flags.
@@ -44,6 +47,13 @@ pub struct Flags {
     /// `--summary <path>`: append the `bench-check` markdown report
     /// (pointed at `$GITHUB_STEP_SUMMARY` in CI).
     pub summary: Option<String>,
+    /// `--precision f32|f16|int8`: native GEMM precision policy for
+    /// `serve` and `train` (default f32; training keeps master weights
+    /// f32 and quantizes on pack, so checkpoints stay `BBCKPT1`).
+    pub precision: Precision,
+    /// `--assert-simd`: make `kernel-probe` fail (exit nonzero) when the
+    /// tiled f32 GEMM does not beat the scalar-chain floor.
+    pub assert_simd: bool,
     /// Remaining positional args.
     pub positional: Vec<String>,
 }
@@ -102,6 +112,10 @@ pub fn parse_flags(args: &[String]) -> Result<Flags> {
                 f.baselines = it.next().context("--baselines needs a value")?.clone()
             }
             "--update-baselines" => f.update_baselines = true,
+            "--precision" => {
+                f.precision = Precision::parse(it.next().context("--precision needs a value")?)?
+            }
+            "--assert-simd" => f.assert_simd = true,
             "--summary" => {
                 f.summary = Some(it.next().context("--summary needs a value")?.clone())
             }
@@ -128,6 +142,11 @@ COMMANDS:
                          the committed perf baselines (bench_baselines.json);
                          --update-baselines refreshes them, --summary <path>
                          appends a markdown report ($GITHUB_STEP_SUMMARY)
+  kernel-probe           print the per-precision GEMM tile-tuner table and the
+                         SIMD vectorization probe; with --assert-simd, exit
+                         nonzero (with remediation steps) when the tiled f32
+                         kernel fails the vectorization floor — run on the
+                         release binary in CI
   experiment <id>        regenerate a paper table/figure; <id> one of:
                          table1 | mlm_bpc | qa | classification | summarization |
                          genomics | fig_ctxlen | scaling | task1 | patterns |
@@ -158,6 +177,12 @@ FLAGS:
   --update-baselines     bench-check: rewrite the baselines from the
                          current bench JSONs instead of gating
   --summary <p>          bench-check: append the markdown perf report here
+  --precision <p>        native GEMM precision policy: f32 | f16 | int8
+                         (default f32; serve quantizes the packed weights,
+                         train keeps f32 master weights and quantizes on
+                         pack — checkpoints stay BBCKPT1 either way)
+  --assert-simd          kernel-probe: fail loudly when the tiled f32 GEMM
+                         does not clear the scalar-chain vectorization floor
 ";
 
 /// CLI entrypoint used by `main.rs`.
@@ -187,6 +212,7 @@ pub fn run(args: &[String]) -> Result<()> {
         "serve" => crate::experiments::serve_demo::run(&flags),
         "train" => crate::experiments::train_demo::run(&flags),
         "graph" => crate::experiments::graph_report::run(&flags),
+        "kernel-probe" => run_kernel_probe(&flags),
         "bench-check" => crate::bench_check::run(&crate::bench_check::BenchCheck {
             attention: &flags.attention_json,
             train: &flags.train_json,
@@ -208,6 +234,42 @@ pub fn run(args: &[String]) -> Result<()> {
         }
         other => bail!("unknown command {other:?}; run `bigbird help`"),
     }
+}
+
+/// `kernel-probe`: report the per-precision GEMM tile-tuner winners and
+/// the SIMD vectorization probe. With `--assert-simd` it becomes the CI
+/// vectorization gate: exit nonzero (remediation steps on stderr via the
+/// error) when the tiled f32 kernel fails [`crate::kernel::MIN_SIMD_RATIO`].
+fn run_kernel_probe(flags: &Flags) -> Result<()> {
+    let tiles = crate::kernel::tuned_tiles();
+    println!("GEMM tile auto-tuner (winning MRxNR shape per precision):");
+    for (name, choice) in [("f32", &tiles.f32), ("f16", &tiles.f16), ("int8", &tiles.int8)] {
+        println!("  {name:<5} {:>5}  {:8.2} GFLOP/s", choice.shape.as_str(), choice.gflops);
+    }
+    let report = |p: &crate::kernel::SimdProbe| {
+        println!("SIMD probe (96x96x96 packed GEMM vs scalar dependency chain):");
+        println!("  scalar chain {:8.2} GFLOP/s", p.scalar_gflops);
+        println!("  tiled f32    {:8.2} GFLOP/s  ({:.2}x scalar)", p.f32_gflops, p.ratio());
+        println!("  tiled f16    {:8.2} GFLOP/s", p.f16_gflops);
+        println!("  tiled int8   {:8.2} GFLOP/s", p.int8_gflops);
+    };
+    if flags.assert_simd {
+        let probe = crate::kernel::assert_simd_floor().map_err(anyhow::Error::msg)?;
+        report(&probe);
+        println!(
+            "vectorization floor OK: {:.2}x >= required {:.1}x",
+            probe.ratio(),
+            crate::kernel::MIN_SIMD_RATIO
+        );
+    } else {
+        let probe = crate::kernel::simd_probe();
+        report(&probe);
+        println!(
+            "(informational; pass --assert-simd to enforce the {:.1}x floor)",
+            crate::kernel::MIN_SIMD_RATIO
+        );
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -304,6 +366,20 @@ mod tests {
         assert!(f.update_baselines);
         assert_eq!(f.summary.as_deref(), Some("s.md"));
         assert!(parse_flags(&s(&["--summary"])).is_err());
+    }
+
+    #[test]
+    fn parse_precision_and_simd_flags() {
+        let f = parse_flags(&s(&[])).unwrap();
+        assert_eq!(f.precision, Precision::F32);
+        assert!(!f.assert_simd);
+        let f = parse_flags(&s(&["--precision", "int8", "--assert-simd"])).unwrap();
+        assert_eq!(f.precision, Precision::Int8);
+        assert!(f.assert_simd);
+        assert_eq!(parse_flags(&s(&["--precision", "f16"])).unwrap().precision, Precision::F16);
+        // unknown modes and a missing value are rejected at parse time
+        assert!(parse_flags(&s(&["--precision", "bf16"])).is_err());
+        assert!(parse_flags(&s(&["--precision"])).is_err());
     }
 
     #[test]

@@ -81,6 +81,54 @@ impl AttnVariant {
     }
 }
 
+/// Numeric policy of the model GEMM layer (projections, FFN, tied
+/// logits): the storage/compute precision `kernel::microkernel`'s
+/// packed tiles run at. Master weights and every gradient stay f32
+/// regardless (quantize-on-pack), so `BBCKPT1` checkpoints are
+/// precision-agnostic and the fingerprint deliberately excludes this
+/// field. See rust/README.md "Precision policy" for the error budgets.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Full f32 storage and compute — bit-identical to the retired
+    /// naive matmul path (the parity tests pin this).
+    #[default]
+    F32,
+    /// f16 **storage** of the packed weight operand, f32 compute:
+    /// halves weight memory traffic on the bandwidth-bound FFN/logits
+    /// GEMMs at ~2⁻¹⁰ relative element error.
+    F16,
+    /// Symmetric int8: per-row activation scales (quantized at call
+    /// time) × per-column weight scales (quantized at pack time),
+    /// i8×i8→i32 dot tiles, f32 dequant epilogue.
+    Int8,
+}
+
+impl Precision {
+    /// CLI / override string.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F16 => "f16",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    /// Parse a CLI / override string.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => Precision::F32,
+            "f16" => Precision::F16,
+            "int8" => Precision::Int8,
+            other => bail!("unknown precision {other:?} (expected f32|f16|int8)"),
+        })
+    }
+
+    /// All modes, from full precision down to the coarsest error budget.
+    pub fn all() -> [Precision; 3] {
+        [Precision::F32, Precision::F16, Precision::Int8]
+    }
+}
+
 /// BigBird model hyperparameters (App. E.1, Tab. 8, scaled down for the
 /// CPU testbed — see DESIGN.md §Substitutions).
 #[derive(Clone, Debug, PartialEq)]
@@ -111,6 +159,10 @@ pub struct ModelConfig {
     pub batch: usize,
     /// Seed for the random-attention pattern (shared with Python).
     pub attn_seed: u64,
+    /// GEMM precision policy for the model-math hot paths (`--precision`).
+    /// Runtime-only: excluded from the checkpoint fingerprint, so any
+    /// mode serves/trains against the same `BBCKPT1` checkpoints.
+    pub precision: Precision,
 }
 
 impl ModelConfig {
@@ -130,6 +182,7 @@ impl ModelConfig {
             vocab: 512,
             batch: 4,
             attn_seed: 0,
+            precision: Precision::F32,
         }
     }
 
@@ -150,6 +203,7 @@ impl ModelConfig {
             vocab: 2048,
             batch: 8,
             attn_seed: 0,
+            precision: Precision::F32,
         }
     }
 
@@ -311,6 +365,7 @@ pub fn apply_overrides(mut cfg: ModelConfig, overrides: &str) -> Result<ModelCon
             "vocab" => cfg.vocab = v.parse()?,
             "batch" => cfg.batch = v.parse()?,
             "attn_seed" => cfg.attn_seed = v.parse()?,
+            "precision" => cfg.precision = Precision::parse(&v)?,
             other => bail!("unknown config key {other:?}"),
         }
     }
@@ -357,6 +412,25 @@ mod tests {
         assert_eq!(cfg.layers, 2);
         assert!(apply_overrides(ModelConfig::base(), "seq_len=100").is_err()); // not mult of block
         assert!(apply_overrides(ModelConfig::base(), "nope=1").is_err());
+    }
+
+    #[test]
+    fn precision_roundtrip_and_override() {
+        for p in Precision::all() {
+            assert_eq!(Precision::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(Precision::parse("fp64").is_err());
+        assert_eq!(Precision::default(), Precision::F32);
+        let cfg = apply_overrides(ModelConfig::tiny(), "precision=int8").unwrap();
+        assert_eq!(cfg.precision, Precision::Int8);
+        assert!(apply_overrides(ModelConfig::tiny(), "precision=bf16").is_err());
+        // runtime-only: any precision shares one checkpoint fingerprint
+        let mut f16 = ModelConfig::tiny();
+        f16.precision = Precision::F16;
+        assert_eq!(
+            crate::kernel::config_fingerprint(&ModelConfig::tiny()),
+            crate::kernel::config_fingerprint(&f16)
+        );
     }
 
     #[test]

@@ -20,6 +20,7 @@ pub fn run(flags: &Flags) -> Result<()> {
     let mut cfg = ServerConfig::mlm_default(&flags.artifacts);
     cfg.serving = flags.serving();
     cfg.native_checkpoint = flags.checkpoint.clone();
+    cfg.native.precision = flags.precision;
     log.line(format!(
         "engine pool: {} worker(s) [{}], max {} inflight batches per bucket",
         cfg.serving.n_workers(),
@@ -31,6 +32,7 @@ pub fn run(flags: &Flags) -> Result<()> {
             "serving mode: native kernel pipeline (in-process block-sparse compute, \
              no PJRT artifacts required)",
         );
+        log.line(format!("native GEMM precision: {}", cfg.native.precision.as_str()));
     }
     if let Some(ckpt) = &cfg.native_checkpoint {
         log.line(format!("trained weights: native checkpoint {ckpt}"));

@@ -87,19 +87,23 @@ pub fn run(flags: &Flags) -> Result<()> {
 fn run_native(flags: &Flags) -> Result<()> {
     let mut log = RunLog::new("train_native");
     let mut cfg = ModelConfig::native_train();
+    cfg.precision = flags.precision;
     if !flags.config.is_empty() {
+        // `--config precision=...` wins over `--precision` (overrides last)
         cfg = crate::config::apply_overrides(cfg, &flags.config)?;
     }
     let ocfg = AdamWConfig::default();
     let mut trainer = NativeTrainer::new(cfg.clone(), ocfg)?;
     log.line(format!(
         "Native MLM pretraining (zero PJRT artifacts): {} params, {} steps, seed {}, \
-         batch {} × seq {}, lr {} (warmup {}), clip {}\n",
+         batch {} × seq {}, forward GEMMs {} (master weights + grads f32), lr {} \
+         (warmup {}), clip {}\n",
         trainer.model().param_count(),
         flags.steps,
         flags.seed,
         cfg.batch,
         cfg.seq_len,
+        cfg.precision.as_str(),
         ocfg.lr,
         ocfg.warmup_steps,
         ocfg.clip_norm

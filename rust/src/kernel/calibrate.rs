@@ -1,24 +1,43 @@
-//! Self-calibration micro-probe for the native backend's roofline.
+//! Self-calibration micro-probes for the native backend.
 //!
-//! The PJRT backends ship hand-seeded roofline constants; the native
-//! backend's cost model is instead **measured on the machine it runs
-//! on**: a tiny matmul probes sustained compute (GFLOP/s), a buffer
-//! copy probes memory bandwidth (GB/s), and a minimal sparse-kernel
-//! call probes fixed per-dispatch overhead. The probe runs once per
-//! process (~10–20 ms, cached in a `OnceLock`) the first time a native
-//! worker spawns, so dispatch starts from real numbers instead of
-//! guesses — and the exec-time EWMAs refine from there as usual.
+//! Three probes, all measured **on the machine they run on** and cached
+//! per process in `OnceLock`s:
+//!
+//! 1. **Roofline** ([`native_roofline`]) — a tiny GEMM probes sustained
+//!    compute (GFLOP/s), a buffer copy probes memory bandwidth (GB/s),
+//!    and a minimal sparse-kernel call probes fixed per-dispatch
+//!    overhead, so `coordinator::dispatch` starts from real numbers
+//!    instead of guesses. The compute leg takes the **max** of the
+//!    attention-tile probe and the tuned model-GEMM probe — both run
+//!    through this process's kernels, so the roofline reflects the best
+//!    math the backend can actually route to.
+//! 2. **Tile-shape auto-tuner** ([`tuned_tile`]) — probes each
+//!    [`TileShape`] candidate per [`Precision`] through the packed GEMM
+//!    entry points and records the GFLOP/s winner; `gemm_packed` then
+//!    uses it for every model matmul. Wide lanes win on AVX-512-class
+//!    machines, the narrow default elsewhere. The tuner never changes
+//!    *results* (the f32 kernels are bit-identical across shapes — see
+//!    `microkernel`), only speed, so a baseline refresh after a
+//!    toolchain change captures tuner effects automatically.
+//! 3. **SIMD floor** ([`simd_probe`] / [`assert_simd_floor`]) — the CI
+//!    vectorization check: tiled-GEMM GFLOP/s vs a deliberately
+//!    serial-dependency scalar baseline the autovectorizer cannot
+//!    reorder. A healthy toolchain vectorizes the tiles several-fold
+//!    past the scalar chain; falling under [`MIN_SIMD_RATIO`] fails
+//!    `kernel-probe --assert-simd` loudly with remediation text.
 
 use std::hint::black_box;
 use std::sync::OnceLock;
 use std::time::Instant;
 
 use crate::attention::PatternSpec;
-use crate::config::AttnVariant;
+use crate::config::{AttnVariant, Precision};
 use crate::runtime::Roofline;
 
 use super::layout::BlockCsr;
-use super::microkernel::{pack_transposed, qk_tile};
+use super::microkernel::{
+    gemm_packed_with, pack_transposed, qk_tile, GemmScratch, PackedMat, TileShape,
+};
 use super::sparse::{sparse_forward, SparseScratch};
 use super::HeadViews;
 
@@ -47,7 +66,9 @@ fn probe() -> Roofline {
 /// the measured GFLOP/s is what the sparse/dense/backward tiles see.
 fn probe_gflops() -> f64 {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    probe_single_thread_gflops() * cores as f64
+    let attn = probe_single_thread_gflops();
+    let gemm = tuned_tiles().f32.gflops;
+    attn.max(gemm) * cores as f64
 }
 
 fn probe_single_thread_gflops() -> f64 {
@@ -114,6 +135,176 @@ fn probe_overhead_ms() -> f64 {
     t0.elapsed().as_secs_f64() * 1e3 / REPS as f64
 }
 
+// ---------------------------------------------------------------------
+// tile-shape auto-tuner
+// ---------------------------------------------------------------------
+
+/// One tuner verdict: the winning register-block shape for a precision
+/// and the GFLOP/s it sustained in the probe.
+#[derive(Clone, Copy, Debug)]
+pub struct TileChoice {
+    /// The fastest probed shape.
+    pub shape: TileShape,
+    /// Single-thread GFLOP/s the winner sustained.
+    pub gflops: f64,
+}
+
+/// The per-precision tuner verdicts.
+#[derive(Clone, Copy, Debug)]
+pub struct TileTable {
+    /// Winner for [`Precision::F32`].
+    pub f32: TileChoice,
+    /// Winner for [`Precision::F16`].
+    pub f16: TileChoice,
+    /// Winner for [`Precision::Int8`] (int ops counted as FLOPs for
+    /// comparability).
+    pub int8: TileChoice,
+}
+
+impl TileTable {
+    /// The verdict for `p`.
+    pub fn choice(&self, p: Precision) -> TileChoice {
+        match p {
+            Precision::F32 => self.f32,
+            Precision::F16 => self.f16,
+            Precision::Int8 => self.int8,
+        }
+    }
+}
+
+/// The auto-tuned tile table: probed once per process, cached.
+pub fn tuned_tiles() -> &'static TileTable {
+    static CACHE: OnceLock<TileTable> = OnceLock::new();
+    CACHE.get_or_init(|| TileTable {
+        f32: tune_precision(Precision::F32),
+        f16: tune_precision(Precision::F16),
+        int8: tune_precision(Precision::Int8),
+    })
+}
+
+/// The auto-tuned register-block shape for `p` — what `gemm_packed`
+/// routes through. `gemm_packed_with` exists so the tuner (and the
+/// shape-sweeping parity tests) can bypass this.
+pub fn tuned_tile(p: Precision) -> TileShape {
+    tuned_tiles().choice(p).shape
+}
+
+/// Probe every candidate shape at `p` on a model-sized GEMM and keep
+/// the fastest. Results are identical across shapes by construction, so
+/// this is purely a speed decision.
+fn tune_precision(p: Precision) -> TileChoice {
+    const M: usize = 96;
+    const REPS: usize = 4;
+    let a: Vec<f32> = (0..M * M).map(|i| ((i % 83) as f32) * 0.01 - 0.4).collect();
+    let b: Vec<f32> = (0..M * M).map(|i| ((i % 89) as f32) * 0.01 - 0.45).collect();
+    let packed = PackedMat::pack(&b, M, M, p);
+    let mut scratch = GemmScratch::default();
+    let mut out = vec![0.0f32; M * M];
+    let mut best: Option<TileChoice> = None;
+    for shape in TileShape::all() {
+        // one warm-up pays the lazy page faults / branch training
+        gemm_packed_with(shape, &a, &packed, M, false, &mut scratch, &mut out);
+        let t0 = Instant::now();
+        for _ in 0..REPS {
+            gemm_packed_with(shape, &a, &packed, M, false, &mut scratch, &mut out);
+            black_box(&out);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let gflops = (2 * M * M * M * REPS) as f64 / secs / 1e9;
+        if best.map(|c| gflops > c.gflops).unwrap_or(true) {
+            best = Some(TileChoice { shape, gflops });
+        }
+    }
+    best.expect("TileShape::all() is non-empty")
+}
+
+// ---------------------------------------------------------------------
+// SIMD vectorization floor
+// ---------------------------------------------------------------------
+
+/// Minimum tiled-vs-scalar speed ratio a healthy vectorizing toolchain
+/// must clear. The scalar baseline is a serial dependency chain the
+/// autovectorizer cannot reorder (f32 addition is not associative), so
+/// a vectorized tile beats it several-fold; a build that lost
+/// vectorization (wrong opt-level, codegen regression) lands near 1×.
+pub const MIN_SIMD_RATIO: f64 = 2.0;
+
+/// Measured SIMD health: tuned tiled GEMM GFLOP/s vs the serial scalar
+/// chain, per precision.
+#[derive(Clone, Copy, Debug)]
+pub struct SimdProbe {
+    /// Serial-dependency scalar-chain GFLOP/s (the "no SIMD" floor).
+    pub scalar_gflops: f64,
+    /// Tuned f32 tiled-GEMM GFLOP/s.
+    pub f32_gflops: f64,
+    /// Tuned f16-storage tiled-GEMM GFLOP/s.
+    pub f16_gflops: f64,
+    /// Tuned int8 tiled-GEMM GFLOP/s (int ops counted as FLOPs).
+    pub int8_gflops: f64,
+}
+
+impl SimdProbe {
+    /// Tiled-vs-scalar ratio of the f32 path — the gated number.
+    pub fn ratio(&self) -> f64 {
+        self.f32_gflops / self.scalar_gflops.max(1e-9)
+    }
+}
+
+/// Run the SIMD health probe (uses the cached tuner verdicts for the
+/// tiled legs, measures the scalar chain fresh).
+pub fn simd_probe() -> SimdProbe {
+    let tiles = tuned_tiles();
+    SimdProbe {
+        scalar_gflops: probe_scalar_chain_gflops(),
+        f32_gflops: tiles.f32.gflops,
+        f16_gflops: tiles.f16.gflops,
+        int8_gflops: tiles.int8.gflops,
+    }
+}
+
+/// Assert the vectorization floor, returning the probe on success and a
+/// loud remediation message on failure — the backend of `kernel-probe
+/// --assert-simd` in CI.
+pub fn assert_simd_floor() -> Result<SimdProbe, String> {
+    let p = simd_probe();
+    if p.ratio() >= MIN_SIMD_RATIO {
+        Ok(p)
+    } else {
+        Err(format!(
+            "microkernel lanes did NOT vectorize: tiled f32 GEMM sustained {:.2} GFLOP/s vs \
+             {:.2} GFLOP/s for the serial scalar chain (ratio {:.2}x < required {MIN_SIMD_RATIO}x).\n\
+             Remediation: build with `--release` (opt-level 3); do not override RUSTFLAGS with \
+             `-C opt-level=0/1` or `-C no-vectorize-loops`; if cross-compiling, set `-C \
+             target-cpu` to a SIMD-capable target; re-run `cargo run --release -- kernel-probe \
+             --assert-simd` to confirm.",
+            p.f32_gflops, p.scalar_gflops
+        ))
+    }
+}
+
+/// The scalar floor: one long dot product accumulated into a single
+/// f32 — every add depends on the previous one, so the autovectorizer
+/// cannot widen it without changing results. This is what "no SIMD"
+/// throughput looks like on this machine.
+fn probe_scalar_chain_gflops() -> f64 {
+    const K: usize = 96 * 96;
+    const REPS: usize = 64;
+    let a: Vec<f32> = (0..K).map(|i| ((i % 83) as f32) * 0.001 - 0.04).collect();
+    let b: Vec<f32> = (0..K).map(|i| ((i % 89) as f32) * 0.001 - 0.045).collect();
+    let mut sink = 0.0f32;
+    let t0 = Instant::now();
+    for _ in 0..REPS {
+        let mut s = 0.0f32;
+        for (&x, &y) in a.iter().zip(black_box(&b)) {
+            s += x * y;
+        }
+        sink += s;
+    }
+    black_box(sink);
+    let secs = t0.elapsed().as_secs_f64();
+    (2 * K * REPS) as f64 / secs / 1e9
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,5 +322,33 @@ mod tests {
         let a = native_roofline();
         let b = native_roofline();
         assert_eq!(a, b, "second call must return the cached measurement");
+    }
+
+    #[test]
+    fn tuner_yields_finite_positive_winners_for_every_precision() {
+        let t = tuned_tiles();
+        for p in Precision::all() {
+            let c = t.choice(p);
+            assert!(c.gflops.is_finite() && c.gflops > 0.0, "{p:?}: {c:?}");
+            assert!(
+                TileShape::all().contains(&c.shape),
+                "{p:?}: winner {:?} must be a candidate",
+                c.shape
+            );
+            assert_eq!(tuned_tile(p), c.shape, "tuned_tile must mirror the table");
+        }
+    }
+
+    #[test]
+    fn simd_probe_reports_finite_throughputs() {
+        let p = simd_probe();
+        assert!(p.scalar_gflops.is_finite() && p.scalar_gflops > 0.0, "{p:?}");
+        assert!(p.f32_gflops.is_finite() && p.f32_gflops > 0.0, "{p:?}");
+        assert!(p.f16_gflops.is_finite() && p.f16_gflops > 0.0, "{p:?}");
+        assert!(p.int8_gflops.is_finite() && p.int8_gflops > 0.0, "{p:?}");
+        assert!(p.ratio().is_finite() && p.ratio() > 0.0, "{p:?}");
+        // NOTE: no ratio assertion here — debug-profile test builds do
+        // not vectorize. The floor is enforced by `kernel-probe
+        // --assert-simd` on the release binary in CI.
     }
 }

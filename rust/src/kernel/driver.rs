@@ -28,6 +28,7 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use super::grad::attention::{sparse_attention_backward, AttnGradScratch};
 use super::layout::BlockCsr;
+use super::microkernel::{gemm_packed, GemmScratch, PackedMat};
 use super::sparse::{sparse_forward, sparse_forward_with_stats, SparseScratch};
 use super::HeadViews;
 
@@ -40,6 +41,8 @@ pub struct ScratchArena {
     pub fwd: SparseScratch,
     /// Backward-kernel scratch (per-row δ values).
     pub bwd: AttnGradScratch,
+    /// Packed-GEMM scratch (int8 quantize-on-pack row buffers).
+    pub gemm: GemmScratch,
 }
 
 /// A type-erased unit of pool work.
@@ -205,6 +208,53 @@ fn chunks(tasks: usize, threads: usize) -> Vec<(usize, usize)> {
         first += count;
     }
     out
+}
+
+/// Below this many multiply-accumulates a model GEMM runs inline on the
+/// calling thread: the pool handoff (~µs) would cost more than the math
+/// saves, and tiny GEMMs (per-step repacks, small ladders) stay cheap.
+const INLINE_MACS: usize = 32_768;
+
+/// Model GEMM `out[m, n] = a[m, k] · b` over the persistent pool: rows
+/// are split into contiguous chunks, each computed independently through
+/// [`gemm_packed`] with the worker's arena scratch. Row chunking never
+/// changes results — every output element is one complete k-ascending
+/// sum regardless of which thread computes it, so the parallel product
+/// is bit-identical to the single-thread one (and, at f32, to the naive
+/// reference). Small problems run inline (see [`INLINE_MACS`]).
+pub fn model_gemm(a: &[f32], b: &PackedMat, m: usize, out: &mut [f32]) {
+    model_gemm_core(a, b, m, false, out);
+}
+
+/// [`model_gemm`] accumulating into `out` (`+=`) — the `dW`-shaped
+/// backward contractions.
+pub fn model_gemm_acc(a: &[f32], b: &PackedMat, m: usize, out: &mut [f32]) {
+    model_gemm_core(a, b, m, true, out);
+}
+
+fn model_gemm_core(a: &[f32], b: &PackedMat, m: usize, acc: bool, out: &mut [f32]) {
+    let (k, n) = (b.k(), b.n());
+    assert_eq!(a.len(), m * k, "a must be [m, k]");
+    assert_eq!(out.len(), m * n, "out must be [m, n]");
+    if m == 0 {
+        return;
+    }
+    let pool = KernelPool::global();
+    if pool.threads() <= 1 || m * n * k < INLINE_MACS {
+        CALLER_ARENA.with(|ar| gemm_packed(a, b, m, acc, &mut ar.borrow_mut().gemm, out));
+        return;
+    }
+    let mut jobs: Vec<Box<dyn FnOnce(&mut ScratchArena) + Send + '_>> = Vec::new();
+    let mut out_rest = out;
+    for (first_row, count) in chunks(m, pool.threads()) {
+        let (out_chunk, rest) = out_rest.split_at_mut(count * n);
+        out_rest = rest;
+        let a_chunk = &a[first_row * k..(first_row + count) * k];
+        jobs.push(Box::new(move |arena: &mut ScratchArena| {
+            gemm_packed(a_chunk, b, count, acc, &mut arena.gemm, out_chunk);
+        }));
+    }
+    pool.run(jobs);
 }
 
 /// Block-sparse attention forward over a `[batch, heads, n, head_dim]`
@@ -577,6 +627,34 @@ mod tests {
         sparse_forward_batch(&x, 1, 1, d, &layout, &mut out);
         // constant V ⇒ every output element equals the constant
         assert!(out.iter().all(|&o| (o - 0.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn model_gemm_is_bit_identical_to_naive_reference_at_f32() {
+        use crate::config::Precision;
+        use crate::kernel::reference;
+        let mut rng = Rng::new(0x6E_33);
+        // small (inline path) and large (pool fan-out path) shapes
+        for &(m, k, n) in &[(5usize, 9usize, 7usize), (67, 48, 53)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let packed = PackedMat::pack(&b, k, n, Precision::F32);
+            let mut got = vec![0.0f32; m * n];
+            model_gemm(&a, &packed, m, &mut got);
+            let want = reference::matmul(&a, &b, m, k, n);
+            assert_eq!(got, want, "m={m} k={k} n={n}: f32 GEMM must be bit-identical");
+            // accumulate variant: out += a·b on a non-zero out
+            let init: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+            let mut acc = init.clone();
+            model_gemm_acc(&a, &packed, m, &mut acc);
+            let want_acc: Vec<f32> = init.iter().zip(&want).map(|(&i0, &w)| i0 + w).collect();
+            let worst = acc
+                .iter()
+                .zip(&want_acc)
+                .map(|(&g, &w)| (g - w).abs())
+                .fold(0.0f32, f32::max);
+            assert!(worst <= 1e-5, "m={m} k={k} n={n}: acc worst {worst}");
+        }
     }
 
     #[test]

@@ -1,48 +1,44 @@
 //! Forward-with-stats and backward implementations of the dense ops the
-//! native model is built from: matmul (with transposed variants for the
-//! backward), pre-LN layer norm, tanh-GELU, and bias/column-sum
+//! native model is built from: transposed matmul shapes for the
+//! backward, pre-LN layer norm, tanh-GELU, and bias/column-sum
 //! helpers. Training and serving forwards share **one implementation**
 //! of each op ([`layernorm_fwd`] is the canonical layer norm, which
 //! `kernel::model::layernorm` delegates to; [`gelu_fwd`] delegates to
 //! the canonical `kernel::model::gelu`), so the training forward is
 //! bit-identical to the serving forward by construction.
+//!
+//! The transposed matmuls route through the packed tiled GEMM layer
+//! (`kernel::microkernel` via the pooled `kernel::driver::model_gemm`)
+//! — **always at f32**: gradients keep full precision regardless of the
+//! forward's `Precision` policy, so mixed-precision training still
+//! updates f32 master weights with f32 gradients.
+
+use crate::config::Precision;
+use crate::kernel::driver::model_gemm_acc;
+use crate::kernel::microkernel::{pack_transposed, PackedMat};
+use crate::kernel::model::gemm_out;
 
 /// `C[m,k] = A[m,n] · B[k,n]ᵀ` — the `dX = dY · Wᵀ` shape of a matmul
-/// backward (row-major; `b`'s rows are the contraction axis).
+/// backward (row-major; `b`'s rows are the contraction axis). Packs
+/// `Bᵀ` and runs the tiled f32 GEMM over the pool.
 pub(crate) fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * n);
     debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * k];
-    for i in 0..m {
-        let a_row = &a[i * n..(i + 1) * n];
-        let o_row = &mut out[i * k..(i + 1) * k];
-        for (j, o) in o_row.iter_mut().enumerate() {
-            let b_row = &b[j * n..(j + 1) * n];
-            *o = a_row.iter().zip(b_row).map(|(&x, &y)| x * y).sum();
-        }
-    }
-    out
+    let bt = PackedMat::pack_transposed(b, k, n, Precision::F32);
+    gemm_out(a, &bt, m)
 }
 
 /// `acc[k,n] += A[m,k]ᵀ · B[m,n]` — the `dW += Xᵀ · dY` shape of a
-/// matmul backward, accumulating into `acc`.
+/// matmul backward, accumulating into `acc` through the tiled f32 GEMM
+/// (transpose `A`, pack `B`, accumulate).
 pub(crate) fn matmul_tn_acc(a: &[f32], b: &[f32], acc: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), m * n);
     debug_assert_eq!(acc.len(), k * n);
-    for i in 0..m {
-        let a_row = &a[i * k..(i + 1) * k];
-        let b_row = &b[i * n..(i + 1) * n];
-        for (p, &av) in a_row.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let acc_row = &mut acc[p * n..(p + 1) * n];
-            for (o, &bv) in acc_row.iter_mut().zip(b_row) {
-                *o += av * bv;
-            }
-        }
-    }
+    let mut at = vec![0.0f32; k * m];
+    pack_transposed(a, m, k, &mut at);
+    let bp = PackedMat::pack(b, m, n, Precision::F32);
+    model_gemm_acc(&at, &bp, k, acc);
 }
 
 /// `acc[j] += Σ_rows x[row, j]` — a bias gradient.

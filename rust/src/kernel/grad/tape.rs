@@ -21,10 +21,12 @@ use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
+use crate::config::Precision;
 use crate::kernel::driver::{sparse_backward_batch, sparse_forward_batch_training};
 use crate::kernel::layout::BlockCsr;
+use crate::kernel::microkernel::PackedMat;
 use crate::kernel::model::{
-    add_bias, add_in_place, gelu, matmul, merge_heads, split_heads, NativeModel,
+    add_bias, add_in_place, gelu, gemm_out, merge_heads, split_heads, NativeModel,
 };
 use crate::kernel::HeadViews;
 
@@ -93,8 +95,10 @@ pub fn forward_tape(
     }
     let layout = model.layout(seq_len)?;
     let positions = model.positions(seq_len);
+    model.ensure_packed();
+    let packed = model.packed.as_ref().expect("ensure_packed just ran");
     let (h, heads) = (model.cfg.hidden, model.cfg.heads);
-    let (vocab, ffn) = (model.cfg.vocab, model.cfg.ffn);
+    let vocab = model.cfg.vocab;
     let dh = h / heads;
 
     // token embedding + sinusoidal positions (same loop as serving)
@@ -110,13 +114,13 @@ pub fn forward_tape(
     }
 
     let mut layer_tapes = Vec::with_capacity(model.cfg.layers);
-    for layer in &model.layers {
+    for (layer, pl) in model.layers.iter().zip(&packed.layers) {
         let x_in = x.clone();
         // pre-LN block-sparse attention, residual
         let (xn1, ln1) = layernorm_fwd(&x, &layer.ln1_g, &layer.ln1_b, h);
-        let q = split_heads(&matmul(&xn1, &layer.wq, rows, h, h), batch, seq_len, heads, dh);
-        let k = split_heads(&matmul(&xn1, &layer.wk, rows, h, h), batch, seq_len, heads, dh);
-        let v = split_heads(&matmul(&xn1, &layer.wv, rows, h, h), batch, seq_len, heads, dh);
+        let q = split_heads(&gemm_out(&xn1, &pl.wq, rows), batch, seq_len, heads, dh);
+        let k = split_heads(&gemm_out(&xn1, &pl.wk, rows), batch, seq_len, heads, dh);
+        let v = split_heads(&gemm_out(&xn1, &pl.wv, rows), batch, seq_len, heads, dh);
         let mut attn = vec![0.0f32; rows * h];
         let mut stat_m = vec![0.0f32; batch * heads * seq_len];
         let mut stat_l = vec![0.0f32; batch * heads * seq_len];
@@ -125,17 +129,17 @@ pub fn forward_tape(
             &hv, batch, heads, dh, &layout, &mut attn, &mut stat_m, &mut stat_l,
         );
         let merged = merge_heads(&attn, batch, seq_len, heads, dh);
-        let proj = matmul(&merged, &layer.wo, rows, h, h);
+        let proj = gemm_out(&merged, &pl.wo, rows);
         add_in_place(&mut x, &proj);
         let x_mid = x.clone();
 
         // pre-LN GELU FFN, residual
         let (xn2, ln2) = layernorm_fwd(&x, &layer.ln2_g, &layer.ln2_b, h);
-        let mut ffn_pre = matmul(&xn2, &layer.w1, rows, h, ffn);
+        let mut ffn_pre = gemm_out(&xn2, &pl.w1, rows);
         add_bias(&mut ffn_pre, &layer.b1);
         let mut mid = ffn_pre.clone();
         gelu(&mut mid);
-        let mut down = matmul(&mid, &layer.w2, rows, ffn, h);
+        let mut down = gemm_out(&mid, &pl.w2, rows);
         add_bias(&mut down, &layer.b2);
         add_in_place(&mut x, &down);
 
@@ -159,7 +163,7 @@ pub fn forward_tape(
 
     // final LN + tied-embedding logits
     let (xn_f, ln_f) = layernorm_fwd(&x, &model.ln_f_g, &model.ln_f_b, h);
-    let logits = matmul(&xn_f, &model.embed_t, rows, h, vocab);
+    let logits = gemm_out(&xn_f, &packed.embed_t, rows);
     let tape = Tape {
         batch,
         seq: seq_len,
@@ -191,7 +195,9 @@ pub fn backward(model: &NativeModel, tape: &Tape, d_logits: &[f32], grads: &mut 
     // tied logits head: logits = xn_f · embedᵀ
     //   d_xn_f = d_logits · embed            [rows, h]
     //   d_embed += d_logitsᵀ · xn_f          [vocab, h]
-    let d_xn_f = matmul(d_logits, &model.embed, rows, vocab, h);
+    // (backward GEMMs stay f32 — gradients never quantize)
+    let embed_p = PackedMat::pack(&model.embed, vocab, h, Precision::F32);
+    let d_xn_f = gemm_out(d_logits, &embed_p, rows);
     matmul_tn_acc(d_logits, &tape.xn_f, &mut grads.embed, rows, vocab, h);
 
     // final LN
@@ -292,6 +298,7 @@ mod tests {
             vocab: 64,
             batch: 2,
             attn_seed: 5,
+            precision: Precision::F32,
         }
     }
 

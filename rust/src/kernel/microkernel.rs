@@ -34,6 +34,37 @@
 //! [`AttnGradScratch`](super::grad::AttnGradScratch), which the
 //! [`KernelPool`](super::driver::KernelPool) hoists into per-thread
 //! arenas — steady state allocates nothing.
+//!
+//! # The multi-precision GEMM layer
+//!
+//! Beyond the attention tiles, this module is the **single routing
+//! point for all model math**: the QKV/output projections, FFN, and
+//! tied-logits GEMMs in `kernel::model` and the transposed matmuls in
+//! `kernel::grad::ops` all go through [`gemm_packed`] over a
+//! [`PackedMat`] weight operand. Three storage precisions
+//! ([`Precision`]):
+//!
+//! * **f32** — plain packed rows; per-(i,j) accumulation runs over the
+//!   contraction index ascending, exactly like the retired naive ikj
+//!   matmul, so f32 results are **bit-identical** to the old path (and
+//!   identical across every [`TileShape`], so the tuner never perturbs
+//!   determinism);
+//! * **f16** — weights stored as hand-rolled IEEE half bits
+//!   ([`f32_to_f16`]/[`f16_to_f32`], round-to-nearest-even), widened
+//!   lane-wise to f32 in registers: half the weight memory traffic,
+//!   f32 compute;
+//! * **int8** — symmetric quantization: per-column weight scales baked
+//!   at pack time, per-row activation scales computed at call time
+//!   (quantize-on-pack into [`GemmScratch`]), i8×i8→i32 dot tiles, f32
+//!   dequant in the epilogue.
+//!
+//! Register-block shapes are **auto-tuned**: [`gemm_packed`] asks
+//! `kernel::calibrate::tuned_tile` for the winning [`TileShape`] per
+//! precision (probed once per process);
+//! [`gemm_packed_with`] takes an explicit shape (the tuner itself, and
+//! shape-sweeping tests, call this). `tests/precision_parity.rs` pins
+//! every precision against the scalar references in
+//! `kernel::reference`.
 
 /// Fixed vector-lane width: 8 × f32 (one AVX register, two SSE/NEON
 /// registers — wide enough to saturate either without spilling the
@@ -295,10 +326,559 @@ pub fn row_dots(a: &[f32], b: &[f32], rows: usize, d: usize, out: &mut [f32]) {
     }
 }
 
+// ---------------------------------------------------------------------
+// the multi-precision GEMM layer (see the module docs)
+// ---------------------------------------------------------------------
+
+pub use crate::config::Precision;
+
+/// Convert one f32 to IEEE 754 binary16 bits with round-to-nearest-even
+/// (hand-rolled — no `half` crate in this offline environment).
+/// Overflow saturates to ±inf; inputs below the subnormal range flush
+/// to ±0; NaN payloads are preserved as quiet NaNs.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp32 = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp32 == 0xff {
+        // inf / NaN: keep the top mantissa bits, force quiet on NaN
+        let payload = (man >> 13) as u16;
+        return if man == 0 { sign | 0x7c00 } else { sign | 0x7c00 | payload | 0x0200 };
+    }
+    let exp = exp32 - 127 + 15;
+    if exp >= 31 {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if exp <= 0 {
+        if exp < -10 {
+            return sign; // underflow → signed zero
+        }
+        // subnormal half: shift the (implicit-bit) mantissa into place
+        let man = man | 0x0080_0000;
+        let shift = (14 - exp) as u32;
+        let half = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let round_up = rem > halfway || (rem == halfway && (half & 1) == 1);
+        return sign | (half + u32::from(round_up)) as u16;
+    }
+    let half = ((exp as u32) << 10) | (man >> 13);
+    let rem = man & 0x1fff;
+    let round_up = rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1);
+    // a mantissa carry out of rounding lands in the exponent field with
+    // the correct encoding (including 0x7c00 = inf on max-normal)
+    sign | (half + u32::from(round_up)) as u16
+}
+
+/// Convert IEEE 754 binary16 bits back to f32 (exact — every half value
+/// is representable in f32).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign // signed zero
+        } else {
+            // subnormal half: renormalize into an f32 exponent
+            let mut e = 127 - 15 + 1;
+            let mut m = man;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((m & 0x03ff) << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7f80_0000 | (man << 13) // inf / NaN
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Symmetric int8 quantization of one value against a positive scale.
+#[inline]
+fn quantize_i8(x: f32, scale: f32) -> i8 {
+    (x / scale).round().clamp(-127.0, 127.0) as i8
+}
+
+/// The positive symmetric scale covering `[-maxabs, maxabs]` in 127
+/// steps (1.0 for all-zero data, so dequantization stays exact).
+#[inline]
+fn symmetric_scale(maxabs: f32) -> f32 {
+    if maxabs > 0.0 {
+        maxabs / 127.0
+    } else {
+        1.0
+    }
+}
+
+/// Quantize the rows of a `[rows, k]` f32 activation block into `q`
+/// (i8, same layout) with one symmetric scale per row — the int8 GEMM's
+/// quantize-on-pack step for the A operand, writing into reusable
+/// per-thread scratch.
+pub fn quantize_rows(a: &[f32], rows: usize, k: usize, q: &mut Vec<i8>, scale: &mut Vec<f32>) {
+    debug_assert_eq!(a.len(), rows * k, "a must be [rows, k]");
+    q.clear();
+    q.resize(rows * k, 0);
+    scale.clear();
+    scale.resize(rows, 1.0);
+    for ((row, qrow), s) in a.chunks_exact(k).zip(q.chunks_exact_mut(k)).zip(scale.iter_mut()) {
+        let maxabs = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        *s = symmetric_scale(maxabs);
+        for (qq, &v) in qrow.iter_mut().zip(row) {
+            *qq = quantize_i8(v, *s);
+        }
+    }
+}
+
+/// Per-thread scratch of the packed GEMM entry points: the quantized A
+/// operand (+ per-row scales) of the int8 path. Lives in the
+/// [`ScratchArena`](super::driver::ScratchArena) per-thread arenas so
+/// steady-state GEMM calls allocate nothing.
+#[derive(Debug, Default)]
+pub struct GemmScratch {
+    aq: Vec<i8>,
+    ascale: Vec<f32>,
+}
+
+/// Packed storage of one GEMM B operand (weights) at a chosen
+/// [`Precision`].
+#[derive(Clone, Debug)]
+enum PackedData {
+    /// Row-major `[k, n]` f32.
+    F32(Vec<f32>),
+    /// Row-major `[k, n]` IEEE binary16 bits.
+    F16(Vec<u16>),
+    /// Row-major `[k, n]` i8 with per-column symmetric scales `[n]`.
+    Int8 { q: Vec<i8>, scale: Vec<f32> },
+}
+
+/// A GEMM weight operand packed (and, for int8/f16, quantized) once and
+/// reused across forward passes: `C[m, n] (+)= A[m, k] · B[k, n]`.
+/// Models pre-pack every weight at their configured precision
+/// (quantize-on-pack — master weights stay f32 elsewhere).
+#[derive(Clone, Debug)]
+pub struct PackedMat {
+    k: usize,
+    n: usize,
+    data: PackedData,
+}
+
+impl PackedMat {
+    /// Pack a row-major `[k, n]` operand at `p`.
+    pub fn pack(src: &[f32], k: usize, n: usize, p: Precision) -> Self {
+        debug_assert_eq!(src.len(), k * n, "src must be [k, n]");
+        let data = match p {
+            Precision::F32 => PackedData::F32(src.to_vec()),
+            Precision::F16 => PackedData::F16(src.iter().map(|&x| f32_to_f16(x)).collect()),
+            Precision::Int8 => {
+                let mut scale = vec![0.0f32; n];
+                for row in src.chunks_exact(n) {
+                    for (s, &x) in scale.iter_mut().zip(row) {
+                        *s = s.max(x.abs());
+                    }
+                }
+                for s in scale.iter_mut() {
+                    *s = symmetric_scale(*s);
+                }
+                let mut q = vec![0i8; k * n];
+                for (qrow, row) in q.chunks_exact_mut(n).zip(src.chunks_exact(n)) {
+                    for ((qq, &x), &s) in qrow.iter_mut().zip(row).zip(scale.iter()) {
+                        *qq = quantize_i8(x, s);
+                    }
+                }
+                PackedData::Int8 { q, scale }
+            }
+        };
+        PackedMat { k, n, data }
+    }
+
+    /// Pack the **transpose** of a row-major `[rows, cols]` operand:
+    /// the result multiplies as a `[cols, rows]` B operand (`k = cols`,
+    /// `n = rows`) — the `dX = dY · Wᵀ` backward shape.
+    pub fn pack_transposed(src: &[f32], rows: usize, cols: usize, p: Precision) -> Self {
+        let mut t = vec![0.0f32; rows * cols];
+        pack_transposed(src, rows, cols, &mut t);
+        Self::pack(&t, cols, rows, p)
+    }
+
+    /// Contraction length `k`.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output width `n`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The precision this operand was packed at.
+    pub fn precision(&self) -> Precision {
+        match &self.data {
+            PackedData::F32(_) => Precision::F32,
+            PackedData::F16(_) => Precision::F16,
+            PackedData::Int8 { .. } => Precision::Int8,
+        }
+    }
+}
+
+/// Candidate register-block shapes of the packed GEMM kernels,
+/// monomorphized via const generics. `kernel::calibrate` probes each
+/// per precision at startup and records the winner; wider lanes win on
+/// AVX-512-class machines, the narrow default elsewhere.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TileShape {
+    /// 4 rows × 8 lanes — the attention tiles' [`MR`]×[`LANES`] shape.
+    Mr4Nr8,
+    /// 8 rows × 8 lanes — deeper B-operand reuse per loaded lane group.
+    Mr8Nr8,
+    /// 4 rows × 16 lanes — two vector registers wide per row.
+    Mr4Nr16,
+}
+
+impl TileShape {
+    /// Rows accumulated simultaneously.
+    pub fn mr(self) -> usize {
+        match self {
+            TileShape::Mr4Nr8 => 4,
+            TileShape::Mr8Nr8 => 8,
+            TileShape::Mr4Nr16 => 4,
+        }
+    }
+
+    /// Output-column lanes per register block.
+    pub fn nr(self) -> usize {
+        match self {
+            TileShape::Mr4Nr8 => 8,
+            TileShape::Mr8Nr8 => 8,
+            TileShape::Mr4Nr16 => 16,
+        }
+    }
+
+    /// Every candidate shape, in probe order.
+    pub fn all() -> [TileShape; 3] {
+        [TileShape::Mr4Nr8, TileShape::Mr8Nr8, TileShape::Mr4Nr16]
+    }
+
+    /// Display label (`MRxNR`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TileShape::Mr4Nr8 => "4x8",
+            TileShape::Mr8Nr8 => "8x8",
+            TileShape::Mr4Nr16 => "4x16",
+        }
+    }
+}
+
+/// `out[m, n] (+)= a[m, k] · b` through the packed tile kernels, using
+/// the auto-tuned [`TileShape`] for `b`'s precision. `acc` selects
+/// accumulate (`+=`, the `dW` shape) vs overwrite. Results at f32 are
+/// bit-identical to the naive ikj reference for any tile shape; int8
+/// quantizes `a`'s rows into `scratch` first (quantize-on-pack).
+pub fn gemm_packed(
+    a: &[f32],
+    b: &PackedMat,
+    m: usize,
+    acc: bool,
+    scratch: &mut GemmScratch,
+    out: &mut [f32],
+) {
+    let shape = crate::kernel::calibrate::tuned_tile(b.precision());
+    gemm_packed_with(shape, a, b, m, acc, scratch, out);
+}
+
+/// [`gemm_packed`] with an explicit register-block shape — the tuner's
+/// probe entry point (it cannot ask itself for the winner) and the
+/// shape-sweeping parity tests.
+pub fn gemm_packed_with(
+    shape: TileShape,
+    a: &[f32],
+    b: &PackedMat,
+    m: usize,
+    acc: bool,
+    scratch: &mut GemmScratch,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * b.k, "a must be [m, k]");
+    debug_assert_eq!(out.len(), m * b.n, "out must be [m, n]");
+    match shape {
+        TileShape::Mr4Nr8 => gemm_dispatch::<4, 8>(a, b, m, acc, scratch, out),
+        TileShape::Mr8Nr8 => gemm_dispatch::<8, 8>(a, b, m, acc, scratch, out),
+        TileShape::Mr4Nr16 => gemm_dispatch::<4, 16>(a, b, m, acc, scratch, out),
+    }
+}
+
+/// Shape-monomorphized precision dispatch.
+fn gemm_dispatch<const MRR: usize, const NR: usize>(
+    a: &[f32],
+    b: &PackedMat,
+    m: usize,
+    acc: bool,
+    scratch: &mut GemmScratch,
+    out: &mut [f32],
+) {
+    let (k, n) = (b.k, b.n);
+    match (&b.data, acc) {
+        (PackedData::F32(w), false) => gemm_f32::<MRR, NR, false>(a, w, m, k, n, out),
+        (PackedData::F32(w), true) => gemm_f32::<MRR, NR, true>(a, w, m, k, n, out),
+        (PackedData::F16(w), false) => gemm_f16::<MRR, NR, false>(a, w, m, k, n, out),
+        (PackedData::F16(w), true) => gemm_f16::<MRR, NR, true>(a, w, m, k, n, out),
+        (PackedData::Int8 { q, scale }, _) => {
+            quantize_rows(a, m, k, &mut scratch.aq, &mut scratch.ascale);
+            if acc {
+                gemm_i8::<MRR, NR, true>(&scratch.aq, &scratch.ascale, q, scale, m, k, n, out);
+            } else {
+                gemm_i8::<MRR, NR, false>(&scratch.aq, &scratch.ascale, q, scale, m, k, n, out);
+            }
+        }
+    }
+}
+
+/// Store or accumulate one finished register value.
+#[inline(always)]
+fn emit<const ACC: bool>(o: &mut f32, v: f32) {
+    if ACC {
+        *o += v;
+    } else {
+        *o = v;
+    }
+}
+
+/// f32 packed GEMM: `MRR × NR` register blocks, contraction index
+/// ascending inside each output element — the exact accumulation
+/// sequence of the retired naive ikj matmul, so f32 results are
+/// bit-identical to it.
+fn gemm_f32<const MRR: usize, const NR: usize, const ACC: bool>(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    let mut i = 0;
+    while i + MRR <= m {
+        let a_rows: [&[f32]; MRR] = std::array::from_fn(|r| &a[(i + r) * k..(i + r + 1) * k]);
+        let mut j = 0;
+        while j + NR <= n {
+            let mut acc = [[0.0f32; NR]; MRR];
+            for t in 0..k {
+                let bv: [f32; NR] = b[t * n + j..t * n + j + NR].try_into().expect("lane slice");
+                for (lanes, ar) in acc.iter_mut().zip(&a_rows) {
+                    let av = ar[t];
+                    for (l, &bb) in lanes.iter_mut().zip(&bv) {
+                        *l += av * bb;
+                    }
+                }
+            }
+            for (r, lanes) in acc.iter().enumerate() {
+                let o = &mut out[(i + r) * n + j..(i + r) * n + j + NR];
+                for (oo, &s) in o.iter_mut().zip(lanes) {
+                    emit::<ACC>(oo, s);
+                }
+            }
+            j += NR;
+        }
+        for jr in j..n {
+            for (r, ar) in a_rows.iter().enumerate() {
+                let mut s = 0.0f32;
+                for (t, &av) in ar.iter().enumerate() {
+                    s += av * b[t * n + jr];
+                }
+                emit::<ACC>(&mut out[(i + r) * n + jr], s);
+            }
+        }
+        i += MRR;
+    }
+    while i < m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let mut j = 0;
+        while j + NR <= n {
+            let mut lanes = [0.0f32; NR];
+            for (t, &av) in a_row.iter().enumerate() {
+                let bv: [f32; NR] = b[t * n + j..t * n + j + NR].try_into().expect("lane slice");
+                for (l, &bb) in lanes.iter_mut().zip(&bv) {
+                    *l += av * bb;
+                }
+            }
+            for (oo, &s) in out[i * n + j..i * n + j + NR].iter_mut().zip(&lanes) {
+                emit::<ACC>(oo, s);
+            }
+            j += NR;
+        }
+        for jr in j..n {
+            let mut s = 0.0f32;
+            for (t, &av) in a_row.iter().enumerate() {
+                s += av * b[t * n + jr];
+            }
+            emit::<ACC>(&mut out[i * n + jr], s);
+        }
+        i += 1;
+    }
+}
+
+/// f16-storage packed GEMM: B lanes widen to f32 in registers, then the
+/// arithmetic is the f32 kernel's — accuracy is bounded purely by the
+/// one-time weight rounding (≈2⁻¹⁰ relative per element).
+fn gemm_f16<const MRR: usize, const NR: usize, const ACC: bool>(
+    a: &[f32],
+    b: &[u16],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    let mut i = 0;
+    while i + MRR <= m {
+        let a_rows: [&[f32]; MRR] = std::array::from_fn(|r| &a[(i + r) * k..(i + r + 1) * k]);
+        let mut j = 0;
+        while j + NR <= n {
+            let mut acc = [[0.0f32; NR]; MRR];
+            for t in 0..k {
+                let brow = &b[t * n + j..t * n + j + NR];
+                let bv: [f32; NR] = std::array::from_fn(|l| f16_to_f32(brow[l]));
+                for (lanes, ar) in acc.iter_mut().zip(&a_rows) {
+                    let av = ar[t];
+                    for (l, &bb) in lanes.iter_mut().zip(&bv) {
+                        *l += av * bb;
+                    }
+                }
+            }
+            for (r, lanes) in acc.iter().enumerate() {
+                let o = &mut out[(i + r) * n + j..(i + r) * n + j + NR];
+                for (oo, &s) in o.iter_mut().zip(lanes) {
+                    emit::<ACC>(oo, s);
+                }
+            }
+            j += NR;
+        }
+        for jr in j..n {
+            for (r, ar) in a_rows.iter().enumerate() {
+                let mut s = 0.0f32;
+                for (t, &av) in ar.iter().enumerate() {
+                    s += av * f16_to_f32(b[t * n + jr]);
+                }
+                emit::<ACC>(&mut out[(i + r) * n + jr], s);
+            }
+        }
+        i += MRR;
+    }
+    while i < m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let mut j = 0;
+        while j + NR <= n {
+            let mut lanes = [0.0f32; NR];
+            for (t, &av) in a_row.iter().enumerate() {
+                let brow = &b[t * n + j..t * n + j + NR];
+                let bv: [f32; NR] = std::array::from_fn(|l| f16_to_f32(brow[l]));
+                for (l, &bb) in lanes.iter_mut().zip(&bv) {
+                    *l += av * bb;
+                }
+            }
+            for (oo, &s) in out[i * n + j..i * n + j + NR].iter_mut().zip(&lanes) {
+                emit::<ACC>(oo, s);
+            }
+            j += NR;
+        }
+        for jr in j..n {
+            let mut s = 0.0f32;
+            for (t, &av) in a_row.iter().enumerate() {
+                s += av * f16_to_f32(b[t * n + jr]);
+            }
+            emit::<ACC>(&mut out[i * n + jr], s);
+        }
+        i += 1;
+    }
+}
+
+/// int8 packed GEMM: i8×i8→i32 dot tiles (exact integer accumulation —
+/// safe for k up to ~130k at |q| ≤ 127), dequantized in the f32
+/// epilogue as `i32 · row_scale · col_scale`.
+#[allow(clippy::too_many_arguments)]
+fn gemm_i8<const MRR: usize, const NR: usize, const ACC: bool>(
+    aq: &[i8],
+    ascale: &[f32],
+    bq: &[i8],
+    bscale: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    let mut i = 0;
+    while i + MRR <= m {
+        let a_rows: [&[i8]; MRR] = std::array::from_fn(|r| &aq[(i + r) * k..(i + r + 1) * k]);
+        let mut j = 0;
+        while j + NR <= n {
+            let mut acc = [[0i32; NR]; MRR];
+            for t in 0..k {
+                let brow = &bq[t * n + j..t * n + j + NR];
+                let bv: [i32; NR] = std::array::from_fn(|l| brow[l] as i32);
+                for (lanes, ar) in acc.iter_mut().zip(&a_rows) {
+                    let av = ar[t] as i32;
+                    for (l, &bb) in lanes.iter_mut().zip(&bv) {
+                        *l += av * bb;
+                    }
+                }
+            }
+            for (r, lanes) in acc.iter().enumerate() {
+                let sa = ascale[i + r];
+                let o = &mut out[(i + r) * n + j..(i + r) * n + j + NR];
+                for ((oo, &s), &sb) in o.iter_mut().zip(lanes).zip(&bscale[j..j + NR]) {
+                    emit::<ACC>(oo, s as f32 * sa * sb);
+                }
+            }
+            j += NR;
+        }
+        for jr in j..n {
+            for (r, ar) in a_rows.iter().enumerate() {
+                let mut s = 0i32;
+                for (t, &av) in ar.iter().enumerate() {
+                    s += av as i32 * bq[t * n + jr] as i32;
+                }
+                emit::<ACC>(&mut out[(i + r) * n + jr], s as f32 * ascale[i + r] * bscale[jr]);
+            }
+        }
+        i += MRR;
+    }
+    while i < m {
+        let a_row = &aq[i * k..(i + 1) * k];
+        let sa = ascale[i];
+        let mut j = 0;
+        while j + NR <= n {
+            let mut lanes = [0i32; NR];
+            for (t, &av) in a_row.iter().enumerate() {
+                let av = av as i32;
+                let brow = &bq[t * n + j..t * n + j + NR];
+                let bv: [i32; NR] = std::array::from_fn(|l| brow[l] as i32);
+                for (l, &bb) in lanes.iter_mut().zip(&bv) {
+                    *l += av * bb;
+                }
+            }
+            let o = &mut out[i * n + j..i * n + j + NR];
+            for ((oo, &s), &sb) in o.iter_mut().zip(&lanes).zip(&bscale[j..j + NR]) {
+                emit::<ACC>(oo, s as f32 * sa * sb);
+            }
+            j += NR;
+        }
+        for jr in j..n {
+            let mut s = 0i32;
+            for (t, &av) in a_row.iter().enumerate() {
+                s += av as i32 * bq[t * n + jr] as i32;
+            }
+            emit::<ACC>(&mut out[i * n + jr], s as f32 * sa * bscale[jr]);
+        }
+        i += 1;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernel::dot;
+    use crate::kernel::reference::dot;
     use crate::util::Rng;
 
     fn data(rng: &mut Rng, len: usize) -> Vec<f32> {
@@ -399,5 +979,162 @@ mod tests {
                 assert!((want - g).abs() <= 1e-4, "d={d} row {i}: {want} vs {g}");
             }
         }
+    }
+
+    #[test]
+    fn f16_conversion_known_values_and_roundtrip() {
+        // exact binary16 encodings
+        for &(x, bits) in &[
+            (0.0f32, 0x0000u16),
+            (-0.0, 0x8000),
+            (1.0, 0x3c00),
+            (-1.0, 0xbc00),
+            (2.0, 0x4000),
+            (0.5, 0x3800),
+            (65504.0, 0x7bff),          // max finite half
+            (6.103_515_6e-5, 0x0400),   // smallest normal half
+            (5.960_464_5e-8, 0x0001),   // smallest subnormal half
+            (f32::INFINITY, 0x7c00),
+            (f32::NEG_INFINITY, 0xfc00),
+        ] {
+            assert_eq!(f32_to_f16(x), bits, "encoding {x}");
+            if x.is_finite() {
+                assert_eq!(f16_to_f32(bits), x, "decoding {bits:#06x}");
+            }
+        }
+        // overflow saturates to inf, deep underflow flushes to zero
+        assert_eq!(f32_to_f16(1.0e6), 0x7c00);
+        assert_eq!(f32_to_f16(-1.0e6), 0xfc00);
+        assert_eq!(f32_to_f16(1.0e-9), 0x0000);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // every half value round-trips exactly through f32
+        for h in 0..=0x7bffu16 {
+            let x = f16_to_f32(h);
+            assert_eq!(f32_to_f16(x), h, "half {h:#06x} must round-trip");
+        }
+        // representable-range f32s land within half a ULP (~2⁻¹⁰ rel)
+        let mut rng = Rng::new(0xF16);
+        for _ in 0..200 {
+            let x = rng.normal() as f32;
+            let back = f16_to_f32(f32_to_f16(x));
+            assert!(
+                (back - x).abs() <= x.abs() * 1.0e-3 + 1.0e-7,
+                "{x} → {back} drifted past the f16 budget"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_gemm_f32_is_bit_identical_across_shapes_and_remainders() {
+        let mut rng = Rng::new(0x6E99);
+        // shapes straddling every MR/NR remainder boundary
+        let shapes = [(1usize, 1usize, 1usize), (3, 5, 7), (4, 8, 8), (9, 17, 23), (16, 24, 33)];
+        for &(m, k, n) in &shapes {
+            let a = data(&mut rng, m * k);
+            let b = data(&mut rng, k * n);
+            let want = crate::kernel::reference::matmul(&a, &b, m, k, n);
+            let packed = PackedMat::pack(&b, k, n, Precision::F32);
+            assert_eq!(packed.precision(), Precision::F32);
+            assert_eq!((packed.k(), packed.n()), (k, n));
+            let mut scratch = GemmScratch::default();
+            for shape in TileShape::all() {
+                let mut got = vec![0.0f32; m * n];
+                gemm_packed_with(shape, &a, &packed, m, false, &mut scratch, &mut got);
+                assert_eq!(
+                    got,
+                    want,
+                    "{}: f32 m={m} k={k} n={n} must be bit-identical to the naive reference",
+                    shape.as_str()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_gemm_f16_and_int8_match_their_precision_references_exactly() {
+        let mut rng = Rng::new(0xAB5);
+        for &(m, k, n) in &[(3usize, 5usize, 7usize), (9, 16, 23), (12, 33, 8)] {
+            let a = data(&mut rng, m * k);
+            let b = data(&mut rng, k * n);
+            let mut scratch = GemmScratch::default();
+            for p in [Precision::F16, Precision::Int8] {
+                let want = crate::kernel::reference::matmul_prec(&a, &b, m, k, n, p);
+                let packed = PackedMat::pack(&b, k, n, p);
+                assert_eq!(packed.precision(), p);
+                for shape in TileShape::all() {
+                    let mut got = vec![0.0f32; m * n];
+                    gemm_packed_with(shape, &a, &packed, m, false, &mut scratch, &mut got);
+                    // int8 integer dots are order-free (exact); f16's
+                    // f32 accumulation matches the reference's
+                    // identical ordering bitwise too
+                    for (idx, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                        assert_eq!(g, w, "{p:?} {}: m={m} k={k} n={n} idx={idx}", shape.as_str());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_gemm_accumulate_adds_onto_existing_output() {
+        let mut rng = Rng::new(0xACC);
+        let (m, k, n) = (6usize, 11usize, 9usize);
+        let a = data(&mut rng, m * k);
+        let b = data(&mut rng, k * n);
+        let init = data(&mut rng, m * n);
+        let packed = PackedMat::pack(&b, k, n, Precision::F32);
+        let mut scratch = GemmScratch::default();
+        let want = crate::kernel::reference::matmul(&a, &b, m, k, n);
+        for shape in TileShape::all() {
+            let mut got = init.clone();
+            gemm_packed_with(shape, &a, &packed, m, true, &mut scratch, &mut got);
+            for idx in 0..m * n {
+                assert_eq!(got[idx], init[idx] + want[idx], "{}: acc idx={idx}", shape.as_str());
+            }
+        }
+    }
+
+    #[test]
+    fn pack_transposed_packs_the_transpose() {
+        let (rows, cols) = (3usize, 4usize);
+        let src: Vec<f32> = (0..rows * cols).map(|i| i as f32).collect();
+        let p = PackedMat::pack_transposed(&src, rows, cols, Precision::F32);
+        assert_eq!((p.k(), p.n()), (cols, rows));
+        // multiplying the identity of width `cols` by the packed
+        // transpose reads it back out
+        let mut eye = vec![0.0f32; cols * cols];
+        for i in 0..cols {
+            eye[i * cols + i] = 1.0;
+        }
+        let mut out = vec![0.0f32; cols * rows];
+        gemm_packed_with(
+            TileShape::Mr4Nr8,
+            &eye,
+            &p,
+            cols,
+            false,
+            &mut GemmScratch::default(),
+            &mut out,
+        );
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(out[c * rows + r], src[r * cols + c], "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_rows_scales_cover_the_row_maxima() {
+        let a = vec![1.0f32, -2.0, 0.5, 0.0, 0.0, 0.0];
+        let (mut q, mut s) = (Vec::new(), Vec::new());
+        quantize_rows(&a, 2, 3, &mut q, &mut s);
+        assert_eq!(q.len(), 6);
+        assert_eq!(s.len(), 2);
+        // row 0: maxabs 2.0 → scale 2/127; the max element hits ±127
+        assert!((s[0] - 2.0 / 127.0).abs() < 1e-9);
+        assert_eq!(q[1], -127);
+        // all-zero row falls back to scale 1.0 and zero codes
+        assert_eq!(s[1], 1.0);
+        assert_eq!(&q[3..6], &[0, 0, 0]);
     }
 }

@@ -29,8 +29,13 @@
 //!   backward, whole-model tape, [`grad::ParamGrads`], masked-LM loss,
 //!   and the [`grad::AdamW`] optimizer powering `train --backends
 //!   native`;
-//! * [`calibrate`] — the self-calibration micro-probe that seeds the
-//!   native backend's roofline from measurements instead of guesses.
+//! * [`calibrate`] — the self-calibration micro-probes: the roofline
+//!   that seeds the native backend's dispatch model, the per-precision
+//!   GEMM tile-shape auto-tuner, and the SIMD-vectorization floor
+//!   check behind `kernel-probe --assert-simd`;
+//! * [`reference`] — always-compiled precision-generic scalar
+//!   references (naive dot/matmul plus quantized variants), the
+//!   oracles every parity test compares the tiles against.
 //!
 //! `tests/kernel_parity.rs` property-tests sparse-vs-dense agreement
 //! (≤ 1e-5) across random [`crate::attention::PatternSpec`]s,
@@ -45,16 +50,23 @@ pub mod grad;
 pub mod layout;
 pub mod microkernel;
 pub mod model;
+pub mod reference;
 pub mod sparse;
 
-pub use calibrate::native_roofline;
+pub use calibrate::{
+    assert_simd_floor, native_roofline, simd_probe, tuned_tile, tuned_tiles, SimdProbe, TileChoice,
+    TileTable, MIN_SIMD_RATIO,
+};
 pub use dense::dense_reference;
 pub use driver::{
-    sparse_backward_batch, sparse_forward_batch, sparse_forward_batch_training, KernelPool,
-    ScratchArena,
+    model_gemm, model_gemm_acc, sparse_backward_batch, sparse_forward_batch,
+    sparse_forward_batch_training, KernelPool, ScratchArena,
 };
 pub use layout::{BlockCsr, BlockProvenance};
-pub use microkernel::{av_tile, pack_transposed, qk_tile, row_dots, LANES, MR};
+pub use microkernel::{
+    av_tile, f16_to_f32, f32_to_f16, gemm_packed, gemm_packed_with, pack_transposed, qk_tile,
+    quantize_rows, row_dots, GemmScratch, PackedMat, TileShape, LANES, MR,
+};
 pub use model::{
     config_fingerprint, is_native_artifact, native_artifact_name, native_buckets,
     param_count_for, parse_native_artifact, NativeEngine, NativeModel, NATIVE_PARAMS_ARTIFACT,
@@ -88,12 +100,4 @@ impl HeadViews<'_> {
             assert_eq!(mask.len(), n, "key_valid must be [n]");
         }
     }
-}
-
-/// Dot product of two equal-length rows — retained **only** as the
-/// test suite's scalar reference for the tiled [`microkernel`] layer;
-/// production kernels no longer call it.
-#[cfg(test)]
-pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
-    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
 }

@@ -22,12 +22,13 @@ use std::time::Instant;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::attention::PatternSpec;
-use crate::config::ModelConfig;
+use crate::config::{ModelConfig, Precision};
 use crate::runtime::{HostTensor, JobShape};
 use crate::util::Rng;
 
-use super::driver::sparse_forward_batch;
+use super::driver::{model_gemm, sparse_forward_batch};
 use super::layout::BlockCsr;
+use super::microkernel::PackedMat;
 use super::HeadViews;
 
 /// Name prefix of every native serving artifact (bucket).
@@ -99,6 +100,32 @@ pub struct NativeModel {
     layouts: HashMap<usize, Arc<BlockCsr>>,
     /// Sinusoidal position tables keyed by seq_len (`[seq_len, hidden]`).
     pos: HashMap<usize, Arc<Vec<f32>>>,
+    /// Weights pre-packed (and, at f16/int8, quantized) for the tiled
+    /// GEMM layer at `cfg.precision`. Master weights above stay f32
+    /// (checkpoints remain `BBCKPT1`-compatible); this cache is rebuilt
+    /// lazily after every [`NativeModel::load_flat_params`].
+    pub(crate) packed: Option<PackedWeights>,
+}
+
+/// One layer's GEMM operands packed for the microkernel layer. LN
+/// gains/biases and the FFN biases are element-wise (no GEMM) and stay
+/// on the f32 tensors.
+pub(crate) struct PackedLayer {
+    pub(crate) wq: PackedMat,
+    pub(crate) wk: PackedMat,
+    pub(crate) wv: PackedMat,
+    pub(crate) wo: PackedMat,
+    pub(crate) w1: PackedMat,
+    pub(crate) w2: PackedMat,
+}
+
+/// Every GEMM operand of the forward pass, packed once at a precision
+/// and reused until the weights (or the precision) change.
+pub(crate) struct PackedWeights {
+    pub(crate) precision: Precision,
+    pub(crate) layers: Vec<PackedLayer>,
+    /// The tied output head `[hidden, vocab]`.
+    pub(crate) embed_t: PackedMat,
 }
 
 const INIT_STD: f32 = 0.02;
@@ -149,7 +176,34 @@ impl NativeModel {
             ln_f_b: vec![0.0; h],
             layouts: HashMap::new(),
             pos: HashMap::new(),
+            packed: None,
         })
+    }
+
+    /// Ensure the packed-weight cache exists at `cfg.precision`,
+    /// repacking (quantize-on-pack) if it is missing, stale after a
+    /// parameter load, or at the wrong precision.
+    pub(crate) fn ensure_packed(&mut self) {
+        let p = self.cfg.precision;
+        if self.packed.as_ref().map(|pw| pw.precision == p).unwrap_or(false) {
+            return;
+        }
+        let h = self.cfg.hidden;
+        let (vocab, ffn) = (self.cfg.vocab, self.cfg.ffn);
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| PackedLayer {
+                wq: PackedMat::pack(&l.wq, h, h, p),
+                wk: PackedMat::pack(&l.wk, h, h, p),
+                wv: PackedMat::pack(&l.wv, h, h, p),
+                wo: PackedMat::pack(&l.wo, h, h, p),
+                w1: PackedMat::pack(&l.w1, h, ffn, p),
+                w2: PackedMat::pack(&l.w2, ffn, h, p),
+            })
+            .collect();
+        let embed_t = PackedMat::pack(&self.embed_t, h, vocab, p);
+        self.packed = Some(PackedWeights { precision: p, layers, embed_t });
     }
 
     /// The model's hyperparameters.
@@ -231,8 +285,10 @@ impl NativeModel {
         }
         let layout = self.layout(seq_len)?;
         let positions = self.positions(seq_len);
+        self.ensure_packed();
+        let packed = self.packed.as_ref().expect("ensure_packed just ran");
         let (h, heads) = (self.cfg.hidden, self.cfg.heads);
-        let (vocab, ffn) = (self.cfg.vocab, self.cfg.ffn);
+        let vocab = self.cfg.vocab;
         let dh = h / heads;
 
         // token embedding + sinusoidal positions
@@ -247,32 +303,32 @@ impl NativeModel {
             }
         }
 
-        for layer in &self.layers {
+        for (layer, pl) in self.layers.iter().zip(&packed.layers) {
             // pre-LN block-sparse attention, residual
             let xn = layernorm(&x, &layer.ln1_g, &layer.ln1_b, h);
-            let q = split_heads(&matmul(&xn, &layer.wq, rows, h, h), batch, seq_len, heads, dh);
-            let k = split_heads(&matmul(&xn, &layer.wk, rows, h, h), batch, seq_len, heads, dh);
-            let v = split_heads(&matmul(&xn, &layer.wv, rows, h, h), batch, seq_len, heads, dh);
+            let q = split_heads(&gemm_out(&xn, &pl.wq, rows), batch, seq_len, heads, dh);
+            let k = split_heads(&gemm_out(&xn, &pl.wk, rows), batch, seq_len, heads, dh);
+            let v = split_heads(&gemm_out(&xn, &pl.wv, rows), batch, seq_len, heads, dh);
             let mut attn = vec![0.0f32; rows * h];
             let hv = HeadViews { q: &q, k: &k, v: &v, key_valid: kv_valid };
             sparse_forward_batch(&hv, batch, heads, dh, &layout, &mut attn);
             let merged = merge_heads(&attn, batch, seq_len, heads, dh);
-            let proj = matmul(&merged, &layer.wo, rows, h, h);
+            let proj = gemm_out(&merged, &pl.wo, rows);
             add_in_place(&mut x, &proj);
 
             // pre-LN GELU FFN, residual
             let xn = layernorm(&x, &layer.ln2_g, &layer.ln2_b, h);
-            let mut mid = matmul(&xn, &layer.w1, rows, h, ffn);
+            let mut mid = gemm_out(&xn, &pl.w1, rows);
             add_bias(&mut mid, &layer.b1);
             gelu(&mut mid);
-            let mut down = matmul(&mid, &layer.w2, rows, ffn, h);
+            let mut down = gemm_out(&mid, &pl.w2, rows);
             add_bias(&mut down, &layer.b2);
             add_in_place(&mut x, &down);
         }
 
         // final LN + tied-embedding logits
         let xn = layernorm(&x, &self.ln_f_g, &self.ln_f_b, h);
-        Ok(matmul(&xn, &self.embed_t, rows, h, vocab))
+        Ok(gemm_out(&xn, &packed.embed_t, rows))
     }
 
     /// Learned parameter tensors in the **canonical flattening order**:
@@ -371,6 +427,8 @@ impl NativeModel {
         }
         debug_assert_eq!(off, want);
         self.rebuild_tied_head();
+        // new master weights ⇒ the packed/quantized operands are stale
+        self.packed = None;
         Ok(())
     }
 
@@ -426,25 +484,18 @@ pub fn config_fingerprint(cfg: &ModelConfig) -> Vec<i32> {
 }
 
 // ---------------------------------------------------------------------
-// dense linear-algebra helpers (row-major, ikj loop order) — crate
-// visible so the training forward (kernel::grad::tape) runs the exact
-// same arithmetic and stays bit-identical to serving
+// dense helpers — crate visible so the training forward
+// (kernel::grad::tape) runs the exact same arithmetic and stays
+// bit-identical to serving. The old naive ikj matmul lives on only as
+// `kernel::reference::matmul`, the test oracle; every model GEMM now
+// routes through the packed microkernel layer below.
 // ---------------------------------------------------------------------
 
-pub(crate) fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let a_row = &a[i * k..(i + 1) * k];
-        let o_row = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in a_row.iter().enumerate() {
-            let b_row = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in o_row.iter_mut().zip(b_row) {
-                *o += av * bv;
-            }
-        }
-    }
+/// Allocate-and-run wrapper over the pooled packed GEMM:
+/// `a[rows, w.k()] · w → [rows, w.n()]`.
+pub(crate) fn gemm_out(a: &[f32], w: &PackedMat, rows: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * w.n()];
+    model_gemm(a, w, rows, &mut out);
     out
 }
 

@@ -1,0 +1,159 @@
+//! Precision-generic scalar references: the naive formulations every
+//! tiled kernel is tested against. Deliberately the simplest possible
+//! loops — they share no code with the microkernels, so agreement is
+//! meaningful. Always compiled (not `#[cfg(test)]`) because the
+//! integration tests in `tests/` link the library crate from outside
+//! and could not see test-gated items; production code must still never
+//! call these on a hot path (the acceptance gate greps for it).
+//!
+//! [`matmul_prec`] extends the f32 reference to the packed precisions:
+//! it applies the **documented** quantization rules (per-column
+//! symmetric weight scales + per-row symmetric activation scales for
+//! int8; round-to-nearest-even storage rounding for f16) with
+//! independent scalar code, then contracts in the same dequant order as
+//! the tiled epilogue — so int8 parity tests can demand exact
+//! agreement, not just a tolerance.
+
+use crate::config::Precision;
+use crate::kernel::microkernel::{f16_to_f32, f32_to_f16};
+
+/// Scalar dot product of two equal-length rows — the test suite's
+/// reference for the lane-partial tiled dots.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+/// Naive ikj matmul, `out[m, n] = a[m, k] · b[k, n]` — the retired
+/// model matmul, kept verbatim as the f32 oracle. Its contraction
+/// order (k ascending per output element) is the order the tiled f32
+/// kernel reproduces bit-identically.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for t in 0..k {
+            let av = a[i * k + t];
+            let brow = &b[t * n..(t + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Naive matmul at a packed precision: quantizes/rounds the operands
+/// with standalone scalar code implementing the documented scale rules,
+/// then contracts naively. The tiled kernels must match this **exactly**
+/// for int8 (integer accumulation is order-free) and to f32 rounding
+/// noise for f16/f32.
+pub fn matmul_prec(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, p: Precision) -> Vec<f32> {
+    match p {
+        Precision::F32 => matmul_f32_ordered(a, b, m, k, n),
+        Precision::F16 => {
+            let bh: Vec<f32> = b.iter().map(|&x| f16_to_f32(f32_to_f16(x))).collect();
+            matmul_f32_ordered(a, &bh, m, k, n)
+        }
+        Precision::Int8 => {
+            // per-column symmetric weight scales: maxabs/127, 1.0 on
+            // all-zero columns
+            let mut bscale = vec![0.0f32; n];
+            for row in b.chunks_exact(n) {
+                for (s, &x) in bscale.iter_mut().zip(row) {
+                    *s = s.max(x.abs());
+                }
+            }
+            for s in bscale.iter_mut() {
+                *s = if *s > 0.0 { *s / 127.0 } else { 1.0 };
+            }
+            let bq: Vec<i8> = b
+                .iter()
+                .enumerate()
+                .map(|(idx, &x)| (x / bscale[idx % n]).round().clamp(-127.0, 127.0) as i8)
+                .collect();
+            let mut out = vec![0.0f32; m * n];
+            for i in 0..m {
+                // per-row symmetric activation scale
+                let row = &a[i * k..(i + 1) * k];
+                let maxabs = row.iter().fold(0.0f32, |mx, &v| mx.max(v.abs()));
+                let sa = if maxabs > 0.0 { maxabs / 127.0 } else { 1.0 };
+                let aq: Vec<i8> =
+                    row.iter().map(|&x| (x / sa).round().clamp(-127.0, 127.0) as i8).collect();
+                for j in 0..n {
+                    let mut acc = 0i32;
+                    for (t, &qa) in aq.iter().enumerate() {
+                        acc += qa as i32 * bq[t * n + j] as i32;
+                    }
+                    // dequant order must mirror the tiled epilogue:
+                    // (acc as f32) · row_scale · col_scale
+                    out[i * n + j] = acc as f32 * sa * bscale[j];
+                }
+            }
+            out
+        }
+    }
+}
+
+/// f32 matmul with the per-output-element k-ascending accumulation
+/// order (what the tiled kernels use), as the shared f32/f16 core.
+fn matmul_f32_ordered(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0f32;
+            for t in 0..k {
+                s += a[i * k + t] * b[t * n + j];
+            }
+            out[i * n + j] = s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn ikj_and_ordered_f32_references_agree_bitwise() {
+        // both accumulate each out[i][j] over t ascending in f32, so
+        // they are the same sum in the same order
+        let mut rng = Rng::new(0xF00D);
+        let (m, k, n) = (7, 13, 9);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        assert_eq!(matmul(&a, &b, m, k, n), matmul_f32_ordered(&a, &b, m, k, n));
+    }
+
+    #[test]
+    fn matmul_prec_f32_is_the_plain_reference() {
+        let mut rng = Rng::new(0xBEAD);
+        let (m, k, n) = (5, 11, 6);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        assert_eq!(matmul_prec(&a, &b, m, k, n, Precision::F32), matmul(&a, &b, m, k, n));
+    }
+
+    #[test]
+    fn int8_reference_handles_zero_rows_and_columns() {
+        // all-zero activation row and all-zero weight column must both
+        // dequantize to exact zeros (scale falls back to 1.0)
+        let (m, k, n) = (3, 4, 3);
+        let mut a = vec![0.5f32; m * k];
+        for t in 0..k {
+            a[k + t] = 0.0; // row 1 all zero
+        }
+        let mut b = vec![0.25f32; k * n];
+        for t in 0..k {
+            b[t * n + 2] = 0.0; // column 2 all zero
+        }
+        let out = matmul_prec(&a, &b, m, k, n, Precision::Int8);
+        for j in 0..n {
+            assert_eq!(out[n + j], 0.0, "zero activation row stays zero");
+        }
+        for i in 0..m {
+            assert_eq!(out[i * n + 2], 0.0, "zero weight column stays zero");
+        }
+    }
+}

@@ -293,7 +293,7 @@ mod tests {
             for &kb in layout.row(qb) {
                 for jj in 0..4 {
                     let kj = kb * 4 + jj;
-                    let s = crate::kernel::dot(q_row, &k[kj * d..(kj + 1) * d]) * scale;
+                    let s = crate::kernel::reference::dot(q_row, &k[kj * d..(kj + 1) * d]) * scale;
                     sum += (s - m[i]).exp() / l[i];
                 }
             }

@@ -315,6 +315,7 @@ mod tests {
             vocab: 64,
             batch: 2,
             attn_seed: 1,
+            precision: crate::config::Precision::F32,
         }
     }
 

@@ -265,6 +265,7 @@ fn small_cfg() -> ModelConfig {
         vocab: 64,
         batch: 1,
         attn_seed: 3,
+        precision: bigbird::config::Precision::F32,
     }
 }
 
@@ -351,6 +352,7 @@ fn native_training_loss_decreases_over_20_steps() {
         vocab: 256,
         batch: 4,
         attn_seed: 0,
+        precision: bigbird::config::Precision::F32,
     };
     let docs = bigbird::train::synthetic_docs(cfg.vocab, 32, 2048, 5);
     let mut trainer = NativeTrainer::new(cfg.clone(), AdamWConfig::default()).unwrap();
