@@ -1,14 +1,16 @@
 //! Long-document serving demo: start the coordinator (router + dynamic
-//! length-bucketing batcher + PJRT engine) and fire a mixed-length
+//! length-bucketing batcher + engine pool) and fire a mixed-length
 //! fill-mask workload at it, reporting latency percentiles and batch
-//! fill.
+//! fill. Add `--listen 127.0.0.1:0` to run the same workload over the
+//! TCP wire protocol, and `--latency-budget-ms` / `--max-queue` to
+//! exercise admission control.
 //!
 //! ```bash
-//! cargo run --release --example serve_longdoc
+//! cargo run --release --example serve_longdoc -- --backends native:2
 //! ```
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let flags = bigbird::cli::parse_flags(&args)?;
-    bigbird::experiments::serve_demo::run(&flags)
+    let serve = bigbird::cli::parse_serve(&args)?;
+    bigbird::experiments::serve_demo::run(&serve)
 }

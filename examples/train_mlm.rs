@@ -8,6 +8,6 @@
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let flags = bigbird::cli::parse_flags(&args)?;
-    bigbird::experiments::train_demo::run(&flags)
+    let train = bigbird::cli::parse_train(&args)?;
+    bigbird::experiments::train_demo::run(&train)
 }

@@ -19,7 +19,7 @@ use std::time::{Duration, Instant};
 
 use bigbird::config::ServingConfig;
 use bigbird::coordinator::{
-    replay, trace, Batcher, BatcherConfig, Bucket, PendingRequest, Server, ServerConfig,
+    replay, trace, Batcher, BatcherConfig, Bucket, PendingRequest, Request, Server, ServerConfig,
     WeightedPolicy,
 };
 use bigbird::runtime::{Backend, BackendKind, JobShape, Roofline};
@@ -50,6 +50,7 @@ fn bench_batcher(report: &mut BenchReport) {
             id: i as u64,
             tokens: vec![7; rng.range(16, 2048)],
             enqueued: Instant::now(),
+            deadline: None,
         })
         .collect();
     let mut b =
@@ -157,7 +158,7 @@ fn bench_serving(artifacts: &str, report: &mut BenchReport) {
             5..=7 => rng.range(512, 1024),
             _ => rng.range(1024, 2048),
         };
-        rxs.push(server.submit(masked_request(&mut rng, len)).unwrap());
+        rxs.push(server.submit(Request::new(masked_request(&mut rng, len))).unwrap());
     }
     for rx in rxs {
         rx.recv_timeout(Duration::from_secs(600)).unwrap();
@@ -196,7 +197,7 @@ fn bench_scaling(artifacts: &str, report: &mut BenchReport) {
         let t0 = Instant::now();
         let rxs: Vec<_> = events
             .iter()
-            .map(|e| server.submit(masked_request(&mut rng, e.len)).unwrap())
+            .map(|e| server.submit(Request::new(masked_request(&mut rng, e.len))).unwrap())
             .collect();
         for rx in rxs {
             rx.recv_timeout(Duration::from_secs(600)).unwrap();

@@ -3,6 +3,7 @@
 //! Subcommands:
 //! * `smoke`              — compile + run every artifact once (pipeline check)
 //! * `serve`              — start the long-document serving coordinator
+//!                          (add `--listen <addr>` to serve over TCP)
 //! * `train`              — run the MLM training driver
 //! * `experiment <id>`    — regenerate one paper table/figure
 //! * `graph`              — attention-graph theory report (Sec. 2 claims)
@@ -10,13 +11,374 @@
 //! * `bench-check`        — gate bench JSONs against committed perf baselines
 //! * `kernel-probe`       — print the GEMM tile-tuner table and SIMD probe;
 //!                          `--assert-simd` turns it into a CI vectorization gate
+//!
+//! **Argument structs.** `serve`, `train`, `bench-check`, and
+//! `kernel-probe` each parse into their own typed struct
+//! ([`ServeArgs`], [`TrainArgs`], [`BenchCheckArgs`],
+//! [`KernelProbeArgs`]) and accept **only their own flags** — a
+//! misplaced flag produces an error naming the subcommand it belongs
+//! to. The experiment harnesses (`experiment <id>`, `smoke`, `graph`,
+//! `list`) still share the legacy [`Flags`] grab-bag, since dozens of
+//! harnesses draw different subsets from it.
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::Precision;
+use crate::config::{AdmissionConfig, Precision, ServingConfig};
 use crate::runtime::{parse_backend_specs, BackendSpec};
 
-/// Parsed global flags.
+// ---------------------------------------------------------------------
+// per-subcommand flag registry (drives misplaced-flag diagnostics)
+// ---------------------------------------------------------------------
+
+const SERVE_FLAGS: &[&str] = &[
+    "--artifacts",
+    "--seed",
+    "--backends",
+    "--engine-workers",
+    "--max-inflight",
+    "--checkpoint",
+    "--precision",
+    "--listen",
+    "--latency-budget-ms",
+    "--max-queue",
+];
+
+const TRAIN_FLAGS: &[&str] = &[
+    "--artifacts",
+    "--config",
+    "--seed",
+    "--steps",
+    "--backends",
+    "--checkpoint",
+    "--precision",
+];
+
+const BENCH_CHECK_FLAGS: &[&str] =
+    &["--attention-json", "--train-json", "--baselines", "--update-baselines", "--summary"];
+
+const KERNEL_PROBE_FLAGS: &[&str] = &["--assert-simd"];
+
+const SUBCOMMAND_FLAGS: &[(&str, &[&str])] = &[
+    ("serve", SERVE_FLAGS),
+    ("train", TRAIN_FLAGS),
+    ("bench-check", BENCH_CHECK_FLAGS),
+    ("kernel-probe", KERNEL_PROBE_FLAGS),
+];
+
+/// Diagnostic for a flag the subcommand does not take: names the
+/// subcommand(s) the flag actually belongs to, then lists the valid set.
+fn unknown_flag(cmd: &str, flag: &str, valid: &[&str]) -> anyhow::Error {
+    let owners: Vec<&str> = SUBCOMMAND_FLAGS
+        .iter()
+        .filter(|(c, fl)| *c != cmd && fl.contains(&flag))
+        .map(|(c, _)| *c)
+        .collect();
+    if owners.is_empty() {
+        anyhow::anyhow!("unknown flag {flag} for `{cmd}`; valid flags: {}", valid.join(", "))
+    } else {
+        anyhow::anyhow!(
+            "flag {flag} belongs to `{}`, not `{cmd}`; valid `{cmd}` flags: {}",
+            owners.join("`/`"),
+            valid.join(", ")
+        )
+    }
+}
+
+/// Pull the value after a `--flag` or fail naming flag and subcommand.
+fn flag_value<'a>(
+    it: &mut std::slice::Iter<'a, String>,
+    flag: &str,
+    cmd: &str,
+) -> Result<&'a str> {
+    match it.next() {
+        Some(v) => Ok(v.as_str()),
+        None => bail!("{flag} needs a value (`{cmd}`)"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// serve
+// ---------------------------------------------------------------------
+
+/// Arguments of `bigbird serve`: the engine-pool shape, the admission
+/// policy, and (optionally) a TCP listen address for the wire ingress.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeArgs {
+    /// `--artifacts <dir>` (default "artifacts"; unused by `--backends
+    /// native:N`, which needs no artifacts).
+    pub artifacts: String,
+    /// `--seed <u64>` workload RNG seed.
+    pub seed: u64,
+    /// `--backends <spec>` / `--engine-workers <n>` engine pool shape.
+    pub backends: Vec<BackendSpec>,
+    /// `--max-inflight <n>` per-bucket inflight batch cap.
+    pub max_inflight: usize,
+    /// `--checkpoint <path>` native BBCKPT1 checkpoint to serve.
+    pub checkpoint: Option<String>,
+    /// `--precision f32|f16|int8` native GEMM precision policy.
+    pub precision: Precision,
+    /// `--listen <addr>`: bind the length-prefixed TCP wire ingress
+    /// (e.g. `127.0.0.1:9090`; port 0 picks an ephemeral port) and
+    /// drive the demo workload over real sockets. `None` keeps the
+    /// in-process demo — both paths submit the same typed requests.
+    pub listen: Option<String>,
+    /// `--latency-budget-ms <ms>`: shed `Normal`/`Low` requests as
+    /// `overloaded` while the queue-wait EWMA exceeds this budget.
+    pub latency_budget_ms: Option<f64>,
+    /// `--max-queue <n>`: hard cap on admitted-but-unanswered requests;
+    /// past it requests shed `queue_full` so memory stays bounded.
+    pub max_queue: usize,
+}
+
+impl Default for ServeArgs {
+    fn default() -> Self {
+        let sd = ServingConfig::default();
+        let ad = AdmissionConfig::default();
+        ServeArgs {
+            artifacts: "artifacts".to_string(),
+            seed: 0,
+            backends: sd.backends,
+            max_inflight: sd.max_inflight,
+            checkpoint: None,
+            precision: Precision::default(),
+            listen: None,
+            latency_budget_ms: ad.latency_budget_ms,
+            max_queue: ad.max_queue,
+        }
+    }
+}
+
+impl ServeArgs {
+    /// The serving-pool shape selected on the command line.
+    pub fn serving(&self) -> ServingConfig {
+        ServingConfig { backends: self.backends.clone(), max_inflight: self.max_inflight }
+    }
+
+    /// The admission policy selected on the command line (per-client
+    /// cap and pressure floor keep their defaults).
+    pub fn admission(&self) -> AdmissionConfig {
+        AdmissionConfig {
+            latency_budget_ms: self.latency_budget_ms,
+            max_queue: self.max_queue,
+            ..AdmissionConfig::default()
+        }
+    }
+}
+
+/// Parse `serve` arguments; rejects flags of other subcommands by name.
+pub fn parse_serve(args: &[String]) -> Result<ServeArgs> {
+    const CMD: &str = "serve";
+    let mut a = ServeArgs::default();
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--artifacts" => a.artifacts = flag_value(&mut it, "--artifacts", CMD)?.to_string(),
+            "--seed" => {
+                let v = flag_value(&mut it, "--seed", CMD)?;
+                a.seed = v.parse().with_context(|| format!("--seed expects a u64, got {v:?}"))?;
+            }
+            "--backends" => a.backends = parse_backend_specs(flag_value(&mut it, "--backends", CMD)?)?,
+            "--engine-workers" => {
+                let v = flag_value(&mut it, "--engine-workers", CMD)?;
+                let n: usize =
+                    v.parse().with_context(|| format!("--engine-workers expects a count, got {v:?}"))?;
+                a.backends = BackendSpec::cpu_workers(n);
+            }
+            "--max-inflight" => {
+                let v = flag_value(&mut it, "--max-inflight", CMD)?;
+                a.max_inflight =
+                    v.parse().with_context(|| format!("--max-inflight expects a count, got {v:?}"))?;
+            }
+            "--checkpoint" => {
+                a.checkpoint = Some(flag_value(&mut it, "--checkpoint", CMD)?.to_string())
+            }
+            "--precision" => a.precision = Precision::parse(flag_value(&mut it, "--precision", CMD)?)?,
+            "--listen" => a.listen = Some(flag_value(&mut it, "--listen", CMD)?.to_string()),
+            "--latency-budget-ms" => {
+                let v = flag_value(&mut it, "--latency-budget-ms", CMD)?;
+                let ms: f64 = v
+                    .parse()
+                    .with_context(|| format!("--latency-budget-ms expects a number, got {v:?}"))?;
+                a.latency_budget_ms = Some(ms);
+            }
+            "--max-queue" => {
+                let v = flag_value(&mut it, "--max-queue", CMD)?;
+                a.max_queue =
+                    v.parse().with_context(|| format!("--max-queue expects a count, got {v:?}"))?;
+            }
+            other if other.starts_with("--") => return Err(unknown_flag(CMD, other, SERVE_FLAGS)),
+            other => bail!("`serve` takes no positional arguments (got {other:?})"),
+        }
+    }
+    a.serving().validate()?;
+    a.admission().validate()?;
+    Ok(a)
+}
+
+// ---------------------------------------------------------------------
+// train
+// ---------------------------------------------------------------------
+
+/// Arguments of `bigbird train`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainArgs {
+    /// `--artifacts <dir>` (PJRT path only).
+    pub artifacts: String,
+    /// `--config k=v,...` model config overrides (native path).
+    pub config: String,
+    /// `--seed <u64>`.
+    pub seed: u64,
+    /// `--steps <n>` (default 200).
+    pub steps: usize,
+    /// `--backends <spec>`: `native` selects the artifact-free trainer.
+    pub backends: Vec<BackendSpec>,
+    /// `--checkpoint <path>` where the native trainer writes BBCKPT1.
+    pub checkpoint: Option<String>,
+    /// `--precision f32|f16|int8` forward-GEMM precision (native path).
+    pub precision: Precision,
+    /// Optional positional model key (PJRT path; default
+    /// `mlm_bigbird_itc_s512_b4`).
+    pub model: Option<String>,
+}
+
+impl Default for TrainArgs {
+    fn default() -> Self {
+        TrainArgs {
+            artifacts: "artifacts".to_string(),
+            config: String::new(),
+            seed: 0,
+            steps: 200,
+            backends: ServingConfig::default().backends,
+            checkpoint: None,
+            precision: Precision::default(),
+            model: None,
+        }
+    }
+}
+
+/// Parse `train` arguments; rejects flags of other subcommands by name.
+pub fn parse_train(args: &[String]) -> Result<TrainArgs> {
+    const CMD: &str = "train";
+    let mut a = TrainArgs::default();
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--artifacts" => a.artifacts = flag_value(&mut it, "--artifacts", CMD)?.to_string(),
+            "--config" => a.config = flag_value(&mut it, "--config", CMD)?.to_string(),
+            "--seed" => {
+                let v = flag_value(&mut it, "--seed", CMD)?;
+                a.seed = v.parse().with_context(|| format!("--seed expects a u64, got {v:?}"))?;
+            }
+            "--steps" => {
+                let v = flag_value(&mut it, "--steps", CMD)?;
+                a.steps = v.parse().with_context(|| format!("--steps expects a count, got {v:?}"))?;
+            }
+            "--backends" => a.backends = parse_backend_specs(flag_value(&mut it, "--backends", CMD)?)?,
+            "--checkpoint" => {
+                a.checkpoint = Some(flag_value(&mut it, "--checkpoint", CMD)?.to_string())
+            }
+            "--precision" => a.precision = Precision::parse(flag_value(&mut it, "--precision", CMD)?)?,
+            other if other.starts_with("--") => return Err(unknown_flag(CMD, other, TRAIN_FLAGS)),
+            other => {
+                if a.model.is_some() {
+                    bail!("`train` takes at most one positional model key (got extra {other:?})");
+                }
+                a.model = Some(other.to_string());
+            }
+        }
+    }
+    Ok(a)
+}
+
+// ---------------------------------------------------------------------
+// bench-check
+// ---------------------------------------------------------------------
+
+/// Arguments of `bigbird bench-check`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BenchCheckArgs {
+    /// `--attention-json <path>` (default BENCH_attention.json).
+    pub attention_json: String,
+    /// `--train-json <path>` (default BENCH_train.json).
+    pub train_json: String,
+    /// `--baselines <path>` (default bench_baselines.json).
+    pub baselines: String,
+    /// `--update-baselines`: rewrite baselines instead of gating.
+    pub update_baselines: bool,
+    /// `--summary <path>`: append the markdown report here.
+    pub summary: Option<String>,
+}
+
+impl Default for BenchCheckArgs {
+    fn default() -> Self {
+        BenchCheckArgs {
+            attention_json: "BENCH_attention.json".to_string(),
+            train_json: "BENCH_train.json".to_string(),
+            baselines: "bench_baselines.json".to_string(),
+            update_baselines: false,
+            summary: None,
+        }
+    }
+}
+
+/// Parse `bench-check` arguments.
+pub fn parse_bench_check(args: &[String]) -> Result<BenchCheckArgs> {
+    const CMD: &str = "bench-check";
+    let mut a = BenchCheckArgs::default();
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--attention-json" => {
+                a.attention_json = flag_value(&mut it, "--attention-json", CMD)?.to_string()
+            }
+            "--train-json" => a.train_json = flag_value(&mut it, "--train-json", CMD)?.to_string(),
+            "--baselines" => a.baselines = flag_value(&mut it, "--baselines", CMD)?.to_string(),
+            "--update-baselines" => a.update_baselines = true,
+            "--summary" => a.summary = Some(flag_value(&mut it, "--summary", CMD)?.to_string()),
+            other if other.starts_with("--") => {
+                return Err(unknown_flag(CMD, other, BENCH_CHECK_FLAGS))
+            }
+            other => bail!("`bench-check` takes no positional arguments (got {other:?})"),
+        }
+    }
+    Ok(a)
+}
+
+// ---------------------------------------------------------------------
+// kernel-probe
+// ---------------------------------------------------------------------
+
+/// Arguments of `bigbird kernel-probe`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct KernelProbeArgs {
+    /// `--assert-simd`: exit nonzero when the tiled f32 GEMM misses the
+    /// vectorization floor.
+    pub assert_simd: bool,
+}
+
+/// Parse `kernel-probe` arguments.
+pub fn parse_kernel_probe(args: &[String]) -> Result<KernelProbeArgs> {
+    const CMD: &str = "kernel-probe";
+    let mut a = KernelProbeArgs::default();
+    for arg in args {
+        match arg.as_str() {
+            "--assert-simd" => a.assert_simd = true,
+            other if other.starts_with("--") => {
+                return Err(unknown_flag(CMD, other, KERNEL_PROBE_FLAGS))
+            }
+            other => bail!("`kernel-probe` takes no positional arguments (got {other:?})"),
+        }
+    }
+    Ok(a)
+}
+
+// ---------------------------------------------------------------------
+// legacy shared flags (experiment harnesses)
+// ---------------------------------------------------------------------
+
+/// Parsed shared flags for the experiment harnesses (`experiment <id>`,
+/// `smoke`, `graph`, `list`). The serving/training entrypoints use the
+/// typed per-subcommand structs above instead.
 #[derive(Debug, Default)]
 pub struct Flags {
     /// `--artifacts <dir>` (default "artifacts").
@@ -47,9 +409,8 @@ pub struct Flags {
     /// `--summary <path>`: append the `bench-check` markdown report
     /// (pointed at `$GITHUB_STEP_SUMMARY` in CI).
     pub summary: Option<String>,
-    /// `--precision f32|f16|int8`: native GEMM precision policy for
-    /// `serve` and `train` (default f32; training keeps master weights
-    /// f32 and quantizes on pack, so checkpoints stay `BBCKPT1`).
+    /// `--precision f32|f16|int8`: native GEMM precision policy
+    /// (default f32).
     pub precision: Precision,
     /// `--assert-simd`: make `kernel-probe` fail (exit nonzero) when the
     /// tiled f32 GEMM does not beat the scalar-chain floor.
@@ -60,17 +421,14 @@ pub struct Flags {
 
 impl Flags {
     /// The serving-pool shape selected on the command line.
-    pub fn serving(&self) -> crate::config::ServingConfig {
-        crate::config::ServingConfig {
-            backends: self.backends.clone(),
-            max_inflight: self.max_inflight,
-        }
+    pub fn serving(&self) -> ServingConfig {
+        ServingConfig { backends: self.backends.clone(), max_inflight: self.max_inflight }
     }
 }
 
-/// Parse flags out of an argument list.
+/// Parse the legacy shared flag set out of an argument list.
 pub fn parse_flags(args: &[String]) -> Result<Flags> {
-    let serving_defaults = crate::config::ServingConfig::default();
+    let serving_defaults = ServingConfig::default();
     let mut f = Flags {
         artifacts: "artifacts".to_string(),
         seed: 0,
@@ -132,57 +490,74 @@ bigbird — BigBird (NeurIPS 2020) reproduction leader
 
 USAGE: bigbird <command> [flags]
 
+Each subcommand accepts only its own flags; a misplaced flag produces an
+error naming the subcommand it belongs to.
+
 COMMANDS:
   smoke                  compile + run every artifact once
   list                   list artifacts in the manifest
-  serve                  run the long-document serving demo workload
+  serve                  run the long-document serving demo workload;
+                         with --listen, serve it over the TCP wire protocol
   train                  run the MLM training driver
   graph                  attention-graph theory report (Sec. 2)
-  bench-check            gate BENCH_attention.json / BENCH_train.json against
-                         the committed perf baselines (bench_baselines.json);
-                         --update-baselines refreshes them, --summary <path>
-                         appends a markdown report ($GITHUB_STEP_SUMMARY)
+  bench-check            gate bench JSONs against the committed perf baselines
   kernel-probe           print the per-precision GEMM tile-tuner table and the
-                         SIMD vectorization probe; with --assert-simd, exit
-                         nonzero (with remediation steps) when the tiled f32
-                         kernel fails the vectorization floor — run on the
-                         release binary in CI
+                         SIMD vectorization probe
   experiment <id>        regenerate a paper table/figure; <id> one of:
                          table1 | mlm_bpc | qa | classification | summarization |
                          genomics | fig_ctxlen | scaling | task1 | patterns |
                          turing | ablation_global | hotpath | hlo_report | all
 
-FLAGS:
-  --artifacts <dir>      artifact directory (default: artifacts)
-  --config k=v,...       model config overrides
-  --seed <u64>           RNG seed (default 0)
-  --steps <n>            training steps (default 200)
+SERVE FLAGS:
+  --artifacts <dir>      artifact directory (default: artifacts; not needed
+                         with --backends native:N)
+  --seed <u64>           workload RNG seed (default 0)
   --backends <spec>      engine pool backends, kind[:count] comma-list
                          (e.g. cpu:2,gpu:1 or native:2; default cpu:1;
-                         gpu/tpu fall back to cpu when no PJRT plugin is
-                         present; native runs the in-process block-sparse
-                         kernels — real compute, no artifacts needed)
+                         native runs the in-process block-sparse kernels —
+                         real compute, no artifacts needed)
   --engine-workers <n>   shorthand for --backends cpu:<n>
   --max-inflight <n>     per-bucket inflight batch cap (default 2)
-  --checkpoint <path>    native BBCKPT1 checkpoint: train --backends native
-                         writes it (default runs/native_mlm.ckpt), serve
-                         --backends native:N loads it and serves the trained
-                         weights
-  --attention-json <p>   bench-check: attention bench JSON
-                         (default BENCH_attention.json)
-  --train-json <p>       bench-check: train-step bench JSON
-                         (default BENCH_train.json)
-  --baselines <p>        bench-check: committed perf baselines
-                         (default bench_baselines.json)
-  --update-baselines     bench-check: rewrite the baselines from the
-                         current bench JSONs instead of gating
-  --summary <p>          bench-check: append the markdown perf report here
+  --checkpoint <path>    native BBCKPT1 checkpoint to serve
   --precision <p>        native GEMM precision policy: f32 | f16 | int8
-                         (default f32; serve quantizes the packed weights,
-                         train keeps f32 master weights and quantizes on
-                         pack — checkpoints stay BBCKPT1 either way)
-  --assert-simd          kernel-probe: fail loudly when the tiled f32 GEMM
-                         does not clear the scalar-chain vectorization floor
+  --listen <addr>        bind the length-prefixed TCP ingress (e.g.
+                         127.0.0.1:9090; port 0 picks an ephemeral port) and
+                         drive the demo over real sockets; clients speak the
+                         versioned wire protocol (see rust/README.md)
+  --latency-budget-ms <ms>
+                         admission control: shed Normal/Low-priority requests
+                         as `overloaded` while the queue-wait EWMA exceeds
+                         this budget (default: no budget shedding)
+  --max-queue <n>        admission control: hard cap on admitted-but-
+                         unanswered requests; past it requests shed
+                         `queue_full` (default 1024)
+
+TRAIN FLAGS:
+  --artifacts <dir>      artifact directory (PJRT path)
+  --config k=v,...       model config overrides (native path)
+  --seed <u64>           RNG seed (default 0)
+  --steps <n>            training steps (default 200)
+  --backends <spec>      `native` selects the artifact-free trainer
+  --checkpoint <path>    where the native trainer writes BBCKPT1
+                         (default runs/native_mlm.ckpt)
+  --precision <p>        forward-GEMM precision: f32 | f16 | int8
+  [model]                positional model key (PJRT path)
+
+BENCH-CHECK FLAGS:
+  --attention-json <p>   attention bench JSON (default BENCH_attention.json)
+  --train-json <p>       train-step bench JSON (default BENCH_train.json)
+  --baselines <p>        committed perf baselines (default bench_baselines.json)
+  --update-baselines     rewrite the baselines instead of gating
+  --summary <p>          append the markdown perf report here
+                         ($GITHUB_STEP_SUMMARY in CI)
+
+KERNEL-PROBE FLAGS:
+  --assert-simd          fail loudly when the tiled f32 GEMM does not clear
+                         the scalar-chain vectorization floor
+
+EXPERIMENT/SMOKE/GRAPH/LIST FLAGS (shared legacy set):
+  --artifacts, --config, --seed, --steps, --backends, --engine-workers,
+  --max-inflight, --checkpoint, --precision
 ";
 
 /// CLI entrypoint used by `main.rs`.
@@ -192,10 +567,24 @@ pub fn run(args: &[String]) -> Result<()> {
         return Ok(());
     }
     let cmd = args[0].as_str();
-    let flags = parse_flags(&args[1..])?;
+    let rest = &args[1..];
     match cmd {
-        "smoke" => crate::experiments::smoke::run(&flags),
+        "serve" => crate::experiments::serve_demo::run(&parse_serve(rest)?),
+        "train" => crate::experiments::train_demo::run(&parse_train(rest)?),
+        "bench-check" => {
+            let a = parse_bench_check(rest)?;
+            crate::bench_check::run(&crate::bench_check::BenchCheck {
+                attention: &a.attention_json,
+                train: &a.train_json,
+                baselines: &a.baselines,
+                update: a.update_baselines,
+                summary: a.summary.as_deref(),
+            })
+        }
+        "kernel-probe" => run_kernel_probe(&parse_kernel_probe(rest)?),
+        "smoke" => crate::experiments::smoke::run(&parse_flags(rest)?),
         "list" => {
+            let flags = parse_flags(rest)?;
             let manifest = crate::runtime::Manifest::load(&flags.artifacts)?;
             for e in manifest.entries() {
                 println!(
@@ -209,18 +598,9 @@ pub fn run(args: &[String]) -> Result<()> {
             }
             Ok(())
         }
-        "serve" => crate::experiments::serve_demo::run(&flags),
-        "train" => crate::experiments::train_demo::run(&flags),
-        "graph" => crate::experiments::graph_report::run(&flags),
-        "kernel-probe" => run_kernel_probe(&flags),
-        "bench-check" => crate::bench_check::run(&crate::bench_check::BenchCheck {
-            attention: &flags.attention_json,
-            train: &flags.train_json,
-            baselines: &flags.baselines,
-            update: flags.update_baselines,
-            summary: flags.summary.as_deref(),
-        }),
+        "graph" => crate::experiments::graph_report::run(&parse_flags(rest)?),
         "experiment" => {
+            let flags = parse_flags(rest)?;
             let id = flags
                 .positional
                 .first()
@@ -240,7 +620,7 @@ pub fn run(args: &[String]) -> Result<()> {
 /// the SIMD vectorization probe. With `--assert-simd` it becomes the CI
 /// vectorization gate: exit nonzero (remediation steps on stderr via the
 /// error) when the tiled f32 kernel fails [`crate::kernel::MIN_SIMD_RATIO`].
-fn run_kernel_probe(flags: &Flags) -> Result<()> {
+fn run_kernel_probe(args: &KernelProbeArgs) -> Result<()> {
     let tiles = crate::kernel::tuned_tiles();
     println!("GEMM tile auto-tuner (winning MRxNR shape per precision):");
     for (name, choice) in [("f32", &tiles.f32), ("f16", &tiles.f16), ("int8", &tiles.int8)] {
@@ -253,7 +633,7 @@ fn run_kernel_probe(flags: &Flags) -> Result<()> {
         println!("  tiled f16    {:8.2} GFLOP/s", p.f16_gflops);
         println!("  tiled int8   {:8.2} GFLOP/s", p.int8_gflops);
     };
-    if flags.assert_simd {
+    if args.assert_simd {
         let probe = crate::kernel::assert_simd_floor().map_err(anyhow::Error::msg)?;
         report(&probe);
         println!(
@@ -280,12 +660,119 @@ mod tests {
         v.iter().map(|x| x.to_string()).collect()
     }
 
+    // -- per-subcommand parsers -----------------------------------------
+
+    #[test]
+    fn serve_defaults_match_configs() {
+        let a = parse_serve(&s(&[])).unwrap();
+        assert_eq!(a.serving(), ServingConfig::default());
+        assert_eq!(a.admission(), AdmissionConfig::default());
+        assert_eq!(a.listen, None);
+    }
+
+    #[test]
+    fn serve_parses_ingress_and_admission_flags() {
+        let a = parse_serve(&s(&[
+            "--backends",
+            "native:2",
+            "--listen",
+            "127.0.0.1:0",
+            "--latency-budget-ms",
+            "25",
+            "--max-queue",
+            "64",
+        ]))
+        .unwrap();
+        assert_eq!(a.backends, BackendSpec::native_workers(2));
+        assert_eq!(a.listen.as_deref(), Some("127.0.0.1:0"));
+        let adm = a.admission();
+        assert_eq!(adm.latency_budget_ms, Some(25.0));
+        assert_eq!(adm.max_queue, 64);
+        // untouched knobs keep their defaults
+        assert_eq!(adm.max_client_inflight, AdmissionConfig::default().max_client_inflight);
+        // invalid admission values are rejected at parse time
+        assert!(parse_serve(&s(&["--max-queue", "0"])).is_err());
+        assert!(parse_serve(&s(&["--latency-budget-ms", "-3"])).is_err());
+        assert!(parse_serve(&s(&["--engine-workers", "0"])).is_err());
+        assert!(parse_serve(&s(&["--max-inflight", "0"])).is_err());
+    }
+
+    #[test]
+    fn serve_rejects_foreign_and_unknown_flags() {
+        // --steps belongs to train: the error names both subcommands
+        let e = parse_serve(&s(&["--steps", "50"])).unwrap_err().to_string();
+        assert!(e.contains("`train`"), "missing owner in: {e}");
+        assert!(e.contains("`serve`"), "missing subcommand in: {e}");
+        // --assert-simd belongs to kernel-probe
+        let e = parse_serve(&s(&["--assert-simd"])).unwrap_err().to_string();
+        assert!(e.contains("`kernel-probe`"), "missing owner in: {e}");
+        // a flag nobody owns lists the valid serve set
+        let e = parse_serve(&s(&["--bogus"])).unwrap_err().to_string();
+        assert!(e.contains("unknown flag --bogus"), "bad message: {e}");
+        assert!(e.contains("--listen"), "valid-flag list missing in: {e}");
+        // serve takes no positionals
+        assert!(parse_serve(&s(&["table1"])).is_err());
+    }
+
+    #[test]
+    fn train_parses_own_flags_and_model_positional() {
+        let a = parse_train(&s(&["--steps", "50", "--seed", "7", "my_model"])).unwrap();
+        assert_eq!(a.steps, 50);
+        assert_eq!(a.seed, 7);
+        assert_eq!(a.model.as_deref(), Some("my_model"));
+        let a = parse_train(&s(&["--backends", "native", "--checkpoint", "runs/x.ckpt"])).unwrap();
+        assert_eq!(a.backends[0].kind, crate::runtime::BackendKind::Native);
+        assert_eq!(a.checkpoint.as_deref(), Some("runs/x.ckpt"));
+        assert_eq!(a.model, None);
+        // serve-only flags are named as such
+        let e = parse_train(&s(&["--listen", ":0"])).unwrap_err().to_string();
+        assert!(e.contains("`serve`"), "missing owner in: {e}");
+        let e = parse_train(&s(&["--max-queue", "9"])).unwrap_err().to_string();
+        assert!(e.contains("`serve`"), "missing owner in: {e}");
+        // at most one positional
+        assert!(parse_train(&s(&["a", "b"])).is_err());
+    }
+
+    #[test]
+    fn bench_check_and_kernel_probe_parse() {
+        let a = parse_bench_check(&s(&[])).unwrap();
+        assert_eq!(a, BenchCheckArgs::default());
+        let a = parse_bench_check(&s(&[
+            "--attention-json",
+            "a.json",
+            "--train-json",
+            "t.json",
+            "--baselines",
+            "b.json",
+            "--update-baselines",
+            "--summary",
+            "s.md",
+        ]))
+        .unwrap();
+        assert_eq!(a.attention_json, "a.json");
+        assert_eq!(a.train_json, "t.json");
+        assert_eq!(a.baselines, "b.json");
+        assert!(a.update_baselines);
+        assert_eq!(a.summary.as_deref(), Some("s.md"));
+        assert!(parse_bench_check(&s(&["--summary"])).is_err());
+        let e = parse_bench_check(&s(&["--seed", "1"])).unwrap_err().to_string();
+        assert!(e.contains("`bench-check`"), "missing subcommand in: {e}");
+
+        assert!(!parse_kernel_probe(&s(&[])).unwrap().assert_simd);
+        assert!(parse_kernel_probe(&s(&["--assert-simd"])).unwrap().assert_simd);
+        let e = parse_kernel_probe(&s(&["--summary", "s.md"])).unwrap_err().to_string();
+        assert!(e.contains("`bench-check`"), "missing owner in: {e}");
+        assert!(parse_kernel_probe(&s(&["stray"])).is_err());
+    }
+
+    // -- legacy shared parser -------------------------------------------
+
     #[test]
     fn parse_defaults() {
         let f = parse_flags(&s(&[])).unwrap();
         assert_eq!(f.artifacts, "artifacts");
         assert_eq!(f.steps, 200);
-        assert_eq!(f.serving(), crate::config::ServingConfig::default());
+        assert_eq!(f.serving(), ServingConfig::default());
     }
 
     #[test]
@@ -330,42 +817,6 @@ mod tests {
         assert_eq!(f.backends[0].kind, BackendKind::Native);
         assert_eq!(f.backends[1].kind, BackendKind::Native);
         assert_eq!(f.backends[2].kind, BackendKind::Cpu);
-    }
-
-    #[test]
-    fn parse_checkpoint_flag() {
-        let f = parse_flags(&s(&["--checkpoint", "runs/x.ckpt"])).unwrap();
-        assert_eq!(f.checkpoint.as_deref(), Some("runs/x.ckpt"));
-        assert_eq!(parse_flags(&s(&[])).unwrap().checkpoint, None);
-        assert!(parse_flags(&s(&["--checkpoint"])).is_err());
-    }
-
-    #[test]
-    fn parse_bench_check_flags() {
-        let f = parse_flags(&s(&[])).unwrap();
-        assert_eq!(f.attention_json, "BENCH_attention.json");
-        assert_eq!(f.train_json, "BENCH_train.json");
-        assert_eq!(f.baselines, "bench_baselines.json");
-        assert!(!f.update_baselines);
-        assert_eq!(f.summary, None);
-        let f = parse_flags(&s(&[
-            "--attention-json",
-            "a.json",
-            "--train-json",
-            "t.json",
-            "--baselines",
-            "b.json",
-            "--update-baselines",
-            "--summary",
-            "s.md",
-        ]))
-        .unwrap();
-        assert_eq!(f.attention_json, "a.json");
-        assert_eq!(f.train_json, "t.json");
-        assert_eq!(f.baselines, "b.json");
-        assert!(f.update_baselines);
-        assert_eq!(f.summary.as_deref(), Some("s.md"));
-        assert!(parse_flags(&s(&["--summary"])).is_err());
     }
 
     #[test]

@@ -340,6 +340,64 @@ impl ServingConfig {
     }
 }
 
+/// Admission-control knobs for the serving front end: the policy every
+/// request — wire or in-process — passes through before it may enter
+/// the batcher. Mirrors the `serve --latency-budget-ms` / `--max-queue`
+/// CLI flags; flows into `ServerConfig`. The hard queue bound is what
+/// keeps server memory flat under overload: past it, requests are shed
+/// with a typed `Overloaded`-family response instead of queued.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdmissionConfig {
+    /// Soft latency budget: when the observed request queue-wait EWMA
+    /// exceeds this many milliseconds (and at least `pressure_floor`
+    /// requests are outstanding), `Normal`/`Low`-priority requests are
+    /// shed as `Overloaded`. `None` disables budget shedding — the hard
+    /// queue bound below still applies.
+    pub latency_budget_ms: Option<f64>,
+    /// Hard bound on admitted-but-unanswered requests across all
+    /// clients. Admission past it sheds `QueueFull` regardless of
+    /// priority, so queue memory stays bounded no matter the offered
+    /// load.
+    pub max_queue: usize,
+    /// Per-client bound on admitted-but-unanswered requests: one greedy
+    /// pipelining client is shed `ClientLimit` past it instead of
+    /// crowding every other client out of the shared queue budget.
+    pub max_client_inflight: usize,
+    /// Minimum outstanding requests before budget/deadline shedding may
+    /// fire, so a stale (post-spike) queue-wait EWMA never sheds on an
+    /// otherwise idle server.
+    pub pressure_floor: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            latency_budget_ms: None,
+            max_queue: 1024,
+            max_client_inflight: 128,
+            pressure_floor: 8,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    /// Validate invariants (nonzero bounds, a finite positive budget).
+    pub fn validate(&self) -> Result<()> {
+        if self.max_queue == 0 {
+            bail!("max_queue must be >= 1");
+        }
+        if self.max_client_inflight == 0 {
+            bail!("max_client_inflight must be >= 1");
+        }
+        if let Some(b) = self.latency_budget_ms {
+            if !b.is_finite() || b < 0.0 {
+                bail!("latency budget must be a finite, non-negative ms value (got {b})");
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Parse a `key=value,key=value` override string onto a base config (CLI
 /// `--config` flag).
 pub fn apply_overrides(mut cfg: ModelConfig, overrides: &str) -> Result<ModelConfig> {
@@ -431,6 +489,23 @@ mod tests {
             crate::kernel::config_fingerprint(&ModelConfig::tiny()),
             crate::kernel::config_fingerprint(&f16)
         );
+    }
+
+    #[test]
+    fn admission_config_validates() {
+        AdmissionConfig::default().validate().unwrap();
+        let ok = AdmissionConfig { latency_budget_ms: Some(25.0), ..Default::default() };
+        ok.validate().unwrap();
+        assert!(AdmissionConfig { max_queue: 0, ..Default::default() }.validate().is_err());
+        assert!(
+            AdmissionConfig { max_client_inflight: 0, ..Default::default() }.validate().is_err()
+        );
+        assert!(AdmissionConfig { latency_budget_ms: Some(-1.0), ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(AdmissionConfig { latency_budget_ms: Some(f64::NAN), ..Default::default() }
+            .validate()
+            .is_err());
     }
 
     #[test]

@@ -1,0 +1,277 @@
+//! Admission control: the one gate every request passes on its way into
+//! the batcher, shared by the TCP ingress and the in-process client.
+//!
+//! Three policies, checked in order at submit time:
+//!
+//! 1. **Hard queue bound** (`max_queue`): outstanding
+//!    (admitted-but-unanswered) requests across all clients may never
+//!    exceed it — past the bound new arrivals are shed [`QueueFull`]
+//!    regardless of priority, so queue memory stays flat no matter the
+//!    offered load.
+//! 2. **Per-client inflight cap** (`max_client_inflight`): a greedy
+//!    pipelining client is shed [`ClientLimit`] instead of consuming
+//!    the shared queue budget other clients need (fairness isolation).
+//! 3. **Soft latency budget** (`latency_budget_ms`): once the observed
+//!    request queue-wait EWMA blows the budget — and at least
+//!    `pressure_floor` requests are outstanding, so a stale post-spike
+//!    EWMA cannot shed on an idle server — `Normal`/`Low` priority
+//!    requests are shed [`Overloaded`]. A request whose own deadline is
+//!    already smaller than the EWMA is shed the same way (admitting it
+//!    would only queue a guaranteed miss).
+//!
+//! The router feeds the EWMA with each completed request's observed
+//! queue wait (total latency minus execute time) and releases the
+//! outstanding slots as requests are answered — every answer path,
+//! including batch failures and expiry sheds, releases exactly once.
+//!
+//! [`QueueFull`]: ShedReason::QueueFull
+//! [`ClientLimit`]: ShedReason::ClientLimit
+//! [`Overloaded`]: ShedReason::Overloaded
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+use super::api::{Priority, ShedReason};
+use crate::config::AdmissionConfig;
+
+/// EWMA smoothing factor for the observed queue wait (per completed
+/// request). 0.2 reacts within a handful of batches without flapping on
+/// a single slow outlier.
+const EWMA_ALPHA: f64 = 0.2;
+
+/// Shared admission state. Lock-free: the counters are atomics and the
+/// queue-wait EWMA is an f64 carried in an `AtomicU64`, so the submit
+/// hot path never takes the metrics mutex.
+#[derive(Debug)]
+pub struct AdmissionState {
+    cfg: AdmissionConfig,
+    /// Admitted-but-unanswered requests across all clients.
+    outstanding: AtomicUsize,
+    /// High-water mark of `outstanding` (the bounded-memory witness).
+    peak_outstanding: AtomicUsize,
+    /// Queue-wait EWMA in ms, stored as f64 bits. 0.0 = no signal yet.
+    ewma_bits: AtomicU64,
+    /// Total sheds at the admission door (dispatch-time `Expired` sheds
+    /// are counted by metrics, not here).
+    shed: AtomicUsize,
+}
+
+impl AdmissionState {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        AdmissionState {
+            cfg,
+            outstanding: AtomicUsize::new(0),
+            peak_outstanding: AtomicUsize::new(0),
+            ewma_bits: AtomicU64::new(0.0f64.to_bits()),
+            shed: AtomicUsize::new(0),
+        }
+    }
+
+    /// The configured policy.
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Try to admit one request from a client currently holding
+    /// `client_inflight` slots. On success both the global and the
+    /// client counters are incremented and must be released exactly
+    /// once via [`AdmissionState::release`] when the request is
+    /// answered. On shed, no state is held.
+    pub fn try_admit(
+        &self,
+        priority: Priority,
+        deadline: Option<Duration>,
+        client_inflight: &AtomicUsize,
+    ) -> Result<(), ShedReason> {
+        // hard queue bound: exact under concurrency (CAS increment)
+        let before = match bounded_increment(&self.outstanding, self.cfg.max_queue) {
+            Some(prev) => prev,
+            None => return Err(self.reject(ShedReason::QueueFull)),
+        };
+        // per-client cap, undoing the global slot on shed
+        if bounded_increment(client_inflight, self.cfg.max_client_inflight).is_none() {
+            self.outstanding.fetch_sub(1, Ordering::AcqRel);
+            return Err(self.reject(ShedReason::ClientLimit));
+        }
+        // soft budget/deadline shed, gated on real queue pressure
+        if before >= self.cfg.pressure_floor {
+            let ewma = self.ewma_wait_ms();
+            let over_budget = matches!(self.cfg.latency_budget_ms, Some(b) if ewma > b)
+                && priority != Priority::High;
+            let misses_deadline =
+                matches!(deadline, Some(d) if ewma > d.as_secs_f64() * 1e3);
+            if over_budget || misses_deadline {
+                client_inflight.fetch_sub(1, Ordering::AcqRel);
+                self.outstanding.fetch_sub(1, Ordering::AcqRel);
+                return Err(self.reject(ShedReason::Overloaded));
+            }
+        }
+        self.peak_outstanding.fetch_max(before + 1, Ordering::AcqRel);
+        Ok(())
+    }
+
+    /// Release the slots held by one admitted request (call exactly
+    /// once per answered request, on every answer path).
+    pub fn release(&self, client_inflight: &AtomicUsize) {
+        self.outstanding.fetch_sub(1, Ordering::AcqRel);
+        client_inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Fold one completed request's observed queue wait into the EWMA.
+    pub fn observe_wait(&self, ms: f64) {
+        if !ms.is_finite() {
+            return;
+        }
+        let ms = ms.max(0.0);
+        let mut cur = self.ewma_bits.load(Ordering::Acquire);
+        loop {
+            let prev = f64::from_bits(cur);
+            // first sample seeds the EWMA directly (0.0 = no signal)
+            let next = if prev == 0.0 { ms } else { (1.0 - EWMA_ALPHA) * prev + EWMA_ALPHA * ms };
+            match self.ewma_bits.compare_exchange_weak(
+                cur,
+                next.to_bits(),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return,
+                Err(observed) => cur = observed,
+            }
+        }
+    }
+
+    /// Current queue-wait EWMA in ms (0.0 before any completion).
+    pub fn ewma_wait_ms(&self) -> f64 {
+        f64::from_bits(self.ewma_bits.load(Ordering::Acquire))
+    }
+
+    /// Admitted-but-unanswered requests right now.
+    pub fn outstanding(&self) -> usize {
+        self.outstanding.load(Ordering::Acquire)
+    }
+
+    /// High-water mark of [`AdmissionState::outstanding`].
+    pub fn peak_outstanding(&self) -> usize {
+        self.peak_outstanding.load(Ordering::Acquire)
+    }
+
+    /// Total admission-door sheds so far.
+    pub fn shed_count(&self) -> usize {
+        self.shed.load(Ordering::Acquire)
+    }
+
+    fn reject(&self, reason: ShedReason) -> ShedReason {
+        self.shed.fetch_add(1, Ordering::AcqRel);
+        reason
+    }
+}
+
+/// Increment `counter` only while it stays below `bound`; returns the
+/// pre-increment value, or `None` (no change) when the bound is hit.
+fn bounded_increment(counter: &AtomicUsize, bound: usize) -> Option<usize> {
+    let mut cur = counter.load(Ordering::Acquire);
+    loop {
+        if cur >= bound {
+            return None;
+        }
+        match counter.compare_exchange_weak(cur, cur + 1, Ordering::AcqRel, Ordering::Acquire) {
+            Ok(prev) => return Some(prev),
+            Err(observed) => cur = observed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AdmissionConfig {
+        AdmissionConfig {
+            latency_budget_ms: Some(10.0),
+            max_queue: 4,
+            max_client_inflight: 2,
+            pressure_floor: 0,
+        }
+    }
+
+    #[test]
+    fn hard_queue_bound_sheds_queue_full() {
+        let st = AdmissionState::new(AdmissionConfig { max_queue: 2, ..cfg() });
+        let a = AtomicUsize::new(0);
+        let b = AtomicUsize::new(0);
+        st.try_admit(Priority::Normal, None, &a).unwrap();
+        st.try_admit(Priority::Normal, None, &b).unwrap();
+        // queue full: even High priority is refused
+        assert_eq!(st.try_admit(Priority::High, None, &a), Err(ShedReason::QueueFull));
+        assert_eq!(st.outstanding(), 2);
+        assert_eq!(st.peak_outstanding(), 2);
+        assert_eq!(st.shed_count(), 1);
+        st.release(&a);
+        st.try_admit(Priority::High, None, &a).unwrap();
+        assert_eq!(st.outstanding(), 2);
+    }
+
+    #[test]
+    fn client_cap_sheds_without_leaking_global_slots() {
+        let st = AdmissionState::new(cfg());
+        let greedy = AtomicUsize::new(0);
+        st.try_admit(Priority::Normal, None, &greedy).unwrap();
+        st.try_admit(Priority::Normal, None, &greedy).unwrap();
+        assert_eq!(st.try_admit(Priority::Normal, None, &greedy), Err(ShedReason::ClientLimit));
+        // the shed must not consume a global slot
+        assert_eq!(st.outstanding(), 2);
+        // other clients still fit
+        let polite = AtomicUsize::new(0);
+        st.try_admit(Priority::Normal, None, &polite).unwrap();
+        assert_eq!(st.outstanding(), 3);
+    }
+
+    #[test]
+    fn budget_shed_spares_high_priority_and_idle_servers() {
+        let st = AdmissionState::new(AdmissionConfig { pressure_floor: 1, ..cfg() });
+        let c = AtomicUsize::new(0);
+        // blow the budget (EWMA seeds at 50ms > 10ms budget)
+        st.observe_wait(50.0);
+        // no pressure (0 outstanding < floor 1): still admitted
+        st.try_admit(Priority::Normal, None, &c).unwrap();
+        // pressured now: Normal is shed, High passes
+        assert_eq!(st.try_admit(Priority::Normal, None, &c), Err(ShedReason::Overloaded));
+        assert_eq!(st.try_admit(Priority::High, None, &c), Ok(()));
+        assert_eq!(st.outstanding(), 2);
+        // a deadline below the EWMA sheds even High priority (fresh
+        // client cell, so the per-client cap stays out of the way —
+        // `c` is already at its cap of 2 and would shed ClientLimit)
+        let c2 = AtomicUsize::new(0);
+        let d = Some(Duration::from_millis(5));
+        assert_eq!(st.try_admit(Priority::High, d, &c2), Err(ShedReason::Overloaded));
+        // a deadline the EWMA can meet is admitted
+        assert_eq!(
+            st.try_admit(Priority::High, Some(Duration::from_secs(1)), &c2),
+            Ok(())
+        );
+    }
+
+    #[test]
+    fn ewma_converges_and_release_restores_capacity() {
+        let st = AdmissionState::new(cfg());
+        assert_eq!(st.ewma_wait_ms(), 0.0);
+        st.observe_wait(100.0);
+        assert!((st.ewma_wait_ms() - 100.0).abs() < 1e-12, "first sample seeds");
+        for _ in 0..60 {
+            st.observe_wait(1.0);
+        }
+        assert!(st.ewma_wait_ms() < 2.0, "EWMA must converge toward recent waits");
+        st.observe_wait(f64::NAN); // ignored, never poisons the gauge
+        assert!(st.ewma_wait_ms().is_finite());
+
+        let c = AtomicUsize::new(0);
+        for _ in 0..4 {
+            // budget is blown? no: ewma ~1ms < 10ms budget, so all admit
+            // up to max_queue with the client cap raised via fresh cells
+            let cell = AtomicUsize::new(0);
+            st.try_admit(Priority::Normal, None, &cell).unwrap();
+        }
+        assert_eq!(st.try_admit(Priority::Normal, None, &c), Err(ShedReason::QueueFull));
+        assert_eq!(st.peak_outstanding(), 4);
+    }
+}

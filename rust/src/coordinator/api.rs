@@ -1,0 +1,267 @@
+//! The typed request/response surface of the serving coordinator.
+//!
+//! Exactly one request shape enters the server — [`Request`] — and
+//! exactly one answer shape leaves it — [`Response`] with a typed
+//! [`Outcome`] — whether the caller is an in-process client
+//! (`serve_demo`, tests, benches) or a TCP connection through
+//! [`crate::coordinator::Ingress`]. The wire codec
+//! ([`crate::coordinator::wire`]) is a byte-level encoding of these
+//! types, not a parallel API: both paths share the same admission and
+//! accounting code in `Server`.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+/// Scheduling class of a request. Priority affects **admission** under
+/// pressure, not execution order: `High` requests bypass the soft
+/// latency-budget shed (only the hard queue bound can reject them),
+/// `Normal` and `Low` are shed once the queue-wait EWMA blows the
+/// budget. Within the batcher everything stays FIFO per bucket.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// Shed first under pressure (background / best-effort traffic).
+    Low,
+    /// The default class.
+    #[default]
+    Normal,
+    /// Latency-critical: only hard bounds (queue full, per-client cap)
+    /// may shed it.
+    High,
+}
+
+impl Priority {
+    /// Stable wire code (also the CLI string order).
+    pub fn code(self) -> u8 {
+        match self {
+            Priority::Low => 0,
+            Priority::Normal => 1,
+            Priority::High => 2,
+        }
+    }
+
+    /// Parse a wire code.
+    pub fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => Priority::Low,
+            1 => Priority::Normal,
+            2 => Priority::High,
+            other => bail!("unknown priority code {other}"),
+        })
+    }
+
+    /// Human/CLI string.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+}
+
+/// A fill-mask inference request: the one submission type both the wire
+/// path and the in-process path use.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    /// Caller's correlation id, echoed verbatim in [`Response::id`].
+    /// `0` means "let the server assign one" (the server's internal
+    /// sequence number, which is FIFO within a submission stream).
+    pub id: u64,
+    /// Token ids; `<mask>` positions produce predictions.
+    pub tokens: Vec<i32>,
+    /// Optional end-to-end deadline, relative to submission. A request
+    /// the admission EWMA already predicts will miss it is shed
+    /// `Overloaded` at the door; one that expires while queued is shed
+    /// `Expired` at dispatch instead of burning a forward pass.
+    pub deadline: Option<Duration>,
+    /// Admission class (see [`Priority`]).
+    pub priority: Priority,
+}
+
+impl Request {
+    /// A default-class request with server-assigned id and no deadline.
+    pub fn new(tokens: Vec<i32>) -> Self {
+        Request { id: 0, tokens, deadline: None, priority: Priority::Normal }
+    }
+
+    /// Set the caller correlation id.
+    pub fn with_id(mut self, id: u64) -> Self {
+        self.id = id;
+        self
+    }
+
+    /// Set a relative deadline.
+    pub fn with_deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// Set the admission class.
+    pub fn with_priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+}
+
+/// Why admission control refused (or abandoned) a request. Every
+/// variant is a *normal, typed* answer — the overloaded server's
+/// graceful-degradation contract — never a transport error.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ShedReason {
+    /// The hard `max_queue` bound on outstanding requests was hit.
+    QueueFull,
+    /// The queue-wait EWMA exceeds the latency budget (or the request's
+    /// own deadline) — admitting it would just queue a miss.
+    Overloaded,
+    /// This client already has `max_client_inflight` requests
+    /// outstanding.
+    ClientLimit,
+    /// Admitted, but its deadline passed before dispatch.
+    Expired,
+}
+
+impl ShedReason {
+    /// Stable wire code.
+    pub fn code(self) -> u8 {
+        match self {
+            ShedReason::QueueFull => 0,
+            ShedReason::Overloaded => 1,
+            ShedReason::ClientLimit => 2,
+            ShedReason::Expired => 3,
+        }
+    }
+
+    /// Parse a wire code.
+    pub fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => ShedReason::QueueFull,
+            1 => ShedReason::Overloaded,
+            2 => ShedReason::ClientLimit,
+            3 => ShedReason::Expired,
+            other => bail!("unknown shed-reason code {other}"),
+        })
+    }
+
+    /// Metrics / JSON label.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::Overloaded => "overloaded",
+            ShedReason::ClientLimit => "client_limit",
+            ShedReason::Expired => "expired",
+        }
+    }
+
+    /// All reasons, in wire-code order (for metrics tables).
+    pub fn all() -> [ShedReason; 4] {
+        [ShedReason::QueueFull, ShedReason::Overloaded, ShedReason::ClientLimit, ShedReason::Expired]
+    }
+}
+
+/// How a request ended.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Outcome {
+    /// A forward pass ran and produced predictions.
+    Completed {
+        /// (position, predicted token id) at each `<mask>` position.
+        predictions: Vec<(usize, i32)>,
+        /// True if the request was truncated to the largest bucket.
+        truncated: bool,
+    },
+    /// Admission control refused or abandoned the request (typed
+    /// overload answer, not an error).
+    Shed { reason: ShedReason },
+    /// The request was admitted but execution failed (worker error,
+    /// malformed batch result). The message is operator-facing.
+    Error { message: String },
+}
+
+/// A completed answer to one [`Request`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    /// Echo of [`Request::id`] (or the server-assigned id when 0).
+    pub id: u64,
+    pub outcome: Outcome,
+    /// Submission-to-answer latency. For sheds this is the admission
+    /// decision time (effectively zero at the door, queue-age for
+    /// `Expired`).
+    pub latency_ms: f64,
+}
+
+impl Response {
+    /// Predictions of a completed outcome (empty for shed/error).
+    pub fn predictions(&self) -> &[(usize, i32)] {
+        match &self.outcome {
+            Outcome::Completed { predictions, .. } => predictions,
+            _ => &[],
+        }
+    }
+
+    /// True if completed after truncation to the largest bucket.
+    pub fn truncated(&self) -> bool {
+        matches!(self.outcome, Outcome::Completed { truncated: true, .. })
+    }
+
+    /// True for any completed outcome.
+    pub fn is_completed(&self) -> bool {
+        matches!(self.outcome, Outcome::Completed { .. })
+    }
+
+    /// The shed reason, if this request was shed.
+    pub fn shed_reason(&self) -> Option<ShedReason> {
+        match self.outcome {
+            Outcome::Shed { reason } => Some(reason),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_and_shed_reason_codes_round_trip() {
+        for p in [Priority::Low, Priority::Normal, Priority::High] {
+            assert_eq!(Priority::from_code(p.code()).unwrap(), p);
+        }
+        assert!(Priority::from_code(9).is_err());
+        for r in ShedReason::all() {
+            assert_eq!(ShedReason::from_code(r.code()).unwrap(), r);
+        }
+        assert!(ShedReason::from_code(9).is_err());
+        assert_eq!(Priority::default(), Priority::Normal);
+    }
+
+    #[test]
+    fn request_builder_and_response_accessors() {
+        let r = Request::new(vec![1, 2, 3])
+            .with_id(7)
+            .with_deadline(Duration::from_millis(50))
+            .with_priority(Priority::High);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.deadline, Some(Duration::from_millis(50)));
+        assert_eq!(r.priority, Priority::High);
+
+        let done = Response {
+            id: 7,
+            outcome: Outcome::Completed { predictions: vec![(3, 11)], truncated: true },
+            latency_ms: 1.0,
+        };
+        assert!(done.is_completed());
+        assert!(done.truncated());
+        assert_eq!(done.predictions(), &[(3, 11)]);
+        assert_eq!(done.shed_reason(), None);
+
+        let shed = Response {
+            id: 8,
+            outcome: Outcome::Shed { reason: ShedReason::QueueFull },
+            latency_ms: 0.0,
+        };
+        assert!(!shed.is_completed());
+        assert!(!shed.truncated());
+        assert!(shed.predictions().is_empty());
+        assert_eq!(shed.shed_reason(), Some(ShedReason::QueueFull));
+    }
+}

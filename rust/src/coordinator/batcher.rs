@@ -54,6 +54,10 @@ pub struct PendingRequest {
     pub id: u64,
     pub tokens: Vec<i32>,
     pub enqueued: Instant,
+    /// Absolute expiry: the router sheds the request `Expired` instead
+    /// of dispatching it once this instant has passed (the batcher
+    /// itself stays pure FIFO and never inspects it).
+    pub deadline: Option<Instant>,
 }
 
 /// A formed batch ready for the engine.
@@ -175,7 +179,7 @@ mod tests {
     }
 
     fn req(id: u64, len: usize, t: Instant) -> PendingRequest {
-        PendingRequest { id, tokens: vec![7; len], enqueued: t }
+        PendingRequest { id, tokens: vec![7; len], enqueued: t, deadline: None }
     }
 
     #[test]
@@ -268,7 +272,7 @@ mod tests {
                 let largest = b.buckets().last().expect("nonempty").seq_len;
                 let t = Instant::now();
                 for &(id, len) in reqs {
-                    b.push(PendingRequest { id, tokens: vec![1; len], enqueued: t });
+                    b.push(PendingRequest { id, tokens: vec![1; len], enqueued: t, deadline: None });
                 }
                 let mut seen = std::collections::HashSet::new();
                 while let Some(fb) = b.poll(t + Duration::from_millis(1)) {

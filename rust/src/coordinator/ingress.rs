@@ -1,0 +1,237 @@
+//! TCP ingress: the network front door of the serving coordinator.
+//!
+//! A nonblocking acceptor thread admits connections; each connection
+//! gets a **reader** thread (decodes frames, submits through its own
+//! [`Client`] identity so per-client admission caps and metrics rows
+//! are per-connection) and a **writer** thread (pumps every
+//! [`Response`] for the connection — completed, shed, or error — back
+//! as frames). Responses of one connection funnel through one mpsc
+//! channel, and every socket write happens under a per-connection
+//! mutex, so frames never interleave even though the reader answers
+//! metrics scrapes inline while the writer streams inference answers.
+//!
+//! There is **no admission logic here**: the reader calls
+//! [`Client::submit_with`], the same synchronous gate the in-process
+//! path uses, so a shed is answered on the connection's reply channel
+//! before the submit call even returns. Because all inflight
+//! bookkeeping lives server-side in the router's reply table, a client
+//! that disconnects mid-frame (or never reads its responses) cannot
+//! leak a slot: its outstanding requests still flow through the
+//! router's `finish` path, where the failed socket write is simply
+//! ignored.
+//!
+//! Shutdown is join-everything: `shutdown()` stops the acceptor,
+//! `TcpStream::shutdown`s every live connection (unblocking readers),
+//! and joins every thread — no detached threads anywhere.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::server::{Client, Server};
+use super::wire::{
+    self, Frame, WireError, FRAME_INFER_REQUEST, FRAME_INFER_RESPONSE, FRAME_METRICS_REQUEST,
+    FRAME_METRICS_RESPONSE,
+};
+use crate::coordinator::Response;
+
+/// Running TCP ingress handle.
+pub struct Ingress {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_join: Option<JoinHandle<()>>,
+}
+
+impl Ingress {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// accepting connections against `server`.
+    pub fn bind(addr: &str, server: Arc<Server>) -> Result<Ingress> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr().context("resolving bound address")?;
+        listener.set_nonblocking(true).context("setting nonblocking accept")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_join = std::thread::Builder::new()
+            .name("bigbird-ingress".into())
+            .spawn(move || accept_loop(listener, server, stop2))
+            .context("spawning acceptor")?;
+        Ok(Ingress { addr: local, stop, accept_join: Some(accept_join) })
+    }
+
+    /// The bound address (resolves the ephemeral port of `:0` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, close every live connection, and join all
+    /// connection threads.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Ingress {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// One live connection as the acceptor tracks it: the thread to join
+/// and a stream clone to shut down (which unblocks the reader).
+struct Conn {
+    join: JoinHandle<()>,
+    stream: TcpStream,
+}
+
+fn accept_loop(listener: TcpListener, server: Arc<Server>, stop: Arc<AtomicBool>) {
+    let mut conns: Vec<Conn> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let srv = server.clone();
+                match spawn_connection(stream, peer, srv) {
+                    Ok(conn) => conns.push(conn),
+                    Err(e) => eprintln!("[ingress] connection setup failed: {e:#}"),
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // reap connections that already hung up, then idle
+                conns.retain(|c| !c.join.is_finished());
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => {
+                eprintln!("[ingress] accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+    // unblock every reader, then join reader+writer pairs
+    for c in &conns {
+        let _ = c.stream.shutdown(std::net::Shutdown::Both);
+    }
+    for c in conns {
+        let _ = c.join.join();
+    }
+}
+
+fn spawn_connection(stream: TcpStream, peer: SocketAddr, server: Arc<Server>) -> Result<Conn> {
+    stream.set_nodelay(true).ok();
+    let shutdown_handle = stream.try_clone().context("cloning stream")?;
+    let write_half = Arc::new(Mutex::new(stream.try_clone().context("cloning stream")?));
+    let client = server.client(&peer.to_string());
+    let join = std::thread::Builder::new()
+        .name(format!("bigbird-conn-{peer}"))
+        .spawn(move || connection_loop(stream, client, server, write_half))
+        .with_context(|| format!("spawning connection thread for {peer}"))?;
+    Ok(Conn { join, stream: shutdown_handle })
+}
+
+/// Reader side of one connection; owns the writer thread and joins it
+/// before exiting.
+fn connection_loop(
+    stream: TcpStream,
+    client: Client,
+    server: Arc<Server>,
+    write_half: Arc<Mutex<TcpStream>>,
+) {
+    let (reply_tx, reply_rx) = channel::<Response>();
+    let writer_stream = write_half.clone();
+    let writer = std::thread::Builder::new()
+        .name("bigbird-conn-writer".into())
+        .spawn(move || writer_loop(reply_rx, writer_stream))
+        .expect("spawning connection writer");
+    let mut reader = BufReader::new(stream);
+    loop {
+        let frame = match wire::read_frame(&mut reader) {
+            Ok(f) => f,
+            Err(WireError::Closed) => break,
+            Err(e) => {
+                // malformed input or a mid-frame disconnect: drop the
+                // connection, never the process. Requests already
+                // admitted keep their reply senders in the router and
+                // are released through the normal finish path.
+                if !matches!(&e, WireError::Io(ioe)
+                    if ioe.kind() == std::io::ErrorKind::ConnectionReset)
+                {
+                    eprintln!("[ingress] dropping {}: {e}", client.label());
+                }
+                break;
+            }
+        };
+        if !handle_frame(frame, &client, &server, &reply_tx, &write_half) {
+            break;
+        }
+    }
+    // writer drains every remaining response (shed answers already
+    // queued + router answers for admitted requests), then exits when
+    // the last reply sender drops
+    drop(reply_tx);
+    let _ = writer.join();
+}
+
+/// Dispatch one decoded frame; returns false to drop the connection.
+fn handle_frame(
+    frame: Frame,
+    client: &Client,
+    server: &Arc<Server>,
+    reply_tx: &std::sync::mpsc::Sender<Response>,
+    write_half: &Arc<Mutex<TcpStream>>,
+) -> bool {
+    match frame.ty {
+        FRAME_INFER_REQUEST => {
+            let req = match wire::decode_request(&frame.payload) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("[ingress] dropping {}: {e}", client.label());
+                    return false;
+                }
+            };
+            // the one shared admission gate; sheds are answered on
+            // reply_tx before this returns
+            if client.submit_with(req, reply_tx.clone()).is_err() {
+                // server stopped: nothing more to serve
+                return false;
+            }
+            true
+        }
+        FRAME_METRICS_REQUEST => {
+            let json = server.metrics_json();
+            let mut w = write_half.lock().unwrap();
+            wire::write_frame(&mut *w, FRAME_METRICS_RESPONSE, json.as_bytes()).is_ok()
+        }
+        other => {
+            eprintln!("[ingress] dropping {}: unknown frame type {other}", client.label());
+            false
+        }
+    }
+}
+
+/// Writer pump: one frame per response, each written under the
+/// connection's write lock. Exits when every reply sender (the reader's
+/// plus one per router-held admitted request) has dropped.
+fn writer_loop(rx: Receiver<Response>, write_half: Arc<Mutex<TcpStream>>) {
+    while let Ok(resp) = rx.recv() {
+        let payload = wire::encode_response(&resp);
+        let mut w = write_half.lock().unwrap();
+        if wire::write_frame(&mut *w, FRAME_INFER_RESPONSE, &payload).is_err() {
+            // peer gone: keep draining so router sends don't pile up in
+            // the channel, but stop touching the socket
+            drop(w);
+            while rx.recv().is_ok() {}
+            return;
+        }
+    }
+}

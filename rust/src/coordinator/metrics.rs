@@ -1,32 +1,55 @@
-//! Serving metrics: request counts, latency distribution, batch fill,
-//! per-bucket padding waste (real vs padded tokens), and — for the
-//! pipelined engine pool — the queue-wait vs execute-wait split,
-//! per-worker and per-backend utilization, per-(bucket, backend)
+//! Serving metrics: request counts, streaming latency percentiles,
+//! batch fill, per-bucket padding waste (real vs padded tokens), and —
+//! for the pipelined engine pool — the queue-wait vs execute-wait
+//! split, per-worker and per-backend utilization, per-(bucket, backend)
 //! exec-time EWMAs, bucket migration counts, and inflight-depth
-//! tracking.
+//! tracking. The admission-control era adds shed counters (total and
+//! per [`ShedReason`]), per-client accounting, and the queue-wait EWMA
+//! / peak-outstanding gauges.
+//!
+//! Latency distributions are kept in bounded [`Reservoir`] samplers,
+//! not growing vectors: a server that runs for days under load must
+//! have flat metrics memory, same as its request queues. The snapshot
+//! is serializable ([`MetricsSnapshot::to_json`]) and is exactly what
+//! the wire `metrics` request returns, so operators scrape the same
+//! numbers `serve_demo` prints.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
+use std::time::Instant;
 
-use crate::util::stats;
+use super::api::ShedReason;
+use crate::util::stats::Reservoir;
 
-/// Shared metrics sink (cheap Mutex; the hot path appends one f64).
+/// Retained latency samples per distribution. 4096 f64s ≈ 32 KiB per
+/// reservoir; percentile error at this size is well under the run-to-run
+/// noise of a serving benchmark.
+const RESERVOIR_CAP: usize = 4096;
+
+/// Shared metrics sink (cheap Mutex; the hot path pushes one f64).
 #[derive(Debug, Default)]
 pub struct ServingMetrics {
     inner: Mutex<Inner>,
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 struct Inner {
-    latencies_ms: Vec<f64>,
+    started: Instant,
+    latencies: Reservoir,
+    admitted: usize,
+    shed: [usize; 4], // indexed by ShedReason::code()
+    clients: BTreeMap<String, ClientCounters>,
+    // admission gauges, pushed by the server before each snapshot
+    queue_ewma_ms: f64,
+    peak_outstanding: usize,
     batches: usize,
     batched_requests: usize,
     batch_capacity: usize,
     truncated: usize,
     errors: usize,
     // pipeline split (one sample per completed batch job)
-    queue_wait_ms: Vec<f64>,
-    exec_ms: Vec<f64>,
+    queue_wait: Reservoir,
+    exec: Reservoir,
     // per-worker accounting, indexed by worker id; pre-sized to the
     // pool via set_workers so idle workers still appear in reports
     workers: usize,
@@ -53,10 +76,82 @@ struct Inner {
     inflight_peak: usize,
 }
 
+impl Default for Inner {
+    fn default() -> Self {
+        Inner {
+            started: Instant::now(),
+            latencies: Reservoir::new(RESERVOIR_CAP, 0x6c61_7465),
+            admitted: 0,
+            shed: [0; 4],
+            clients: BTreeMap::new(),
+            queue_ewma_ms: 0.0,
+            peak_outstanding: 0,
+            batches: 0,
+            batched_requests: 0,
+            batch_capacity: 0,
+            truncated: 0,
+            errors: 0,
+            queue_wait: Reservoir::new(RESERVOIR_CAP, 0x7175_6575),
+            exec: Reservoir::new(RESERVOIR_CAP, 0x6578_6563),
+            workers: 0,
+            worker_jobs: Vec::new(),
+            worker_busy_ms: Vec::new(),
+            worker_backend: Vec::new(),
+            exec_ewma_ms: Vec::new(),
+            migrations: 0,
+            padding: BTreeMap::new(),
+            dispatches: 0,
+            inflight_sum: 0,
+            inflight_peak: 0,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct ClientCounters {
+    admitted: usize,
+    completed: usize,
+    shed: usize,
+    errors: usize,
+}
+
+/// Per-client accounting row in a snapshot.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ClientStats {
+    /// Client label (peer address for wire clients, `local` in-process).
+    pub client: String,
+    /// Requests that passed admission.
+    pub admitted: usize,
+    /// Requests answered with predictions.
+    pub completed: usize,
+    /// Requests answered with a typed shed.
+    pub shed: usize,
+    /// Requests answered with an execution error.
+    pub errors: usize,
+}
+
 /// Point-in-time copy for reporting.
 #[derive(Clone, Debug, Default)]
 pub struct MetricsSnapshot {
+    /// Completed requests (the population of the latency percentiles).
     pub requests: usize,
+    /// Requests that passed admission (completed + still inflight +
+    /// errored + expired-after-admission).
+    pub admitted: usize,
+    /// Requests shed with a typed reason (door sheds + dispatch expiry).
+    pub shed: usize,
+    /// Shed counts per reason label, in wire-code order (zeros kept).
+    pub shed_by_reason: Vec<(String, usize)>,
+    /// Per-client accounting, sorted by client label.
+    pub clients: Vec<ClientStats>,
+    /// The admission controller's queue-wait EWMA gauge (ms).
+    pub queue_ewma_ms: f64,
+    /// High-water mark of admitted-but-unanswered requests — the
+    /// bounded-queue witness (≤ configured `max_queue` by construction).
+    pub peak_outstanding: usize,
+    /// Seconds since the metrics window started (construction or the
+    /// last [`ServingMetrics::reset`]).
+    pub uptime_s: f64,
     pub batches: usize,
     pub errors: usize,
     pub truncated: usize,
@@ -125,11 +220,204 @@ impl MetricsSnapshot {
             })
             .collect()
     }
+
+    /// Serialize as a single JSON object — the payload of the wire
+    /// `metrics` request, and what `serve_demo` prints. Hand-rolled like
+    /// [`crate::util::report::BenchReport`] (the crate carries no JSON
+    /// dependency); non-finite floats become `null`.
+    pub fn to_json(&self) -> String {
+        let mut o = String::with_capacity(1024);
+        o.push('{');
+        o.push_str("\"schema\":1");
+        push_num(&mut o, "uptime_s", self.uptime_s);
+        push_int(&mut o, "requests", self.requests);
+        push_int(&mut o, "admitted", self.admitted);
+        push_int(&mut o, "shed", self.shed);
+        push_int(&mut o, "errors", self.errors);
+        push_int(&mut o, "truncated", self.truncated);
+        push_int(&mut o, "batches", self.batches);
+        push_num(&mut o, "fill_ratio", self.fill_ratio);
+        push_num(&mut o, "p50_ms", self.p50_ms);
+        push_num(&mut o, "p95_ms", self.p95_ms);
+        push_num(&mut o, "p99_ms", self.p99_ms);
+        push_num(&mut o, "mean_ms", self.mean_ms);
+        push_num(&mut o, "mean_queue_wait_ms", self.mean_queue_wait_ms);
+        push_num(&mut o, "mean_exec_ms", self.mean_exec_ms);
+        push_num(&mut o, "queue_ewma_ms", self.queue_ewma_ms);
+        push_int(&mut o, "peak_outstanding", self.peak_outstanding);
+        push_num(&mut o, "mean_inflight", self.mean_inflight);
+        push_int(&mut o, "peak_inflight", self.peak_inflight);
+        push_int(&mut o, "migrations", self.migrations);
+        push_num(&mut o, "padding_waste", self.padding_waste);
+        // shed reasons as an object with every label present
+        o.push_str(",\"shed_by_reason\":{");
+        for (k, (label, n)) in self.shed_by_reason.iter().enumerate() {
+            if k > 0 {
+                o.push(',');
+            }
+            o.push_str(&format!("{}:{}", json_str(label), n));
+        }
+        o.push('}');
+        // per-client rows
+        o.push_str(",\"clients\":[");
+        for (k, c) in self.clients.iter().enumerate() {
+            if k > 0 {
+                o.push(',');
+            }
+            o.push_str(&format!(
+                "{{\"client\":{},\"admitted\":{},\"completed\":{},\"shed\":{},\"errors\":{}}}",
+                json_str(&c.client),
+                c.admitted,
+                c.completed,
+                c.shed,
+                c.errors
+            ));
+        }
+        o.push(']');
+        // per-worker rows; utilization over the metrics window
+        o.push_str(",\"workers\":[");
+        let util = self.worker_utilization(self.uptime_s);
+        for w in 0..self.worker_jobs.len() {
+            if w > 0 {
+                o.push(',');
+            }
+            let backend = self.worker_backend.get(w).map(String::as_str).unwrap_or("");
+            o.push_str(&format!(
+                "{{\"worker\":{},\"backend\":{},\"jobs\":{},\"busy_ms\":{},\"utilization\":{}}}",
+                w,
+                json_str(backend),
+                self.worker_jobs[w],
+                json_num(self.worker_busy_ms.get(w).copied().unwrap_or(0.0)),
+                json_num(util.get(w).copied().unwrap_or(0.0)),
+            ));
+        }
+        o.push(']');
+        o.push_str(",\"backend_utilization\":[");
+        for (k, (label, u)) in self.backend_utilization(self.uptime_s).iter().enumerate() {
+            if k > 0 {
+                o.push(',');
+            }
+            o.push_str(&format!("{{\"backend\":{},\"utilization\":{}}}", json_str(label), json_num(*u)));
+        }
+        o.push(']');
+        o.push_str(",\"padding_by_bucket\":[");
+        for (k, &(bucket, real, padded)) in self.padding_by_bucket.iter().enumerate() {
+            if k > 0 {
+                o.push(',');
+            }
+            o.push_str(&format!(
+                "{{\"bucket\":{bucket},\"real_tokens\":{real},\"padded_tokens\":{padded}}}"
+            ));
+        }
+        o.push(']');
+        o.push_str(",\"exec_ewma_ms\":[");
+        for (k, (bucket, backend, ewma)) in self.exec_ewma_ms.iter().enumerate() {
+            if k > 0 {
+                o.push(',');
+            }
+            o.push_str(&format!(
+                "{{\"bucket\":{},\"backend\":{},\"ewma_ms\":{}}}",
+                bucket,
+                json_str(backend),
+                json_num(*ewma)
+            ));
+        }
+        o.push_str("]}");
+        o
+    }
+}
+
+fn push_num(out: &mut String, key: &str, v: f64) {
+    out.push_str(&format!(",\"{key}\":{}", json_num(v)));
+}
+
+fn push_int(out: &mut String, key: &str, v: usize) {
+    out.push_str(&format!(",\"{key}\":{v}"));
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut o = String::with_capacity(s.len() + 2);
+    o.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => o.push_str("\\\""),
+            '\\' => o.push_str("\\\\"),
+            '\n' => o.push_str("\\n"),
+            '\r' => o.push_str("\\r"),
+            '\t' => o.push_str("\\t"),
+            c if (c as u32) < 0x20 => o.push_str(&format!("\\u{:04x}", c as u32)),
+            c => o.push(c),
+        }
+    }
+    o.push('"');
+    o
+}
+
+/// Extract a top-level numeric field from a flat JSON object produced by
+/// [`MetricsSnapshot::to_json`] — enough for tests and demo printing to
+/// assert on wire-fetched metrics without a JSON dependency.
+pub fn json_num_field(json: &str, key: &str) -> Option<f64> {
+    let needle = format!("\"{key}\":");
+    let at = json.find(&needle)? + needle.len();
+    let rest = &json[at..];
+    let end = rest
+        .char_indices()
+        .find(|(_, c)| !matches!(c, '0'..='9' | '-' | '+' | '.' | 'e' | 'E'))
+        .map(|(i, _)| i)
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
 }
 
 impl ServingMetrics {
-    pub fn record_latency(&self, ms: f64) {
-        self.inner.lock().unwrap().latencies_ms.push(ms);
+    /// A request passed admission for `client`.
+    pub fn record_admitted(&self, client: &str) {
+        let mut i = self.inner.lock().unwrap();
+        i.admitted += 1;
+        i.clients.entry(client.to_string()).or_default().admitted += 1;
+    }
+
+    /// A request from `client` completed with predictions after
+    /// `latency_ms` end to end.
+    pub fn record_completed(&self, client: &str, latency_ms: f64) {
+        let mut i = self.inner.lock().unwrap();
+        i.latencies.push(latency_ms);
+        i.clients.entry(client.to_string()).or_default().completed += 1;
+    }
+
+    /// A request from `client` was answered with a typed shed.
+    pub fn record_shed(&self, client: &str, reason: ShedReason) {
+        let mut i = self.inner.lock().unwrap();
+        i.shed[reason.code() as usize] += 1;
+        i.clients.entry(client.to_string()).or_default().shed += 1;
+    }
+
+    /// An error not attributable to a single client request (unknown
+    /// batch id, duplicate completion).
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    /// An admitted request from `client` failed in execution.
+    pub fn record_request_error(&self, client: &str) {
+        let mut i = self.inner.lock().unwrap();
+        i.errors += 1;
+        i.clients.entry(client.to_string()).or_default().errors += 1;
+    }
+
+    /// Push the admission controller's live gauges so the next snapshot
+    /// reports them (called by the server right before snapshotting).
+    pub fn set_admission_gauges(&self, queue_ewma_ms: f64, peak_outstanding: usize) {
+        let mut i = self.inner.lock().unwrap();
+        i.queue_ewma_ms = queue_ewma_ms;
+        i.peak_outstanding = peak_outstanding;
     }
 
     pub fn record_batch(&self, requests: usize, capacity: usize) {
@@ -183,8 +471,8 @@ impl ServingMetrics {
         }
         i.worker_jobs[worker] += 1;
         i.worker_busy_ms[worker] += exec_ms;
-        i.queue_wait_ms.push(queue_wait_ms);
-        i.exec_ms.push(exec_ms);
+        i.queue_wait.push(queue_wait_ms);
+        i.exec.push(exec_ms);
     }
 
     /// Install the dispatch policy's current per-(bucket seq_len,
@@ -215,13 +503,9 @@ impl ServingMetrics {
         self.inner.lock().unwrap().truncated += 1;
     }
 
-    pub fn record_error(&self) {
-        self.inner.lock().unwrap().errors += 1;
-    }
-
     /// Clear all recordings (used after serving warmup, so measured
     /// latencies exclude one-off artifact compilation). Keeps the
-    /// declared pool size.
+    /// declared pool size and restarts the metrics window clock.
     pub fn reset(&self) {
         let mut i = self.inner.lock().unwrap();
         let workers = i.workers;
@@ -236,7 +520,27 @@ impl ServingMetrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let i = self.inner.lock().unwrap();
         MetricsSnapshot {
-            requests: i.latencies_ms.len(),
+            requests: i.latencies.count() as usize,
+            admitted: i.admitted,
+            shed: i.shed.iter().sum(),
+            shed_by_reason: ShedReason::all()
+                .iter()
+                .map(|r| (r.as_str().to_string(), i.shed[r.code() as usize]))
+                .collect(),
+            clients: i
+                .clients
+                .iter()
+                .map(|(label, c)| ClientStats {
+                    client: label.clone(),
+                    admitted: c.admitted,
+                    completed: c.completed,
+                    shed: c.shed,
+                    errors: c.errors,
+                })
+                .collect(),
+            queue_ewma_ms: i.queue_ewma_ms,
+            peak_outstanding: i.peak_outstanding,
+            uptime_s: i.started.elapsed().as_secs_f64(),
             batches: i.batches,
             errors: i.errors,
             truncated: i.truncated,
@@ -245,12 +549,12 @@ impl ServingMetrics {
             } else {
                 i.batched_requests as f64 / i.batch_capacity as f64
             },
-            p50_ms: stats::percentile(&i.latencies_ms, 50.0),
-            p95_ms: stats::percentile(&i.latencies_ms, 95.0),
-            p99_ms: stats::percentile(&i.latencies_ms, 99.0),
-            mean_ms: stats::mean(&i.latencies_ms),
-            mean_queue_wait_ms: stats::mean(&i.queue_wait_ms),
-            mean_exec_ms: stats::mean(&i.exec_ms),
+            p50_ms: i.latencies.percentile(50.0),
+            p95_ms: i.latencies.percentile(95.0),
+            p99_ms: i.latencies.percentile(99.0),
+            mean_ms: i.latencies.mean(),
+            mean_queue_wait_ms: i.queue_wait.mean(),
+            mean_exec_ms: i.exec.mean(),
             mean_inflight: if i.dispatches == 0 {
                 0.0
             } else {
@@ -288,7 +592,7 @@ mod tests {
     fn snapshot_reflects_recordings() {
         let m = ServingMetrics::default();
         for i in 0..100 {
-            m.record_latency(i as f64);
+            m.record_completed("local", i as f64);
         }
         m.record_batch(3, 4);
         m.record_batch(4, 4);
@@ -300,6 +604,7 @@ mod tests {
         assert!((s.fill_ratio - 7.0 / 8.0).abs() < 1e-12);
         assert!((s.p50_ms - 49.5).abs() < 1.0);
         assert!(s.p99_ms >= s.p95_ms && s.p95_ms >= s.p50_ms);
+        assert!(s.uptime_s >= 0.0);
     }
 
     #[test]
@@ -383,5 +688,79 @@ mod tests {
         assert_eq!(s.worker_backend.len(), 3);
         assert_eq!(s.migrations, 0);
         assert!(s.exec_ewma_ms.is_empty());
+    }
+
+    #[test]
+    fn admission_accounting_and_shed_reasons() {
+        let m = ServingMetrics::default();
+        m.record_admitted("10.0.0.1:9");
+        m.record_admitted("10.0.0.1:9");
+        m.record_admitted("local");
+        m.record_completed("10.0.0.1:9", 5.0);
+        m.record_completed("10.0.0.1:9", 7.0);
+        m.record_request_error("local");
+        m.record_shed("10.0.0.2:7", ShedReason::QueueFull);
+        m.record_shed("10.0.0.2:7", ShedReason::Overloaded);
+        m.record_shed("10.0.0.2:7", ShedReason::Overloaded);
+        m.set_admission_gauges(12.5, 42);
+        let s = m.snapshot();
+        assert_eq!(s.admitted, 3);
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.shed, 3);
+        assert_eq!(
+            s.shed_by_reason,
+            vec![
+                ("queue_full".to_string(), 1),
+                ("overloaded".to_string(), 2),
+                ("client_limit".to_string(), 0),
+                ("expired".to_string(), 0),
+            ]
+        );
+        assert_eq!(s.queue_ewma_ms, 12.5);
+        assert_eq!(s.peak_outstanding, 42);
+        // clients sorted by label, each fully accounted
+        assert_eq!(s.clients.len(), 3);
+        assert_eq!(
+            s.clients[0],
+            ClientStats {
+                client: "10.0.0.1:9".into(),
+                admitted: 2,
+                completed: 2,
+                shed: 0,
+                errors: 0
+            }
+        );
+        assert_eq!(s.clients[1].shed, 3);
+        assert_eq!(s.clients[2].errors, 1);
+    }
+
+    #[test]
+    fn snapshot_serializes_to_json() {
+        let m = ServingMetrics::default();
+        m.set_worker_backends(&["native".into(), "native".into()]);
+        m.record_admitted("a\"b"); // label needing escape
+        m.record_completed("a\"b", 3.0);
+        m.record_shed("a\"b", ShedReason::Overloaded);
+        m.record_job(0, 1.0, 2.0);
+        m.record_padding(512, 300, 512);
+        m.set_admission_gauges(4.5, 7);
+        let j = m.snapshot().to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'), "{j}");
+        assert!(j.contains("\"schema\":1"));
+        assert!(j.contains("\"client\":\"a\\\"b\""), "escaped label: {j}");
+        assert!(j.contains("\"shed_by_reason\":{\"queue_full\":0,\"overloaded\":1"));
+        assert!(j.contains("\"backend\":\"native\""));
+        assert!(j.contains("\"padding_by_bucket\":[{\"bucket\":512"));
+        // numeric fields extractable by the helper
+        assert_eq!(json_num_field(&j, "p50_ms"), Some(3.0));
+        assert_eq!(json_num_field(&j, "queue_ewma_ms"), Some(4.5));
+        assert_eq!(json_num_field(&j, "peak_outstanding"), Some(7.0));
+        assert_eq!(json_num_field(&j, "shed"), Some(1.0));
+        assert_eq!(json_num_field(&j, "no_such_key"), None);
+        // braces balance (cheap structural sanity without a parser)
+        let open = j.matches('{').count();
+        let close = j.matches('}').count();
+        assert_eq!(open, close, "{j}");
     }
 }

@@ -46,16 +46,37 @@
 //! `Drop` closes every worker's job queue and then joins each worker —
 //! no detached threads (the old `EngineHandle` detach-on-drop leak is
 //! gone; the handle is now a thin wrapper over a 1-worker pool).
+//!
+//! **Request surface.** Every caller — the TCP [`Ingress`] and the
+//! in-process path alike — submits a typed [`Request`] and receives a
+//! typed [`Response`] whose [`Outcome`] is `Completed`, `Shed` (the
+//! typed graceful-degradation answer from admission control:
+//! queue-full, over-budget, per-client cap, expired deadline), or
+//! `Error`. Admission runs synchronously in [`Client::submit_with`] —
+//! one gate, one accounting path — with bounded queues everywhere, so
+//! memory stays flat under overload. [`wire`] defines the
+//! length-prefixed versioned frame codec the ingress speaks, and
+//! metrics expose streaming latency percentiles, shed counters, and
+//! per-client accounting over the same wire (`metrics` frame → JSON
+//! [`MetricsSnapshot`]).
 
+mod admission;
+pub mod api;
 mod batcher;
 mod dispatch;
 mod engine;
+mod ingress;
 mod metrics;
 mod server;
 pub mod trace;
+pub mod wire;
 
+pub use admission::AdmissionState;
+pub use api::{Outcome, Priority, Request, Response, ShedReason};
 pub use batcher::{Batcher, BatcherConfig, Bucket, FormedBatch, PendingRequest};
 pub use dispatch::{replay, WeightedPolicy};
 pub use engine::{EngineHandle, EnginePool, PoolCompletion, PoolJob};
-pub use metrics::{MetricsSnapshot, ServingMetrics};
-pub use server::{Response, Server, ServerConfig};
+pub use ingress::Ingress;
+pub use metrics::{json_num_field, ClientStats, MetricsSnapshot, ServingMetrics};
+pub use server::{Client, Server, ServerConfig};
+pub use wire::WireClient;

@@ -1,5 +1,6 @@
 //! The serving front-end: a pipelined dispatch/completion state machine
-//! over the engine pool.
+//! over the engine pool, fronted by one admission-controlled submission
+//! path shared by every caller.
 //!
 //! The router thread runs three overlapped stages (the ones
 //! `experiments/hotpath.rs` times): it **accepts** submissions into the
@@ -15,9 +16,19 @@
 //! sizes may place batches differently, with identical responses); with
 //! one CPU worker and `max_inflight: 1` it degenerates to the original
 //! single-inflight loop (same responses, FIFO within bucket).
+//!
+//! **Admission is synchronous and caller-side**: [`Client::submit_with`]
+//! runs [`AdmissionState::try_admit`] before anything reaches the
+//! router, so a shed request is answered with a typed
+//! [`Outcome::Shed`] immediately — no queue entry, no router hop — and
+//! the TCP ingress and the in-process path exercise the exact same gate
+//! and the exact same accounting. Every admitted request is answered
+//! exactly once through the router's single `finish` path (completion,
+//! execution error, or dispatch-time expiry), which is also the only
+//! place admission slots are released.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{
     channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
 };
@@ -27,10 +38,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use super::admission::AdmissionState;
+use super::api::{Outcome, Request, Response, ShedReason};
 use super::batcher::{Batcher, BatcherConfig, Bucket, FormedBatch, PendingRequest};
 use super::engine::{EnginePool, PoolCompletion, PoolJob};
 use super::metrics::{MetricsSnapshot, ServingMetrics};
-use crate::config::{ModelConfig, ServingConfig};
+use crate::config::{AdmissionConfig, ModelConfig, ServingConfig};
 use crate::kernel;
 use crate::runtime::{BackendKind, HostTensor, JobShape, Manifest};
 use crate::tokenizer::special;
@@ -49,6 +62,8 @@ pub struct ServerConfig {
     pub queue_depth: usize,
     /// engine-pool shape: worker count + per-bucket inflight cap
     pub serving: ServingConfig,
+    /// admission-control policy (queue bound, latency budget, client cap)
+    pub admission: AdmissionConfig,
     /// model family the native kernel backend serves when the pool
     /// contains `native` workers (seq_len/batch are per-bucket)
     pub native: ModelConfig,
@@ -73,27 +88,17 @@ impl ServerConfig {
             batcher: BatcherConfig::default(),
             queue_depth: 256,
             serving: ServingConfig::default(),
+            admission: AdmissionConfig::default(),
             native: ModelConfig::native_serving(),
             native_checkpoint: None,
         }
     }
 }
 
-/// A completed fill-mask response.
-#[derive(Clone, Debug)]
-pub struct Response {
-    pub id: u64,
-    /// (position, predicted token id) at each `<mask>` position
-    pub predictions: Vec<(usize, i32)>,
-    pub latency_ms: f64,
-    /// true if the request was truncated to the largest bucket
-    pub truncated: bool,
-}
-
 enum Submission {
     Request {
         req: PendingRequest,
-        reply: Sender<Response>,
+        entry: ReplyEntry,
     },
     /// Warm the given artifacts on every pool worker; each worker acks
     /// once on `done`.
@@ -103,16 +108,108 @@ enum Submission {
     },
 }
 
-/// Running server handle.
-pub struct Server {
+/// Everything the router needs to answer one admitted request: the
+/// caller-facing id, the reply channel, and the client bookkeeping
+/// (label for metrics, inflight cell for admission release).
+struct ReplyEntry {
+    wire_id: u64,
+    reply: Sender<Response>,
+    label: Arc<String>,
+    inflight: Arc<AtomicUsize>,
+}
+
+/// State shared between the server handle, its clients, and the router.
+struct Shared {
     tx: SyncSender<Submission>,
     next_id: AtomicU64,
+    admission: Arc<AdmissionState>,
     metrics: Arc<ServingMetrics>,
+}
+
+/// Running server handle.
+pub struct Server {
+    shared: Arc<Shared>,
+    /// The in-process submission identity ([`Server::submit`] routes
+    /// through it), labelled `local` in per-client metrics.
+    local: Client,
     stop: Arc<AtomicBool>,
     join: Option<JoinHandle<()>>,
     /// serving buckets, sorted by seq_len (for warmup routing)
     buckets: Vec<Bucket>,
     workers: usize,
+}
+
+/// A submission identity: one admission bookkeeping unit (its own
+/// inflight count against `max_client_inflight`, its own metrics rows).
+/// The TCP ingress creates one per connection; in-process callers get
+/// one from [`Server::client`]. Clones share the identity.
+#[derive(Clone)]
+pub struct Client {
+    shared: Arc<Shared>,
+    label: Arc<String>,
+    inflight: Arc<AtomicUsize>,
+}
+
+impl Client {
+    /// Submit a typed request; the response arrives on the returned
+    /// channel (exactly one [`Response`] per request — completed, shed,
+    /// or error).
+    pub fn submit(&self, req: Request) -> Result<Receiver<Response>> {
+        let (reply, rx) = channel();
+        self.submit_with(req, reply)?;
+        Ok(rx)
+    }
+
+    /// Submit with a caller-owned reply channel (the ingress funnels
+    /// every response of a connection into one writer this way).
+    /// Returns the id the response will carry. Admission runs *here*,
+    /// synchronously: a shed request is answered on `reply` before this
+    /// returns and never reaches the router.
+    pub fn submit_with(&self, req: Request, reply: Sender<Response>) -> Result<u64> {
+        let internal = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        let wire_id = if req.id != 0 { req.id } else { internal };
+        if let Err(reason) =
+            self.shared.admission.try_admit(req.priority, req.deadline, &self.inflight)
+        {
+            self.shared.metrics.record_shed(&self.label, reason);
+            let _ = reply.send(Response {
+                id: wire_id,
+                outcome: Outcome::Shed { reason },
+                latency_ms: 0.0,
+            });
+            return Ok(wire_id);
+        }
+        self.shared.metrics.record_admitted(&self.label);
+        let enqueued = Instant::now();
+        let pending = PendingRequest {
+            id: internal,
+            tokens: req.tokens,
+            enqueued,
+            deadline: req.deadline.map(|d| enqueued + d),
+        };
+        let entry = ReplyEntry {
+            wire_id,
+            reply,
+            label: self.label.clone(),
+            inflight: self.inflight.clone(),
+        };
+        if self.shared.tx.send(Submission::Request { req: pending, entry }).is_err() {
+            // router gone: undo the admission so counters stay balanced
+            self.shared.admission.release(&self.inflight);
+            anyhow::bail!("server stopped");
+        }
+        Ok(wire_id)
+    }
+
+    /// This client's label in per-client metrics.
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Requests this client has admitted-but-unanswered right now.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
 }
 
 impl Server {
@@ -131,6 +228,7 @@ impl Server {
     /// first use (or eagerly via [`Server::warmup`]).
     pub fn start(cfg: ServerConfig) -> Result<Self> {
         cfg.serving.validate()?;
+        cfg.admission.validate()?;
         let any_native = cfg.serving.backends.iter().any(|b| b.kind == BackendKind::Native);
         let manifest_present = std::path::Path::new(&cfg.artifacts).join("manifest.txt").exists();
         let (manifest, mut buckets, vocab) = if any_native {
@@ -216,8 +314,10 @@ impl Server {
         let worker_labels: Vec<String> = pool.backends().iter().map(|b| b.label()).collect();
         metrics.set_worker_backends(&worker_labels);
         let worker_kinds: Vec<BackendKind> = pool.backends().iter().map(|b| b.kind).collect();
+        let admission = Arc::new(AdmissionState::new(cfg.admission));
         let stop = Arc::new(AtomicBool::new(false));
         let m2 = metrics.clone();
+        let adm2 = admission.clone();
         let stop2 = stop.clone();
         let mut batcher_cfg = cfg.batcher;
         batcher_cfg.max_inflight = cfg.serving.max_inflight;
@@ -225,15 +325,28 @@ impl Server {
         let join = std::thread::Builder::new()
             .name("bigbird-router".into())
             .spawn(move || {
-                let st =
-                    RouterState::new(pool, router_buckets, worker_kinds, batcher_cfg, vocab, m2);
+                let st = RouterState::new(
+                    pool,
+                    router_buckets,
+                    worker_kinds,
+                    batcher_cfg,
+                    vocab,
+                    m2,
+                    adm2,
+                );
                 router_loop(rx, st, stop2);
             })
             .context("spawning router")?;
+        let shared =
+            Arc::new(Shared { tx, next_id: AtomicU64::new(1), admission, metrics });
+        let local = Client {
+            shared: shared.clone(),
+            label: Arc::new("local".to_string()),
+            inflight: Arc::new(AtomicUsize::new(0)),
+        };
         Ok(Server {
-            tx,
-            next_id: AtomicU64::new(1),
-            metrics,
+            shared,
+            local,
             stop,
             join: Some(join),
             buckets,
@@ -241,22 +354,39 @@ impl Server {
         })
     }
 
-    /// Submit a fill-mask request. Returns the response channel.
-    pub fn submit(&self, tokens: Vec<i32>) -> Result<Receiver<Response>> {
-        let (reply, rx) = channel();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .send(Submission::Request {
-                req: PendingRequest { id, tokens, enqueued: Instant::now() },
-                reply,
-            })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        Ok(rx)
+    /// Submit a typed request through the in-process `local` client.
+    pub fn submit(&self, req: Request) -> Result<Receiver<Response>> {
+        self.local.submit(req)
     }
 
-    /// Metrics snapshot.
+    /// Create a new submission identity (per-client admission cap and
+    /// metrics rows). The TCP ingress makes one per connection, labelled
+    /// by peer address.
+    pub fn client(&self, label: &str) -> Client {
+        Client {
+            shared: self.shared.clone(),
+            label: Arc::new(label.to_string()),
+            inflight: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    /// Metrics snapshot (admission gauges refreshed first, so
+    /// `queue_ewma_ms` / `peak_outstanding` are current).
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+        let adm = &self.shared.admission;
+        self.shared.metrics.set_admission_gauges(adm.ewma_wait_ms(), adm.peak_outstanding());
+        self.shared.metrics.snapshot()
+    }
+
+    /// The serialized metrics snapshot — the payload the wire `metrics`
+    /// request returns and `serve_demo` prints.
+    pub fn metrics_json(&self) -> String {
+        self.metrics().to_json()
+    }
+
+    /// Admitted-but-unanswered requests across all clients (live gauge).
+    pub fn outstanding(&self) -> usize {
+        self.shared.admission.outstanding()
     }
 
     /// Warm up: compile the bucket artifact for each length and
@@ -276,7 +406,8 @@ impl Server {
             }
         }
         let (done_tx, done_rx) = channel();
-        self.tx
+        self.shared
+            .tx
             .send(Submission::Warmup { artifacts, done: done_tx })
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         for _ in 0..self.workers {
@@ -285,7 +416,7 @@ impl Server {
                 .context("server stopped during warmup")?
                 .map_err(|e| anyhow::anyhow!("warmup failed: {e}"))?;
         }
-        self.metrics.reset();
+        self.shared.metrics.reset();
         Ok(())
     }
 
@@ -325,11 +456,12 @@ struct InflightBatch {
 struct RouterState {
     batcher: Batcher,
     pool: EnginePool,
-    replies: HashMap<u64, Sender<Response>>,
+    replies: HashMap<u64, ReplyEntry>,
     inflight: HashMap<u64, InflightBatch>,
     next_batch_id: u64,
     vocab: usize,
     metrics: Arc<ServingMetrics>,
+    admission: Arc<AdmissionState>,
     /// Realized backend kind of each pool worker, indexed by worker id.
     /// Realized — not requested — so two physically identical workers
     /// (e.g. a `gpu` spec that fell back to CPU next to a `cpu` worker)
@@ -342,6 +474,7 @@ struct RouterState {
 }
 
 impl RouterState {
+    #[allow(clippy::too_many_arguments)]
     fn new(
         pool: EnginePool,
         buckets: Vec<Bucket>,
@@ -349,6 +482,7 @@ impl RouterState {
         batcher_cfg: BatcherConfig,
         vocab: usize,
         metrics: Arc<ServingMetrics>,
+        admission: Arc<AdmissionState>,
     ) -> Self {
         let n_buckets = buckets.len();
         RouterState {
@@ -359,6 +493,7 @@ impl RouterState {
             next_batch_id: 1,
             vocab,
             metrics,
+            admission,
             worker_kinds,
             bucket_backend: vec![None; n_buckets],
         }
@@ -411,8 +546,8 @@ fn router_loop(rx: Receiver<Submission>, mut st: RouterState, stop: Arc<AtomicBo
 
 fn accept(st: &mut RouterState, sub: Submission) {
     match sub {
-        Submission::Request { req, reply } => {
-            st.replies.insert(req.id, reply);
+        Submission::Request { req, entry } => {
+            st.replies.insert(req.id, entry);
             st.batcher.push(req);
         }
         Submission::Warmup { artifacts, done } => {
@@ -421,15 +556,56 @@ fn accept(st: &mut RouterState, sub: Submission) {
     }
 }
 
+/// Answer one admitted request (by internal id) exactly once: send the
+/// typed response, record the outcome against the owning client, and
+/// release its admission slots. Every post-admission path — completion,
+/// expiry shed, dispatch failure, batch error — funnels through here,
+/// so a request can neither leak its slot nor be double-released.
+fn finish(st: &mut RouterState, internal_id: u64, outcome: Outcome, latency_ms: f64) {
+    let Some(entry) = st.replies.remove(&internal_id) else {
+        // unknown id (e.g. duplicate pool completion): never poison the
+        // loop, but do surface it in the error count
+        st.metrics.record_error();
+        return;
+    };
+    match &outcome {
+        Outcome::Completed { .. } => st.metrics.record_completed(&entry.label, latency_ms),
+        Outcome::Shed { reason } => st.metrics.record_shed(&entry.label, *reason),
+        Outcome::Error { .. } => st.metrics.record_request_error(&entry.label),
+    }
+    st.admission.release(&entry.inflight);
+    // a dropped receiver (disconnected wire client) is fine: the send
+    // fails, the accounting above already happened
+    let _ = entry.reply.send(Response { id: entry.wire_id, outcome, latency_ms });
+}
+
 /// Pad/stack a formed batch and hand it to the worker with the minimum
-/// expected completion time for its bucket.
+/// expected completion time for its bucket. Requests whose deadline
+/// passed while they queued are shed `Expired` here instead of burning
+/// a forward pass on an answer nobody is waiting for.
 fn dispatch_batch(st: &mut RouterState, fb: FormedBatch) {
-    let b = fb.bucket.batch;
-    let s = fb.bucket.seq_len;
+    let bucket = fb.bucket;
+    let bucket_idx = fb.bucket_idx;
+    let now = Instant::now();
+    let mut requests = Vec::with_capacity(fb.requests.len());
+    for req in fb.requests {
+        if matches!(req.deadline, Some(d) if now >= d) {
+            let age = now.duration_since(req.enqueued).as_secs_f64() * 1e3;
+            finish(st, req.id, Outcome::Shed { reason: ShedReason::Expired }, age);
+        } else {
+            requests.push(req);
+        }
+    }
+    if requests.is_empty() {
+        st.batcher.complete(bucket_idx);
+        return;
+    }
+    let b = bucket.batch;
+    let s = bucket.seq_len;
     let mut tokens = vec![special::PAD; b * s];
     let mut kv_valid = vec![0f32; b * s];
-    let mut truncated = vec![false; fb.requests.len()];
-    for (row, req) in fb.requests.iter().enumerate() {
+    let mut truncated = vec![false; requests.len()];
+    for (row, req) in requests.iter().enumerate() {
         let n = req.tokens.len().min(s);
         truncated[row] = req.tokens.len() > s;
         tokens[row * s..row * s + n].copy_from_slice(&req.tokens[..n]);
@@ -441,7 +617,7 @@ fn dispatch_batch(st: &mut RouterState, fb: FormedBatch) {
     st.next_batch_id += 1;
     let job = PoolJob {
         batch_id,
-        artifact: fb.bucket.artifact.clone(),
+        artifact: bucket.artifact.clone(),
         shape: JobShape { seq_len: s, batch: b },
         inputs: vec![
             HostTensor::I32 { shape: vec![b, s], data: tokens },
@@ -453,39 +629,35 @@ fn dispatch_batch(st: &mut RouterState, fb: FormedBatch) {
         submitted: Instant::now(),
     };
     // padded-vs-real token accounting for the padding-waste metric
-    let real_tokens: usize = fb.requests.iter().map(|r| r.tokens.len().min(s)).sum();
+    let real_tokens: usize = requests.iter().map(|r| r.tokens.len().min(s)).sum();
     match st.pool.submit(job) {
         Ok(worker) => {
             // counted only once actually dispatched, so batch-fill and
             // the per-worker job totals stay consistent
-            st.metrics.record_batch(fb.requests.len(), b);
+            st.metrics.record_batch(requests.len(), b);
             st.metrics.record_padding(s, real_tokens, b * s);
             // a bucket changing (realized) backends is a migration —
             // the roofline/EWMA policy moving it to a better-fitting
             // device, never churn between identical workers
             if let Some(&kind) = st.worker_kinds.get(worker) {
-                let prev = st.bucket_backend[fb.bucket_idx].replace(kind);
+                let prev = st.bucket_backend[bucket_idx].replace(kind);
                 if matches!(prev, Some(p) if p != kind) {
                     st.metrics.record_migration();
                 }
             }
             st.inflight.insert(
                 batch_id,
-                InflightBatch {
-                    bucket_idx: fb.bucket_idx,
-                    seq_len: s,
-                    requests: fb.requests,
-                    truncated,
-                },
+                InflightBatch { bucket_idx, seq_len: s, requests, truncated },
             );
             st.metrics.record_dispatch(st.pool.inflight());
         }
         Err(e) => {
             eprintln!("[server] dispatch failed: {e:#}");
-            st.metrics.record_error();
-            st.batcher.complete(fb.bucket_idx);
-            for req in &fb.requests {
-                st.replies.remove(&req.id);
+            st.batcher.complete(bucket_idx);
+            let msg = format!("dispatch failed: {e:#}");
+            for req in requests {
+                let age = req.enqueued.elapsed().as_secs_f64() * 1e3;
+                finish(st, req.id, Outcome::Error { message: msg.clone() }, age);
             }
         }
     }
@@ -499,11 +671,8 @@ fn complete_batch(st: &mut RouterState, c: PoolCompletion) {
         return;
     };
     st.batcher.complete(ib.bucket_idx);
-    st.metrics.record_job(
-        c.worker,
-        c.queue_wait.as_secs_f64() * 1e3,
-        c.exec.as_secs_f64() * 1e3,
-    );
+    let exec_ms = c.exec.as_secs_f64() * 1e3;
+    st.metrics.record_job(c.worker, c.queue_wait.as_secs_f64() * 1e3, exec_ms);
     // mirror the dispatch policy's refreshed cost table (the pool folds
     // successful exec times into it as completions are collected) so
     // metrics report exactly the EWMAs routing runs on
@@ -518,16 +687,14 @@ fn complete_batch(st: &mut RouterState, c: PoolCompletion) {
         Ok(outs) => outs,
         Err(e) => {
             eprintln!("[server] batch {} failed on worker {}: {e}", c.batch_id, c.worker);
-            st.metrics.record_error();
-            drop_replies(st, &ib);
+            fail_batch(st, ib, &format!("batch execution failed: {e}"));
             return;
         }
     };
     let logits = match outs.first().map(|t| t.as_f32()) {
         Some(Ok(l)) => l,
         _ => {
-            st.metrics.record_error();
-            drop_replies(st, &ib);
+            fail_batch(st, ib, "batch produced no decodable logits");
             return;
         }
     };
@@ -541,23 +708,27 @@ fn complete_batch(st: &mut RouterState, c: PoolCompletion) {
             special::MASK,
         );
         let lat = req.enqueued.elapsed().as_secs_f64() * 1000.0;
-        st.metrics.record_latency(lat);
+        // feed the admission EWMA the non-execute share of the latency
+        // (time spent queued in the batcher and the worker queue)
+        st.admission.observe_wait((lat - exec_ms).max(0.0));
         if ib.truncated[row] {
             st.metrics.record_truncated();
         }
-        if let Some(tx) = st.replies.remove(&req.id) {
-            let _ = tx.send(Response {
-                id: req.id,
-                predictions: preds,
-                latency_ms: lat,
-                truncated: ib.truncated[row],
-            });
-        }
+        finish(
+            st,
+            req.id,
+            Outcome::Completed { predictions: preds, truncated: ib.truncated[row] },
+            lat,
+        );
     }
 }
 
-fn drop_replies(st: &mut RouterState, ib: &InflightBatch) {
+/// Answer every request of a failed batch with a typed error (releasing
+/// their admission slots) — an execution failure must degrade into N
+/// error responses, never into silently dropped replies.
+fn fail_batch(st: &mut RouterState, ib: InflightBatch, msg: &str) {
     for req in &ib.requests {
-        st.replies.remove(&req.id);
+        let age = req.enqueued.elapsed().as_secs_f64() * 1e3;
+        finish(st, req.id, Outcome::Error { message: msg.to_string() }, age);
     }
 }

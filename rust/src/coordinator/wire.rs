@@ -1,0 +1,510 @@
+//! Length-prefixed, versioned wire protocol for the TCP ingress — a
+//! byte-level encoding of the typed [`api`](super::api) surface, never a
+//! parallel API.
+//!
+//! ## Frame format
+//!
+//! ```text
+//! ┌─────────┬──────┬────────────┬──────────────┐
+//! │ version │ type │ len u32 LE │ payload      │
+//! │  1 byte │ 1 B  │  4 bytes   │ `len` bytes  │
+//! └─────────┴──────┴────────────┴──────────────┘
+//! ```
+//!
+//! All integers little-endian. `len` is validated against
+//! [`MAX_FRAME`] **before** any allocation, so a hostile length prefix
+//! cannot balloon memory. Frame types:
+//!
+//! | type | name             | payload |
+//! |------|------------------|---------|
+//! | 1    | infer request    | `id u64, priority u8, deadline_ms u32 (0 = none), n u32, tokens i32×n` |
+//! | 2    | infer response   | `id u64, latency_ms f64, tag u8, tag-specific body` |
+//! | 3    | metrics request  | empty |
+//! | 4    | metrics response | UTF-8 JSON ([`MetricsSnapshot::to_json`](super::metrics::MetricsSnapshot::to_json)) |
+//!
+//! Infer-response tags: `0` completed (`truncated u8, n u32,
+//! (pos u32, token i32)×n`), `1` shed (`reason u8`), `2` error
+//! (`len u32, UTF-8 message`).
+//!
+//! Decoding is strict: truncated bodies, trailing garbage, unknown
+//! version/type/tag bytes, and non-UTF-8 messages are all
+//! [`WireError::Malformed`] — the connection is dropped, the process
+//! never panics, and (because admission bookkeeping lives server-side
+//! in the router's reply table) no inflight slot can leak.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use super::api::{Outcome, Priority, Request, Response, ShedReason};
+
+/// Protocol version carried in every frame header.
+pub const WIRE_VERSION: u8 = 1;
+/// Hard bound on a frame payload; checked before allocating.
+pub const MAX_FRAME: usize = 16 << 20;
+
+/// Frame type: client → server inference request.
+pub const FRAME_INFER_REQUEST: u8 = 1;
+/// Frame type: server → client inference response.
+pub const FRAME_INFER_RESPONSE: u8 = 2;
+/// Frame type: client → server metrics scrape (empty payload).
+pub const FRAME_METRICS_REQUEST: u8 = 3;
+/// Frame type: server → client metrics JSON.
+pub const FRAME_METRICS_RESPONSE: u8 = 4;
+
+const HEADER_LEN: usize = 6;
+
+/// Codec-level failure.
+#[derive(Debug)]
+pub enum WireError {
+    /// Clean EOF at a frame boundary (the peer closed; not an error).
+    Closed,
+    /// Transport failure mid-frame (reset, mid-frame disconnect, ...).
+    Io(std::io::Error),
+    /// Protocol violation: drop the connection, keep the process.
+    Malformed(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Closed => write!(f, "connection closed"),
+            WireError::Io(e) => write!(f, "io error: {e}"),
+            WireError::Malformed(m) => write!(f, "malformed frame: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+fn malformed(msg: impl Into<String>) -> WireError {
+    WireError::Malformed(msg.into())
+}
+
+/// One decoded frame (header validated, payload length-checked).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    pub ty: u8,
+    pub payload: Vec<u8>,
+}
+
+/// Read one frame. Clean EOF before the first header byte is
+/// [`WireError::Closed`]; EOF anywhere later is a mid-frame disconnect
+/// and reports [`WireError::Malformed`].
+pub fn read_frame(r: &mut impl Read) -> Result<Frame, WireError> {
+    let mut header = [0u8; HEADER_LEN];
+    // first byte separately: EOF here is a clean close, not truncation
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Err(WireError::Closed),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    header[0] = first[0];
+    r.read_exact(&mut header[1..])
+        .map_err(|e| eof_as_truncation(e, "truncated frame header"))?;
+    if header[0] != WIRE_VERSION {
+        return Err(malformed(format!(
+            "unsupported wire version {} (expected {WIRE_VERSION})",
+            header[0]
+        )));
+    }
+    let ty = header[1];
+    let len = u32::from_le_bytes([header[2], header[3], header[4], header[5]]) as usize;
+    if len > MAX_FRAME {
+        return Err(malformed(format!("frame length {len} exceeds cap {MAX_FRAME}")));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .map_err(|e| eof_as_truncation(e, "truncated frame payload"))?;
+    Ok(Frame { ty, payload })
+}
+
+fn eof_as_truncation(e: std::io::Error, what: &str) -> WireError {
+    if e.kind() == std::io::ErrorKind::UnexpectedEof {
+        malformed(what)
+    } else {
+        WireError::Io(e)
+    }
+}
+
+/// Write one frame (header + payload in a single buffered write, so a
+/// concurrent writer on the same socket can never interleave bytes
+/// inside a frame as long as each frame is written under one lock).
+pub fn write_frame(w: &mut impl Write, ty: u8, payload: &[u8]) -> std::io::Result<()> {
+    assert!(payload.len() <= MAX_FRAME, "refusing to emit an oversized frame");
+    let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
+    buf.push(WIRE_VERSION);
+    buf.push(ty);
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(payload);
+    w.write_all(&buf)?;
+    w.flush()
+}
+
+/// Encode an inference request payload.
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let deadline_ms: u32 = req
+        .deadline
+        .map(|d| d.as_millis().min(u32::MAX as u128) as u32)
+        .unwrap_or(0);
+    let mut p = Vec::with_capacity(17 + 4 * req.tokens.len());
+    p.extend_from_slice(&req.id.to_le_bytes());
+    p.push(req.priority.code());
+    p.extend_from_slice(&deadline_ms.to_le_bytes());
+    p.extend_from_slice(&(req.tokens.len() as u32).to_le_bytes());
+    for t in &req.tokens {
+        p.extend_from_slice(&t.to_le_bytes());
+    }
+    p
+}
+
+/// Decode an inference request payload (strict: exact length, valid
+/// priority code).
+pub fn decode_request(p: &[u8]) -> Result<Request, WireError> {
+    let mut c = Cursor::new(p);
+    let id = c.u64()?;
+    let priority = Priority::from_code(c.u8()?)
+        .map_err(|e| malformed(format!("{e}")))?;
+    let deadline_ms = c.u32()?;
+    let n = c.u32()? as usize;
+    // byte math in u64 so a hostile count cannot overflow the check
+    if (c.remaining() as u64) != (n as u64) * 4 {
+        return Err(malformed(format!(
+            "token count {n} disagrees with {} payload bytes",
+            c.remaining()
+        )));
+    }
+    let mut tokens = Vec::with_capacity(n);
+    for _ in 0..n {
+        tokens.push(c.i32()?);
+    }
+    c.done()?;
+    Ok(Request {
+        id,
+        tokens,
+        deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms as u64)),
+        priority,
+    })
+}
+
+const TAG_COMPLETED: u8 = 0;
+const TAG_SHED: u8 = 1;
+const TAG_ERROR: u8 = 2;
+
+/// Encode an inference response payload.
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut p = Vec::with_capacity(32);
+    p.extend_from_slice(&resp.id.to_le_bytes());
+    p.extend_from_slice(&resp.latency_ms.to_le_bytes());
+    match &resp.outcome {
+        Outcome::Completed { predictions, truncated } => {
+            p.push(TAG_COMPLETED);
+            p.push(*truncated as u8);
+            p.extend_from_slice(&(predictions.len() as u32).to_le_bytes());
+            for &(pos, tok) in predictions {
+                p.extend_from_slice(&(pos as u32).to_le_bytes());
+                p.extend_from_slice(&tok.to_le_bytes());
+            }
+        }
+        Outcome::Shed { reason } => {
+            p.push(TAG_SHED);
+            p.push(reason.code());
+        }
+        Outcome::Error { message } => {
+            p.push(TAG_ERROR);
+            let msg = message.as_bytes();
+            p.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+            p.extend_from_slice(msg);
+        }
+    }
+    p
+}
+
+/// Decode an inference response payload (strict, like
+/// [`decode_request`]).
+pub fn decode_response(p: &[u8]) -> Result<Response, WireError> {
+    let mut c = Cursor::new(p);
+    let id = c.u64()?;
+    let latency_ms = c.f64()?;
+    let outcome = match c.u8()? {
+        TAG_COMPLETED => {
+            let truncated = match c.u8()? {
+                0 => false,
+                1 => true,
+                other => return Err(malformed(format!("bad truncated flag {other}"))),
+            };
+            let n = c.u32()? as usize;
+            if (c.remaining() as u64) != (n as u64) * 8 {
+                return Err(malformed(format!(
+                    "prediction count {n} disagrees with {} payload bytes",
+                    c.remaining()
+                )));
+            }
+            let mut predictions = Vec::with_capacity(n);
+            for _ in 0..n {
+                let pos = c.u32()? as usize;
+                let tok = c.i32()?;
+                predictions.push((pos, tok));
+            }
+            Outcome::Completed { predictions, truncated }
+        }
+        TAG_SHED => {
+            let reason = ShedReason::from_code(c.u8()?)
+                .map_err(|e| malformed(format!("{e}")))?;
+            Outcome::Shed { reason }
+        }
+        TAG_ERROR => {
+            let len = c.u32()? as usize;
+            let bytes = c.bytes(len)?;
+            let message = std::str::from_utf8(bytes)
+                .map_err(|_| malformed("error message is not UTF-8"))?
+                .to_string();
+            Outcome::Error { message }
+        }
+        other => return Err(malformed(format!("unknown outcome tag {other}"))),
+    };
+    c.done()?;
+    Ok(Response { id, outcome, latency_ms })
+}
+
+/// Strict little-endian payload reader: every read is bounds-checked,
+/// and [`Cursor::done`] rejects trailing garbage.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, off: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.off
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(malformed(format!(
+                "payload truncated: wanted {n} bytes, {} left",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32, WireError> {
+        Ok(i32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn done(&self) -> Result<(), WireError> {
+        if self.remaining() != 0 {
+            return Err(malformed(format!("{} trailing bytes", self.remaining())));
+        }
+        Ok(())
+    }
+}
+
+/// Minimal blocking client for the ingress protocol — what the demo,
+/// the soak test, and the README example use. One response arrives per
+/// request; requests may be pipelined ([`WireClient::send`] many, then
+/// [`WireClient::recv`] as many). Fetch metrics on a connection with no
+/// inference responses pending (the server may answer a metrics scrape
+/// ahead of queued inference answers).
+pub struct WireClient {
+    stream: TcpStream,
+}
+
+impl WireClient {
+    /// Connect to a running ingress.
+    pub fn connect(addr: &std::net::SocketAddr) -> std::io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(WireClient { stream })
+    }
+
+    /// Send one inference request without waiting for the answer.
+    pub fn send(&mut self, req: &Request) -> std::io::Result<()> {
+        write_frame(&mut self.stream, FRAME_INFER_REQUEST, &encode_request(req))
+    }
+
+    /// Receive the next inference response.
+    pub fn recv(&mut self) -> Result<Response, WireError> {
+        let f = read_frame(&mut self.stream)?;
+        if f.ty != FRAME_INFER_RESPONSE {
+            return Err(malformed(format!(
+                "expected infer response frame, got type {}",
+                f.ty
+            )));
+        }
+        decode_response(&f.payload)
+    }
+
+    /// Send one request and block for its response.
+    pub fn infer(&mut self, req: &Request) -> Result<Response, WireError> {
+        self.send(req)?;
+        self.recv()
+    }
+
+    /// Scrape the server's metrics snapshot as JSON.
+    pub fn metrics(&mut self) -> Result<String, WireError> {
+        write_frame(&mut self.stream, FRAME_METRICS_REQUEST, &[])?;
+        let f = read_frame(&mut self.stream)?;
+        if f.ty != FRAME_METRICS_RESPONSE {
+            return Err(malformed(format!(
+                "expected metrics response frame, got type {}",
+                f.ty
+            )));
+        }
+        String::from_utf8(f.payload).map_err(|_| malformed("metrics JSON is not UTF-8"))
+    }
+
+    /// The underlying stream (tests use this to simulate abrupt,
+    /// mid-frame disconnects).
+    pub fn stream(&mut self) -> &mut TcpStream {
+        &mut self.stream
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> Request {
+        Request::new(vec![5, -3, 7])
+            .with_id(42)
+            .with_deadline(Duration::from_millis(250))
+            .with_priority(Priority::High)
+    }
+
+    #[test]
+    fn request_round_trips() {
+        let r = req();
+        assert_eq!(decode_request(&encode_request(&r)).unwrap(), r);
+        // no deadline encodes as 0 and survives
+        let r = Request::new(vec![]);
+        assert_eq!(decode_request(&encode_request(&r)).unwrap(), r);
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        for resp in [
+            Response {
+                id: 7,
+                outcome: Outcome::Completed {
+                    predictions: vec![(3, 11), (9, -2)],
+                    truncated: true,
+                },
+                latency_ms: 12.25,
+            },
+            Response {
+                id: 8,
+                outcome: Outcome::Shed { reason: ShedReason::Overloaded },
+                latency_ms: 0.0,
+            },
+            Response {
+                id: 9,
+                outcome: Outcome::Error { message: "boom × utf8".into() },
+                latency_ms: 1.5,
+            },
+        ] {
+            assert_eq!(decode_response(&encode_response(&resp)).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn frames_round_trip_through_io() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FRAME_INFER_REQUEST, &encode_request(&req())).unwrap();
+        write_frame(&mut buf, FRAME_METRICS_REQUEST, &[]).unwrap();
+        let mut r = &buf[..];
+        let f1 = read_frame(&mut r).unwrap();
+        assert_eq!(f1.ty, FRAME_INFER_REQUEST);
+        assert_eq!(decode_request(&f1.payload).unwrap(), req());
+        let f2 = read_frame(&mut r).unwrap();
+        assert_eq!(f2, Frame { ty: FRAME_METRICS_REQUEST, payload: vec![] });
+        // clean EOF at the boundary
+        assert!(matches!(read_frame(&mut r), Err(WireError::Closed)));
+    }
+
+    #[test]
+    fn hostile_headers_are_rejected_before_allocation() {
+        // oversized length prefix
+        let mut h = vec![WIRE_VERSION, FRAME_INFER_REQUEST];
+        h.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(read_frame(&mut &h[..]), Err(WireError::Malformed(_))));
+        // wrong version
+        let mut h = vec![9, FRAME_INFER_REQUEST];
+        h.extend_from_slice(&0u32.to_le_bytes());
+        assert!(matches!(read_frame(&mut &h[..]), Err(WireError::Malformed(_))));
+        // truncated header
+        let h = [WIRE_VERSION, FRAME_INFER_REQUEST, 1];
+        assert!(matches!(read_frame(&mut &h[..]), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn hostile_payloads_are_rejected() {
+        // token count disagreeing with payload size
+        let mut p = encode_request(&Request::new(vec![1, 2, 3]));
+        let n_at = 8 + 1 + 4;
+        p[n_at..n_at + 4].copy_from_slice(&1_000_000u32.to_le_bytes());
+        assert!(matches!(decode_request(&p), Err(WireError::Malformed(_))));
+        // trailing garbage
+        let mut p = encode_request(&Request::new(vec![1]));
+        p.push(0);
+        assert!(matches!(decode_request(&p), Err(WireError::Malformed(_))));
+        // bad priority / shed / tag codes
+        let mut p = encode_request(&req());
+        p[8] = 77;
+        assert!(matches!(decode_request(&p), Err(WireError::Malformed(_))));
+        let shed =
+            Response { id: 1, outcome: Outcome::Shed { reason: ShedReason::Expired }, latency_ms: 0.0 };
+        let mut p = encode_response(&shed);
+        *p.last_mut().unwrap() = 200;
+        assert!(matches!(decode_response(&p), Err(WireError::Malformed(_))));
+        let mut p = encode_response(&shed);
+        p[16] = 9; // outcome tag
+        assert!(matches!(decode_response(&p), Err(WireError::Malformed(_))));
+        // truncated response body
+        let done = Response {
+            id: 2,
+            outcome: Outcome::Completed { predictions: vec![(1, 2)], truncated: false },
+            latency_ms: 3.0,
+        };
+        let p = encode_response(&done);
+        for cut in 0..p.len() {
+            assert!(
+                decode_response(&p[..cut]).is_err(),
+                "truncation at {cut} must not decode"
+            );
+        }
+    }
+}

@@ -15,9 +15,14 @@ use crate::util::Rng;
 
 /// Build the executable pool from CLI flags.
 pub fn pool(flags: &Flags) -> Result<ExecutablePool> {
+    pool_from(&flags.artifacts)
+}
+
+/// Build the executable pool from an artifact directory.
+pub fn pool_from(artifacts: &str) -> Result<ExecutablePool> {
     let rt = Runtime::cpu()?;
-    let manifest = Manifest::load(&flags.artifacts)
-        .with_context(|| format!("loading artifacts from {:?} (run `make artifacts`)", flags.artifacts))?;
+    let manifest = Manifest::load(artifacts)
+        .with_context(|| format!("loading artifacts from {artifacts:?} (run `make artifacts`)"))?;
     Ok(ExecutablePool::new(rt, manifest))
 }
 

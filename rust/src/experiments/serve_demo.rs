@@ -1,31 +1,58 @@
 //! `bigbird serve` — the serving demo: start the coordinator, fire a
-//! mixed-length fill-mask workload at it from client threads, report
-//! latency percentiles, throughput, batch fill, and truncation counts.
+//! mixed-length fill-mask workload at it, report latency percentiles,
+//! throughput, batch fill, admission counters, and truncation counts.
+//!
+//! Two transports, one request surface:
+//!
+//! * **in-process** (default): client threads submit typed
+//!   [`Request`]s straight into the server;
+//! * **wire** (`--listen <addr>`): the same workload runs over real TCP
+//!   sockets through the [`Ingress`] — concurrent [`WireClient`]s frame
+//!   their requests, an overload burst exercises typed sheds, and the
+//!   metrics come back over the wire as the serialized
+//!   `MetricsSnapshot` JSON. CI drives this path on a bare checkout
+//!   with `serve --backends native:2 --listen 127.0.0.1:0`.
+//!
+//! Both paths pass the same admission gate and print the same metrics
+//! JSON document.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::common::{render_table, RunLog};
-use crate::cli::Flags;
-use crate::coordinator::{Response, Server, ServerConfig};
+use crate::cli::ServeArgs;
+use crate::coordinator::wire::WIRE_VERSION;
+use crate::coordinator::{
+    Ingress, Outcome, Priority, Request, Response, Server, ServerConfig, WireClient,
+};
 use crate::data::{CorpusConfig, CorpusGen};
 use crate::tokenizer::special;
 use crate::util::Rng;
 
-pub fn run(flags: &Flags) -> Result<()> {
+pub fn run(args: &ServeArgs) -> Result<()> {
     let mut log = RunLog::new("serve_demo");
     log.line("Long-document fill-mask serving demo (BigBird buckets from the manifest)\n");
-    let mut cfg = ServerConfig::mlm_default(&flags.artifacts);
-    cfg.serving = flags.serving();
-    cfg.native_checkpoint = flags.checkpoint.clone();
-    cfg.native.precision = flags.precision;
+    let mut cfg = ServerConfig::mlm_default(&args.artifacts);
+    cfg.serving = args.serving();
+    cfg.admission = args.admission();
+    cfg.native_checkpoint = args.checkpoint.clone();
+    cfg.native.precision = args.precision;
     log.line(format!(
         "engine pool: {} worker(s) [{}], max {} inflight batches per bucket",
         cfg.serving.n_workers(),
         crate::runtime::format_backend_specs(&cfg.serving.backends),
         cfg.serving.max_inflight
+    ));
+    log.line(format!(
+        "admission: max_queue {}, per-client cap {}, latency budget {}",
+        cfg.admission.max_queue,
+        cfg.admission.max_client_inflight,
+        cfg.admission
+            .latency_budget_ms
+            .map(|b| format!("{b:.0} ms"))
+            .unwrap_or_else(|| "off".into()),
     ));
     if cfg.serving.backends.iter().any(|b| b.kind == crate::runtime::BackendKind::Native) {
         log.line(
@@ -43,39 +70,20 @@ pub fn run(flags: &Flags) -> Result<()> {
 
     // workload: 64 requests across a long-tailed length distribution
     let n_requests = 64usize;
-    let mut rng = Rng::new(flags.seed).fold_in(0x5E);
-    let mut gen = CorpusGen::new(CorpusConfig::default(), flags.seed);
-    let mut lengths = Vec::new();
     let t0 = Instant::now();
-    let mut receivers = Vec::new();
-    for _ in 0..n_requests {
-        // mixture: 50% short (≤512), 30% medium, 20% long (>1024)
-        let len = match rng.below(10) {
-            0..=4 => rng.range(64, 512),
-            5..=7 => rng.range(512, 1024),
-            _ => rng.range(1024, 2048),
-        };
-        lengths.push(len);
-        let mut doc = gen.document(len);
-        // mask a few positions
-        for _ in 0..4 {
-            let p = rng.below(len);
-            doc[p] = special::MASK;
-        }
-        receivers.push(server.submit(doc)?);
-    }
-    let mut responses: Vec<Response> = Vec::new();
-    for rx in receivers {
-        responses.push(rx.recv()?);
-    }
+    let (responses, wire_json) = match &args.listen {
+        Some(addr) => run_wire_workload(&mut log, addr, &server, args.seed, n_requests)?,
+        None => (run_local_workload(&server, args.seed, n_requests)?, None),
+    };
     let wall = t0.elapsed().as_secs_f64();
-    let _ = lengths;
 
     let m = server.metrics();
     log.line(render_table(
         &["metric", "value"],
         &[
-            vec!["requests".into(), format!("{}", m.requests)],
+            vec!["requests completed".into(), format!("{}", m.requests)],
+            vec!["admitted".into(), format!("{}", m.admitted)],
+            vec!["shed (typed)".into(), format!("{}", m.shed)],
             vec!["wallclock s".into(), format!("{wall:.2}")],
             vec!["throughput req/s".into(), format!("{:.1}", n_requests as f64 / wall)],
             vec!["batches formed".into(), format!("{}", m.batches)],
@@ -86,6 +94,8 @@ pub fn run(flags: &Flags) -> Result<()> {
             vec!["truncated".into(), format!("{}", m.truncated)],
             vec!["errors".into(), format!("{}", m.errors)],
             vec!["mean queue-wait ms".into(), format!("{:.2}", m.mean_queue_wait_ms)],
+            vec!["queue-wait EWMA ms".into(), format!("{:.2}", m.queue_ewma_ms)],
+            vec!["peak outstanding".into(), format!("{}", m.peak_outstanding)],
             vec!["mean execute ms".into(), format!("{:.2}", m.mean_exec_ms)],
             vec!["mean inflight depth".into(), format!("{:.2}", m.mean_inflight)],
             vec!["peak inflight depth".into(), format!("{}", m.peak_inflight)],
@@ -93,6 +103,17 @@ pub fn run(flags: &Flags) -> Result<()> {
             vec!["padding waste".into(), format!("{:.0}%", 100.0 * m.padding_waste)],
         ],
     ));
+    for (reason, n) in &m.shed_by_reason {
+        if *n > 0 {
+            log.line(format!("shed[{reason}]: {n}"));
+        }
+    }
+    for c in &m.clients {
+        log.line(format!(
+            "client {}: admitted {}, completed {}, shed {}, errors {}",
+            c.client, c.admitted, c.completed, c.shed, c.errors
+        ));
+    }
     for (seq_len, real, padded) in &m.padding_by_bucket {
         let waste = if *padded > 0 { 1.0 - *real as f64 / *padded as f64 } else { 0.0 };
         log.line(format!(
@@ -115,14 +136,138 @@ pub fn run(flags: &Flags) -> Result<()> {
     for (seq_len, label, ewma) in &m.exec_ewma_ms {
         log.line(format!("bucket s{seq_len} on {label}: exec EWMA {ewma:.1} ms"));
     }
-    let n_preds: usize = responses.iter().map(|r| r.predictions.len()).sum();
+    let n_preds: usize = responses.iter().map(|r| r.predictions().len()).sum();
+    let n_done = responses.iter().filter(|r| r.is_completed()).count();
     log.line(format!(
-        "\n{} responses, {} mask predictions total; every request above 2048",
+        "\n{} responses ({n_done} completed), {n_preds} mask predictions total; every request",
         responses.len(),
-        n_preds
     ));
-    log.line("tokens is truncated — the dense-only world would truncate at 512.");
+    log.line("above 2048 tokens is truncated — the dense-only world would truncate at 512.");
+
+    // the serialized snapshot: identical to what a `metrics` wire
+    // request returns
+    match wire_json {
+        Some(json) => {
+            log.line("\nmetrics JSON (fetched over the wire):");
+            log.line(json);
+        }
+        None => {
+            log.line("\nmetrics JSON (a `metrics` wire request returns the same document):");
+            log.line(server.metrics_json());
+        }
+    }
     let path = log.finish()?;
     println!("(written to {})", path.display());
     Ok(())
+}
+
+/// The demo document set: long-tailed lengths, 4 masked positions each.
+fn demo_docs(seed: u64, n: usize) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed).fold_in(0x5E);
+    let mut gen = CorpusGen::new(CorpusConfig::default(), seed);
+    (0..n)
+        .map(|_| {
+            // mixture: 50% short (≤512), 30% medium, 20% long (>1024)
+            let len = match rng.below(10) {
+                0..=4 => rng.range(64, 512),
+                5..=7 => rng.range(512, 1024),
+                _ => rng.range(1024, 2048),
+            };
+            let mut doc = gen.document(len);
+            for _ in 0..4 {
+                let p = rng.below(len);
+                doc[p] = special::MASK;
+            }
+            doc
+        })
+        .collect()
+}
+
+/// In-process transport: typed requests straight into the server.
+fn run_local_workload(server: &Arc<Server>, seed: u64, n: usize) -> Result<Vec<Response>> {
+    let mut receivers = Vec::new();
+    for doc in demo_docs(seed, n) {
+        receivers.push(server.submit(Request::new(doc))?);
+    }
+    let mut responses = Vec::new();
+    for rx in receivers {
+        responses.push(rx.recv()?);
+    }
+    Ok(responses)
+}
+
+/// Wire transport: the same workload over real TCP through the ingress,
+/// plus an overload burst that exercises typed sheds, plus a metrics
+/// scrape over the wire. Returns the workload responses and the
+/// wire-fetched metrics JSON.
+fn run_wire_workload(
+    log: &mut RunLog,
+    addr: &str,
+    server: &Arc<Server>,
+    seed: u64,
+    n: usize,
+) -> Result<(Vec<Response>, Option<String>)> {
+    let ingress = Ingress::bind(addr, server.clone())?;
+    let bound = ingress.local_addr();
+    log.line(format!("wire ingress: listening on {bound} (framed protocol v{WIRE_VERSION})"));
+
+    // the demo workload, split over concurrent TCP client connections
+    let n_clients = 4usize;
+    let per = n / n_clients;
+    let docs = demo_docs(seed, n);
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let chunk: Vec<Vec<i32>> = docs[c * per..(c + 1) * per].to_vec();
+        handles.push(std::thread::spawn(move || -> Result<Vec<Response>> {
+            let mut cl = WireClient::connect(&bound).context("connecting wire client")?;
+            for (i, doc) in chunk.iter().enumerate() {
+                let id = (c as u64 + 1) * 1000 + i as u64;
+                cl.send(&Request::new(doc.clone()).with_id(id)).context("sending request")?;
+            }
+            let mut out = Vec::new();
+            for _ in 0..chunk.len() {
+                out.push(cl.recv().context("receiving response")?);
+            }
+            Ok(out)
+        }));
+    }
+    let mut responses = Vec::new();
+    for h in handles {
+        responses
+            .extend(h.join().map_err(|_| anyhow::anyhow!("wire client thread panicked"))??);
+    }
+
+    // overload burst: low-priority requests with an already-expired
+    // deadline — every one is answered with a typed Shed over the wire
+    // instead of burning compute (or hanging the connection)
+    let burst = 24u64;
+    let mut greedy = WireClient::connect(&bound).context("connecting burst client")?;
+    let mut gen = CorpusGen::new(CorpusConfig::default(), seed ^ 0xB);
+    for i in 0..burst {
+        let req = Request::new(gen.document(96))
+            .with_id(9000 + i)
+            .with_deadline(Duration::from_micros(1))
+            .with_priority(Priority::Low);
+        greedy.send(&req).context("sending burst request")?;
+    }
+    let (mut shed, mut completed) = (0usize, 0usize);
+    for _ in 0..burst {
+        match greedy.recv().context("receiving burst response")?.outcome {
+            Outcome::Shed { .. } => shed += 1,
+            Outcome::Completed { .. } => completed += 1,
+            Outcome::Error { .. } => {}
+        }
+    }
+    log.line(format!(
+        "overload burst: {burst} past-deadline requests → {shed} typed sheds, \
+         {completed} completed, connection still healthy"
+    ));
+
+    // metrics over the wire: the serialized MetricsSnapshot
+    let json = WireClient::connect(&bound)
+        .context("connecting metrics client")?
+        .metrics()
+        .context("wire metrics request")?;
+    ingress.shutdown();
+    Ok((responses, Some(json)))
 }

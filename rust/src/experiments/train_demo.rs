@@ -15,8 +15,8 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
-use super::common::{corpus_docs, entry_for, geometry, mlm_batch_from_docs, pool, RunLog};
-use crate::cli::Flags;
+use super::common::{corpus_docs, entry_for, geometry, mlm_batch_from_docs, pool_from, RunLog};
+use crate::cli::TrainArgs;
 use crate::config::ModelConfig;
 use crate::kernel::grad::AdamWConfig;
 use crate::runtime::BackendKind;
@@ -28,29 +28,25 @@ pub const DEFAULT_MODEL: &str = "mlm_bigbird_itc_s512_b4";
 /// Default checkpoint path for the native training flow.
 pub const DEFAULT_NATIVE_CKPT: &str = "runs/native_mlm.ckpt";
 
-pub fn run(flags: &Flags) -> Result<()> {
-    if flags.backends.iter().any(|b| b.kind == BackendKind::Native) {
-        return run_native(flags);
+pub fn run(args: &TrainArgs) -> Result<()> {
+    if args.backends.iter().any(|b| b.kind == BackendKind::Native) {
+        return run_native(args);
     }
-    let model = flags
-        .positional
-        .first()
-        .map(|s| s.as_str())
-        .unwrap_or(DEFAULT_MODEL);
-    let pool = pool(flags)?;
+    let model = args.model.as_deref().unwrap_or(DEFAULT_MODEL);
+    let pool = pool_from(&args.artifacts)?;
     let mut log = RunLog::new("train_demo");
     log.line(format!(
         "MLM pretraining: model {model}, {} steps, seed {}\n",
-        flags.steps, flags.seed
+        args.steps, args.seed
     ));
     let e = entry_for(pool.manifest(), model)?;
     let g = geometry(e)?;
-    let docs = corpus_docs(g.vocab, 64, 4096, flags.seed);
+    let docs = corpus_docs(g.vocab, 64, 4096, args.seed);
     let mut driver = TrainDriver::new(&pool, model)?;
-    let mut rng = Rng::new(flags.seed).fold_in(0x17);
+    let mut rng = Rng::new(args.seed).fold_in(0x17);
     let tlog = driver.run(
-        flags.steps,
-        (flags.steps / 20).max(1),
+        args.steps,
+        (args.steps / 20).max(1),
         |_| mlm_batch_from_docs(&docs, g, &mut rng),
         |p| println!("step {:>5}  loss {:.4}  ({:.0} ms/step)", p.step, p.loss, p.ms_per_step),
     )?;
@@ -84,13 +80,13 @@ pub fn run(flags: &Flags) -> Result<()> {
 /// The artifact-free native pretraining driver: train, gate on the
 /// smoothed loss trend, checkpoint, and verify the checkpoint
 /// round-trips bit-exactly.
-fn run_native(flags: &Flags) -> Result<()> {
+fn run_native(args: &TrainArgs) -> Result<()> {
     let mut log = RunLog::new("train_native");
     let mut cfg = ModelConfig::native_train();
-    cfg.precision = flags.precision;
-    if !flags.config.is_empty() {
+    cfg.precision = args.precision;
+    if !args.config.is_empty() {
         // `--config precision=...` wins over `--precision` (overrides last)
-        cfg = crate::config::apply_overrides(cfg, &flags.config)?;
+        cfg = crate::config::apply_overrides(cfg, &args.config)?;
     }
     let ocfg = AdamWConfig::default();
     let mut trainer = NativeTrainer::new(cfg.clone(), ocfg)?;
@@ -99,8 +95,8 @@ fn run_native(flags: &Flags) -> Result<()> {
          batch {} × seq {}, forward GEMMs {} (master weights + grads f32), lr {} \
          (warmup {}), clip {}\n",
         trainer.model().param_count(),
-        flags.steps,
-        flags.seed,
+        args.steps,
+        args.seed,
         cfg.batch,
         cfg.seq_len,
         cfg.precision.as_str(),
@@ -108,12 +104,12 @@ fn run_native(flags: &Flags) -> Result<()> {
         ocfg.warmup_steps,
         ocfg.clip_norm
     ));
-    let docs = crate::train::synthetic_docs(cfg.vocab, 64, 4096, flags.seed);
-    let mut rng = Rng::new(flags.seed).fold_in(0x17);
+    let docs = crate::train::synthetic_docs(cfg.vocab, 64, 4096, args.seed);
+    let mut rng = Rng::new(args.seed).fold_in(0x17);
     let batch_cfg = cfg.clone();
     let tlog = trainer.run(
-        flags.steps,
-        (flags.steps / 20).max(1),
+        args.steps,
+        (args.steps / 20).max(1),
         |_| Ok(synthetic_mlm_batch(&docs, &batch_cfg, &mut rng)),
         |p| println!("step {:>5}  loss {:.4}  ({:.0} ms/step)", p.step, p.loss, p.ms_per_step),
     )?;
@@ -128,7 +124,7 @@ fn run_native(flags: &Flags) -> Result<()> {
         // the falling-loss gate the CI smoke job relies on: real
         // optimisation must beat the starting point once warmup has had
         // a chance to bite
-        if flags.steps >= 20 {
+        if args.steps >= 20 {
             anyhow::ensure!(
                 last < first,
                 "smoothed MLM loss is not trending down: {first:.4} → {last:.4}"
@@ -139,7 +135,7 @@ fn run_native(flags: &Flags) -> Result<()> {
 
     // checkpoint, then prove the round trip is bit-exact
     let ckpt = PathBuf::from(
-        flags.checkpoint.clone().unwrap_or_else(|| DEFAULT_NATIVE_CKPT.to_string()),
+        args.checkpoint.clone().unwrap_or_else(|| DEFAULT_NATIVE_CKPT.to_string()),
     );
     if let Some(dir) = ckpt.parent() {
         if !dir.as_os_str().is_empty() {

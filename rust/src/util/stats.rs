@@ -1,4 +1,8 @@
-//! Summary statistics used by the benchmark harness and experiment tables.
+//! Summary statistics used by the benchmark harness and experiment tables,
+//! plus the streaming [`Reservoir`] sampler the serving metrics use for
+//! latency percentiles under unbounded request streams.
+
+use crate::util::Rng;
 
 /// Mean of a slice (0.0 for empty).
 pub fn mean(xs: &[f64]) -> f64 {
@@ -39,6 +43,80 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
 /// Median (50th percentile).
 pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
+}
+
+/// Bounded-memory streaming sample for percentile estimation (Vitter's
+/// Algorithm R). The serving metrics must track p50/p95/p99 latency over
+/// an unbounded request stream with **flat** memory — a growing
+/// `Vec<f64>` of every latency is exactly the kind of hidden unbounded
+/// queue the admission-control work exists to eliminate. A reservoir of
+/// `cap` samples is an unbiased uniform sample of everything ever
+/// pushed: exact percentiles while `count <= cap`, tight estimates
+/// after. The driving RNG is the repo's deterministic [`Rng`], so
+/// metric snapshots are reproducible for a fixed request order.
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    sum: f64,
+    buf: Vec<f64>,
+    rng: Rng,
+}
+
+impl Reservoir {
+    /// Reservoir keeping at most `cap` samples (`cap >= 1`).
+    pub fn new(cap: usize, seed: u64) -> Self {
+        assert!(cap >= 1, "reservoir needs capacity >= 1");
+        Reservoir { cap, seen: 0, sum: 0.0, buf: Vec::new(), rng: Rng::new(seed) }
+    }
+
+    /// Record one observation.
+    pub fn push(&mut self, v: f64) {
+        self.seen += 1;
+        self.sum += v;
+        if self.buf.len() < self.cap {
+            self.buf.push(v);
+        } else {
+            // replace a random slot with probability cap/seen: every
+            // element of the stream ends up retained equiprobably
+            let j = self.rng.below(self.seen as usize);
+            if j < self.cap {
+                self.buf[j] = v;
+            }
+        }
+    }
+
+    /// Total observations pushed (not the retained sample size).
+    pub fn count(&self) -> u64 {
+        self.seen
+    }
+
+    /// True when nothing has been pushed.
+    pub fn is_empty(&self) -> bool {
+        self.seen == 0
+    }
+
+    /// Exact running mean over **all** pushed observations.
+    pub fn mean(&self) -> f64 {
+        if self.seen == 0 {
+            0.0
+        } else {
+            self.sum / self.seen as f64
+        }
+    }
+
+    /// Percentile estimate from the retained sample (`p` in [0,100]);
+    /// exact while `count() <= cap`.
+    pub fn percentile(&self, p: f64) -> f64 {
+        percentile(&self.buf, p)
+    }
+
+    /// Drop all state (the capacity and RNG stream are kept).
+    pub fn clear(&mut self) {
+        self.seen = 0;
+        self.sum = 0.0;
+        self.buf.clear();
+    }
 }
 
 /// Ordinary least squares fit `y = a + b x`; returns `(a, b, r2)`.
@@ -82,6 +160,43 @@ mod tests {
         assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
         assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
         assert!((median(&xs) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reservoir_is_exact_below_capacity() {
+        let mut r = Reservoir::new(128, 9);
+        assert!(r.is_empty());
+        assert_eq!(r.percentile(50.0), 0.0, "empty reservoir reports 0");
+        for i in 0..100 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.count(), 100);
+        assert!((r.mean() - 49.5).abs() < 1e-12);
+        // below capacity the estimate is the exact percentile
+        assert!((r.percentile(50.0) - 49.5).abs() < 1e-9);
+        assert!((r.percentile(99.0) - 98.01).abs() < 1e-9);
+        r.clear();
+        assert!(r.is_empty());
+        assert_eq!(r.mean(), 0.0);
+    }
+
+    #[test]
+    fn reservoir_estimates_after_overflow() {
+        // 20k uniform draws through a 512-slot reservoir: the quantile
+        // estimates must land within a few percent of truth, and the
+        // mean stays exact (running sum, not sampled)
+        let mut r = Reservoir::new(512, 3);
+        for i in 0..20_000u64 {
+            // bit-mixed ordering so the stream isn't sorted
+            let v = (i.wrapping_mul(2654435761) % 10_000) as f64;
+            r.push(v);
+        }
+        assert_eq!(r.count(), 20_000);
+        assert!((r.mean() - 4999.5).abs() < 20.0, "{}", r.mean());
+        for (p, want) in [(50.0, 5000.0), (95.0, 9500.0), (99.0, 9900.0)] {
+            let got = r.percentile(p);
+            assert!((got - want).abs() < 500.0, "p{p}: got {got}, want ~{want}");
+        }
     }
 
     #[test]

@@ -7,7 +7,8 @@ use std::time::{Duration, Instant};
 
 use bigbird::config::ServingConfig;
 use bigbird::coordinator::{
-    Batcher, BatcherConfig, Bucket, EnginePool, PendingRequest, PoolJob, Server, ServerConfig,
+    Batcher, BatcherConfig, Bucket, EnginePool, PendingRequest, PoolJob, Request, Server,
+    ServerConfig,
 };
 use bigbird::runtime::{parse_backend_specs, BackendKind, JobShape, Manifest};
 use bigbird::tokenizer::special;
@@ -46,18 +47,18 @@ fn serve_fill_mask_end_to_end() {
             tokens[p] = special::MASK;
         }
         mask_counts.push(tokens.iter().filter(|&&t| t == special::MASK).count());
-        rxs.push(server.submit(tokens).unwrap());
+        rxs.push(server.submit(Request::new(tokens)).unwrap());
     }
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx
             .recv_timeout(Duration::from_secs(600))
             .expect("response within deadline");
         assert_eq!(
-            resp.predictions.len(),
+            resp.predictions().len(),
             mask_counts[i],
             "one prediction per mask position"
         );
-        for &(pos, tok) in &resp.predictions {
+        for &(pos, tok) in resp.predictions() {
             assert!(pos < 2048);
             assert!((0..512).contains(&tok), "prediction {tok} out of vocab");
         }
@@ -82,12 +83,12 @@ fn oversized_requests_are_truncated_not_dropped() {
     let mut tokens: Vec<i32> = vec![7; 4000];
     tokens[10] = special::MASK;
     tokens[3999] = special::MASK; // beyond every bucket
-    let rx = server.submit(tokens).unwrap();
+    let rx = server.submit(Request::new(tokens)).unwrap();
     let resp = rx.recv_timeout(Duration::from_secs(600)).unwrap();
-    assert!(resp.truncated);
+    assert!(resp.truncated());
     // only the in-window mask produced a prediction
-    assert_eq!(resp.predictions.len(), 1);
-    assert_eq!(resp.predictions[0].0, 10);
+    assert_eq!(resp.predictions().len(), 1);
+    assert_eq!(resp.predictions()[0].0, 10);
     let m = server.metrics();
     assert_eq!(m.truncated, 1);
     server.shutdown();
@@ -132,13 +133,13 @@ fn concurrent_clients_multi_worker_no_crosswiring() {
                     let len = if (k + c as usize) % 2 == 0 { 400 } else { 1500 };
                     let n_masks = 1 + (c as usize * 6 + k) % 4;
                     let (tokens, positions) = request_with_masks(&mut rng, len, n_masks);
-                    let rx = server.submit(tokens).unwrap();
+                    let rx = server.submit(Request::new(tokens)).unwrap();
                     let resp = rx
                         .recv_timeout(Duration::from_secs(600))
                         .expect("response not lost");
-                    let got: Vec<usize> = resp.predictions.iter().map(|p| p.0).collect();
+                    let got: Vec<usize> = resp.predictions().iter().map(|p| p.0).collect();
                     assert_eq!(got, positions, "client {c} req {k}: response cross-wired");
-                    assert!(!resp.truncated);
+                    assert!(!resp.truncated());
                     assert!(
                         rx.try_recv().is_err(),
                         "client {c} req {k}: duplicate response"
@@ -179,7 +180,7 @@ fn single_worker_pool_is_fifo_and_deterministic() {
     let mut rxs = Vec::new();
     for _ in 0..8 {
         let (tokens, _) = request_with_masks(&mut rng, 300, 2);
-        rxs.push(server.submit(tokens).unwrap());
+        rxs.push(server.submit(Request::new(tokens)).unwrap());
     }
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv_timeout(Duration::from_secs(600)).expect("response");
@@ -189,16 +190,16 @@ fn single_worker_pool_is_fifo_and_deterministic() {
     // determinism: identical request → identical predictions
     let (tokens, _) = request_with_masks(&mut rng, 300, 3);
     let first = server
-        .submit(tokens.clone())
+        .submit(Request::new(tokens.clone()))
         .unwrap()
         .recv_timeout(Duration::from_secs(600))
         .unwrap();
     let second = server
-        .submit(tokens)
+        .submit(Request::new(tokens))
         .unwrap()
         .recv_timeout(Duration::from_secs(600))
         .unwrap();
-    assert_eq!(first.predictions, second.predictions);
+    assert_eq!(first.predictions(), second.predictions());
     let m = server.metrics();
     assert_eq!(m.errors, 0, "{m:?}");
     server.shutdown();
@@ -282,10 +283,10 @@ fn dispatch_order_is_fifo_within_bucket_under_inflight_cap() {
     );
     let t = Instant::now();
     for id in 0..12u64 {
-        b.push(PendingRequest { id, tokens: vec![1; 300], enqueued: t });
+        b.push(PendingRequest { id, tokens: vec![1; 300], enqueued: t, deadline: None });
     }
     for id in 100..105u64 {
-        b.push(PendingRequest { id, tokens: vec![1; 1800], enqueued: t });
+        b.push(PendingRequest { id, tokens: vec![1; 1800], enqueued: t, deadline: None });
     }
     let later = t + Duration::from_millis(1);
     let mut short_ids = Vec::new();

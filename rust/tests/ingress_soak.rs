@@ -1,0 +1,342 @@
+//! Ingress soak: concurrent TCP clients against a live native server.
+//!
+//! The CI-sized tier proves the serving contract under concurrency and
+//! overload — per-client FIFO responses, typed sheds delivered
+//! *promptly* (not after the backlog drains), queue memory bounded by
+//! `max_queue`, and one greedy pipelining client unable to crowd a
+//! polite one out. The `#[ignore]` tier scales the same assertions to a
+//! mixed-priority overload with a live latency budget; run it with
+//! `cargo test --release --test ingress_soak -- --ignored`.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use bigbird::config::ServingConfig;
+use bigbird::coordinator::{
+    json_num_field, BatcherConfig, Ingress, Priority, Request, Response, Server, ServerConfig,
+    ShedReason, WireClient,
+};
+use bigbird::tokenizer::special;
+use bigbird::util::Rng;
+
+/// Artifact-free native server. `max_inflight: 1` serializes batches
+/// *within* each bucket (workers still parallelize across buckets), so
+/// a client that sticks to one length class must see its completions in
+/// submission order — the property the FIFO assertions lean on.
+fn native_cfg(workers: usize, max_inflight: usize) -> ServerConfig {
+    let mut cfg = ServerConfig::mlm_default("definitely-missing-artifact-dir");
+    cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(2), ..Default::default() };
+    cfg.serving = ServingConfig::native(workers, max_inflight);
+    cfg
+}
+
+fn masked_tokens(rng: &mut Rng, len: usize) -> Vec<i32> {
+    let mut tokens: Vec<i32> = (0..len).map(|_| 6 + rng.below(500) as i32).collect();
+    tokens[len / 2] = special::MASK;
+    tokens
+}
+
+fn wait_drained(server: &Server) {
+    let deadline = Instant::now() + Duration::from_secs(600);
+    while server.outstanding() != 0 {
+        assert!(
+            Instant::now() < deadline,
+            "admission slots leaked: {} still outstanding",
+            server.outstanding()
+        );
+        thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Pipeline `reqs` down one connection, then read one response each.
+/// Returns responses in arrival order.
+fn pipeline(addr: std::net::SocketAddr, reqs: Vec<Request>) -> Vec<Response> {
+    let mut cl = WireClient::connect(&addr).expect("connect");
+    let n = reqs.len();
+    for r in &reqs {
+        cl.send(r).expect("send");
+    }
+    (0..n).map(|i| cl.recv().unwrap_or_else(|e| panic!("recv {i}: {e}"))).collect()
+}
+
+fn assert_ids_increasing(label: &str, ids: &[u64]) {
+    for w in ids.windows(2) {
+        assert!(w[0] < w[1], "{label}: response ids out of order: {ids:?}");
+    }
+}
+
+#[test]
+fn concurrent_clients_complete_with_per_client_fifo() {
+    let server = Arc::new(Server::start(native_cfg(2, 1)).expect("native server"));
+    server.warmup(&[128, 256]).expect("native warmup");
+    let ingress = Ingress::bind("127.0.0.1:0", server.clone()).expect("bind ephemeral");
+    let addr = ingress.local_addr();
+
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 12;
+    // one length class per client → one bucket per client → FIFO
+    const LENS: [usize; CLIENTS] = [100, 200, 130, 250];
+
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            thread::spawn(move || {
+                let mut rng = Rng::new(100 + c as u64);
+                let reqs: Vec<Request> = (1..=PER_CLIENT as u64)
+                    .map(|i| {
+                        Request::new(masked_tokens(&mut rng, LENS[c]))
+                            .with_id((c as u64 + 1) * 1000 + i)
+                    })
+                    .collect();
+                let sent: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+                let resps = pipeline(addr, reqs);
+                let got: Vec<u64> = resps.iter().map(|r| r.id).collect();
+                assert_eq!(got, sent, "client {c}: responses must arrive in submission order");
+                for r in &resps {
+                    assert!(r.is_completed(), "client {c}: unexpected outcome {:?}", r.outcome);
+                    assert!(!r.predictions().is_empty(), "client {c}: empty predictions");
+                    assert!(r.latency_ms > 0.0);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread");
+    }
+
+    wait_drained(&server);
+    let m = server.metrics();
+    assert_eq!(m.requests, CLIENTS * PER_CLIENT);
+    assert_eq!(m.admitted, CLIENTS * PER_CLIENT);
+    assert_eq!(m.shed, 0);
+    assert_eq!(m.errors, 0);
+    // per-connection accounting: every wire client shows up under its
+    // peer address with a balanced ledger
+    assert_eq!(m.clients.len(), CLIENTS, "one stats row per connection: {:?}", m.clients);
+    for c in &m.clients {
+        assert_eq!(c.admitted, PER_CLIENT, "client {}: {c:?}", c.client);
+        assert_eq!(c.completed, PER_CLIENT);
+        assert_eq!(c.shed, 0);
+        assert_eq!(c.errors, 0);
+    }
+    ingress.shutdown();
+}
+
+/// Hard queue bound under a 64-deep pipelined burst: sheds are typed
+/// `QueueFull`, arrive *before* the backlog finishes computing (the
+/// whole point of shedding at the door), and `peak_outstanding` proves
+/// queue memory never exceeded `max_queue`.
+#[test]
+fn overload_sheds_queue_full_promptly_and_bounds_memory() {
+    const MAX_QUEUE: usize = 8;
+    const BURST: usize = 64;
+    let mut cfg = native_cfg(2, 2);
+    cfg.admission.max_queue = MAX_QUEUE;
+    let server = Arc::new(Server::start(cfg).expect("native server"));
+    server.warmup(&[128]).expect("native warmup");
+    let ingress = Ingress::bind("127.0.0.1:0", server.clone()).expect("bind ephemeral");
+
+    let mut rng = Rng::new(7);
+    let reqs: Vec<Request> = (1..=BURST as u64)
+        .map(|i| Request::new(masked_tokens(&mut rng, 100)).with_id(i))
+        .collect();
+    let resps = pipeline(ingress.local_addr(), reqs);
+    assert_eq!(resps.len(), BURST);
+
+    let mut completed_ids = Vec::new();
+    let mut shed_ids = Vec::new();
+    let mut first_shed_idx = None;
+    let mut last_completed_idx = 0usize;
+    for (i, r) in resps.iter().enumerate() {
+        if r.is_completed() {
+            completed_ids.push(r.id);
+            last_completed_idx = i;
+        } else {
+            let reason = r.shed_reason().unwrap_or_else(|| panic!("untyped outcome {:?}", r.outcome));
+            assert_eq!(reason, ShedReason::QueueFull, "only the hard bound should fire");
+            shed_ids.push(r.id);
+            first_shed_idx.get_or_insert(i);
+        }
+    }
+    assert!(!completed_ids.is_empty(), "some of the burst must complete");
+    assert!(!shed_ids.is_empty(), "a 64-deep burst into max_queue=8 must shed");
+    // promptness: the first shed answer beats the last completion home —
+    // sheds are answered at the door, not queued behind the backlog
+    assert!(
+        first_shed_idx.unwrap() < last_completed_idx,
+        "sheds must not wait for the backlog (first shed at {:?}, last completion at {})",
+        first_shed_idx,
+        last_completed_idx
+    );
+    // the answer stream stays ordered within each outcome class
+    assert_ids_increasing("completed", &completed_ids);
+    assert_ids_increasing("shed", &shed_ids);
+
+    wait_drained(&server);
+    let m = server.metrics();
+    assert!(
+        m.peak_outstanding <= MAX_QUEUE,
+        "queue memory must stay bounded: peak {} > max_queue {MAX_QUEUE}",
+        m.peak_outstanding
+    );
+    assert_eq!(m.requests, completed_ids.len());
+    assert_eq!(m.shed, shed_ids.len());
+    assert_eq!(m.admitted, m.requests, "door sheds are never admitted");
+    assert_eq!(m.requests + m.shed, BURST);
+    ingress.shutdown();
+}
+
+/// One greedy pipelining client is capped at `max_client_inflight`
+/// (typed `ClientLimit` sheds) while a concurrent polite client on its
+/// own connection completes everything.
+#[test]
+fn greedy_client_is_capped_while_polite_client_completes() {
+    const CAP: usize = 4;
+    let mut cfg = native_cfg(2, 2);
+    cfg.admission.max_client_inflight = CAP;
+    let server = Arc::new(Server::start(cfg).expect("native server"));
+    server.warmup(&[128]).expect("native warmup");
+    let ingress = Ingress::bind("127.0.0.1:0", server.clone()).expect("bind ephemeral");
+    let addr = ingress.local_addr();
+
+    let greedy = thread::spawn(move || {
+        let mut rng = Rng::new(11);
+        let reqs: Vec<Request> = (1..=32u64)
+            .map(|i| Request::new(masked_tokens(&mut rng, 100)).with_id(i))
+            .collect();
+        pipeline(addr, reqs)
+    });
+    let polite = thread::spawn(move || {
+        let mut rng = Rng::new(13);
+        let mut cl = WireClient::connect(&addr).expect("connect");
+        (1..=CAP as u64)
+            .map(|i| {
+                let req = Request::new(masked_tokens(&mut rng, 100)).with_id(900 + i);
+                cl.infer(&req).expect("polite infer")
+            })
+            .collect::<Vec<Response>>()
+    });
+
+    let greedy_resps = greedy.join().expect("greedy thread");
+    let polite_resps = polite.join().expect("polite thread");
+
+    // the polite client never pays for the greedy one
+    assert_eq!(polite_resps.len(), CAP);
+    for r in &polite_resps {
+        assert!(r.is_completed(), "polite client shed: {:?}", r.outcome);
+    }
+
+    let completed = greedy_resps.iter().filter(|r| r.is_completed()).count();
+    let shed: Vec<&Response> = greedy_resps.iter().filter(|r| !r.is_completed()).collect();
+    assert!(completed >= CAP, "the first {CAP} greedy requests were admitted");
+    assert!(!shed.is_empty(), "a 32-deep pipeline into a cap of {CAP} must shed");
+    for r in &shed {
+        assert_eq!(
+            r.shed_reason(),
+            Some(ShedReason::ClientLimit),
+            "greedy sheds must be typed ClientLimit: {:?}",
+            r.outcome
+        );
+    }
+
+    wait_drained(&server);
+    let m = server.metrics();
+    let by_reason: Vec<(&str, usize)> =
+        m.shed_by_reason.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    assert!(
+        by_reason.iter().any(|&(k, v)| k == "client_limit" && v == shed.len()),
+        "shed_by_reason must account every ClientLimit shed: {by_reason:?}"
+    );
+    ingress.shutdown();
+}
+
+/// Full-tier soak: six concurrent clients, a live latency budget, and a
+/// high-priority client that must never be shed `Overloaded`. Scaled-up
+/// FIFO/accounting/bounded-memory assertions; `#[ignore]` so the CI
+/// smoke job stays fast.
+#[test]
+#[ignore]
+fn soak_mixed_priority_overload_full_tier() {
+    const CLIENTS: usize = 6;
+    const PER_CLIENT: usize = 32;
+    const MAX_QUEUE: usize = 32;
+    const LENS: [usize; CLIENTS] = [100, 200, 130, 250, 90, 180];
+
+    let mut cfg = native_cfg(2, 1);
+    cfg.admission.max_queue = MAX_QUEUE;
+    cfg.admission.latency_budget_ms = Some(4.0);
+    cfg.admission.pressure_floor = 4;
+    cfg.admission.max_client_inflight = 16;
+    let server = Arc::new(Server::start(cfg).expect("native server"));
+    server.warmup(&[128, 256]).expect("native warmup");
+    let ingress = Ingress::bind("127.0.0.1:0", server.clone()).expect("bind ephemeral");
+    let addr = ingress.local_addr();
+
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            thread::spawn(move || {
+                let mut rng = Rng::new(500 + c as u64);
+                // client 0 is latency-critical: budget sheds must skip it
+                let prio = if c == 0 { Priority::High } else { Priority::Normal };
+                let reqs: Vec<Request> = (1..=PER_CLIENT as u64)
+                    .map(|i| {
+                        Request::new(masked_tokens(&mut rng, LENS[c]))
+                            .with_id((c as u64 + 1) * 1000 + i)
+                            .with_priority(prio)
+                    })
+                    .collect();
+                let resps = pipeline(addr, reqs);
+                assert_eq!(resps.len(), PER_CLIENT, "client {c}: lost answers");
+                let completed: Vec<u64> =
+                    resps.iter().filter(|r| r.is_completed()).map(|r| r.id).collect();
+                assert_ids_increasing(&format!("client {c} completed"), &completed);
+                let mut sheds = 0usize;
+                for r in &resps {
+                    match r.shed_reason() {
+                        None => assert!(
+                            r.is_completed(),
+                            "client {c}: untyped outcome {:?}",
+                            r.outcome
+                        ),
+                        Some(reason) => {
+                            sheds += 1;
+                            if c == 0 {
+                                assert_ne!(
+                                    reason,
+                                    ShedReason::Overloaded,
+                                    "high-priority client must bypass the budget shed"
+                                );
+                            }
+                        }
+                    }
+                }
+                (completed.len(), sheds)
+            })
+        })
+        .collect();
+    let mut total_completed = 0usize;
+    let mut total_shed = 0usize;
+    for h in handles {
+        let (c, s) = h.join().expect("soak client");
+        total_completed += c;
+        total_shed += s;
+    }
+    assert_eq!(total_completed + total_shed, CLIENTS * PER_CLIENT);
+    assert!(total_completed > 0, "the soak must make forward progress");
+
+    wait_drained(&server);
+    let m = server.metrics();
+    assert_eq!(m.requests, total_completed);
+    assert_eq!(m.shed, total_shed);
+    assert!(m.peak_outstanding <= MAX_QUEUE, "peak {} > {MAX_QUEUE}", m.peak_outstanding);
+    assert_eq!(m.errors, 0);
+    if m.requests > 0 {
+        assert!(m.p50_ms <= m.p95_ms && m.p95_ms <= m.p99_ms, "percentiles must be ordered");
+    }
+
+    // the wire metrics view agrees with the in-process snapshot
+    let json = WireClient::connect(&addr).unwrap().metrics().expect("wire metrics");
+    assert_eq!(json_num_field(&json, "requests"), Some(m.requests as f64));
+    assert_eq!(json_num_field(&json, "shed"), Some(m.shed as f64));
+    ingress.shutdown();
+}

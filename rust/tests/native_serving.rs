@@ -7,7 +7,7 @@
 use std::time::Duration;
 
 use bigbird::config::{ModelConfig, ServingConfig};
-use bigbird::coordinator::{BatcherConfig, Server, ServerConfig};
+use bigbird::coordinator::{BatcherConfig, Request, Server, ServerConfig};
 use bigbird::tokenizer::special;
 use bigbird::util::Rng;
 
@@ -51,33 +51,33 @@ fn native_pool_serves_real_forward_passes_without_artifacts() {
         let n_masks = 1 + i % 3;
         let (tokens, positions) = masked_request(&mut rng, len, n_masks);
         expected.push(positions);
-        rxs.push(server.submit(tokens).unwrap());
+        rxs.push(server.submit(Request::new(tokens)).unwrap());
     }
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv_timeout(Duration::from_secs(600)).expect("response");
-        let got: Vec<usize> = resp.predictions.iter().map(|p| p.0).collect();
+        let got: Vec<usize> = resp.predictions().iter().map(|p| p.0).collect();
         assert_eq!(got, expected[i], "request {i}: wrong mask positions");
-        for &(_, tok) in &resp.predictions {
+        for &(_, tok) in resp.predictions() {
             assert!((0..vocab).contains(&tok), "prediction {tok} outside native vocab");
         }
-        assert!(!resp.truncated);
+        assert!(!resp.truncated());
     }
 
     // determinism: identical tokens → identical predictions (the native
     // params are deterministic and shared across workers)
     let (tokens, _) = masked_request(&mut rng, 150, 3);
     let first = server
-        .submit(tokens.clone())
+        .submit(Request::new(tokens.clone()))
         .unwrap()
         .recv_timeout(Duration::from_secs(600))
         .unwrap();
     let second = server
-        .submit(tokens)
+        .submit(Request::new(tokens))
         .unwrap()
         .recv_timeout(Duration::from_secs(600))
         .unwrap();
-    assert_eq!(first.predictions, second.predictions, "native compute must be deterministic");
-    assert!(!first.predictions.is_empty(), "masks must produce predictions");
+    assert_eq!(first.predictions(), second.predictions(), "native compute must be deterministic");
+    assert!(!first.predictions().is_empty(), "masks must produce predictions");
 
     let m = server.metrics();
     assert_eq!(m.errors, 0, "{m:?}");
@@ -118,11 +118,11 @@ fn mixed_native_cpu_pool_serves_native_buckets() {
     let mut rxs = Vec::new();
     for _ in 0..8 {
         let (tokens, _) = masked_request(&mut rng, 100, 2);
-        rxs.push(server.submit(tokens).unwrap());
+        rxs.push(server.submit(Request::new(tokens)).unwrap());
     }
     for rx in rxs {
         let resp = rx.recv_timeout(Duration::from_secs(600)).expect("response");
-        assert_eq!(resp.predictions.len(), 2);
+        assert_eq!(resp.predictions().len(), 2);
     }
     let m = server.metrics();
     assert_eq!(m.errors, 0, "{m:?}");

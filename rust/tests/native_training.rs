@@ -13,7 +13,7 @@ use std::time::Duration;
 
 use bigbird::attention::PatternSpec;
 use bigbird::config::{AttnVariant, ModelConfig, ServingConfig};
-use bigbird::coordinator::{BatcherConfig, Server, ServerConfig};
+use bigbird::coordinator::{BatcherConfig, Request, Server, ServerConfig};
 use bigbird::kernel::grad::{
     backward, forward_tape, masked_xent, sparse_attention_backward, AdamWConfig, AttnGradScratch,
     ParamGrads,
@@ -437,7 +437,7 @@ fn checkpoint_roundtrips_into_native_serving() {
         .expect("server with native checkpoint");
     server.warmup(&[128]).unwrap();
     let resp = server
-        .submit(req.clone())
+        .submit(Request::new(req.clone()))
         .unwrap()
         .recv_timeout(Duration::from_secs(600))
         .expect("response");
@@ -454,19 +454,19 @@ fn checkpoint_roundtrips_into_native_serving() {
     }
     let logits = served.forward(&padded, Some(&padded_kv), bucket_b, s).unwrap();
     let want = decode::mask_predictions(&logits, 0, s, serve_cfg.vocab, &req, special::MASK);
-    assert_eq!(resp.predictions, want, "server must serve the trained weights");
+    assert_eq!(resp.predictions(), &want[..], "server must serve the trained weights");
 
     // the seed-weight server answers differently on at least one mask
     let seed_server = Server::start(serving_server(1, None)).unwrap();
     seed_server.warmup(&[128]).unwrap();
     let seed_resp = seed_server
-        .submit(req)
+        .submit(Request::new(req))
         .unwrap()
         .recv_timeout(Duration::from_secs(600))
         .expect("seed response");
     seed_server.shutdown();
     assert_ne!(
-        resp.predictions, seed_resp.predictions,
+        resp.predictions(), seed_resp.predictions(),
         "trained-checkpoint predictions must differ from the seed model's"
     );
 

@@ -1,0 +1,270 @@
+//! Wire-codec hardening: property/fuzz round-trips for the framed
+//! request/response encoding, hostile-input rejection (truncation at
+//! every byte boundary, oversized length prefixes, bad version bytes),
+//! and live-ingress abuse — mid-frame disconnects and protocol
+//! violations must drop the *connection*, never the process, and must
+//! never leak an admission slot.
+
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use bigbird::config::ServingConfig;
+use bigbird::coordinator::wire::{
+    self, FRAME_INFER_REQUEST, MAX_FRAME, WIRE_VERSION,
+};
+use bigbird::coordinator::{
+    json_num_field, BatcherConfig, Ingress, Outcome, Priority, Request, Response, Server,
+    ServerConfig, ShedReason, WireClient,
+};
+use bigbird::tokenizer::special;
+use bigbird::util::Rng;
+
+fn random_request(rng: &mut Rng) -> Request {
+    let n = rng.below(64);
+    let tokens: Vec<i32> = (0..n).map(|_| rng.below(1 << 20) as i32 - (1 << 19)).collect();
+    let mut req = Request::new(tokens).with_id(rng.below(1 << 30) as u64);
+    if rng.below(2) == 1 {
+        req = req.with_deadline(Duration::from_millis(1 + rng.below(10_000) as u64));
+    }
+    req.with_priority(match rng.below(3) {
+        0 => Priority::Low,
+        1 => Priority::Normal,
+        _ => Priority::High,
+    })
+}
+
+fn random_response(rng: &mut Rng) -> Response {
+    let outcome = match rng.below(3) {
+        0 => {
+            let n = rng.below(32);
+            let predictions: Vec<(usize, i32)> =
+                (0..n).map(|_| (rng.below(4096), rng.below(1 << 16) as i32)).collect();
+            Outcome::Completed { predictions, truncated: rng.below(2) == 1 }
+        }
+        1 => {
+            let reason = ShedReason::all()[rng.below(4)];
+            Outcome::Shed { reason }
+        }
+        _ => {
+            let len = rng.below(80);
+            let message: String =
+                (0..len).map(|_| rng.range(32, 127) as u8 as char).collect();
+            Outcome::Error { message }
+        }
+    };
+    Response {
+        id: rng.below(1 << 30) as u64,
+        outcome,
+        latency_ms: rng.below(1 << 20) as f64 / 7.0,
+    }
+}
+
+#[test]
+fn request_payloads_fuzz_round_trip_and_reject_every_truncation() {
+    let mut rng = Rng::new(0xC0DEC).fold_in(1);
+    for _ in 0..256 {
+        let req = random_request(&mut rng);
+        let enc = wire::encode_request(&req);
+        assert_eq!(wire::decode_request(&enc).unwrap(), req);
+        // every strict prefix must fail cleanly — the strict length
+        // bookkeeping means a cut payload can never alias a valid one
+        for cut in 0..enc.len() {
+            assert!(wire::decode_request(&enc[..cut]).is_err(), "prefix {cut} accepted");
+        }
+        // trailing garbage is rejected too
+        let mut padded = enc.clone();
+        padded.push(0);
+        assert!(wire::decode_request(&padded).is_err());
+    }
+}
+
+#[test]
+fn response_payloads_fuzz_round_trip_and_reject_every_truncation() {
+    let mut rng = Rng::new(0xC0DEC).fold_in(2);
+    for _ in 0..256 {
+        let resp = random_response(&mut rng);
+        let enc = wire::encode_response(&resp);
+        assert_eq!(wire::decode_response(&enc).unwrap(), resp);
+        for cut in 0..enc.len() {
+            assert!(wire::decode_response(&enc[..cut]).is_err(), "prefix {cut} accepted");
+        }
+        let mut padded = enc.clone();
+        padded.push(0);
+        assert!(wire::decode_response(&padded).is_err());
+    }
+}
+
+/// Decoders are total: random mutations and pure garbage may decode to
+/// *something* or fail, but they must never panic or over-allocate.
+#[test]
+fn mutated_and_garbage_bytes_never_panic() {
+    let mut rng = Rng::new(0xC0DEC).fold_in(3);
+    for _ in 0..256 {
+        let req = random_request(&mut rng);
+        let mut enc = wire::encode_request(&req);
+        if !enc.is_empty() {
+            let at = rng.below(enc.len());
+            enc[at] ^= (1 + rng.below(255)) as u8;
+            let _ = wire::decode_request(&enc);
+        }
+        let resp = random_response(&mut rng);
+        let mut enc = wire::encode_response(&resp);
+        let at = rng.below(enc.len());
+        enc[at] ^= (1 + rng.below(255)) as u8;
+        let _ = wire::decode_response(&enc);
+
+        let garbage: Vec<u8> = (0..rng.below(128)).map(|_| rng.below(256) as u8).collect();
+        let _ = wire::decode_request(&garbage);
+        let _ = wire::decode_response(&garbage);
+        let _ = wire::read_frame(&mut &garbage[..]);
+    }
+}
+
+#[test]
+fn framed_io_rejects_truncation_at_every_byte_boundary() {
+    let mut rng = Rng::new(0xC0DEC).fold_in(4);
+    let req = random_request(&mut rng);
+    let payload = wire::encode_request(&req);
+    let mut framed = Vec::new();
+    wire::write_frame(&mut framed, FRAME_INFER_REQUEST, &payload).unwrap();
+
+    // the full frame reads back
+    let frame = wire::read_frame(&mut &framed[..]).unwrap();
+    assert_eq!(frame.ty, FRAME_INFER_REQUEST);
+    assert_eq!(wire::decode_request(&frame.payload).unwrap(), req);
+
+    // a cut before the first byte is a clean close; anywhere later is a
+    // mid-frame disconnect and must surface as Malformed, never a panic
+    assert!(matches!(wire::read_frame(&mut &framed[..0]), Err(wire::WireError::Closed)));
+    for cut in 1..framed.len() {
+        match wire::read_frame(&mut &framed[..cut]) {
+            Err(wire::WireError::Malformed(_)) => {}
+            other => panic!("cut at {cut}: expected Malformed, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn hostile_length_prefixes_and_version_bytes_are_rejected() {
+    // length prefix far beyond the cap: must be refused from the header
+    // alone, before any payload allocation
+    for len in [MAX_FRAME as u32 + 1, u32::MAX] {
+        let mut h = vec![WIRE_VERSION, FRAME_INFER_REQUEST];
+        h.extend_from_slice(&len.to_le_bytes());
+        match wire::read_frame(&mut &h[..]) {
+            Err(wire::WireError::Malformed(m)) => {
+                assert!(m.contains("exceeds cap"), "unexpected message: {m}")
+            }
+            other => panic!("oversized len {len}: got {other:?}"),
+        }
+    }
+    // wrong version byte
+    for v in [0u8, 2, 9, 255] {
+        let h = [v, FRAME_INFER_REQUEST, 0, 0, 0, 0];
+        match wire::read_frame(&mut &h[..]) {
+            Err(wire::WireError::Malformed(m)) => {
+                assert!(m.contains("version"), "unexpected message: {m}")
+            }
+            other => panic!("version {v}: got {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// live ingress under hostile clients
+// ---------------------------------------------------------------------
+
+fn native_cfg(workers: usize) -> ServerConfig {
+    let mut cfg = ServerConfig::mlm_default("definitely-missing-artifact-dir");
+    cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(2), ..Default::default() };
+    cfg.serving = ServingConfig::native(workers, 2);
+    cfg
+}
+
+fn masked_tokens(rng: &mut Rng, len: usize) -> Vec<i32> {
+    let mut tokens: Vec<i32> = (0..len).map(|_| 6 + rng.below(500) as i32).collect();
+    tokens[len / 2] = special::MASK;
+    tokens
+}
+
+fn wait_drained(server: &Server) {
+    let deadline = Instant::now() + Duration::from_secs(600);
+    while server.outstanding() != 0 {
+        assert!(
+            Instant::now() < deadline,
+            "admission slots leaked: {} still outstanding",
+            server.outstanding()
+        );
+        thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Hostile clients — a mid-frame disconnect, a protocol violation on a
+/// connection with an admitted request in flight, and an oversized
+/// length prefix — must each cost only their own connection. The server
+/// keeps serving, counts no engine errors, and every admission slot
+/// drains back to zero.
+#[test]
+fn live_ingress_survives_hostile_clients_without_leaking_slots() {
+    let server = Arc::new(Server::start(native_cfg(1)).expect("native server"));
+    server.warmup(&[128]).expect("native warmup");
+    let ingress = Ingress::bind("127.0.0.1:0", server.clone()).expect("bind ephemeral");
+    let addr = ingress.local_addr();
+    let mut rng = Rng::new(7);
+
+    // 1) mid-frame disconnect: header promises 64 payload bytes, the
+    //    client sends 8 and hangs up
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut partial = vec![WIRE_VERSION, FRAME_INFER_REQUEST];
+        partial.extend_from_slice(&64u32.to_le_bytes());
+        partial.extend_from_slice(&[0u8; 8]);
+        s.write_all(&partial).unwrap();
+    }
+
+    // 2) protocol violation *after* a request was admitted: the reader
+    //    drops the connection on the bad version byte, the router's
+    //    answer hits a dead socket — the slot must still be released
+    {
+        let mut cl = WireClient::connect(&addr).unwrap();
+        cl.send(&Request::new(masked_tokens(&mut rng, 100))).unwrap();
+        cl.stream().write_all(&[9u8, FRAME_INFER_REQUEST, 0, 0, 0, 0]).unwrap();
+        // dropped without ever reading the response
+    }
+
+    // 3) oversized length prefix, then disconnect
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut h = vec![WIRE_VERSION, FRAME_INFER_REQUEST];
+        h.extend_from_slice(&u32::MAX.to_le_bytes());
+        s.write_all(&h).unwrap();
+    }
+
+    // the server still answers fresh, well-behaved connections
+    let mut cl = WireClient::connect(&addr).unwrap();
+    let resp = cl
+        .infer(&Request::new(masked_tokens(&mut rng, 80)).with_id(5))
+        .expect("server must survive hostile peers");
+    assert_eq!(resp.id, 5);
+    assert!(resp.is_completed(), "expected a completed forward pass, got {:?}", resp.outcome);
+    assert!(!resp.predictions().is_empty());
+
+    // ...including the metrics request path
+    let json = WireClient::connect(&addr).unwrap().metrics().expect("wire metrics");
+    assert!(json_num_field(&json, "requests").is_some(), "metrics JSON missing requests");
+
+    // every admission slot drains; hostile peers count no engine errors
+    wait_drained(&server);
+    let m = server.metrics();
+    assert_eq!(m.errors, 0, "hostile connections must not count as engine errors");
+    assert_eq!(m.shed, 0);
+    assert_eq!(
+        m.admitted, m.requests,
+        "every admitted request must be accounted (admitted {} vs completed {})",
+        m.admitted, m.requests
+    );
+    ingress.shutdown();
+}
