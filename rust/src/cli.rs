@@ -41,6 +41,7 @@ const SERVE_FLAGS: &[&str] = &[
     "--listen",
     "--latency-budget-ms",
     "--max-queue",
+    "--trace-out",
 ];
 
 const TRAIN_FLAGS: &[&str] = &[
@@ -128,6 +129,10 @@ pub struct ServeArgs {
     /// `--max-queue <n>`: hard cap on admitted-but-unanswered requests;
     /// past it requests shed `queue_full` so memory stays bounded.
     pub max_queue: usize,
+    /// `--trace-out <path>`: enable request-span tracing and kernel
+    /// phase profiling, and write the Chrome trace-event JSON
+    /// (Perfetto-loadable) of the demo workload here on exit.
+    pub trace_out: Option<String>,
 }
 
 impl Default for ServeArgs {
@@ -144,6 +149,7 @@ impl Default for ServeArgs {
             listen: None,
             latency_budget_ms: ad.latency_budget_ms,
             max_queue: ad.max_queue,
+            trace_out: None,
         }
     }
 }
@@ -205,6 +211,9 @@ pub fn parse_serve(args: &[String]) -> Result<ServeArgs> {
                 let v = flag_value(&mut it, "--max-queue", CMD)?;
                 a.max_queue =
                     v.parse().with_context(|| format!("--max-queue expects a count, got {v:?}"))?;
+            }
+            "--trace-out" => {
+                a.trace_out = Some(flag_value(&mut it, "--trace-out", CMD)?.to_string())
             }
             other if other.starts_with("--") => return Err(unknown_flag(CMD, other, SERVE_FLAGS)),
             other => bail!("`serve` takes no positional arguments (got {other:?})"),
@@ -531,6 +540,9 @@ SERVE FLAGS:
   --max-queue <n>        admission control: hard cap on admitted-but-
                          unanswered requests; past it requests shed
                          `queue_full` (default 1024)
+  --trace-out <path>     enable request-span tracing + kernel phase
+                         profiling and write the demo's Chrome
+                         trace-event JSON here (load at ui.perfetto.dev)
 
 TRAIN FLAGS:
   --artifacts <dir>      artifact directory (PJRT path)
@@ -616,16 +628,90 @@ pub fn run(args: &[String]) -> Result<()> {
     }
 }
 
-/// `kernel-probe`: report the per-precision GEMM tile-tuner winners and
-/// the SIMD vectorization probe. With `--assert-simd` it becomes the CI
+/// Run a fixed block-sparse forward + backward + model-GEMM workload
+/// with phase profiling on, and return the per-phase achieved
+/// flop/byte profile. Printed by `kernel-probe` so a SIMD-floor
+/// failure shows *which* phase degraded, not just that the aggregate
+/// ratio fell.
+fn phase_profile_stats() -> Vec<crate::obs::phase::PhaseStat> {
+    use crate::attention::PatternSpec;
+    use crate::config::AttnVariant;
+    use crate::kernel::{
+        model_gemm, sparse_backward_batch, sparse_forward_batch_training, BlockCsr, HeadViews,
+        PackedMat,
+    };
+    use crate::obs::phase;
+    let was = phase::enabled();
+    phase::set_enabled(true);
+    phase::reset();
+    let spec = PatternSpec {
+        variant: AttnVariant::BigBirdItc,
+        nb: 16,
+        global_blocks: 1,
+        window_blocks: 3,
+        random_blocks: 1,
+        seed: 7,
+    };
+    let layout = BlockCsr::compile(&spec, 16);
+    let (batch, heads, d) = (2usize, 4usize, 32usize);
+    let n = layout.seq_len();
+    let vol = batch * heads * n * d;
+    let mut rng = crate::util::Rng::new(17);
+    let q: Vec<f32> = (0..vol).map(|_| rng.normal() as f32).collect();
+    let k: Vec<f32> = (0..vol).map(|_| rng.normal() as f32).collect();
+    let v: Vec<f32> = (0..vol).map(|_| rng.normal() as f32).collect();
+    let x = HeadViews { q: &q, k: &k, v: &v, key_valid: None };
+    let mut o = vec![0.0f32; vol];
+    let mut m = vec![0.0f32; batch * heads * n];
+    let mut l = vec![0.0f32; batch * heads * n];
+    sparse_forward_batch_training(&x, batch, heads, d, &layout, &mut o, &mut m, &mut l);
+    let (mut dq, mut dk, mut dv) =
+        (vec![0.0f32; vol], vec![0.0f32; vol], vec![0.0f32; vol]);
+    sparse_backward_batch(&x, &o, &o, &m, &l, batch, heads, d, &layout, &mut dq, &mut dk, &mut dv);
+    let (gm, gk, gn) = (128usize, 128usize, 128usize);
+    let a: Vec<f32> = (0..gm * gk).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..gk * gn).map(|_| rng.normal() as f32).collect();
+    let packed = PackedMat::pack(&b, gk, gn, Precision::F32);
+    let mut out = vec![0.0f32; gm * gn];
+    model_gemm(&a, &packed, gm, &mut out);
+    let stats = phase::snapshot();
+    phase::set_enabled(was);
+    stats
+}
+
+/// `kernel-probe`: report the per-precision GEMM tile-tuner winners,
+/// the SIMD vectorization probe, and the per-phase flop/byte profile
+/// of a fixed kernel workload. With `--assert-simd` it becomes the CI
 /// vectorization gate: exit nonzero (remediation steps on stderr via the
-/// error) when the tiled f32 kernel fails [`crate::kernel::MIN_SIMD_RATIO`].
+/// error) when the tiled f32 kernel fails [`crate::kernel::MIN_SIMD_RATIO`]
+/// — the phase table is still printed first, so the failing run names
+/// the degraded phase.
 fn run_kernel_probe(args: &KernelProbeArgs) -> Result<()> {
     let tiles = crate::kernel::tuned_tiles();
     println!("GEMM tile auto-tuner (winning MRxNR shape per precision):");
     for (name, choice) in [("f32", &tiles.f32), ("f16", &tiles.f16), ("int8", &tiles.int8)] {
         println!("  {name:<5} {:>5}  {:8.2} GFLOP/s", choice.shape.as_str(), choice.gflops);
     }
+    let phases = phase_profile_stats();
+    let print_phases = || {
+        println!("kernel phase profile (fixed forward+backward+GEMM workload):");
+        println!(
+            "  {:<9} {:>7} {:>10} {:>9} {:>9} {:>10} {:>9}",
+            "phase", "calls", "busy_ms", "GFLOP", "GB", "GFLOP/s", "GB/s"
+        );
+        for s in &phases {
+            println!(
+                "  {:<9} {:>7} {:>10.3} {:>9.4} {:>9.4} {:>10.2} {:>9.2}",
+                s.phase,
+                s.calls,
+                s.busy_ms,
+                s.gflop,
+                s.gbyte,
+                s.achieved_gflops(),
+                s.achieved_gbps()
+            );
+        }
+    };
     let report = |p: &crate::kernel::SimdProbe| {
         println!("SIMD probe (96x96x96 packed GEMM vs scalar dependency chain):");
         println!("  scalar chain {:8.2} GFLOP/s", p.scalar_gflops);
@@ -634,16 +720,25 @@ fn run_kernel_probe(args: &KernelProbeArgs) -> Result<()> {
         println!("  tiled int8   {:8.2} GFLOP/s", p.int8_gflops);
     };
     if args.assert_simd {
-        let probe = crate::kernel::assert_simd_floor().map_err(anyhow::Error::msg)?;
-        report(&probe);
-        println!(
-            "vectorization floor OK: {:.2}x >= required {:.1}x",
-            probe.ratio(),
-            crate::kernel::MIN_SIMD_RATIO
-        );
+        match crate::kernel::assert_simd_floor() {
+            Ok(probe) => {
+                report(&probe);
+                print_phases();
+                println!(
+                    "vectorization floor OK: {:.2}x >= required {:.1}x",
+                    probe.ratio(),
+                    crate::kernel::MIN_SIMD_RATIO
+                );
+            }
+            Err(msg) => {
+                print_phases();
+                return Err(anyhow::Error::msg(msg));
+            }
+        }
     } else {
         let probe = crate::kernel::simd_probe();
         report(&probe);
+        print_phases();
         println!(
             "(informational; pass --assert-simd to enforce the {:.1}x floor)",
             crate::kernel::MIN_SIMD_RATIO
@@ -681,10 +776,16 @@ mod tests {
             "25",
             "--max-queue",
             "64",
+            "--trace-out",
+            "trace.json",
         ]))
         .unwrap();
         assert_eq!(a.backends, BackendSpec::native_workers(2));
         assert_eq!(a.listen.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(a.trace_out.as_deref(), Some("trace.json"));
+        // --trace-out is off by default and needs a value
+        assert_eq!(parse_serve(&s(&[])).unwrap().trace_out, None);
+        assert!(parse_serve(&s(&["--trace-out"])).is_err());
         let adm = a.admission();
         assert_eq!(adm.latency_budget_ms, Some(25.0));
         assert_eq!(adm.max_queue, 64);

@@ -398,6 +398,45 @@ impl AdmissionConfig {
     }
 }
 
+/// Observability knobs for the serving coordinator: request-span
+/// tracing (`serve --trace-out`) and kernel-phase profiling. Both are
+/// off by default so timing-sensitive paths (benches, tests) pay one
+/// relaxed atomic load per instrumentation site; flows into
+/// `ServerConfig`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// Record request spans (submission → response, with per-stage
+    /// children) for export as Chrome trace-event JSON.
+    pub trace: bool,
+    /// Per-thread span ring capacity, in spans (~64 B each). Fixed at
+    /// the first enable of the process.
+    pub trace_ring: usize,
+    /// Accumulate per-phase kernel counters (pack/QKᵀ/softmax/AV/
+    /// backward/GEMM) so metrics can report achieved-vs-roofline
+    /// utilization.
+    pub phase_profile: bool,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            trace: false,
+            trace_ring: crate::obs::trace::DEFAULT_RING_CAPACITY,
+            phase_profile: false,
+        }
+    }
+}
+
+impl ObsConfig {
+    /// Validate invariants (a non-empty span ring).
+    pub fn validate(&self) -> Result<()> {
+        if self.trace && self.trace_ring == 0 {
+            bail!("trace_ring must be >= 1 when tracing is enabled");
+        }
+        Ok(())
+    }
+}
+
 /// Parse a `key=value,key=value` override string onto a base config (CLI
 /// `--config` flag).
 pub fn apply_overrides(mut cfg: ModelConfig, overrides: &str) -> Result<ModelConfig> {
@@ -504,6 +543,16 @@ mod tests {
             .validate()
             .is_err());
         assert!(AdmissionConfig { latency_budget_ms: Some(f64::NAN), ..Default::default() }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn obs_config_validates() {
+        let off = ObsConfig::default();
+        off.validate().unwrap();
+        assert!(!off.trace && !off.phase_profile, "observability must default off");
+        assert!(ObsConfig { trace: true, trace_ring: 0, ..Default::default() }
             .validate()
             .is_err());
     }

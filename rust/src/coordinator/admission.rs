@@ -24,12 +24,17 @@
 //! outstanding slots as requests are answered — every answer path,
 //! including batch failures and expiry sheds, releases exactly once.
 //!
+//! The gate also keeps a lock-free per-client [`ClientRate`]
+//! sliding-window submission counter (every submit ticks it, admitted
+//! or shed), surfaced as the `req_per_s` gauge in the per-client
+//! metrics ledger.
+//!
 //! [`QueueFull`]: ShedReason::QueueFull
 //! [`ClientLimit`]: ShedReason::ClientLimit
 //! [`Overloaded`]: ShedReason::Overloaded
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::api::{Priority, ShedReason};
 use crate::config::AdmissionConfig;
@@ -166,6 +171,99 @@ impl AdmissionState {
     }
 }
 
+/// Slots in the [`ClientRate`] sliding window.
+pub const RATE_SLOTS: usize = 8;
+/// Width of one window slot in milliseconds (8 × 250 ms = a 2 s
+/// window: wide enough to smooth request bursts, narrow enough that a
+/// client going quiet decays to 0 within two seconds).
+pub const RATE_SLOT_MS: u64 = 250;
+
+/// Lock-free sliding-window request-rate counter, one per client.
+///
+/// Eight 250 ms slots cover a rolling 2 s window. Each slot packs
+/// `(generation << 32) | count` into one `AtomicU64`: a submit CAS-es
+/// either a count bump (same generation) or a fresh `(gen, 1)` cell
+/// (slot recycled from a past window), so ticks from concurrent
+/// connection threads never lose counts and never take a lock. Reads
+/// sum only slots whose generation falls inside the current window —
+/// stale slots are skipped, not cleaned, so there is no maintenance
+/// path.
+///
+/// The deterministic `*_at_ms` entry points take the clock as an
+/// argument (milliseconds since the counter was created) so tests can
+/// drive the window exactly; `observe`/`req_per_s` wrap them with the
+/// real elapsed clock.
+#[derive(Debug)]
+pub struct ClientRate {
+    started: Instant,
+    slots: [AtomicU64; RATE_SLOTS],
+}
+
+impl Default for ClientRate {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ClientRate {
+    pub fn new() -> Self {
+        ClientRate {
+            started: Instant::now(),
+            slots: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Count one submission now.
+    pub fn observe(&self) {
+        self.observe_at_ms(self.started.elapsed().as_millis() as u64);
+    }
+
+    /// Current rate over the trailing window, requests per second.
+    /// Averages over the full 2 s window, so a freshly connected
+    /// client's gauge ramps up over its first window rather than
+    /// spiking.
+    pub fn req_per_s(&self) -> f64 {
+        self.rate_at_ms(self.started.elapsed().as_millis() as u64)
+    }
+
+    /// Count one submission at `now_ms` milliseconds on this counter's
+    /// clock.
+    pub fn observe_at_ms(&self, now_ms: u64) {
+        let gen = now_ms / RATE_SLOT_MS;
+        let tag = (gen as u32 as u64) << 32;
+        let slot = &self.slots[(gen as usize) % RATE_SLOTS];
+        let mut cur = slot.load(Ordering::Acquire);
+        loop {
+            let next = if cur & 0xFFFF_FFFF_0000_0000 == tag {
+                if cur & 0xFFFF_FFFF == 0xFFFF_FFFF {
+                    return; // saturated (4e9 submits in 250ms: not real)
+                }
+                cur + 1
+            } else {
+                tag | 1
+            };
+            match slot.compare_exchange_weak(cur, next, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => return,
+                Err(observed) => cur = observed,
+            }
+        }
+    }
+
+    /// Rate over the window ending at `now_ms`, requests per second.
+    pub fn rate_at_ms(&self, now_ms: u64) -> f64 {
+        let gen = now_ms / RATE_SLOT_MS;
+        let oldest = gen.saturating_sub(RATE_SLOTS as u64 - 1);
+        let mut total = 0u64;
+        for g in oldest..=gen {
+            let v = self.slots[(g as usize) % RATE_SLOTS].load(Ordering::Acquire);
+            if v >> 32 == g as u32 as u64 {
+                total += v & 0xFFFF_FFFF;
+            }
+        }
+        total as f64 * 1000.0 / (RATE_SLOTS as u64 * RATE_SLOT_MS) as f64
+    }
+}
+
 /// Increment `counter` only while it stays below `bound`; returns the
 /// pre-increment value, or `None` (no change) when the bound is hit.
 fn bounded_increment(counter: &AtomicUsize, bound: usize) -> Option<usize> {
@@ -273,5 +371,36 @@ mod tests {
         }
         assert_eq!(st.try_admit(Priority::Normal, None, &c), Err(ShedReason::QueueFull));
         assert_eq!(st.peak_outstanding(), 4);
+    }
+
+    #[test]
+    fn client_rate_window_counts_and_expires() {
+        let r = ClientRate::new();
+        assert_eq!(r.rate_at_ms(0), 0.0);
+        // 10 submits inside the first slot → 10 req over the 2s window
+        for _ in 0..10 {
+            r.observe_at_ms(100);
+        }
+        assert_eq!(r.rate_at_ms(100), 5.0);
+        // spread across slots: still summed while inside the window
+        r.observe_at_ms(600);
+        r.observe_at_ms(1900);
+        assert_eq!(r.rate_at_ms(1900), 6.0);
+        // 2s later the first slot's generation has left the window
+        // (and its slot index is being reused by a fresh generation)
+        assert_eq!(r.rate_at_ms(2100), 1.0, "only the 600ms+1900ms ticks remain");
+        // far future: everything expired without any cleanup pass
+        assert_eq!(r.rate_at_ms(60_000), 0.0);
+    }
+
+    #[test]
+    fn client_rate_slot_reuse_resets_counts() {
+        let r = ClientRate::new();
+        r.observe_at_ms(0);
+        r.observe_at_ms(0);
+        // same slot index (gen 0 and gen 8 both map to slot 0), one
+        // full window later: the old count must not bleed through
+        r.observe_at_ms(8 * RATE_SLOT_MS);
+        assert_eq!(r.rate_at_ms(8 * RATE_SLOT_MS), 0.5);
     }
 }

@@ -30,16 +30,18 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use super::server::{Client, Server};
 use super::wire::{
     self, Frame, WireError, FRAME_INFER_REQUEST, FRAME_INFER_RESPONSE, FRAME_METRICS_REQUEST,
-    FRAME_METRICS_RESPONSE,
+    FRAME_METRICS_RESPONSE, FRAME_TRACE_REQUEST, FRAME_TRACE_RESPONSE,
 };
 use crate::coordinator::Response;
+use crate::obs::log::Level;
+use crate::obs::trace::{self, SpanKind};
 
 /// Running TCP ingress handle.
 pub struct Ingress {
@@ -104,7 +106,9 @@ fn accept_loop(listener: TcpListener, server: Arc<Server>, stop: Arc<AtomicBool>
                 let srv = server.clone();
                 match spawn_connection(stream, peer, srv) {
                     Ok(conn) => conns.push(conn),
-                    Err(e) => eprintln!("[ingress] connection setup failed: {e:#}"),
+                    Err(e) => {
+                        crate::log!(Level::Error, "ingress", "connection setup failed: {e:#}")
+                    }
                 }
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -113,7 +117,7 @@ fn accept_loop(listener: TcpListener, server: Arc<Server>, stop: Arc<AtomicBool>
                 std::thread::sleep(Duration::from_millis(2));
             }
             Err(e) => {
-                eprintln!("[ingress] accept failed: {e}");
+                crate::log!(Level::Error, "ingress", "accept failed: {e}");
                 std::thread::sleep(Duration::from_millis(10));
             }
         }
@@ -166,12 +170,15 @@ fn connection_loop(
                 if !matches!(&e, WireError::Io(ioe)
                     if ioe.kind() == std::io::ErrorKind::ConnectionReset)
                 {
-                    eprintln!("[ingress] dropping {}: {e}", client.label());
+                    crate::log!(Level::Warn, "ingress", "dropping {}: {e}", client.label());
                 }
                 break;
             }
         };
-        if !handle_frame(frame, &client, &server, &reply_tx, &write_half) {
+        // trace anchor: the frame is fully read, decode starts now —
+        // the ingress span (and the root span) begin here
+        let t0 = Instant::now();
+        if !handle_frame(frame, t0, &client, &server, &reply_tx, &write_half) {
             break;
         }
     }
@@ -183,8 +190,11 @@ fn connection_loop(
 }
 
 /// Dispatch one decoded frame; returns false to drop the connection.
+/// `t0` is when the frame finished arriving — the request's trace
+/// anchor, so its root span covers payload decode onward.
 fn handle_frame(
     frame: Frame,
+    t0: Instant,
     client: &Client,
     server: &Arc<Server>,
     reply_tx: &std::sync::mpsc::Sender<Response>,
@@ -195,15 +205,22 @@ fn handle_frame(
             let req = match wire::decode_request(&frame.payload) {
                 Ok(r) => r,
                 Err(e) => {
-                    eprintln!("[ingress] dropping {}: {e}", client.label());
+                    crate::log!(Level::Warn, "ingress", "dropping {}: {e}", client.label());
                     return false;
                 }
             };
             // the one shared admission gate; sheds are answered on
             // reply_tx before this returns
-            if client.submit_with(req, reply_tx.clone()).is_err() {
+            let ticket = match client.submit_traced(req, reply_tx.clone(), t0) {
+                Ok(t) => t,
                 // server stopped: nothing more to serve
-                return false;
+                Err(_) => return false,
+            };
+            if trace::enabled() {
+                // wire-path span: payload decode + admission + router
+                // handoff, distinguishing network submissions from
+                // in-process ones in the trace
+                trace::span(SpanKind::Ingress, ticket.trace_id, t0, Instant::now(), 0);
             }
             true
         }
@@ -212,8 +229,18 @@ fn handle_frame(
             let mut w = write_half.lock().unwrap();
             wire::write_frame(&mut *w, FRAME_METRICS_RESPONSE, json.as_bytes()).is_ok()
         }
+        FRAME_TRACE_REQUEST => {
+            let json = server.trace_json();
+            let mut w = write_half.lock().unwrap();
+            wire::write_frame(&mut *w, FRAME_TRACE_RESPONSE, json.as_bytes()).is_ok()
+        }
         other => {
-            eprintln!("[ingress] dropping {}: unknown frame type {other}", client.label());
+            crate::log!(
+                Level::Warn,
+                "ingress",
+                "dropping {}: unknown frame type {other}",
+                client.label()
+            );
             false
         }
     }

@@ -7,24 +7,28 @@
 //! per [`ShedReason`]), per-client accounting, and the queue-wait EWMA
 //! / peak-outstanding gauges.
 //!
-//! Latency distributions are kept in bounded [`Reservoir`] samplers,
-//! not growing vectors: a server that runs for days under load must
-//! have flat metrics memory, same as its request queues. The snapshot
-//! is serializable ([`MetricsSnapshot::to_json`]) and is exactly what
-//! the wire `metrics` request returns, so operators scrape the same
-//! numbers `serve_demo` prints.
+//! Latency distributions are kept in fixed-boundary log-bucket
+//! [`Histogram`]s, not growing vectors or samplers: a server that runs
+//! for days under load must have flat metrics memory, same as its
+//! request queues — and because every histogram shares one bucket
+//! layout, distributions **merge exactly** across workers and slice
+//! per sequence bucket, so the SLO percentiles (p50/p95/p99 overall
+//! and per `native_mlm_s{n}` ladder rung) are deterministic: identical
+//! runs report identical numbers, unlike the retired sampling
+//! reservoir. The snapshot also carries the kernel-phase profile and
+//! per-backend achieved-vs-roofline utilization pushed by the server
+//! (see [`crate::obs::phase`]). The snapshot is serializable
+//! ([`MetricsSnapshot::to_json`]) and is exactly what the wire
+//! `metrics` request returns, so operators scrape the same numbers
+//! `serve_demo` prints.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
 use super::api::ShedReason;
-use crate::util::stats::Reservoir;
-
-/// Retained latency samples per distribution. 4096 f64s ≈ 32 KiB per
-/// reservoir; percentile error at this size is well under the run-to-run
-/// noise of a serving benchmark.
-const RESERVOIR_CAP: usize = 4096;
+use crate::obs::hist::Histogram;
+use crate::obs::phase::PhaseStat;
 
 /// Shared metrics sink (cheap Mutex; the hot path pushes one f64).
 #[derive(Debug, Default)]
@@ -35,7 +39,11 @@ pub struct ServingMetrics {
 #[derive(Debug)]
 struct Inner {
     started: Instant,
-    latencies: Reservoir,
+    latencies: Histogram,
+    // per sequence-bucket latency histograms (same fixed boundaries,
+    // so the overall histogram is exactly their merge plus any
+    // completions without a bucket attribution)
+    latency_by_bucket: BTreeMap<usize, Histogram>,
     admitted: usize,
     shed: [usize; 4], // indexed by ShedReason::code()
     clients: BTreeMap<String, ClientCounters>,
@@ -48,8 +56,8 @@ struct Inner {
     truncated: usize,
     errors: usize,
     // pipeline split (one sample per completed batch job)
-    queue_wait: Reservoir,
-    exec: Reservoir,
+    queue_wait: Histogram,
+    exec: Histogram,
     // per-worker accounting, indexed by worker id; pre-sized to the
     // pool via set_workers so idle workers still appear in reports
     workers: usize,
@@ -74,13 +82,20 @@ struct Inner {
     dispatches: usize,
     inflight_sum: usize,
     inflight_peak: usize,
+    // kernel-phase profile, mirrored from the global obs::phase
+    // accumulators by the server right before each snapshot
+    kernel_phases: Vec<PhaseStat>,
+    // per-backend-label single-core roofline peak (GFLOP/s), declared
+    // once at server start; survives reset like the worker backends
+    backend_peak_gflops: BTreeMap<String, f64>,
 }
 
 impl Default for Inner {
     fn default() -> Self {
         Inner {
             started: Instant::now(),
-            latencies: Reservoir::new(RESERVOIR_CAP, 0x6c61_7465),
+            latencies: Histogram::new(),
+            latency_by_bucket: BTreeMap::new(),
             admitted: 0,
             shed: [0; 4],
             clients: BTreeMap::new(),
@@ -91,8 +106,8 @@ impl Default for Inner {
             batch_capacity: 0,
             truncated: 0,
             errors: 0,
-            queue_wait: Reservoir::new(RESERVOIR_CAP, 0x7175_6575),
-            exec: Reservoir::new(RESERVOIR_CAP, 0x6578_6563),
+            queue_wait: Histogram::new(),
+            exec: Histogram::new(),
             workers: 0,
             worker_jobs: Vec::new(),
             worker_busy_ms: Vec::new(),
@@ -103,6 +118,8 @@ impl Default for Inner {
             dispatches: 0,
             inflight_sum: 0,
             inflight_peak: 0,
+            kernel_phases: Vec::new(),
+            backend_peak_gflops: BTreeMap::new(),
         }
     }
 }
@@ -113,10 +130,11 @@ struct ClientCounters {
     completed: usize,
     shed: usize,
     errors: usize,
+    req_per_s: f64,
 }
 
 /// Per-client accounting row in a snapshot.
-#[derive(Clone, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ClientStats {
     /// Client label (peer address for wire clients, `local` in-process).
     pub client: String,
@@ -128,6 +146,39 @@ pub struct ClientStats {
     pub shed: usize,
     /// Requests answered with an execution error.
     pub errors: usize,
+    /// Sliding-window submission rate (admitted + shed), requests per
+    /// second — the admission ledger's rate gauge, updated at every
+    /// submit (see `coordinator::admission::ClientRate`).
+    pub req_per_s: f64,
+}
+
+/// One sequence bucket's SLO row: exact histogram-derived percentiles
+/// over the requests completed in that `native_mlm_s{seq_len}` rung.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BucketLatency {
+    /// Bucket sequence length (the ladder rung).
+    pub seq_len: usize,
+    /// Completed requests attributed to this bucket.
+    pub count: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Per-backend achieved-vs-roofline utilization, derived from the
+/// kernel-phase profile: how close the backend's kernels run to the
+/// calibrated single-core peak while busy.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BackendRoofline {
+    /// Backend label (as in `MetricsSnapshot::worker_backend`).
+    pub backend: String,
+    /// Achieved GFLOP/s while busy (phase flops / phase busy time,
+    /// summed across kernel threads — a per-thread rate).
+    pub achieved_gflops: f64,
+    /// Calibrated single-core roofline peak (GFLOP/s).
+    pub peak_gflops: f64,
+    /// `achieved / peak` (0 when idle or undeclared).
+    pub utilization: f64,
 }
 
 /// Point-in-time copy for reporting.
@@ -189,6 +240,14 @@ pub struct MetricsSnapshot {
     /// overall fraction of dispatched (padded) tokens that were padding,
     /// `1 − Σreal / Σpadded` (0.0 before any dispatch)
     pub padding_waste: f64,
+    /// exact histogram-derived latency percentiles per sequence bucket,
+    /// sorted by bucket seq_len — the SLO ladder
+    pub latency_by_bucket: Vec<BucketLatency>,
+    /// kernel-phase profile (pack, QKᵀ, softmax, AV, backward, GEMM),
+    /// mirrored from [`crate::obs::phase::snapshot`] by the server
+    pub kernel_phases: Vec<PhaseStat>,
+    /// per-backend achieved-vs-roofline utilization, sorted by label
+    pub backend_roofline: Vec<BackendRoofline>,
 }
 
 impl MetricsSnapshot {
@@ -265,12 +324,13 @@ impl MetricsSnapshot {
                 o.push(',');
             }
             o.push_str(&format!(
-                "{{\"client\":{},\"admitted\":{},\"completed\":{},\"shed\":{},\"errors\":{}}}",
+                "{{\"client\":{},\"admitted\":{},\"completed\":{},\"shed\":{},\"errors\":{},\"req_per_s\":{}}}",
                 json_str(&c.client),
                 c.admitted,
                 c.completed,
                 c.shed,
-                c.errors
+                c.errors,
+                json_num(c.req_per_s)
             ));
         }
         o.push(']');
@@ -320,6 +380,53 @@ impl MetricsSnapshot {
                 bucket,
                 json_str(backend),
                 json_num(*ewma)
+            ));
+        }
+        o.push(']');
+        // exact per-rung SLO percentiles from the shared histogram layout
+        o.push_str(",\"latency_by_bucket\":[");
+        for (k, b) in self.latency_by_bucket.iter().enumerate() {
+            if k > 0 {
+                o.push(',');
+            }
+            o.push_str(&format!(
+                "{{\"bucket\":{},\"count\":{},\"p50_ms\":{},\"p95_ms\":{},\"p99_ms\":{}}}",
+                b.seq_len,
+                b.count,
+                json_num(b.p50_ms),
+                json_num(b.p95_ms),
+                json_num(b.p99_ms)
+            ));
+        }
+        o.push(']');
+        o.push_str(",\"kernel_phases\":[");
+        for (k, p) in self.kernel_phases.iter().enumerate() {
+            if k > 0 {
+                o.push(',');
+            }
+            o.push_str(&format!(
+                "{{\"phase\":{},\"calls\":{},\"busy_ms\":{},\"gflop\":{},\"gbyte\":{},\"achieved_gflops\":{},\"achieved_gbps\":{}}}",
+                json_str(p.phase),
+                p.calls,
+                json_num(p.busy_ms),
+                json_num(p.gflop),
+                json_num(p.gbyte),
+                json_num(p.achieved_gflops()),
+                json_num(p.achieved_gbps())
+            ));
+        }
+        o.push(']');
+        o.push_str(",\"backend_roofline\":[");
+        for (k, r) in self.backend_roofline.iter().enumerate() {
+            if k > 0 {
+                o.push(',');
+            }
+            o.push_str(&format!(
+                "{{\"backend\":{},\"achieved_gflops\":{},\"peak_gflops\":{},\"utilization\":{}}}",
+                json_str(&r.backend),
+                json_num(r.achieved_gflops),
+                json_num(r.peak_gflops),
+                json_num(r.utilization)
             ));
         }
         o.push_str("]}");
@@ -385,11 +492,23 @@ impl ServingMetrics {
     }
 
     /// A request from `client` completed with predictions after
-    /// `latency_ms` end to end.
-    pub fn record_completed(&self, client: &str, latency_ms: f64) {
+    /// `latency_ms` end to end, served by the `bucket` sequence rung
+    /// (when the batch that carried it is known — `None` attributes the
+    /// sample only to the overall distribution).
+    pub fn record_completed(&self, client: &str, latency_ms: f64, bucket: Option<usize>) {
         let mut i = self.inner.lock().unwrap();
-        i.latencies.push(latency_ms);
+        i.latencies.record(latency_ms);
+        if let Some(seq_len) = bucket {
+            i.latency_by_bucket.entry(seq_len).or_default().record(latency_ms);
+        }
         i.clients.entry(client.to_string()).or_default().completed += 1;
+    }
+
+    /// Push `client`'s sliding-window submission rate gauge (req/s, from
+    /// the admission ledger) so the next snapshot reports it.
+    pub fn record_client_rate(&self, client: &str, req_per_s: f64) {
+        let mut i = self.inner.lock().unwrap();
+        i.clients.entry(client.to_string()).or_default().req_per_s = req_per_s;
     }
 
     /// A request from `client` was answered with a typed shed.
@@ -471,8 +590,23 @@ impl ServingMetrics {
         }
         i.worker_jobs[worker] += 1;
         i.worker_busy_ms[worker] += exec_ms;
-        i.queue_wait.push(queue_wait_ms);
-        i.exec.push(exec_ms);
+        i.queue_wait.record(queue_wait_ms);
+        i.exec.record(exec_ms);
+    }
+
+    /// Mirror the global kernel-phase accumulators
+    /// ([`crate::obs::phase::snapshot`]) so the next metrics snapshot
+    /// carries the profile (called by the server before snapshotting).
+    pub fn set_kernel_phases(&self, phases: Vec<PhaseStat>) {
+        self.inner.lock().unwrap().kernel_phases = phases;
+    }
+
+    /// Declare a backend label's calibrated single-core roofline peak
+    /// (GFLOP/s), the denominator of its utilization row. Survives
+    /// [`ServingMetrics::reset`] like the worker backends.
+    pub fn set_backend_peak(&self, backend: &str, peak_gflops: f64) {
+        let mut i = self.inner.lock().unwrap();
+        i.backend_peak_gflops.insert(backend.to_string(), peak_gflops);
     }
 
     /// Install the dispatch policy's current per-(bucket seq_len,
@@ -510,11 +644,13 @@ impl ServingMetrics {
         let mut i = self.inner.lock().unwrap();
         let workers = i.workers;
         let backends = std::mem::take(&mut i.worker_backend);
+        let peaks = std::mem::take(&mut i.backend_peak_gflops);
         *i = Inner::default();
         i.workers = workers;
         i.worker_jobs.resize(workers, 0);
         i.worker_busy_ms.resize(workers, 0.0);
         i.worker_backend = backends;
+        i.backend_peak_gflops = peaks;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -536,6 +672,7 @@ impl ServingMetrics {
                     completed: c.completed,
                     shed: c.shed,
                     errors: c.errors,
+                    req_per_s: c.req_per_s,
                 })
                 .collect(),
             queue_ewma_ms: i.queue_ewma_ms,
@@ -580,6 +717,36 @@ impl ServingMetrics {
                     1.0 - real as f64 / padded as f64
                 }
             },
+            latency_by_bucket: i
+                .latency_by_bucket
+                .iter()
+                .map(|(&seq_len, h)| BucketLatency {
+                    seq_len,
+                    count: h.count(),
+                    p50_ms: h.percentile(50.0),
+                    p95_ms: h.percentile(95.0),
+                    p99_ms: h.percentile(99.0),
+                })
+                .collect(),
+            kernel_phases: i.kernel_phases.clone(),
+            backend_roofline: {
+                // one profile feeds every instrumented backend: the
+                // phase accumulators are global, so the achieved rate is
+                // the pool-wide per-thread number; only labels with a
+                // declared peak get a row
+                let busy_s: f64 = i.kernel_phases.iter().map(|p| p.busy_ms).sum::<f64>() / 1000.0;
+                let gflop: f64 = i.kernel_phases.iter().map(|p| p.gflop).sum();
+                let achieved = if busy_s > 0.0 { gflop / busy_s } else { 0.0 };
+                i.backend_peak_gflops
+                    .iter()
+                    .map(|(label, &peak)| BackendRoofline {
+                        backend: label.clone(),
+                        achieved_gflops: achieved,
+                        peak_gflops: peak,
+                        utilization: if peak > 0.0 { achieved / peak } else { 0.0 },
+                    })
+                    .collect()
+            },
         }
     }
 }
@@ -591,8 +758,18 @@ mod tests {
     #[test]
     fn snapshot_reflects_recordings() {
         let m = ServingMetrics::default();
+        // reference histograms built the same way the sink builds its
+        // own — percentiles must now be EXACTLY reproducible, not
+        // sample-dependent like the retired reservoir
+        let mut all = Histogram::new();
+        let mut short = Histogram::new();
         for i in 0..100 {
-            m.record_completed("local", i as f64);
+            let bucket = if i < 50 { 512 } else { 2048 };
+            m.record_completed("local", i as f64, Some(bucket));
+            all.record(i as f64);
+            if bucket == 512 {
+                short.record(i as f64);
+            }
         }
         m.record_batch(3, 4);
         m.record_batch(4, 4);
@@ -602,9 +779,47 @@ mod tests {
         assert_eq!(s.batches, 2);
         assert_eq!(s.truncated, 1);
         assert!((s.fill_ratio - 7.0 / 8.0).abs() < 1e-12);
-        assert!((s.p50_ms - 49.5).abs() < 1.0);
+        assert_eq!(s.p50_ms, all.percentile(50.0));
+        assert_eq!(s.p95_ms, all.percentile(95.0));
+        assert_eq!(s.p99_ms, all.percentile(99.0));
+        assert_eq!(s.mean_ms, all.mean());
         assert!(s.p99_ms >= s.p95_ms && s.p95_ms >= s.p50_ms);
+        // per-rung SLO rows: sorted by bucket, exact per-slice percentiles
+        assert_eq!(s.latency_by_bucket.len(), 2);
+        assert_eq!(s.latency_by_bucket[0].seq_len, 512);
+        assert_eq!(s.latency_by_bucket[0].count, 50);
+        assert_eq!(s.latency_by_bucket[0].p50_ms, short.percentile(50.0));
+        assert_eq!(s.latency_by_bucket[1].seq_len, 2048);
+        assert_eq!(s.latency_by_bucket[1].count, 50);
         assert!(s.uptime_s >= 0.0);
+    }
+
+    #[test]
+    fn roofline_rows_derive_from_phase_profile() {
+        let m = ServingMetrics::default();
+        // no peak declared → no rows even with a profile present
+        m.set_kernel_phases(vec![PhaseStat {
+            phase: "qk_t",
+            calls: 4,
+            busy_ms: 500.0,
+            gflop: 10.0,
+            gbyte: 1.0,
+        }]);
+        assert!(m.snapshot().backend_roofline.is_empty());
+        // declared peak 80 GFLOP/s; achieved = 10 GFLOP / 0.5 s = 20
+        m.set_backend_peak("native", 80.0);
+        let s = m.snapshot();
+        assert_eq!(s.backend_roofline.len(), 1);
+        let r = &s.backend_roofline[0];
+        assert_eq!(r.backend, "native");
+        assert!((r.achieved_gflops - 20.0).abs() < 1e-12);
+        assert!((r.utilization - 0.25).abs() < 1e-12);
+        // reset keeps the declared peak (like worker backends) but
+        // drops the mirrored profile → idle row with utilization 0
+        m.reset();
+        let s = m.snapshot();
+        assert_eq!(s.backend_roofline.len(), 1);
+        assert_eq!(s.backend_roofline[0].utilization, 0.0);
     }
 
     #[test]
@@ -696,8 +911,9 @@ mod tests {
         m.record_admitted("10.0.0.1:9");
         m.record_admitted("10.0.0.1:9");
         m.record_admitted("local");
-        m.record_completed("10.0.0.1:9", 5.0);
-        m.record_completed("10.0.0.1:9", 7.0);
+        m.record_completed("10.0.0.1:9", 5.0, None);
+        m.record_completed("10.0.0.1:9", 7.0, None);
+        m.record_client_rate("10.0.0.1:9", 3.5);
         m.record_request_error("local");
         m.record_shed("10.0.0.2:7", ShedReason::QueueFull);
         m.record_shed("10.0.0.2:7", ShedReason::Overloaded);
@@ -728,11 +944,14 @@ mod tests {
                 admitted: 2,
                 completed: 2,
                 shed: 0,
-                errors: 0
+                errors: 0,
+                req_per_s: 3.5
             }
         );
         assert_eq!(s.clients[1].shed, 3);
         assert_eq!(s.clients[2].errors, 1);
+        // unbucketed completions produce no SLO rows
+        assert!(s.latency_by_bucket.is_empty());
     }
 
     #[test]
@@ -740,20 +959,35 @@ mod tests {
         let m = ServingMetrics::default();
         m.set_worker_backends(&["native".into(), "native".into()]);
         m.record_admitted("a\"b"); // label needing escape
-        m.record_completed("a\"b", 3.0);
+        m.record_completed("a\"b", 3.0, Some(512));
         m.record_shed("a\"b", ShedReason::Overloaded);
         m.record_job(0, 1.0, 2.0);
         m.record_padding(512, 300, 512);
         m.set_admission_gauges(4.5, 7);
+        m.set_kernel_phases(vec![PhaseStat {
+            phase: "softmax",
+            calls: 2,
+            busy_ms: 1.0,
+            gflop: 0.5,
+            gbyte: 0.25,
+        }]);
+        m.set_backend_peak("native", 50.0);
         let j = m.snapshot().to_json();
         assert!(j.starts_with('{') && j.ends_with('}'), "{j}");
         assert!(j.contains("\"schema\":1"));
         assert!(j.contains("\"client\":\"a\\\"b\""), "escaped label: {j}");
+        assert!(j.contains("\"req_per_s\":0"), "rate gauge serialized: {j}");
         assert!(j.contains("\"shed_by_reason\":{\"queue_full\":0,\"overloaded\":1"));
         assert!(j.contains("\"backend\":\"native\""));
         assert!(j.contains("\"padding_by_bucket\":[{\"bucket\":512"));
-        // numeric fields extractable by the helper
-        assert_eq!(json_num_field(&j, "p50_ms"), Some(3.0));
+        assert!(j.contains("\"latency_by_bucket\":[{\"bucket\":512,\"count\":1"), "{j}");
+        assert!(j.contains("\"kernel_phases\":[{\"phase\":\"softmax\",\"calls\":2"), "{j}");
+        assert!(j.contains("\"backend_roofline\":[{\"backend\":\"native\""), "{j}");
+        // numeric fields extractable by the helper; the p50 is the
+        // 3.0ms sample's bucket representative, bit-for-bit
+        let mut want = Histogram::new();
+        want.record(3.0);
+        assert_eq!(json_num_field(&j, "p50_ms"), Some(want.percentile(50.0)));
         assert_eq!(json_num_field(&j, "queue_ewma_ms"), Some(4.5));
         assert_eq!(json_num_field(&j, "peak_outstanding"), Some(7.0));
         assert_eq!(json_num_field(&j, "shed"), Some(1.0));

@@ -71,12 +71,14 @@ mod server;
 pub mod trace;
 pub mod wire;
 
-pub use admission::AdmissionState;
+pub use admission::{AdmissionState, ClientRate};
 pub use api::{Outcome, Priority, Request, Response, ShedReason};
 pub use batcher::{Batcher, BatcherConfig, Bucket, FormedBatch, PendingRequest};
 pub use dispatch::{replay, WeightedPolicy};
 pub use engine::{EngineHandle, EnginePool, PoolCompletion, PoolJob};
 pub use ingress::Ingress;
-pub use metrics::{json_num_field, ClientStats, MetricsSnapshot, ServingMetrics};
-pub use server::{Client, Server, ServerConfig};
+pub use metrics::{
+    json_num_field, BackendRoofline, BucketLatency, ClientStats, MetricsSnapshot, ServingMetrics,
+};
+pub use server::{Client, Server, ServerConfig, SubmitTicket};
 pub use wire::WireClient;

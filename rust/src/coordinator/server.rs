@@ -38,13 +38,15 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::admission::AdmissionState;
+use super::admission::{AdmissionState, ClientRate};
 use super::api::{Outcome, Request, Response, ShedReason};
 use super::batcher::{Batcher, BatcherConfig, Bucket, FormedBatch, PendingRequest};
 use super::engine::{EnginePool, PoolCompletion, PoolJob};
 use super::metrics::{MetricsSnapshot, ServingMetrics};
-use crate::config::{AdmissionConfig, ModelConfig, ServingConfig};
+use crate::config::{AdmissionConfig, ModelConfig, ObsConfig, ServingConfig};
 use crate::kernel;
+use crate::obs::log::Level;
+use crate::obs::trace::{self, SpanKind};
 use crate::runtime::{BackendKind, HostTensor, JobShape, Manifest};
 use crate::tokenizer::special;
 use crate::util::decode;
@@ -72,6 +74,10 @@ pub struct ServerConfig {
     /// installed on every worker at startup so the pool serves the
     /// trained weights (requires a native worker in the pool)
     pub native_checkpoint: Option<String>,
+    /// observability switches: request tracing ring + kernel-phase
+    /// profiling (both off by default — the hot paths then pay one
+    /// relaxed atomic load per site)
+    pub obs: ObsConfig,
 }
 
 impl ServerConfig {
@@ -91,6 +97,7 @@ impl ServerConfig {
             admission: AdmissionConfig::default(),
             native: ModelConfig::native_serving(),
             native_checkpoint: None,
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -116,6 +123,9 @@ struct ReplyEntry {
     reply: Sender<Response>,
     label: Arc<String>,
     inflight: Arc<AtomicUsize>,
+    /// When the request entered the serving stack (frame-decode start
+    /// for wire submissions) — the root span's anchor.
+    t0: Instant,
 }
 
 /// State shared between the server handle, its clients, and the router.
@@ -148,6 +158,19 @@ pub struct Client {
     shared: Arc<Shared>,
     label: Arc<String>,
     inflight: Arc<AtomicUsize>,
+    /// Sliding-window submission rate (ticked on every submit,
+    /// admitted or shed); surfaced as the `req_per_s` metrics gauge.
+    rate: Arc<ClientRate>,
+}
+
+/// What [`Client::submit_traced`] hands back: the id the response will
+/// carry, plus the internal trace id its spans are recorded under.
+#[derive(Clone, Copy, Debug)]
+pub struct SubmitTicket {
+    /// Caller-facing response id (the request's own id when nonzero).
+    pub wire_id: u64,
+    /// Trace id of this request's span tree (the internal request id).
+    pub trace_id: u64,
 }
 
 impl Client {
@@ -166,18 +189,40 @@ impl Client {
     /// synchronously: a shed request is answered on `reply` before this
     /// returns and never reaches the router.
     pub fn submit_with(&self, req: Request, reply: Sender<Response>) -> Result<u64> {
+        Ok(self.submit_traced(req, reply, Instant::now())?.wire_id)
+    }
+
+    /// [`Client::submit_with`] with an explicit trace anchor: `t0` is
+    /// when the request entered the stack (the ingress passes its
+    /// frame-decode start, so the root span covers decode + admission
+    /// + everything after). Records the admission span here — and, on
+    /// a shed, the whole (two-span) trace — under the internal request
+    /// id returned in the ticket.
+    pub fn submit_traced(
+        &self,
+        req: Request,
+        reply: Sender<Response>,
+        t0: Instant,
+    ) -> Result<SubmitTicket> {
         let internal = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
         let wire_id = if req.id != 0 { req.id } else { internal };
-        if let Err(reason) =
-            self.shared.admission.try_admit(req.priority, req.deadline, &self.inflight)
-        {
+        self.rate.observe();
+        self.shared.metrics.record_client_rate(&self.label, self.rate.req_per_s());
+        let verdict = self.shared.admission.try_admit(req.priority, req.deadline, &self.inflight);
+        if trace::enabled() {
+            trace::span(SpanKind::Admission, internal, t0, Instant::now(), verdict.is_err() as u64);
+        }
+        if let Err(reason) = verdict {
             self.shared.metrics.record_shed(&self.label, reason);
             let _ = reply.send(Response {
                 id: wire_id,
                 outcome: Outcome::Shed { reason },
                 latency_ms: 0.0,
             });
-            return Ok(wire_id);
+            if trace::enabled() {
+                trace::span(SpanKind::Request, internal, t0, Instant::now(), wire_id);
+            }
+            return Ok(SubmitTicket { wire_id, trace_id: internal });
         }
         self.shared.metrics.record_admitted(&self.label);
         let enqueued = Instant::now();
@@ -192,13 +237,18 @@ impl Client {
             reply,
             label: self.label.clone(),
             inflight: self.inflight.clone(),
+            t0,
         };
         if self.shared.tx.send(Submission::Request { req: pending, entry }).is_err() {
             // router gone: undo the admission so counters stay balanced
             self.shared.admission.release(&self.inflight);
+            if trace::enabled() {
+                // close the trace so the admission span is never orphaned
+                trace::span(SpanKind::Request, internal, t0, Instant::now(), wire_id);
+            }
             anyhow::bail!("server stopped");
         }
-        Ok(wire_id)
+        Ok(SubmitTicket { wire_id, trace_id: internal })
     }
 
     /// This client's label in per-client metrics.
@@ -229,6 +279,15 @@ impl Server {
     pub fn start(cfg: ServerConfig) -> Result<Self> {
         cfg.serving.validate()?;
         cfg.admission.validate()?;
+        cfg.obs.validate()?;
+        // process-wide switches: sticky across servers in one process
+        // (tests that start tracing servers isolate by trace-id range)
+        if cfg.obs.trace {
+            trace::enable(cfg.obs.trace_ring);
+        }
+        if cfg.obs.phase_profile {
+            crate::obs::phase::set_enabled(true);
+        }
         let any_native = cfg.serving.backends.iter().any(|b| b.kind == BackendKind::Native);
         let manifest_present = std::path::Path::new(&cfg.artifacts).join("manifest.txt").exists();
         let (manifest, mut buckets, vocab) = if any_native {
@@ -302,9 +361,10 @@ impl Server {
             let tensor = HostTensor::f32(&[n], ckpt.params)?;
             pool.load_params(kernel::NATIVE_PARAMS_ARTIFACT, &tensor)
                 .with_context(|| format!("installing native checkpoint {ckpt_path:?}"))?;
-            eprintln!(
-                "[server] serving trained native checkpoint {ckpt_path} \
-                 ({n} params, step {})",
+            crate::log!(
+                Level::Info,
+                "server",
+                "serving trained native checkpoint {ckpt_path} ({n} params, step {})",
                 ckpt.step
             );
         }
@@ -314,6 +374,21 @@ impl Server {
         let worker_labels: Vec<String> = pool.backends().iter().map(|b| b.label()).collect();
         metrics.set_worker_backends(&worker_labels);
         let worker_kinds: Vec<BackendKind> = pool.backends().iter().map(|b| b.kind).collect();
+        if cfg.obs.phase_profile {
+            // declare the roofline denominator for instrumented (native)
+            // backends: phase busy time sums across kernel threads, so
+            // the comparable peak is the machine roofline per core
+            if let Some(label) = worker_labels
+                .iter()
+                .zip(worker_kinds.iter())
+                .find(|(_, &k)| k == BackendKind::Native)
+                .map(|(l, _)| l)
+            {
+                let threads = kernel::KernelPool::global().threads().max(1);
+                let peak = kernel::native_roofline().gflops / threads as f64;
+                metrics.set_backend_peak(label, peak);
+            }
+        }
         let admission = Arc::new(AdmissionState::new(cfg.admission));
         let stop = Arc::new(AtomicBool::new(false));
         let m2 = metrics.clone();
@@ -343,6 +418,7 @@ impl Server {
             shared: shared.clone(),
             label: Arc::new("local".to_string()),
             inflight: Arc::new(AtomicUsize::new(0)),
+            rate: Arc::new(ClientRate::new()),
         };
         Ok(Server {
             shared,
@@ -367,15 +443,27 @@ impl Server {
             shared: self.shared.clone(),
             label: Arc::new(label.to_string()),
             inflight: Arc::new(AtomicUsize::new(0)),
+            rate: Arc::new(ClientRate::new()),
         }
     }
 
-    /// Metrics snapshot (admission gauges refreshed first, so
-    /// `queue_ewma_ms` / `peak_outstanding` are current).
+    /// Metrics snapshot (admission gauges and the kernel-phase profile
+    /// refreshed first, so `queue_ewma_ms` / `peak_outstanding` /
+    /// `kernel_phases` / `backend_roofline` are current).
     pub fn metrics(&self) -> MetricsSnapshot {
         let adm = &self.shared.admission;
         self.shared.metrics.set_admission_gauges(adm.ewma_wait_ms(), adm.peak_outstanding());
+        if crate::obs::phase::enabled() {
+            self.shared.metrics.set_kernel_phases(crate::obs::phase::snapshot());
+        }
         self.shared.metrics.snapshot()
+    }
+
+    /// Chrome trace-event JSON of every span recorded so far (an empty
+    /// `traceEvents` array while tracing is disabled) — the payload of
+    /// the wire `trace` request and of `serve --trace-out`.
+    pub fn trace_json(&self) -> String {
+        trace::export_chrome_json()
     }
 
     /// The serialized metrics snapshot — the payload the wire `metrics`
@@ -449,6 +537,9 @@ struct InflightBatch {
     seq_len: usize,
     requests: Vec<PendingRequest>,
     truncated: Vec<bool>,
+    /// When the batch was handed to the pool (anchors the worker-queue
+    /// and kernel spans, split by the completion's timing breakdown).
+    submitted: Instant,
 }
 
 /// Everything the dispatch/completion handlers touch, so the stage
@@ -561,7 +652,13 @@ fn accept(st: &mut RouterState, sub: Submission) {
 /// release its admission slots. Every post-admission path — completion,
 /// expiry shed, dispatch failure, batch error — funnels through here,
 /// so a request can neither leak its slot nor be double-released.
-fn finish(st: &mut RouterState, internal_id: u64, outcome: Outcome, latency_ms: f64) {
+fn finish(
+    st: &mut RouterState,
+    internal_id: u64,
+    outcome: Outcome,
+    latency_ms: f64,
+    bucket: Option<usize>,
+) {
     let Some(entry) = st.replies.remove(&internal_id) else {
         // unknown id (e.g. duplicate pool completion): never poison the
         // loop, but do surface it in the error count
@@ -569,14 +666,22 @@ fn finish(st: &mut RouterState, internal_id: u64, outcome: Outcome, latency_ms: 
         return;
     };
     match &outcome {
-        Outcome::Completed { .. } => st.metrics.record_completed(&entry.label, latency_ms),
+        Outcome::Completed { .. } => st.metrics.record_completed(&entry.label, latency_ms, bucket),
         Outcome::Shed { reason } => st.metrics.record_shed(&entry.label, *reason),
         Outcome::Error { .. } => st.metrics.record_request_error(&entry.label),
     }
     st.admission.release(&entry.inflight);
+    let write_start = if trace::enabled() { Some(Instant::now()) } else { None };
     // a dropped receiver (disconnected wire client) is fine: the send
     // fails, the accounting above already happened
     let _ = entry.reply.send(Response { id: entry.wire_id, outcome, latency_ms });
+    if let Some(ws) = write_start {
+        // close the trace: the response-write span, then the root
+        // request span stretching from the submission anchor to now
+        let end = Instant::now();
+        trace::span(SpanKind::Write, internal_id, ws, end, 0);
+        trace::span(SpanKind::Request, internal_id, entry.t0, end, entry.wire_id);
+    }
 }
 
 /// Pad/stack a formed batch and hand it to the worker with the minimum
@@ -591,7 +696,11 @@ fn dispatch_batch(st: &mut RouterState, fb: FormedBatch) {
     for req in fb.requests {
         if matches!(req.deadline, Some(d) if now >= d) {
             let age = now.duration_since(req.enqueued).as_secs_f64() * 1e3;
-            finish(st, req.id, Outcome::Shed { reason: ShedReason::Expired }, age);
+            if trace::enabled() {
+                // the request died waiting: its queue span is its story
+                trace::span(SpanKind::Queue, req.id, req.enqueued, now, bucket.seq_len as u64);
+            }
+            finish(st, req.id, Outcome::Shed { reason: ShedReason::Expired }, age, None);
         } else {
             requests.push(req);
         }
@@ -615,6 +724,7 @@ fn dispatch_batch(st: &mut RouterState, fb: FormedBatch) {
     }
     let batch_id = st.next_batch_id;
     st.next_batch_id += 1;
+    let submitted = Instant::now();
     let job = PoolJob {
         batch_id,
         artifact: bucket.artifact.clone(),
@@ -626,12 +736,21 @@ fn dispatch_batch(st: &mut RouterState, fb: FormedBatch) {
         // the fwd artifact signature is (params, tokens, kv_valid); each
         // worker owns its params (deterministic init, so all agree)
         with_params: true,
-        submitted: Instant::now(),
+        submitted,
     };
     // padded-vs-real token accounting for the padding-waste metric
     let real_tokens: usize = requests.iter().map(|r| r.tokens.len().min(s)).sum();
     match st.pool.submit(job) {
         Ok(worker) => {
+            if trace::enabled() {
+                // per request: batcher-queue span up to the dispatch
+                // decision, then the dispatch span around pool submit
+                let end = Instant::now();
+                for req in &requests {
+                    trace::span(SpanKind::Queue, req.id, req.enqueued, now, s as u64);
+                    trace::span(SpanKind::Dispatch, req.id, now, end, worker as u64);
+                }
+            }
             // counted only once actually dispatched, so batch-fill and
             // the per-worker job totals stay consistent
             st.metrics.record_batch(requests.len(), b);
@@ -647,17 +766,17 @@ fn dispatch_batch(st: &mut RouterState, fb: FormedBatch) {
             }
             st.inflight.insert(
                 batch_id,
-                InflightBatch { bucket_idx, seq_len: s, requests, truncated },
+                InflightBatch { bucket_idx, seq_len: s, requests, truncated, submitted },
             );
             st.metrics.record_dispatch(st.pool.inflight());
         }
         Err(e) => {
-            eprintln!("[server] dispatch failed: {e:#}");
+            crate::log!(Level::Error, "server", "dispatch failed: {e:#}");
             st.batcher.complete(bucket_idx);
             let msg = format!("dispatch failed: {e:#}");
             for req in requests {
                 let age = req.enqueued.elapsed().as_secs_f64() * 1e3;
-                finish(st, req.id, Outcome::Error { message: msg.clone() }, age);
+                finish(st, req.id, Outcome::Error { message: msg.clone() }, age, None);
             }
         }
     }
@@ -673,6 +792,18 @@ fn complete_batch(st: &mut RouterState, c: PoolCompletion) {
     st.batcher.complete(ib.bucket_idx);
     let exec_ms = c.exec.as_secs_f64() * 1e3;
     st.metrics.record_job(c.worker, c.queue_wait.as_secs_f64() * 1e3, exec_ms);
+    if trace::enabled() {
+        // reconstruct the worker timeline from the completion's split:
+        // [submitted, picked] in the worker queue, [picked, +exec] on
+        // the kernel — recorded per request so every trace tree is
+        // complete on its own
+        let picked = ib.submitted + c.queue_wait;
+        let kernel_end = picked + c.exec;
+        for req in &ib.requests {
+            trace::span(SpanKind::WorkerQueue, req.id, ib.submitted, picked, c.worker as u64);
+            trace::span(SpanKind::Kernel, req.id, picked, kernel_end, ib.seq_len as u64);
+        }
+    }
     // mirror the dispatch policy's refreshed cost table (the pool folds
     // successful exec times into it as completions are collected) so
     // metrics report exactly the EWMAs routing runs on
@@ -686,7 +817,13 @@ fn complete_batch(st: &mut RouterState, c: PoolCompletion) {
     let outs = match c.result {
         Ok(outs) => outs,
         Err(e) => {
-            eprintln!("[server] batch {} failed on worker {}: {e}", c.batch_id, c.worker);
+            crate::log!(
+                Level::Error,
+                "server",
+                "batch {} failed on worker {}: {e}",
+                c.batch_id,
+                c.worker
+            );
             fail_batch(st, ib, &format!("batch execution failed: {e}"));
             return;
         }
@@ -719,6 +856,7 @@ fn complete_batch(st: &mut RouterState, c: PoolCompletion) {
             req.id,
             Outcome::Completed { predictions: preds, truncated: ib.truncated[row] },
             lat,
+            Some(ib.seq_len),
         );
     }
 }
@@ -729,6 +867,6 @@ fn complete_batch(st: &mut RouterState, c: PoolCompletion) {
 fn fail_batch(st: &mut RouterState, ib: InflightBatch, msg: &str) {
     for req in &ib.requests {
         let age = req.enqueued.elapsed().as_secs_f64() * 1e3;
-        finish(st, req.id, Outcome::Error { message: msg.to_string() }, age);
+        finish(st, req.id, Outcome::Error { message: msg.to_string() }, age, None);
     }
 }

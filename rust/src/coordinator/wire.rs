@@ -21,6 +21,8 @@
 //! | 2    | infer response   | `id u64, latency_ms f64, tag u8, tag-specific body` |
 //! | 3    | metrics request  | empty |
 //! | 4    | metrics response | UTF-8 JSON ([`MetricsSnapshot::to_json`](super::metrics::MetricsSnapshot::to_json)) |
+//! | 5    | trace request    | empty |
+//! | 6    | trace response   | UTF-8 Chrome trace-event JSON ([`crate::obs::trace::export_chrome_json`]) |
 //!
 //! Infer-response tags: `0` completed (`truncated u8, n u32,
 //! (pos u32, token i32)×n`), `1` shed (`reason u8`), `2` error
@@ -51,6 +53,10 @@ pub const FRAME_INFER_RESPONSE: u8 = 2;
 pub const FRAME_METRICS_REQUEST: u8 = 3;
 /// Frame type: server → client metrics JSON.
 pub const FRAME_METRICS_RESPONSE: u8 = 4;
+/// Frame type: client → server trace export (empty payload).
+pub const FRAME_TRACE_REQUEST: u8 = 5;
+/// Frame type: server → client Chrome trace-event JSON.
+pub const FRAME_TRACE_RESPONSE: u8 = 6;
 
 const HEADER_LEN: usize = 6;
 
@@ -387,6 +393,22 @@ impl WireClient {
         String::from_utf8(f.payload).map_err(|_| malformed("metrics JSON is not UTF-8"))
     }
 
+    /// Fetch the server's recorded spans as Chrome trace-event JSON
+    /// (Perfetto-loadable; empty `traceEvents` while tracing is off).
+    /// Like [`WireClient::metrics`], call with no inference responses
+    /// pending.
+    pub fn trace(&mut self) -> Result<String, WireError> {
+        write_frame(&mut self.stream, FRAME_TRACE_REQUEST, &[])?;
+        let f = read_frame(&mut self.stream)?;
+        if f.ty != FRAME_TRACE_RESPONSE {
+            return Err(malformed(format!(
+                "expected trace response frame, got type {}",
+                f.ty
+            )));
+        }
+        String::from_utf8(f.payload).map_err(|_| malformed("trace JSON is not UTF-8"))
+    }
+
     /// The underlying stream (tests use this to simulate abrupt,
     /// mid-frame disconnects).
     pub fn stream(&mut self) -> &mut TcpStream {
@@ -453,6 +475,33 @@ mod tests {
         assert_eq!(f2, Frame { ty: FRAME_METRICS_REQUEST, payload: vec![] });
         // clean EOF at the boundary
         assert!(matches!(read_frame(&mut r), Err(WireError::Closed)));
+    }
+
+    #[test]
+    fn trace_frames_round_trip_and_types_are_distinct() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FRAME_TRACE_REQUEST, &[]).unwrap();
+        let body = br#"{"traceEvents":[],"displayTimeUnit":"ms"}"#;
+        write_frame(&mut buf, FRAME_TRACE_RESPONSE, body).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), Frame { ty: FRAME_TRACE_REQUEST, payload: vec![] });
+        let f = read_frame(&mut r).unwrap();
+        assert_eq!(f.ty, FRAME_TRACE_RESPONSE);
+        assert_eq!(f.payload, body);
+        // the frame-type namespace stays collision-free
+        let types = [
+            FRAME_INFER_REQUEST,
+            FRAME_INFER_RESPONSE,
+            FRAME_METRICS_REQUEST,
+            FRAME_METRICS_RESPONSE,
+            FRAME_TRACE_REQUEST,
+            FRAME_TRACE_RESPONSE,
+        ];
+        for (i, a) in types.iter().enumerate() {
+            for b in &types[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
     }
 
     #[test]

@@ -39,6 +39,13 @@ pub fn run(args: &ServeArgs) -> Result<()> {
     cfg.admission = args.admission();
     cfg.native_checkpoint = args.checkpoint.clone();
     cfg.native.precision = args.precision;
+    let has_native =
+        cfg.serving.backends.iter().any(|b| b.kind == crate::runtime::BackendKind::Native);
+    // --trace-out turns on span recording; phase profiling (sampled,
+    // <1% overhead) also rides along whenever native kernels serve, so
+    // the report can show achieved-vs-roofline utilization
+    cfg.obs.trace = args.trace_out.is_some();
+    cfg.obs.phase_profile = cfg.obs.trace || has_native;
     log.line(format!(
         "engine pool: {} worker(s) [{}], max {} inflight batches per bucket",
         cfg.serving.n_workers(),
@@ -54,7 +61,7 @@ pub fn run(args: &ServeArgs) -> Result<()> {
             .map(|b| format!("{b:.0} ms"))
             .unwrap_or_else(|| "off".into()),
     ));
-    if cfg.serving.backends.iter().any(|b| b.kind == crate::runtime::BackendKind::Native) {
+    if has_native {
         log.line(
             "serving mode: native kernel pipeline (in-process block-sparse compute, \
              no PJRT artifacts required)",
@@ -71,9 +78,16 @@ pub fn run(args: &ServeArgs) -> Result<()> {
     // workload: 64 requests across a long-tailed length distribution
     let n_requests = 64usize;
     let t0 = Instant::now();
-    let (responses, wire_json) = match &args.listen {
-        Some(addr) => run_wire_workload(&mut log, addr, &server, args.seed, n_requests)?,
-        None => (run_local_workload(&server, args.seed, n_requests)?, None),
+    let (responses, wire_json, wire_trace) = match &args.listen {
+        Some(addr) => run_wire_workload(
+            &mut log,
+            addr,
+            &server,
+            args.seed,
+            n_requests,
+            args.trace_out.is_some(),
+        )?,
+        None => (run_local_workload(&server, args.seed, n_requests)?, None, None),
     };
     let wall = t0.elapsed().as_secs_f64();
 
@@ -110,9 +124,18 @@ pub fn run(args: &ServeArgs) -> Result<()> {
     }
     for c in &m.clients {
         log.line(format!(
-            "client {}: admitted {}, completed {}, shed {}, errors {}",
-            c.client, c.admitted, c.completed, c.shed, c.errors
+            "client {}: admitted {}, completed {}, shed {}, errors {}, {:.1} req/s",
+            c.client, c.admitted, c.completed, c.shed, c.errors, c.req_per_s
         ));
+    }
+    if !m.latency_by_bucket.is_empty() {
+        log.line("SLO by sequence bucket (exact, worker-mergeable histogram percentiles):");
+        for bl in &m.latency_by_bucket {
+            log.line(format!(
+                "  s{}: {} completed, p50 {:.1} ms, p95 {:.1} ms, p99 {:.1} ms",
+                bl.seq_len, bl.count, bl.p50_ms, bl.p95_ms, bl.p99_ms
+            ));
+        }
     }
     for (seq_len, real, padded) in &m.padding_by_bucket {
         let waste = if *padded > 0 { 1.0 - *real as f64 / *padded as f64 } else { 0.0 };
@@ -132,6 +155,35 @@ pub fn run(args: &ServeArgs) -> Result<()> {
     }
     for (label, util) in m.backend_utilization(wall) {
         log.line(format!("backend {label}: utilization {:.0}%", 100.0 * util));
+    }
+    for r in &m.backend_roofline {
+        log.line(format!(
+            "backend {} roofline: achieved {:.2} GFLOP/s of {:.2} per-core peak \
+             ({:.0}% utilization)",
+            r.backend,
+            r.achieved_gflops,
+            r.peak_gflops,
+            100.0 * r.utilization
+        ));
+    }
+    if m.kernel_phases.iter().any(|p| p.calls > 0) {
+        log.line("kernel phases (analytic flop/byte totals, sampled timing):");
+        for p in &m.kernel_phases {
+            if p.calls == 0 {
+                continue;
+            }
+            log.line(format!(
+                "  {:<9} {:>9} calls, busy {:>9.2} ms, {:>9.3} GFLOP ({:>8.2} GFLOP/s), \
+                 {:>8.3} GB ({:>7.2} GB/s)",
+                p.phase,
+                p.calls,
+                p.busy_ms,
+                p.gflop,
+                p.achieved_gflops(),
+                p.gbyte,
+                p.achieved_gbps()
+            ));
+        }
     }
     for (seq_len, label, ewma) in &m.exec_ewma_ms {
         log.line(format!("bucket s{seq_len} on {label}: exec EWMA {ewma:.1} ms"));
@@ -155,6 +207,39 @@ pub fn run(args: &ServeArgs) -> Result<()> {
             log.line("\nmetrics JSON (a `metrics` wire request returns the same document):");
             log.line(server.metrics_json());
         }
+    }
+
+    if let Some(path) = &args.trace_out {
+        // over the wire the document came back through the trace frame;
+        // in-process it is exported directly — both are validated with
+        // the strict parser before anything is written
+        let json = match wire_trace {
+            Some(j) => j,
+            None => {
+                // the router records a request's root span just after
+                // its response write; let the last finish land so the
+                // export has no orphan children
+                std::thread::sleep(Duration::from_millis(100));
+                server.trace_json()
+            }
+        };
+        let spans = crate::obs::trace::parse_chrome_trace(&json)
+            .map_err(|e| anyhow::anyhow!("trace export failed strict parse: {e}"))?;
+        let summary = crate::obs::trace::validate_trace(&spans)
+            .map_err(|e| anyhow::anyhow!("trace validation failed: {e}"))?;
+        anyhow::ensure!(
+            summary.full_chains > 0,
+            "trace has no full admission→queue→dispatch→kernel chain"
+        );
+        if args.listen.is_some() {
+            anyhow::ensure!(summary.wire_chains > 0, "wire-served trace has no ingress spans");
+        }
+        std::fs::write(path, &json).with_context(|| format!("writing trace to {path}"))?;
+        log.line(format!(
+            "\ntrace: {} spans over {} traces ({} full chains, {} over the wire) -> {path} \
+             (load at ui.perfetto.dev)",
+            summary.spans, summary.traces, summary.full_chains, summary.wire_chains
+        ));
     }
     let path = log.finish()?;
     println!("(written to {})", path.display());
@@ -198,15 +283,17 @@ fn run_local_workload(server: &Arc<Server>, seed: u64, n: usize) -> Result<Vec<R
 
 /// Wire transport: the same workload over real TCP through the ingress,
 /// plus an overload burst that exercises typed sheds, plus a metrics
-/// scrape over the wire. Returns the workload responses and the
-/// wire-fetched metrics JSON.
+/// scrape over the wire (and, with `fetch_trace`, a trace scrape
+/// through the trace frame). Returns the workload responses, the
+/// wire-fetched metrics JSON, and the wire-fetched trace JSON.
 fn run_wire_workload(
     log: &mut RunLog,
     addr: &str,
     server: &Arc<Server>,
     seed: u64,
     n: usize,
-) -> Result<(Vec<Response>, Option<String>)> {
+    fetch_trace: bool,
+) -> Result<(Vec<Response>, Option<String>, Option<String>)> {
     let ingress = Ingress::bind(addr, server.clone())?;
     let bound = ingress.local_addr();
     log.line(format!("wire ingress: listening on {bound} (framed protocol v{WIRE_VERSION})"));
@@ -268,6 +355,21 @@ fn run_wire_workload(
         .context("connecting metrics client")?
         .metrics()
         .context("wire metrics request")?;
+
+    // trace over the wire, while the ingress is still up: the router
+    // records each request's root span just after its response write,
+    // so give the last finish a moment to land before snapshotting
+    let trace_json = if fetch_trace {
+        std::thread::sleep(Duration::from_millis(100));
+        Some(
+            WireClient::connect(&bound)
+                .context("connecting trace client")?
+                .trace()
+                .context("wire trace request")?,
+        )
+    } else {
+        None
+    };
     ingress.shutdown();
-    Ok((responses, Some(json)))
+    Ok((responses, Some(json), trace_json))
 }

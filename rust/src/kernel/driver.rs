@@ -25,12 +25,14 @@ use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
 
 use super::grad::attention::{sparse_attention_backward, AttnGradScratch};
 use super::layout::BlockCsr;
 use super::microkernel::{gemm_packed, GemmScratch, PackedMat};
 use super::sparse::{sparse_forward, sparse_forward_with_stats, SparseScratch};
 use super::HeadViews;
+use crate::obs::phase::{self, Phase};
 
 /// Per-thread scratch arena: every pool worker (and every caller
 /// thread, for its inline chunk) owns one, reused across calls so the
@@ -239,9 +241,14 @@ fn model_gemm_core(a: &[f32], b: &PackedMat, m: usize, acc: bool, out: &mut [f32
     if m == 0 {
         return;
     }
+    let prof = phase::enabled();
     let pool = KernelPool::global();
     if pool.threads() <= 1 || m * n * k < INLINE_MACS {
+        let t0 = if prof { Some(Instant::now()) } else { None };
         CALLER_ARENA.with(|ar| gemm_packed(a, b, m, acc, &mut ar.borrow_mut().gemm, out));
+        if let Some(t0) = t0 {
+            record_gemm(m, k, n, t0.elapsed().as_nanos() as u64);
+        }
         return;
     }
     let mut jobs: Vec<Box<dyn FnOnce(&mut ScratchArena) + Send + '_>> = Vec::new();
@@ -251,10 +258,26 @@ fn model_gemm_core(a: &[f32], b: &PackedMat, m: usize, acc: bool, out: &mut [f32
         out_rest = rest;
         let a_chunk = &a[first_row * k..(first_row + count) * k];
         jobs.push(Box::new(move |arena: &mut ScratchArena| {
+            // each chunk times itself, so the phase accumulator sums
+            // per-thread busy time (comparable to a per-core roofline),
+            // not the fork-join wall clock
+            let t0 = if prof { Some(Instant::now()) } else { None };
             gemm_packed(a_chunk, b, count, acc, &mut arena.gemm, out_chunk);
+            if let Some(t0) = t0 {
+                record_gemm(count, k, n, t0.elapsed().as_nanos() as u64);
+            }
         }));
     }
     pool.run(jobs);
+}
+
+/// Fold one executed `[m, k]·[k, n]` GEMM (or row chunk) into the
+/// [`Phase::Gemm`] accumulator: 2·m·k·n flops; A, B, and C traffic at
+/// f32 width (every row chunk reads all of B, so per-chunk B bytes are
+/// real traffic, not double counting).
+fn record_gemm(m: usize, k: usize, n: usize, nanos: u64) {
+    let (m, k, n) = (m as u64, k as u64, n as u64);
+    phase::record(Phase::Gemm, 1, nanos, 2 * m * k * n, (m * k + k * n + m * n) * 4);
 }
 
 /// Block-sparse attention forward over a `[batch, heads, n, head_dim]`
@@ -402,6 +425,12 @@ pub fn sparse_backward_batch(
     if tasks == 0 {
         return;
     }
+    let prof = phase::enabled();
+    // attended tiles per head problem — the analytic flop model below
+    // charges ~10·b²·d flops per tile (QKᵀ recompute, dV, dP, dQ, dK
+    // contractions) and Q/K/V/O/dO reads + dQ/dK/dV accumulator traffic
+    let tiles: u64 =
+        if prof { (0..layout.nb).map(|qb| layout.row(qb).len() as u64).sum() } else { 0 };
     let pool = KernelPool::global();
     let mut jobs: Vec<Box<dyn FnOnce(&mut ScratchArena) + Send + '_>> = Vec::new();
     let mut dq_rest = dq;
@@ -415,6 +444,7 @@ pub fn sparse_backward_batch(
         let (dv_chunk, rest) = dv_rest.split_at_mut(count * per);
         dv_rest = rest;
         jobs.push(Box::new(move |arena: &mut ScratchArena| {
+            let t0 = if prof { Some(Instant::now()) } else { None };
             for i in 0..count {
                 let task = first_task + i;
                 let b = task / heads;
@@ -437,6 +467,17 @@ pub fn sparse_backward_batch(
                     &mut dq_chunk[i * per..(i + 1) * per],
                     &mut dk_chunk[i * per..(i + 1) * per],
                     &mut dv_chunk[i * per..(i + 1) * per],
+                );
+            }
+            if let Some(t0) = t0 {
+                let (bu, du) = (layout.block as u64, head_dim as u64);
+                let work = count as u64 * tiles;
+                phase::record(
+                    Phase::Backward,
+                    count as u64,
+                    t0.elapsed().as_nanos() as u64,
+                    work * 10 * bu * bu * du,
+                    work * (11 * bu * du + 2 * bu * bu) * 4,
                 );
             }
         }));

@@ -582,8 +582,10 @@ impl NativeEngine {
             let t0 = Instant::now();
             let model =
                 NativeModel::new(self.cfg.clone()).context("building native serving model")?;
-            eprintln!(
-                "[kernel] built native model ({} params) in {:.2}s",
+            crate::log!(
+                crate::obs::log::Level::Info,
+                "kernel",
+                "built native model ({} params) in {:.2}s",
                 model.param_count(),
                 t0.elapsed().as_secs_f64()
             );
@@ -658,7 +660,11 @@ impl NativeEngine {
             .with_context(|| format!("native load_params for {artifact}"))?;
         if !self.load_params_noted {
             self.load_params_noted = true;
-            eprintln!("[kernel] installed trained parameters ({want} values) for native serving");
+            crate::log!(
+                crate::obs::log::Level::Info,
+                "kernel",
+                "installed trained parameters ({want} values) for native serving"
+            );
         }
         Ok(())
     }

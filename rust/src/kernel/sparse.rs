@@ -25,9 +25,12 @@
 //! process-lifetime scratch arena reused across every forward *and*
 //! backward invocation.
 
+use std::time::Instant;
+
 use super::layout::BlockCsr;
 use super::microkernel::{av_tile, pack_transposed, qk_tile};
 use super::HeadViews;
+use crate::obs::phase::{self, Phase};
 
 /// Reusable per-thread scratch for [`sparse_forward`]: one score tile
 /// (reused in place as the weight tile), the packed-transposed key
@@ -101,8 +104,56 @@ pub fn sparse_forward_with_stats(
     forward_core(x, head_dim, layout, scratch, out, m_out, l_out);
 }
 
+/// Streaming-softmax update for one `(qb, kb)` score tile, per query
+/// row of the block; the score tile becomes the weight tile in place.
+#[inline]
+fn softmax_update(scratch: &mut SparseScratch, b: usize, head_dim: usize) {
+    for i in 0..b {
+        let row = &mut scratch.scores[i * b..(i + 1) * b];
+        let tile_max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        if tile_max == f32::NEG_INFINITY {
+            // whole tile masked for this row: zero weights so the
+            // AV microkernel adds nothing
+            row.fill(0.0);
+            continue;
+        }
+        let m_new = scratch.m[i].max(tile_max);
+        // exp(-inf - finite) = 0: a row seeing its first live
+        // tile rescales its (all-zero) statistics by zero
+        let alpha = (scratch.m[i] - m_new).exp();
+        scratch.l[i] *= alpha;
+        let acc_row = &mut scratch.acc[i * head_dim..(i + 1) * head_dim];
+        acc_row.iter_mut().for_each(|a| *a *= alpha);
+        let mut row_sum = 0.0f32;
+        for s in row.iter_mut() {
+            // exp(-inf − m_new) = 0: masked keys drop out exactly
+            let w = (*s - m_new).exp();
+            row_sum += w;
+            *s = w;
+        }
+        scratch.l[i] += row_sum;
+        scratch.m[i] = m_new;
+    }
+}
+
+/// Advance the lap clock: nanoseconds since `*t`, then reset `*t`.
+#[inline]
+fn lap(t: &mut Instant) -> u64 {
+    let now = Instant::now();
+    let dt = now.duration_since(*t).as_nanos() as u64;
+    *t = now;
+    dt
+}
+
 /// Shared kernel body: `m_out`/`l_out` are either both `[n]` (training
 /// mode — final row statistics are saved) or both empty (serving mode).
+///
+/// When phase profiling is on, every 8th query block brackets its
+/// pack/QKᵀ/softmax/AV microkernel calls with a clock; the sampled
+/// busy time is scaled to the whole call by the exact
+/// total-tiles / sampled-tiles ratio at flush, while flop/byte totals
+/// are analytic over **all** tiles. Off, the cost is one branch per
+/// tile.
 fn forward_core(
     x: &HeadViews<'_>,
     head_dim: usize,
@@ -118,51 +169,45 @@ fn forward_core(
     assert_eq!(out.len(), n * head_dim, "output must be [n, head_dim]");
     let scale = 1.0 / (head_dim as f32).sqrt();
     scratch.ensure(b, head_dim);
+    let prof = phase::enabled();
+    let (mut tiles_total, mut tiles_sampled) = (0u64, 0u64);
+    let (mut t_pack, mut t_qk, mut t_soft, mut t_av) = (0u64, 0u64, 0u64, 0u64);
     for qb in 0..layout.nb {
         scratch.m.fill(f32::NEG_INFINITY);
         scratch.l.fill(0.0);
         scratch.acc.fill(0.0);
         let qs = layout.token_span(qb);
         let q_block = &x.q[qs.start * head_dim..qs.end * head_dim];
+        let sampled = prof && (qb & 7) == 0;
         for &kb in layout.row(qb) {
             let ks = layout.token_span(kb);
             let k_block = &x.k[ks.start * head_dim..ks.end * head_dim];
+            let v_block = &x.v[ks.start * head_dim..ks.end * head_dim];
             let valid = x.key_valid.map(|mask| &mask[ks.clone()]);
             // gathered QKᵀ tile for (qb, kb): pack Kᵀ once, then the
-            // register-blocked GEMM with scale+mask fused (masked → −inf)
-            pack_transposed(k_block, b, head_dim, &mut scratch.kt);
-            qk_tile(q_block, &scratch.kt, b, b, head_dim, scale, valid, &mut scratch.scores);
-            // streaming-softmax update per query row of the block; the
-            // score tile becomes the weight tile in place
-            for i in 0..b {
-                let row = &mut scratch.scores[i * b..(i + 1) * b];
-                let tile_max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-                if tile_max == f32::NEG_INFINITY {
-                    // whole tile masked for this row: zero weights so the
-                    // AV microkernel adds nothing
-                    row.fill(0.0);
-                    continue;
-                }
-                let m_new = scratch.m[i].max(tile_max);
-                // exp(-inf - finite) = 0: a row seeing its first live
-                // tile rescales its (all-zero) statistics by zero
-                let alpha = (scratch.m[i] - m_new).exp();
-                scratch.l[i] *= alpha;
-                let acc_row = &mut scratch.acc[i * head_dim..(i + 1) * head_dim];
-                acc_row.iter_mut().for_each(|a| *a *= alpha);
-                let mut row_sum = 0.0f32;
-                for s in row.iter_mut() {
-                    // exp(-inf − m_new) = 0: masked keys drop out exactly
-                    let w = (*s - m_new).exp();
-                    row_sum += w;
-                    *s = w;
-                }
-                scratch.l[i] += row_sum;
-                scratch.m[i] = m_new;
+            // register-blocked GEMM with scale+mask fused (masked →
+            // −inf), the streaming-softmax row pass, and the tiled AV
+            // accumulate of the whole weight tile
+            if sampled {
+                let mut t = Instant::now();
+                pack_transposed(k_block, b, head_dim, &mut scratch.kt);
+                t_pack += lap(&mut t);
+                qk_tile(q_block, &scratch.kt, b, b, head_dim, scale, valid, &mut scratch.scores);
+                t_qk += lap(&mut t);
+                softmax_update(scratch, b, head_dim);
+                t_soft += lap(&mut t);
+                av_tile(&scratch.scores, v_block, b, b, head_dim, &mut scratch.acc);
+                t_av += lap(&mut t);
+                tiles_sampled += 1;
+            } else {
+                pack_transposed(k_block, b, head_dim, &mut scratch.kt);
+                qk_tile(q_block, &scratch.kt, b, b, head_dim, scale, valid, &mut scratch.scores);
+                softmax_update(scratch, b, head_dim);
+                av_tile(&scratch.scores, v_block, b, b, head_dim, &mut scratch.acc);
             }
-            // tiled AV accumulate of the whole weight tile
-            let v_block = &x.v[ks.start * head_dim..ks.end * head_dim];
-            av_tile(&scratch.scores, v_block, b, b, head_dim, &mut scratch.acc);
+        }
+        if prof {
+            tiles_total += layout.row(qb).len() as u64;
         }
         // normalise and write the block's output rows
         for i in 0..b {
@@ -181,6 +226,42 @@ fn forward_core(
             m_out[qb * b..(qb + 1) * b].copy_from_slice(&scratch.m[..b]);
             l_out[qb * b..(qb + 1) * b].copy_from_slice(&scratch.l[..b]);
         }
+    }
+    if prof && tiles_total > 0 {
+        // one flush per kernel call keeps the atomics off the tile loop.
+        // Analytic per-tile work: QKᵀ and AV are 2·b²·d flops; the
+        // softmax row pass is ~5 flops per score (max, sub, exp, sum,
+        // rescale); pack moves one b×d block through a transpose.
+        let (bu, du) = (b as u64, head_dim as u64);
+        let up = |t: u64| {
+            if tiles_sampled > 0 {
+                (t as f64 * tiles_total as f64 / tiles_sampled as f64) as u64
+            } else {
+                0
+            }
+        };
+        phase::record(Phase::Pack, tiles_total, up(t_pack), 0, tiles_total * bu * du * 8);
+        phase::record(
+            Phase::QkT,
+            tiles_total,
+            up(t_qk),
+            tiles_total * 2 * bu * bu * du,
+            tiles_total * (2 * bu * du + bu * bu) * 4,
+        );
+        phase::record(
+            Phase::Softmax,
+            tiles_total,
+            up(t_soft),
+            tiles_total * 5 * bu * bu,
+            tiles_total * bu * bu * 8,
+        );
+        phase::record(
+            Phase::Av,
+            tiles_total,
+            up(t_av),
+            tiles_total * 2 * bu * bu * du,
+            tiles_total * (bu * bu + 2 * bu * du) * 4,
+        );
     }
 }
 

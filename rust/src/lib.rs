@@ -37,6 +37,7 @@ pub mod experiments;
 pub mod graph;
 pub mod kernel;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod tokenizer;
 pub mod train;

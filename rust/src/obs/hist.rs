@@ -1,0 +1,233 @@
+//! Fixed-boundary log-bucket latency histograms.
+//!
+//! Every histogram in the process shares one compile-time bucket
+//! layout: bucket 0 catches everything below [`MIN_MS`] (1 µs), the
+//! last bucket catches everything at or above the top boundary, and
+//! the 126 buckets between them grow geometrically at
+//! [`SUB_BUCKETS`] = 4 buckets per octave (ratio 2^(1/4) ≈ 1.19), so
+//! the layout spans 1 µs … ~70 min of latency. Because the boundaries
+//! are fixed, two histograms **merge exactly**: `merge` is a plain
+//! elementwise add, associative and commutative, and a merged
+//! histogram is bit-identical to the histogram of the concatenated
+//! samples. That is what lets `MetricsSnapshot` report one set of
+//! percentiles across workers (and per sequence bucket) with no
+//! sampling noise — unlike the retired [`Reservoir`], identical runs
+//! produce identical percentiles.
+//!
+//! [`percentile`] uses the nearest-rank convention
+//! (`rank = ceil(p/100 · count)`) and reports the geometric midpoint
+//! of the bucket holding that rank, so the reported value is within a
+//! factor of 2^(1/8) ≈ 1.09 of the exact order statistic (the
+//! property test in `tests/metrics_properties.rs` pins this bound
+//! against a sorted-vector oracle).
+//!
+//! [`Reservoir`]: crate::util::stats::Reservoir
+//! [`percentile`]: Histogram::percentile
+
+/// Total number of buckets (including the two open-ended end buckets).
+pub const BUCKETS: usize = 128;
+
+/// Buckets per octave (power of two) of latency.
+pub const SUB_BUCKETS: usize = 4;
+
+/// Lower boundary of the geometric range, in milliseconds (1 µs).
+pub const MIN_MS: f64 = 1e-3;
+
+/// A latency histogram over the shared fixed bucket layout, plus an
+/// exact running sum/count for the mean.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Histogram { counts: [0; BUCKETS], count: 0, sum: 0.0 }
+    }
+
+    /// Bucket index for a value in ms. Negative and sub-µs values land
+    /// in bucket 0; values past the top boundary land in the last
+    /// bucket. Non-finite values are the caller's problem (record
+    /// ignores them).
+    pub fn bucket_index(ms: f64) -> usize {
+        if ms < MIN_MS {
+            return 0;
+        }
+        let octaves = (ms / MIN_MS).log2();
+        let idx = 1 + (octaves * SUB_BUCKETS as f64).floor() as usize;
+        idx.min(BUCKETS - 1)
+    }
+
+    /// `(lower, upper)` boundary of bucket `i` in ms. Bucket 0 is
+    /// `[0, MIN_MS)`; the last bucket's upper bound is `f64::INFINITY`.
+    pub fn bucket_bounds(i: usize) -> (f64, f64) {
+        assert!(i < BUCKETS, "bucket index {i} out of range");
+        let edge = |k: usize| MIN_MS * 2f64.powf(k as f64 / SUB_BUCKETS as f64);
+        if i == 0 {
+            (0.0, MIN_MS)
+        } else if i == BUCKETS - 1 {
+            (edge(i - 1), f64::INFINITY)
+        } else {
+            (edge(i - 1), edge(i))
+        }
+    }
+
+    /// Deterministic representative value of bucket `i`: the geometric
+    /// midpoint of its boundaries (arithmetic midpoint for bucket 0,
+    /// lower bound for the open-ended last bucket).
+    pub fn bucket_value(i: usize) -> f64 {
+        let (lo, hi) = Self::bucket_bounds(i);
+        if i == 0 {
+            hi / 2.0
+        } else if i == BUCKETS - 1 {
+            lo
+        } else {
+            (lo * hi).sqrt()
+        }
+    }
+
+    /// Record one sample in ms. Non-finite samples are ignored;
+    /// negative samples clamp to 0.
+    pub fn record(&mut self, ms: f64) {
+        if !ms.is_finite() {
+            return;
+        }
+        let ms = ms.max(0.0);
+        self.counts[Self::bucket_index(ms)] += 1;
+        self.count += 1;
+        self.sum += ms;
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of recorded samples (ms).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean of recorded samples (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Nearest-rank percentile (`0 < p <= 100`): the representative
+    /// value of the bucket containing the `ceil(p/100 · count)`-th
+    /// smallest sample. Returns 0.0 when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().clamp(1.0, self.count as f64) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_value(i);
+            }
+        }
+        Self::bucket_value(BUCKETS - 1)
+    }
+
+    /// Fold `other` into `self`. Exact: the result equals the
+    /// histogram of the concatenated sample streams.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// Raw per-bucket counts (index with [`Histogram::bucket_bounds`]).
+    pub fn counts(&self) -> &[u64; BUCKETS] {
+        &self.counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_layout_is_monotonic_and_covering() {
+        let mut prev_hi = 0.0;
+        for i in 0..BUCKETS {
+            let (lo, hi) = Histogram::bucket_bounds(i);
+            assert!(lo >= prev_hi - 1e-12, "bucket {i} overlaps its predecessor");
+            assert!(hi > lo, "bucket {i} is empty");
+            prev_hi = lo.max(prev_hi);
+        }
+        // every boundary value indexes into the bucket it opens
+        for i in 1..BUCKETS - 1 {
+            let (lo, hi) = Histogram::bucket_bounds(i);
+            assert_eq!(Histogram::bucket_index((lo * hi).sqrt()), i);
+        }
+        assert_eq!(Histogram::bucket_index(0.0), 0);
+        assert_eq!(Histogram::bucket_index(-5.0), 0);
+        assert_eq!(Histogram::bucket_index(f64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn percentile_is_deterministic_and_ordered() {
+        let mut h = Histogram::new();
+        for i in 0..1000 {
+            h.record(i as f64 * 0.1);
+        }
+        let (p50, p95, p99) = (h.percentile(50.0), h.percentile(95.0), h.percentile(99.0));
+        assert!(p50 <= p95 && p95 <= p99);
+        // identical stream in reverse order: identical percentiles
+        let mut r = Histogram::new();
+        for i in (0..1000).rev() {
+            r.record(i as f64 * 0.1);
+        }
+        assert_eq!(h, r);
+        assert_eq!(r.percentile(50.0), p50);
+    }
+
+    #[test]
+    fn merge_matches_concatenation() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut all = Histogram::new();
+        for i in 0..500 {
+            let v = (i as f64 * 7.3) % 250.0;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, all);
+    }
+
+    #[test]
+    fn mean_is_exact_and_hostile_inputs_ignored() {
+        let mut h = Histogram::new();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 0);
+        h.record(2.0);
+        h.record(4.0);
+        h.record(-1.0); // clamps to 0
+        assert_eq!(h.count(), 3);
+        assert!((h.mean() - 2.0).abs() < 1e-12);
+    }
+}

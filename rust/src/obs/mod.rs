@@ -1,0 +1,33 @@
+//! Observability: zero-dependency tracing, profiling, and telemetry
+//! primitives threaded through the serving stack.
+//!
+//! Four pieces, each independently gated so the disabled cost on hot
+//! paths is one relaxed atomic load (the bench gate pins this):
+//!
+//! * [`trace`] — request spans with parent/child links, recorded into
+//!   lock-free per-thread ring buffers and exported as Chrome
+//!   trace-event JSON (Perfetto-loadable) via the `trace` wire frame
+//!   and `serve --trace-out <path>`.
+//! * [`phase`] — per-phase kernel accumulators (pack, QKᵀ, softmax,
+//!   AV, backward, GEMM) with analytic flop/byte counts, feeding
+//!   achieved-vs-roofline utilization in `MetricsSnapshot` and the
+//!   `kernel-probe` profile table.
+//! * [`hist`] — fixed-boundary log-bucket latency histograms that
+//!   merge exactly across workers; the deterministic SLO percentiles
+//!   in `MetricsSnapshot` (per `native_mlm_s{n}` sequence bucket).
+//! * [`log`] — the `log!(level, target, ...)` facade with the
+//!   `BB_LOG` env filter and per-target rate limiting, replacing the
+//!   scattered `eprintln!` calls.
+//!
+//! See rust/README.md "Observability" for the span model, frame
+//! layout, filter syntax, and bucket boundaries.
+
+pub mod hist;
+pub mod log;
+pub mod phase;
+pub mod trace;
+
+pub use hist::Histogram;
+pub use log::Level;
+pub use phase::{Phase, PhaseStat};
+pub use trace::{SpanKind, SpanRecord, TraceSummary};

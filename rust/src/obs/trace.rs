@@ -1,0 +1,752 @@
+//! Request-span tracing: wall-clock intervals with parent/child links,
+//! recorded into lock-free per-thread ring buffers and exported as
+//! Chrome trace-event JSON (loadable in Perfetto / `chrome://tracing`).
+//!
+//! **Span model.** Every request is one *trace*, keyed by the server's
+//! internal request id. The root `request` span covers submission →
+//! response; its children cover the serving stages:
+//!
+//! ```text
+//! request ──────────────────────────────────────────────────┐ (root)
+//!   ingress     wire frame decode → submit return           │
+//!   admission   the admission verdict                       │
+//!   queue       batcher wait (admitted → dispatched)        │
+//!   dispatch    batch formation + worker pick + enqueue     │
+//!   worker_queue  worker job-queue wait                     │
+//!   kernel      batch execution on the worker               │
+//!   write       response handoff to the reply channel       │
+//! ```
+//!
+//! Span ids are deterministic — root = `trace·16`, child =
+//! `trace·16 + kind` — and every child's interval is contained in its
+//! root's interval (the property test pins child ⊆ parent and
+//! no-orphans). Batch-level stages (dispatch, worker queue, kernel)
+//! are recorded once per request in the batch, so each trace is a
+//! complete, self-contained timeline.
+//!
+//! **Recording.** Each thread owns a fixed-capacity ring of atomic
+//! slots guarded by a seqlock counter; producers never block or
+//! allocate after the ring exists, and the exporter snapshots slots
+//! without stopping writers (a torn slot is simply skipped). When
+//! tracing is disabled — the default — recording is one relaxed
+//! atomic load.
+//!
+//! **Export.** [`export_chrome_json`] renders complete (`"ph":"X"`)
+//! events with microsecond timestamps; `pid` is always 1 and `tid` is
+//! the trace id, so Perfetto shows one lane per request. The exact
+//! nanosecond interval and the span/parent links ride in `args`, which
+//! is what [`parse_chrome_trace`] (a strict, zero-dependency parser)
+//! and [`validate_trace`] check.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Default per-thread ring capacity, in spans (~64 B per slot).
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// The stage a span describes. Discriminants are stable wire/JSON ids.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// Root: submission → response, one per request.
+    Request = 0,
+    /// Wire frame decode + submit on the connection thread.
+    Ingress = 1,
+    /// Admission verdict inside `submit`.
+    Admission = 2,
+    /// Batcher queue wait (admitted → dispatched).
+    Queue = 3,
+    /// Batch formation, worker pick, and job enqueue.
+    Dispatch = 4,
+    /// Worker job-queue wait (dispatched → picked up).
+    WorkerQueue = 5,
+    /// Batch execution on the engine worker.
+    Kernel = 6,
+    /// Response handoff to the reply channel.
+    Write = 7,
+}
+
+/// All span kinds, in pipeline order.
+pub const SPAN_KINDS: [SpanKind; 8] = [
+    SpanKind::Request,
+    SpanKind::Ingress,
+    SpanKind::Admission,
+    SpanKind::Queue,
+    SpanKind::Dispatch,
+    SpanKind::WorkerQueue,
+    SpanKind::Kernel,
+    SpanKind::Write,
+];
+
+impl SpanKind {
+    /// Stable event name in the exported trace.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::Request => "request",
+            SpanKind::Ingress => "ingress",
+            SpanKind::Admission => "admission",
+            SpanKind::Queue => "queue",
+            SpanKind::Dispatch => "dispatch",
+            SpanKind::WorkerQueue => "worker_queue",
+            SpanKind::Kernel => "kernel",
+            SpanKind::Write => "write",
+        }
+    }
+
+    /// Inverse of [`SpanKind::as_str`].
+    pub fn parse(s: &str) -> Option<SpanKind> {
+        SPAN_KINDS.iter().copied().find(|k| k.as_str() == s)
+    }
+}
+
+/// One recorded span, as stored in the rings and round-tripped
+/// through the Chrome JSON.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SpanRecord {
+    /// Trace id (the server's internal request id).
+    pub trace: u64,
+    /// This span's id (`trace·16 + kind`).
+    pub span: u64,
+    /// Parent span id (0 for the root).
+    pub parent: u64,
+    /// Stage.
+    pub kind: SpanKind,
+    /// Start, nanoseconds since the tracer epoch.
+    pub start_ns: u64,
+    /// Duration in nanoseconds.
+    pub dur_ns: u64,
+    /// Stage-specific argument (worker index for dispatch/kernel).
+    pub arg: u64,
+}
+
+const SLOT_WORDS: usize = 7;
+
+struct Slot {
+    seq: AtomicU64,
+    data: [AtomicU64; SLOT_WORDS],
+}
+
+struct ThreadRing {
+    slots: Box<[Slot]>,
+    head: AtomicU64,
+}
+
+impl ThreadRing {
+    fn new(capacity: usize) -> Self {
+        let slots = (0..capacity.max(1))
+            .map(|_| Slot {
+                seq: AtomicU64::new(0),
+                data: std::array::from_fn(|_| AtomicU64::new(0)),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        ThreadRing { slots, head: AtomicU64::new(0) }
+    }
+
+    /// Single-producer push (the owning thread) under a seqlock: the
+    /// slot is odd while mid-write, and readers retry/skip torn slots.
+    fn push(&self, words: [u64; SLOT_WORDS]) {
+        let i = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(i % self.slots.len() as u64) as usize];
+        slot.seq.fetch_add(1, Ordering::Release); // now odd: write in progress
+        for (d, w) in slot.data.iter().zip(words) {
+            d.store(w, Ordering::Relaxed);
+        }
+        slot.seq.fetch_add(1, Ordering::Release); // even again: stable
+    }
+
+    fn snapshot(&self, out: &mut Vec<SpanRecord>) {
+        let head = self.head.load(Ordering::Acquire);
+        let filled = (head as usize).min(self.slots.len());
+        for slot in &self.slots[..filled] {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 & 1 == 1 {
+                continue; // mid-write; skip rather than block the producer
+            }
+            let mut words = [0u64; SLOT_WORDS];
+            for (w, d) in words.iter_mut().zip(&slot.data) {
+                *w = d.load(Ordering::Relaxed);
+            }
+            std::sync::atomic::fence(Ordering::Acquire);
+            if slot.seq.load(Ordering::Relaxed) != s1 {
+                continue; // torn: overwritten while reading
+            }
+            let Some(kind) = SPAN_KINDS.get(words[3] as usize).copied() else {
+                continue;
+            };
+            out.push(SpanRecord {
+                trace: words[0],
+                span: words[1],
+                parent: words[2],
+                kind,
+                start_ns: words[4],
+                dur_ns: words[5],
+                arg: words[6],
+            });
+        }
+    }
+}
+
+struct Registry {
+    epoch: Instant,
+    capacity: usize,
+    rings: Mutex<Vec<Arc<ThreadRing>>>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+
+fn registry(capacity: usize) -> &'static Registry {
+    REGISTRY.get_or_init(|| Registry {
+        epoch: Instant::now(),
+        capacity: capacity.max(1),
+        rings: Mutex::new(Vec::new()),
+    })
+}
+
+thread_local! {
+    static RING: std::cell::OnceCell<Arc<ThreadRing>> = const { std::cell::OnceCell::new() };
+}
+
+/// Turn span recording on. The per-thread ring capacity is fixed by
+/// the first `enable` call of the process; later calls just flip the
+/// gate back on.
+pub fn enable(ring_capacity: usize) {
+    registry(ring_capacity);
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Stop recording (already-recorded spans remain exportable).
+pub fn disable() {
+    ENABLED.store(false, Ordering::Release);
+}
+
+/// Is span recording on? One relaxed load — check before touching any
+/// clock on a hot path.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Deterministic span id for `kind` within `trace`.
+pub fn span_id(trace: u64, kind: SpanKind) -> u64 {
+    trace.wrapping_mul(16) + kind as u64
+}
+
+/// Record one span of `kind` for `trace` covering `[start, end]`.
+/// No-op when tracing is disabled. The parent link is implied by the
+/// kind: roots have parent 0, every other kind links to the trace's
+/// root span.
+pub fn span(kind: SpanKind, trace: u64, start: Instant, end: Instant, arg: u64) {
+    if !enabled() {
+        return;
+    }
+    let reg = registry(DEFAULT_RING_CAPACITY);
+    let start_ns = start.saturating_duration_since(reg.epoch).as_nanos() as u64;
+    let dur_ns = end.saturating_duration_since(start).as_nanos() as u64;
+    let parent = if kind == SpanKind::Request { 0 } else { span_id(trace, SpanKind::Request) };
+    let words = [trace, span_id(trace, kind), parent, kind as u64, start_ns, dur_ns, arg];
+    RING.with(|cell| {
+        let ring = cell.get_or_init(|| {
+            let ring = Arc::new(ThreadRing::new(reg.capacity));
+            match reg.rings.lock() {
+                Ok(mut all) => all.push(ring.clone()),
+                Err(mut p) => p.get_mut().push(ring.clone()),
+            }
+            ring
+        });
+        ring.push(words);
+    });
+}
+
+/// Snapshot every thread's ring into one list, sorted by
+/// `(trace, start, span)` for a stable export.
+pub fn collect() -> Vec<SpanRecord> {
+    let mut out = Vec::new();
+    if let Some(reg) = REGISTRY.get() {
+        let rings: Vec<Arc<ThreadRing>> = match reg.rings.lock() {
+            Ok(g) => g.clone(),
+            Err(p) => p.into_inner().clone(),
+        };
+        for ring in rings {
+            ring.snapshot(&mut out);
+        }
+    }
+    out.sort_by_key(|s| (s.trace, s.start_ns, s.span));
+    out.dedup();
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event JSON export
+// ---------------------------------------------------------------------------
+
+fn push_f64(out: &mut String, v: f64) {
+    if v.is_finite() {
+        out.push_str(&format!("{v}"));
+    } else {
+        out.push('0');
+    }
+}
+
+/// Render spans as a Chrome trace-event JSON document (complete `X`
+/// events, µs timestamps, one `tid` lane per trace). The exact
+/// nanosecond interval and span/parent links ride in `args`.
+pub fn render_chrome_json(spans: &[SpanRecord]) -> String {
+    let mut out = String::with_capacity(64 + spans.len() * 160);
+    out.push_str("{\"traceEvents\":[");
+    for (i, s) in spans.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("{\"name\":\"");
+        out.push_str(s.kind.as_str());
+        out.push_str("\",\"cat\":\"bigbird\",\"ph\":\"X\",\"ts\":");
+        push_f64(&mut out, s.start_ns as f64 / 1e3);
+        out.push_str(",\"dur\":");
+        push_f64(&mut out, s.dur_ns as f64 / 1e3);
+        out.push_str(",\"pid\":1,\"tid\":");
+        out.push_str(&s.trace.to_string());
+        out.push_str(",\"args\":{\"trace\":");
+        out.push_str(&s.trace.to_string());
+        out.push_str(",\"span\":");
+        out.push_str(&s.span.to_string());
+        out.push_str(",\"parent\":");
+        out.push_str(&s.parent.to_string());
+        out.push_str(",\"start_ns\":");
+        out.push_str(&s.start_ns.to_string());
+        out.push_str(",\"dur_ns\":");
+        out.push_str(&s.dur_ns.to_string());
+        out.push_str(",\"arg\":");
+        out.push_str(&s.arg.to_string());
+        out.push_str("}}");
+    }
+    out.push_str("],\"displayTimeUnit\":\"ms\"}");
+    out
+}
+
+/// [`collect`] + [`render_chrome_json`]: the document the `trace`
+/// wire frame and `--trace-out` write.
+pub fn export_chrome_json() -> String {
+    render_chrome_json(&collect())
+}
+
+// ---------------------------------------------------------------------------
+// Strict parser (round-trip checking; no serde anywhere in the crate)
+// ---------------------------------------------------------------------------
+
+struct Parser<'a> {
+    src: &'a str,
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(s: &'a str) -> Self {
+        Parser { src: s, bytes: s.as_bytes(), pos: 0 }
+    }
+
+    fn err<T>(&self, msg: &str) -> Result<T, String> {
+        Err(format!("trace JSON invalid at byte {}: {msg}", self.pos))
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.bytes.get(self.pos), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, ch: u8) -> Result<(), String> {
+        self.skip_ws();
+        if self.bytes.get(self.pos) == Some(&ch) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            self.err(&format!("expected {:?}", ch as char))
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bytes.get(self.pos) {
+                None => return self.err("unterminated string"),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.bytes.get(self.pos) {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        _ => return self.err("unsupported escape"),
+                    }
+                    self.pos += 1;
+                }
+                Some(&c) if c < 0x20 => return self.err("raw control byte in string"),
+                Some(_) => {
+                    // `pos` only ever lands on char boundaries, so this
+                    // slice-and-next is safe for multi-byte UTF-8
+                    let ch = self.src[self.pos..].chars().next().unwrap();
+                    out.push(ch);
+                    self.pos += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<f64, String> {
+        self.skip_ws();
+        let start = self.pos;
+        while matches!(
+            self.bytes.get(self.pos),
+            Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        ) {
+            self.pos += 1;
+        }
+        if start == self.pos {
+            return self.err("expected number");
+        }
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .filter(|v| v.is_finite())
+            .ok_or_else(|| format!("trace JSON invalid at byte {start}: bad number"))
+    }
+
+    fn u64_field(&mut self) -> Result<u64, String> {
+        let v = self.number()?;
+        if v < 0.0 || v.fract() != 0.0 || v > 2f64.powi(53) {
+            return self.err("expected a non-negative integer");
+        }
+        Ok(v as u64)
+    }
+}
+
+/// Strictly parse a Chrome trace-event document produced by
+/// [`render_chrome_json`]: the exact key set, `"ph":"X"` only,
+/// integer args, no trailing input. Anything else is an error — this
+/// is the CI validation path, so leniency would hide export bugs.
+pub fn parse_chrome_trace(json: &str) -> Result<Vec<SpanRecord>, String> {
+    let mut p = Parser::new(json);
+    let mut spans = Vec::new();
+    p.expect(b'{')?;
+    if p.string()? != "traceEvents" {
+        return p.err("expected \"traceEvents\"");
+    }
+    p.expect(b':')?;
+    p.expect(b'[')?;
+    if p.peek() == Some(b']') {
+        p.pos += 1;
+    } else {
+        loop {
+            spans.push(parse_event(&mut p)?);
+            match p.peek() {
+                Some(b',') => p.pos += 1,
+                Some(b']') => {
+                    p.pos += 1;
+                    break;
+                }
+                _ => return p.err("expected ',' or ']'"),
+            }
+        }
+    }
+    // optional trailing displayTimeUnit
+    if p.peek() == Some(b',') {
+        p.pos += 1;
+        if p.string()? != "displayTimeUnit" {
+            return p.err("unknown top-level key");
+        }
+        p.expect(b':')?;
+        if p.string()? != "ms" {
+            return p.err("unsupported displayTimeUnit");
+        }
+    }
+    p.expect(b'}')?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return p.err("trailing input after document");
+    }
+    Ok(spans)
+}
+
+fn parse_event(p: &mut Parser<'_>) -> Result<SpanRecord, String> {
+    p.expect(b'{')?;
+    let (mut name, mut trace, mut span, mut parent) = (None, None, None, None);
+    let (mut start_ns, mut dur_ns, mut arg, mut tid) = (None, None, None, None);
+    let (mut saw_ts, mut saw_dur, mut saw_pid, mut saw_cat, mut saw_ph) =
+        (false, false, false, false, false);
+    loop {
+        let key = p.string()?;
+        p.expect(b':')?;
+        match key.as_str() {
+            "name" => name = Some(p.string()?),
+            "cat" => {
+                if p.string()? != "bigbird" {
+                    return p.err("unexpected event category");
+                }
+                saw_cat = true;
+            }
+            "ph" => {
+                if p.string()? != "X" {
+                    return p.err("only complete (\"X\") events are valid");
+                }
+                saw_ph = true;
+            }
+            "ts" => {
+                p.number()?;
+                saw_ts = true;
+            }
+            "dur" => {
+                p.number()?;
+                saw_dur = true;
+            }
+            "pid" => {
+                p.u64_field()?;
+                saw_pid = true;
+            }
+            "tid" => tid = Some(p.u64_field()?),
+            "args" => {
+                p.expect(b'{')?;
+                loop {
+                    let akey = p.string()?;
+                    p.expect(b':')?;
+                    let v = p.u64_field()?;
+                    match akey.as_str() {
+                        "trace" => trace = Some(v),
+                        "span" => span = Some(v),
+                        "parent" => parent = Some(v),
+                        "start_ns" => start_ns = Some(v),
+                        "dur_ns" => dur_ns = Some(v),
+                        "arg" => arg = Some(v),
+                        _ => return p.err("unknown args key"),
+                    }
+                    match p.peek() {
+                        Some(b',') => p.pos += 1,
+                        Some(b'}') => {
+                            p.pos += 1;
+                            break;
+                        }
+                        _ => return p.err("expected ',' or '}' in args"),
+                    }
+                }
+            }
+            _ => return p.err("unknown event key"),
+        }
+        match p.peek() {
+            Some(b',') => p.pos += 1,
+            Some(b'}') => {
+                p.pos += 1;
+                break;
+            }
+            _ => return p.err("expected ',' or '}' in event"),
+        }
+    }
+    if !(saw_ts && saw_dur && saw_pid && saw_cat && saw_ph) {
+        return p.err("event is missing a required key");
+    }
+    let name = name.ok_or("event missing name")?;
+    let kind = SpanKind::parse(&name).ok_or_else(|| format!("unknown span name {name:?}"))?;
+    let rec = SpanRecord {
+        trace: trace.ok_or("args missing trace")?,
+        span: span.ok_or("args missing span")?,
+        parent: parent.ok_or("args missing parent")?,
+        kind,
+        start_ns: start_ns.ok_or("args missing start_ns")?,
+        dur_ns: dur_ns.ok_or("args missing dur_ns")?,
+        arg: arg.ok_or("args missing arg")?,
+    };
+    if tid != Some(rec.trace) {
+        return p.err("tid must equal the trace id");
+    }
+    Ok(rec)
+}
+
+// ---------------------------------------------------------------------------
+// Validation
+// ---------------------------------------------------------------------------
+
+/// What [`validate_trace`] found.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TraceSummary {
+    /// Total spans checked.
+    pub spans: usize,
+    /// Distinct trace ids.
+    pub traces: usize,
+    /// Traces with the full admission→queue→dispatch→worker-queue→
+    /// kernel chain under one root.
+    pub full_chains: usize,
+    /// Full-chain traces that also carry an ingress span (came over
+    /// the wire).
+    pub wire_chains: usize,
+}
+
+/// Check structural invariants over a parsed span set: span ids are
+/// unique per trace, every non-root span's parent exists (no
+/// orphans), and every child interval is contained in its parent's.
+/// Returns per-kind coverage counts on success.
+pub fn validate_trace(spans: &[SpanRecord]) -> Result<TraceSummary, String> {
+    use std::collections::BTreeMap;
+    let mut by_trace: BTreeMap<u64, Vec<&SpanRecord>> = BTreeMap::new();
+    for s in spans {
+        by_trace.entry(s.trace).or_default().push(s);
+    }
+    let mut summary =
+        TraceSummary { spans: spans.len(), traces: by_trace.len(), ..Default::default() };
+    for (trace, group) in &by_trace {
+        let mut ids = BTreeMap::new();
+        for s in group {
+            if ids.insert(s.span, *s).is_some() {
+                return Err(format!("trace {trace}: duplicate span id {}", s.span));
+            }
+        }
+        for s in group {
+            if s.parent == 0 {
+                continue;
+            }
+            let parent = ids.get(&s.parent).ok_or_else(|| {
+                format!("trace {trace}: span {} is an orphan (parent {} missing)", s.span, s.parent)
+            })?;
+            let (cs, ce) = (s.start_ns, s.start_ns + s.dur_ns);
+            let (ps, pe) = (parent.start_ns, parent.start_ns + parent.dur_ns);
+            if cs < ps || ce > pe {
+                return Err(format!(
+                    "trace {trace}: {} span [{cs},{ce}]ns escapes its parent {} [{ps},{pe}]ns",
+                    s.kind.as_str(),
+                    parent.kind.as_str()
+                ));
+            }
+        }
+        let has = |k: SpanKind| group.iter().any(|s| s.kind == k);
+        if has(SpanKind::Request)
+            && has(SpanKind::Admission)
+            && has(SpanKind::Queue)
+            && has(SpanKind::Dispatch)
+            && has(SpanKind::WorkerQueue)
+            && has(SpanKind::Kernel)
+        {
+            summary.full_chains += 1;
+            if has(SpanKind::Ingress) {
+                summary.wire_chains += 1;
+            }
+        }
+    }
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(trace: u64, kind: SpanKind, start_ns: u64, dur_ns: u64) -> SpanRecord {
+        SpanRecord {
+            trace,
+            span: span_id(trace, kind),
+            parent: if kind == SpanKind::Request { 0 } else { span_id(trace, SpanKind::Request) },
+            kind,
+            start_ns,
+            dur_ns,
+            arg: 0,
+        }
+    }
+
+    fn full_trace(trace: u64) -> Vec<SpanRecord> {
+        vec![
+            rec(trace, SpanKind::Request, 100, 1000),
+            rec(trace, SpanKind::Ingress, 100, 50),
+            rec(trace, SpanKind::Admission, 110, 20),
+            rec(trace, SpanKind::Queue, 150, 200),
+            rec(trace, SpanKind::Dispatch, 350, 40),
+            rec(trace, SpanKind::WorkerQueue, 390, 60),
+            rec(trace, SpanKind::Kernel, 450, 500),
+            rec(trace, SpanKind::Write, 1050, 50),
+        ]
+    }
+
+    #[test]
+    fn json_round_trips_exactly() {
+        let spans: Vec<SpanRecord> = (1u64..=3).flat_map(full_trace).collect();
+        let json = render_chrome_json(&spans);
+        let parsed = parse_chrome_trace(&json).unwrap();
+        assert_eq!(parsed, spans);
+        // and re-rendering the parse is byte-identical
+        assert_eq!(render_chrome_json(&parsed), json);
+        // empty documents round-trip too
+        assert_eq!(parse_chrome_trace(&render_chrome_json(&[])).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn parser_is_strict() {
+        let good = render_chrome_json(&full_trace(1));
+        assert!(parse_chrome_trace(&good).is_ok());
+        // trailing garbage
+        assert!(parse_chrome_trace(&format!("{good} ")).is_ok(), "trailing ws is fine");
+        assert!(parse_chrome_trace(&format!("{good}x")).is_err());
+        // wrong phase marker
+        assert!(parse_chrome_trace(&good.replace("\"ph\":\"X\"", "\"ph\":\"B\"")).is_err());
+        // unknown span name
+        assert!(parse_chrome_trace(&good.replace("\"request\"", "\"mystery\"")).is_err());
+        // unknown key
+        assert!(parse_chrome_trace(&good.replace("\"cat\"", "\"dog\"")).is_err());
+        // tid must match the trace id
+        assert!(parse_chrome_trace(&good.replace("\"tid\":1,", "\"tid\":9,")).is_err());
+        // non-integer args
+        assert!(parse_chrome_trace(&good.replace("\"arg\":0", "\"arg\":0.5")).is_err());
+        assert!(parse_chrome_trace("{}").is_err());
+        assert!(parse_chrome_trace("").is_err());
+    }
+
+    #[test]
+    fn validation_accepts_nesting_and_rejects_violations() {
+        let spans = full_trace(7);
+        let s = validate_trace(&spans).unwrap();
+        assert_eq!(s.traces, 1);
+        assert_eq!(s.full_chains, 1);
+        assert_eq!(s.wire_chains, 1);
+
+        // child escaping its parent interval
+        let mut bad = full_trace(7);
+        bad[6].dur_ns = 10_000_000;
+        assert!(validate_trace(&bad).unwrap_err().contains("escapes"));
+
+        // orphan: child without its root
+        let orphan = vec![rec(9, SpanKind::Kernel, 0, 10)];
+        assert!(validate_trace(&orphan).unwrap_err().contains("orphan"));
+
+        // duplicate span ids
+        let mut dup = full_trace(7);
+        dup.push(dup[0].clone());
+        assert!(validate_trace(&dup).unwrap_err().contains("duplicate"));
+    }
+
+    #[test]
+    fn ring_snapshot_sees_pushed_spans_and_survives_wrap() {
+        let ring = ThreadRing::new(8);
+        for i in 0..20u64 {
+            ring.push([
+                1,
+                span_id(1, SpanKind::Kernel),
+                span_id(1, SpanKind::Request),
+                SpanKind::Kernel as u64,
+                i,
+                1,
+                0,
+            ]);
+        }
+        let mut out = Vec::new();
+        ring.snapshot(&mut out);
+        assert_eq!(out.len(), 8, "ring keeps the most recent capacity spans");
+        assert!(out.iter().all(|s| s.kind == SpanKind::Kernel));
+    }
+}

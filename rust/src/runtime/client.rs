@@ -23,7 +23,7 @@ fn warn_fallback_once(requested: BackendKind, message: impl FnOnce() -> String) 
         .expect("fallback-warning set poisoned")
         .insert(requested);
     if first {
-        eprintln!("{}", message());
+        crate::log!(crate::obs::log::Level::Warn, "runtime", "{}", message());
     }
 }
 
@@ -114,8 +114,10 @@ impl Runtime {
             .compile(&comp)
             .with_context(|| format!("compiling artifact {}", entry.name))?;
         let dt = t0.elapsed();
-        eprintln!(
-            "[runtime] compiled {} ({:.1} KiB HLO) in {:.2}s",
+        crate::log!(
+            crate::obs::log::Level::Info,
+            "runtime",
+            "compiled {} ({:.1} KiB HLO) in {:.2}s",
             entry.name,
             std::fs::metadata(path).map(|m| m.len() as f64 / 1024.0).unwrap_or(0.0),
             dt.as_secs_f64()

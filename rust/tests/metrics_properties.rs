@@ -1,7 +1,10 @@
 //! Property tests for the evaluation metrics: bounds, symmetries, and
-//! agreement with brute-force definitions.
+//! agreement with brute-force definitions. Also pins the serving-side
+//! latency [`Histogram`] (exact merges, percentile error bound against
+//! a sorted-vector oracle) referenced from `obs::hist`.
 
 use bigbird::metrics::{binary_f1, roc_auc, rouge_l, rouge_n, span_f1};
+use bigbird::obs::hist::Histogram;
 use bigbird::util::proptest::check_res;
 use bigbird::util::Rng;
 
@@ -169,6 +172,94 @@ fn prop_mlm_accuracy_matches_manual_count() {
             let want = if tot == 0.0 { 0.0 } else { hit / tot };
             if (got - want).abs() > 1e-12 {
                 return Err(format!("{got} vs {want}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Log-uniform latency samples spanning the interesting bucket range
+/// (10 µs … 100 s), well inside the histogram's two open-ended end
+/// buckets so the percentile error bound applies to every sample.
+fn rand_latencies(rng: &mut Rng, max_len: usize) -> Vec<f64> {
+    (0..rng.range(1, max_len)).map(|_| 10f64.powf(rng.f32() as f64 * 7.0 - 2.0)).collect()
+}
+
+#[test]
+fn prop_hist_merge_is_exact_and_associative() {
+    check_res(
+        11,
+        100,
+        |rng| {
+            let samples = rand_latencies(rng, 300);
+            let shards: Vec<usize> = samples.iter().map(|_| rng.below(3)).collect();
+            (samples, shards)
+        },
+        |(samples, shards)| {
+            // Split the stream across three "workers", then merge in two
+            // different association orders; both must be bit-identical to
+            // the histogram of the unsplit stream.
+            let mut parts = [Histogram::new(), Histogram::new(), Histogram::new()];
+            let mut whole = Histogram::new();
+            for (&v, &s) in samples.iter().zip(shards) {
+                parts[s].record(v);
+                whole.record(v);
+            }
+            let mut left = parts[0].clone();
+            left.merge(&parts[1]);
+            left.merge(&parts[2]);
+            let mut tail = parts[1].clone();
+            tail.merge(&parts[2]);
+            let mut right = parts[0].clone();
+            right.merge(&tail);
+            if left.counts() != whole.counts() || right.counts() != whole.counts() {
+                return Err("merged bucket counts differ from concatenated stream".into());
+            }
+            if left.count() != whole.count() || right.count() != whole.count() {
+                return Err("merged sample counts differ".into());
+            }
+            for p in [50.0, 95.0, 99.0] {
+                if left.percentile(p) != whole.percentile(p)
+                    || right.percentile(p) != whole.percentile(p)
+                {
+                    return Err(format!("p{p} differs across merge orders"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hist_percentile_within_bucket_bound_of_oracle() {
+    // The reported percentile is the geometric midpoint of the bucket
+    // holding the nearest-rank order statistic, so it sits within a
+    // factor of 2^(1/8) of the exact sorted-vector answer.
+    const BOUND: f64 = 1.0906; // 2^(1/8) ≈ 1.0905 plus float slack
+    check_res(
+        13,
+        100,
+        |rng| rand_latencies(rng, 400),
+        |samples| {
+            let mut h = Histogram::new();
+            let mut sorted = samples.clone();
+            for &v in samples {
+                h.record(v);
+            }
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut prev = 0.0;
+            for p in [10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+                let got = h.percentile(p);
+                let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+                let exact = sorted[rank.clamp(1, sorted.len()) - 1];
+                let ratio = got / exact;
+                if !(1.0 / BOUND..=BOUND).contains(&ratio) {
+                    return Err(format!("p{p}: reported {got} vs exact {exact} (ratio {ratio})"));
+                }
+                if got < prev {
+                    return Err(format!("p{p} ({got}) below a lower percentile ({prev})"));
+                }
+                prev = got;
             }
             Ok(())
         },

@@ -1,0 +1,203 @@
+//! Tracing subsystem properties plus a live wire e2e.
+//!
+//! The property tier exercises the span model on synthetic traces —
+//! `validate_trace` accepts exactly the nested/complete trees and
+//! rejects escapes and duplicate ids, and the Chrome trace-event JSON
+//! round-trips *exactly* through the strict parser. The e2e tier
+//! starts a native server with tracing on, drives real requests over
+//! TCP, fetches the trace via the wire `trace` frame, and asserts the
+//! exported spans form connected ingress→admission→queue→dispatch→
+//! kernel chains.
+//!
+//! Only the e2e test records into the process-global rings (synthetic
+//! tests build `SpanRecord`s directly), so the tests stay independent
+//! under the parallel test runner.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use bigbird::config::ServingConfig;
+use bigbird::coordinator::{BatcherConfig, Ingress, Request, Server, ServerConfig, WireClient};
+use bigbird::obs::trace::{
+    parse_chrome_trace, render_chrome_json, span_id, validate_trace, SpanKind, SpanRecord,
+    SPAN_KINDS,
+};
+use bigbird::tokenizer::special;
+use bigbird::util::proptest::check_res;
+use bigbird::util::Rng;
+
+fn rec(trace: u64, kind: SpanKind, start_ns: u64, dur_ns: u64, arg: u64) -> SpanRecord {
+    SpanRecord {
+        trace,
+        span: span_id(trace, kind),
+        parent: if kind == SpanKind::Request { 0 } else { span_id(trace, SpanKind::Request) },
+        kind,
+        start_ns,
+        dur_ns,
+        arg,
+    }
+}
+
+/// A random sub-interval of `[ps, ps + pd]`.
+fn contained(rng: &mut Rng, ps: u64, pd: u64) -> (u64, u64) {
+    let off = rng.below(pd as usize + 1) as u64;
+    let dur = rng.below((pd - off) as usize + 1) as u64;
+    (ps + off, dur)
+}
+
+#[test]
+fn prop_span_nesting_validates_and_escapes_are_rejected() {
+    check_res(
+        21,
+        150,
+        |rng| {
+            // a handful of traces, each with a root and a random subset
+            // of child stages nested inside it; count the expected
+            // chains while generating
+            let n = rng.range(1, 6);
+            let base = 10_000_000 + rng.below(1_000_000) as u64;
+            let mut spans = Vec::new();
+            let (mut full, mut wire) = (0usize, 0usize);
+            for t in 0..n {
+                let trace = base + t as u64;
+                let ps = 1 + rng.below(1 << 20) as u64;
+                let pd = 1 + rng.below(1 << 20) as u64;
+                spans.push(rec(trace, SpanKind::Request, ps, pd, trace));
+                let mut present = [false; 8]; // indexed by SpanKind discriminant
+                for &kind in &SPAN_KINDS[1..] {
+                    if rng.coin(0.75) {
+                        let (s, d) = contained(rng, ps, pd);
+                        spans.push(rec(trace, kind, s, d, kind as u64));
+                        present[kind as usize] = true;
+                    }
+                }
+                let chained = [
+                    SpanKind::Admission,
+                    SpanKind::Queue,
+                    SpanKind::Dispatch,
+                    SpanKind::WorkerQueue,
+                    SpanKind::Kernel,
+                ]
+                .iter()
+                .all(|&k| present[k as usize]);
+                if chained {
+                    full += 1;
+                    if present[SpanKind::Ingress as usize] {
+                        wire += 1;
+                    }
+                }
+            }
+            (spans, n, full, wire)
+        },
+        |(spans, n, full, wire)| {
+            let summary = validate_trace(spans).map_err(|e| format!("valid trace rejected: {e}"))?;
+            if summary.spans != spans.len() || summary.traces != *n {
+                return Err(format!("coverage miscount: {summary:?} over {} spans", spans.len()));
+            }
+            if summary.full_chains != *full || summary.wire_chains != *wire {
+                return Err(format!(
+                    "expected {full} full / {wire} wire chains, got {summary:?}"
+                ));
+            }
+            // corrupt a child to start before its root: must be rejected
+            if let Some(i) = spans.iter().position(|s| s.parent != 0) {
+                let mut bad = spans.clone();
+                let trace = bad[i].trace;
+                let root_start =
+                    spans.iter().find(|s| s.trace == trace && s.parent == 0).unwrap().start_ns;
+                bad[i].start_ns = root_start - 1;
+                if validate_trace(&bad).is_ok() {
+                    return Err("escaping child span accepted".into());
+                }
+                // duplicate span id: must be rejected
+                let mut dup = spans.clone();
+                dup.push(spans[i].clone());
+                if validate_trace(&dup).is_ok() {
+                    return Err("duplicate span id accepted".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_chrome_json_round_trips_exactly() {
+    check_res(
+        23,
+        150,
+        |rng| {
+            // arbitrary span sets (nesting not required for the codec),
+            // with ns values large enough to overflow a f64 µs field if
+            // the exporter relied on it — exactness comes from the args
+            let n = rng.range(1, 40);
+            (0..n)
+                .map(|i| {
+                    let trace = 20_000_000 + rng.below(1_000) as u64;
+                    let kind = SPAN_KINDS[rng.below(SPAN_KINDS.len())];
+                    rec(
+                        trace.wrapping_add(i as u64),
+                        kind,
+                        (rng.below(1 << 30) as u64) << 15,
+                        rng.below(1 << 30) as u64,
+                        rng.below(1 << 30) as u64,
+                    )
+                })
+                .collect::<Vec<_>>()
+        },
+        |spans| {
+            let json = render_chrome_json(spans);
+            let parsed =
+                parse_chrome_trace(&json).map_err(|e| format!("strict parse failed: {e}"))?;
+            if &parsed != spans {
+                return Err("parsed spans differ from rendered".into());
+            }
+            if render_chrome_json(&parsed) != json {
+                return Err("re-render is not byte-identical".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn wire_trace_exports_connected_chains() {
+    let mut cfg = ServerConfig::mlm_default("definitely-missing-artifact-dir");
+    cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(2), ..Default::default() };
+    cfg.serving = ServingConfig::native(2, 2);
+    cfg.obs.trace = true;
+    let server = Arc::new(Server::start(cfg).expect("native server"));
+    server.warmup(&[128]).expect("native warmup");
+    let ingress = Ingress::bind("127.0.0.1:0", server.clone()).expect("bind ephemeral");
+    let addr = ingress.local_addr();
+
+    let mut rng = Rng::new(42);
+    let mut cl = WireClient::connect(&addr).expect("connect");
+    const N: usize = 8;
+    for i in 1..=N as u64 {
+        let mut tokens: Vec<i32> = (0..120).map(|_| 6 + rng.below(500) as i32).collect();
+        tokens[60] = special::MASK;
+        cl.send(&Request::new(tokens).with_id(i)).expect("send");
+    }
+    for i in 0..N {
+        let r = cl.recv().unwrap_or_else(|e| panic!("recv {i}: {e}"));
+        assert!(r.is_completed(), "request {i}: unexpected outcome {:?}", r.outcome);
+    }
+
+    // The root request span lands just *after* the response write;
+    // give the server a beat so the last tree is complete in the rings.
+    thread::sleep(Duration::from_millis(200));
+    let json = WireClient::connect(&addr).expect("trace connect").trace().expect("trace frame");
+    let spans = parse_chrome_trace(&json).expect("exported trace must survive the strict parser");
+    assert!(!spans.is_empty(), "no spans exported");
+    let summary = validate_trace(&spans).expect("exported trace must validate");
+    assert_eq!(summary.spans, spans.len());
+    assert!(summary.traces >= N, "expected >= {N} traces: {summary:?}");
+    assert!(summary.full_chains >= 1, "no full request chain: {summary:?}");
+    assert!(summary.wire_chains >= 1, "no over-the-wire chain: {summary:?}");
+    // the export is in canonical collect() order, so re-rendering the
+    // parse reproduces the wire payload byte for byte
+    assert_eq!(render_chrome_json(&spans), json);
+    ingress.shutdown();
+}
