@@ -8,10 +8,12 @@
 //! 4. throughput scaling curve vs engine-pool worker count on mixed
 //!    512/2048 traffic (the pipelined-dispatch payoff: ≥1.5× at 4
 //!    workers, and a 1-worker pool reproduces the single-inflight
-//!    baseline).
+//!    baseline),
+//! 5. telemetry-sampler overhead A/B on a native pool (informational
+//!    keys; no committed baseline).
 //!
 //! Benches 3 and 4 need AOT artifacts (`make artifacts`) and skip with
-//! a note when they are absent, so the artifact-free path (1 and 2)
+//! a note when they are absent, so the artifact-free path (1, 2 and 5)
 //! runs anywhere — including the CI smoke job, which passes
 //! `--json <path>` to capture the numbers as a workflow artifact.
 
@@ -142,6 +144,46 @@ fn masked_request(rng: &mut Rng, len: usize) -> Vec<i32> {
     toks
 }
 
+/// Telemetry-sampler overhead A/B (native pool, artifact-free): the
+/// same closed fill-mask workload with the time-series sampler off vs
+/// sampling every 50 ms. The keys have no committed baseline, so the
+/// bench-check gate reports them as informational rows — CI tracks the
+/// delta without gating on it.
+fn bench_sampler_overhead(report: &mut BenchReport) {
+    println!("\nsampler overhead: native pool, telemetry off vs 50 ms cadence");
+    let n = 24usize;
+    let mut rps = [0.0f64; 2];
+    for (i, interval_ms) in [0u64, 50].into_iter().enumerate() {
+        let mut cfg = ServerConfig::mlm_default("artifacts");
+        cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(5), ..Default::default() };
+        cfg.serving = ServingConfig::native(2, 4);
+        cfg.obs.sampler_interval_ms = interval_ms;
+        let server = Server::start(cfg).expect("native pool needs no artifacts");
+        server.warmup(&[512]).unwrap();
+        let mut rng = Rng::new(11);
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..n)
+            .map(|_| {
+                let len = rng.range(64, 500);
+                server.submit(Request::new(masked_request(&mut rng, len))).unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(600)).unwrap();
+        }
+        rps[i] = n as f64 / t0.elapsed().as_secs_f64();
+        server.shutdown();
+    }
+    println!(
+        "  sampler off {:.2} req/s, on(50ms) {:.2} req/s ({:+.1}% delta)",
+        rps[0],
+        rps[1],
+        100.0 * (rps[1] / rps[0] - 1.0)
+    );
+    report.push("serving_sampler_off_req_per_s", rps[0]);
+    report.push("serving_sampler_on_req_per_s", rps[1]);
+}
+
 fn bench_serving(artifacts: &str, report: &mut BenchReport) {
     let mut cfg = ServerConfig::mlm_default(artifacts);
     cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(5), ..Default::default() };
@@ -237,6 +279,7 @@ fn main() {
     let mut report = BenchReport::new();
     bench_batcher(&mut report);
     bench_hetero(&mut report);
+    bench_sampler_overhead(&mut report);
     if let Some(dir) = artifacts() {
         bench_serving(dir, &mut report);
         bench_scaling(dir, &mut report);

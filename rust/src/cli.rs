@@ -23,7 +23,7 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{AdmissionConfig, Precision, ServingConfig};
+use crate::config::{AdmissionConfig, ObsConfig, Precision, ServingConfig};
 use crate::runtime::{parse_backend_specs, BackendSpec};
 
 // ---------------------------------------------------------------------
@@ -42,7 +42,13 @@ const SERVE_FLAGS: &[&str] = &[
     "--latency-budget-ms",
     "--max-queue",
     "--trace-out",
+    "--sampler-interval-ms",
+    "--flight-dir",
+    "--slo-p99-ms",
+    "--fault",
 ];
+
+const WATCH_FLAGS: &[&str] = &["--connect", "--interval-ms", "--frames", "--http"];
 
 const TRAIN_FLAGS: &[&str] = &[
     "--artifacts",
@@ -61,6 +67,7 @@ const KERNEL_PROBE_FLAGS: &[&str] = &["--assert-simd"];
 
 const SUBCOMMAND_FLAGS: &[(&str, &[&str])] = &[
     ("serve", SERVE_FLAGS),
+    ("watch", WATCH_FLAGS),
     ("train", TRAIN_FLAGS),
     ("bench-check", BENCH_CHECK_FLAGS),
     ("kernel-probe", KERNEL_PROBE_FLAGS),
@@ -133,6 +140,20 @@ pub struct ServeArgs {
     /// phase profiling, and write the Chrome trace-event JSON
     /// (Perfetto-loadable) of the demo workload here on exit.
     pub trace_out: Option<String>,
+    /// `--sampler-interval-ms <ms>`: telemetry sampler period (default
+    /// 1000; 0 disables the sampler thread and the series ring stays
+    /// empty).
+    pub sampler_interval_ms: u64,
+    /// `--flight-dir <dir>`: where the watchdog dumps flight-recorder
+    /// bundles on alert edges (default: no dumps).
+    pub flight_dir: Option<String>,
+    /// `--slo-p99-ms <ms>`: arm the watchdog's SLO-burn detector with
+    /// this windowed-p99 target.
+    pub slo_p99_ms: Option<f64>,
+    /// `--fault stall`: fault injection — accept and admit requests but
+    /// never dispatch them (exercises the watchdog + flight recorder;
+    /// never use outside tests/demos).
+    pub fault_stall: bool,
 }
 
 impl Default for ServeArgs {
@@ -150,6 +171,10 @@ impl Default for ServeArgs {
             latency_budget_ms: ad.latency_budget_ms,
             max_queue: ad.max_queue,
             trace_out: None,
+            sampler_interval_ms: crate::obs::timeseries::DEFAULT_INTERVAL_MS,
+            flight_dir: None,
+            slo_p99_ms: None,
+            fault_stall: false,
         }
     }
 }
@@ -167,6 +192,19 @@ impl ServeArgs {
             latency_budget_ms: self.latency_budget_ms,
             max_queue: self.max_queue,
             ..AdmissionConfig::default()
+        }
+    }
+
+    /// The continuous-telemetry knobs selected on the command line
+    /// (`--trace-out` additionally flips the tracing/profiling switches
+    /// in `serve_demo`).
+    pub fn obs(&self) -> ObsConfig {
+        ObsConfig {
+            sampler_interval_ms: self.sampler_interval_ms,
+            slo_p99_ms: self.slo_p99_ms,
+            flight_dir: self.flight_dir.clone(),
+            fault_stall: self.fault_stall,
+            ..ObsConfig::default()
         }
     }
 }
@@ -215,12 +253,96 @@ pub fn parse_serve(args: &[String]) -> Result<ServeArgs> {
             "--trace-out" => {
                 a.trace_out = Some(flag_value(&mut it, "--trace-out", CMD)?.to_string())
             }
+            "--sampler-interval-ms" => {
+                let v = flag_value(&mut it, "--sampler-interval-ms", CMD)?;
+                a.sampler_interval_ms = v
+                    .parse()
+                    .with_context(|| format!("--sampler-interval-ms expects millis, got {v:?}"))?;
+            }
+            "--flight-dir" => {
+                a.flight_dir = Some(flag_value(&mut it, "--flight-dir", CMD)?.to_string())
+            }
+            "--slo-p99-ms" => {
+                let v = flag_value(&mut it, "--slo-p99-ms", CMD)?;
+                let ms: f64 = v
+                    .parse()
+                    .with_context(|| format!("--slo-p99-ms expects a number, got {v:?}"))?;
+                a.slo_p99_ms = Some(ms);
+            }
+            "--fault" => {
+                let v = flag_value(&mut it, "--fault", CMD)?;
+                match v {
+                    "stall" => a.fault_stall = true,
+                    other => bail!("--fault supports only `stall`, got {other:?}"),
+                }
+            }
             other if other.starts_with("--") => return Err(unknown_flag(CMD, other, SERVE_FLAGS)),
             other => bail!("`serve` takes no positional arguments (got {other:?})"),
         }
     }
     a.serving().validate()?;
     a.admission().validate()?;
+    a.obs().validate()?;
+    Ok(a)
+}
+
+// ---------------------------------------------------------------------
+// watch
+// ---------------------------------------------------------------------
+
+/// Arguments of `bigbird watch`: the live terminal dashboard that polls
+/// a running server's Prometheus exposition.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WatchArgs {
+    /// `--connect <addr>` server address (default 127.0.0.1:9090).
+    pub connect: String,
+    /// `--interval-ms <ms>` poll period (default 1000).
+    pub interval_ms: u64,
+    /// `--frames <n>`: render n frames then exit (0 = run until ^C).
+    pub frames: usize,
+    /// `--http`: scrape `GET /metrics` over HTTP/1.1 instead of wire
+    /// frame 7 (both hit the same ingress port).
+    pub http: bool,
+}
+
+impl Default for WatchArgs {
+    fn default() -> Self {
+        WatchArgs {
+            connect: "127.0.0.1:9090".to_string(),
+            interval_ms: crate::obs::timeseries::DEFAULT_INTERVAL_MS,
+            frames: 0,
+            http: false,
+        }
+    }
+}
+
+/// Parse `watch` arguments; rejects flags of other subcommands by name.
+pub fn parse_watch(args: &[String]) -> Result<WatchArgs> {
+    const CMD: &str = "watch";
+    let mut a = WatchArgs::default();
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--connect" => a.connect = flag_value(&mut it, "--connect", CMD)?.to_string(),
+            "--interval-ms" => {
+                let v = flag_value(&mut it, "--interval-ms", CMD)?;
+                a.interval_ms = v
+                    .parse()
+                    .with_context(|| format!("--interval-ms expects millis, got {v:?}"))?;
+                if a.interval_ms == 0 {
+                    bail!("--interval-ms must be positive");
+                }
+            }
+            "--frames" => {
+                let v = flag_value(&mut it, "--frames", CMD)?;
+                a.frames =
+                    v.parse().with_context(|| format!("--frames expects a count, got {v:?}"))?;
+            }
+            "--http" => a.http = true,
+            other if other.starts_with("--") => return Err(unknown_flag(CMD, other, WATCH_FLAGS)),
+            other => bail!("`watch` takes no positional arguments (got {other:?})"),
+        }
+    }
     Ok(a)
 }
 
@@ -507,6 +629,8 @@ COMMANDS:
   list                   list artifacts in the manifest
   serve                  run the long-document serving demo workload;
                          with --listen, serve it over the TCP wire protocol
+  watch                  live terminal dashboard: poll a serving ingress's
+                         Prometheus exposition and render rates/latency/health
   train                  run the MLM training driver
   graph                  attention-graph theory report (Sec. 2)
   bench-check            gate bench JSONs against the committed perf baselines
@@ -543,6 +667,24 @@ SERVE FLAGS:
   --trace-out <path>     enable request-span tracing + kernel phase
                          profiling and write the demo's Chrome
                          trace-event JSON here (load at ui.perfetto.dev)
+  --sampler-interval-ms <ms>
+                         telemetry sampler period (default 1000; 0 turns the
+                         sampler off — scrapes then see no window series)
+  --flight-dir <dir>     dump flight-recorder bundles (trace.json +
+                         series.json + snapshot.json) here when a watchdog
+                         detector fires
+  --slo-p99-ms <ms>      arm the SLO-burn detector: alert when the windowed
+                         p99 latency stays above this target
+  --fault <mode>         fault injection; `stall` admits but never dispatches,
+                         turning `serve` into a self-checking watchdog drill:
+                         it waits for degraded health, validates /healthz and
+                         the flight bundle, then exits (non-zero on failure)
+
+WATCH FLAGS:
+  --connect <addr>       serving ingress to poll (default 127.0.0.1:9090)
+  --interval-ms <ms>     poll period (default 1000)
+  --frames <n>           render n frames then exit (default: until ^C)
+  --http                 scrape HTTP GET /metrics instead of wire frame 7
 
 TRAIN FLAGS:
   --artifacts <dir>      artifact directory (PJRT path)
@@ -582,6 +724,7 @@ pub fn run(args: &[String]) -> Result<()> {
     let rest = &args[1..];
     match cmd {
         "serve" => crate::experiments::serve_demo::run(&parse_serve(rest)?),
+        "watch" => crate::experiments::watch::run(&parse_watch(rest)?),
         "train" => crate::experiments::train_demo::run(&parse_train(rest)?),
         "bench-check" => {
             let a = parse_bench_check(rest)?;
@@ -796,6 +939,64 @@ mod tests {
         assert!(parse_serve(&s(&["--latency-budget-ms", "-3"])).is_err());
         assert!(parse_serve(&s(&["--engine-workers", "0"])).is_err());
         assert!(parse_serve(&s(&["--max-inflight", "0"])).is_err());
+    }
+
+    #[test]
+    fn serve_parses_observability_flags() {
+        let a = parse_serve(&s(&[])).unwrap();
+        assert_eq!(a.sampler_interval_ms, crate::obs::timeseries::DEFAULT_INTERVAL_MS);
+        assert_eq!(a.flight_dir, None);
+        assert_eq!(a.slo_p99_ms, None);
+        assert!(!a.fault_stall);
+        let a = parse_serve(&s(&[
+            "--sampler-interval-ms",
+            "250",
+            "--flight-dir",
+            "runs/flight",
+            "--slo-p99-ms",
+            "80",
+            "--fault",
+            "stall",
+        ]))
+        .unwrap();
+        assert_eq!(a.sampler_interval_ms, 250);
+        assert_eq!(a.flight_dir.as_deref(), Some("runs/flight"));
+        assert_eq!(a.slo_p99_ms, Some(80.0));
+        assert!(a.fault_stall);
+        let obs = a.obs();
+        assert_eq!(obs.sampler_interval_ms, 250);
+        assert!(obs.fault_stall);
+        // sampler off is allowed; bad SLO targets and fault modes are not
+        let zero = parse_serve(&s(&["--sampler-interval-ms", "0"])).unwrap();
+        assert_eq!(zero.sampler_interval_ms, 0);
+        assert!(parse_serve(&s(&["--slo-p99-ms", "0"])).is_err());
+        assert!(parse_serve(&s(&["--slo-p99-ms", "-5"])).is_err());
+        assert!(parse_serve(&s(&["--fault", "jitter"])).is_err());
+    }
+
+    #[test]
+    fn watch_parses_own_flags() {
+        let a = parse_watch(&s(&[])).unwrap();
+        assert_eq!(a, WatchArgs::default());
+        let a = parse_watch(&s(&[
+            "--connect",
+            "127.0.0.1:9191",
+            "--interval-ms",
+            "200",
+            "--frames",
+            "3",
+            "--http",
+        ]))
+        .unwrap();
+        assert_eq!(a.connect, "127.0.0.1:9191");
+        assert_eq!(a.interval_ms, 200);
+        assert_eq!(a.frames, 3);
+        assert!(a.http);
+        assert!(parse_watch(&s(&["--interval-ms", "0"])).is_err());
+        // foreign flags name their owner; positionals are rejected
+        let e = parse_watch(&s(&["--listen", ":0"])).unwrap_err().to_string();
+        assert!(e.contains("`serve`"), "missing owner in: {e}");
+        assert!(parse_watch(&s(&["stray"])).is_err());
     }
 
     #[test]

@@ -399,11 +399,12 @@ impl AdmissionConfig {
 }
 
 /// Observability knobs for the serving coordinator: request-span
-/// tracing (`serve --trace-out`) and kernel-phase profiling. Both are
-/// off by default so timing-sensitive paths (benches, tests) pay one
-/// relaxed atomic load per instrumentation site; flows into
-/// `ServerConfig`.
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// tracing (`serve --trace-out`), kernel-phase profiling, and the
+/// continuous-telemetry layer (sampler thread, watchdog, flight
+/// recorder). Everything is off by default so timing-sensitive paths
+/// (benches, tests) pay one relaxed atomic load per instrumentation
+/// site; flows into `ServerConfig`.
+#[derive(Clone, Debug, PartialEq)]
 pub struct ObsConfig {
     /// Record request spans (submission → response, with per-stage
     /// children) for export as Chrome trace-event JSON.
@@ -415,6 +416,23 @@ pub struct ObsConfig {
     /// backward/GEMM) so metrics can report achieved-vs-roofline
     /// utilization.
     pub phase_profile: bool,
+    /// Telemetry sampler interval in milliseconds; 0 disables the
+    /// sampler thread (and with it the series ring, the watchdog, and
+    /// window metrics in the Prometheus exposition). `serve` defaults
+    /// this to `obs::timeseries::DEFAULT_INTERVAL_MS` (1 s).
+    pub sampler_interval_ms: u64,
+    /// Time-series ring retention, in samples (min 2 when sampling).
+    pub series_capacity: usize,
+    /// Arms the watchdog's SLO-burn detector: sustained window p99
+    /// above this many ms is an anomaly. `None` leaves it unarmed.
+    pub slo_p99_ms: Option<f64>,
+    /// Directory for watchdog flight-recorder bundles; `None` disables
+    /// dumping (detectors still flip `/healthz`).
+    pub flight_dir: Option<String>,
+    /// Fault injection for tests/CI: the router stops dispatching
+    /// batches, so admitted requests queue forever — a genuine worker
+    /// stall for the watchdog to catch. Never set in production.
+    pub fault_stall: bool,
 }
 
 impl Default for ObsConfig {
@@ -423,15 +441,28 @@ impl Default for ObsConfig {
             trace: false,
             trace_ring: crate::obs::trace::DEFAULT_RING_CAPACITY,
             phase_profile: false,
+            sampler_interval_ms: 0,
+            series_capacity: crate::obs::timeseries::DEFAULT_CAPACITY,
+            slo_p99_ms: None,
+            flight_dir: None,
+            fault_stall: false,
         }
     }
 }
 
 impl ObsConfig {
-    /// Validate invariants (a non-empty span ring).
+    /// Validate invariants (a non-empty span ring, sane sampler knobs).
     pub fn validate(&self) -> Result<()> {
         if self.trace && self.trace_ring == 0 {
             bail!("trace_ring must be >= 1 when tracing is enabled");
+        }
+        if self.sampler_interval_ms > 0 && self.series_capacity < 2 {
+            bail!("series_capacity must be >= 2 when the sampler is enabled");
+        }
+        if let Some(slo) = self.slo_p99_ms {
+            if !slo.is_finite() || slo <= 0.0 {
+                bail!("slo_p99_ms must be a finite, positive ms value (got {slo})");
+            }
         }
         Ok(())
     }
@@ -552,9 +583,21 @@ mod tests {
         let off = ObsConfig::default();
         off.validate().unwrap();
         assert!(!off.trace && !off.phase_profile, "observability must default off");
+        assert_eq!(off.sampler_interval_ms, 0, "continuous telemetry must default off");
+        assert!(off.slo_p99_ms.is_none() && off.flight_dir.is_none() && !off.fault_stall);
         assert!(ObsConfig { trace: true, trace_ring: 0, ..Default::default() }
             .validate()
             .is_err());
+        // sampler knobs
+        ObsConfig { sampler_interval_ms: 1000, ..Default::default() }.validate().unwrap();
+        assert!(ObsConfig { sampler_interval_ms: 1000, series_capacity: 1, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(ObsConfig { slo_p99_ms: Some(0.0), ..Default::default() }.validate().is_err());
+        assert!(ObsConfig { slo_p99_ms: Some(f64::NAN), ..Default::default() }
+            .validate()
+            .is_err());
+        ObsConfig { slo_p99_ms: Some(250.0), ..Default::default() }.validate().unwrap();
     }
 
     #[test]

@@ -20,11 +20,20 @@
 //! router's `finish` path, where the failed socket write is simply
 //! ignored.
 //!
+//! The same port also speaks **minimal HTTP/1.1** for scrapers that
+//! can't frame: the first byte of a connection decides the protocol
+//! (wire frames always start with the version byte `0x01`; HTTP
+//! methods start with an ASCII letter). HTTP connections serve `GET
+//! /metrics` (Prometheus text exposition, validated by the strict
+//! self-parser before every response — a failed validation is a 500,
+//! never a quietly-broken 200) and `GET /healthz` (the watchdog's
+//! verdict as JSON; degraded maps to 503), with keep-alive.
+//!
 //! Shutdown is join-everything: `shutdown()` stops the acceptor,
 //! `TcpStream::shutdown`s every live connection (unblocking readers),
 //! and joins every thread — no detached threads anywhere.
 
-use std::io::BufReader;
+use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver};
@@ -37,7 +46,8 @@ use anyhow::{Context, Result};
 use super::server::{Client, Server};
 use super::wire::{
     self, Frame, WireError, FRAME_INFER_REQUEST, FRAME_INFER_RESPONSE, FRAME_METRICS_REQUEST,
-    FRAME_METRICS_RESPONSE, FRAME_TRACE_REQUEST, FRAME_TRACE_RESPONSE,
+    FRAME_METRICS_RESPONSE, FRAME_PROM_REQUEST, FRAME_PROM_RESPONSE, FRAME_TRACE_REQUEST,
+    FRAME_TRACE_RESPONSE,
 };
 use crate::coordinator::Response;
 use crate::obs::log::Level;
@@ -143,10 +153,33 @@ fn spawn_connection(stream: TcpStream, peer: SocketAddr, server: Arc<Server>) ->
     Ok(Conn { join, stream: shutdown_handle })
 }
 
-/// Reader side of one connection; owns the writer thread and joins it
-/// before exiting.
+/// One accepted connection: sniff the protocol off the first byte,
+/// then hand the buffered reader to the wire or HTTP loop.
 fn connection_loop(
     stream: TcpStream,
+    client: Client,
+    server: Arc<Server>,
+    write_half: Arc<Mutex<TcpStream>>,
+) {
+    let mut reader = BufReader::new(stream);
+    // Peek without consuming: wire connections open with the version
+    // byte 0x01, HTTP requests with the method's first ASCII letter.
+    let first = match reader.fill_buf() {
+        Ok([]) => return, // closed before sending anything
+        Ok(buf) => buf[0],
+        Err(_) => return,
+    };
+    if first.is_ascii_alphabetic() {
+        http_loop(reader, &client, &server);
+    } else {
+        wire_loop(reader, client, server, write_half);
+    }
+}
+
+/// Reader side of one wire connection; owns the writer thread and
+/// joins it before exiting.
+fn wire_loop(
+    mut reader: BufReader<TcpStream>,
     client: Client,
     server: Arc<Server>,
     write_half: Arc<Mutex<TcpStream>>,
@@ -157,7 +190,6 @@ fn connection_loop(
         .name("bigbird-conn-writer".into())
         .spawn(move || writer_loop(reply_rx, writer_stream))
         .expect("spawning connection writer");
-    let mut reader = BufReader::new(stream);
     loop {
         let frame = match wire::read_frame(&mut reader) {
             Ok(f) => f,
@@ -234,6 +266,18 @@ fn handle_frame(
             let mut w = write_half.lock().unwrap();
             wire::write_frame(&mut *w, FRAME_TRACE_RESPONSE, json.as_bytes()).is_ok()
         }
+        FRAME_PROM_REQUEST => match server.prometheus_text() {
+            Ok(text) => {
+                let mut w = write_half.lock().unwrap();
+                wire::write_frame(&mut *w, FRAME_PROM_RESPONSE, text.as_bytes()).is_ok()
+            }
+            Err(e) => {
+                // a broken exposition must never reach a scraper: log
+                // loudly and drop the connection instead of answering
+                crate::log!(Level::Error, "ingress", "prometheus export failed validation: {e}");
+                false
+            }
+        },
         other => {
             crate::log!(
                 Level::Warn,
@@ -243,6 +287,99 @@ fn handle_frame(
             );
             false
         }
+    }
+}
+
+/// Serve minimal HTTP/1.1 on a sniffed-as-HTTP connection: parse the
+/// request line, drain headers (honouring `Connection: close`), answer
+/// `GET /metrics` and `GET /healthz`, and keep the connection alive
+/// between requests. Anything unparseable drops the connection — the
+/// same polite-per-connection policy as malformed wire frames.
+fn http_loop(mut reader: BufReader<TcpStream>, client: &Client, server: &Arc<Server>) {
+    loop {
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => return,
+            Ok(_) => {}
+        }
+        let mut parts = line.split_whitespace();
+        let (method, path) = match (parts.next(), parts.next()) {
+            (Some(m), Some(p)) => (m.to_string(), p.to_string()),
+            _ => {
+                crate::log!(
+                    Level::Warn,
+                    "ingress",
+                    "dropping {}: malformed HTTP request line",
+                    client.label()
+                );
+                return;
+            }
+        };
+        let mut keep_alive = true;
+        loop {
+            let mut h = String::new();
+            match reader.read_line(&mut h) {
+                Ok(0) | Err(_) => return,
+                Ok(_) => {}
+            }
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            let lower = h.to_ascii_lowercase();
+            if lower.starts_with("connection:") && lower.contains("close") {
+                keep_alive = false;
+            }
+        }
+        let (status, content_type, body) = http_respond(&method, &path, server);
+        let head = format!(
+            "HTTP/1.1 {status}\r\ncontent-type: {content_type}\r\n\
+             content-length: {}\r\nconnection: {}\r\n\r\n",
+            body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        );
+        let stream = reader.get_mut();
+        if stream.write_all(head.as_bytes()).is_err() || stream.write_all(body.as_bytes()).is_err()
+        {
+            return;
+        }
+        if !keep_alive {
+            return;
+        }
+    }
+}
+
+/// Route one HTTP request to (status line, content type, body).
+fn http_respond(
+    method: &str,
+    path: &str,
+    server: &Arc<Server>,
+) -> (&'static str, &'static str, String) {
+    if method != "GET" {
+        return (
+            "405 Method Not Allowed",
+            "text/plain; charset=utf-8",
+            "method not allowed\n".into(),
+        );
+    }
+    match path {
+        "/metrics" => match server.prometheus_text() {
+            Ok(text) => ("200 OK", "text/plain; version=0.0.4; charset=utf-8", text),
+            Err(e) => {
+                crate::log!(Level::Error, "ingress", "/metrics export failed validation: {e}");
+                (
+                    "500 Internal Server Error",
+                    "text/plain; charset=utf-8",
+                    format!("exposition failed validation: {e}\n"),
+                )
+            }
+        },
+        "/healthz" => {
+            let report = server.health_report();
+            let status = if report.healthy { "200 OK" } else { "503 Service Unavailable" };
+            (status, "application/json", report.to_json())
+        }
+        _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".into()),
     }
 }
 

@@ -29,6 +29,7 @@ use std::time::Instant;
 use super::api::ShedReason;
 use crate::obs::hist::Histogram;
 use crate::obs::phase::PhaseStat;
+use crate::obs::timeseries::CumulativeStats;
 
 /// Shared metrics sink (cheap Mutex; the hot path pushes one f64).
 #[derive(Debug, Default)]
@@ -88,6 +89,10 @@ struct Inner {
     // per-backend-label single-core roofline peak (GFLOP/s), declared
     // once at server start; survives reset like the worker backends
     backend_peak_gflops: BTreeMap<String, f64>,
+    // scrape identity, declared once at server start so every snapshot
+    // is self-describing; survives reset like the worker backends
+    sampler_interval_s: f64,
+    config_fingerprint: String,
 }
 
 impl Default for Inner {
@@ -120,6 +125,8 @@ impl Default for Inner {
             inflight_peak: 0,
             kernel_phases: Vec::new(),
             backend_peak_gflops: BTreeMap::new(),
+            sampler_interval_s: 0.0,
+            config_fingerprint: String::new(),
         }
     }
 }
@@ -248,6 +255,13 @@ pub struct MetricsSnapshot {
     pub kernel_phases: Vec<PhaseStat>,
     /// per-backend achieved-vs-roofline utilization, sorted by label
     pub backend_roofline: Vec<BackendRoofline>,
+    /// telemetry sampler interval in seconds (0 when the sampler is
+    /// off) — declared once at server start
+    pub sampler_interval_s: f64,
+    /// serving `ModelConfig` fingerprint (dotted integers, from
+    /// [`crate::kernel::model::config_fingerprint`]); empty when the
+    /// server never declared one
+    pub config_fingerprint: String,
 }
 
 impl MetricsSnapshot {
@@ -289,6 +303,11 @@ impl MetricsSnapshot {
         o.push('{');
         o.push_str("\"schema\":1");
         push_num(&mut o, "uptime_s", self.uptime_s);
+        // self-describing scrape identity: spelled-out uptime alias for
+        // external tooling, the sampler cadence, and the model identity
+        push_num(&mut o, "uptime_seconds", self.uptime_s);
+        push_num(&mut o, "sampler_interval_s", self.sampler_interval_s);
+        o.push_str(&format!(",\"config_fingerprint\":{}", json_str(&self.config_fingerprint)));
         push_int(&mut o, "requests", self.requests);
         push_int(&mut o, "admitted", self.admitted);
         push_int(&mut o, "shed", self.shed);
@@ -609,6 +628,16 @@ impl ServingMetrics {
         i.backend_peak_gflops.insert(backend.to_string(), peak_gflops);
     }
 
+    /// Declare the scrape identity — the telemetry sampler interval
+    /// (seconds, 0 = off) and the serving model's config fingerprint —
+    /// so every snapshot and exposition is self-describing. Survives
+    /// [`ServingMetrics::reset`] like the worker backends.
+    pub fn set_scrape_identity(&self, sampler_interval_s: f64, config_fingerprint: String) {
+        let mut i = self.inner.lock().unwrap();
+        i.sampler_interval_s = sampler_interval_s;
+        i.config_fingerprint = config_fingerprint;
+    }
+
     /// Install the dispatch policy's current per-(bucket seq_len,
     /// backend) exec-time EWMA table (from `EnginePool::ewma_table`),
     /// replacing the previous copy. The router pushes this on every
@@ -645,12 +674,16 @@ impl ServingMetrics {
         let workers = i.workers;
         let backends = std::mem::take(&mut i.worker_backend);
         let peaks = std::mem::take(&mut i.backend_peak_gflops);
+        let sampler_interval_s = i.sampler_interval_s;
+        let fingerprint = std::mem::take(&mut i.config_fingerprint);
         *i = Inner::default();
         i.workers = workers;
         i.worker_jobs.resize(workers, 0);
         i.worker_busy_ms.resize(workers, 0.0);
         i.worker_backend = backends;
         i.backend_peak_gflops = peaks;
+        i.sampler_interval_s = sampler_interval_s;
+        i.config_fingerprint = fingerprint;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -747,6 +780,44 @@ impl ServingMetrics {
                     })
                     .collect()
             },
+            sampler_interval_s: i.sampler_interval_s,
+            config_fingerprint: i.config_fingerprint.clone(),
+        }
+    }
+
+    /// Raw cumulative counters and **histograms** (not derived
+    /// percentiles) — the input the time-series sampler differences to
+    /// get exact per-window distributions
+    /// ([`crate::obs::timeseries::SamplerState::sample`]). Completions
+    /// equal `latency.count()`; the pool roofline peak is the sum over
+    /// workers of their backend's declared single-core peak.
+    pub fn cumulative(&self) -> CumulativeStats {
+        let i = self.inner.lock().unwrap();
+        let mut shed = [0u64; 4];
+        for (d, &s) in shed.iter_mut().zip(i.shed.iter()) {
+            *d = s as u64;
+        }
+        let peak_gflops: f64 = i
+            .worker_backend
+            .iter()
+            .map(|label| i.backend_peak_gflops.get(label).copied().unwrap_or(0.0))
+            .sum();
+        CumulativeStats {
+            admitted: i.admitted as u64,
+            shed,
+            errors: i.errors as u64,
+            latency: i.latencies.clone(),
+            bucket_latency: i
+                .latency_by_bucket
+                .iter()
+                .map(|(&seq_len, h)| (seq_len, h.clone()))
+                .collect(),
+            queue_wait: i.queue_wait.clone(),
+            exec: i.exec.clone(),
+            worker_jobs: i.worker_jobs.iter().map(|&j| j as u64).collect(),
+            worker_busy_ms: i.worker_busy_ms.clone(),
+            phase_gflop: i.kernel_phases.iter().map(|p| p.gflop).sum(),
+            peak_gflops,
         }
     }
 }

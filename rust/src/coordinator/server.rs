@@ -45,8 +45,11 @@ use super::engine::{EnginePool, PoolCompletion, PoolJob};
 use super::metrics::{MetricsSnapshot, ServingMetrics};
 use crate::config::{AdmissionConfig, ModelConfig, ObsConfig, ServingConfig};
 use crate::kernel;
+use crate::obs::export::{self, ExportMeta};
 use crate::obs::log::Level;
+use crate::obs::timeseries::{render_series_json, SamplerState, SeriesRing, SeriesSample};
 use crate::obs::trace::{self, SpanKind};
+use crate::obs::watchdog::{self, FlightRecorder, Health, HealthReport};
 use crate::runtime::{BackendKind, HostTensor, JobShape, Manifest};
 use crate::tokenizer::special;
 use crate::util::decode;
@@ -136,6 +139,24 @@ struct Shared {
     metrics: Arc<ServingMetrics>,
 }
 
+/// Continuous-telemetry state shared between the server handle, the
+/// sampler thread, and the ingress scrape paths. The ring and health
+/// ledger exist even with the sampler off (scrapes then see an empty
+/// series and a healthy report) so the scrape surfaces never change
+/// shape with configuration.
+struct ObsShared {
+    ring: SeriesRing,
+    health: Health,
+    /// Server start — the anchor for `uptime_seconds` and sample
+    /// timestamps.
+    started: Instant,
+    sampler_interval_s: f64,
+    /// Dotted [`kernel::config_fingerprint`] of the native model config
+    /// (the `bigbird_model_info` label).
+    fingerprint: String,
+    slo_p99_ms: Option<f64>,
+}
+
 /// Running server handle.
 pub struct Server {
     shared: Arc<Shared>,
@@ -144,6 +165,8 @@ pub struct Server {
     local: Client,
     stop: Arc<AtomicBool>,
     join: Option<JoinHandle<()>>,
+    sampler_join: Option<JoinHandle<()>>,
+    obs: Arc<ObsShared>,
     /// serving buckets, sorted by seq_len (for warmup routing)
     buckets: Vec<Bucket>,
     workers: usize,
@@ -391,12 +414,38 @@ impl Server {
         }
         let admission = Arc::new(AdmissionState::new(cfg.admission));
         let stop = Arc::new(AtomicBool::new(false));
+        let sampler_interval_s = cfg.obs.sampler_interval_ms as f64 * 1e-3;
+        let fingerprint: String = kernel::config_fingerprint(&cfg.native)
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join(".");
+        metrics.set_scrape_identity(sampler_interval_s, fingerprint.clone());
+        let obs = Arc::new(ObsShared {
+            ring: SeriesRing::new(cfg.obs.series_capacity),
+            health: Health::new(),
+            started: Instant::now(),
+            sampler_interval_s,
+            fingerprint,
+            slo_p99_ms: cfg.obs.slo_p99_ms,
+        });
         let m2 = metrics.clone();
         let adm2 = admission.clone();
         let stop2 = stop.clone();
         let mut batcher_cfg = cfg.batcher;
         batcher_cfg.max_inflight = cfg.serving.max_inflight;
         let router_buckets = buckets.clone();
+        // fault injection for the watchdog's stall path: accept and
+        // admit but never dispatch, so outstanding grows while
+        // completions and worker jobs stay at zero
+        let fault_stall = cfg.obs.fault_stall;
+        if fault_stall {
+            crate::log!(
+                Level::Warn,
+                "server",
+                "fault injection active: dispatch disabled (--fault stall)"
+            );
+        }
         let join = std::thread::Builder::new()
             .name("bigbird-router".into())
             .spawn(move || {
@@ -409,9 +458,25 @@ impl Server {
                     m2,
                     adm2,
                 );
-                router_loop(rx, st, stop2);
+                router_loop(rx, st, stop2, fault_stall);
             })
             .context("spawning router")?;
+        let sampler_join = if cfg.obs.sampler_interval_ms > 0 {
+            let obs2 = obs.clone();
+            let m3 = metrics.clone();
+            let adm3 = admission.clone();
+            let stop3 = stop.clone();
+            let recorder = cfg.obs.flight_dir.as_ref().map(|d| FlightRecorder::new(d.as_str()));
+            let interval = Duration::from_millis(cfg.obs.sampler_interval_ms);
+            Some(
+                std::thread::Builder::new()
+                    .name("bigbird-sampler".into())
+                    .spawn(move || sampler_loop(obs2, m3, adm3, recorder, interval, stop3))
+                    .context("spawning sampler")?,
+            )
+        } else {
+            None
+        };
         let shared =
             Arc::new(Shared { tx, next_id: AtomicU64::new(1), admission, metrics });
         let local = Client {
@@ -425,6 +490,8 @@ impl Server {
             local,
             stop,
             join: Some(join),
+            sampler_join,
+            obs,
             buckets,
             workers: cfg.serving.n_workers(),
         })
@@ -472,6 +539,55 @@ impl Server {
         self.metrics().to_json()
     }
 
+    /// Prometheus text exposition of the full metric surface, validated
+    /// by the strict self-parser before it is returned — a malformed
+    /// export is an `Err` here (the ingress turns it into a 500), never
+    /// a quietly-broken 200. This is the payload of wire frame 7 and of
+    /// HTTP `GET /metrics`.
+    pub fn prometheus_text(&self) -> std::result::Result<String, String> {
+        let adm = &self.shared.admission;
+        self.shared.metrics.set_admission_gauges(adm.ewma_wait_ms(), adm.peak_outstanding());
+        if crate::obs::phase::enabled() {
+            self.shared.metrics.set_kernel_phases(crate::obs::phase::snapshot());
+        }
+        let cum = self.shared.metrics.cumulative();
+        let snap = self.shared.metrics.snapshot();
+        let meta = ExportMeta {
+            uptime_s: self.obs.started.elapsed().as_secs_f64(),
+            sampler_interval_s: self.obs.sampler_interval_s,
+            fingerprint: self.obs.fingerprint.clone(),
+            outstanding: adm.outstanding() as u64,
+            queue_ewma_ms: adm.ewma_wait_ms(),
+            batches: snap.batches as u64,
+            backend_roofline: snap
+                .backend_roofline
+                .iter()
+                .map(|r| (r.backend.clone(), r.achieved_gflops, r.peak_gflops))
+                .collect(),
+            samples_total: self.obs.ring.total_pushed(),
+        };
+        let last = self.obs.ring.last(1);
+        export::render_validated(&cum, &meta, last.first(), &self.obs.health.report())
+    }
+
+    /// The watchdog's current health verdict — the `/healthz` payload
+    /// (`healthy == false` maps to HTTP 503).
+    pub fn health_report(&self) -> HealthReport {
+        self.obs.health.report()
+    }
+
+    /// The freshest `k` sampler windows, oldest first (empty while the
+    /// sampler is off or has not completed a window yet).
+    pub fn series(&self, k: usize) -> Vec<SeriesSample> {
+        self.obs.ring.last(k)
+    }
+
+    /// Strict-schema series JSON of the freshest `k` sampler windows —
+    /// the `series.json` member of flight-recorder bundles.
+    pub fn series_json(&self, k: usize) -> String {
+        render_series_json(&self.series(k))
+    }
+
     /// Admitted-but-unanswered requests across all clients (live gauge).
     pub fn outstanding(&self) -> usize {
         self.shared.admission.outstanding()
@@ -517,6 +633,9 @@ impl Server {
 
     fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.sampler_join.take() {
+            let _ = j.join();
+        }
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
@@ -591,7 +710,12 @@ impl RouterState {
     }
 }
 
-fn router_loop(rx: Receiver<Submission>, mut st: RouterState, stop: Arc<AtomicBool>) {
+fn router_loop(
+    rx: Receiver<Submission>,
+    mut st: RouterState,
+    stop: Arc<AtomicBool>,
+    fault_stall: bool,
+) {
     let wait = Duration::from_millis(1);
     // The loop exits only via the stop flag: the Server owns the sole
     // submission sender and always sets stop + joins this thread before
@@ -614,10 +738,16 @@ fn router_loop(rx: Receiver<Submission>, mut st: RouterState, stop: Arc<AtomicBo
             }
         }
         // stage 2: dispatch every formable batch (poll skips buckets at
-        // their inflight cap, so long buckets can't starve short ones)
-        let now = Instant::now();
-        while let Some(fb) = st.batcher.poll(now) {
-            dispatch_batch(&mut st, fb);
+        // their inflight cap, so long buckets can't starve short ones).
+        // Under stall fault injection this stage is skipped entirely:
+        // admitted requests pile up in the batcher, which is exactly the
+        // outstanding>0 / completed==0 / jobs==0 shape the watchdog's
+        // stall detector keys on.
+        if !fault_stall {
+            let now = Instant::now();
+            while let Some(fb) = st.batcher.poll(now) {
+                dispatch_batch(&mut st, fb);
+            }
         }
         // idle: block briefly on the event that can make progress next
         if !st.inflight.is_empty() {
@@ -630,6 +760,75 @@ fn router_loop(rx: Receiver<Submission>, mut st: RouterState, stop: Arc<AtomicBo
                 Err(RecvTimeoutError::Timeout) => {}
                 // see loop header — pace the spin until stop lands
                 Err(RecvTimeoutError::Disconnected) => std::thread::sleep(wait),
+            }
+        }
+    }
+}
+
+/// The sampler thread: every interval, refresh the gauges the scrape
+/// surfaces read, fold the cumulative counters into one window sample
+/// pushed onto the ring, and run the watchdog over the freshest
+/// windows. Only alert *edges* (a detector flipping quiet→firing) are
+/// logged — and, when a flight recorder is configured, dump a
+/// timestamped bundle — so a wedged server cannot flood its own logs
+/// or disk while the condition persists.
+fn sampler_loop(
+    obs: Arc<ObsShared>,
+    metrics: Arc<ServingMetrics>,
+    admission: Arc<AdmissionState>,
+    recorder: Option<FlightRecorder>,
+    interval: Duration,
+    stop: Arc<AtomicBool>,
+) {
+    // the deepest window lookback any detector needs
+    let lookback = watchdog::STALL_WINDOWS
+        .max(watchdog::COLLAPSE_WINDOWS)
+        .max(watchdog::BURN_WINDOWS);
+    let mut sampler = SamplerState::new();
+    // sleep in short slices so shutdown never waits out a full interval
+    let slice = Duration::from_millis(10).min(interval);
+    'run: loop {
+        let mut slept = Duration::ZERO;
+        while slept < interval {
+            if stop.load(Ordering::SeqCst) {
+                break 'run;
+            }
+            std::thread::sleep(slice);
+            slept += slice;
+        }
+        metrics.set_admission_gauges(admission.ewma_wait_ms(), admission.peak_outstanding());
+        if crate::obs::phase::enabled() {
+            metrics.set_kernel_phases(crate::obs::phase::snapshot());
+        }
+        let sample = sampler.sample(
+            obs.started.elapsed().as_secs_f64(),
+            metrics.cumulative(),
+            admission.outstanding() as u64,
+            admission.ewma_wait_ms(),
+        );
+        obs.ring.push(sample);
+        let alerts = watchdog::detect(&obs.ring.last(lookback), obs.slo_p99_ms);
+        let edges = obs.health.observe(&alerts);
+        for alert in &edges {
+            crate::log!(
+                Level::Warn,
+                "watchdog",
+                "{} alert: {}",
+                alert.detector.as_str(),
+                alert.reason
+            );
+        }
+        if let (Some(rec), Some(alert)) = (recorder.as_ref(), edges.first()) {
+            let series = render_series_json(&obs.ring.last(obs.ring.capacity()));
+            let snapshot = metrics.snapshot().to_json();
+            match rec.dump(alert.detector.as_str(), &series, &snapshot) {
+                Ok(path) => crate::log!(
+                    Level::Warn,
+                    "watchdog",
+                    "flight bundle dumped to {}",
+                    path.display()
+                ),
+                Err(e) => crate::log!(Level::Error, "watchdog", "flight dump failed: {e}"),
             }
         }
     }

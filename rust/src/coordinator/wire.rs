@@ -23,6 +23,8 @@
 //! | 4    | metrics response | UTF-8 JSON ([`MetricsSnapshot::to_json`](super::metrics::MetricsSnapshot::to_json)) |
 //! | 5    | trace request    | empty |
 //! | 6    | trace response   | UTF-8 Chrome trace-event JSON ([`crate::obs::trace::export_chrome_json`]) |
+//! | 7    | prometheus request | empty |
+//! | 8    | prometheus response | UTF-8 Prometheus text exposition ([`crate::obs::export::render_validated`]) |
 //!
 //! Infer-response tags: `0` completed (`truncated u8, n u32,
 //! (pos u32, token i32)×n`), `1` shed (`reason u8`), `2` error
@@ -57,6 +59,10 @@ pub const FRAME_METRICS_RESPONSE: u8 = 4;
 pub const FRAME_TRACE_REQUEST: u8 = 5;
 /// Frame type: server → client Chrome trace-event JSON.
 pub const FRAME_TRACE_RESPONSE: u8 = 6;
+/// Frame type: client → server Prometheus scrape (empty payload).
+pub const FRAME_PROM_REQUEST: u8 = 7;
+/// Frame type: server → client Prometheus text exposition.
+pub const FRAME_PROM_RESPONSE: u8 = 8;
 
 const HEADER_LEN: usize = 6;
 
@@ -409,6 +415,23 @@ impl WireClient {
         String::from_utf8(f.payload).map_err(|_| malformed("trace JSON is not UTF-8"))
     }
 
+    /// Scrape the server's Prometheus text exposition — the same
+    /// document the ingress serves on HTTP `GET /metrics`, already
+    /// validated by the strict self-parser server-side. Like
+    /// [`WireClient::metrics`], call with no inference responses
+    /// pending.
+    pub fn prometheus(&mut self) -> Result<String, WireError> {
+        write_frame(&mut self.stream, FRAME_PROM_REQUEST, &[])?;
+        let f = read_frame(&mut self.stream)?;
+        if f.ty != FRAME_PROM_RESPONSE {
+            return Err(malformed(format!(
+                "expected prometheus response frame, got type {}",
+                f.ty
+            )));
+        }
+        String::from_utf8(f.payload).map_err(|_| malformed("prometheus text is not UTF-8"))
+    }
+
     /// The underlying stream (tests use this to simulate abrupt,
     /// mid-frame disconnects).
     pub fn stream(&mut self) -> &mut TcpStream {
@@ -496,6 +519,8 @@ mod tests {
             FRAME_METRICS_RESPONSE,
             FRAME_TRACE_REQUEST,
             FRAME_TRACE_RESPONSE,
+            FRAME_PROM_REQUEST,
+            FRAME_PROM_RESPONSE,
         ];
         for (i, a) in types.iter().enumerate() {
             for b in &types[i + 1..] {

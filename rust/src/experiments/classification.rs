@@ -8,6 +8,7 @@ use super::common::{entry_for, geometry, pool, render_table, Geometry, RunLog};
 use crate::cli::Flags;
 use crate::data::{ClassifyExample, ClassifyGen};
 use crate::metrics::cls_accuracy;
+use crate::obs::log::Level;
 use crate::runtime::{ExecutablePool, HostTensor};
 use crate::train::TrainDriver;
 
@@ -56,7 +57,7 @@ pub fn train_eval_cls(
         steps,
         (steps / 6).max(1),
         |_| Ok(cls_batch(&mut gen, g, doc_len)?.0),
-        |p| eprintln!("  [{model}] step {:>5} loss {:.4}", p.step, p.loss),
+        |p| crate::log!(Level::Info, "train", "[{model}] step {:>5} loss {:.4}", p.step, p.loss),
     )?;
     let mut egen = ClassifyGen::new(512, classes, spread, seed ^ 0xCAFE);
     let mut accs = Vec::new();

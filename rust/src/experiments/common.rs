@@ -9,6 +9,7 @@ use anyhow::{Context, Result};
 
 use crate::cli::Flags;
 use crate::data::{self, mask_tokens, MlmMasking, TokenBatch};
+use crate::obs::log::Level;
 use crate::runtime::{ExecutablePool, HostTensor, Manifest, ManifestEntry, Runtime};
 use crate::train::TrainDriver;
 use crate::util::Rng;
@@ -193,7 +194,14 @@ pub fn train_eval_mlm(
         |_| mlm_batch_from_docs(docs, g, &mut rng),
         |p| {
             if !quiet {
-                eprintln!("  [{model}] step {:>5} loss {:.4} ({:.0} ms/step)", p.step, p.loss, p.ms_per_step);
+                crate::log!(
+                    Level::Info,
+                    "train",
+                    "[{model}] step {:>5} loss {:.4} ({:.0} ms/step)",
+                    p.step,
+                    p.loss,
+                    p.ms_per_step
+                );
             }
         },
     )?;

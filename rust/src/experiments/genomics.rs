@@ -11,6 +11,7 @@ use super::common::{
 use crate::cli::Flags;
 use crate::data::{ChromatinExample, DnaGen};
 use crate::metrics::{binary_f1, roc_auc};
+use crate::obs::log::Level;
 use crate::runtime::{ExecutablePool, HostTensor};
 use crate::tokenizer::{special, BpeTokenizer};
 use crate::train::TrainDriver;
@@ -185,7 +186,7 @@ fn train_eval_chromatin(
         steps,
         (steps / 6).max(1),
         |_| Ok(chromatin_batch(&mut gen, bpe, g, n_profiles, bp_len)?.0),
-        |p| eprintln!("  [{model}] step {:>5} loss {:.4}", p.step, p.loss),
+        |p| crate::log!(Level::Info, "train", "[{model}] step {:>5} loss {:.4}", p.step, p.loss),
     )?;
     // eval AUC per profile, grouped
     let mut egen = DnaGen::new(seed ^ 0xD7);
@@ -366,7 +367,7 @@ fn promoter_finetune(
             let mut pick = || rng.below(train_set.len());
             Ok(make_batch(&mut pick, train_set)?.0)
         },
-        |p| eprintln!("  [{model}] step {:>5} loss {:.4}", p.step, p.loss),
+        |p| crate::log!(Level::Info, "train", "[{model}] step {:>5} loss {:.4}", p.step, p.loss),
     )?;
     // evaluate on test set in batches
     let mut preds = Vec::new();

@@ -19,6 +19,7 @@ pub mod table1;
 pub mod task1;
 pub mod train_demo;
 pub mod turing;
+pub mod watch;
 
 use anyhow::{bail, Result};
 

@@ -9,6 +9,7 @@ use super::common::{entry_for, geometry, pool, render_table, Geometry, RunLog};
 use crate::cli::Flags;
 use crate::data::QaGen;
 use crate::metrics::{exact_match, span_f1};
+use crate::obs::log::Level;
 use crate::runtime::{ExecutablePool, HostTensor};
 use crate::train::TrainDriver;
 use crate::util::Rng;
@@ -68,7 +69,7 @@ pub fn train_eval_qa(
         steps,
         (steps / 6).max(1),
         |_| Ok(qa_batch(&mut gen, g)?.0),
-        |p| eprintln!("  [{model}] step {:>5} loss {:.4}", p.step, p.loss),
+        |p| crate::log!(Level::Info, "train", "[{model}] step {:>5} loss {:.4}", p.step, p.loss),
     )?;
     // held-out eval
     let mut egen = QaGen::new(512, seed ^ 0xFEED);

@@ -15,6 +15,10 @@
 //!
 //! Both paths pass the same admission gate and print the same metrics
 //! JSON document.
+//!
+//! With `--fault stall` the demo becomes a watchdog drill instead: it
+//! admits a backlog that can never dispatch, waits for degraded health,
+//! validates `/healthz` and the flight-recorder bundle, and exits.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -22,12 +26,15 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use super::common::{render_table, RunLog};
+use super::watch::http_get;
 use crate::cli::ServeArgs;
 use crate::coordinator::wire::WIRE_VERSION;
 use crate::coordinator::{
-    Ingress, Outcome, Priority, Request, Response, Server, ServerConfig, WireClient,
+    json_num_field, Ingress, Outcome, Priority, Request, Response, Server, ServerConfig,
+    WireClient,
 };
 use crate::data::{CorpusConfig, CorpusGen};
+use crate::obs::export::parse_prometheus;
 use crate::tokenizer::special;
 use crate::util::Rng;
 
@@ -46,6 +53,27 @@ pub fn run(args: &ServeArgs) -> Result<()> {
     // the report can show achieved-vs-roofline utilization
     cfg.obs.trace = args.trace_out.is_some();
     cfg.obs.phase_profile = cfg.obs.trace || has_native;
+    // continuous telemetry: sampler cadence + watchdog knobs from the
+    // command line (`serve` runs the sampler by default; 0 disables)
+    cfg.obs.sampler_interval_ms = args.sampler_interval_ms;
+    cfg.obs.slo_p99_ms = args.slo_p99_ms;
+    cfg.obs.flight_dir = args.flight_dir.clone();
+    cfg.obs.fault_stall = args.fault_stall;
+    if cfg.obs.sampler_interval_ms > 0 {
+        log.line(format!(
+            "telemetry: sampler every {} ms{}{}",
+            cfg.obs.sampler_interval_ms,
+            cfg.obs
+                .slo_p99_ms
+                .map(|t| format!(", SLO p99 target {t:.0} ms"))
+                .unwrap_or_default(),
+            cfg.obs
+                .flight_dir
+                .as_deref()
+                .map(|d| format!(", flight bundles -> {d}"))
+                .unwrap_or_default(),
+        ));
+    }
     log.line(format!(
         "engine pool: {} worker(s) [{}], max {} inflight batches per bucket",
         cfg.serving.n_workers(),
@@ -74,6 +102,13 @@ pub fn run(args: &ServeArgs) -> Result<()> {
     let server = Arc::new(Server::start(cfg)?);
     log.line("warming up buckets (compiling artifacts on every worker once) ...");
     server.warmup(&[128, 256, 512, 1024, 2048])?;
+
+    // fault injection turns the demo into a self-terminating watchdog
+    // drill instead of a workload that would wait forever on responses
+    // the stalled dispatch stage can never produce
+    if args.fault_stall {
+        return run_stall_drill(log, args, &server);
+    }
 
     // workload: 64 requests across a long-tailed length distribution
     let n_requests = 64usize;
@@ -356,6 +391,33 @@ fn run_wire_workload(
         .metrics()
         .context("wire metrics request")?;
 
+    // Prometheus over both transports of the same port — wire frame 7
+    // and HTTP GET /metrics — each validated with the strict exposition
+    // parser, plus the /healthz probe. This is the demo doubling as the
+    // scrape-path e2e CI runs on every push.
+    let prom_wire = WireClient::connect(&bound)
+        .context("connecting prometheus client")?
+        .prometheus()
+        .context("wire prometheus request")?;
+    let doc = parse_prometheus(&prom_wire)
+        .map_err(|e| anyhow::anyhow!("wire exposition failed strict parse: {e}"))?;
+    anyhow::ensure!(
+        doc.value("bigbird_requests_admitted_total", &[]).unwrap_or(0.0) > 0.0,
+        "exposition shows no admitted requests after the demo workload"
+    );
+    let addr_s = bound.to_string();
+    let (status, prom_http) = http_get(&addr_s, "/metrics").context("HTTP /metrics")?;
+    anyhow::ensure!(status == 200, "GET /metrics returned HTTP {status}");
+    parse_prometheus(&prom_http)
+        .map_err(|e| anyhow::anyhow!("HTTP exposition failed strict parse: {e}"))?;
+    let (hstatus, health) = http_get(&addr_s, "/healthz").context("HTTP /healthz")?;
+    log.line(format!(
+        "observability: /metrics OK over wire + HTTP ({} families, both strict-parsed); \
+         /healthz {hstatus}: {}",
+        doc.families.len(),
+        health.trim_end()
+    ));
+
     // trace over the wire, while the ingress is still up: the router
     // records each request's root span just after its response write,
     // so give the last finish a moment to land before snapshotting
@@ -372,4 +434,106 @@ fn run_wire_workload(
     };
     ingress.shutdown();
     Ok((responses, Some(json), trace_json))
+}
+
+/// `--fault stall` drill: admit a small backlog the disabled dispatch
+/// stage can never serve, wait for the worker-stall detector to flip
+/// health to degraded, then check every observable consequence — the
+/// `/healthz` verdict over HTTP when `--listen` is set, and the
+/// flight-recorder bundle (strict-parsed trace/series/snapshot) when
+/// `--flight-dir` is set. Exits non-zero if the watchdog never fires or
+/// any artifact fails validation: the drill IS the test, and CI runs it
+/// on every push.
+fn run_stall_drill(mut log: RunLog, args: &ServeArgs, server: &Arc<Server>) -> Result<()> {
+    anyhow::ensure!(
+        args.sampler_interval_ms > 0,
+        "--fault stall needs the telemetry sampler (--sampler-interval-ms > 0)"
+    );
+    let ingress = match &args.listen {
+        Some(addr) => Some(Ingress::bind(addr, server.clone())?),
+        None => None,
+    };
+    // hold the receivers so the backlog stays outstanding all drill long
+    let n = 8usize;
+    let _rxs: Vec<_> = demo_docs(args.seed, n)
+        .into_iter()
+        .map(|doc| server.submit(Request::new(doc)))
+        .collect::<Result<Vec<_>, _>>()?;
+    log.line(format!(
+        "stall drill: {n} requests admitted, dispatch disabled; watchdog trips after 3 \
+         idle windows at {} ms each",
+        args.sampler_interval_ms
+    ));
+    // 3 stalled windows trip the detector; allow 30 windows (with a
+    // floor for slow shared runners) before declaring the drill failed
+    let deadline =
+        Duration::from_millis(args.sampler_interval_ms.saturating_mul(30).max(15_000));
+    let t0 = Instant::now();
+    while server.health_report().healthy {
+        anyhow::ensure!(
+            t0.elapsed() < deadline,
+            "watchdog did not flag the injected stall within {deadline:?}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let report = server.health_report();
+    log.line(format!("health after {:.1} s: {}", t0.elapsed().as_secs_f64(), report.to_json()));
+    anyhow::ensure!(
+        report.reason.contains("worker_stall"),
+        "degraded for {:?}, expected the worker_stall detector",
+        report.reason
+    );
+    if let Some(ing) = &ingress {
+        let addr = ing.local_addr().to_string();
+        let (status, body) = http_get(&addr, "/healthz").context("HTTP /healthz")?;
+        anyhow::ensure!(status == 503, "degraded server answered /healthz with HTTP {status}");
+        anyhow::ensure!(
+            body.contains("\"status\":\"degraded\""),
+            "/healthz 503 body does not say degraded: {body}"
+        );
+        log.line(format!("/healthz {status}: {}", body.trim_end()));
+    }
+    if let Some(dir) = &args.flight_dir {
+        // the bundle is written by the sampler thread on the alert edge,
+        // which we may have observed before the files landed — poll
+        let t0 = Instant::now();
+        let bundle = loop {
+            let mut found = None;
+            if let Ok(rd) = std::fs::read_dir(dir) {
+                found = rd.filter_map(|e| e.ok()).map(|e| e.path()).find(|p| p.is_dir());
+            }
+            if let Some(b) = found {
+                break b;
+            }
+            anyhow::ensure!(
+                t0.elapsed() < Duration::from_secs(10),
+                "alert fired but no flight bundle appeared under {dir}"
+            );
+            std::thread::sleep(Duration::from_millis(50));
+        };
+        let read = |name: &str| -> Result<String> {
+            std::fs::read_to_string(bundle.join(name))
+                .with_context(|| format!("reading {name} from {}", bundle.display()))
+        };
+        crate::obs::trace::parse_chrome_trace(&read("trace.json")?)
+            .map_err(|e| anyhow::anyhow!("bundle trace.json failed strict parse: {e}"))?;
+        let series = crate::obs::timeseries::parse_series_json(&read("series.json")?)
+            .map_err(|e| anyhow::anyhow!("bundle series.json failed strict parse: {e}"))?;
+        anyhow::ensure!(!series.is_empty(), "bundle series.json has no samples");
+        anyhow::ensure!(
+            json_num_field(&read("snapshot.json")?, "requests").is_some(),
+            "bundle snapshot.json is missing the requests field"
+        );
+        log.line(format!(
+            "flight bundle validated ({} series windows): {}",
+            series.len(),
+            bundle.display()
+        ));
+    }
+    if let Some(ing) = ingress {
+        ing.shutdown();
+    }
+    let path = log.finish()?;
+    println!("(written to {})", path.display());
+    Ok(())
 }

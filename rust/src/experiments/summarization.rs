@@ -11,6 +11,7 @@ use crate::data::summarize::{
     frequency_baseline, lead_baseline, oracle_baseline, SummarizeGen,
 };
 use crate::metrics::{rouge_l, rouge_n};
+use crate::obs::log::Level;
 use crate::runtime::{ExecutablePool, HostTensor};
 use crate::tokenizer::special;
 use crate::train::TrainDriver;
@@ -139,7 +140,7 @@ pub fn train_eval_s2s(
         steps,
         (steps / 6).max(1),
         |_| Ok(s2s_batch(&mut gen, &g)?.0),
-        |p| eprintln!("  [{model}] step {:>5} loss {:.4}", p.step, p.loss),
+        |p| crate::log!(Level::Info, "train", "[{model}] step {:>5} loss {:.4}", p.step, p.loss),
     )?;
     // held-out ROUGE via greedy decoding
     let mut egen = SummarizeGen::new(512, seed ^ 0x50FF);

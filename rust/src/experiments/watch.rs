@@ -1,0 +1,292 @@
+//! `bigbird watch` — a live terminal dashboard over a running serving
+//! ingress.
+//!
+//! Each frame scrapes the server's Prometheus exposition — over wire
+//! frame 7 by default, or HTTP `GET /metrics` with `--http` (both hit
+//! the same port; the ingress sniffs the protocol off the first byte)
+//! — strict-parses it with [`parse_prometheus`], and renders rates,
+//! windowed latency quantiles, shed/alert counters, and the watchdog's
+//! health verdict. Everything shown comes from the exposition itself
+//! (the server's sampler computes the windowed rates), so the
+//! dashboard needs no state between frames and any Prometheus server
+//! scraping the same endpoint sees exactly the same numbers.
+//!
+//! A scrape that fails to parse is rendered as an error frame, never
+//! silently skipped: the dashboard doubles as a live validator of the
+//! exposition.
+
+use std::io::IsTerminal;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::cli::WatchArgs;
+use crate::coordinator::WireClient;
+use crate::obs::export::{parse_prometheus, PromDoc};
+
+pub fn run(args: &WatchArgs) -> Result<()> {
+    let clear = std::io::stdout().is_terminal();
+    let source = if args.http { "http" } else { "wire" };
+    let mut frame = 0usize;
+    loop {
+        frame += 1;
+        let body = match scrape(args) {
+            Ok(text) => match parse_prometheus(&text) {
+                Ok(doc) => render_dashboard(&doc, &args.connect, source, frame),
+                Err(e) => format!("scrape failed the strict exposition parser: {e}\n"),
+            },
+            Err(e) => format!("scrape of {} failed: {e:#}\n", args.connect),
+        };
+        if clear {
+            // clear + home, so the dashboard repaints in place
+            print!("\x1b[2J\x1b[H{body}");
+            use std::io::Write as _;
+            std::io::stdout().flush().ok();
+        } else {
+            print!("{body}");
+        }
+        if args.frames != 0 && frame >= args.frames {
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_millis(args.interval_ms));
+    }
+}
+
+/// One scrape of the exposition text, by the transport the flags chose.
+fn scrape(args: &WatchArgs) -> Result<String> {
+    if args.http {
+        let (status, body) = http_get(&args.connect, "/metrics")?;
+        anyhow::ensure!(status == 200, "GET /metrics returned HTTP {status}");
+        Ok(body)
+    } else {
+        let addr = resolve(&args.connect)?;
+        let text = WireClient::connect(&addr)
+            .with_context(|| format!("connecting {addr}"))?
+            .prometheus()
+            .context("prometheus wire request")?;
+        Ok(text)
+    }
+}
+
+fn resolve(addr: &str) -> Result<SocketAddr> {
+    addr.to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .with_context(|| format!("{addr} resolves to no address"))
+}
+
+/// Minimal HTTP/1.1 GET against the ingress (also used by the e2e
+/// tests): returns (status code, body). Sends `connection: close` so
+/// the body ends at EOF.
+pub fn http_get(addr: &str, path: &str) -> Result<(u16, String)> {
+    use std::io::{Read, Write};
+    let mut stream =
+        TcpStream::connect(resolve(addr)?).with_context(|| format!("connecting {addr}"))?;
+    let req = format!("GET {path} HTTP/1.1\r\nhost: {addr}\r\nconnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes()).context("writing HTTP request")?;
+    let mut buf = String::new();
+    stream.read_to_string(&mut buf).context("reading HTTP response")?;
+    let (head, body) =
+        buf.split_once("\r\n\r\n").context("HTTP response has no header/body split")?;
+    let status: u16 = head
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("malformed HTTP status line in {head:?}"))?;
+    Ok((status, body.to_string()))
+}
+
+/// Render one dashboard frame from a parsed exposition. Pure — all
+/// state lives in the scraped document.
+pub fn render_dashboard(doc: &PromDoc, addr: &str, source: &str, frame: usize) -> String {
+    let mut out = String::new();
+    let uptime = doc.value("bigbird_uptime_seconds", &[]).unwrap_or(0.0);
+    out.push_str(&format!(
+        "bigbird watch — {addr} ({source})   frame {frame}   up {uptime:.0}s\n"
+    ));
+    let healthy = doc.value("bigbird_healthy", &[]).unwrap_or(1.0) > 0.5;
+    let reason = doc
+        .samples("bigbird_health_info")
+        .first()
+        .and_then(|s| s.labels.iter().find(|(k, _)| k == "reason"))
+        .map(|(_, v)| v.as_str())
+        .unwrap_or("");
+    if healthy {
+        out.push_str("health: ok\n");
+    } else {
+        out.push_str(&format!("health: DEGRADED — {reason}\n"));
+    }
+    let g = |name: &str| doc.value(name, &[]);
+    match g("bigbird_window_seconds") {
+        Some(w) => {
+            let q = |q: &str| {
+                doc.value("bigbird_window_latency_quantile_ms", &[("q", q)])
+                    .map(|v| format!("{v:.1}"))
+                    .unwrap_or_else(|| "-".into())
+            };
+            out.push_str(&format!(
+                "window {w:.1}s: admitted {:.1}/s  completed {:.1}/s  shed {:.1}/s\n",
+                g("bigbird_window_admitted_per_s").unwrap_or(0.0),
+                g("bigbird_window_completed_per_s").unwrap_or(0.0),
+                g("bigbird_window_shed_per_s").unwrap_or(0.0),
+            ));
+            out.push_str(&format!(
+                "window latency ms: p50 {}  p95 {}  p99 {}\n",
+                q("p50"),
+                q("p95"),
+                q("p99")
+            ));
+        }
+        None => out.push_str("window: no sampler series yet\n"),
+    }
+    out.push_str(&format!(
+        "outstanding {:.0}   queue EWMA {:.2} ms\n",
+        g("bigbird_outstanding_requests").unwrap_or(0.0),
+        g("bigbird_queue_wait_ewma_ms").unwrap_or(0.0),
+    ));
+    let shed: f64 = doc.samples("bigbird_requests_shed_total").iter().map(|s| s.value).sum();
+    out.push_str(&format!(
+        "totals: admitted {:.0}  completed {:.0}  shed {shed:.0}  errors {:.0}  \
+         batches {:.0}  samples {:.0}\n",
+        g("bigbird_requests_admitted_total").unwrap_or(0.0),
+        g("bigbird_requests_completed_total").unwrap_or(0.0),
+        g("bigbird_errors_total").unwrap_or(0.0),
+        g("bigbird_batches_total").unwrap_or(0.0),
+        g("bigbird_samples_total").unwrap_or(0.0),
+    ));
+    for s in doc.samples("bigbird_requests_shed_total") {
+        if s.value > 0.0 {
+            if let Some((_, reason)) = s.labels.iter().find(|(k, _)| k == "reason") {
+                out.push_str(&format!("  shed[{reason}]: {:.0}\n", s.value));
+            }
+        }
+    }
+    for s in doc.samples("bigbird_backend_achieved_gflops") {
+        if let Some((_, backend)) = s.labels.iter().find(|(k, _)| k == "backend") {
+            let peak = doc
+                .value("bigbird_backend_peak_gflops", &[("backend", backend.as_str())])
+                .unwrap_or(0.0);
+            let util = if peak > 0.0 { 100.0 * s.value / peak } else { 0.0 };
+            out.push_str(&format!(
+                "backend {backend}: {:.2} / {peak:.2} GFLOP/s ({util:.0}%)\n",
+                s.value
+            ));
+        }
+    }
+    let alerts = doc.samples("bigbird_alerts_total");
+    if !alerts.is_empty() {
+        out.push_str("alerts:");
+        for s in alerts {
+            if let Some((_, d)) = s.labels.iter().find(|(k, _)| k == "detector") {
+                out.push_str(&format!("  {d} {:.0}", s.value));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A hand-written well-formed exposition with the families the
+    /// dashboard reads.
+    const FIXTURE: &str = "\
+# HELP bigbird_uptime_seconds Seconds since the server started.
+# TYPE bigbird_uptime_seconds gauge
+bigbird_uptime_seconds 42.5
+# HELP bigbird_healthy Watchdog verdict (1 healthy, 0 degraded).
+# TYPE bigbird_healthy gauge
+bigbird_healthy 0
+# HELP bigbird_health_info Active degradation reason.
+# TYPE bigbird_health_info gauge
+bigbird_health_info{reason=\"worker_stall: no completions\"} 1
+# HELP bigbird_window_seconds Last sampler window length.
+# TYPE bigbird_window_seconds gauge
+bigbird_window_seconds 1
+# HELP bigbird_window_admitted_per_s Admission rate over the last window.
+# TYPE bigbird_window_admitted_per_s gauge
+bigbird_window_admitted_per_s 12.5
+# HELP bigbird_window_completed_per_s Completion rate over the last window.
+# TYPE bigbird_window_completed_per_s gauge
+bigbird_window_completed_per_s 11
+# HELP bigbird_window_shed_per_s Shed rate over the last window.
+# TYPE bigbird_window_shed_per_s gauge
+bigbird_window_shed_per_s 0
+# HELP bigbird_window_latency_quantile_ms Windowed latency quantiles.
+# TYPE bigbird_window_latency_quantile_ms gauge
+bigbird_window_latency_quantile_ms{q=\"p50\"} 8.5
+bigbird_window_latency_quantile_ms{q=\"p95\"} 20
+bigbird_window_latency_quantile_ms{q=\"p99\"} 31
+# HELP bigbird_outstanding_requests Admitted-but-unanswered requests.
+# TYPE bigbird_outstanding_requests gauge
+bigbird_outstanding_requests 4
+# HELP bigbird_queue_wait_ewma_ms Queue-wait EWMA.
+# TYPE bigbird_queue_wait_ewma_ms gauge
+bigbird_queue_wait_ewma_ms 3.25
+# HELP bigbird_requests_admitted_total Requests admitted.
+# TYPE bigbird_requests_admitted_total counter
+bigbird_requests_admitted_total 512
+# HELP bigbird_requests_completed_total Requests completed.
+# TYPE bigbird_requests_completed_total counter
+bigbird_requests_completed_total 500
+# HELP bigbird_requests_shed_total Requests shed, by typed reason.
+# TYPE bigbird_requests_shed_total counter
+bigbird_requests_shed_total{reason=\"queue_full\"} 7
+bigbird_requests_shed_total{reason=\"overloaded\"} 0
+# HELP bigbird_errors_total Router-observed errors.
+# TYPE bigbird_errors_total counter
+bigbird_errors_total 0
+# HELP bigbird_batches_total Batches dispatched.
+# TYPE bigbird_batches_total counter
+bigbird_batches_total 64
+# HELP bigbird_samples_total Sampler windows recorded.
+# TYPE bigbird_samples_total counter
+bigbird_samples_total 42
+# HELP bigbird_backend_achieved_gflops Achieved compute per backend.
+# TYPE bigbird_backend_achieved_gflops gauge
+bigbird_backend_achieved_gflops{backend=\"native\"} 12.5
+# HELP bigbird_backend_peak_gflops Roofline peak per backend.
+# TYPE bigbird_backend_peak_gflops gauge
+bigbird_backend_peak_gflops{backend=\"native\"} 50
+# HELP bigbird_alerts_total Watchdog alert edges, by detector.
+# TYPE bigbird_alerts_total counter
+bigbird_alerts_total{detector=\"worker_stall\"} 1
+bigbird_alerts_total{detector=\"shed_spike\"} 0
+";
+
+    #[test]
+    fn dashboard_renders_the_scraped_document() {
+        let doc = parse_prometheus(FIXTURE).expect("fixture must satisfy the strict parser");
+        let frame = render_dashboard(&doc, "127.0.0.1:9090", "wire", 3);
+        assert!(frame.contains("up 42s"), "uptime missing: {frame}");
+        assert!(frame.contains("DEGRADED — worker_stall"), "health missing: {frame}");
+        assert!(frame.contains("admitted 12.5/s"), "window rates missing: {frame}");
+        assert!(frame.contains("p99 31.0"), "quantiles missing: {frame}");
+        assert!(frame.contains("shed[queue_full]: 7"), "shed reasons missing: {frame}");
+        assert!(frame.contains("backend native: 12.50 / 50.00 GFLOP/s (25%)"), "{frame}");
+        assert!(frame.contains("worker_stall 1"), "alert counters missing: {frame}");
+        // shed total sums the typed reasons
+        assert!(frame.contains("shed 7 "), "summed shed total missing: {frame}");
+    }
+
+    #[test]
+    fn dashboard_degrades_gracefully_without_sampler_series() {
+        // only the families every server always exports
+        let minimal = "\
+# HELP bigbird_uptime_seconds Seconds since the server started.
+# TYPE bigbird_uptime_seconds gauge
+bigbird_uptime_seconds 1.5
+# HELP bigbird_healthy Watchdog verdict (1 healthy, 0 degraded).
+# TYPE bigbird_healthy gauge
+bigbird_healthy 1
+";
+        let doc = parse_prometheus(minimal).expect("minimal fixture must parse");
+        let frame = render_dashboard(&doc, "h:1", "http", 1);
+        assert!(frame.contains("health: ok"), "{frame}");
+        assert!(frame.contains("no sampler series yet"), "{frame}");
+    }
+}

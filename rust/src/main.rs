@@ -3,12 +3,17 @@
 
 use std::process::ExitCode;
 
+use bigbird::obs::log::Level;
+
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match bigbird::cli::run(&args) {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            // the one fatal exit goes through the same facade as every
+            // other line (rate limits don't matter for a single line,
+            // the BB_LOG format and stderr stream do)
+            bigbird::log!(Level::Error, "cli", "{e:#}");
             ExitCode::FAILURE
         }
     }

@@ -1,0 +1,712 @@
+//! Prometheus text-format exposition (format 0.0.4) of the serving
+//! metrics, with a **strict self-parser gating every export** — the
+//! same discipline as `obs::trace`: `render_validated` re-parses the
+//! document it just rendered and refuses to serve anything that does
+//! not round-trip, so an exposition bug fails a scrape loudly instead
+//! of feeding a dashboard garbage.
+//!
+//! Sources folded into one scrape:
+//!
+//! * [`CumulativeStats`] — counters and the exact log-bucket
+//!   histograms. Histogram `_bucket` series use the fixed
+//!   `obs::hist` boundaries as `le` upper edges (last = `+Inf`), and
+//!   each cumulative `_bucket` count is the exact prefix sum of
+//!   [`crate::obs::hist::Histogram::counts`]: no re-bucketing, no
+//!   approximation.
+//! * [`ExportMeta`] — point-in-time gauges the server reads at scrape
+//!   time (uptime, outstanding, queue EWMA, per-backend roofline) plus
+//!   the self-describing identity (sampler interval, serving
+//!   `ModelConfig` fingerprint).
+//! * the most recent [`SeriesSample`] — last-window rates and exact
+//!   window percentiles as `bigbird_window_*` gauges.
+//! * [`HealthReport`] — `bigbird_healthy` and per-detector alert
+//!   totals, mirroring `/healthz`.
+//!
+//! Every metric is prefixed `bigbird_`; see the README "Observability"
+//! section for the full name/type table.
+
+use std::fmt::Write as _;
+
+use super::hist::{Histogram, BUCKETS};
+use super::timeseries::{CumulativeStats, SeriesSample};
+use super::watchdog::{HealthReport, DETECTORS};
+
+/// Scrape-time gauges and identity that live outside the cumulative
+/// counters. Assembled by the server at each scrape.
+#[derive(Clone, Debug, Default)]
+pub struct ExportMeta {
+    /// Seconds since the metrics window started.
+    pub uptime_s: f64,
+    /// Sampler interval in seconds (0 when the sampler is off).
+    pub sampler_interval_s: f64,
+    /// Serving `ModelConfig` fingerprint (dotted integers).
+    pub fingerprint: String,
+    /// Admitted-but-unanswered requests right now.
+    pub outstanding: u64,
+    /// Queue-wait EWMA gauge (ms).
+    pub queue_ewma_ms: f64,
+    /// Batches formed so far.
+    pub batches: u64,
+    /// Per-backend `(label, achieved GFLOP/s, peak GFLOP/s)` roofline
+    /// rows, sorted by label.
+    pub backend_roofline: Vec<(String, f64, f64)>,
+    /// Time-series samples taken so far (including evicted ones).
+    pub samples_total: u64,
+}
+
+/// Render the exposition **and** gate it through [`parse_prometheus`];
+/// the text is only returned if it round-trips the strict parser and
+/// every histogram invariant holds. This is what `/metrics` and wire
+/// frame 7 serve.
+pub fn render_validated(
+    cum: &CumulativeStats,
+    meta: &ExportMeta,
+    last: Option<&SeriesSample>,
+    health: &HealthReport,
+) -> Result<String, String> {
+    let text = render_prometheus(cum, meta, last, health);
+    parse_prometheus(&text).map_err(|e| format!("exposition failed self-validation: {e}"))?;
+    Ok(text)
+}
+
+/// Render the Prometheus text document (unvalidated; prefer
+/// [`render_validated`]).
+pub fn render_prometheus(
+    cum: &CumulativeStats,
+    meta: &ExportMeta,
+    last: Option<&SeriesSample>,
+    health: &HealthReport,
+) -> String {
+    let mut w = Writer { out: String::with_capacity(16 * 1024) };
+
+    w.family("bigbird_uptime_seconds", "gauge", "Seconds since the metrics window started.");
+    w.sample("bigbird_uptime_seconds", &[], meta.uptime_s);
+    w.family("bigbird_sampler_interval_seconds", "gauge", "Telemetry sampler interval (0 = off).");
+    w.sample("bigbird_sampler_interval_seconds", &[], meta.sampler_interval_s);
+    w.family("bigbird_model_info", "gauge", "Serving model identity (value is always 1).");
+    w.sample("bigbird_model_info", &[("fingerprint", meta.fingerprint.as_str())], 1.0);
+
+    w.family("bigbird_requests_admitted_total", "counter", "Requests that passed admission.");
+    w.sample("bigbird_requests_admitted_total", &[], cum.admitted as f64);
+    w.family("bigbird_requests_completed_total", "counter", "Requests answered with predictions.");
+    w.sample("bigbird_requests_completed_total", &[], cum.latency.count() as f64);
+    w.family("bigbird_requests_shed_total", "counter", "Requests shed, by typed reason.");
+    let shed_reasons = ["queue_full", "overloaded", "client_limit", "expired"];
+    for (i, reason) in shed_reasons.into_iter().enumerate() {
+        w.sample("bigbird_requests_shed_total", &[("reason", reason)], cum.shed[i] as f64);
+    }
+    w.family("bigbird_errors_total", "counter", "Requests that failed with an error.");
+    w.sample("bigbird_errors_total", &[], cum.errors as f64);
+    w.family("bigbird_batches_total", "counter", "Batches formed by the router.");
+    w.sample("bigbird_batches_total", &[], meta.batches as f64);
+
+    w.family("bigbird_outstanding_requests", "gauge", "Admitted-but-unanswered requests.");
+    w.sample("bigbird_outstanding_requests", &[], meta.outstanding as f64);
+    w.family("bigbird_queue_wait_ewma_ms", "gauge", "Admission queue-wait EWMA.");
+    w.sample("bigbird_queue_wait_ewma_ms", &[], meta.queue_ewma_ms);
+
+    w.histogram("bigbird_request_latency_ms", "End-to-end request latency.", &[], &cum.latency);
+    if !cum.bucket_latency.is_empty() {
+        w.family("bigbird_bucket_latency_ms", "histogram", "Request latency per sequence bucket.");
+        for (seq, h) in &cum.bucket_latency {
+            let seq = seq.to_string();
+            w.histogram_samples("bigbird_bucket_latency_ms", &[("bucket", seq.as_str())], h);
+        }
+    }
+    w.histogram("bigbird_batch_queue_wait_ms", "Batch wait in queues.", &[], &cum.queue_wait);
+    w.histogram("bigbird_batch_exec_ms", "Batch execution time on workers.", &[], &cum.exec);
+
+    if !cum.worker_jobs.is_empty() {
+        w.family("bigbird_worker_jobs_total", "counter", "Completed batch jobs per worker.");
+        for (i, &j) in cum.worker_jobs.iter().enumerate() {
+            let worker = i.to_string();
+            w.sample("bigbird_worker_jobs_total", &[("worker", worker.as_str())], j as f64);
+        }
+        w.family("bigbird_worker_busy_ms_total", "counter", "Execute time per worker.");
+        for (i, &ms) in cum.worker_busy_ms.iter().enumerate() {
+            let worker = i.to_string();
+            w.sample("bigbird_worker_busy_ms_total", &[("worker", worker.as_str())], ms.max(0.0));
+        }
+    }
+    if !meta.backend_roofline.is_empty() {
+        w.family("bigbird_backend_achieved_gflops", "gauge", "Achieved GFLOP/s per backend.");
+        for (label, achieved, _) in &meta.backend_roofline {
+            w.sample("bigbird_backend_achieved_gflops", &[("backend", label.as_str())], *achieved);
+        }
+        w.family("bigbird_backend_peak_gflops", "gauge", "Roofline peak GFLOP/s per backend.");
+        for (label, _, peak) in &meta.backend_roofline {
+            w.sample("bigbird_backend_peak_gflops", &[("backend", label.as_str())], *peak);
+        }
+    }
+
+    w.family("bigbird_samples_total", "counter", "Telemetry windows sampled.");
+    w.sample("bigbird_samples_total", &[], meta.samples_total as f64);
+    if let Some(s) = last {
+        w.family("bigbird_window_seconds", "gauge", "Width of the most recent sampler window.");
+        w.sample("bigbird_window_seconds", &[], s.window_s);
+        w.family("bigbird_window_admitted_per_s", "gauge", "Admission rate over the last window.");
+        w.sample("bigbird_window_admitted_per_s", &[], s.admitted_per_s());
+        w.family("bigbird_window_completed_per_s", "gauge", "Completion rate, last window.");
+        w.sample("bigbird_window_completed_per_s", &[], s.completed_per_s());
+        w.family("bigbird_window_shed_per_s", "gauge", "Shed rate over the last window.");
+        w.sample("bigbird_window_shed_per_s", &[], s.shed_per_s());
+        w.family(
+            "bigbird_window_latency_quantile_ms",
+            "gauge",
+            "Exact latency quantiles of the last window.",
+        );
+        for (q, p) in [("p50", 50.0), ("p95", 95.0), ("p99", 99.0)] {
+            w.sample("bigbird_window_latency_quantile_ms", &[("q", q)], s.percentile(p));
+        }
+        if !s.buckets.is_empty() {
+            w.family(
+                "bigbird_window_bucket_quantile_ms",
+                "gauge",
+                "Exact last-window latency quantiles per sequence bucket.",
+            );
+            for b in &s.buckets {
+                let seq = b.seq_len.to_string();
+                for (q, p) in [("p50", 50.0), ("p95", 95.0), ("p99", 99.0)] {
+                    w.sample(
+                        "bigbird_window_bucket_quantile_ms",
+                        &[("bucket", seq.as_str()), ("q", q)],
+                        b.percentile(p),
+                    );
+                }
+            }
+        }
+    }
+
+    w.family("bigbird_healthy", "gauge", "1 while no watchdog detector is active, else 0.");
+    w.sample("bigbird_healthy", &[], if health.healthy { 1.0 } else { 0.0 });
+    w.family("bigbird_health_info", "gauge", "Watchdog diagnosis (value is always 1).");
+    w.sample("bigbird_health_info", &[("reason", health.reason.as_str())], 1.0);
+    w.family("bigbird_alerts_total", "counter", "Detector-active windows, by detector.");
+    for (i, d) in DETECTORS.iter().enumerate() {
+        w.sample(
+            "bigbird_alerts_total",
+            &[("detector", d.as_str())],
+            health.alerts_by_detector[i] as f64,
+        );
+    }
+    w.out
+}
+
+struct Writer {
+    out: String,
+}
+
+impl Writer {
+    fn family(&mut self, name: &str, kind: &str, help: &str) {
+        let _ = writeln!(self.out, "# HELP {name} {help}");
+        let _ = writeln!(self.out, "# TYPE {name} {kind}");
+    }
+
+    fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(k);
+                self.out.push_str("=\"");
+                for ch in v.chars() {
+                    match ch {
+                        '\\' => self.out.push_str("\\\\"),
+                        '"' => self.out.push_str("\\\""),
+                        '\n' => self.out.push_str("\\n"),
+                        c => self.out.push(c),
+                    }
+                }
+                self.out.push('"');
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        if value.is_finite() {
+            let _ = write!(self.out, "{value}");
+        } else {
+            self.out.push('0');
+        }
+        self.out.push('\n');
+    }
+
+    fn histogram(&mut self, name: &str, help: &str, labels: &[(&str, &str)], h: &Histogram) {
+        self.family(name, "histogram", help);
+        self.histogram_samples(name, labels, h);
+    }
+
+    /// `_bucket`/`_sum`/`_count` series for one histogram: `le` edges
+    /// are the fixed `obs::hist` upper bounds, cumulative counts are
+    /// exact prefix sums of [`Histogram::counts`].
+    fn histogram_samples(&mut self, name: &str, labels: &[(&str, &str)], h: &Histogram) {
+        let bucket = format!("{name}_bucket");
+        let mut cumulative = 0u64;
+        for (i, &c) in h.counts().iter().enumerate() {
+            cumulative += c;
+            let (_, hi) = Histogram::bucket_bounds(i);
+            let le = if hi.is_finite() { format!("{hi}") } else { "+Inf".to_string() };
+            let mut ls: Vec<(&str, &str)> = labels.to_vec();
+            ls.push(("le", le.as_str()));
+            self.sample(&bucket, &ls, cumulative as f64);
+        }
+        self.sample(&format!("{name}_sum"), labels, h.sum());
+        self.sample(&format!("{name}_count"), labels, h.count() as f64);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Strict parser
+// ---------------------------------------------------------------------------
+
+/// Metric kinds the exposition uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+/// One sample line, post-parse. For histograms the `name` keeps its
+/// `_bucket`/`_sum`/`_count` suffix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PromSample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+/// One metric family: `# HELP` + `# TYPE` + its samples.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PromFamily {
+    pub name: String,
+    pub kind: MetricKind,
+    pub help: String,
+    pub samples: Vec<PromSample>,
+}
+
+/// A parsed exposition document.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PromDoc {
+    pub families: Vec<PromFamily>,
+}
+
+impl PromDoc {
+    /// The family declared as `name`, if present.
+    pub fn family(&self, name: &str) -> Option<&PromFamily> {
+        self.families.iter().find(|f| f.name == name)
+    }
+
+    /// Value of the sample with exactly this name (histogram
+    /// `_bucket`/`_sum`/`_count` sample names included) and exactly
+    /// this label set, across all families.
+    pub fn value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        self.families
+            .iter()
+            .flat_map(|f| &f.samples)
+            .find(|s| {
+                s.name == name
+                    && s.labels.len() == labels.len()
+                    && labels
+                        .iter()
+                        .all(|(k, v)| s.labels.iter().any(|(sk, sv)| sk == k && sv == v))
+            })
+            .map(|s| s.value)
+    }
+
+    /// All samples of a family, in document order.
+    pub fn samples(&self, family: &str) -> &[PromSample] {
+        self.family(family).map(|f| f.samples.as_slice()).unwrap_or(&[])
+    }
+}
+
+fn valid_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Strictly parse a text exposition produced by [`render_prometheus`]:
+/// every family must declare `# HELP` then `# TYPE` before its samples,
+/// sample names must belong to the declared family (histograms: the
+/// `_bucket`/`_sum`/`_count` triplet), values must be finite (counters
+/// additionally non-negative), and histogram invariants must hold —
+/// `le` edges strictly ascending and ending at `+Inf`, cumulative
+/// bucket counts non-decreasing, the `+Inf` bucket equal to `_count`.
+/// Unknown comment forms, blank lines, duplicate families, and
+/// trailing garbage are all errors.
+pub fn parse_prometheus(text: &str) -> Result<PromDoc, String> {
+    let mut doc = PromDoc::default();
+    let mut pending_help: Option<(String, String)> = None;
+    for (ln, line) in text.lines().enumerate() {
+        let err = |msg: &str| Err(format!("exposition line {}: {msg}", ln + 1));
+        if line.is_empty() {
+            return err("blank line");
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let (name, help) = rest
+                .split_once(' ')
+                .ok_or(format!("exposition line {}: HELP without text", ln + 1))?;
+            if !valid_name(name) {
+                return err("invalid metric name in HELP");
+            }
+            if pending_help.is_some() {
+                return err("HELP without a following TYPE");
+            }
+            if doc.family(name).is_some() {
+                return err("duplicate family");
+            }
+            pending_help = Some((name.to_string(), help.to_string()));
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let (name, kind) = rest
+                .split_once(' ')
+                .ok_or(format!("exposition line {}: TYPE without kind", ln + 1))?;
+            let Some((help_name, help)) = pending_help.take() else {
+                return err("TYPE without a preceding HELP");
+            };
+            if help_name != name {
+                return err("TYPE name does not match its HELP");
+            }
+            let kind = match kind {
+                "counter" => MetricKind::Counter,
+                "gauge" => MetricKind::Gauge,
+                "histogram" => MetricKind::Histogram,
+                _ => return err("unsupported metric kind"),
+            };
+            doc.families.push(PromFamily {
+                name: name.to_string(),
+                kind,
+                help,
+                samples: Vec::new(),
+            });
+            continue;
+        }
+        if line.starts_with('#') {
+            return err("unknown comment form");
+        }
+        if pending_help.is_some() {
+            return err("sample between HELP and TYPE");
+        }
+        let sample =
+            parse_sample_line(line).map_err(|m| format!("exposition line {}: {m}", ln + 1))?;
+        let family = doc
+            .families
+            .last_mut()
+            .ok_or(format!("exposition line {}: sample before any TYPE", ln + 1))?;
+        let base_ok = match family.kind {
+            MetricKind::Histogram => {
+                let n = &sample.name;
+                n == &format!("{}_bucket", family.name)
+                    || n == &format!("{}_sum", family.name)
+                    || n == &format!("{}_count", family.name)
+            }
+            _ => sample.name == family.name,
+        };
+        if !base_ok {
+            return err("sample name does not belong to the current family");
+        }
+        if family.kind == MetricKind::Counter && sample.value < 0.0 {
+            return err("negative counter");
+        }
+        family.samples.push(sample);
+    }
+    if pending_help.is_some() {
+        return Err("exposition ends with HELP but no TYPE".to_string());
+    }
+    if !text.is_empty() && !text.ends_with('\n') {
+        return Err("exposition must end with a newline".to_string());
+    }
+    for f in &doc.families {
+        if f.samples.is_empty() {
+            return Err(format!("family {} declares no samples", f.name));
+        }
+        if f.kind == MetricKind::Histogram {
+            validate_histogram(f)?;
+        }
+    }
+    Ok(doc)
+}
+
+fn parse_sample_line(line: &str) -> Result<PromSample, String> {
+    let bytes = line.as_bytes();
+    let mut pos = 0;
+    while pos < bytes.len() && bytes[pos] != b'{' && bytes[pos] != b' ' {
+        pos += 1;
+    }
+    let name = &line[..pos];
+    if !valid_name(name) {
+        return Err(format!("invalid sample name {name:?}"));
+    }
+    let mut labels = Vec::new();
+    if pos < bytes.len() && bytes[pos] == b'{' {
+        pos += 1;
+        loop {
+            let key_start = pos;
+            while pos < bytes.len() && bytes[pos] != b'=' {
+                pos += 1;
+            }
+            let key = &line[key_start..pos];
+            if !valid_name(key) {
+                return Err(format!("invalid label name {key:?}"));
+            }
+            pos += 1; // '='
+            if bytes.get(pos) != Some(&b'"') {
+                return Err("label value must be quoted".to_string());
+            }
+            pos += 1;
+            let mut value = String::new();
+            loop {
+                match bytes.get(pos) {
+                    None => return Err("unterminated label value".to_string()),
+                    Some(b'"') => {
+                        pos += 1;
+                        break;
+                    }
+                    Some(b'\\') => {
+                        pos += 1;
+                        match bytes.get(pos) {
+                            Some(b'\\') => value.push('\\'),
+                            Some(b'"') => value.push('"'),
+                            Some(b'n') => value.push('\n'),
+                            _ => return Err("unsupported label escape".to_string()),
+                        }
+                        pos += 1;
+                    }
+                    Some(_) => {
+                        let ch = line[pos..].chars().next().unwrap();
+                        value.push(ch);
+                        pos += ch.len_utf8();
+                    }
+                }
+            }
+            labels.push((key.to_string(), value));
+            match bytes.get(pos) {
+                Some(b',') => {
+                    pos += 1;
+                    continue;
+                }
+                Some(b'}') => {
+                    pos += 1;
+                    break;
+                }
+                _ => return Err("expected ',' or '}' in labels".to_string()),
+            }
+        }
+    }
+    if bytes.get(pos) != Some(&b' ') {
+        return Err("expected a space before the value".to_string());
+    }
+    let value_str = &line[pos + 1..];
+    let value = value_str
+        .parse::<f64>()
+        .ok()
+        .filter(|v| v.is_finite())
+        .ok_or_else(|| format!("bad sample value {value_str:?}"))?;
+    Ok(PromSample { name: name.to_string(), labels, value })
+}
+
+fn validate_histogram(f: &PromFamily) -> Result<(), String> {
+    use std::collections::BTreeMap;
+    let bucket_name = format!("{}_bucket", f.name);
+    // group by the non-`le` label set
+    let mut groups: BTreeMap<String, (Vec<(f64, f64)>, Option<f64>, Option<f64>)> = BTreeMap::new();
+    let group_key = |labels: &[(String, String)]| {
+        let mut ls: Vec<String> = labels
+            .iter()
+            .filter(|(k, _)| k != "le")
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        ls.sort();
+        ls.join(",")
+    };
+    for s in &f.samples {
+        let entry = groups.entry(group_key(&s.labels)).or_default();
+        if s.name == bucket_name {
+            let le = s
+                .labels
+                .iter()
+                .find(|(k, _)| k == "le")
+                .ok_or(format!("{}: _bucket without le label", f.name))?;
+            let edge = if le.1 == "+Inf" {
+                f64::INFINITY
+            } else {
+                le.1.parse::<f64>().map_err(|_| format!("{}: bad le {:?}", f.name, le.1))?
+            };
+            entry.0.push((edge, s.value));
+        } else if s.name.ends_with("_sum") {
+            entry.1 = Some(s.value);
+        } else {
+            entry.2 = Some(s.value);
+        }
+    }
+    for (key, (buckets, sum, count)) in groups {
+        let at = |m: &str| format!("{}{{{key}}}: {m}", f.name);
+        if buckets.is_empty() {
+            return Err(at("no _bucket series"));
+        }
+        for w in buckets.windows(2) {
+            if w[1].0 <= w[0].0 {
+                return Err(at("le edges must ascend strictly"));
+            }
+            if w[1].1 < w[0].1 {
+                return Err(at("cumulative bucket counts must be non-decreasing"));
+            }
+        }
+        let (last_le, last_count) = *buckets.last().unwrap();
+        if !last_le.is_infinite() {
+            return Err(at("last bucket must be le=\"+Inf\""));
+        }
+        let count = count.ok_or_else(|| at("missing _count"))?;
+        if sum.is_none() {
+            return Err(at("missing _sum"));
+        }
+        if (last_count - count).abs() > 1e-9 {
+            return Err(at("+Inf bucket must equal _count"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::watchdog::Health;
+
+    fn fixture() -> (CumulativeStats, ExportMeta, SeriesSample, HealthReport) {
+        let mut latency = Histogram::new();
+        let mut b512 = Histogram::new();
+        let mut queue = Histogram::new();
+        let mut exec = Histogram::new();
+        for i in 0..500 {
+            let v = 0.05 + (i as f64 * 7.31) % 240.0;
+            latency.record(v);
+            b512.record(v * 0.5);
+            queue.record(v * 0.1);
+            exec.record(v * 0.3);
+        }
+        let cum = CumulativeStats {
+            admitted: 520,
+            shed: [3, 2, 1, 0],
+            errors: 1,
+            latency,
+            bucket_latency: vec![(512, b512)],
+            queue_wait: queue,
+            exec,
+            worker_jobs: vec![40, 60],
+            worker_busy_ms: vec![120.0, 260.0],
+            phase_gflop: 4.0,
+            peak_gflops: 80.0,
+        };
+        let meta = ExportMeta {
+            uptime_s: 12.5,
+            sampler_interval_s: 1.0,
+            fingerprint: "1.8.512.64".to_string(),
+            outstanding: 4,
+            queue_ewma_ms: 2.25,
+            batches: 33,
+            backend_roofline: vec![("native".to_string(), 12.0, 80.0)],
+            samples_total: 12,
+        };
+        let mut st = crate::obs::timeseries::SamplerState::new();
+        let last = st.sample(1.0, cum.clone(), 4, 2.25);
+        (cum, meta, last, Health::new().report())
+    }
+
+    #[test]
+    fn exposition_round_trips_the_strict_parser() {
+        let (cum, meta, last, health) = fixture();
+        let text = render_validated(&cum, &meta, Some(&last), &health).unwrap();
+        let doc = parse_prometheus(&text).unwrap();
+        assert_eq!(doc.value("bigbird_requests_admitted_total", &[]), Some(520.0));
+        assert_eq!(
+            doc.value("bigbird_requests_shed_total", &[("reason", "queue_full")]),
+            Some(3.0)
+        );
+        assert_eq!(doc.value("bigbird_healthy", &[]), Some(1.0));
+        assert_eq!(doc.value("bigbird_worker_jobs_total", &[("worker", "1")]), Some(60.0));
+        assert_eq!(
+            doc.value("bigbird_model_info", &[("fingerprint", "1.8.512.64")]),
+            Some(1.0)
+        );
+        assert_eq!(doc.value("bigbird_request_latency_ms_count", &[]), Some(500.0));
+        // empty-series / empty-pool exports validate too
+        let bare = render_validated(
+            &CumulativeStats::default(),
+            &ExportMeta::default(),
+            None,
+            &health,
+        )
+        .unwrap();
+        assert!(parse_prometheus(&bare).is_ok());
+    }
+
+    #[test]
+    fn histogram_buckets_match_hist_counts_exactly() {
+        let (cum, meta, last, health) = fixture();
+        let text = render_validated(&cum, &meta, Some(&last), &health).unwrap();
+        let doc = parse_prometheus(&text).unwrap();
+        let f = doc.family("bigbird_request_latency_ms").unwrap();
+        assert_eq!(f.kind, MetricKind::Histogram);
+        let buckets: Vec<&PromSample> =
+            f.samples.iter().filter(|s| s.name.ends_with("_bucket")).collect();
+        assert_eq!(buckets.len(), BUCKETS, "one le edge per hist bucket");
+        let mut cumulative = 0u64;
+        for (i, s) in buckets.iter().enumerate() {
+            cumulative += cum.latency.counts()[i];
+            assert_eq!(s.value, cumulative as f64, "bucket {i} cumulative count");
+            let le = &s.labels.iter().find(|(k, _)| k == "le").unwrap().1;
+            let (_, hi) = Histogram::bucket_bounds(i);
+            if hi.is_finite() {
+                assert_eq!(le.parse::<f64>().unwrap(), hi, "bucket {i} le edge");
+            } else {
+                assert_eq!(le, "+Inf");
+            }
+        }
+        assert_eq!(doc.value("bigbird_request_latency_ms_count", &[]), Some(500.0));
+        let sum = doc.value("bigbird_request_latency_ms_sum", &[]).unwrap();
+        assert!((sum - cum.latency.sum()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parser_rejects_malformed_expositions() {
+        let (cum, meta, last, health) = fixture();
+        let good = render_prometheus(&cum, &meta, Some(&last), &health);
+        assert!(parse_prometheus(&good).is_ok());
+        // samples before any TYPE
+        assert!(parse_prometheus("bigbird_x 1\n").is_err());
+        // TYPE without HELP
+        assert!(parse_prometheus("# TYPE bigbird_x counter\nbigbird_x 1\n").is_err());
+        // unknown kind
+        assert!(
+            parse_prometheus("# HELP bigbird_x x\n# TYPE bigbird_x summary\nbigbird_x 1\n")
+                .is_err()
+        );
+        // sample from a foreign family
+        assert!(parse_prometheus("# HELP a x\n# TYPE a counter\nb 1\n").is_err());
+        // negative counter
+        assert!(parse_prometheus("# HELP a x\n# TYPE a counter\na -1\n").is_err());
+        // blank lines and unknown comments
+        assert!(parse_prometheus(&good.replacen("# TYPE", "\n# TYPE", 1)).is_err());
+        assert!(parse_prometheus(&format!("# EOF\n{good}")).is_err());
+        // duplicate family
+        let extra = "# HELP bigbird_healthy x\n# TYPE bigbird_healthy gauge\nbigbird_healthy 1\n";
+        assert!(parse_prometheus(&format!("{good}{extra}")).is_err());
+        // histogram invariants: breaking one cumulative count must fail
+        let f = parse_prometheus(&good).unwrap();
+        let count = f.value("bigbird_request_latency_ms_count", &[]).unwrap();
+        let broken = good.replacen(
+            &format!("bigbird_request_latency_ms_count {count}"),
+            &format!("bigbird_request_latency_ms_count {}", count + 1.0),
+            1,
+        );
+        let err = parse_prometheus(&broken).unwrap_err();
+        assert!(err.contains("+Inf bucket must equal _count"), "{err}");
+    }
+}

@@ -144,6 +144,23 @@ impl Histogram {
         Self::bucket_value(BUCKETS - 1)
     }
 
+    /// Rebuild a histogram from raw per-bucket counts — e.g. the
+    /// elementwise difference of two cumulative [`Histogram::counts`]
+    /// snapshots, which is how the time-series sampler computes exact
+    /// per-window percentiles. The count is exact; the sum is
+    /// reconstructed from bucket representative values, so
+    /// [`Histogram::mean`] is approximate (within the same 2^(1/8)
+    /// bucket-resolution factor as [`Histogram::percentile`]).
+    pub fn from_counts(counts: [u64; BUCKETS]) -> Histogram {
+        let count = counts.iter().sum();
+        let sum = counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| c as f64 * Self::bucket_value(i))
+            .sum();
+        Histogram { counts, count, sum }
+    }
+
     /// Fold `other` into `self`. Exact: the result equals the
     /// histogram of the concatenated sample streams.
     pub fn merge(&mut self, other: &Histogram) {
@@ -216,6 +233,34 @@ mod tests {
         }
         a.merge(&b);
         assert_eq!(a, all);
+    }
+
+    #[test]
+    fn from_counts_preserves_percentiles_of_a_window_delta() {
+        // cumulative "before" and "after" snapshots of one stream
+        let mut before = Histogram::new();
+        let mut after = Histogram::new();
+        for i in 0..300 {
+            let v = (i as f64 * 3.7) % 90.0;
+            before.record(v);
+            after.record(v);
+        }
+        let mut window_oracle = Histogram::new();
+        for i in 0..150 {
+            let v = 5.0 + (i as f64 * 1.3) % 40.0;
+            after.record(v);
+            window_oracle.record(v);
+        }
+        let mut delta = [0u64; BUCKETS];
+        for (d, (a, b)) in delta.iter_mut().zip(after.counts().iter().zip(before.counts())) {
+            *d = a - b;
+        }
+        let window = Histogram::from_counts(delta);
+        assert_eq!(window.count(), window_oracle.count());
+        assert_eq!(window.counts(), window_oracle.counts());
+        for p in [50.0, 95.0, 99.0] {
+            assert_eq!(window.percentile(p), window_oracle.percentile(p), "p{p}");
+        }
     }
 
     #[test]

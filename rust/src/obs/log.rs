@@ -5,6 +5,8 @@
 //!   prints: a default level (`error|warn|info|debug|off`) optionally
 //!   followed by per-target overrides, e.g.
 //!   `BB_LOG=warn,ingress=debug,server=off`. Unset means `info`.
+//!   Malformed clauses never take the process down: each is ignored
+//!   with one warning line at first use naming the clause and why.
 //! * **Format** — `[<seconds-since-start> LEVEL target] message` on
 //!   stderr, one line per event, so logs stay greppable by target.
 //! * **Rate limiting** — at most [`MAX_PER_WINDOW`] lines per target
@@ -66,23 +68,42 @@ impl Filter {
     /// clauses are ignored (logging must never take the server down),
     /// falling back to the `info` default for that clause.
     pub fn parse(spec: &str) -> Filter {
+        Filter::parse_with_diagnostics(spec).0
+    }
+
+    /// [`Filter::parse`], additionally returning one human-readable
+    /// diagnostic per ignored clause. The process-wide filter prints
+    /// these once at first use, so a typo like `BB_LOG=nfo` degrades
+    /// loudly instead of silently reverting to the defaults.
+    pub fn parse_with_diagnostics(spec: &str) -> (Filter, Vec<String>) {
         let mut default = Some(Level::Info);
         let mut targets = Vec::new();
+        let mut diagnostics = Vec::new();
         for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
             match clause.split_once('=') {
-                Some((target, level)) => {
-                    if let Some(lv) = Level::parse(level.trim()) {
-                        targets.push((target.trim().to_string(), lv));
+                Some((target, level)) => match Level::parse(level.trim()) {
+                    Some(lv) if !target.trim().is_empty() => {
+                        targets.push((target.trim().to_string(), lv))
                     }
-                }
-                None => {
-                    if let Some(lv) = Level::parse(clause) {
-                        default = lv;
+                    Some(_) => {
+                        diagnostics.push(format!("ignoring BB_LOG clause {clause:?}: empty target"))
                     }
-                }
+                    None => diagnostics.push(format!(
+                        "ignoring BB_LOG clause {clause:?}: unknown level {:?} \
+                         (use error|warn|info|debug|off)",
+                        level.trim()
+                    )),
+                },
+                None => match Level::parse(clause) {
+                    Some(lv) => default = lv,
+                    None => diagnostics.push(format!(
+                        "ignoring BB_LOG clause {clause:?}: not a level or target=level \
+                         (use error|warn|info|debug|off)"
+                    )),
+                },
             }
         }
-        Filter { default, targets }
+        (Filter { default, targets }, diagnostics)
     }
 
     /// Would a `level` event for `target` print under this filter?
@@ -119,7 +140,15 @@ fn state() -> &'static State {
 fn filter() -> &'static Filter {
     static FILTER: OnceLock<Filter> = OnceLock::new();
     FILTER.get_or_init(|| {
-        Filter::parse(&std::env::var("BB_LOG").unwrap_or_default())
+        let spec = std::env::var("BB_LOG").unwrap_or_default();
+        let (f, diagnostics) = Filter::parse_with_diagnostics(&spec);
+        // warn once per process, directly through `write` — the filter
+        // cell is mid-initialization here, so routing through `log!`
+        // (which calls `enabled` → this function) would re-enter
+        for d in diagnostics {
+            write(Level::Warn, "log", format_args!("{d}"));
+        }
+        f
     })
 }
 
@@ -207,6 +236,26 @@ mod tests {
         let g = Filter::parse("bogus,=,x=notalevel,debug");
         assert!(g.enabled(Level::Debug, "anything"), "last valid default wins");
         assert!(!Filter::parse("off").enabled(Level::Error, "t"));
+    }
+
+    #[test]
+    fn malformed_clauses_produce_diagnostics() {
+        let (f, diags) = Filter::parse_with_diagnostics("bogus,x=notalevel,debug,ingress=warn");
+        assert_eq!(diags.len(), 2, "one diagnostic per ignored clause: {diags:?}");
+        assert!(diags[0].contains("\"bogus\""), "{}", diags[0]);
+        assert!(diags[1].contains("\"x=notalevel\""), "{}", diags[1]);
+        assert!(diags[1].contains("\"notalevel\""), "names the bad level: {}", diags[1]);
+        // the valid clauses of a partly-bad spec still apply
+        assert!(f.enabled(Level::Debug, "other"));
+        assert!(!f.enabled(Level::Info, "ingress"));
+        // clean specs produce no diagnostics
+        assert!(Filter::parse_with_diagnostics("warn,server=off").1.is_empty());
+        assert!(Filter::parse_with_diagnostics("").1.is_empty());
+        // an empty target is ignored, with a diagnostic saying why
+        let (g, d) = Filter::parse_with_diagnostics("=debug");
+        assert_eq!(d.len(), 1);
+        assert!(d[0].contains("empty target"), "{}", d[0]);
+        assert!(!g.enabled(Level::Debug, "anything"), "ignored clause must not apply");
     }
 
     #[test]

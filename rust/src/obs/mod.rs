@@ -1,8 +1,8 @@
 //! Observability: zero-dependency tracing, profiling, and telemetry
 //! primitives threaded through the serving stack.
 //!
-//! Four pieces, each independently gated so the disabled cost on hot
-//! paths is one relaxed atomic load (the bench gate pins this):
+//! Point-in-time pieces, each independently gated so the disabled cost
+//! on hot paths is one relaxed atomic load (the bench gate pins this):
 //!
 //! * [`trace`] — request spans with parent/child links, recorded into
 //!   lock-free per-thread ring buffers and exported as Chrome
@@ -19,15 +19,34 @@
 //!   `BB_LOG` env filter and per-target rate limiting, replacing the
 //!   scattered `eprintln!` calls.
 //!
+//! And the continuous layer built on top of them:
+//!
+//! * [`timeseries`] — a fixed-capacity ring of periodic samples from a
+//!   server-owned sampler thread: counter deltas as rates plus exact
+//!   histogram-delta percentiles per window, mergeable across windows.
+//! * [`export`] — Prometheus text exposition of the live counters and
+//!   the most recent window, gated by a strict self-parser; served over
+//!   wire frames 7/8 and the ingress `GET /metrics` HTTP adapter.
+//! * [`watchdog`] — anomaly detectors over the series (worker stall,
+//!   shed spike, utilization collapse, SLO burn) driving `/healthz`
+//!   and a flight recorder that dumps timestamped bundles.
+//!
 //! See rust/README.md "Observability" for the span model, frame
-//! layout, filter syntax, and bucket boundaries.
+//! layout, filter syntax, bucket boundaries, metric names, and
+//! watchdog thresholds.
 
+pub mod export;
 pub mod hist;
 pub mod log;
 pub mod phase;
+pub mod timeseries;
 pub mod trace;
+pub mod watchdog;
 
+pub use export::{parse_prometheus, ExportMeta, PromDoc};
 pub use hist::Histogram;
 pub use log::Level;
 pub use phase::{Phase, PhaseStat};
+pub use timeseries::{CumulativeStats, SeriesRing, SeriesSample};
 pub use trace::{SpanKind, SpanRecord, TraceSummary};
+pub use watchdog::{FlightRecorder, Health, HealthReport};

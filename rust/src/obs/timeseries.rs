@@ -1,0 +1,788 @@
+//! Continuous telemetry: a fixed-capacity ring of periodic metric
+//! samples, each describing **one sampler window** (default 1 s).
+//!
+//! PR 8 made any single moment observable as a cumulative
+//! `MetricsSnapshot`; this module adds the time axis. A server-owned
+//! sampler thread captures [`CumulativeStats`] every window and
+//! [`SamplerState::sample`] turns consecutive captures into a
+//! [`SeriesSample`]: counter **deltas** (admitted/completed/shed/error
+//! counts in the window, exposed as rates), point-in-time gauges
+//! (outstanding, queue-wait EWMA), and the window's **exact latency
+//! histogram delta** — because `obs::hist` buckets have fixed
+//! boundaries, `counts_now − counts_prev` is itself an exact histogram
+//! of just the window's samples, so per-window percentiles carry no
+//! approximation beyond bucket resolution (and none vs. a histogram
+//! recorded fresh in the window).
+//!
+//! Samples are **mergeable**: [`SeriesSample::merge_all`] folds any
+//! contiguous run of windows into one wider window, summing counts and
+//! histogram deltas, so merged percentiles are exactly the percentiles
+//! of the concatenated windows. They are **queryable by window** via
+//! [`SeriesRing::last`] / [`SeriesRing::merged`].
+//!
+//! The series exports as JSON (`render_series_json`) with a strict
+//! self-parser ([`parse_series_json`]) in the mold of
+//! `obs::trace::parse_chrome_trace`: the flight recorder writes this
+//! document into every bundle, and validation round-trips it.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::hist::{Histogram, BUCKETS};
+
+/// Default sampler interval in milliseconds.
+pub const DEFAULT_INTERVAL_MS: u64 = 1000;
+
+/// Default ring capacity in samples (10 min of history at 1 s).
+pub const DEFAULT_CAPACITY: usize = 600;
+
+/// Cumulative counters captured at one instant — the sampler's input.
+/// Produced by `ServingMetrics::cumulative`; consecutive captures are
+/// differenced into a [`SeriesSample`].
+#[derive(Clone, Debug, Default)]
+pub struct CumulativeStats {
+    /// Requests admitted since the metrics window started.
+    pub admitted: u64,
+    /// Sheds per reason, in wire-code order
+    /// (queue_full, overloaded, client_limit, expired).
+    pub shed: [u64; 4],
+    /// Request errors.
+    pub errors: u64,
+    /// End-to-end latency histogram (count() = completed requests).
+    pub latency: Histogram,
+    /// Per-sequence-bucket latency histograms, sorted by seq_len.
+    pub bucket_latency: Vec<(usize, Histogram)>,
+    /// Batch queue-wait histogram.
+    pub queue_wait: Histogram,
+    /// Batch execute-time histogram.
+    pub exec: Histogram,
+    /// Completed batch jobs per worker.
+    pub worker_jobs: Vec<u64>,
+    /// Total execute time per worker (ms).
+    pub worker_busy_ms: Vec<f64>,
+    /// Total kernel-phase GFLOP executed (from `obs::phase`).
+    pub phase_gflop: f64,
+    /// Pool-wide roofline peak GFLOP/s (sum of each worker's backend
+    /// peak; 0 when no backend declared one).
+    pub peak_gflops: f64,
+}
+
+/// Sparse per-bucket counts of one window's histogram delta: only the
+/// occupied `(bucket index, count)` pairs, ascending by index.
+pub type SparseHist = Vec<(u32, u64)>;
+
+fn sparse_delta(now: &Histogram, prev: &Histogram) -> SparseHist {
+    now.counts()
+        .iter()
+        .zip(prev.counts())
+        .enumerate()
+        .filter_map(|(i, (a, b))| {
+            let d = a.saturating_sub(*b);
+            (d > 0).then_some((i as u32, d))
+        })
+        .collect()
+}
+
+fn expand(sparse: &SparseHist) -> [u64; BUCKETS] {
+    let mut counts = [0u64; BUCKETS];
+    for &(i, c) in sparse {
+        if let Some(slot) = counts.get_mut(i as usize) {
+            *slot += c;
+        }
+    }
+    counts
+}
+
+fn sparse_count(sparse: &SparseHist) -> u64 {
+    sparse.iter().map(|&(_, c)| c).sum()
+}
+
+fn sparse_percentile(sparse: &SparseHist, p: f64) -> f64 {
+    Histogram::from_counts(expand(sparse)).percentile(p)
+}
+
+/// One sequence bucket's share of a window: its exact latency
+/// histogram delta.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BucketWindow {
+    /// Bucket sequence length.
+    pub seq_len: u64,
+    /// Sparse latency histogram of requests this bucket completed in
+    /// the window.
+    pub hist: SparseHist,
+}
+
+impl BucketWindow {
+    /// Requests this bucket completed in the window.
+    pub fn completed(&self) -> u64 {
+        sparse_count(&self.hist)
+    }
+
+    /// Exact nearest-rank percentile of the bucket's window latencies.
+    pub fn percentile(&self, p: f64) -> f64 {
+        sparse_percentile(&self.hist, p)
+    }
+}
+
+/// One sampler window: counter deltas, gauges, and exact histogram
+/// deltas. All counts are *this window only*, never cumulative.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SeriesSample {
+    /// Server uptime when the window closed (seconds).
+    pub at_s: f64,
+    /// Window width (seconds since the previous sample).
+    pub window_s: f64,
+    /// Requests admitted in the window.
+    pub admitted: u64,
+    /// Requests completed in the window.
+    pub completed: u64,
+    /// Sheds per reason in the window, wire-code order.
+    pub shed: [u64; 4],
+    /// Request errors in the window.
+    pub errors: u64,
+    /// Admitted-but-unanswered requests when the window closed (gauge).
+    pub outstanding: u64,
+    /// Queue-wait EWMA when the window closed (ms, gauge).
+    pub queue_ewma_ms: f64,
+    /// Sparse latency histogram of the window's completions.
+    pub hist: SparseHist,
+    /// Per-sequence-bucket window histograms, sorted by seq_len.
+    pub buckets: Vec<BucketWindow>,
+    /// Batch completions per worker in the window.
+    pub worker_jobs: Vec<u64>,
+    /// Per-worker busy fraction of the window (0..=1).
+    pub worker_busy: Vec<f64>,
+    /// Kernel GFLOP/s achieved over the window.
+    pub achieved_gflops: f64,
+    /// Pool roofline peak GFLOP/s (gauge).
+    pub peak_gflops: f64,
+}
+
+impl SeriesSample {
+    /// Admitted requests per second over the window.
+    pub fn admitted_per_s(&self) -> f64 {
+        self.admitted as f64 / self.window_s.max(1e-9)
+    }
+
+    /// Completed requests per second over the window.
+    pub fn completed_per_s(&self) -> f64 {
+        self.completed as f64 / self.window_s.max(1e-9)
+    }
+
+    /// Sheds per second over the window (all reasons).
+    pub fn shed_per_s(&self) -> f64 {
+        self.shed.iter().sum::<u64>() as f64 / self.window_s.max(1e-9)
+    }
+
+    /// Exact nearest-rank latency percentile of the window (0.0 when
+    /// no request completed).
+    pub fn percentile(&self, p: f64) -> f64 {
+        sparse_percentile(&self.hist, p)
+    }
+
+    /// Fold a run of windows into one wider window. Counter deltas and
+    /// histogram deltas are summed (so merged percentiles are exactly
+    /// the percentiles of the concatenated windows); gauges
+    /// (`outstanding`, `queue_ewma_ms`, `peak_gflops`) take the most
+    /// recent sample's value. Returns `None` on an empty slice.
+    pub fn merge_all(samples: &[SeriesSample]) -> Option<SeriesSample> {
+        let last = samples.last()?;
+        let mut out = SeriesSample {
+            at_s: last.at_s,
+            outstanding: last.outstanding,
+            queue_ewma_ms: last.queue_ewma_ms,
+            peak_gflops: last.peak_gflops,
+            ..SeriesSample::default()
+        };
+        let mut hist = [0u64; BUCKETS];
+        let mut buckets: Vec<(u64, [u64; BUCKETS])> = Vec::new();
+        let mut gflop = 0.0;
+        for s in samples {
+            out.window_s += s.window_s;
+            out.admitted += s.admitted;
+            out.completed += s.completed;
+            for (a, b) in out.shed.iter_mut().zip(s.shed) {
+                *a += b;
+            }
+            out.errors += s.errors;
+            for (a, b) in hist.iter_mut().zip(expand(&s.hist)) {
+                *a += b;
+            }
+            for b in &s.buckets {
+                let counts = expand(&b.hist);
+                match buckets.iter_mut().find(|(seq, _)| *seq == b.seq_len) {
+                    Some((_, acc)) => {
+                        for (a, c) in acc.iter_mut().zip(counts) {
+                            *a += c;
+                        }
+                    }
+                    None => buckets.push((b.seq_len, counts)),
+                }
+            }
+            if s.worker_jobs.len() > out.worker_jobs.len() {
+                out.worker_jobs.resize(s.worker_jobs.len(), 0);
+                out.worker_busy.resize(s.worker_jobs.len(), 0.0);
+            }
+            for (a, b) in out.worker_jobs.iter_mut().zip(&s.worker_jobs) {
+                *a += b;
+            }
+            // busy fractions recombine weighted by window width
+            for (a, b) in out.worker_busy.iter_mut().zip(&s.worker_busy) {
+                *a += b * s.window_s;
+            }
+            gflop += s.achieved_gflops * s.window_s;
+        }
+        let w = out.window_s.max(1e-9);
+        for b in &mut out.worker_busy {
+            *b = (*b / w).clamp(0.0, 1.0);
+        }
+        out.achieved_gflops = gflop / w;
+        out.hist = sparse_delta(&Histogram::from_counts(hist), &Histogram::new());
+        buckets.sort_by_key(|&(seq, _)| seq);
+        out.buckets = buckets
+            .into_iter()
+            .map(|(seq_len, counts)| BucketWindow {
+                seq_len,
+                hist: sparse_delta(&Histogram::from_counts(counts), &Histogram::new()),
+            })
+            .collect();
+        Some(out)
+    }
+}
+
+/// The delta state machine between consecutive cumulative captures.
+/// Pure and clock-free: the caller supplies the uptime stamp, so tests
+/// drive windows deterministically.
+#[derive(Debug, Default)]
+pub struct SamplerState {
+    prev: Option<(f64, CumulativeStats, u64)>,
+}
+
+impl SamplerState {
+    pub fn new() -> Self {
+        SamplerState { prev: None }
+    }
+
+    /// Close one window: difference `cur` against the previous capture
+    /// (an all-zero baseline for the first window) into a
+    /// [`SeriesSample`]. `outstanding` and `queue_ewma_ms` are gauges
+    /// read at the same instant as `cur`.
+    pub fn sample(
+        &mut self,
+        at_s: f64,
+        cur: CumulativeStats,
+        outstanding: u64,
+        queue_ewma_ms: f64,
+    ) -> SeriesSample {
+        let (prev_at, prev, _) = self
+            .prev
+            .take()
+            .unwrap_or((0.0, CumulativeStats::default(), 0));
+        let window_s = (at_s - prev_at).max(1e-9);
+        let empty = Histogram::new();
+        let prev_bucket = |seq: usize| -> &Histogram {
+            prev.bucket_latency
+                .iter()
+                .find(|(s, _)| *s == seq)
+                .map(|(_, h)| h)
+                .unwrap_or(&empty)
+        };
+        let mut shed = [0u64; 4];
+        for (d, (a, b)) in shed.iter_mut().zip(cur.shed.iter().zip(prev.shed)) {
+            *d = a.saturating_sub(b);
+        }
+        let sample = SeriesSample {
+            at_s,
+            window_s,
+            admitted: cur.admitted.saturating_sub(prev.admitted),
+            completed: cur.latency.count().saturating_sub(prev.latency.count()),
+            shed,
+            errors: cur.errors.saturating_sub(prev.errors),
+            outstanding,
+            queue_ewma_ms,
+            hist: sparse_delta(&cur.latency, &prev.latency),
+            buckets: cur
+                .bucket_latency
+                .iter()
+                .map(|(seq, h)| BucketWindow {
+                    seq_len: *seq as u64,
+                    hist: sparse_delta(h, prev_bucket(*seq)),
+                })
+                .collect(),
+            worker_jobs: cur
+                .worker_jobs
+                .iter()
+                .enumerate()
+                .map(|(w, &j)| j.saturating_sub(prev.worker_jobs.get(w).copied().unwrap_or(0)))
+                .collect(),
+            worker_busy: cur
+                .worker_busy_ms
+                .iter()
+                .enumerate()
+                .map(|(w, &ms)| {
+                    let d = ms - prev.worker_busy_ms.get(w).copied().unwrap_or(0.0);
+                    (d / (window_s * 1e3)).clamp(0.0, 1.0)
+                })
+                .collect(),
+            achieved_gflops: ((cur.phase_gflop - prev.phase_gflop) / window_s).max(0.0),
+            peak_gflops: cur.peak_gflops,
+        };
+        self.prev = Some((at_s, cur, 0));
+        sample
+    }
+}
+
+/// Fixed-capacity ring of the most recent [`SeriesSample`]s, shared
+/// between the sampler (producer), the watchdog, the Prometheus
+/// exposition, and the flight recorder (readers). One short mutex per
+/// push/query — never on the request hot path.
+#[derive(Debug)]
+pub struct SeriesRing {
+    cap: usize,
+    samples: Mutex<VecDeque<SeriesSample>>,
+    pushed: AtomicU64,
+}
+
+impl SeriesRing {
+    /// An empty ring retaining at most `capacity` samples (min 2, so a
+    /// window delta always has a predecessor to merge against).
+    pub fn new(capacity: usize) -> Self {
+        SeriesRing {
+            cap: capacity.max(2),
+            samples: Mutex::new(VecDeque::new()),
+            pushed: AtomicU64::new(0),
+        }
+    }
+
+    /// Retention capacity in samples.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Samples currently retained.
+    pub fn len(&self) -> usize {
+        self.samples.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total samples ever pushed (including evicted ones).
+    pub fn total_pushed(&self) -> u64 {
+        self.pushed.load(Ordering::Acquire)
+    }
+
+    /// Append one window, evicting the oldest at capacity.
+    pub fn push(&self, sample: SeriesSample) {
+        let mut q = self.samples.lock().unwrap();
+        if q.len() == self.cap {
+            q.pop_front();
+        }
+        q.push_back(sample);
+        self.pushed.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// The `k` most recent windows, oldest first (fewer when the ring
+    /// holds fewer).
+    pub fn last(&self, k: usize) -> Vec<SeriesSample> {
+        let q = self.samples.lock().unwrap();
+        q.iter().skip(q.len().saturating_sub(k)).cloned().collect()
+    }
+
+    /// The `k` most recent windows merged into one
+    /// ([`SeriesSample::merge_all`]); `None` while empty.
+    pub fn merged(&self, k: usize) -> Option<SeriesSample> {
+        SeriesSample::merge_all(&self.last(k))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON export + strict self-parser (flight-recorder bundle format)
+// ---------------------------------------------------------------------------
+
+fn push_f64(out: &mut String, v: f64) {
+    if v.is_finite() {
+        out.push_str(&format!("{v}"));
+    } else {
+        out.push('0');
+    }
+}
+
+fn push_sparse(out: &mut String, h: &SparseHist) {
+    out.push('[');
+    for (i, (b, c)) in h.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("[{b},{c}]"));
+    }
+    out.push(']');
+}
+
+/// Render a run of samples as the series JSON document the flight
+/// recorder dumps. Key order is fixed; [`parse_series_json`] requires
+/// exactly this shape.
+pub fn render_series_json(samples: &[SeriesSample]) -> String {
+    let mut out = String::with_capacity(64 + samples.len() * 256);
+    out.push_str("{\"schema\":1,\"samples\":[");
+    for (i, s) in samples.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("{\"at_s\":");
+        push_f64(&mut out, s.at_s);
+        out.push_str(",\"window_s\":");
+        push_f64(&mut out, s.window_s);
+        out.push_str(&format!(",\"admitted\":{}", s.admitted));
+        out.push_str(&format!(",\"completed\":{}", s.completed));
+        out.push_str(&format!(
+            ",\"shed\":[{},{},{},{}]",
+            s.shed[0], s.shed[1], s.shed[2], s.shed[3]
+        ));
+        out.push_str(&format!(",\"errors\":{}", s.errors));
+        out.push_str(&format!(",\"outstanding\":{}", s.outstanding));
+        out.push_str(",\"queue_ewma_ms\":");
+        push_f64(&mut out, s.queue_ewma_ms);
+        out.push_str(",\"hist\":");
+        push_sparse(&mut out, &s.hist);
+        out.push_str(",\"buckets\":[");
+        for (j, b) in s.buckets.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{{\"seq_len\":{},\"hist\":", b.seq_len));
+            push_sparse(&mut out, &b.hist);
+            out.push('}');
+        }
+        out.push_str("],\"worker_jobs\":[");
+        for (j, v) in s.worker_jobs.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push_str(&v.to_string());
+        }
+        out.push_str("],\"worker_busy\":[");
+        for (j, v) in s.worker_busy.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            push_f64(&mut out, *v);
+        }
+        out.push_str("],\"achieved_gflops\":");
+        push_f64(&mut out, s.achieved_gflops);
+        out.push_str(",\"peak_gflops\":");
+        push_f64(&mut out, s.peak_gflops);
+        out.push('}');
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Strict parser for [`render_series_json`] documents: the exact key
+/// order and set, finite numbers, non-negative integer counts, no
+/// trailing input. Like `parse_chrome_trace`, this is the validation
+/// path for flight-recorder bundles — leniency would hide export bugs.
+pub fn parse_series_json(src: &str) -> Result<Vec<SeriesSample>, String> {
+    let mut p = Scan { bytes: src.as_bytes(), pos: 0 };
+    p.lit("{\"schema\":1,\"samples\":[")?;
+    let mut samples = Vec::new();
+    if p.peek() == Some(b']') {
+        p.pos += 1;
+    } else {
+        loop {
+            samples.push(parse_sample(&mut p)?);
+            match p.next()? {
+                b',' => continue,
+                b']' => break,
+                _ => return p.err("expected ',' or ']' after sample"),
+            }
+        }
+    }
+    p.lit("}")?;
+    if p.pos != p.bytes.len() {
+        return p.err("trailing input after document");
+    }
+    Ok(samples)
+}
+
+struct Scan<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Scan<'a> {
+    fn err<T>(&self, msg: &str) -> Result<T, String> {
+        Err(format!("series JSON invalid at byte {}: {msg}", self.pos))
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn next(&mut self) -> Result<u8, String> {
+        let b = self.peek().ok_or("series JSON invalid: unexpected end of input")?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn lit(&mut self, s: &str) -> Result<(), String> {
+        if self.bytes[self.pos..].starts_with(s.as_bytes()) {
+            self.pos += s.len();
+            Ok(())
+        } else {
+            self.err(&format!("expected {s:?}"))
+        }
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        let start = self.pos;
+        while matches!(self.peek(), Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')) {
+            self.pos += 1;
+        }
+        if start == self.pos {
+            return self.err("expected number");
+        }
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .filter(|v| v.is_finite())
+            .ok_or_else(|| format!("series JSON invalid at byte {start}: bad number"))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        let v = self.f64()?;
+        if v < 0.0 || v.fract() != 0.0 || v > 2f64.powi(53) {
+            return self.err("expected a non-negative integer");
+        }
+        Ok(v as u64)
+    }
+
+    fn sparse(&mut self) -> Result<SparseHist, String> {
+        self.lit("[")?;
+        let mut out = Vec::new();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(out);
+        }
+        loop {
+            self.lit("[")?;
+            let i = self.u64()?;
+            if i >= BUCKETS as u64 {
+                return self.err("histogram bucket index out of range");
+            }
+            self.lit(",")?;
+            let c = self.u64()?;
+            self.lit("]")?;
+            if let Some(&(last, _)) = out.last() {
+                if i as u32 <= last {
+                    return self.err("histogram bucket indices must ascend");
+                }
+            }
+            out.push((i as u32, c));
+            match self.next()? {
+                b',' => continue,
+                b']' => return Ok(out),
+                _ => return self.err("expected ',' or ']' in histogram"),
+            }
+        }
+    }
+}
+
+fn parse_sample(p: &mut Scan<'_>) -> Result<SeriesSample, String> {
+    let mut s = SeriesSample::default();
+    p.lit("{\"at_s\":")?;
+    s.at_s = p.f64()?;
+    p.lit(",\"window_s\":")?;
+    s.window_s = p.f64()?;
+    p.lit(",\"admitted\":")?;
+    s.admitted = p.u64()?;
+    p.lit(",\"completed\":")?;
+    s.completed = p.u64()?;
+    p.lit(",\"shed\":[")?;
+    for (i, slot) in s.shed.iter_mut().enumerate() {
+        if i > 0 {
+            p.lit(",")?;
+        }
+        *slot = p.u64()?;
+    }
+    p.lit("],\"errors\":")?;
+    s.errors = p.u64()?;
+    p.lit(",\"outstanding\":")?;
+    s.outstanding = p.u64()?;
+    p.lit(",\"queue_ewma_ms\":")?;
+    s.queue_ewma_ms = p.f64()?;
+    p.lit(",\"hist\":")?;
+    s.hist = p.sparse()?;
+    p.lit(",\"buckets\":[")?;
+    if p.peek() == Some(b'}') {
+        return p.err("unterminated buckets array");
+    }
+    if p.peek() == Some(b']') {
+        p.pos += 1;
+    } else {
+        loop {
+            p.lit("{\"seq_len\":")?;
+            let seq_len = p.u64()?;
+            p.lit(",\"hist\":")?;
+            let hist = p.sparse()?;
+            p.lit("}")?;
+            s.buckets.push(BucketWindow { seq_len, hist });
+            match p.next()? {
+                b',' => continue,
+                b']' => break,
+                _ => return p.err("expected ',' or ']' in buckets"),
+            }
+        }
+    }
+    p.lit(",\"worker_jobs\":[")?;
+    if p.peek() == Some(b']') {
+        p.pos += 1;
+    } else {
+        loop {
+            s.worker_jobs.push(p.u64()?);
+            match p.next()? {
+                b',' => continue,
+                b']' => break,
+                _ => return p.err("expected ',' or ']' in worker_jobs"),
+            }
+        }
+    }
+    p.lit(",\"worker_busy\":[")?;
+    if p.peek() == Some(b']') {
+        p.pos += 1;
+    } else {
+        loop {
+            s.worker_busy.push(p.f64()?);
+            match p.next()? {
+                b',' => continue,
+                b']' => break,
+                _ => return p.err("expected ',' or ']' in worker_busy"),
+            }
+        }
+    }
+    p.lit(",\"achieved_gflops\":")?;
+    s.achieved_gflops = p.f64()?;
+    p.lit(",\"peak_gflops\":")?;
+    s.peak_gflops = p.f64()?;
+    p.lit("}")?;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cum(admitted: u64, lat: &[f64], jobs: &[u64]) -> CumulativeStats {
+        let mut latency = Histogram::new();
+        let mut b512 = Histogram::new();
+        for &v in lat {
+            latency.record(v);
+            b512.record(v);
+        }
+        CumulativeStats {
+            admitted,
+            latency,
+            bucket_latency: vec![(512, b512)],
+            worker_jobs: jobs.to_vec(),
+            worker_busy_ms: jobs.iter().map(|&j| j as f64 * 10.0).collect(),
+            phase_gflop: admitted as f64 * 2.0,
+            peak_gflops: 100.0,
+            ..CumulativeStats::default()
+        }
+    }
+
+    #[test]
+    fn window_deltas_are_exact() {
+        let mut st = SamplerState::new();
+        let first = st.sample(1.0, cum(10, &[5.0, 7.0], &[2]), 3, 4.0);
+        assert_eq!(first.admitted, 10);
+        assert_eq!(first.completed, 2);
+        assert_eq!(first.outstanding, 3);
+        assert!((first.window_s - 1.0).abs() < 1e-9);
+
+        // second window adds 5 admissions, 3 completions at ~20ms
+        let second =
+            st.sample(2.0, cum(15, &[5.0, 7.0, 20.0, 20.0, 21.0], &[2, 4]), 1, 6.0);
+        assert_eq!(second.admitted, 5);
+        assert_eq!(second.completed, 3);
+        assert_eq!(second.worker_jobs, vec![0, 4], "new worker slots appear as deltas");
+        // the window percentile reflects only the window's samples
+        let mut oracle = Histogram::new();
+        for v in [20.0, 20.0, 21.0] {
+            oracle.record(v);
+        }
+        assert_eq!(second.percentile(99.0), oracle.percentile(99.0));
+        assert_eq!(second.buckets.len(), 1);
+        assert_eq!(second.buckets[0].completed(), 3);
+        // achieved GFLOP/s = ΔGFLOP / window
+        assert!((second.achieved_gflops - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_is_exact_over_windows() {
+        let mut st = SamplerState::new();
+        let a = st.sample(1.0, cum(4, &[1.0, 2.0], &[1]), 2, 1.0);
+        let b = st.sample(3.0, cum(9, &[1.0, 2.0, 50.0, 60.0, 70.0], &[3]), 0, 2.0);
+        let m = SeriesSample::merge_all(&[a, b]).unwrap();
+        assert_eq!(m.admitted, 9);
+        assert_eq!(m.completed, 5);
+        assert!((m.window_s - 3.0).abs() < 1e-9);
+        assert_eq!(m.outstanding, 0, "gauges take the latest sample");
+        let mut oracle = Histogram::new();
+        for v in [1.0, 2.0, 50.0, 60.0, 70.0] {
+            oracle.record(v);
+        }
+        for p in [50.0, 95.0, 99.0] {
+            assert_eq!(m.percentile(p), oracle.percentile(p), "merged p{p} must be exact");
+        }
+        assert_eq!(m.worker_jobs, vec![3]);
+        assert!(SeriesSample::merge_all(&[]).is_none());
+    }
+
+    #[test]
+    fn ring_retains_most_recent_and_counts_evictions() {
+        let ring = SeriesRing::new(3);
+        assert!(ring.is_empty());
+        for i in 0..5 {
+            ring.push(SeriesSample {
+                at_s: i as f64,
+                window_s: 1.0,
+                ..SeriesSample::default()
+            });
+        }
+        assert_eq!(ring.len(), 3);
+        assert_eq!(ring.total_pushed(), 5);
+        let last2 = ring.last(2);
+        assert_eq!(last2.len(), 2);
+        assert_eq!(last2[0].at_s, 3.0, "oldest first");
+        assert_eq!(last2[1].at_s, 4.0);
+        assert!(ring.merged(10).is_some());
+    }
+
+    #[test]
+    fn series_json_round_trips_and_parser_is_strict() {
+        let mut st = SamplerState::new();
+        let a = st.sample(1.0, cum(4, &[1.0, 2.0], &[1, 0]), 2, 1.5);
+        let b = st.sample(2.5, cum(9, &[1.0, 2.0, 50.0], &[2, 1]), 0, 2.25);
+        let samples = vec![a, b];
+        let json = render_series_json(&samples);
+        let parsed = parse_series_json(&json).unwrap();
+        assert_eq!(parsed, samples);
+        // re-render is byte-identical
+        assert_eq!(render_series_json(&parsed), json);
+        // empty documents round-trip
+        assert_eq!(parse_series_json(&render_series_json(&[])).unwrap(), vec![]);
+
+        // strictness
+        assert!(parse_series_json(&format!("{json} ")).is_err(), "trailing bytes rejected");
+        assert!(parse_series_json(&json.replace("\"admitted\"", "\"admited\"")).is_err());
+        assert!(parse_series_json(&json.replace("{\"schema\":1", "{\"schema\":2")).is_err());
+        assert!(parse_series_json("").is_err());
+        assert!(parse_series_json("{}").is_err());
+        // negative counts rejected
+        let neg = json.replacen("\"completed\":2", "\"completed\":-2", 1);
+        assert!(parse_series_json(&neg).is_err());
+    }
+}

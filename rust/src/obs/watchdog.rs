@@ -1,0 +1,505 @@
+//! Anomaly watchdog over the telemetry series, plus the health state
+//! `/healthz` serves and the flight recorder that preserves evidence.
+//!
+//! Four detectors run after every sampler window, each a **pure
+//! function of the recent [`SeriesSample`]s** (so tests drive them
+//! with synthetic windows, no clocks or threads):
+//!
+//! * **worker stall** — the queue is non-empty (`outstanding > 0`) but
+//!   nothing completed, across [`STALL_WINDOWS`] consecutive windows.
+//!   The alert names the workers whose heartbeat (per-window job
+//!   delta) is flat.
+//! * **shed spike** — more than [`SPIKE_SHED_FRAC`] of the window's
+//!   submissions were shed, with at least [`SPIKE_MIN_EVENTS`]
+//!   submissions in the window (so an idle server's single shed never
+//!   pages).
+//! * **utilization collapse** — the pool's achieved GFLOP/s falls
+//!   under [`COLLAPSE_UTIL_FRAC`] of the declared roofline peak for
+//!   [`COLLAPSE_WINDOWS`] windows while real backlog is sustained
+//!   (`outstanding ≥` [`COLLAPSE_MIN_BACKLOG`] and completions are
+//!   still happening — a *total* stop is the stall detector's case).
+//! * **SLO burn** — the window p99 exceeds the configured target for
+//!   [`BURN_WINDOWS`] consecutive windows with completions in each.
+//!   Off unless a target is set (`serve --slo-p99-ms`).
+//!
+//! Firing **edges** (a detector newly active) emit one rate-limited
+//! `log!` alert and trigger one [`FlightRecorder`] dump; while a
+//! condition stays active the health report stays degraded but no new
+//! bundles are written. Health recovers automatically when a window
+//! closes with no detector active.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::timeseries::SeriesSample;
+
+/// Windows of queue-non-empty-with-no-completions before a stall fires.
+pub const STALL_WINDOWS: usize = 3;
+/// Minimum submissions in a window before the shed fraction is judged.
+pub const SPIKE_MIN_EVENTS: u64 = 16;
+/// Shed fraction of a window's submissions that counts as a spike.
+pub const SPIKE_SHED_FRAC: f64 = 0.5;
+/// Windows of collapsed utilization before the detector fires.
+pub const COLLAPSE_WINDOWS: usize = 3;
+/// Achieved/peak ratio under which utilization counts as collapsed.
+pub const COLLAPSE_UTIL_FRAC: f64 = 0.02;
+/// Outstanding requests that count as sustained backlog for collapse.
+pub const COLLAPSE_MIN_BACKLOG: u64 = 8;
+/// Consecutive over-target windows before the SLO burn fires.
+pub const BURN_WINDOWS: usize = 3;
+
+/// Which detector fired.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Detector {
+    WorkerStall = 0,
+    ShedSpike = 1,
+    UtilCollapse = 2,
+    SloBurn = 3,
+}
+
+/// All detectors, in stable index order.
+pub const DETECTORS: [Detector; 4] =
+    [Detector::WorkerStall, Detector::ShedSpike, Detector::UtilCollapse, Detector::SloBurn];
+
+impl Detector {
+    /// Stable label (Prometheus `detector` label, bundle tag).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Detector::WorkerStall => "worker_stall",
+            Detector::ShedSpike => "shed_spike",
+            Detector::UtilCollapse => "util_collapse",
+            Detector::SloBurn => "slo_burn",
+        }
+    }
+}
+
+/// One detector firing, with a human-readable diagnosis.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Alert {
+    pub detector: Detector,
+    pub reason: String,
+}
+
+/// Run every detector over the most recent windows (oldest first, as
+/// [`crate::obs::timeseries::SeriesRing::last`] returns them).
+/// `slo_p99_ms` arms the SLO-burn detector. Pure: no clocks, no state.
+pub fn detect(recent: &[SeriesSample], slo_p99_ms: Option<f64>) -> Vec<Alert> {
+    let mut alerts = Vec::new();
+    if let Some(a) = detect_stall(recent) {
+        alerts.push(a);
+    }
+    if let Some(a) = detect_shed_spike(recent) {
+        alerts.push(a);
+    }
+    if let Some(a) = detect_util_collapse(recent) {
+        alerts.push(a);
+    }
+    if let Some(slo) = slo_p99_ms {
+        if let Some(a) = detect_slo_burn(recent, slo) {
+            alerts.push(a);
+        }
+    }
+    alerts
+}
+
+fn tail(recent: &[SeriesSample], n: usize) -> Option<&[SeriesSample]> {
+    (recent.len() >= n).then(|| &recent[recent.len() - n..])
+}
+
+fn detect_stall(recent: &[SeriesSample]) -> Option<Alert> {
+    let w = tail(recent, STALL_WINDOWS)?;
+    let stalled = w
+        .iter()
+        .all(|s| s.outstanding > 0 && s.completed == 0 && s.worker_jobs.iter().sum::<u64>() == 0);
+    if !stalled {
+        return None;
+    }
+    let last = w.last().unwrap();
+    let flat: Vec<String> = last
+        .worker_jobs
+        .iter()
+        .enumerate()
+        .filter(|(_, &j)| j == 0)
+        .map(|(i, _)| i.to_string())
+        .collect();
+    let who = if flat.is_empty() { "all".to_string() } else { flat.join(",") };
+    Some(Alert {
+        detector: Detector::WorkerStall,
+        reason: format!(
+            "queue non-empty ({} outstanding) with no completions for {STALL_WINDOWS} \
+             windows; flat worker heartbeats: [{who}]",
+            last.outstanding
+        ),
+    })
+}
+
+fn detect_shed_spike(recent: &[SeriesSample]) -> Option<Alert> {
+    let s = recent.last()?;
+    let shed: u64 = s.shed.iter().sum();
+    let submitted = s.admitted + shed;
+    if submitted < SPIKE_MIN_EVENTS {
+        return None;
+    }
+    let frac = shed as f64 / submitted as f64;
+    (frac > SPIKE_SHED_FRAC).then(|| Alert {
+        detector: Detector::ShedSpike,
+        reason: format!(
+            "{shed}/{submitted} submissions shed this window ({:.0}% > {:.0}% threshold)",
+            frac * 100.0,
+            SPIKE_SHED_FRAC * 100.0
+        ),
+    })
+}
+
+fn detect_util_collapse(recent: &[SeriesSample]) -> Option<Alert> {
+    let w = tail(recent, COLLAPSE_WINDOWS)?;
+    let collapsed = w.iter().all(|s| {
+        s.peak_gflops > 0.0
+            && s.outstanding >= COLLAPSE_MIN_BACKLOG
+            && s.completed > 0
+            && s.achieved_gflops / s.peak_gflops < COLLAPSE_UTIL_FRAC
+    });
+    collapsed.then(|| {
+        let last = w.last().unwrap();
+        Alert {
+            detector: Detector::UtilCollapse,
+            reason: format!(
+                "achieved {:.2} GFLOP/s is {:.2}% of the {:.0} GFLOP/s roofline for \
+                 {COLLAPSE_WINDOWS} windows under sustained backlog",
+                last.achieved_gflops,
+                100.0 * last.achieved_gflops / last.peak_gflops,
+                last.peak_gflops
+            ),
+        }
+    })
+}
+
+fn detect_slo_burn(recent: &[SeriesSample], slo_p99_ms: f64) -> Option<Alert> {
+    let w = tail(recent, BURN_WINDOWS)?;
+    let burning = w.iter().all(|s| s.completed > 0 && s.percentile(99.0) > slo_p99_ms);
+    burning.then(|| Alert {
+        detector: Detector::SloBurn,
+        reason: format!(
+            "window p99 {:.2} ms over the {slo_p99_ms} ms target for {BURN_WINDOWS} windows",
+            w.last().unwrap().percentile(99.0)
+        ),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Health state (what /healthz serves)
+// ---------------------------------------------------------------------------
+
+/// Point-in-time health report: healthy/degraded plus per-detector
+/// firing totals.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HealthReport {
+    /// `false` while any detector is active.
+    pub healthy: bool,
+    /// Diagnosis of the active detectors, `"ok"` when healthy.
+    pub reason: String,
+    /// Total windows each detector was active for, by
+    /// [`Detector::as_str`] order.
+    pub alerts_by_detector: [u64; 4],
+}
+
+impl HealthReport {
+    /// Total detector-active windows across all detectors.
+    pub fn alerts_total(&self) -> u64 {
+        self.alerts_by_detector.iter().sum()
+    }
+
+    /// The `/healthz` JSON body.
+    pub fn to_json(&self) -> String {
+        let status = if self.healthy { "ok" } else { "degraded" };
+        let mut o = format!("{{\"status\":\"{status}\",\"reason\":\"");
+        for ch in self.reason.chars() {
+            match ch {
+                '"' => o.push_str("\\\""),
+                '\\' => o.push_str("\\\\"),
+                c if (c as u32) < 0x20 => o.push(' '),
+                c => o.push(c),
+            }
+        }
+        o.push_str("\",\"alerts\":{");
+        for (i, d) in DETECTORS.iter().enumerate() {
+            if i > 0 {
+                o.push(',');
+            }
+            o.push_str(&format!("\"{}\":{}", d.as_str(), self.alerts_by_detector[i]));
+        }
+        o.push_str("}}");
+        o
+    }
+}
+
+#[derive(Debug, Default)]
+struct HealthInner {
+    active: [bool; 4],
+    reason: String,
+    totals: [u64; 4],
+}
+
+/// Shared health state: the watchdog writes it after every window, the
+/// ingress `/healthz` handler and the Prometheus exposition read it.
+#[derive(Debug, Default)]
+pub struct Health {
+    inner: Mutex<HealthInner>,
+}
+
+impl Health {
+    pub fn new() -> Self {
+        Health::default()
+    }
+
+    /// Fold one window's detector verdicts in. Returns only the
+    /// **newly fired** alerts (inactive → active edges) — the caller's
+    /// cue to log and dump a flight bundle; conditions that merely stay
+    /// active return nothing. A window with no alerts restores health.
+    pub fn observe(&self, alerts: &[Alert]) -> Vec<Alert> {
+        let mut i = self.inner.lock().unwrap();
+        let mut now = [false; 4];
+        let mut edges = Vec::new();
+        for a in alerts {
+            let d = a.detector as usize;
+            now[d] = true;
+            i.totals[d] += 1;
+            if !i.active[d] {
+                edges.push(a.clone());
+            }
+        }
+        i.active = now;
+        i.reason = if alerts.is_empty() {
+            String::new()
+        } else {
+            alerts
+                .iter()
+                .map(|a| format!("{}: {}", a.detector.as_str(), a.reason))
+                .collect::<Vec<_>>()
+                .join("; ")
+        };
+        edges
+    }
+
+    /// Current health, for `/healthz` and the exposition.
+    pub fn report(&self) -> HealthReport {
+        let i = self.inner.lock().unwrap();
+        let healthy = !i.active.iter().any(|&a| a);
+        HealthReport {
+            healthy,
+            reason: if healthy { "ok".to_string() } else { i.reason.clone() },
+            alerts_by_detector: i.totals,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Flight recorder
+// ---------------------------------------------------------------------------
+
+/// Bundles a dump may write before the recorder refuses (disk bound;
+/// an alert storm must not fill the volume).
+pub const MAX_BUNDLES: u64 = 8;
+
+/// Dumps a timestamped evidence bundle on watchdog firing edges:
+/// `trace.json` (the PR 8 span-ring export), `series.json` (recent
+/// windows, [`crate::obs::timeseries::render_series_json`]) and
+/// `snapshot.json` (the full cumulative `MetricsSnapshot`), under
+/// `<dir>/flight-<unix-seconds>-<seq>-<detector>/`.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    dir: PathBuf,
+    seq: AtomicU64,
+}
+
+impl FlightRecorder {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        FlightRecorder { dir: dir.into(), seq: AtomicU64::new(0) }
+    }
+
+    /// The configured bundle directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Bundles written so far.
+    pub fn bundles(&self) -> u64 {
+        self.seq.load(Ordering::Acquire)
+    }
+
+    /// Write one bundle tagged `tag` (the firing detector's label).
+    /// Returns the bundle directory, or an error string (including
+    /// when the [`MAX_BUNDLES`] bound is reached).
+    pub fn dump(
+        &self,
+        tag: &str,
+        series_json: &str,
+        snapshot_json: &str,
+    ) -> Result<PathBuf, String> {
+        let seq = self.seq.fetch_add(1, Ordering::AcqRel);
+        if seq >= MAX_BUNDLES {
+            return Err(format!("flight recorder bundle limit ({MAX_BUNDLES}) reached"));
+        }
+        let stamp = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let bundle = self.dir.join(format!("flight-{stamp}-{seq}-{tag}"));
+        std::fs::create_dir_all(&bundle).map_err(|e| format!("creating {bundle:?}: {e}"))?;
+        let write = |name: &str, body: &str| {
+            std::fs::write(bundle.join(name), body)
+                .map_err(|e| format!("writing {name} in {bundle:?}: {e}"))
+        };
+        write("trace.json", &super::trace::export_chrome_json())?;
+        write("series.json", series_json)?;
+        write("snapshot.json", snapshot_json)?;
+        Ok(bundle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn window(outstanding: u64, completed: u64, jobs: &[u64]) -> SeriesSample {
+        SeriesSample {
+            at_s: 1.0,
+            window_s: 1.0,
+            admitted: completed,
+            completed,
+            outstanding,
+            worker_jobs: jobs.to_vec(),
+            worker_busy: vec![0.0; jobs.len()],
+            ..SeriesSample::default()
+        }
+    }
+
+    #[test]
+    fn stall_fires_only_after_n_flat_windows_with_backlog() {
+        let stalled = window(4, 0, &[0, 0]);
+        let busy = window(4, 3, &[2, 1]);
+        // two windows: not yet
+        assert!(detect(&[stalled.clone(), stalled.clone()], None).is_empty());
+        // three stalled windows: fires and names the flat workers
+        let run = [stalled.clone(), stalled.clone(), stalled.clone()];
+        let alerts = detect(&run, None);
+        assert_eq!(alerts.len(), 1);
+        assert_eq!(alerts[0].detector, Detector::WorkerStall);
+        assert!(alerts[0].reason.contains("[0,1]"), "{}", alerts[0].reason);
+        // a completion in the middle breaks the run
+        assert!(detect(&[stalled.clone(), busy, stalled], None).is_empty());
+        // idle server (no backlog): never a stall
+        let idle = window(0, 0, &[0]);
+        assert!(detect(&[idle.clone(), idle.clone(), idle], None).is_empty());
+    }
+
+    #[test]
+    fn shed_spike_needs_volume_and_fraction() {
+        let mut spike = window(0, 10, &[10]);
+        spike.shed = [20, 0, 0, 0];
+        let alerts = detect(&[spike.clone()], None);
+        assert_eq!(alerts.len(), 1);
+        assert_eq!(alerts[0].detector, Detector::ShedSpike);
+
+        // same fraction, tiny volume: quiet
+        let mut tiny = window(0, 2, &[2]);
+        tiny.shed = [4, 0, 0, 0];
+        assert!(detect(&[tiny], None).is_empty());
+
+        // high volume, low fraction: quiet
+        let mut healthy = window(0, 100, &[100]);
+        healthy.shed = [5, 0, 0, 0];
+        assert!(detect(&[healthy], None).is_empty());
+    }
+
+    #[test]
+    fn util_collapse_requires_sustained_backlog_and_a_declared_peak() {
+        let mut collapsed = window(COLLAPSE_MIN_BACKLOG, 5, &[5]);
+        collapsed.peak_gflops = 100.0;
+        collapsed.achieved_gflops = 0.5; // 0.5% of peak
+        let run = [collapsed.clone(), collapsed.clone(), collapsed.clone()];
+        let alerts = detect(&run, None);
+        assert_eq!(alerts.len(), 1);
+        assert_eq!(alerts[0].detector, Detector::UtilCollapse);
+
+        // no declared peak: detector stays quiet
+        let mut no_peak = collapsed.clone();
+        no_peak.peak_gflops = 0.0;
+        assert!(detect(&[no_peak.clone(), no_peak.clone(), no_peak], None).is_empty());
+
+        // healthy utilization: quiet
+        let mut healthy = collapsed.clone();
+        healthy.achieved_gflops = 50.0;
+        assert!(detect(&[healthy.clone(), healthy.clone(), healthy], None).is_empty());
+
+        // no backlog (a drained queue is allowed to idle): quiet
+        let mut idle = collapsed;
+        idle.outstanding = 0;
+        assert!(detect(&[idle.clone(), idle.clone(), idle], None).is_empty());
+    }
+
+    #[test]
+    fn slo_burn_needs_a_target_and_sustained_overrun() {
+        let mut slow = window(0, 10, &[10]);
+        // all completions in the ~100ms bucket
+        slow.hist = vec![(crate::obs::hist::Histogram::bucket_index(100.0) as u32, 10)];
+        // unarmed: quiet no matter what
+        let run = [slow.clone(), slow.clone(), slow.clone()];
+        assert!(detect(&run, None).is_empty());
+        // armed with a 10ms target: fires after 3 windows
+        let alerts = detect(&run, Some(10.0));
+        assert_eq!(alerts.len(), 1);
+        assert_eq!(alerts[0].detector, Detector::SloBurn);
+        // a generous target stays quiet
+        assert!(detect(&run, Some(10_000.0)).is_empty());
+    }
+
+    #[test]
+    fn health_edges_fire_once_and_recover() {
+        let h = Health::new();
+        assert!(h.report().healthy);
+        let stall =
+            Alert { detector: Detector::WorkerStall, reason: "jam".to_string() };
+        // first observation: an edge
+        let edges = h.observe(std::slice::from_ref(&stall));
+        assert_eq!(edges.len(), 1);
+        let r = h.report();
+        assert!(!r.healthy);
+        assert!(r.reason.contains("worker_stall"), "{}", r.reason);
+        // still active: no new edge, totals keep counting
+        assert!(h.observe(std::slice::from_ref(&stall)).is_empty());
+        assert_eq!(h.report().alerts_by_detector[0], 2);
+        // clean window: recovered
+        h.observe(&[]);
+        let r = h.report();
+        assert!(r.healthy);
+        assert_eq!(r.reason, "ok");
+        assert_eq!(r.alerts_total(), 2, "totals survive recovery");
+        // refiring after recovery is an edge again
+        assert_eq!(h.observe(&[stall]).len(), 1);
+        // healthz JSON shape
+        let json = h.report().to_json();
+        assert!(json.contains("\"status\":\"degraded\""), "{json}");
+        assert!(json.contains("\"worker_stall\":3"), "{json}");
+    }
+
+    #[test]
+    fn flight_recorder_writes_bundles_and_respects_the_limit() {
+        let dir = std::env::temp_dir().join(format!("bb_flight_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let fr = FlightRecorder::new(&dir);
+        let series = crate::obs::timeseries::render_series_json(&[]);
+        let bundle = fr.dump("worker_stall", &series, "{\"schema\":1}").unwrap();
+        assert!(bundle.join("trace.json").is_file());
+        assert!(bundle.join("series.json").is_file());
+        assert!(bundle.join("snapshot.json").is_file());
+        assert_eq!(fr.bundles(), 1);
+        // the bound: dumps past MAX_BUNDLES are refused
+        for _ in 1..MAX_BUNDLES {
+            fr.dump("shed_spike", &series, "{}").unwrap();
+        }
+        assert!(fr.dump("shed_spike", &series, "{}").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,312 @@
+//! Continuous-telemetry e2e: the sampler/exposition/watchdog stack
+//! against a live native server and its TCP ingress.
+//!
+//! * Prometheus scrapes round-trip the strict self-parser over both
+//!   transports (wire frame 7 and HTTP `GET /metrics`), with histogram
+//!   `_bucket` prefix sums matching the sampler's exact window deltas.
+//! * `/healthz` speaks watchdog: healthy is 200/`ok`; an injected
+//!   worker stall flips it to 503/`degraded` and drops a validatable
+//!   flight-recorder bundle.
+//! * Unknown (future) wire frame types drop only their own connection.
+//! * Concurrent wire + HTTP scrapes under inference load all validate.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use bigbird::config::ServingConfig;
+use bigbird::coordinator::{
+    json_num_field, wire, BatcherConfig, Ingress, Request, Server, ServerConfig, WireClient,
+};
+use bigbird::experiments::watch::http_get;
+use bigbird::obs::export::parse_prometheus;
+use bigbird::obs::hist::BUCKETS;
+use bigbird::obs::timeseries::parse_series_json;
+use bigbird::obs::trace::parse_chrome_trace;
+use bigbird::tokenizer::special;
+use bigbird::util::Rng;
+
+/// Artifact-free native server with a fast sampler (25 ms windows keep
+/// the watchdog's 3-window lookback under a tenth of a second).
+fn native_cfg(sampler_interval_ms: u64) -> ServerConfig {
+    let mut cfg = ServerConfig::mlm_default("definitely-missing-artifact-dir");
+    cfg.batcher = BatcherConfig { max_wait: Duration::from_millis(2), ..Default::default() };
+    cfg.serving = ServingConfig::native(2, 2);
+    cfg.obs.sampler_interval_ms = sampler_interval_ms;
+    cfg
+}
+
+fn masked_tokens(rng: &mut Rng, len: usize) -> Vec<i32> {
+    let mut tokens: Vec<i32> = (0..len).map(|_| 6 + rng.below(500) as i32).collect();
+    tokens[len / 2] = special::MASK;
+    tokens
+}
+
+/// Poll `f` every 20 ms until it holds or `secs` elapse.
+fn poll_until(secs: u64, mut f: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    loop {
+        if f() {
+            return true;
+        }
+        if Instant::now() >= deadline {
+            return false;
+        }
+        thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn prometheus_scrapes_round_trip_wire_and_http() {
+    const N: usize = 12;
+    let server = Arc::new(Server::start(native_cfg(25)).expect("native server"));
+    server.warmup(&[128]).expect("native warmup");
+    let ingress = Ingress::bind("127.0.0.1:0", server.clone()).expect("bind ephemeral");
+    let addr = ingress.local_addr();
+
+    let mut rng = Rng::new(42);
+    let rxs: Vec<_> = (0..N)
+        .map(|_| {
+            let len = rng.range(80, 120);
+            server.submit(Request::new(masked_tokens(&mut rng, len))).expect("submit")
+        })
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(600)).expect("answer");
+        assert!(resp.is_completed(), "unexpected outcome: {:?}", resp.outcome);
+    }
+    // wait for the sampler to fold every completion into a window, so
+    // the scrape and the series describe the same final state
+    assert!(
+        poll_until(10, || {
+            server.series(usize::MAX).iter().map(|s| s.completed).sum::<u64>() == N as u64
+        }),
+        "sampler never accounted all {N} completions: {:?}",
+        server.series(usize::MAX)
+    );
+    // a slow first batch can transiently trip the stall detector at
+    // 25 ms windows; once the queue drained, health must recover
+    assert!(
+        poll_until(5, || server.health_report().healthy),
+        "drained server must report healthy: {:?}",
+        server.health_report()
+    );
+
+    // -- wire scrape (frame 7), gated by the strict parser ------------
+    let text = WireClient::connect(&addr).unwrap().prometheus().expect("wire scrape");
+    let doc = parse_prometheus(&text).expect("wire exposition must round-trip");
+    assert_eq!(doc.value("bigbird_requests_admitted_total", &[]), Some(N as f64));
+    assert_eq!(doc.value("bigbird_requests_completed_total", &[]), Some(N as f64));
+    assert_eq!(doc.value("bigbird_errors_total", &[]), Some(0.0));
+    assert_eq!(doc.value("bigbird_healthy", &[]), Some(1.0));
+    assert_eq!(doc.value("bigbird_health_info", &[("reason", "ok")]), Some(1.0));
+    let interval = doc.value("bigbird_sampler_interval_seconds", &[]).unwrap();
+    assert!((interval - 0.025).abs() < 1e-9, "sampler interval gauge: {interval}");
+    assert!(doc.value("bigbird_uptime_seconds", &[]).unwrap() > 0.0);
+    assert!(doc.value("bigbird_samples_total", &[]).unwrap() >= 1.0);
+    let info = &doc.samples("bigbird_model_info")[0];
+    let fp = &info.labels.iter().find(|(k, _)| k == "fingerprint").expect("fingerprint label").1;
+    assert!(!fp.is_empty() && fp.contains('.'), "dotted fingerprint, got {fp:?}");
+
+    // histogram exactness: the exposition's cumulative `_bucket` counts
+    // must be the prefix sums of the sampler's exact window deltas —
+    // both views derive from the same obs::hist counts, no re-bucketing
+    let mut counts = [0u64; BUCKETS];
+    for w in server.series(usize::MAX) {
+        for &(i, c) in &w.hist {
+            counts[i as usize] += c;
+        }
+    }
+    let fam = doc.family("bigbird_request_latency_ms").expect("latency family");
+    let buckets: Vec<_> = fam.samples.iter().filter(|s| s.name.ends_with("_bucket")).collect();
+    assert_eq!(buckets.len(), BUCKETS, "one le edge per hist bucket");
+    let mut cum = 0u64;
+    for (i, s) in buckets.iter().enumerate() {
+        cum += counts[i];
+        assert_eq!(s.value, cum as f64, "bucket {i} prefix sum");
+    }
+    assert_eq!(doc.value("bigbird_request_latency_ms_count", &[]), Some(N as f64));
+    // requests of length 80..120 all land in the seq-len-128 bucket
+    assert_eq!(
+        doc.value("bigbird_bucket_latency_ms_count", &[("bucket", "128")]),
+        Some(N as f64)
+    );
+
+    // -- the same document over HTTP, plus the health endpoints -------
+    let (status, body) = http_get(&addr.to_string(), "/metrics").expect("http scrape");
+    assert_eq!(status, 200);
+    let http_doc = parse_prometheus(&body).expect("http exposition must round-trip");
+    assert_eq!(http_doc.value("bigbird_requests_completed_total", &[]), Some(N as f64));
+    let (status, body) = http_get(&addr.to_string(), "/healthz").expect("healthz");
+    assert_eq!(status, 200, "healthy server: {body}");
+    assert!(body.contains("\"status\":\"ok\""), "{body}");
+    let (status, _) = http_get(&addr.to_string(), "/nope").expect("unknown path");
+    assert_eq!(status, 404);
+
+    // -- the JSON snapshot agrees with the exposition -----------------
+    let snap = WireClient::connect(&addr).unwrap().metrics().expect("wire metrics");
+    assert_eq!(json_num_field(&snap, "requests"), Some(N as f64));
+    ingress.shutdown();
+}
+
+#[test]
+fn concurrent_scrapes_stay_valid_under_inference_load() {
+    let server = Arc::new(Server::start(native_cfg(25)).expect("native server"));
+    server.warmup(&[128, 256]).expect("native warmup");
+    let ingress = Ingress::bind("127.0.0.1:0", server.clone()).expect("bind ephemeral");
+    let addr = ingress.local_addr();
+
+    let infer: Vec<_> = (0..2u64)
+        .map(|c| {
+            thread::spawn(move || {
+                let mut rng = Rng::new(300 + c);
+                let mut cl = WireClient::connect(&addr).expect("connect");
+                for i in 0..8 {
+                    let len = if c == 0 { 100 } else { 200 };
+                    let req = Request::new(masked_tokens(&mut rng, len)).with_id(c * 100 + i);
+                    let resp = cl.infer(&req).expect("infer");
+                    assert!(resp.is_completed(), "{:?}", resp.outcome);
+                }
+            })
+        })
+        .collect();
+    let wire_scrapers: Vec<_> = (0..2)
+        .map(|_| {
+            thread::spawn(move || {
+                let mut cl = WireClient::connect(&addr).expect("connect");
+                for _ in 0..10 {
+                    let prom = cl.prometheus().expect("frame 7");
+                    parse_prometheus(&prom).expect("every scrape must validate");
+                    let metrics = cl.metrics().expect("frame 3");
+                    assert!(json_num_field(&metrics, "requests").is_some(), "{metrics}");
+                    let trace = cl.trace().expect("frame 5");
+                    parse_chrome_trace(&trace).expect("trace export must validate");
+                }
+            })
+        })
+        .collect();
+    let http_scraper = thread::spawn(move || {
+        for _ in 0..10 {
+            let (status, body) = http_get(&addr.to_string(), "/metrics").expect("GET /metrics");
+            assert_eq!(status, 200, "{body}");
+            parse_prometheus(&body).expect("every scrape must validate");
+            // mid-load a slow batch may transiently read as a stall at
+            // fast sampler windows, so accept either verdict — the
+            // contract under load is a well-formed answer, not health
+            let (status, body) = http_get(&addr.to_string(), "/healthz").expect("GET /healthz");
+            assert!(status == 200 || status == 503, "unexpected status {status}: {body}");
+            assert!(body.contains("\"status\":"), "{body}");
+        }
+    });
+    for h in infer {
+        h.join().expect("inference client");
+    }
+    for h in wire_scrapers {
+        h.join().expect("wire scraper");
+    }
+    http_scraper.join().expect("http scraper");
+
+    let m = server.metrics();
+    assert_eq!(m.requests, 16);
+    assert_eq!(m.errors, 0);
+    ingress.shutdown();
+}
+
+#[test]
+fn unknown_future_frame_types_drop_only_their_own_connection() {
+    let server = Arc::new(Server::start(native_cfg(0)).expect("native server"));
+    server.warmup(&[128]).expect("native warmup");
+    let ingress = Ingress::bind("127.0.0.1:0", server.clone()).expect("bind ephemeral");
+    let addr = ingress.local_addr();
+
+    // a frame from the future (type 9 is one past FRAME_PROM_RESPONSE)
+    // must be rejected per-connection: the socket closes, nothing else
+    for ty in [9u8, 200] {
+        let mut cl = WireClient::connect(&addr).expect("connect");
+        wire::write_frame(cl.stream(), ty, b"from-the-future").expect("send unknown frame");
+        assert!(cl.recv().is_err(), "frame type {ty} must drop the connection");
+    }
+
+    // the server is unharmed: a fresh connection infers and scrapes
+    let mut cl = WireClient::connect(&addr).expect("reconnect");
+    let mut rng = Rng::new(9);
+    let resp = cl.infer(&Request::new(masked_tokens(&mut rng, 100))).expect("infer");
+    assert!(resp.is_completed(), "{:?}", resp.outcome);
+    let doc = parse_prometheus(&cl.prometheus().expect("scrape")).expect("valid exposition");
+    assert_eq!(doc.value("bigbird_requests_completed_total", &[]), Some(1.0));
+    ingress.shutdown();
+}
+
+#[test]
+fn injected_stall_degrades_healthz_and_dumps_a_flight_bundle() {
+    let flight_dir = std::env::temp_dir().join(format!("bb_obs_stall_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&flight_dir);
+    let mut cfg = native_cfg(25);
+    cfg.obs.fault_stall = true;
+    cfg.obs.flight_dir = Some(flight_dir.display().to_string());
+    let server = Arc::new(Server::start(cfg).expect("native server"));
+    server.warmup(&[128]).expect("warmup bypasses the stalled dispatch stage");
+    let ingress = Ingress::bind("127.0.0.1:0", server.clone()).expect("bind ephemeral");
+    let addr = ingress.local_addr();
+
+    // admitted requests pile up in the batcher and are never dispatched;
+    // keep the receivers so the reply channels stay open
+    let mut rng = Rng::new(5);
+    let _rxs: Vec<_> = (0..4)
+        .map(|_| server.submit(Request::new(masked_tokens(&mut rng, 100))).expect("submit"))
+        .collect();
+
+    // the stall detector needs 3 consecutive 25 ms windows; give CI a
+    // generous deadline but require the flip
+    let mut last_body = String::new();
+    assert!(
+        poll_until(30, || {
+            let (status, body) = http_get(&addr.to_string(), "/healthz").expect("healthz");
+            last_body = body;
+            status == 503
+        }),
+        "healthz never degraded; last body: {last_body}"
+    );
+    assert!(last_body.contains("\"status\":\"degraded\""), "{last_body}");
+    assert!(last_body.contains("worker_stall"), "{last_body}");
+
+    // the exposition mirrors the verdict
+    let text = WireClient::connect(&addr).unwrap().prometheus().expect("scrape");
+    let doc = parse_prometheus(&text).expect("valid exposition while degraded");
+    assert_eq!(doc.value("bigbird_healthy", &[]), Some(0.0));
+    assert!(doc.value("bigbird_alerts_total", &[("detector", "worker_stall")]).unwrap() >= 1.0);
+    assert_eq!(doc.value("bigbird_outstanding_requests", &[]), Some(4.0));
+    assert_eq!(doc.value("bigbird_requests_completed_total", &[]), Some(0.0));
+
+    // exactly one firing edge → at least one bundle, every file valid
+    assert!(
+        poll_until(10, || {
+            std::fs::read_dir(&flight_dir).map(|d| d.count() > 0).unwrap_or(false)
+        }),
+        "no flight bundle appeared in {flight_dir:?}"
+    );
+    let bundles: Vec<_> = std::fs::read_dir(&flight_dir)
+        .expect("flight dir")
+        .map(|e| e.expect("dir entry").path())
+        .collect();
+    for bundle in &bundles {
+        let name = bundle.file_name().unwrap().to_string_lossy().into_owned();
+        assert!(
+            name.starts_with("flight-") && name.ends_with("-worker_stall"),
+            "bundle dir named by detector: {name}"
+        );
+        let read = |f: &str| std::fs::read_to_string(bundle.join(f)).expect(f);
+        parse_chrome_trace(&read("trace.json")).expect("bundle trace must validate");
+        let series = parse_series_json(&read("series.json")).expect("bundle series must validate");
+        assert!(!series.is_empty(), "bundle series must carry the stalled windows");
+        let last = series.last().unwrap();
+        assert_eq!(last.outstanding, 4, "the backlog is the evidence");
+        assert!(series.iter().all(|s| s.completed == 0), "nothing completed during the stall");
+        let snapshot = read("snapshot.json");
+        assert_eq!(json_num_field(&snapshot, "requests"), Some(0.0), "{snapshot}");
+    }
+
+    ingress.shutdown();
+    drop(server);
+    let _ = std::fs::remove_dir_all(&flight_dir);
+}
