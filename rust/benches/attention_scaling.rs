@@ -16,11 +16,9 @@
 
 use std::time::Instant;
 
-use bigbird::attention::PatternSpec;
+use bigbird::attention::{PatternSource, PatternSpec};
 use bigbird::config::{AttnVariant, ModelConfig, Precision};
-use bigbird::kernel::{
-    dense_reference, sparse_forward, BlockCsr, HeadViews, NativeModel, SparseScratch,
-};
+use bigbird::kernel::{dense_reference, sparse_forward, HeadViews, NativeModel, SparseScratch};
 use bigbird::runtime::{ExecutablePool, HostTensor, Manifest, Runtime};
 use bigbird::util::stats::{linear_fit, median};
 use bigbird::util::{BenchReport, Rng};
@@ -58,7 +56,8 @@ fn bench_native(report: &mut BenchReport) {
             random_blocks: 3,
             seed: 0,
         };
-        let sparse_layout = BlockCsr::compile(&sparse_spec, NATIVE_BLOCK);
+        let sparse_pattern = PatternSource::Static(sparse_spec).compile(NATIVE_BLOCK);
+        let sparse_layout = sparse_pattern.head(0);
         // the dense baseline needs a genuinely dense layout: with the
         // sparse layout, dense_reference would mask to the same
         // attended blocks and do the same FLOPs as the sparse kernel
@@ -70,7 +69,8 @@ fn bench_native(report: &mut BenchReport) {
             random_blocks: 0,
             seed: 0,
         };
-        let dense_layout = BlockCsr::compile(&dense_spec, NATIVE_BLOCK);
+        let dense_pattern = PatternSource::Static(dense_spec).compile(NATIVE_BLOCK);
+        let dense_layout = dense_pattern.head(0);
         let d = NATIVE_HEAD_DIM;
         let q: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
         let k: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
@@ -80,19 +80,19 @@ fn bench_native(report: &mut BenchReport) {
         let mut scratch = SparseScratch::new();
 
         // warmup once, then time
-        dense_reference(&x, d, &dense_layout, &mut out);
+        dense_reference(&x, d, dense_layout, &mut out);
         let dense_samples: Vec<f64> = (0..NATIVE_REPS)
             .map(|_| {
                 let t0 = Instant::now();
-                dense_reference(&x, d, &dense_layout, &mut out);
+                dense_reference(&x, d, dense_layout, &mut out);
                 t0.elapsed().as_secs_f64()
             })
             .collect();
-        sparse_forward(&x, d, &sparse_layout, &mut scratch, &mut out);
+        sparse_forward(&x, d, sparse_layout, &mut scratch, &mut out);
         let sparse_samples: Vec<f64> = (0..NATIVE_REPS)
             .map(|_| {
                 let t0 = Instant::now();
-                sparse_forward(&x, d, &sparse_layout, &mut scratch, &mut out);
+                sparse_forward(&x, d, sparse_layout, &mut scratch, &mut out);
                 t0.elapsed().as_secs_f64()
             })
             .collect();

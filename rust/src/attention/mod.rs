@@ -11,8 +11,15 @@
 
 mod pattern;
 mod render;
+pub mod select;
 pub mod theory;
 
-pub use pattern::{build_pattern, components, pattern_to_text, window_blocks_of, PatternSpec};
+pub use pattern::{
+    build_pattern, components, pattern_to_text, window_blocks_of, PatternSpec, TokenAdjacency,
+};
 pub use render::{render_block_pattern, render_token_pattern};
+pub use select::{
+    admit_pattern, block_adjacency, block_mean_pool, min_spectral_gap, proxy_scores,
+    CompiledPattern, PatternSource, LEARNED_SPAN, SPECTRAL_GAP_FLOOR,
+};
 pub use theory::{contains_star, edge_density, max_hops_via_global};

@@ -89,22 +89,97 @@ pub fn pattern_to_text(attend: &[Vec<usize>]) -> String {
     s
 }
 
+/// Bitset-backed square adjacency matrix: one bit per `(row, col)`
+/// pair, 64 packed per word. At n = 8192 this is 8 MiB where the old
+/// `Vec<Vec<bool>>` needed 64 MiB plus a heap allocation per row — the
+/// difference between "8k+ graph analysis works" and an OOM. Used for
+/// token-level pattern analysis and for the block-level graphs the
+/// spectral admission gate inspects ([`crate::attention::select`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TokenAdjacency {
+    n: usize,
+    words: Vec<u64>,
+}
+
+impl TokenAdjacency {
+    /// Empty (no edges) n × n adjacency.
+    pub fn new(n: usize) -> Self {
+        let words_per_row = n.div_ceil(64);
+        TokenAdjacency { n, words: vec![0u64; n * words_per_row] }
+    }
+
+    /// Side length of the matrix.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    fn words_per_row(&self) -> usize {
+        self.n.div_ceil(64)
+    }
+
+    /// Mark `(row, col)` adjacent.
+    pub fn set(&mut self, row: usize, col: usize) {
+        assert!(row < self.n && col < self.n, "({row},{col}) out of {n}×{n}", n = self.n);
+        let wpr = self.words_per_row();
+        self.words[row * wpr + col / 64] |= 1u64 << (col % 64);
+    }
+
+    /// Is `(row, col)` adjacent?
+    pub fn get(&self, row: usize, col: usize) -> bool {
+        assert!(row < self.n && col < self.n, "({row},{col}) out of {n}×{n}", n = self.n);
+        let wpr = self.words_per_row();
+        self.words[row * wpr + col / 64] & (1u64 << (col % 64)) != 0
+    }
+
+    /// Total set bits (directed edge count).
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Adjacent columns of `row`, ascending — scans words, so iterating
+    /// a sparse row costs O(n/64) not O(n).
+    pub fn row_ones(&self, row: usize) -> impl Iterator<Item = usize> + '_ {
+        let wpr = self.words_per_row();
+        self.words[row * wpr..(row + 1) * wpr].iter().enumerate().flat_map(|(wi, &w)| {
+            let mut bits = w;
+            std::iter::from_fn(move || {
+                if bits == 0 {
+                    return None;
+                }
+                let b = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                Some(wi * 64 + b)
+            })
+        })
+    }
+
+    /// All directed edges as `(row, col)` pairs.
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.count_ones());
+        for row in 0..self.n {
+            out.extend(self.row_ones(row).map(|col| (row, col)));
+        }
+        out
+    }
+}
+
 impl PatternSpec {
     /// Total directed edges in the block graph — the paper's O(n) count.
     pub fn edge_count(&self) -> usize {
         build_pattern(self).iter().map(|r| r.len()).sum()
     }
 
-    /// Token-level adjacency (n × n booleans) for graph analysis.
-    pub fn token_adjacency(&self, block: usize) -> Vec<Vec<bool>> {
+    /// Token-level adjacency for graph analysis, bitset-backed so long
+    /// sequences (8k+) stay cheap.
+    pub fn token_adjacency(&self, block: usize) -> TokenAdjacency {
         let attend = build_pattern(self);
         let n = self.nb * block;
-        let mut adj = vec![vec![false; n]; n];
+        let mut adj = TokenAdjacency::new(n);
         for (qb, keys) in attend.iter().enumerate() {
             for &kb in keys {
                 for qi in qb * block..(qb + 1) * block {
                     for ki in kb * block..(kb + 1) * block {
-                        adj[qi][ki] = true;
+                        adj.set(qi, ki);
                     }
                 }
             }
@@ -222,8 +297,32 @@ mod tests {
     fn token_adjacency_expands_blocks() {
         let s = spec(AttnVariant::Window, 4, 0, 3, 0, 0);
         let adj = s.token_adjacency(2);
-        assert_eq!(adj.len(), 8);
-        assert!(adj[2][0]); // block 1 attends block 0
-        assert!(!adj[2][6]); // block 1 does not attend block 3
+        assert_eq!(adj.n(), 8);
+        assert!(adj.get(2, 0)); // block 1 attends block 0
+        assert!(!adj.get(2, 6)); // block 1 does not attend block 3
+        // row scan and edge list agree with point queries
+        let row2: Vec<usize> = adj.row_ones(2).collect();
+        assert_eq!(row2, (0..8).filter(|&k| adj.get(2, k)).collect::<Vec<_>>());
+        assert_eq!(adj.edges().len(), adj.count_ones());
+    }
+
+    #[test]
+    fn token_adjacency_bitset_handles_long_sequences() {
+        // 8192 tokens: the bitset is n²/8 = 8 MiB; the old Vec<Vec<bool>>
+        // was 64 MiB plus one heap allocation per row
+        let s = spec(AttnVariant::BigBirdItc, 512, 2, 3, 3, 0);
+        let adj = s.token_adjacency(16);
+        assert_eq!(adj.n(), 8192);
+        // diagonal tokens attended everywhere, sparse rows stay sparse
+        assert!(adj.get(4321, 4321));
+        let row_deg = adj.row_ones(8000).count();
+        assert!(row_deg < 8192 / 4, "sparse row degree {row_deg}");
+        // word-boundary columns behave (63/64/65 straddle a u64 edge)
+        let mut small = TokenAdjacency::new(130);
+        for c in [0usize, 63, 64, 65, 127, 128, 129] {
+            small.set(1, c);
+        }
+        assert_eq!(small.row_ones(1).collect::<Vec<_>>(), vec![0, 63, 64, 65, 127, 128, 129]);
+        assert!(!small.get(1, 62) && !small.get(0, 0));
     }
 }

@@ -26,9 +26,9 @@ pub fn render_block_pattern(spec: &PatternSpec) -> String {
 pub fn render_token_pattern(spec: &PatternSpec, block: usize) -> String {
     let adj = spec.token_adjacency(block);
     let mut out = String::new();
-    for row in &adj {
-        for &a in row {
-            out.push(if a { '█' } else { '·' });
+    for q in 0..adj.n() {
+        for k in 0..adj.n() {
+            out.push(if adj.get(q, k) { '█' } else { '·' });
         }
         out.push('\n');
     }

@@ -64,6 +64,10 @@ pub struct BenchCheck<'a> {
     pub attention: &'a str,
     /// Path of the train-step bench JSON.
     pub train: &'a str,
+    /// Path of the pattern-ablation bench JSON (`experiment ablate`);
+    /// a missing file skips the section silently — pattern metrics are
+    /// informational and never gated.
+    pub patterns: &'a str,
     /// Path of the committed baselines file.
     pub baselines: &'a str,
     /// Rewrite the baselines from the current JSONs instead of gating.
@@ -112,6 +116,15 @@ fn load_report(path: &str) -> Result<BenchReport> {
 pub fn run(cfg: &BenchCheck<'_>) -> Result<()> {
     let attn = load_report(cfg.attention)?;
     let train = load_report(cfg.train)?;
+    // optional + informational: the pattern ablation only runs in some
+    // CI jobs, so absence is normal; a present-but-broken file is still
+    // a loud error (silent misparses defeat the point of a report)
+    let patterns = match std::fs::read_to_string(cfg.patterns) {
+        Err(_) => None,
+        Ok(text) => {
+            Some(BenchReport::parse(&text).map_err(|e| anyhow!("{}: {e}", cfg.patterns))?)
+        }
+    };
     let mut merged = BenchReport::new();
     for (k, v) in attn.entries().iter().chain(train.entries()) {
         merged.push(k, *v);
@@ -182,7 +195,7 @@ pub fn run(cfg: &BenchCheck<'_>) -> Result<()> {
     }
 
     if let Some(path) = cfg.summary {
-        let md = render_summary(&attn, &train, &rows, tol);
+        let md = render_summary(&attn, &train, patterns.as_ref(), &rows, tol);
         append_to(path, &md).with_context(|| format!("appending step summary to {path}"))?;
         println!("\n(markdown summary appended to {path})");
     }
@@ -241,6 +254,7 @@ fn update_baselines(cfg: &BenchCheck<'_>, merged: &BenchReport) -> Result<()> {
 fn render_summary(
     attn: &BenchReport,
     train: &BenchReport,
+    patterns: Option<&BenchReport>,
     rows: &[(String, f64, f64, f64, &str)],
     tol: f64,
 ) -> String {
@@ -300,6 +314,37 @@ fn render_summary(
         tps(train, "train_native_f16_tokens_per_sec"),
         tps(train, "train_native_int8_tokens_per_sec")
     );
+    // pattern-selection ablation (`experiment ablate`): quality vs
+    // throughput per PatternSource kind, informational — never gated
+    if let Some(pat) = patterns {
+        let _ = writeln!(md, "\n### Pattern ablation (informational)\n");
+        let _ = writeln!(
+            md,
+            "| pattern | spectral gap | MLM loss | tok/s n=1024 | tok/s n=2048 | vs static (n=2048) |"
+        );
+        let _ = writeln!(
+            md,
+            "|:--------|-------------:|---------:|-------------:|-------------:|-------------------:|"
+        );
+        let static_tps = pat.get("pattern_static_n2048_tokens_per_sec");
+        for kind in ["static", "adaptive", "learned"] {
+            let cell = |k: String, prec: usize| {
+                pat.get(&k).map_or_else(|| "—".to_string(), |v| format!("{v:.prec$}"))
+            };
+            let vs = match (static_tps, pat.get(&format!("pattern_{kind}_n2048_tokens_per_sec"))) {
+                (Some(st), Some(v)) if st > 0.0 => format!("{:+.1}%", 100.0 * (v - st) / st),
+                _ => "—".to_string(),
+            };
+            let _ = writeln!(
+                md,
+                "| {kind} | {} | {} | {} | {} | {vs} |",
+                cell(format!("pattern_{kind}_spectral_gap"), 4),
+                cell(format!("pattern_{kind}_loss"), 4),
+                cell(format!("pattern_{kind}_n1024_tokens_per_sec"), 0),
+                cell(format!("pattern_{kind}_n2048_tokens_per_sec"), 0),
+            );
+        }
+    }
     let _ = writeln!(md, "\n### Gate vs committed baselines (tolerance {:.0}%)\n", tol * 100.0);
     let _ = writeln!(md, "| metric | baseline | current | Δ | status |");
     let _ = writeln!(md, "|:-------|---------:|--------:|--:|:-------|");
@@ -399,11 +444,14 @@ mod tests {
 
         let attention = p("attn.json");
         let train_p = p("train.json");
+        let patterns_p = p("patterns.json");
         let baselines = p("baselines.json");
         let summary = p("summary.md");
+        let _ = std::fs::remove_file(&patterns_p);
         let mk = |update: bool| BenchCheck {
             attention: &attention,
             train: &train_p,
+            patterns: &patterns_p,
             baselines: &baselines,
             update,
             summary: Some(&summary),
@@ -423,6 +471,26 @@ mod tests {
         // carry no per-precision keys (em-dash fallback)
         assert!(md.contains("Precision ablation"), "{md}");
         assert!(md.contains("| train step | —"), "{md}");
+        // no patterns JSON: the section is skipped silently
+        assert!(!md.contains("Pattern ablation"), "{md}");
+
+        // with a patterns JSON present, the informational section
+        // renders (and its keys are never gated: the rerun still passes)
+        let mut pats = BenchReport::new();
+        for kind in ["static", "adaptive", "learned"] {
+            pats.push(&format!("pattern_{kind}_spectral_gap"), 0.18);
+            pats.push(&format!("pattern_{kind}_loss"), 5.5);
+            pats.push(&format!("pattern_{kind}_n1024_tokens_per_sec"), 50_000.0);
+            pats.push(&format!("pattern_{kind}_n2048_tokens_per_sec"), 40_000.0);
+        }
+        pats.write(&patterns_p).unwrap();
+        let _ = std::fs::remove_file(&summary);
+        run(&mk(false)).unwrap();
+        let md = std::fs::read_to_string(&summary).unwrap();
+        assert!(md.contains("Pattern ablation"), "{md}");
+        assert!(md.contains("| adaptive |"), "{md}");
+        assert!(md.contains("+0.0%"), "vs-static column missing: {md}");
+        std::fs::remove_file(&patterns_p).unwrap();
 
         // a >tolerance regression fails the gate and names the metric
         let mut slow = BenchReport::new();

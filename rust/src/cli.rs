@@ -23,7 +23,7 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{AdmissionConfig, ObsConfig, Precision, ServingConfig};
+use crate::config::{AdmissionConfig, ObsConfig, PatternSelect, Precision, ServingConfig};
 use crate::runtime::{parse_backend_specs, BackendSpec};
 
 // ---------------------------------------------------------------------
@@ -38,6 +38,7 @@ const SERVE_FLAGS: &[&str] = &[
     "--max-inflight",
     "--checkpoint",
     "--precision",
+    "--pattern",
     "--listen",
     "--latency-budget-ms",
     "--max-queue",
@@ -58,10 +59,17 @@ const TRAIN_FLAGS: &[&str] = &[
     "--backends",
     "--checkpoint",
     "--precision",
+    "--pattern",
 ];
 
-const BENCH_CHECK_FLAGS: &[&str] =
-    &["--attention-json", "--train-json", "--baselines", "--update-baselines", "--summary"];
+const BENCH_CHECK_FLAGS: &[&str] = &[
+    "--attention-json",
+    "--train-json",
+    "--patterns-json",
+    "--baselines",
+    "--update-baselines",
+    "--summary",
+];
 
 const KERNEL_PROBE_FLAGS: &[&str] = &["--assert-simd"];
 
@@ -125,6 +133,9 @@ pub struct ServeArgs {
     pub checkpoint: Option<String>,
     /// `--precision f32|f16|int8` native GEMM precision policy.
     pub precision: Precision,
+    /// `--pattern static|adaptive|learned[:k=N]` — how the native
+    /// backend picks its block-sparse attention pattern.
+    pub pattern: PatternSelect,
     /// `--listen <addr>`: bind the length-prefixed TCP wire ingress
     /// (e.g. `127.0.0.1:9090`; port 0 picks an ephemeral port) and
     /// drive the demo workload over real sockets. `None` keeps the
@@ -167,6 +178,7 @@ impl Default for ServeArgs {
             max_inflight: sd.max_inflight,
             checkpoint: None,
             precision: Precision::default(),
+            pattern: PatternSelect::default(),
             listen: None,
             latency_budget_ms: ad.latency_budget_ms,
             max_queue: ad.max_queue,
@@ -237,6 +249,9 @@ pub fn parse_serve(args: &[String]) -> Result<ServeArgs> {
                 a.checkpoint = Some(flag_value(&mut it, "--checkpoint", CMD)?.to_string())
             }
             "--precision" => a.precision = Precision::parse(flag_value(&mut it, "--precision", CMD)?)?,
+            "--pattern" => {
+                a.pattern = PatternSelect::parse(flag_value(&mut it, "--pattern", CMD)?)?
+            }
             "--listen" => a.listen = Some(flag_value(&mut it, "--listen", CMD)?.to_string()),
             "--latency-budget-ms" => {
                 let v = flag_value(&mut it, "--latency-budget-ms", CMD)?;
@@ -367,6 +382,9 @@ pub struct TrainArgs {
     pub checkpoint: Option<String>,
     /// `--precision f32|f16|int8` forward-GEMM precision (native path).
     pub precision: Precision,
+    /// `--pattern static|adaptive|learned[:k=N]` — block-sparse pattern
+    /// selection for the native trainer.
+    pub pattern: PatternSelect,
     /// Optional positional model key (PJRT path; default
     /// `mlm_bigbird_itc_s512_b4`).
     pub model: Option<String>,
@@ -382,6 +400,7 @@ impl Default for TrainArgs {
             backends: ServingConfig::default().backends,
             checkpoint: None,
             precision: Precision::default(),
+            pattern: PatternSelect::default(),
             model: None,
         }
     }
@@ -409,6 +428,9 @@ pub fn parse_train(args: &[String]) -> Result<TrainArgs> {
                 a.checkpoint = Some(flag_value(&mut it, "--checkpoint", CMD)?.to_string())
             }
             "--precision" => a.precision = Precision::parse(flag_value(&mut it, "--precision", CMD)?)?,
+            "--pattern" => {
+                a.pattern = PatternSelect::parse(flag_value(&mut it, "--pattern", CMD)?)?
+            }
             other if other.starts_with("--") => return Err(unknown_flag(CMD, other, TRAIN_FLAGS)),
             other => {
                 if a.model.is_some() {
@@ -432,6 +454,9 @@ pub struct BenchCheckArgs {
     pub attention_json: String,
     /// `--train-json <path>` (default BENCH_train.json).
     pub train_json: String,
+    /// `--patterns-json <path>` (default BENCH_patterns.json; missing
+    /// file is fine — the pattern-ablation section is informational).
+    pub patterns_json: String,
     /// `--baselines <path>` (default bench_baselines.json).
     pub baselines: String,
     /// `--update-baselines`: rewrite baselines instead of gating.
@@ -445,6 +470,7 @@ impl Default for BenchCheckArgs {
         BenchCheckArgs {
             attention_json: "BENCH_attention.json".to_string(),
             train_json: "BENCH_train.json".to_string(),
+            patterns_json: "BENCH_patterns.json".to_string(),
             baselines: "bench_baselines.json".to_string(),
             update_baselines: false,
             summary: None,
@@ -463,6 +489,9 @@ pub fn parse_bench_check(args: &[String]) -> Result<BenchCheckArgs> {
                 a.attention_json = flag_value(&mut it, "--attention-json", CMD)?.to_string()
             }
             "--train-json" => a.train_json = flag_value(&mut it, "--train-json", CMD)?.to_string(),
+            "--patterns-json" => {
+                a.patterns_json = flag_value(&mut it, "--patterns-json", CMD)?.to_string()
+            }
             "--baselines" => a.baselines = flag_value(&mut it, "--baselines", CMD)?.to_string(),
             "--update-baselines" => a.update_baselines = true,
             "--summary" => a.summary = Some(flag_value(&mut it, "--summary", CMD)?.to_string()),
@@ -639,7 +668,8 @@ COMMANDS:
   experiment <id>        regenerate a paper table/figure; <id> one of:
                          table1 | mlm_bpc | qa | classification | summarization |
                          genomics | fig_ctxlen | scaling | task1 | patterns |
-                         turing | ablation_global | hotpath | hlo_report | all
+                         turing | ablation_global | ablate | hotpath |
+                         hlo_report | all
 
 SERVE FLAGS:
   --artifacts <dir>      artifact directory (default: artifacts; not needed
@@ -653,6 +683,13 @@ SERVE FLAGS:
   --max-inflight <n>     per-bucket inflight batch cap (default 2)
   --checkpoint <path>    native BBCKPT1 checkpoint to serve
   --precision <p>        native GEMM precision policy: f32 | f16 | int8
+  --pattern <p>          block-sparse pattern selection for the native
+                         backend: static | adaptive | learned, optionally
+                         :k=N extra key blocks per query block (default:
+                         static, the paper's fixed band+global+random;
+                         adaptive picks top-k blocks from content,
+                         learned from trained per-head scores — both keep
+                         the band+global guarantee blocks)
   --listen <addr>        bind the length-prefixed TCP ingress (e.g.
                          127.0.0.1:9090; port 0 picks an ephemeral port) and
                          drive the demo over real sockets; clients speak the
@@ -695,11 +732,17 @@ TRAIN FLAGS:
   --checkpoint <path>    where the native trainer writes BBCKPT1
                          (default runs/native_mlm.ckpt)
   --precision <p>        forward-GEMM precision: f32 | f16 | int8
+  --pattern <p>          static | adaptive | learned[:k=N] pattern
+                         selection (native path; learned adds trainable
+                         per-head block scores to the checkpoint)
   [model]                positional model key (PJRT path)
 
 BENCH-CHECK FLAGS:
   --attention-json <p>   attention bench JSON (default BENCH_attention.json)
   --train-json <p>       train-step bench JSON (default BENCH_train.json)
+  --patterns-json <p>    pattern-ablation bench JSON from
+                         `experiment ablate` (default BENCH_patterns.json;
+                         informational — never gated, missing is fine)
   --baselines <p>        committed perf baselines (default bench_baselines.json)
   --update-baselines     rewrite the baselines instead of gating
   --summary <p>          append the markdown perf report here
@@ -731,6 +774,7 @@ pub fn run(args: &[String]) -> Result<()> {
             crate::bench_check::run(&crate::bench_check::BenchCheck {
                 attention: &a.attention_json,
                 train: &a.train_json,
+                patterns: &a.patterns_json,
                 baselines: &a.baselines,
                 update: a.update_baselines,
                 summary: a.summary.as_deref(),
@@ -777,10 +821,10 @@ pub fn run(args: &[String]) -> Result<()> {
 /// failure shows *which* phase degraded, not just that the aggregate
 /// ratio fell.
 fn phase_profile_stats() -> Vec<crate::obs::phase::PhaseStat> {
-    use crate::attention::PatternSpec;
+    use crate::attention::{PatternSource, PatternSpec};
     use crate::config::AttnVariant;
     use crate::kernel::{
-        model_gemm, sparse_backward_batch, sparse_forward_batch_training, BlockCsr, HeadViews,
+        model_gemm, sparse_backward_batch_heads, sparse_forward_batch_training_heads, HeadViews,
         PackedMat,
     };
     use crate::obs::phase;
@@ -795,9 +839,9 @@ fn phase_profile_stats() -> Vec<crate::obs::phase::PhaseStat> {
         random_blocks: 1,
         seed: 7,
     };
-    let layout = BlockCsr::compile(&spec, 16);
+    let pattern = PatternSource::Static(spec).compile(16);
     let (batch, heads, d) = (2usize, 4usize, 32usize);
-    let n = layout.seq_len();
+    let n = pattern.seq_len();
     let vol = batch * heads * n * d;
     let mut rng = crate::util::Rng::new(17);
     let q: Vec<f32> = (0..vol).map(|_| rng.normal() as f32).collect();
@@ -807,10 +851,12 @@ fn phase_profile_stats() -> Vec<crate::obs::phase::PhaseStat> {
     let mut o = vec![0.0f32; vol];
     let mut m = vec![0.0f32; batch * heads * n];
     let mut l = vec![0.0f32; batch * heads * n];
-    sparse_forward_batch_training(&x, batch, heads, d, &layout, &mut o, &mut m, &mut l);
+    sparse_forward_batch_training_heads(&x, batch, heads, d, &pattern, &mut o, &mut m, &mut l);
     let (mut dq, mut dk, mut dv) =
         (vec![0.0f32; vol], vec![0.0f32; vol], vec![0.0f32; vol]);
-    sparse_backward_batch(&x, &o, &o, &m, &l, batch, heads, d, &layout, &mut dq, &mut dk, &mut dv);
+    sparse_backward_batch_heads(
+        &x, &o, &o, &m, &l, batch, heads, d, &pattern, &mut dq, &mut dk, &mut dv,
+    );
     let (gm, gk, gn) = (128usize, 128usize, 128usize);
     let a: Vec<f32> = (0..gm * gk).map(|_| rng.normal() as f32).collect();
     let b: Vec<f32> = (0..gk * gn).map(|_| rng.normal() as f32).collect();
@@ -1000,6 +1046,29 @@ mod tests {
     }
 
     #[test]
+    fn serve_and_train_parse_pattern_flag() {
+        // default is the paper's static pattern on both subcommands
+        assert_eq!(parse_serve(&s(&[])).unwrap().pattern, PatternSelect::Static);
+        assert_eq!(parse_train(&s(&[])).unwrap().pattern, PatternSelect::Static);
+        let a = parse_serve(&s(&["--pattern", "adaptive"])).unwrap();
+        assert_eq!(a.pattern, PatternSelect::Adaptive { k: 0 });
+        let a = parse_serve(&s(&["--pattern", "learned:k=2"])).unwrap();
+        assert_eq!(a.pattern, PatternSelect::Learned { k: 2 });
+        let a = parse_train(&s(&["--pattern", "adaptive:k=3"])).unwrap();
+        assert_eq!(a.pattern, PatternSelect::Adaptive { k: 3 });
+        // bad kinds/values are rejected with the parse error, a missing
+        // value names the owning subcommand
+        assert!(parse_serve(&s(&["--pattern", "bogus"])).is_err());
+        assert!(parse_train(&s(&["--pattern", "static:k=1"])).is_err());
+        let e = parse_train(&s(&["--pattern"])).unwrap_err().to_string();
+        assert!(e.contains("`train`"), "missing subcommand in: {e}");
+        // --pattern is not a watch/bench-check/kernel-probe flag: the
+        // error names its owners
+        let e = parse_watch(&s(&["--pattern", "adaptive"])).unwrap_err().to_string();
+        assert!(e.contains("`serve`") && e.contains("`train`"), "missing owners in: {e}");
+    }
+
+    #[test]
     fn serve_rejects_foreign_and_unknown_flags() {
         // --steps belongs to train: the error names both subcommands
         let e = parse_serve(&s(&["--steps", "50"])).unwrap_err().to_string();
@@ -1054,6 +1123,9 @@ mod tests {
         assert_eq!(a.attention_json, "a.json");
         assert_eq!(a.train_json, "t.json");
         assert_eq!(a.baselines, "b.json");
+        assert_eq!(a.patterns_json, "BENCH_patterns.json");
+        let a = parse_bench_check(&s(&["--patterns-json", "p.json"])).unwrap();
+        assert_eq!(a.patterns_json, "p.json");
         assert!(a.update_baselines);
         assert_eq!(a.summary.as_deref(), Some("s.md"));
         assert!(parse_bench_check(&s(&["--summary"])).is_err());

@@ -129,6 +129,106 @@ impl Precision {
     }
 }
 
+/// How the model picks its sparse attention pattern — the config-level
+/// face of `attention::select::PatternSource` (`--pattern` CLI flag).
+///
+/// `k` is the per-query-block selection budget of the adaptive/learned
+/// kinds; `0` means "inherit `random_blocks`", which keeps the block
+/// budget identical to the static pattern (the selected blocks replace
+/// the seeded-random ones, never add to them). The selection kind and
+/// resolved `k` are part of the checkpoint fingerprint: a `Learned`
+/// model carries extra per-head score parameters, so its checkpoints
+/// must not silently load into a `Static` architecture.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum PatternSelect {
+    /// The paper's fixed band + global + seeded-random pattern.
+    #[default]
+    Static,
+    /// Content-adaptive: block-mean-pooled Q/K proxy scores pick the
+    /// top-k key blocks per head, unioned with band + global.
+    Adaptive {
+        /// Selected blocks per query row (0 = `random_blocks`).
+        k: usize,
+    },
+    /// Learned: trainable per-head relative-offset block scores pick
+    /// the top-k, unioned with band + global.
+    Learned {
+        /// Selected blocks per query row (0 = `random_blocks`).
+        k: usize,
+    },
+}
+
+impl PatternSelect {
+    /// CLI / override string: `static`, `adaptive`, `learned`, each
+    /// optionally suffixed `:k=<n>`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let (kind, k) = match s.split_once(':') {
+            None => (s, 0usize),
+            Some((kind, rest)) => {
+                let k = rest
+                    .strip_prefix("k=")
+                    .with_context(|| {
+                        format!("pattern argument {rest:?} must be k=<n> (e.g. adaptive:k=3)")
+                    })?
+                    .parse::<usize>()
+                    .with_context(|| format!("pattern k in {s:?} is not a number"))?;
+                (kind, k)
+            }
+        };
+        Ok(match kind {
+            "static" => {
+                if k != 0 {
+                    bail!("the static pattern takes no k (it keeps random_blocks)");
+                }
+                PatternSelect::Static
+            }
+            "adaptive" => PatternSelect::Adaptive { k },
+            "learned" => PatternSelect::Learned { k },
+            other => bail!("unknown pattern kind {other:?} (expected static|adaptive|learned[:k=..])"),
+        })
+    }
+
+    /// Render back to the CLI syntax (`parse` round-trips it).
+    pub fn label(self) -> String {
+        match self {
+            PatternSelect::Static => "static".to_string(),
+            PatternSelect::Adaptive { k: 0 } => "adaptive".to_string(),
+            PatternSelect::Adaptive { k } => format!("adaptive:k={k}"),
+            PatternSelect::Learned { k: 0 } => "learned".to_string(),
+            PatternSelect::Learned { k } => format!("learned:k={k}"),
+        }
+    }
+
+    /// Fingerprint-stable kind index (0 static, 1 adaptive, 2 learned).
+    pub fn kind_index(self) -> usize {
+        match self {
+            PatternSelect::Static => 0,
+            PatternSelect::Adaptive { .. } => 1,
+            PatternSelect::Learned { .. } => 2,
+        }
+    }
+
+    /// The per-row selection budget, with `k = 0` resolved to
+    /// `random_blocks` (equal block budget vs the static pattern).
+    pub fn budget(self, random_blocks: usize) -> usize {
+        match self {
+            PatternSelect::Static => 0,
+            PatternSelect::Adaptive { k } | PatternSelect::Learned { k } => {
+                if k == 0 {
+                    random_blocks
+                } else {
+                    k
+                }
+            }
+        }
+    }
+
+    /// Does this kind carry trainable selection parameters?
+    pub fn is_learned(self) -> bool {
+        matches!(self, PatternSelect::Learned { .. })
+    }
+}
+
 /// BigBird model hyperparameters (App. E.1, Tab. 8, scaled down for the
 /// CPU testbed — see DESIGN.md §Substitutions).
 #[derive(Clone, Debug, PartialEq)]
@@ -163,6 +263,12 @@ pub struct ModelConfig {
     /// Runtime-only: excluded from the checkpoint fingerprint, so any
     /// mode serves/trains against the same `BBCKPT1` checkpoints.
     pub precision: Precision,
+    /// How the sparse attention pattern is chosen (`--pattern`). The
+    /// `Static` default keeps the paper's fixed pattern and the Python
+    /// cross-language contract bit-exact; adaptive/learned kinds change
+    /// the architecture fingerprint (learned adds parameters), so they
+    /// need matching checkpoints.
+    pub pattern: PatternSelect,
 }
 
 impl ModelConfig {
@@ -183,6 +289,7 @@ impl ModelConfig {
             batch: 4,
             attn_seed: 0,
             precision: Precision::F32,
+            pattern: PatternSelect::Static,
         }
     }
 
@@ -204,6 +311,7 @@ impl ModelConfig {
             batch: 8,
             attn_seed: 0,
             precision: Precision::F32,
+            pattern: PatternSelect::Static,
         }
     }
 
@@ -494,6 +602,7 @@ pub fn apply_overrides(mut cfg: ModelConfig, overrides: &str) -> Result<ModelCon
             "batch" => cfg.batch = v.parse()?,
             "attn_seed" => cfg.attn_seed = v.parse()?,
             "precision" => cfg.precision = Precision::parse(&v)?,
+            "pattern" => cfg.pattern = PatternSelect::parse(&v)?,
             other => bail!("unknown config key {other:?}"),
         }
     }
@@ -559,6 +668,27 @@ mod tests {
             crate::kernel::config_fingerprint(&ModelConfig::tiny()),
             crate::kernel::config_fingerprint(&f16)
         );
+    }
+
+    #[test]
+    fn pattern_select_roundtrip_and_override() {
+        for s in ["static", "adaptive", "learned", "adaptive:k=3", "learned:k=2"] {
+            let p = PatternSelect::parse(s).unwrap();
+            assert_eq!(p.label(), s, "parse/label round-trip for {s:?}");
+        }
+        assert_eq!(PatternSelect::default(), PatternSelect::Static);
+        assert_eq!(PatternSelect::parse("adaptive").unwrap(), PatternSelect::Adaptive { k: 0 });
+        assert!(PatternSelect::parse("bogus").is_err());
+        assert!(PatternSelect::parse("adaptive:3").is_err()); // missing k=
+        assert!(PatternSelect::parse("learned:k=two").is_err());
+        assert!(PatternSelect::parse("static:k=1").is_err()); // static takes no k
+        // k = 0 inherits random_blocks (equal block budget vs static)
+        assert_eq!(PatternSelect::Adaptive { k: 0 }.budget(3), 3);
+        assert_eq!(PatternSelect::Learned { k: 2 }.budget(3), 2);
+        assert_eq!(PatternSelect::Static.budget(3), 0);
+        let cfg = apply_overrides(ModelConfig::tiny(), "pattern=adaptive:k=2").unwrap();
+        assert_eq!(cfg.pattern, PatternSelect::Adaptive { k: 2 });
+        assert!(apply_overrides(ModelConfig::tiny(), "pattern=fancy").is_err());
     }
 
     #[test]

@@ -1,0 +1,138 @@
+//! `bigbird experiment ablate` — quality-vs-throughput ablation of the
+//! pattern-selection kinds (`static` | `adaptive` | `learned`) at equal
+//! block budget.
+//!
+//! For each kind the harness (1) compiles the pattern at the training
+//! shape and runs it through the spectral admission gate
+//! ([`crate::attention::admit_pattern`] — a pattern that breaks the §2
+//! expander floor never reaches training), (2) trains the native MLM
+//! model for `--steps` steps and records the final smoothed loss, and
+//! (3) times checkpoint-free forward passes at seq 1024 and 2048 to get
+//! tokens/sec. Everything lands in `BENCH_patterns.json`
+//! ([`BenchReport`] flat schema), which `bench-check --patterns-json`
+//! renders as an informational summary section (never gated).
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::common::{render_table, RunLog};
+use crate::cli::Flags;
+use crate::config::{ModelConfig, PatternSelect};
+use crate::kernel::grad::AdamWConfig;
+use crate::kernel::NativeModel;
+use crate::train::{synthetic_docs, synthetic_mlm_batch, NativeTrainer};
+use crate::util::{BenchReport, Rng};
+
+/// Where the report lands (the CI bench bundle uploads this file).
+pub const PATTERNS_JSON: &str = "BENCH_patterns.json";
+
+/// Sequence lengths of the timed-forward leg.
+const TIMED_SEQS: &[usize] = &[1024, 2048];
+
+/// Timed-forward repetitions (best-of, after one warmup).
+const TIMED_ITERS: usize = 3;
+
+/// The three selection kinds at equal block budget: `k = 0` makes
+/// adaptive/learned inherit `random_blocks`, so every kind attends to
+/// the same number of key blocks per query block.
+const KINDS: &[PatternSelect] =
+    &[PatternSelect::Static, PatternSelect::Adaptive { k: 0 }, PatternSelect::Learned { k: 0 }];
+
+pub fn run(flags: &Flags) -> Result<()> {
+    let mut log = RunLog::new("ablate");
+    log.line("Pattern-selection ablation: quality (MLM loss) vs throughput (tokens/sec)\n");
+    let mut report = BenchReport::new();
+    let mut rows = Vec::new();
+    let mut static_tps_by_seq: Vec<(usize, f64)> = Vec::new();
+
+    for &pattern in KINDS {
+        let kind = match pattern {
+            PatternSelect::Static => "static",
+            PatternSelect::Adaptive { .. } => "adaptive",
+            PatternSelect::Learned { .. } => "learned",
+        };
+
+        // --- training leg: short native MLM run at the train shape
+        let mut cfg = ModelConfig::native_train();
+        cfg.precision = flags.precision;
+        cfg.pattern = pattern;
+        if !flags.config.is_empty() {
+            cfg = crate::config::apply_overrides(cfg, &flags.config)?;
+            cfg.pattern = pattern; // the swept axis always wins
+        }
+        let mut trainer = NativeTrainer::new(cfg.clone(), AdamWConfig::default())?;
+
+        // spectral admission gate before any training step
+        let compiled = trainer.model_mut().select_pattern(None, cfg.seq_len)?;
+        let gap = crate::attention::admit_pattern(&compiled)
+            .map_err(anyhow::Error::msg)
+            .with_context(|| format!("pattern {kind} rejected by the spectral gate"))?;
+        report.push(&format!("pattern_{kind}_spectral_gap"), gap);
+        report.push(&format!("pattern_{kind}_density"), compiled.density());
+
+        let docs = synthetic_docs(cfg.vocab, 64, 4096, flags.seed);
+        let mut rng = Rng::new(flags.seed).fold_in(0x17);
+        let batch_cfg = cfg.clone();
+        let steps = flags.steps.max(1);
+        let tlog = trainer.run(
+            steps,
+            1,
+            |_| Ok(synthetic_mlm_batch(&docs, &batch_cfg, &mut rng)),
+            |_| {},
+        )?;
+        let sm = tlog.smoothed(0.3);
+        let loss = *sm.last().context("training produced no loss points")? as f64;
+        report.push(&format!("pattern_{kind}_loss"), loss);
+
+        // --- throughput leg: timed forwards at the long-sequence shapes
+        let mut tps_cells = Vec::new();
+        for &seq in TIMED_SEQS {
+            let mut fcfg = cfg.clone();
+            fcfg.seq_len = seq;
+            fcfg.batch = 1;
+            let mut model = NativeModel::new(fcfg)?;
+            let mut trng = Rng::new(flags.seed).fold_in(seq as u64);
+            let tokens: Vec<i32> =
+                (0..seq).map(|_| trng.below(cfg.vocab) as i32).collect();
+            model.forward(&tokens, None, 1, seq)?; // warmup (layout + caches)
+            let mut best_ms = f64::INFINITY;
+            for _ in 0..TIMED_ITERS {
+                let t0 = Instant::now();
+                std::hint::black_box(model.forward(&tokens, None, 1, seq)?);
+                best_ms = best_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            let tps = seq as f64 / (best_ms / 1e3);
+            report.push(&format!("pattern_{kind}_n{seq}_ms"), best_ms);
+            report.push(&format!("pattern_{kind}_n{seq}_tokens_per_sec"), tps);
+            if pattern == PatternSelect::Static {
+                static_tps_by_seq.push((seq, tps));
+            }
+            let vs_static = static_tps_by_seq
+                .iter()
+                .find(|&&(s, _)| s == seq)
+                .map(|&(_, st)| format!("{:+.1}%", 100.0 * (tps - st) / st))
+                .unwrap_or_else(|| "—".to_string());
+            tps_cells.push(format!("{tps:.0} ({vs_static})"));
+        }
+
+        let mut row = vec![kind.to_string(), format!("{gap:.4}"), format!("{loss:.4}")];
+        row.extend(tps_cells);
+        rows.push(row);
+    }
+
+    log.line(render_table(
+        &["pattern", "spectral gap", "MLM loss", "tok/s n=1024 (vs static)", "tok/s n=2048 (vs static)"],
+        &rows,
+    ));
+    log.line(format!(
+        "\n(equal block budget: adaptive/learned replace the {} seeded-random block(s) with \
+         selected ones; band + global guarantee blocks are identical across kinds)",
+        ModelConfig::native_train().random_blocks
+    ));
+    report.write(PATTERNS_JSON).with_context(|| format!("writing {PATTERNS_JSON}"))?;
+    log.line(format!("bench JSON: {PATTERNS_JSON}"));
+    let path = log.finish()?;
+    println!("(written to {})", path.display());
+    Ok(())
+}

@@ -1,5 +1,6 @@
 //! Experiment harnesses — one per paper table/figure (DESIGN.md §6).
 
+pub mod ablate;
 pub mod ablation;
 pub mod classification;
 pub mod common;
@@ -40,6 +41,7 @@ pub fn dispatch(id: &str, flags: &Flags) -> Result<()> {
         "patterns" => patterns::run(flags),
         "turing" => turing::run(flags),
         "ablation_global" => ablation::run(flags),
+        "ablate" => ablate::run(flags),
         "hotpath" => hotpath::run(flags),
         "hlo_report" => hlo_report::run(flags),
         "all" => {

@@ -46,6 +46,7 @@ pub fn run(args: &ServeArgs) -> Result<()> {
     cfg.admission = args.admission();
     cfg.native_checkpoint = args.checkpoint.clone();
     cfg.native.precision = args.precision;
+    cfg.native.pattern = args.pattern;
     let has_native =
         cfg.serving.backends.iter().any(|b| b.kind == crate::runtime::BackendKind::Native);
     // --trace-out turns on span recording; phase profiling (sampled,

@@ -13,7 +13,7 @@
 
 use std::path::PathBuf;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::common::{corpus_docs, entry_for, geometry, mlm_batch_from_docs, pool_from, RunLog};
 use crate::cli::TrainArgs;
@@ -84,12 +84,30 @@ fn run_native(args: &TrainArgs) -> Result<()> {
     let mut log = RunLog::new("train_native");
     let mut cfg = ModelConfig::native_train();
     cfg.precision = args.precision;
+    cfg.pattern = args.pattern;
     if !args.config.is_empty() {
         // `--config precision=...` wins over `--precision` (overrides last)
         cfg = crate::config::apply_overrides(cfg, &args.config)?;
     }
     let ocfg = AdamWConfig::default();
     let mut trainer = NativeTrainer::new(cfg.clone(), ocfg)?;
+    // spectral admission gate: before any training step, the selected
+    // pattern (compiled at the training shape) must keep the attention
+    // graph's spectral gap above the floor — the expander property
+    // behind the paper's §2 theory (Static always passes: its band +
+    // global union is exactly the paper's construction)
+    {
+        let pattern = trainer.model_mut().select_pattern(None, cfg.seq_len)?;
+        let gap = crate::attention::admit_pattern(&pattern)
+            .map_err(anyhow::Error::msg)
+            .with_context(|| format!("pattern {:?} rejected before training", cfg.pattern))?;
+        log.line(format!(
+            "pattern {} admitted: spectral gap {gap:.4} (density {:.3}, per-head: {})",
+            cfg.pattern.label(),
+            pattern.density(),
+            pattern.is_per_head(),
+        ));
+    }
     log.line(format!(
         "Native MLM pretraining (zero PJRT artifacts): {} params, {} steps, seed {}, \
          batch {} × seq {}, forward GEMMs {} (master weights + grads f32), lr {} \

@@ -32,7 +32,41 @@ use super::layout::BlockCsr;
 use super::microkernel::{gemm_packed, GemmScratch, PackedMat};
 use super::sparse::{sparse_forward, sparse_forward_with_stats, SparseScratch};
 use super::HeadViews;
+use crate::attention::CompiledPattern;
 use crate::obs::phase::{self, Phase};
+
+/// Per-caller cache of the last compiled adaptive/learned pattern,
+/// keyed by `PatternSource::fingerprint`: when consecutive forwards
+/// select the same graph (the common serving case — unchanged content,
+/// unchanged learned scores), the per-head `BlockCsr` compilation is
+/// skipped entirely. Lives in the caller's [`ScratchArena`], so each
+/// engine worker thread keeps its own hot entry with no locking.
+#[derive(Debug, Default)]
+pub struct SelectCache {
+    key: u64,
+    pattern: Option<CompiledPattern>,
+}
+
+impl SelectCache {
+    /// The cached pattern for `key`, or `build` it and cache it. The
+    /// returned value is a cheap clone (per-head `Arc`s).
+    pub fn get_or_compile(
+        &mut self,
+        key: u64,
+        build: impl FnOnce() -> CompiledPattern,
+    ) -> CompiledPattern {
+        if self.key != key || self.pattern.is_none() {
+            self.pattern = Some(build());
+            self.key = key;
+        }
+        self.pattern.clone().expect("just populated")
+    }
+
+    /// Is `key` the resident entry? (test/metrics hook)
+    pub fn holds(&self, key: u64) -> bool {
+        self.pattern.is_some() && self.key == key
+    }
+}
 
 /// Per-thread scratch arena: every pool worker (and every caller
 /// thread, for its inline chunk) owns one, reused across calls so the
@@ -45,6 +79,15 @@ pub struct ScratchArena {
     pub bwd: AttnGradScratch,
     /// Packed-GEMM scratch (int8 quantize-on-pack row buffers).
     pub gemm: GemmScratch,
+    /// Last compiled adaptive/learned pattern (layout-compile skip).
+    pub select: SelectCache,
+}
+
+/// Run `f` against the calling thread's [`SelectCache`] (the same
+/// arena the caller's inline kernel chunk uses) — the pattern-layout
+/// cache hook for `NativeModel::select_pattern`.
+pub fn with_select_cache<R>(f: impl FnOnce(&mut SelectCache) -> R) -> R {
+    CALLER_ARENA.with(|a| f(&mut a.borrow_mut().select))
 }
 
 /// A type-erased unit of pool work.
@@ -280,6 +323,35 @@ fn record_gemm(m: usize, k: usize, n: usize, nanos: u64) {
     phase::record(Phase::Gemm, 1, nanos, 2 * m * k * n, (m * k + k * n + m * n) * 4);
 }
 
+/// Which `BlockCsr` each `batch × heads` task computes against: one
+/// shared layout (the static pattern) or the per-head layouts of a
+/// [`CompiledPattern`]. Keeps the fan-out logic below identical for
+/// both shapes.
+#[derive(Clone, Copy)]
+enum LayoutSel<'a> {
+    Shared(&'a BlockCsr),
+    PerHead(&'a CompiledPattern),
+}
+
+impl<'a> LayoutSel<'a> {
+    /// The layout of flat task index `task` (`task % heads` is the head).
+    fn of(&self, task: usize, heads: usize) -> &'a BlockCsr {
+        match self {
+            LayoutSel::Shared(l) => l,
+            LayoutSel::PerHead(p) => p.head(task % heads),
+        }
+    }
+
+    /// Any layout — for shape facts (`nb`, `block`, `seq_len`) that the
+    /// per-head constructor guarantees are uniform.
+    fn any(&self) -> &'a BlockCsr {
+        match self {
+            LayoutSel::Shared(l) => l,
+            LayoutSel::PerHead(p) => p.head(0),
+        }
+    }
+}
+
 /// Block-sparse attention forward over a `[batch, heads, n, head_dim]`
 /// Q/K/V pack (with an optional `[batch, n]` key-validity mask shared
 /// across heads), writing the same `[batch, heads, n, head_dim]` layout
@@ -294,7 +366,30 @@ pub fn sparse_forward_batch(
     layout: &BlockCsr,
     out: &mut [f32],
 ) {
-    forward_batch_core(x, batch, heads, head_dim, layout, out, &mut [], &mut []);
+    forward_batch_core(x, batch, heads, head_dim, LayoutSel::Shared(layout), out, &mut [], &mut []);
+}
+
+/// [`sparse_forward_batch`] over a [`CompiledPattern`]: each head runs
+/// against its own layout (adaptive/learned sources); a shared pattern
+/// degenerates to the single-layout path bit-for-bit.
+pub fn sparse_forward_batch_heads(
+    x: &HeadViews<'_>,
+    batch: usize,
+    heads: usize,
+    head_dim: usize,
+    pattern: &CompiledPattern,
+    out: &mut [f32],
+) {
+    forward_batch_core(
+        x,
+        batch,
+        heads,
+        head_dim,
+        LayoutSel::PerHead(pattern),
+        out,
+        &mut [],
+        &mut [],
+    );
 }
 
 /// Training-mode batch forward: like [`sparse_forward_batch`] but also
@@ -316,7 +411,26 @@ pub fn sparse_forward_batch_training(
     let n = layout.seq_len();
     assert_eq!(m.len(), batch * heads * n, "m must be [batch × heads × n]");
     assert_eq!(l.len(), batch * heads * n, "l must be [batch × heads × n]");
-    forward_batch_core(x, batch, heads, head_dim, layout, out, m, l);
+    forward_batch_core(x, batch, heads, head_dim, LayoutSel::Shared(layout), out, m, l);
+}
+
+/// [`sparse_forward_batch_training`] over a [`CompiledPattern`] (one
+/// layout per head).
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_forward_batch_training_heads(
+    x: &HeadViews<'_>,
+    batch: usize,
+    heads: usize,
+    head_dim: usize,
+    pattern: &CompiledPattern,
+    out: &mut [f32],
+    m: &mut [f32],
+    l: &mut [f32],
+) {
+    let n = pattern.seq_len();
+    assert_eq!(m.len(), batch * heads * n, "m must be [batch × heads × n]");
+    assert_eq!(l.len(), batch * heads * n, "l must be [batch × heads × n]");
+    forward_batch_core(x, batch, heads, head_dim, LayoutSel::PerHead(pattern), out, m, l);
 }
 
 /// Shared forward fan-out; `m`/`l` are both `[batch × heads × n]`
@@ -327,12 +441,12 @@ fn forward_batch_core(
     batch: usize,
     heads: usize,
     head_dim: usize,
-    layout: &BlockCsr,
+    sel: LayoutSel<'_>,
     out: &mut [f32],
     m: &mut [f32],
     l: &mut [f32],
 ) {
-    let n = layout.seq_len();
+    let n = sel.any().seq_len();
     let per = n * head_dim;
     let tasks = batch * heads;
     assert_eq!(x.q.len(), tasks * per, "q must be [batch, heads, n, head_dim]");
@@ -364,6 +478,7 @@ fn forward_batch_core(
                 let task = first_task + i;
                 let b = task / heads;
                 let off = task * per;
+                let layout = sel.of(task, heads);
                 let hv = HeadViews {
                     q: &x.q[off..off + per],
                     k: &x.k[off..off + per],
@@ -411,7 +526,58 @@ pub fn sparse_backward_batch(
     dk: &mut [f32],
     dv: &mut [f32],
 ) {
-    let n = layout.seq_len();
+    backward_batch_core(x, o, d_o, m, l, batch, heads, head_dim, LayoutSel::Shared(layout), dq, dk, dv);
+}
+
+/// [`sparse_backward_batch`] over a [`CompiledPattern`] (one layout per
+/// head) — the training backward of adaptive/learned patterns.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_backward_batch_heads(
+    x: &HeadViews<'_>,
+    o: &[f32],
+    d_o: &[f32],
+    m: &[f32],
+    l: &[f32],
+    batch: usize,
+    heads: usize,
+    head_dim: usize,
+    pattern: &CompiledPattern,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    backward_batch_core(
+        x,
+        o,
+        d_o,
+        m,
+        l,
+        batch,
+        heads,
+        head_dim,
+        LayoutSel::PerHead(pattern),
+        dq,
+        dk,
+        dv,
+    );
+}
+
+#[allow(clippy::too_many_arguments)]
+fn backward_batch_core(
+    x: &HeadViews<'_>,
+    o: &[f32],
+    d_o: &[f32],
+    m: &[f32],
+    l: &[f32],
+    batch: usize,
+    heads: usize,
+    head_dim: usize,
+    sel: LayoutSel<'_>,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    let n = sel.any().seq_len();
     let per = n * head_dim;
     let tasks = batch * heads;
     assert_eq!(x.q.len(), tasks * per, "q must be [batch, heads, n, head_dim]");
@@ -426,11 +592,6 @@ pub fn sparse_backward_batch(
         return;
     }
     let prof = phase::enabled();
-    // attended tiles per head problem — the analytic flop model below
-    // charges ~10·b²·d flops per tile (QKᵀ recompute, dV, dP, dQ, dK
-    // contractions) and Q/K/V/O/dO reads + dQ/dK/dV accumulator traffic
-    let tiles: u64 =
-        if prof { (0..layout.nb).map(|qb| layout.row(qb).len() as u64).sum() } else { 0 };
     let pool = KernelPool::global();
     let mut jobs: Vec<Box<dyn FnOnce(&mut ScratchArena) + Send + '_>> = Vec::new();
     let mut dq_rest = dq;
@@ -445,10 +606,19 @@ pub fn sparse_backward_batch(
         dv_rest = rest;
         jobs.push(Box::new(move |arena: &mut ScratchArena| {
             let t0 = if prof { Some(Instant::now()) } else { None };
+            // attended tiles across the chunk's tasks — the analytic
+            // flop model below charges ~10·b²·d flops per tile (QKᵀ
+            // recompute, dV, dP, dQ, dK contractions) and Q/K/V/O/dO
+            // reads + dQ/dK/dV accumulator traffic
+            let mut tiles = 0u64;
             for i in 0..count {
                 let task = first_task + i;
                 let b = task / heads;
                 let off = task * per;
+                let layout = sel.of(task, heads);
+                if prof {
+                    tiles += (0..layout.nb).map(|qb| layout.row(qb).len() as u64).sum::<u64>();
+                }
                 let hv = HeadViews {
                     q: &x.q[off..off + per],
                     k: &x.k[off..off + per],
@@ -470,14 +640,13 @@ pub fn sparse_backward_batch(
                 );
             }
             if let Some(t0) = t0 {
-                let (bu, du) = (layout.block as u64, head_dim as u64);
-                let work = count as u64 * tiles;
+                let (bu, du) = (sel.any().block as u64, head_dim as u64);
                 phase::record(
                     Phase::Backward,
                     count as u64,
                     t0.elapsed().as_nanos() as u64,
-                    work * 10 * bu * bu * du,
-                    work * (11 * bu * du + 2 * bu * bu) * 4,
+                    tiles * 10 * bu * bu * du,
+                    tiles * (11 * bu * du + 2 * bu * bu) * 4,
                 );
             }
         }));
@@ -648,6 +817,122 @@ mod tests {
             assert_eq!(&dk[off..off + per], sk.as_slice(), "task {task} dk");
             assert_eq!(&dv[off..off + per], sv.as_slice(), "task {task} dv");
         }
+    }
+
+    #[test]
+    fn per_head_driver_matches_sequential_per_head_layouts() {
+        use crate::attention::PatternSource;
+        use std::sync::Arc;
+        // two heads with *different* selected blocks: the _heads driver
+        // must route each task to its head's layout, bit-identically to
+        // a sequential per-head run
+        let spec = PatternSpec {
+            variant: AttnVariant::BigBirdItc,
+            nb: 6,
+            global_blocks: 1,
+            window_blocks: 1,
+            random_blocks: 1,
+            seed: 2,
+        };
+        let nb = spec.nb;
+        let mut s0 = vec![0.0f32; nb * nb];
+        let mut s1 = vec![0.0f32; nb * nb];
+        for j in 0..nb {
+            s0[j * nb + (j + 2) % nb] = 1.0;
+            s1[j * nb + (j + 3) % nb] = 1.0;
+        }
+        let src = PatternSource::Adaptive { spec, k: 1, scores: vec![s0, s1] };
+        let pattern = src.compile(4);
+        assert!(pattern.is_per_head());
+
+        let (batch, heads, d) = (2usize, 2usize, 8usize);
+        let n = pattern.seq_len();
+        let per = n * d;
+        let vol = batch * heads * per;
+        let mut rng = Rng::new(31);
+        let q: Vec<f32> = (0..vol).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..vol).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..vol).map(|_| rng.normal() as f32).collect();
+        let x = HeadViews { q: &q, k: &k, v: &v, key_valid: None };
+
+        let mut got = vec![0.0f32; vol];
+        sparse_forward_batch_heads(&x, batch, heads, d, &pattern, &mut got);
+
+        let mut want = vec![0.0f32; vol];
+        let mut scratch = SparseScratch::new();
+        for task in 0..batch * heads {
+            let off = task * per;
+            let hv = HeadViews {
+                q: &q[off..off + per],
+                k: &k[off..off + per],
+                v: &v[off..off + per],
+                key_valid: None,
+            };
+            let layout = pattern.head(task % heads);
+            sparse_forward(&hv, d, layout, &mut scratch, &mut want[off..off + per]);
+        }
+        assert_eq!(got, want, "per-head driver must match sequential per-head layouts");
+        // the two heads genuinely differ, so routing matters
+        assert_ne!(got[..per], got[per..2 * per], "distinct head layouts must differ");
+
+        // a shared pattern through the _heads entry points is
+        // bit-identical to the single-layout entry points
+        let shared_layout = Arc::new(BlockCsr::compile(&spec, 4));
+        let shared = crate::attention::CompiledPattern::shared(shared_layout.clone());
+        let mut a = vec![0.0f32; vol];
+        let mut b = vec![0.0f32; vol];
+        sparse_forward_batch_heads(&x, batch, heads, d, &shared, &mut a);
+        sparse_forward_batch(&x, batch, heads, d, &shared_layout, &mut b);
+        assert_eq!(a, b);
+
+        // training + backward _heads variants agree with the shared path
+        let mut o1 = vec![0.0f32; vol];
+        let mut m1 = vec![0.0f32; batch * heads * n];
+        let mut l1 = vec![0.0f32; batch * heads * n];
+        sparse_forward_batch_training_heads(&x, batch, heads, d, &shared, &mut o1, &mut m1, &mut l1);
+        assert_eq!(o1, b);
+        let d_o: Vec<f32> = (0..vol).map(|_| rng.normal() as f32).collect();
+        let (mut dq_a, mut dk_a, mut dv_a) =
+            (vec![0.0f32; vol], vec![0.0f32; vol], vec![0.0f32; vol]);
+        sparse_backward_batch_heads(
+            &x, &o1, &d_o, &m1, &l1, batch, heads, d, &shared, &mut dq_a, &mut dk_a, &mut dv_a,
+        );
+        let (mut dq_b, mut dk_b, mut dv_b) =
+            (vec![0.0f32; vol], vec![0.0f32; vol], vec![0.0f32; vol]);
+        sparse_backward_batch(
+            &x, &o1, &d_o, &m1, &l1, batch, heads, d, &shared_layout, &mut dq_b, &mut dk_b,
+            &mut dv_b,
+        );
+        assert_eq!((dq_a, dk_a, dv_a), (dq_b, dk_b, dv_b));
+    }
+
+    #[test]
+    fn select_cache_compiles_once_per_key() {
+        let mut cache = SelectCache::default();
+        let spec = PatternSpec {
+            variant: AttnVariant::BigBirdItc,
+            nb: 4,
+            global_blocks: 1,
+            window_blocks: 1,
+            random_blocks: 1,
+            seed: 0,
+        };
+        let mut builds = 0usize;
+        for _ in 0..3 {
+            let p = cache.get_or_compile(99, || {
+                builds += 1;
+                crate::attention::CompiledPattern::shared(Arc::new(BlockCsr::compile(&spec, 4)))
+            });
+            assert_eq!(p.seq_len(), 16);
+        }
+        assert_eq!(builds, 1, "same key must reuse the compiled pattern");
+        assert!(cache.holds(99));
+        cache.get_or_compile(100, || {
+            builds += 1;
+            crate::attention::CompiledPattern::shared(Arc::new(BlockCsr::compile(&spec, 4)))
+        });
+        assert_eq!(builds, 2, "a new key must recompile");
+        assert!(!cache.holds(99));
     }
 
     #[test]

@@ -3,9 +3,11 @@
 //! tensor-for-tensor, flattening to the **same canonical order** as
 //! `NativeModel::flatten_params` (embed, then per layer
 //! `ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b, w1, b1, w2, b2`, then
-//! `ln_f_g, ln_f_b`) so the optimizer and checkpoints see one flat
-//! vector for both parameters and gradients.
+//! `ln_f_g, ln_f_b`, then — learned patterns only — the per-head
+//! selection scores `sel`) so the optimizer and checkpoints see one
+//! flat vector for both parameters and gradients.
 
+use crate::attention::LEARNED_SPAN;
 use crate::config::ModelConfig;
 
 /// Per-layer gradient tensors (same shapes as the layer's parameters).
@@ -33,6 +35,10 @@ pub struct ParamGrads {
     pub layers: Vec<LayerGrads>,
     pub ln_f_g: Vec<f32>,
     pub ln_f_b: Vec<f32>,
+    /// Straight-through gradient of the learned per-head selection
+    /// scores, `[heads × LEARNED_SPAN]` — empty unless the config's
+    /// pattern is `Learned`.
+    pub sel: Vec<f32>,
 }
 
 impl ParamGrads {
@@ -55,17 +61,20 @@ impl ParamGrads {
                 b2: vec![0.0; h],
             })
             .collect();
+        let sel =
+            if cfg.pattern.is_learned() { vec![0.0; cfg.heads * LEARNED_SPAN] } else { Vec::new() };
         ParamGrads {
             embed: vec![0.0; cfg.vocab * h],
             layers,
             ln_f_g: vec![0.0; h],
             ln_f_b: vec![0.0; h],
+            sel,
         }
     }
 
     /// Gradient tensors in the canonical flattening order.
     fn tensors(&self) -> Vec<&Vec<f32>> {
-        let mut out = Vec::with_capacity(2 + 12 * self.layers.len() + 1);
+        let mut out = Vec::with_capacity(3 + 12 * self.layers.len() + 1);
         out.push(&self.embed);
         for l in &self.layers {
             out.push(&l.ln1_g);
@@ -83,6 +92,9 @@ impl ParamGrads {
         }
         out.push(&self.ln_f_g);
         out.push(&self.ln_f_b);
+        if !self.sel.is_empty() {
+            out.push(&self.sel);
+        }
         out
     }
 
@@ -105,6 +117,7 @@ impl ParamGrads {
         }
         self.ln_f_g.fill(0.0);
         self.ln_f_b.fill(0.0);
+        self.sel.fill(0.0);
     }
 
     /// Total gradient element count (equals the model's `param_count`).
@@ -154,5 +167,16 @@ mod tests {
         assert_eq!(flat.len(), grads.len());
         assert!(!grads.is_empty());
         assert_eq!(grads.global_norm(), 0.0);
+    }
+
+    #[test]
+    fn learned_pattern_adds_selection_grads() {
+        let mut cfg = ModelConfig::tiny();
+        cfg.pattern = crate::config::PatternSelect::Learned { k: 2 };
+        let grads = ParamGrads::new(&cfg);
+        assert_eq!(grads.sel.len(), cfg.heads * LEARNED_SPAN);
+        assert_eq!(grads.len(), crate::kernel::model::param_count_for(&cfg));
+        let static_len = ParamGrads::new(&ModelConfig::tiny()).len();
+        assert_eq!(grads.len(), static_len + cfg.heads * LEARNED_SPAN);
     }
 }

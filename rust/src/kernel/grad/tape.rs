@@ -9,7 +9,7 @@
 //! bit-identical to serving — a checkpoint trained here and a serving
 //! forward agree exactly. The only additions are activation saves and
 //! the streaming-softmax statistics from
-//! [`sparse_forward_batch_training`].
+//! [`sparse_forward_batch_training_heads`].
 //!
 //! Backward structure (per layer, in reverse):
 //! tied-logits head → final LN → FFN (`w2`/GELU/`w1`/LN2, residual) →
@@ -17,13 +17,11 @@
 //! residual) → token embedding scatter. Positions are sinusoidal
 //! constants and receive no gradient.
 
-use std::sync::Arc;
-
 use anyhow::{ensure, Result};
 
+use crate::attention::{CompiledPattern, LEARNED_SPAN};
 use crate::config::Precision;
-use crate::kernel::driver::{sparse_backward_batch, sparse_forward_batch_training};
-use crate::kernel::layout::BlockCsr;
+use crate::kernel::driver::{sparse_backward_batch_heads, sparse_forward_batch_training_heads};
 use crate::kernel::microkernel::PackedMat;
 use crate::kernel::model::{
     add_bias, add_in_place, gelu, gemm_out, merge_heads, split_heads, NativeModel,
@@ -68,7 +66,7 @@ pub struct Tape {
     seq: usize,
     tokens: Vec<i32>,
     kv_valid: Option<Vec<f32>>,
-    layout: Arc<BlockCsr>,
+    pattern: CompiledPattern,
     layers: Vec<LayerTape>,
     /// Residual stream entering the final LN.
     x_final: Vec<f32>,
@@ -93,7 +91,7 @@ pub fn forward_tape(
     if let Some(mask) = kv_valid {
         ensure!(mask.len() == rows, "kv_valid must be [batch={batch}, seq_len={seq_len}]");
     }
-    let layout = model.layout(seq_len)?;
+    let pattern = model.select_pattern(Some((tokens, batch)), seq_len)?;
     let positions = model.positions(seq_len);
     model.ensure_packed();
     let packed = model.packed.as_ref().expect("ensure_packed just ran");
@@ -125,8 +123,8 @@ pub fn forward_tape(
         let mut stat_m = vec![0.0f32; batch * heads * seq_len];
         let mut stat_l = vec![0.0f32; batch * heads * seq_len];
         let hv = HeadViews { q: &q, k: &k, v: &v, key_valid: kv_valid };
-        sparse_forward_batch_training(
-            &hv, batch, heads, dh, &layout, &mut attn, &mut stat_m, &mut stat_l,
+        sparse_forward_batch_training_heads(
+            &hv, batch, heads, dh, &pattern, &mut attn, &mut stat_m, &mut stat_l,
         );
         let merged = merge_heads(&attn, batch, seq_len, heads, dh);
         let proj = gemm_out(&merged, &pl.wo, rows);
@@ -169,7 +167,7 @@ pub fn forward_tape(
         seq: seq_len,
         tokens: tokens.to_vec(),
         kv_valid: kv_valid.map(|m| m.to_vec()),
-        layout,
+        pattern,
         layers: layer_tapes,
         x_final: x,
         ln_f,
@@ -238,7 +236,7 @@ pub fn backward(model: &NativeModel, tape: &Tape, d_logits: &[f32], grads: &mut 
         let mut dk = vec![0.0f32; vol];
         let mut dv = vec![0.0f32; vol];
         let hv = HeadViews { q: &lt.q, k: &lt.k, v: &lt.v, key_valid: kv_valid };
-        sparse_backward_batch(
+        sparse_backward_batch_heads(
             &hv,
             &lt.attn_out,
             &d_attn,
@@ -247,11 +245,15 @@ pub fn backward(model: &NativeModel, tape: &Tape, d_logits: &[f32], grads: &mut 
             batch,
             heads,
             dh,
-            &tape.layout,
+            &tape.pattern,
             &mut dq,
             &mut dk,
             &mut dv,
         );
+        if !grads.sel.is_empty() {
+            let nb = tape.pattern.head(0).nb;
+            accumulate_selection_grads(&d_attn, &lt.v, batch, seq, heads, dh, nb, &mut grads.sel);
+        }
         let d_qp = merge_heads(&dq, batch, seq, heads, dh);
         let d_kp = merge_heads(&dk, batch, seq, heads, dh);
         let d_vp = merge_heads(&dv, batch, seq, heads, dh);
@@ -273,6 +275,61 @@ pub fn backward(model: &NativeModel, tape: &Tape, d_logits: &[f32], grads: &mut 
         let dst = &mut grads.embed[t * h..(t + 1) * h];
         for (gd, &dd) in dst.iter_mut().zip(&d[r * h..(r + 1) * h]) {
             *gd += dd;
+        }
+    }
+}
+
+/// Straight-through gradient for the learned selection scores. The hard
+/// top-k pick is non-differentiable, so — in the spirit of
+/// straight-through estimators — each relative offset `o` is credited
+/// with the alignment between the upstream attention gradient at query
+/// block `j` and the values of key block `(j + o + 1) mod nb`,
+/// block-mean-pooled per head and summed over query rows (and, via
+/// repeated calls, over layers). An offset whose key blocks would have
+/// pushed the output where the loss wants it to go gets a negative
+/// loss-gradient (score should rise), and vice versa.
+#[allow(clippy::too_many_arguments)]
+fn accumulate_selection_grads(
+    d_attn: &[f32], // [batch, heads, n, dh], upstream gradient of O
+    v: &[f32],      // [batch, heads, n, dh]
+    batch: usize,
+    seq: usize,
+    heads: usize,
+    dh: usize,
+    nb: usize,
+    sel: &mut [f32], // [heads × LEARNED_SPAN]
+) {
+    let block = seq / nb;
+    let inv = 1.0 / (batch * block) as f32;
+    let span = LEARNED_SPAN.min(nb.saturating_sub(1));
+    let mut pd = vec![0.0f32; nb * dh];
+    let mut pv = vec![0.0f32; nb * dh];
+    for h in 0..heads {
+        pd.fill(0.0);
+        pv.fill(0.0);
+        for b in 0..batch {
+            let base = (b * heads + h) * seq;
+            for t in 0..seq {
+                let j = t / block;
+                for c in 0..dh {
+                    pd[j * dh + c] += d_attn[(base + t) * dh + c];
+                    pv[j * dh + c] += v[(base + t) * dh + c];
+                }
+            }
+        }
+        for o in 0..span {
+            let mut g = 0.0f32;
+            for j in 0..nb {
+                let kb = (j + o + 1) % nb;
+                for c in 0..dh {
+                    g += pd[j * dh + c] * pv[kb * dh + c];
+                }
+            }
+            // the proxy output moves *with* the selected values, so a
+            // helpful offset has d_attn · v < 0 exactly when the loss
+            // wants the output elsewhere — negate to make "select more
+            // of this offset" reduce the loss under gradient descent
+            sel[h * LEARNED_SPAN + o] -= g * inv * inv;
         }
     }
 }
@@ -299,6 +356,7 @@ mod tests {
             batch: 2,
             attn_seed: 5,
             precision: Precision::F32,
+            pattern: crate::config::PatternSelect::Static,
         }
     }
 

@@ -59,8 +59,9 @@ pub use calibrate::{
 };
 pub use dense::dense_reference;
 pub use driver::{
-    model_gemm, model_gemm_acc, sparse_backward_batch, sparse_forward_batch,
-    sparse_forward_batch_training, KernelPool, ScratchArena,
+    model_gemm, model_gemm_acc, sparse_backward_batch, sparse_backward_batch_heads,
+    sparse_forward_batch, sparse_forward_batch_heads, sparse_forward_batch_training,
+    sparse_forward_batch_training_heads, with_select_cache, KernelPool, ScratchArena, SelectCache,
 };
 pub use layout::{BlockCsr, BlockProvenance};
 pub use microkernel::{

@@ -21,13 +21,14 @@ use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::attention::PatternSpec;
-use crate::config::{ModelConfig, Precision};
+use crate::attention::{
+    block_mean_pool, proxy_scores, CompiledPattern, PatternSource, PatternSpec, LEARNED_SPAN,
+};
+use crate::config::{ModelConfig, PatternSelect, Precision};
 use crate::runtime::{HostTensor, JobShape};
 use crate::util::Rng;
 
-use super::driver::{model_gemm, sparse_forward_batch};
-use super::layout::BlockCsr;
+use super::driver::{model_gemm, sparse_forward_batch_heads, with_select_cache};
 use super::microkernel::PackedMat;
 use super::HeadViews;
 
@@ -96,8 +97,15 @@ pub struct NativeModel {
     pub(crate) layers: Vec<LayerParams>,
     pub(crate) ln_f_g: Vec<f32>,
     pub(crate) ln_f_b: Vec<f32>,
-    /// Compiled block layouts keyed by seq_len.
-    layouts: HashMap<usize, Arc<BlockCsr>>,
+    /// Learned per-head block-selection scores, `[heads × LEARNED_SPAN]`
+    /// (offset-relative; see `attention::select`). Empty unless
+    /// `cfg.pattern` is `Learned` — when present these are trainable
+    /// parameters at the **end** of the canonical flat order.
+    pub(crate) sel_scores: Vec<f32>,
+    /// Compiled static patterns keyed by seq_len (adaptive/learned
+    /// patterns are content-dependent and cache in the kernel driver's
+    /// per-thread [`SelectCache`](super::driver::SelectCache) instead).
+    layouts: HashMap<usize, CompiledPattern>,
     /// Sinusoidal position tables keyed by seq_len (`[seq_len, hidden]`).
     pos: HashMap<usize, Arc<Vec<f32>>>,
     /// Weights pre-packed (and, at f16/int8, quantized) for the tiled
@@ -167,6 +175,11 @@ impl NativeModel {
                 b2: vec![0.0; h],
             });
         }
+        let sel_scores = if cfg.pattern.is_learned() {
+            init_normal(seed, 7, cfg.heads * LEARNED_SPAN)
+        } else {
+            Vec::new()
+        };
         Ok(NativeModel {
             cfg,
             embed,
@@ -174,6 +187,7 @@ impl NativeModel {
             layers,
             ln_f_g: vec![1.0; h],
             ln_f_b: vec![0.0; h],
+            sel_scores,
             layouts: HashMap::new(),
             pos: HashMap::new(),
             packed: None,
@@ -217,27 +231,85 @@ impl NativeModel {
         param_count_for(&self.cfg)
     }
 
-    /// Compiled pattern layout for `seq_len` (cached).
-    pub fn layout(&mut self, seq_len: usize) -> Result<Arc<BlockCsr>> {
+    /// The pattern spec of this model family at `seq_len`.
+    pub fn pattern_spec(&self, seq_len: usize) -> PatternSpec {
+        PatternSpec {
+            variant: self.cfg.variant,
+            nb: seq_len / self.cfg.block,
+            global_blocks: self.cfg.global_blocks,
+            window_blocks: self.cfg.window_blocks,
+            random_blocks: self.cfg.random_blocks,
+            seed: self.cfg.attn_seed,
+        }
+    }
+
+    /// The [`PatternSource`] this model compiles attention layouts from
+    /// at `seq_len`: `cfg.pattern` decides the kind, `tokens` (when
+    /// present) feeds the content-adaptive selector. With no content —
+    /// warmup, or an adaptive model probed shape-only — the adaptive
+    /// scores are zero and the selector falls back to its deterministic
+    /// lowest-index tie-break.
+    pub fn pattern_source(&self, tokens: Option<(&[i32], usize)>, seq_len: usize) -> PatternSource {
+        let spec = self.pattern_spec(seq_len);
+        let nb = spec.nb;
+        match self.cfg.pattern {
+            PatternSelect::Static => PatternSource::Static(spec),
+            PatternSelect::Adaptive { .. } => {
+                let k = self.cfg.pattern.budget(self.cfg.random_blocks);
+                let (h, heads) = (self.cfg.hidden, self.cfg.heads);
+                let scores = match tokens {
+                    Some((toks, batch)) if batch > 0 => {
+                        // block-mean-pool the raw token embeddings
+                        // (positions are shared by every input, so they
+                        // carry no content signal), then score through
+                        // the first layer's Q/K projections
+                        let mut x = vec![0.0f32; batch * seq_len * h];
+                        for (r, &tok) in toks.iter().enumerate() {
+                            let t = tok.rem_euclid(self.cfg.vocab as i32) as usize;
+                            x[r * h..(r + 1) * h].copy_from_slice(&self.embed[t * h..(t + 1) * h]);
+                        }
+                        let pooled = block_mean_pool(&x, batch, seq_len, h, self.cfg.block);
+                        let l0 = &self.layers[0];
+                        proxy_scores(&pooled, &l0.wq, &l0.wk, h, heads, nb)
+                    }
+                    _ => vec![vec![0.0f32; nb * nb]; heads],
+                };
+                PatternSource::Adaptive { spec, k, scores }
+            }
+            PatternSelect::Learned { .. } => {
+                let k = self.cfg.pattern.budget(self.cfg.random_blocks);
+                let scores =
+                    self.sel_scores.chunks(LEARNED_SPAN).map(|c| c.to_vec()).collect::<Vec<_>>();
+                PatternSource::Learned { spec, k, scores }
+            }
+        }
+    }
+
+    /// Compiled attention pattern for one forward pass. Static patterns
+    /// cache per `seq_len` in the model; adaptive/learned patterns are
+    /// fingerprinted and cached in the calling thread's kernel-pool
+    /// scratch ([`with_select_cache`]), so serving recompiles only when
+    /// the selected graph actually changes.
+    pub fn select_pattern(
+        &mut self,
+        tokens: Option<(&[i32], usize)>,
+        seq_len: usize,
+    ) -> Result<CompiledPattern> {
         ensure!(
             seq_len > 0 && seq_len % self.cfg.block == 0,
             "seq_len {} is not a positive multiple of block {}",
             seq_len,
             self.cfg.block
         );
-        let cfg = &self.cfg;
-        let entry = self.layouts.entry(seq_len).or_insert_with(|| {
-            let spec = PatternSpec {
-                variant: cfg.variant,
-                nb: seq_len / cfg.block,
-                global_blocks: cfg.global_blocks,
-                window_blocks: cfg.window_blocks,
-                random_blocks: cfg.random_blocks,
-                seed: cfg.attn_seed,
-            };
-            Arc::new(BlockCsr::compile(&spec, cfg.block))
-        });
-        Ok(entry.clone())
+        if self.cfg.pattern == PatternSelect::Static {
+            let src = PatternSource::Static(self.pattern_spec(seq_len));
+            let block = self.cfg.block;
+            return Ok(self.layouts.entry(seq_len).or_insert_with(|| src.compile(block)).clone());
+        }
+        let src = self.pattern_source(tokens, seq_len);
+        let key = src.fingerprint(self.cfg.block);
+        let block = self.cfg.block;
+        Ok(with_select_cache(|cache| cache.get_or_compile(key, || src.compile(block))))
     }
 
     /// Sinusoidal positional table for `seq_len` (cached).
@@ -263,7 +335,7 @@ impl NativeModel {
     /// Pre-build the layout and positional table for a bucket length
     /// (the warmup path, so first traffic pays no compile cost).
     pub fn prewarm(&mut self, seq_len: usize) -> Result<()> {
-        self.layout(seq_len)?;
+        self.select_pattern(None, seq_len)?;
         self.positions(seq_len);
         Ok(())
     }
@@ -283,7 +355,7 @@ impl NativeModel {
         if let Some(mask) = kv_valid {
             ensure!(mask.len() == rows, "kv_valid must be [batch={batch}, seq_len={seq_len}]");
         }
-        let layout = self.layout(seq_len)?;
+        let pattern = self.select_pattern(Some((tokens, batch)), seq_len)?;
         let positions = self.positions(seq_len);
         self.ensure_packed();
         let packed = self.packed.as_ref().expect("ensure_packed just ran");
@@ -311,7 +383,7 @@ impl NativeModel {
             let v = split_heads(&gemm_out(&xn, &pl.wv, rows), batch, seq_len, heads, dh);
             let mut attn = vec![0.0f32; rows * h];
             let hv = HeadViews { q: &q, k: &k, v: &v, key_valid: kv_valid };
-            sparse_forward_batch(&hv, batch, heads, dh, &layout, &mut attn);
+            sparse_forward_batch_heads(&hv, batch, heads, dh, &pattern, &mut attn);
             let merged = merge_heads(&attn, batch, seq_len, heads, dh);
             let proj = gemm_out(&merged, &pl.wo, rows);
             add_in_place(&mut x, &proj);
@@ -333,12 +405,13 @@ impl NativeModel {
 
     /// Learned parameter tensors in the **canonical flattening order**:
     /// `embed`, then per layer `ln1_g, ln1_b, wq, wk, wv, wo, ln2_g,
-    /// ln2_b, w1, b1, w2, b2`, then `ln_f_g, ln_f_b`. The derived
-    /// `embed_t` is excluded (rebuilt after loads). This order is the
-    /// contract shared with `grad::ParamGrads::flatten_into` and the
-    /// `BBCKPT1` native checkpoint.
+    /// ln2_b, w1, b1, w2, b2`, then `ln_f_g, ln_f_b`, then (learned
+    /// patterns only) `sel_scores`. The derived `embed_t` is excluded
+    /// (rebuilt after loads). This order is the contract shared with
+    /// `grad::ParamGrads::flatten_into` and the `BBCKPT1` native
+    /// checkpoint.
     fn param_tensors(&self) -> Vec<&Vec<f32>> {
-        let mut out = Vec::with_capacity(3 + 12 * self.layers.len());
+        let mut out = Vec::with_capacity(4 + 12 * self.layers.len());
         out.push(&self.embed);
         for l in &self.layers {
             out.push(&l.ln1_g);
@@ -356,12 +429,15 @@ impl NativeModel {
         }
         out.push(&self.ln_f_g);
         out.push(&self.ln_f_b);
+        if !self.sel_scores.is_empty() {
+            out.push(&self.sel_scores);
+        }
         out
     }
 
     /// Mutable view of [`NativeModel::param_tensors`] (same order).
     fn param_tensors_mut(&mut self) -> Vec<&mut Vec<f32>> {
-        let mut out = Vec::with_capacity(3 + 12 * self.layers.len());
+        let mut out = Vec::with_capacity(4 + 12 * self.layers.len());
         out.push(&mut self.embed);
         for l in &mut self.layers {
             out.push(&mut l.ln1_g);
@@ -379,6 +455,9 @@ impl NativeModel {
         }
         out.push(&mut self.ln_f_g);
         out.push(&mut self.ln_f_b);
+        if !self.sel_scores.is_empty() {
+            out.push(&mut self.sel_scores);
+        }
         out
     }
 
@@ -453,7 +532,8 @@ pub fn param_count_for(cfg: &ModelConfig) -> usize {
         + 4 * h * h // q, k, v, o
         + h * cfg.ffn + cfg.ffn // w1 + b1
         + cfg.ffn * h + h; // w2 + b2
-    cfg.vocab * h + cfg.layers * per_layer + 2 * h
+    let sel = if cfg.pattern.is_learned() { cfg.heads * LEARNED_SPAN } else { 0 };
+    cfg.vocab * h + cfg.layers * per_layer + 2 * h + sel
 }
 
 /// Architecture fingerprint stored inside native checkpoints: every
@@ -480,6 +560,11 @@ pub fn config_fingerprint(cfg: &ModelConfig) -> Vec<i32> {
         variant_idx,
         cfg.attn_seed as u32 as i32,
         (cfg.attn_seed >> 32) as u32 as i32,
+        // pattern selection kind + resolved budget: a learned model has
+        // extra parameters; an adaptive one computes a different graph —
+        // neither may silently load a static checkpoint's config
+        cfg.pattern.kind_index() as i32,
+        cfg.pattern.budget(cfg.random_blocks) as i32,
     ]
 }
 
@@ -813,5 +898,74 @@ mod tests {
         let model = eng.model.as_mut().expect("warm builds the model");
         assert!(model.layouts.contains_key(&256));
         assert!(model.pos.contains_key(&256));
+    }
+
+    #[test]
+    fn adaptive_forward_is_deterministic_and_content_dependent() {
+        let mut c = cfg();
+        c.pattern = PatternSelect::Adaptive { k: 0 };
+        let (batch, seq) = (1usize, 128usize);
+        let toks_a: Vec<i32> = (0..batch * seq).map(|i| (i % 97) as i32).collect();
+        let kv = vec![1.0f32; batch * seq];
+        let mut m1 = NativeModel::new(c.clone()).unwrap();
+        let mut m2 = NativeModel::new(c.clone()).unwrap();
+        let l1 = m1.forward(&toks_a, Some(&kv), batch, seq).unwrap();
+        let l2 = m2.forward(&toks_a, Some(&kv), batch, seq).unwrap();
+        assert_eq!(l1, l2, "adaptive forward must be deterministic per input");
+        assert!(l1.iter().all(|v| v.is_finite()));
+        // different content selects (in general) a different graph —
+        // the pattern source fingerprints must differ for these inputs
+        let toks_b: Vec<i32> = (0..batch * seq).map(|i| ((i * 31 + 5) % 409) as i32).collect();
+        let fa = m1.pattern_source(Some((&toks_a, batch)), seq).fingerprint(c.block);
+        let fb = m1.pattern_source(Some((&toks_b, batch)), seq).fingerprint(c.block);
+        assert_ne!(fa, fb, "content must steer the adaptive selection");
+        // equal budget: adaptive density stays at the static pattern's
+        let pat = m1.select_pattern(Some((&toks_a, batch)), seq).unwrap();
+        let stat = PatternSource::Static(m1.pattern_spec(seq)).compile(c.block);
+        assert!((pat.density() - stat.density()).abs() < 0.02, "{} vs {}", pat.density(), stat.density());
+    }
+
+    #[test]
+    fn learned_scores_live_in_flat_params() {
+        let mut c = cfg();
+        c.pattern = PatternSelect::Learned { k: 1 };
+        let m = NativeModel::new(c.clone()).unwrap();
+        let base = {
+            let mut s = c.clone();
+            s.pattern = PatternSelect::Static;
+            param_count_for(&s)
+        };
+        assert_eq!(m.param_count(), base + c.heads * LEARNED_SPAN);
+        let flat = m.flatten_params();
+        assert_eq!(flat.len(), m.param_count());
+        // the tail of the flat vector IS the selection scores
+        assert_eq!(&flat[base..], &m.sel_scores[..]);
+        // fingerprints separate pattern kinds (no silent cross-loads)
+        let mut s = c.clone();
+        s.pattern = PatternSelect::Static;
+        assert_ne!(config_fingerprint(&c), config_fingerprint(&s));
+        let mut a = c.clone();
+        a.pattern = PatternSelect::Adaptive { k: 1 };
+        assert_ne!(config_fingerprint(&c), config_fingerprint(&a));
+    }
+
+    #[test]
+    fn learned_forward_depends_on_selection_scores() {
+        let mut c = cfg();
+        c.pattern = PatternSelect::Learned { k: 1 };
+        let (batch, seq) = (1usize, 128usize);
+        let tokens: Vec<i32> = (0..batch * seq).map(|i| (i % 211) as i32).collect();
+        let mut m = NativeModel::new(c).unwrap();
+        let before = m.forward(&tokens, None, batch, seq).unwrap();
+        // flip the learned scores through the flat-params path: the
+        // selected blocks change, so the logits must change too
+        let mut flat = m.flatten_params();
+        let tail = flat.len() - m.sel_scores.len();
+        for v in flat[tail..].iter_mut() {
+            *v = -*v;
+        }
+        m.load_flat_params(&flat).unwrap();
+        let after = m.forward(&tokens, None, batch, seq).unwrap();
+        assert_ne!(before, after, "selection scores must steer the forward pass");
     }
 }

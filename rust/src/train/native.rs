@@ -316,7 +316,42 @@ mod tests {
             batch: 2,
             attn_seed: 1,
             precision: crate::config::Precision::F32,
+            pattern: crate::config::PatternSelect::Static,
         }
+    }
+
+    #[test]
+    fn learned_checkpoint_roundtrips_scores_and_guards_kind() {
+        let dir = std::env::temp_dir().join("bb_native_learned_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("learned.ckpt");
+
+        let mut lcfg = cfg();
+        lcfg.pattern = crate::config::PatternSelect::Learned { k: 1 };
+        let mut trainer = NativeTrainer::new(lcfg.clone(), AdamWConfig::default()).unwrap();
+        let docs = synthetic_docs(lcfg.vocab, 4, 256, 3);
+        let mut rng = Rng::new(11);
+        for _ in 0..2 {
+            let batch = synthetic_mlm_batch(&docs, &lcfg, &mut rng);
+            trainer.train_step(&batch).unwrap();
+        }
+        trainer.save(&path).unwrap();
+
+        // restored learned scores must be bit-identical (they ride at
+        // the end of the canonical flat order)
+        let restored = NativeTrainer::resume(&path, lcfg.clone(), AdamWConfig::default()).unwrap();
+        let a = trainer.model().flatten_params();
+        let b = restored.model().flatten_params();
+        assert_eq!(a, b, "restored learned parameters must be bit-identical");
+        let span = lcfg.heads * crate::attention::LEARNED_SPAN;
+        assert!(a[a.len() - span..].iter().any(|&x| x != 0.0), "scores must be present");
+
+        // a Static config must refuse the Learned checkpoint (and vice
+        // versa) via the architecture fingerprint
+        let err = load_native_checkpoint(&path, &cfg()).unwrap_err();
+        assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

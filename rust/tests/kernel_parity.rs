@@ -4,10 +4,10 @@
 //! randomness seeds), head dims, and key-validity masks — the
 //! acceptance gate that makes the native backend's compute trustworthy.
 
-use bigbird::attention::PatternSpec;
+use bigbird::attention::{PatternSource, PatternSpec};
 use bigbird::config::AttnVariant;
 use bigbird::kernel::{
-    dense_reference, sparse_forward, sparse_forward_batch, BlockCsr, HeadViews, SparseScratch,
+    dense_reference, sparse_forward, sparse_forward_batch, HeadViews, SparseScratch,
 };
 use bigbird::util::proptest::check_res;
 use bigbird::util::Rng;
@@ -44,7 +44,8 @@ fn gen_case(rng: &mut Rng) -> Case {
 }
 
 fn run_case(case: &Case) -> Result<(), String> {
-    let layout = BlockCsr::compile(&case.spec, case.block);
+    let pattern = PatternSource::Static(case.spec).compile(case.block);
+    let layout = pattern.head(0);
     let n = layout.seq_len();
     let d = case.head_dim;
     let mut rng = Rng::new(case.data_seed);
@@ -57,9 +58,9 @@ fn run_case(case: &Case) -> Result<(), String> {
     let x = HeadViews { q: &q, k: &k, v: &v, key_valid: mask.as_deref() };
 
     let mut want = vec![0.0f32; n * d];
-    dense_reference(&x, d, &layout, &mut want);
+    dense_reference(&x, d, layout, &mut want);
     let mut got = vec![0.0f32; n * d];
-    sparse_forward(&x, d, &layout, &mut SparseScratch::new(), &mut got);
+    sparse_forward(&x, d, layout, &mut SparseScratch::new(), &mut got);
 
     let mut worst = 0.0f32;
     let mut worst_at = 0usize;
@@ -98,7 +99,8 @@ fn batch_driver_matches_dense_reference_per_head() {
         |rng| (gen_case(rng), rng.range(1, 3), rng.range(1, 4)),
         |(case, batch, heads)| {
             let (batch, heads) = (*batch, *heads);
-            let layout = BlockCsr::compile(&case.spec, case.block);
+            let pattern = PatternSource::Static(case.spec).compile(case.block);
+            let layout = pattern.head(0);
             let n = layout.seq_len();
             let d = case.head_dim;
             let per = n * d;
@@ -111,7 +113,7 @@ fn batch_driver_matches_dense_reference_per_head() {
                 (0..batch * n).map(|_| if rng.coin(0.2) { 0.0 } else { 1.0 }).collect();
             let x = HeadViews { q: &q, k: &k, v: &v, key_valid: Some(&mask) };
             let mut got = vec![0.0f32; vol];
-            sparse_forward_batch(&x, batch, heads, d, &layout, &mut got);
+            sparse_forward_batch(&x, batch, heads, d, layout, &mut got);
             for task in 0..batch * heads {
                 let b = task / heads;
                 let off = task * per;
@@ -122,7 +124,7 @@ fn batch_driver_matches_dense_reference_per_head() {
                     key_valid: Some(&mask[b * n..(b + 1) * n]),
                 };
                 let mut want = vec![0.0f32; per];
-                dense_reference(&hv, d, &layout, &mut want);
+                dense_reference(&hv, d, layout, &mut want);
                 let worst = want
                     .iter()
                     .zip(&got[off..off + per])

@@ -266,6 +266,7 @@ fn small_cfg() -> ModelConfig {
         batch: 1,
         attn_seed: 3,
         precision: bigbird::config::Precision::F32,
+        pattern: bigbird::config::PatternSelect::Static,
     }
 }
 
@@ -353,6 +354,7 @@ fn native_training_loss_decreases_over_20_steps() {
         batch: 4,
         attn_seed: 0,
         precision: bigbird::config::Precision::F32,
+        pattern: bigbird::config::PatternSelect::Static,
     };
     let docs = bigbird::train::synthetic_docs(cfg.vocab, 32, 2048, 5);
     let mut trainer = NativeTrainer::new(cfg.clone(), AdamWConfig::default()).unwrap();

@@ -1,0 +1,198 @@
+//! `PatternSource` contract tests:
+//!
+//! 1. **guarantee union** — adaptive/learned selections always keep the
+//!    diagonal (self) block and the global columns, whatever the scores
+//!    say, so the paper's §2 connectivity survives any selector;
+//! 2. **kernel parity** — per-head compiled layouts run through the
+//!    `sparse_forward_batch_heads` driver agree with the dense masked
+//!    reference head by head (≤ 1e-5), i.e. an adaptive pattern is just
+//!    as trustworthy as the static one;
+//! 3. **checkpoint round-trip** — a `Learned` model's selection scores
+//!    survive the BBCKPT1 save → resume cycle bit-exactly, and the
+//!    architecture fingerprint refuses cross-kind loads.
+
+use bigbird::attention::{admit_pattern, PatternSource, PatternSpec, LEARNED_SPAN};
+use bigbird::config::{AttnVariant, ModelConfig, PatternSelect};
+use bigbird::kernel::grad::AdamWConfig;
+use bigbird::kernel::{dense_reference, sparse_forward_batch_heads, HeadViews};
+use bigbird::train::{load_native_checkpoint, synthetic_docs, synthetic_mlm_batch, NativeTrainer};
+use bigbird::util::proptest::check_res;
+use bigbird::util::Rng;
+
+const TOLERANCE: f32 = 1e-5;
+
+/// One randomly drawn non-static source (+ block size).
+#[derive(Debug)]
+struct Case {
+    source: PatternSource,
+    block: usize,
+    data_seed: u64,
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    let spec = PatternSpec {
+        variant: AttnVariant::BigBirdItc,
+        nb: rng.range(4, 11),
+        global_blocks: rng.range(1, 3),
+        window_blocks: *rng.choose(&[1usize, 3]),
+        random_blocks: rng.range(1, 3),
+        seed: rng.next_u64() % 10_000,
+    };
+    let heads = rng.range(1, 4);
+    let k = rng.range(1, 3);
+    let source = if rng.coin(0.5) {
+        let scores = (0..heads)
+            .map(|_| (0..spec.nb * spec.nb).map(|_| rng.normal() as f32).collect())
+            .collect();
+        PatternSource::Adaptive { spec, k, scores }
+    } else {
+        let scores = (0..heads)
+            .map(|_| (0..LEARNED_SPAN).map(|_| rng.normal() as f32).collect())
+            .collect();
+        PatternSource::Learned { spec, k, scores }
+    };
+    Case { source, block: *rng.choose(&[4usize, 8, 16]), data_seed: rng.next_u64() }
+}
+
+#[test]
+fn selected_patterns_always_keep_diagonal_and_global_blocks() {
+    check_res(0x5E1EC7, 48, gen_case, |case| {
+        let spec = *case.source.spec();
+        let pattern = case.source.compile(case.block);
+        for (h, layout) in pattern.layouts().iter().enumerate() {
+            if layout.nb != spec.nb {
+                return Err(format!("head {h}: nb {} != spec nb {}", layout.nb, spec.nb));
+            }
+            for qb in 0..spec.nb {
+                let row = layout.row(qb);
+                if !row.contains(&qb) {
+                    return Err(format!("head {h} row {qb}: diagonal block missing ({row:?})"));
+                }
+                for g in 0..spec.global_blocks.min(spec.nb) {
+                    if !row.contains(&g) {
+                        return Err(format!("head {h} row {qb}: global col {g} missing ({row:?})"));
+                    }
+                }
+                // valid CSR row: sorted, unique, in range
+                if !row.windows(2).all(|w| w[0] < w[1]) {
+                    return Err(format!("head {h} row {qb}: not sorted/unique ({row:?})"));
+                }
+                if row.iter().any(|&kb| kb >= spec.nb) {
+                    return Err(format!("head {h} row {qb}: block out of range ({row:?})"));
+                }
+            }
+        }
+        // connectivity gate: diagonal + window + global always clears
+        // the spectral floor, whatever the selector scored
+        admit_pattern(&pattern).map_err(|e| format!("admission refused: {e}"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn per_head_driver_matches_dense_reference_on_selected_patterns() {
+    check_res(0xAD47, 16, gen_case, |case| {
+        let pattern = case.source.compile(case.block);
+        let n = pattern.seq_len();
+        let d = 16usize;
+        let heads = pattern.layouts().len().max(2); // exercise h % len wrap
+        let batch = 2usize;
+        let per = n * d;
+        let vol = batch * heads * per;
+        let mut rng = Rng::new(case.data_seed ^ 0x5eed);
+        let q: Vec<f32> = (0..vol).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..vol).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..vol).map(|_| rng.normal() as f32).collect();
+        let mask: Vec<f32> =
+            (0..batch * n).map(|_| if rng.coin(0.2) { 0.0 } else { 1.0 }).collect();
+        let x = HeadViews { q: &q, k: &k, v: &v, key_valid: Some(&mask) };
+        let mut got = vec![0.0f32; vol];
+        sparse_forward_batch_heads(&x, batch, heads, d, &pattern, &mut got);
+        for task in 0..batch * heads {
+            let (b, h) = (task / heads, task % heads);
+            let off = task * per;
+            let hv = HeadViews {
+                q: &q[off..off + per],
+                k: &k[off..off + per],
+                v: &v[off..off + per],
+                key_valid: Some(&mask[b * n..(b + 1) * n]),
+            };
+            let mut want = vec![0.0f32; per];
+            dense_reference(&hv, d, pattern.head(h), &mut want);
+            let worst = want
+                .iter()
+                .zip(&got[off..off + per])
+                .map(|(&w, &g)| (w - g).abs())
+                .fold(0.0f32, f32::max);
+            if worst > TOLERANCE {
+                return Err(format!("task {task} (head {h}): max abs diff {worst}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+fn learned_cfg() -> ModelConfig {
+    ModelConfig {
+        variant: AttnVariant::BigBirdItc,
+        seq_len: 64,
+        block: 8,
+        global_blocks: 1,
+        window_blocks: 3,
+        random_blocks: 1,
+        layers: 2,
+        heads: 2,
+        hidden: 32,
+        ffn: 64,
+        vocab: 256,
+        batch: 2,
+        attn_seed: 0,
+        precision: bigbird::config::Precision::F32,
+        pattern: PatternSelect::Learned { k: 1 },
+    }
+}
+
+#[test]
+fn learned_scores_roundtrip_bbckpt1_and_fingerprint_guards_kind() {
+    let cfg = learned_cfg();
+    let dir = std::env::temp_dir().join("bb_pattern_source_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("learned.ckpt");
+
+    let mut trainer = NativeTrainer::new(cfg.clone(), AdamWConfig::default()).unwrap();
+    let docs = synthetic_docs(cfg.vocab, 8, 512, 3);
+    let mut rng = Rng::new(7);
+    for _ in 0..3 {
+        let batch = synthetic_mlm_batch(&docs, &cfg, &mut rng);
+        trainer.train_step(&batch).unwrap();
+    }
+    trainer.save(&path).unwrap();
+
+    // the selection scores ride at the end of the canonical flat order
+    // and must come back bit-identical
+    let flat = trainer.model().flatten_params();
+    let span = cfg.heads * LEARNED_SPAN;
+    let ckpt = load_native_checkpoint(&path, &cfg).unwrap();
+    assert_eq!(ckpt.params, flat, "restored flat params must be bit-identical");
+    assert!(
+        flat[flat.len() - span..].iter().any(|&x| x != 0.0),
+        "learned scores must be non-trivial after training"
+    );
+
+    // AdamW must actually have moved them: a seed model's scores differ
+    let seed = NativeTrainer::new(cfg.clone(), AdamWConfig::default()).unwrap();
+    let seed_flat = seed.model().flatten_params();
+    assert_ne!(
+        &flat[flat.len() - span..],
+        &seed_flat[seed_flat.len() - span..],
+        "training must update the selection scores"
+    );
+
+    // cross-kind loads are refused by the architecture fingerprint
+    let mut static_cfg = cfg.clone();
+    static_cfg.pattern = PatternSelect::Static;
+    let err = load_native_checkpoint(&path, &static_cfg).unwrap_err();
+    assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+
+    std::fs::remove_file(&path).unwrap();
+}
